@@ -1,0 +1,81 @@
+//! Hardware-simulator deep dive: run both cycle-level engines on the same
+//! PRS-pruned layer, verify they compute the identical matvec, and show
+//! where every picojoule goes (paper Fig. 2 datapaths, Tables 4-5 cells).
+//!
+//! Run: `cargo run --release --example hw_sim [sparsity] [--stream]`
+
+use lfsr_prune::data::rng::Pcg32;
+use lfsr_prune::hw::{self, baseline, lfsr_engine, Mode, SparseLayer};
+use lfsr_prune::mask::prs::{prs_mask_with_stats, PrsMaskConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let sparsity: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.9);
+    let stream = args.iter().any(|a| a == "--stream");
+    let mode = if stream { Mode::Stream } else { Mode::Ideal };
+
+    // LeNet-300-100 fc1 at paper dims.
+    let (rows, cols) = (784usize, 300usize);
+    let cfg = PrsMaskConfig::auto(rows, cols, 0xACE1, 0x1D3);
+    let (mask, stats) = prs_mask_with_stats(rows, cols, sparsity, cfg);
+    let mut rng = Pcg32::new(42);
+    let layer = SparseLayer {
+        rows,
+        cols,
+        weights: (0..rows * cols).map(|_| rng.next_normal()).collect(),
+        mask: mask.clone(),
+        input: (0..rows).map(|_| rng.next_normal()).collect(),
+    };
+    println!(
+        "layer {rows}x{cols} @ {:.0}% sparsity: nnz {}  walk steps {} (collision overhead {:.2}x)",
+        sparsity * 100.0,
+        mask.nnz(),
+        stats.total_steps,
+        stats.overhead()
+    );
+
+    let ref_out = layer.reference_output();
+    println!("\n-- baseline CSC engine (4b and 8b indices) --");
+    for bits in [4u32, 8] {
+        let r = baseline::run(&layer, bits, 8);
+        let ok = r
+            .output
+            .iter()
+            .zip(&ref_out)
+            .all(|(a, b)| (a - b).abs() < 1e-3);
+        let c = r.counters;
+        println!(
+            "  {bits}b: cycles {}  macs {}  S-reads {}  I-reads {}  P-reads {}  fillers {}  correct={}",
+            c.cycles, c.mac_ops, c.weight_reads, c.index_reads, c.ptr_reads, c.fillers, ok
+        );
+    }
+
+    println!("\n-- proposed LFSR engine ({mode:?} mode) --");
+    let r = lfsr_engine::run(&layer, cfg, mode);
+    let ok = r
+        .output
+        .iter()
+        .zip(&ref_out)
+        .all(|(a, b)| (a - b).abs() < 1e-3);
+    let c = r.counters;
+    println!(
+        "  cycles {}  macs {}  W-reads {}  I-reads {}  lfsr ticks {}  out-RMW {}  collisions {}  correct={}",
+        c.cycles, c.mac_ops, c.weight_reads, c.index_reads, c.lfsr_ticks, c.output_reads, c.collision_cycles, ok
+    );
+
+    println!("\n-- system comparison (closed-form, whole LeNet-300-100) --");
+    let net = hw::layers::lenet300();
+    for bits in [4u32, 8] {
+        let cmp = hw::compare(&net, sparsity, bits, mode, 16);
+        println!(
+            "  {bits}b: baseline {:.1} mW / {:.3} mm²  proposed {:.1} mW / {:.3} mm²  -> save {:.1}% / {:.1}%  mem x{:.2}",
+            cmp.baseline.avg_power_mw,
+            cmp.baseline.area_mm2,
+            cmp.proposed.avg_power_mw,
+            cmp.proposed.area_mm2,
+            cmp.power_saving_pct(),
+            cmp.area_saving_pct(),
+            cmp.memory_reduction()
+        );
+    }
+}

@@ -1,0 +1,107 @@
+//! End-to-end validation driver (EXPERIMENTS.md §End-to-end): the complete
+//! paper pipeline at full experiment scale on LeNet-300-100 —
+//! dense train → PRS regularize → prune → retrain — with the loss curve
+//! logged per step, followed by the *hardware consequences* of the run:
+//! the trained masks are handed to the cycle-level engines and the
+//! memory/power/area comparison is reported for this exact model.
+//!
+//! Run: `cargo run --release --example lenet_pipeline [sparsity]`
+
+use lfsr_prune::hw::{self, Mode};
+use lfsr_prune::pipeline::{run_trial, DataConfig, MaskMethod, PipelineConfig, RegType};
+use lfsr_prune::runtime::Runtime;
+use lfsr_prune::sparse::{baseline_footprint, proposed_footprint};
+use lfsr_prune::mask::prs::PrsMaskConfig;
+
+fn main() -> anyhow::Result<()> {
+    let sparsity: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.9);
+    let rt = Runtime::new(Runtime::default_dir())?;
+    let cfg = PipelineConfig {
+        model: "lenet300".into(),
+        data: DataConfig::MnistLike,
+        method: MaskMethod::Prs { seed_base: 0xACE1 },
+        sparsity,
+        lam: 2.0,
+        reg: RegType::L2,
+        dense_steps: 250,
+        reg_steps: 150,
+        retrain_steps: 150,
+        lr_dense: 0.1,
+        lr_reg: 0.05,
+        lr_retrain: 0.02,
+        n_train: 4096,
+        n_eval: 1024,
+        trial_seed: 7,
+        eval_limit: None,
+        output_layer_factor: 0.8,
+    };
+    println!("=== paper pipeline, LeNet-300-100 @ {:.0}% PRS sparsity ===", sparsity * 100.0);
+    let t0 = std::time::Instant::now();
+    let mut last_phase = String::new();
+    let mut cb = |phase: &str, i: usize, loss: f32| {
+        if phase != last_phase {
+            println!("--- phase: {phase} ---");
+            last_phase = phase.to_string();
+        }
+        if i % 10 == 0 {
+            println!("step {i:>4}  loss {loss:.4}");
+        }
+    };
+    let r = run_trial(&rt, &cfg, Some(&mut cb))?;
+    println!("\ntotal wall time: {:.1}s", t0.elapsed().as_secs_f64());
+    println!("dense      acc {:.2}% (err {:.2}%)", r.dense.accuracy * 100.0, r.dense.error_pct());
+    println!("after reg  acc {:.2}%", r.after_reg.accuracy * 100.0);
+    println!("pruned     acc {:.2}%", r.pruned.accuracy * 100.0);
+    println!("retrained  acc {:.2}% (err {:.2}%)", r.retrained.accuracy * 100.0, r.retrained.error_pct());
+    println!(
+        "compression {:.1}x ({} -> {} params)\n",
+        r.compression_rate(),
+        r.params_total,
+        r.params_nonzero
+    );
+
+    // Hardware consequences of THIS model's masks.
+    println!("=== hardware view of the trained masks ===");
+    let mut total_b4 = 0u64;
+    let mut total_b8 = 0u64;
+    let mut total_p = 0u64;
+    for (i, m) in r.masks.iter().enumerate() {
+        let cfg = PrsMaskConfig::auto(m.rows, m.cols, 0xACE1 + 2 * i as u32 + 1, (0xACE1 + 2 * i as u32 + 2) * 3);
+        let b4 = baseline_footprint(m, 4, 8).total();
+        let b8 = baseline_footprint(m, 8, 8).total();
+        let p = proposed_footprint(m, cfg, 8).total();
+        println!(
+            "  fc{}: {}x{} nnz {}  baseline 4b {:.1}KB / 8b {:.1}KB  proposed {:.1}KB",
+            i + 1,
+            m.rows,
+            m.cols,
+            m.nnz(),
+            b4 as f64 / 8192.0,
+            b8 as f64 / 8192.0,
+            p as f64 / 8192.0
+        );
+        total_b4 += b4;
+        total_b8 += b8;
+        total_p += p;
+    }
+    println!(
+        "  total: baseline 4b {:.1}KB / 8b {:.1}KB vs proposed {:.1}KB -> {:.2}x / {:.2}x reduction",
+        total_b4 as f64 / 8192.0,
+        total_b8 as f64 / 8192.0,
+        total_p as f64 / 8192.0,
+        total_b4 as f64 / total_p as f64,
+        total_b8 as f64 / total_p as f64
+    );
+
+    let net = hw::layers::lenet300();
+    let c = hw::compare(&net, sparsity, 8, Mode::Ideal, 16);
+    println!(
+        "  system model @ this sparsity: power saving {:.1}%, area saving {:.1}%",
+        c.power_saving_pct(),
+        c.area_saving_pct()
+    );
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Quickstart: the three layers in one file.
+//!
+//!   1. the LFSR primitive (rust) and the paper's index mapping;
+//!   2. an AOT Pallas kernel executed from rust over PJRT, checked against
+//!      both a host matmul and the rust LFSR (cross-language contract);
+//!   3. a miniature run of the paper's 4-stage pruning pipeline.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use lfsr_prune::lfsr::{GaloisLfsr, MsbMap};
+use lfsr_prune::mask::prs::{prs_mask, PrsMaskConfig};
+use lfsr_prune::pipeline::{run_trial, DataConfig, MaskMethod, PipelineConfig, RegType};
+use lfsr_prune::runtime::{Runtime, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. the LFSR primitive ---------------------------------------
+    let mut lfsr = GaloisLfsr::new(16, 0xACE1);
+    let states: Vec<u32> = (0..8).map(|_| lfsr.next_state()).collect();
+    println!("LFSR(16, seed=0xACE1) states: {states:04x?}");
+    let mut map = MsbMap::new(GaloisLfsr::new(16, 0xACE1), 784);
+    let idx: Vec<usize> = (0..8).map(|_| map.next_index()).collect();
+    println!("paper §2.4 index map -> [0,784): {idx:?}");
+
+    // A PRS keep-mask for a 784x300 FC layer at 70% sparsity.
+    let cfg = PrsMaskConfig::auto(784, 300, 0xACE1, 0x1D3);
+    let mask = prs_mask(784, 300, 0.70, cfg);
+    println!(
+        "PRS mask 784x300 @ 70%: {} kept synapses, index memory = {} bits (two seeds)",
+        mask.nnz(),
+        cfg.seed_bits()
+    );
+
+    // ---- 2. AOT kernel over PJRT --------------------------------------
+    let rt = Runtime::new(Runtime::default_dir())?;
+    println!("\nPJRT platform: {}", rt.platform());
+    let mm = rt.manifest.kernels["mm_demo"].clone();
+    let x: Vec<f32> = (0..16 * 64).map(|i| (i % 7) as f32 * 0.1).collect();
+    let w: Vec<f32> = (0..64 * 32).map(|i| (i % 5) as f32 * 0.2 - 0.4).collect();
+    let m: Vec<f32> = (0..64 * 32).map(|i| (i % 3 == 0) as u32 as f32).collect();
+    let y = rt.execute(
+        &mm.file,
+        &[
+            Tensor::f32(vec![16, 64], x),
+            Tensor::f32(vec![64, 32], w),
+            Tensor::f32(vec![64, 32], m),
+        ],
+    )?;
+    println!(
+        "Pallas masked-matmul artifact: out shape {:?}, out[0][0..4] = {:?}",
+        y[0].dims,
+        &y[0].as_f32()[..4]
+    );
+
+    // Cross-language LFSR contract: the Pallas jump-matrix kernel and the
+    // rust Galois LFSR derive the same indices from the same seed.
+    let k = rt.manifest.kernels["lfsr_idx"].clone();
+    let offsets: Vec<i32> = (1..=1024).collect();
+    let outs = rt.execute(
+        &k.file,
+        &[
+            Tensor::i32(vec![8, 128], offsets),
+            Tensor::i32(vec![], vec![0x5EED]),
+        ],
+    )?;
+    let mut rust_map = MsbMap::new(
+        GaloisLfsr::new(k.fields["n"] as u32, 0x5EED),
+        k.fields["domain"] as usize,
+    );
+    let agree = outs[0]
+        .as_i32()
+        .iter()
+        .all(|&v| v as usize == rust_map.next_index());
+    println!("lfsr_idx artifact vs rust LFSR: {}", if agree { "IDENTICAL" } else { "MISMATCH!" });
+    assert!(agree);
+
+    // ---- 3. mini pruning pipeline -------------------------------------
+    println!("\nmini 4-stage pipeline (LeNet-300-100, 70% PRS sparsity):");
+    let cfg = PipelineConfig {
+        model: "lenet300".into(),
+        data: DataConfig::MnistLike,
+        method: MaskMethod::Prs { seed_base: 0xACE1 },
+        sparsity: 0.7,
+        lam: 2.0,
+        reg: RegType::L2,
+        dense_steps: 80,
+        reg_steps: 50,
+        retrain_steps: 50,
+        lr_dense: 0.1,
+        lr_reg: 0.05,
+        lr_retrain: 0.02,
+        n_train: 2048,
+        n_eval: 512,
+        trial_seed: 1,
+        eval_limit: Some(256),
+        output_layer_factor: 0.8,
+    };
+    let r = run_trial(&rt, &cfg, None)?;
+    println!("  dense      acc {:.1}%", r.dense.accuracy * 100.0);
+    println!("  regularized acc {:.1}%", r.after_reg.accuracy * 100.0);
+    println!("  pruned     acc {:.1}%  (before retraining)", r.pruned.accuracy * 100.0);
+    println!("  retrained  acc {:.1}%", r.retrained.accuracy * 100.0);
+    println!(
+        "  compression {:.1}x ({} -> {} params)",
+        r.compression_rate(),
+        r.params_total,
+        r.params_nonzero
+    );
+    Ok(())
+}

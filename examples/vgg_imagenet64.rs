@@ -1,0 +1,71 @@
+//! The paper's heaviest workload: width-scaled modified VGG-16 on the
+//! synthetic down-sampled-ImageNet stand-in (64x64, 1000 classes).
+//! Short by default (CPU steps are ~0.8 s); pass a step budget to go
+//! longer. Records dense vs pruned accuracy and the full-size hw view.
+//!
+//! Run: `cargo run --release --example vgg_imagenet64 [dense_steps]`
+
+use lfsr_prune::hw::{self, Mode};
+use lfsr_prune::pipeline::{run_trial, DataConfig, MaskMethod, PipelineConfig, RegType};
+use lfsr_prune::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dense_steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+    let rt = Runtime::new(Runtime::default_dir())?;
+    let cfg = PipelineConfig {
+        model: "vgg16".into(),
+        data: DataConfig::ImageNet64 { classes: 1000 },
+        method: MaskMethod::Prs { seed_base: 0xACE1 },
+        sparsity: 0.9,
+        lam: 2.0,
+        reg: RegType::L2,
+        dense_steps,
+        reg_steps: dense_steps / 2,
+        retrain_steps: dense_steps / 2,
+        lr_dense: 0.05,
+        lr_reg: 0.02,
+        lr_retrain: 0.01,
+        n_train: 1024,
+        n_eval: 256,
+        trial_seed: 3,
+        eval_limit: Some(128),
+        output_layer_factor: 0.8,
+    };
+    println!(
+        "modified VGG-16 (width-scaled, {} steps dense) @ 90% PRS sparsity on ImageNet64-like",
+        dense_steps
+    );
+    let t0 = std::time::Instant::now();
+    let mut cb = |phase: &str, i: usize, loss: f32| {
+        if i % 5 == 0 {
+            println!("  [{phase} {i:>3}] loss {loss:.4}");
+        }
+    };
+    let r = run_trial(&rt, &cfg, Some(&mut cb))?;
+    println!("wall {:.0}s", t0.elapsed().as_secs_f64());
+    println!(
+        "dense err {:.1}%  pruned err {:.1}%  retrained err {:.1}%  compression {:.1}x",
+        r.dense.error_pct(),
+        r.pruned.error_pct(),
+        r.retrained.error_pct(),
+        r.compression_rate()
+    );
+
+    // Hardware story at the paper's FULL VGG dims (independent of the
+    // width scaling used for CPU training).
+    let net = hw::layers::vgg16_modified();
+    for (sp, bits) in [(0.95, 4u32), (0.95, 8), (0.4, 8)] {
+        let c = hw::compare(&net, sp, bits, Mode::Ideal, 256);
+        println!(
+            "full-size VGG-16 @ {:.0}%/{bits}b: power saving {:.1}%, area saving {:.1}%, memory x{:.2}",
+            sp * 100.0,
+            c.power_saving_pct(),
+            c.area_saving_pct(),
+            c.memory_reduction()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,180 @@
+# AOT lowering: jax -> HLO *text* artifacts + manifest.json for the rust
+# runtime.
+#
+# Interchange format is HLO text, NOT a serialized HloModuleProto: jax >=0.5
+# emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+# version the published `xla` 0.1.6 crate links) rejects; the text parser
+# reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+#
+# Python runs ONCE, here, at build time (`make artifacts`); the rust binary
+# is self-contained afterwards.  The manifest tells rust everything it needs
+# to marshal literals: per-model parameter names/shapes, mask names/shapes,
+# batch shapes, scalar-input order and artifact file names.
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import lfsr_jump
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_list(shapes_dtypes):
+    return [jax.ShapeDtypeStruct(s, d) for s, d in shapes_dtypes]
+
+
+def _shape_of(arr) -> List[int]:
+    return [int(d) for d in arr.shape]
+
+
+def lower_model(spec: M.ModelSpec, out_dir: str, manifest: dict) -> None:
+    params = spec.init(seed=0)
+    names = [n for n, _ in params]
+    shapes = {n: _shape_of(a) for n, a in params}
+    mask_shapes = [shapes[n] for n in spec.maskable]
+    b = spec.batch
+    x_shape = [b, *spec.input_shape]
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    param_specs = [jax.ShapeDtypeStruct(tuple(shapes[n]), jnp.float32) for n in names]
+    mask_specs = [jax.ShapeDtypeStruct(tuple(s), jnp.float32) for s in mask_shapes]
+    x_spec = jax.ShapeDtypeStruct(tuple(x_shape), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    entries = {}
+    jobs = {
+        "train": (
+            M.make_train_step(spec, names),
+            param_specs + mask_specs + [x_spec, y_spec] + [scalar] * 5,
+        ),
+        "eval": (
+            M.make_eval_step(spec, names),
+            param_specs + mask_specs + [x_spec, y_spec],
+        ),
+        "fwd": (
+            M.make_forward(spec, names),
+            param_specs + mask_specs + [x_spec],
+        ),
+    }
+    for kind, (fn, in_specs) in jobs.items():
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{spec.name}_{kind}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries[kind] = fname
+        print(f"  {fname}: {len(text) / 1e6:.2f} MB HLO text")
+
+    manifest["models"][spec.name] = {
+        "batch": b,
+        "input_shape": list(spec.input_shape),
+        "num_classes": spec.num_classes,
+        "use_pallas": spec.use_pallas,
+        "params": [{"name": n, "shape": shapes[n]} for n in names],
+        "maskable": spec.maskable,
+        "scalar_inputs": ["lam", "lr", "a_l1", "a_l2", "hard_on"],
+        "artifacts": entries,
+        "param_count": int(sum(np.prod(shapes[n]) for n in names)),
+    }
+
+
+def lower_kernels(out_dir: str, manifest: dict) -> None:
+    """Standalone kernel artifacts: runtime smoke tests + rust cross-checks."""
+    # (1) masked matmul demo at a fixed small shape.
+    bm, k, n = 16, 64, 32
+
+    def mm(x, w, m):
+        from .kernels import masked_matmul
+
+        return (masked_matmul(x, w, m),)
+
+    sx = jax.ShapeDtypeStruct((bm, k), jnp.float32)
+    sw = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    text = to_hlo_text(jax.jit(mm).lower(sx, sw, sw))
+    with open(os.path.join(out_dir, "mm_demo.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["kernels"]["mm_demo"] = {
+        "file": "mm_demo.hlo.txt",
+        "x_shape": [bm, k],
+        "w_shape": [k, n],
+    }
+
+    # (2) LFSR jump-index kernel: rust feeds offsets + seed, gets indices;
+    # cross-checked against rust/src/lfsr (same PRS, two implementations).
+    nbits, domain, rows, cols = 16, 1024, 8, 128
+
+    def kfn(offsets, seed):
+        return (lfsr_jump.lfsr_indices_kernel(offsets, seed, nbits, domain),)
+
+    so = jax.ShapeDtypeStruct((rows, cols), jnp.int32)
+    ss = jax.ShapeDtypeStruct((), jnp.int32)
+    text = to_hlo_text(jax.jit(kfn).lower(so, ss))
+    with open(os.path.join(out_dir, "lfsr_idx.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["kernels"]["lfsr_idx"] = {
+        "file": "lfsr_idx.hlo.txt",
+        "n": nbits,
+        "domain": domain,
+        "shape": [rows, cols],
+    }
+    print("  mm_demo.hlo.txt, lfsr_idx.hlo.txt")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="lenet300,lenet5_mnist,lenet5_cifar,vgg16")
+    ap.add_argument("--vgg-width", type=float, default=0.25)
+    ap.add_argument("--vgg-fc", type=int, default=2048)
+    ap.add_argument("--vgg-classes", type=int, default=1000)
+    ap.add_argument("--vgg-batch", type=int, default=32)
+    ap.add_argument("--lenet-batch", type=int, default=64)
+    ap.add_argument("--no-pallas", action="store_true", help="pure-jnp FC path")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    specs = M.build_specs(
+        vgg_width=args.vgg_width,
+        vgg_fc=args.vgg_fc,
+        vgg_classes=args.vgg_classes,
+        vgg_batch=args.vgg_batch,
+        lenet_batch=args.lenet_batch,
+        use_pallas=not args.no_pallas,
+    )
+    manifest = {
+        "version": 1,
+        "vgg_width": args.vgg_width,
+        "models": {},
+        "kernels": {},
+    }
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        print(f"lowering {name} ...")
+        lower_model(specs[name], args.out_dir, manifest)
+    print("lowering kernel demos ...")
+    lower_kernels(args.out_dir, manifest)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+#
+# masked_matmul — tiled x @ (w ⊙ mask) with a Pallas backward pass; the
+#   sparse-FC compute of paper Eq. 6.
+# lfsr_jump    — parallel on-the-fly LFSR index generation via GF(2) jump
+#   matrices; the TPU analogue of the paper's on-die index generator.
+# ref          — pure-jnp/numpy oracles for both (also the oracle for the
+#   rust lfsr module's test vectors).
+from .masked_matmul import masked_linear, masked_matmul  # noqa: F401
+from .lfsr_jump import lfsr_indices_kernel  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,138 @@
+# L1 Pallas kernel: parallel LFSR index generation via GF(2) jump matrices.
+#
+# The paper's accelerator regenerates sparse-weight indices with a serial
+# on-die LFSR — one index per clock.  A TPU has no serial datapath, but an
+# LFSR step is *linear over GF(2)*: state(t) = M^t · seed.  Precomputing the
+# jump matrices M^(2^p) (one per bit of t) lets every lane compute its own
+# state(t) independently in O(n · log t) bit-ops — index generation becomes
+# embarrassingly parallel, which is the honest TPU translation of "indices
+# derived in real time, never stored" (DESIGN.md §Hardware-Adaptation).
+#
+# The kernel maps a tile of sequence offsets t -> LFSR states -> mapped
+# indices (paper §2.4: idx = (state * domain) >> n).  The oracle is the
+# bit-serial LFSR in ref.py; rust/src/lfsr/jump.rs implements the same
+# construction for the rust-side parallel engines.
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def step_matrix(n: int) -> np.ndarray:
+    """Galois-step matrix as n uint32 columns: col_i = M · e_i.
+
+    One Galois step is s' = (s >> 1) ^ (s_0 ? taps : 0), i.e. column 0 maps
+    to the tap vector and column i (i >= 1) maps to e_{i-1}.
+    """
+    taps = ref.PRIMITIVE_TAPS[n]
+    cols = np.zeros(n, dtype=np.uint32)
+    cols[0] = taps
+    for i in range(1, n):
+        cols[i] = 1 << (i - 1)
+    return cols
+
+
+def mat_apply(cols: np.ndarray, s: int) -> int:
+    """Apply a column-form GF(2) matrix to a state (XOR of selected cols)."""
+    out = 0
+    for i in range(len(cols)):
+        if (s >> i) & 1:
+            out ^= int(cols[i])
+    return out
+
+
+def mat_mul(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """GF(2) matrix product in column form: (a·b) e_i = a · (b e_i)."""
+    return np.array([mat_apply(a, int(c)) for c in b], dtype=np.uint32)
+
+
+def jump_table(n: int, max_bits: int) -> np.ndarray:
+    """(max_bits, n) uint32: row p holds M^(2^p) in column form."""
+    rows = [step_matrix(n)]
+    for _ in range(1, max_bits):
+        rows.append(mat_mul(rows[-1], rows[-1]))
+    return np.stack(rows)
+
+
+def lfsr_state_np(n: int, seed: int, t: int) -> int:
+    """Oracle jump: state after t serial steps, via the jump table."""
+    jt = jump_table(n, max(1, t.bit_length()))
+    s = seed
+    for p in range(len(jt)):
+        if (t >> p) & 1:
+            s = mat_apply(jt[p], s)
+    return s
+
+
+def _parity32(x):
+    """XOR-fold parity — unused by the column form but kept for the row-form
+    variant exercised in tests."""
+    x = x ^ (x >> 16)
+    x = x ^ (x >> 8)
+    x = x ^ (x >> 4)
+    x = x ^ (x >> 2)
+    x = x ^ (x >> 1)
+    return x & 1
+
+
+def _lfsr_kernel(t_ref, seed_ref, jt_ref, o_ref, *, n: int, max_bits: int, domain: int):
+    """Per-element: state(t) = (prod of selected jump matrices) · seed."""
+    t = t_ref[...].astype(jnp.uint32)
+    state = jnp.broadcast_to(seed_ref[0, 0].astype(jnp.uint32), t.shape)
+    for p in range(max_bits):
+        # acc = M^(2^p) · state, column form: XOR cols at set state bits.
+        acc = jnp.zeros_like(state)
+        for i in range(n):
+            col = jt_ref[p, i].astype(jnp.uint32)
+            bit = (state >> np.uint32(i)) & np.uint32(1)
+            acc = acc ^ (col * bit)
+        take = (t >> np.uint32(p)) & np.uint32(1)
+        state = jnp.where(take == 1, acc, state)
+    # Paper §2.4 MSB mapping. n + log2(domain) <= 32 is asserted by the
+    # wrapper, so the product cannot overflow uint32.
+    o_ref[...] = ((state * np.uint32(domain)) >> np.uint32(n)).astype(jnp.int32)
+
+
+def lfsr_indices_kernel(
+    offsets,
+    seed,
+    n: int,
+    domain: int,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = True,
+):
+    """Map (R, C) int32 sequence offsets to LFSR indices in [0, domain).
+
+    offsets: int32 array of step counts t >= 1 (t serial LFSR steps from the
+    seed). seed: int32 scalar array (non-zero, < 2^n).  Returns int32 indices
+    idx(t) = (state(t) * domain) >> n, matching ref.lfsr_indices(t-1).
+    """
+    assert n in ref.PRIMITIVE_TAPS, f"no primitive polynomial for n={n}"
+    assert n + max(1, (domain - 1).bit_length()) <= 32, "index map would overflow"
+    r, c = offsets.shape
+    max_bits = max(1, int(min(2**n - 1, 1 << 31)).bit_length())
+    jt = jnp.asarray(jump_table(n, max_bits).astype(np.int32))
+    pr, pc = -(-r // bm) * bm, -(-c // bn) * bn
+    # Pad with t=1 (a valid offset); padded lanes are sliced away below.
+    toff = jnp.pad(offsets, ((0, pr - r), (0, pc - c)), constant_values=1)
+    seed2 = jnp.asarray(seed, jnp.int32).reshape(1, 1)
+    out = pl.pallas_call(
+        functools.partial(_lfsr_kernel, n=n, max_bits=max_bits, domain=domain),
+        grid=(pr // bm, pc // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((max_bits, n), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pr, pc), jnp.int32),
+        interpret=interpret,
+    )(toff, seed2, jt)
+    return out[:r, :c]

@@ -1,0 +1,151 @@
+# L1 Pallas kernel: tiled masked matmul — the paper's sparse-FC hot-spot.
+#
+# Computes  y = x @ (w * m)  where m is the 0/1 keep-mask produced by the
+# LFSR pair (paper Eq. 6, S = W ⊙ M).  The mask multiply happens *inside*
+# the kernel on the VMEM-resident weight tile, so the sparse weight matrix
+# is never materialized in HBM — the TPU analogue of the paper's "indices
+# regenerated on die, never stored".
+#
+# TPU mapping (DESIGN.md §Hardware-Adaptation):
+#   * grid = (M/bm, N/bn, K/bk); x/w/m tiles staged HBM→VMEM by BlockSpec,
+#     MXU-aligned 128x128 default tiles.
+#   * accumulation uses output-block revisiting (the o block index is
+#     invariant in k, so o_ref acts as the f32 accumulator) — no scratch,
+#     which keeps the interpret-mode HLO small as well.
+#   * backward pass is two more Pallas matmuls (dx = g @ (w*m)^T is itself
+#     a masked matmul on the transposed mask; dw = (x^T @ g) ⊙ m), wired up
+#     via jax.custom_vjp so the kernel is usable inside jax.grad — this is
+#     how the L2 train_step lowers the kernel into its HLO.
+#
+# interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+# custom-calls; interpret mode lowers the same schedule to plain HLO.
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad_to(arr, rows: int, cols: int):
+    r, c = arr.shape
+    if r == rows and c == cols:
+        return arr
+    return jnp.pad(arr, ((0, rows - r), (0, cols - c)))
+
+
+def _mm_kernel(x_ref, w_ref, m_ref, o_ref, *, k_steps: int):
+    """One (bm, bn) output tile; k is the innermost grid dim."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Mask is applied to the VMEM-resident weight tile: the HBM-side weight
+    # array may hold stale values at pruned positions, exactly like the
+    # paper's value-only weight memory.
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...] * m_ref[...], preferred_element_type=jnp.float32
+    )
+    del k_steps
+
+
+def _mm_call(x, w, m, bm: int, bn: int, bk: int, interpret: bool):
+    """Raw tiled pallas call on already-padded operands."""
+    mm, kk = x.shape
+    _, nn = w.shape
+    gm, gn, gk = mm // bm, nn // bn, kk // bk
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, k_steps=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, nn), jnp.float32),
+        interpret=interpret,
+    )(x, w, m)
+
+
+def _auto_blocks(mm: int, kk: int, nn: int, bm, bn, bk):
+    """Pick MXU-friendly block sizes capped at the (padded) dims.
+
+    Defaults target 128-aligned tiles (MXU systolic array edge).  VMEM
+    footprint per grid step = bm*bk + 2*bk*bn + bm*bn f32 words; at the
+    128/512 defaults that is ~0.8 MB, comfortably under the ~16 MB VMEM
+    budget (reported per-artifact by `python -m compile.vmem_report`).
+    """
+    bm = bm or min(128, max(8, 1 << (mm - 1).bit_length() if mm < 128 else 128))
+    bn = bn or min(128, max(8, 1 << (nn - 1).bit_length() if nn < 128 else 128))
+    bk = bk or min(512, max(8, 1 << (kk - 1).bit_length() if kk < 512 else 512))
+    return bm, bn, bk
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6)
+)
+def masked_matmul(
+    x,
+    w,
+    m,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
+    interpret: bool = True,
+):
+    """``x @ (w * m)`` as a tiled Pallas kernel with a Pallas backward pass.
+
+    Args:
+      x: (B, K) f32 activations.
+      w: (K, N) f32 dense weight storage.
+      m: (K, N) f32 0/1 keep-mask (from the LFSR pair or a baseline mask).
+      bm/bn/bk: tile sizes (default: auto, 128/128/512-capped).
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns (B, N) f32. Gradients flow to x and w (masked); m gets zeros.
+    """
+    return _masked_matmul_fwd(x, w, m, bm, bn, bk, interpret)[0]
+
+
+def _masked_matmul_fwd(x, w, m, bm, bn, bk, interpret):
+    mm_, kk = x.shape
+    kk2, nn = w.shape
+    assert kk == kk2 and w.shape == m.shape, (x.shape, w.shape, m.shape)
+    bm_, bn_, bk_ = _auto_blocks(mm_, kk, nn, bm, bn, bk)
+    pm, pk, pn = (
+        _ceil_div(mm_, bm_) * bm_,
+        _ceil_div(kk, bk_) * bk_,
+        _ceil_div(nn, bn_) * bn_,
+    )
+    xp = _pad_to(x.astype(jnp.float32), pm, pk)
+    wp = _pad_to(w.astype(jnp.float32), pk, pn)
+    mp = _pad_to(m.astype(jnp.float32), pk, pn)
+    y = _mm_call(xp, wp, mp, bm_, bn_, bk_, interpret)[:mm_, :nn]
+    return y, (x, w, m)
+
+
+def _masked_matmul_bwd(bm, bn, bk, interpret, res, g):
+    x, w, m = res
+    # dx = g @ (w*m)^T — a masked matmul against the transposed mask.
+    dx = masked_matmul(g, w.T, m.T, bm, bk, bn, interpret)
+    # dw = (x^T @ g) ⊙ m — dense pallas matmul then mask (grads of pruned
+    # synapses are killed, which is what keeps them zero during retraining).
+    ones = jnp.ones(g.shape, jnp.float32)
+    dw = masked_matmul(x.T, g, ones, bk, bn, bm, interpret) * m
+    return dx, dw, jnp.zeros_like(m)
+
+
+masked_matmul.defvjp(_masked_matmul_fwd, _masked_matmul_bwd)
+
+
+def masked_linear(x, w, b, m, **kw):
+    """Masked FC layer ``x @ (w*m) + b`` on the Pallas kernel."""
+    return masked_matmul(x, w, m, **kw) + b

@@ -1,0 +1,168 @@
+# Pure-jnp / numpy correctness oracles for the Pallas kernels.
+#
+# Everything in this file is deliberately written in the most obvious way
+# possible (no tiling, no tricks): these are the ground truth the kernels
+# are tested against, and the numpy LFSR here is additionally the oracle
+# for the rust `lfsr` module (rust tests compare against vectors generated
+# from this implementation; see python/tests/test_lfsr_vectors.py).
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Masked matmul oracle (the paper's Eq. 6: a = ReLU(sum S_ij x) with S = W⊙M)
+# ---------------------------------------------------------------------------
+
+
+def masked_matmul_ref(x, w, m):
+    """Reference for the L1 kernel: ``x @ (w * m)``.
+
+    x: (B, K) activations, w: (K, N) dense weights, m: (K, N) 0/1 keep-mask.
+    """
+    return jnp.dot(x, w * m, preferred_element_type=jnp.float32)
+
+
+def masked_linear_ref(x, w, b, m):
+    """Masked FC layer: ``x @ (w*m) + b`` (paper Eq. 2 with S = W⊙M)."""
+    return masked_matmul_ref(x, w, m) + b
+
+
+# ---------------------------------------------------------------------------
+# Galois LFSR oracle (paper §2.1).
+#
+# State is an n-bit register. One Galois step:
+#   out  = state & 1
+#   state >>= 1
+#   if out: state ^= taps          (taps = feedback polynomial, bit i = c_i)
+#
+# The paper's index mapping (§2.4): an n-bit PRS value v in [1, 2^n - 1] is
+# mapped into [0, N) as  idx = (v * N) >> n  ("multiply by the length and
+# take MSBs") to avoid redundant rejection cycles.
+# ---------------------------------------------------------------------------
+
+# Primitive polynomials (taps in Galois form, excluding the x^n term) giving
+# maximal period 2^n - 1.  Same table as rust/src/lfsr/polynomials.rs — the
+# two MUST stay in sync (test_lfsr_vectors.py checks a sample).
+PRIMITIVE_TAPS = {
+    2: 0x3,
+    3: 0x6,
+    4: 0xC,
+    5: 0x14,
+    6: 0x30,
+    7: 0x60,
+    8: 0xB8,
+    9: 0x110,
+    10: 0x240,
+    11: 0x500,
+    12: 0xE08,
+    13: 0x1C80,
+    14: 0x3802,
+    15: 0x6000,
+    16: 0xD008,
+    17: 0x12000,
+    18: 0x20400,
+    19: 0x72000,
+    20: 0x90000,
+    21: 0x140000,
+    22: 0x300000,
+    23: 0x420000,
+    24: 0xE10000,
+}
+
+
+def lfsr_galois_steps(n: int, seed: int, count: int) -> np.ndarray:
+    """Return `count` successive n-bit Galois LFSR states (after each step).
+
+    seed must be non-zero and < 2^n. The sequence of states visits every
+    value in [1, 2^n - 1] exactly once per period when taps are primitive.
+    """
+    taps = PRIMITIVE_TAPS[n]
+    assert 0 < seed < (1 << n)
+    out = np.empty(count, dtype=np.uint32)
+    state = seed
+    for i in range(count):
+        lsb = state & 1
+        state >>= 1
+        if lsb:
+            state ^= taps
+        out[i] = state
+    return out
+
+
+def lfsr_indices(n: int, seed: int, count: int, domain: int) -> np.ndarray:
+    """Paper's §2.4 MSB index mapping: idx = (state * domain) >> n."""
+    states = lfsr_galois_steps(n, seed, count).astype(np.uint64)
+    return ((states * np.uint64(domain)) >> np.uint64(n)).astype(np.uint32)
+
+
+def pick_lfsr_widths(rows: int, cols: int) -> tuple[int, int]:
+    """Pick register widths for the row/col LFSR pair.
+
+    Widths must satisfy gcd(n_row, n_col) = 1: the joint (row, col) orbit
+    has period lcm(2^a - 1, 2^b - 1), and gcd(2^a-1, 2^b-1) = 2^gcd(a,b)-1,
+    so coprime register lengths make the pair walk visit *every* non-zero
+    state pair — otherwise whole regions of the matrix are unreachable and
+    high sparsity targets cannot be met.  (The paper uses 'different seeds'
+    but never states this; it is load-bearing. See DESIGN.md.)
+    """
+    import math
+
+    n_row = max(4, (max(rows, 2) - 1).bit_length() + 2)
+    n_col = max(4, (max(cols, 2) - 1).bit_length() + 2)
+    while math.gcd(n_row, n_col) != 1 or n_col not in PRIMITIVE_TAPS:
+        n_col += 1
+    return n_row, n_col
+
+
+def lfsr_pair_mask(
+    rows: int,
+    cols: int,
+    sparsity: float,
+    n_row: int,
+    n_col: int,
+    seed_row: int,
+    seed_col: int,
+) -> np.ndarray:
+    """Build the paper's two-LFSR keep mask (1 = keep, 0 = pruned).
+
+    LFSR-1 streams row indices, LFSR-2 streams column indices; (row, col)
+    pairs are *kept* until `size - round(sparsity * size)` distinct
+    positions have been visited — the complement is pruned.  The walk
+    enumerates the KEPT (non-zero) synapses because that is what the
+    paper's inference engine re-derives from the seeds in real time
+    ("the locations of non-zero weights are derived in real-time from
+    LFSRs", abstract / §2.4); the weight memory is laid out in exactly
+    this walk order.  Collisions (already-visited positions) are skipped.
+    Mirrors rust/src/mask/prs.rs.
+    """
+    size = rows * cols
+    target_keep = size - int(round(sparsity * size))
+    mask = np.zeros((rows, cols), dtype=np.float32)
+    taps_r, taps_c = PRIMITIVE_TAPS[n_row], PRIMITIVE_TAPS[n_col]
+    # Fold seeds into the register width (a seed is an n-bit flip-flop
+    # state; 0 is the lock-up state and is remapped to 1).
+    sr = seed_row & ((1 << n_row) - 1) or 1
+    sc = seed_col & ((1 << n_col) - 1) or 1
+    kept = 0
+    # Bounded walk: with coprime widths the joint orbit covers every cell;
+    # the coupon-collector factor is at most ln(size) << 64.
+    budget = max(64 * target_keep, 16 * size) + 1024
+    for _ in range(budget):
+        if kept >= target_keep:
+            break
+        lsb = sr & 1
+        sr >>= 1
+        if lsb:
+            sr ^= taps_r
+        lsb = sc & 1
+        sc >>= 1
+        if lsb:
+            sc ^= taps_c
+        r = (sr * rows) >> n_row
+        c = (sc * cols) >> n_col
+        if mask[r, c] == 0.0:
+            mask[r, c] = 1.0
+            kept += 1
+    assert kept >= target_keep, "LFSR walk budget exhausted before keep target"
+    return mask

@@ -1,0 +1,360 @@
+# L2: the paper's models (LeNet-300-100, LeNet-5, modified VGG-16) as pure
+# jax fwd/bwd, calling the L1 Pallas kernels for every *maskable* FC layer.
+#
+# One jitted `train_step` / `eval_step` / `forward` per model is AOT-lowered
+# by aot.py to HLO text and executed from rust through PJRT.  The
+# connectivity masks are *runtime inputs* (one per FC weight matrix), so a
+# single compiled executable serves dense training, PRS regularization,
+# magnitude-baseline pruning and retraining alike — the rust pipeline just
+# feeds different masks/scalars (DESIGN.md "mask as runtime input").
+#
+# Phase control (paper §2.2-2.3, Eq. 4-5) via scalar inputs:
+#   lam     — regularization strength λ (0 during dense train & retrain)
+#   a_l1/a_l2 — L1/L2 blend of the penalty on prune-target synapses
+#   hard_on — 0: soft phase (forward uses full W, penalty pushes the
+#                prune-targets (1-M)⊙W toward zero)
+#             1: hard phase (forward uses W⊙M, update re-projects onto the
+#                mask so pruned synapses stay exactly zero = prune+retrain)
+#   lr      — SGD learning rate (schedules live in the rust pipeline)
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import masked_matmul
+from .kernels import ref as kref
+
+Params = List[Tuple[str, jnp.ndarray]]
+
+
+# ---------------------------------------------------------------------------
+# Small functional NN library (what the models are composed from)
+# ---------------------------------------------------------------------------
+
+
+def _glorot(key, shape):
+    fan_in, fan_out = np.prod(shape[:-1]), shape[-1]
+    lim = np.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+def masked_fc(x, w, b, m, use_pallas: bool):
+    """FC layer with connectivity mask — the paper's Eq. 6 on the L1 kernel."""
+    if use_pallas:
+        return masked_matmul(x, w, m) + b
+    return kref.masked_linear_ref(x, w, b, m)
+
+
+def conv2d(x, w, b, stride: int = 1):
+    """NHWC 'VALID' conv (paper's conv layers are never pruned: §3.1.1)."""
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + b
+
+
+def conv2d_same(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + b
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def ce_loss(logits, y):
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lp, y[:, None], axis=1))
+
+
+def accuracy(logits, y):
+    return jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Model specs
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ModelSpec:
+    """Everything aot.py / the rust runtime needs to know about one model."""
+
+    name: str
+    input_shape: Tuple[int, ...]  # per-example, NHWC (or flat for MLPs)
+    num_classes: int
+    batch: int
+    init_fn: Callable[[jax.Array], Params]
+    apply_fn: Callable
+    maskable: List[str] = field(default_factory=list)  # FC weight names, in order
+    use_pallas: bool = True
+
+    def init(self, seed: int = 0) -> Params:
+        return self.init_fn(jax.random.PRNGKey(seed))
+
+    def param_names(self, seed: int = 0) -> List[str]:
+        return [n for n, _ in self.init(seed)]
+
+
+# --- LeNet-300-100 (paper §3.1.2; 267K params) -----------------------------
+
+
+def _lenet300_init(key) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return [
+        ("fc1_w", _glorot(k1, (784, 300))),
+        ("fc1_b", jnp.zeros((300,), jnp.float32)),
+        ("fc2_w", _glorot(k2, (300, 100))),
+        ("fc2_b", jnp.zeros((100,), jnp.float32)),
+        ("fc3_w", _glorot(k3, (100, 10))),
+        ("fc3_b", jnp.zeros((10,), jnp.float32)),
+    ]
+
+
+def _lenet300_apply(p, x, masks, use_pallas):
+    x = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(masked_fc(x, p["fc1_w"], p["fc1_b"], masks["fc1_w"], use_pallas))
+    h = jax.nn.relu(masked_fc(h, p["fc2_w"], p["fc2_b"], masks["fc2_w"], use_pallas))
+    return masked_fc(h, p["fc3_w"], p["fc3_b"], masks["fc3_w"], use_pallas)
+
+
+# --- LeNet-5 (Han et al. Caffe variant: 20/50 conv, 431K params) -----------
+
+
+def _lenet5_init_for(in_ch: int, flat: int) -> Callable:
+    def init(key) -> Params:
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return [
+            ("conv1_w", _glorot(k1, (5, 5, in_ch, 20))),
+            ("conv1_b", jnp.zeros((20,), jnp.float32)),
+            ("conv2_w", _glorot(k2, (5, 5, 20, 50))),
+            ("conv2_b", jnp.zeros((50,), jnp.float32)),
+            ("fc1_w", _glorot(k3, (flat, 500))),
+            ("fc1_b", jnp.zeros((500,), jnp.float32)),
+            ("fc2_w", _glorot(k4, (500, 10))),
+            ("fc2_b", jnp.zeros((10,), jnp.float32)),
+        ]
+
+    return init
+
+
+def _lenet5_apply(p, x, masks, use_pallas):
+    h = jax.nn.relu(conv2d(x, p["conv1_w"], p["conv1_b"]))
+    h = maxpool2(h)
+    h = jax.nn.relu(conv2d(h, p["conv2_w"], p["conv2_b"]))
+    h = maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(masked_fc(h, p["fc1_w"], p["fc1_b"], masks["fc1_w"], use_pallas))
+    return masked_fc(h, p["fc2_w"], p["fc2_b"], masks["fc2_w"], use_pallas)
+
+
+# --- Modified VGG-16 (paper §3.1.4: 64x64 input, FC->2048, last pool cut) --
+
+_VGG_CFG = [64, 64, "P", 128, 128, "P", 256, 256, 256, "P", 512, 512, 512, "P", 512, 512, 512]
+
+
+def _vgg_dims(width: float, fc_width: int, num_classes: int):
+    convs = []
+    in_ch = 3
+    for v in _VGG_CFG:
+        if v == "P":
+            convs.append("P")
+        else:
+            out_ch = max(4, int(round(v * width)))
+            convs.append((in_ch, out_ch))
+            in_ch = out_ch
+    flat = in_ch * 4 * 4  # 64 / 2^4 = 4 (last pool eliminated per paper)
+    fcs = [(flat, fc_width), (fc_width, fc_width), (fc_width, num_classes)]
+    return convs, fcs
+
+
+def _vgg_init_for(width: float, fc_width: int, num_classes: int) -> Callable:
+    convs, fcs = _vgg_dims(width, fc_width, num_classes)
+
+    def init(key) -> Params:
+        params: Params = []
+        ci = 0
+        keys = jax.random.split(key, len([c for c in convs if c != "P"]) + len(fcs))
+        ki = 0
+        for c in convs:
+            if c == "P":
+                continue
+            ic, oc = c
+            params.append((f"conv{ci}_w", _glorot(keys[ki], (3, 3, ic, oc))))
+            params.append((f"conv{ci}_b", jnp.zeros((oc,), jnp.float32)))
+            ci += 1
+            ki += 1
+        for fi, (a, b) in enumerate(fcs, 1):
+            params.append((f"fc{fi}_w", _glorot(keys[ki], (a, b))))
+            params.append((f"fc{fi}_b", jnp.zeros((b,), jnp.float32)))
+            ki += 1
+        return params
+
+    return init
+
+
+def _vgg_apply(p, x, masks, use_pallas):
+    h = x
+    ci = 0
+    for v in _VGG_CFG:
+        if v == "P":
+            h = maxpool2(h)
+        else:
+            h = jax.nn.relu(conv2d_same(h, p[f"conv{ci}_w"], p[f"conv{ci}_b"]))
+            ci += 1
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(masked_fc(h, p["fc1_w"], p["fc1_b"], masks["fc1_w"], use_pallas))
+    h = jax.nn.relu(masked_fc(h, p["fc2_w"], p["fc2_b"], masks["fc2_w"], use_pallas))
+    return masked_fc(h, p["fc3_w"], p["fc3_b"], masks["fc3_w"], use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def build_specs(
+    vgg_width: float = 0.25,
+    vgg_fc: int = 2048,
+    vgg_classes: int = 1000,
+    vgg_batch: int = 32,
+    lenet_batch: int = 64,
+    use_pallas: bool = True,
+) -> Dict[str, ModelSpec]:
+    """The model registry; aot.py lowers each entry's step functions."""
+    specs = {
+        "lenet300": ModelSpec(
+            name="lenet300",
+            input_shape=(784,),
+            num_classes=10,
+            batch=lenet_batch,
+            init_fn=_lenet300_init,
+            apply_fn=_lenet300_apply,
+            maskable=["fc1_w", "fc2_w", "fc3_w"],
+            use_pallas=use_pallas,
+        ),
+        "lenet5_mnist": ModelSpec(
+            name="lenet5_mnist",
+            input_shape=(28, 28, 1),
+            num_classes=10,
+            batch=lenet_batch,
+            init_fn=_lenet5_init_for(1, 4 * 4 * 50),
+            apply_fn=_lenet5_apply,
+            maskable=["fc1_w", "fc2_w"],
+            use_pallas=use_pallas,
+        ),
+        "lenet5_cifar": ModelSpec(
+            name="lenet5_cifar",
+            input_shape=(32, 32, 3),
+            num_classes=10,
+            batch=lenet_batch,
+            init_fn=_lenet5_init_for(3, 5 * 5 * 50),
+            apply_fn=_lenet5_apply,
+            maskable=["fc1_w", "fc2_w"],
+            use_pallas=use_pallas,
+        ),
+        "vgg16": ModelSpec(
+            name="vgg16",
+            input_shape=(64, 64, 3),
+            num_classes=vgg_classes,
+            batch=vgg_batch,
+            init_fn=_vgg_init_for(vgg_width, vgg_fc, vgg_classes),
+            apply_fn=_vgg_apply,
+            maskable=["fc1_w", "fc2_w", "fc3_w"],
+            # Interpret-mode pallas over the 2048-wide FCs bloats the HLO;
+            # VGG uses the fused jnp path (XLA fuses mask⊙W into the dot).
+            # See EXPERIMENTS.md §Perf for the measured comparison.
+            use_pallas=False,
+        ),
+    }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Step functions (what actually gets AOT-lowered)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(spec: ModelSpec, names: List[str]):
+    """(params..., masks..., x, y, lam, lr, a_l1, a_l2, hard_on)
+    -> (new_params..., loss, acc).
+
+    Paper Eq. 5: prune-target synapses ((1-M)⊙W) receive the λ penalty; the
+    hard phase projects the update onto the mask each step.
+    """
+
+    def train_step(*args):
+        np_, nm = len(names), len(spec.maskable)
+        params_flat = args[:np_]
+        masks = dict(zip(spec.maskable, args[np_ : np_ + nm]))
+        x, y, lam, lr, a_l1, a_l2, hard_on = args[np_ + nm :]
+        p = dict(zip(names, params_flat))
+
+        def loss_fn(p):
+            # Soft phase: forward with full W. Hard phase: forward with W⊙M.
+            fwd_masks = {
+                k: hard_on * m + (1.0 - hard_on) * jnp.ones_like(m)
+                for k, m in masks.items()
+            }
+            logits = spec.apply_fn(p, x, fwd_masks, spec.use_pallas)
+            data_loss = ce_loss(logits, y)
+            reg = 0.0
+            for k, m in masks.items():
+                tgt = (1.0 - m) * p[k]  # prune-target synapses
+                reg = (
+                    reg
+                    + a_l2 * 0.5 * jnp.sum(tgt * tgt)
+                    + a_l1 * jnp.sum(jnp.abs(tgt))
+                )
+            return data_loss + lam * reg, logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(p)
+        acc = accuracy(logits, y)
+        new_params = []
+        for k in names:
+            g = grads[k]
+            w = p[k] - lr * g
+            if k in masks:
+                # Hard phase: re-project so pruned synapses stay exactly 0.
+                keep = hard_on * masks[k] + (1.0 - hard_on) * jnp.ones_like(masks[k])
+                w = w * keep
+            new_params.append(w)
+        return tuple(new_params) + (loss, acc)
+
+    return train_step
+
+
+def make_eval_step(spec: ModelSpec, names: List[str]):
+    """(params..., masks..., x, y) -> (loss, acc). Masks applied as-is
+    (pass all-ones for dense evaluation)."""
+
+    def eval_step(*args):
+        np_, nm = len(names), len(spec.maskable)
+        p = dict(zip(names, args[:np_]))
+        masks = dict(zip(spec.maskable, args[np_ : np_ + nm]))
+        x, y = args[np_ + nm :]
+        logits = spec.apply_fn(p, x, masks, spec.use_pallas)
+        return ce_loss(logits, y), accuracy(logits, y)
+
+    return eval_step
+
+
+def make_forward(spec: ModelSpec, names: List[str]):
+    """(params..., masks..., x) -> (logits,) — the inference/serving entry."""
+
+    def forward(*args):
+        np_, nm = len(names), len(spec.maskable)
+        p = dict(zip(names, args[:np_]))
+        masks = dict(zip(spec.maskable, args[np_ : np_ + nm]))
+        x = args[np_ + nm]
+        return (spec.apply_fn(p, x, masks, spec.use_pallas),)
+
+    return forward

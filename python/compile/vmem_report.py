@@ -1,0 +1,59 @@
+# L1 perf analysis: VMEM footprint + MXU utilization *estimates* for the
+# Pallas masked-matmul kernel's BlockSpec schedule (DESIGN.md §Perf).
+#
+# interpret=True gives CPU-numpy timings only — not a TPU proxy — so the
+# kernel is optimized structurally: this report computes, per model FC
+# layer, the tile sizes the auto-picker selects, the VMEM bytes per grid
+# step (x, w, m, o tiles + the revisited output accumulator), and the MXU
+# occupancy of each tile (fraction of the 128x128 systolic array an
+# (bm, bk)x(bk, bn) tile feeds).
+#
+# Usage: cd python && python -m compile.vmem_report
+from __future__ import annotations
+
+from .kernels.masked_matmul import _auto_blocks, _ceil_div
+from . import model as M
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes, per-core VMEM on current TPUs
+MXU = 128
+
+
+def layer_report(name: str, b: int, k: int, n: int) -> dict:
+    bm, bn, bk = _auto_blocks(b, k, n, None, None, None)
+    # f32 tiles resident per grid step: x (bm,bk), w (bk,bn), m (bk,bn),
+    # o (bm,bn) — o is revisited across the k loop (accumulator).
+    vmem = 4 * (bm * bk + 2 * bk * bn + bm * bn)
+    grid = (_ceil_div(b, bm), _ceil_div(n, bn), _ceil_div(k, bk))
+    mxu_util = min(bm, MXU) * min(bn, MXU) / (MXU * MXU)
+    return {
+        "layer": name,
+        "shape": f"({b}x{k})@({k}x{n})",
+        "tiles": (bm, bn, bk),
+        "grid": grid,
+        "vmem_bytes": vmem,
+        "vmem_pct": 100.0 * vmem / VMEM_BUDGET,
+        "mxu_tile_occupancy": mxu_util,
+    }
+
+
+def main() -> None:
+    specs = M.build_specs()
+    print(f"{'layer':<28} {'shape':<22} {'tiles(bm,bn,bk)':<18} {'grid':<14} "
+          f"{'VMEM':>10} {'%budget':>8} {'MXU occ':>8}")
+    for spec in specs.values():
+        params = dict(spec.init(0))
+        for mk in spec.maskable:
+            kdim, ndim = params[mk].shape
+            r = layer_report(f"{spec.name}.{mk}", spec.batch, kdim, ndim)
+            print(
+                f"{r['layer']:<28} {r['shape']:<22} {str(r['tiles']):<18} "
+                f"{str(r['grid']):<14} {r['vmem_bytes']//1024:>9}K "
+                f"{r['vmem_pct']:>7.2f}% {r['mxu_tile_occupancy']:>8.2f}"
+            )
+            assert r["vmem_bytes"] < VMEM_BUDGET, f"{r['layer']} exceeds VMEM budget"
+    print("\nAll layers within the 16 MB VMEM budget; 128-aligned tiles feed")
+    print("the MXU at full occupancy wherever the layer dims allow.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+# The jump-matrix LFSR kernel vs the bit-serial oracle: the whole point of
+# the GF(2) jump construction is that state(t) computed in parallel equals
+# t serial steps — these tests pin that equivalence down.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lfsr_jump, ref
+
+
+@pytest.mark.parametrize("n", [4, 8, 12, 16])
+def test_step_matrix_matches_one_serial_step(n):
+    cols = lfsr_jump.step_matrix(n)
+    rng = np.random.default_rng(n)
+    for _ in range(50):
+        s = int(rng.integers(1, 1 << n))
+        serial = int(ref.lfsr_galois_steps(n, s, 1)[0])
+        assert lfsr_jump.mat_apply(cols, s) == serial
+
+
+@pytest.mark.parametrize("n", [4, 8, 12])
+def test_jump_equals_serial_walk(n):
+    """M^t · seed == t serial steps, for t spanning several bit patterns."""
+    seed = 1
+    serial = ref.lfsr_galois_steps(n, seed, 300)
+    for t in [1, 2, 3, 5, 8, 13, 64, 100, 255, 299]:
+        if t <= len(serial):
+            assert lfsr_jump.lfsr_state_np(n, seed, t) == int(serial[t - 1]), t
+
+
+def test_mat_mul_associative_with_apply():
+    n = 8
+    m1 = lfsr_jump.step_matrix(n)
+    m2 = lfsr_jump.mat_mul(m1, m1)
+    for s in [1, 7, 100, 255]:
+        assert lfsr_jump.mat_apply(m2, s) == lfsr_jump.mat_apply(
+            m1, lfsr_jump.mat_apply(m1, s)
+        )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.sampled_from([8, 12, 16]),
+    seed=st.integers(1, 200),
+    domain=st.sampled_from([10, 300, 784, 1024]),
+)
+def test_kernel_matches_oracle_indices(n, seed, domain):
+    """Pallas kernel (parallel jumps) vs ref.lfsr_indices (serial walk)."""
+    count = 96
+    t = np.arange(1, count + 1, dtype=np.int32).reshape(8, 12)
+    idx = np.asarray(lfsr_jump.lfsr_indices_kernel(t, seed, n, domain, bm=8, bn=8))
+    oracle = ref.lfsr_indices(n, seed, count, domain).reshape(8, 12)
+    np.testing.assert_array_equal(idx, oracle)
+
+
+def test_kernel_arbitrary_offsets_not_just_prefix():
+    """Random (non-contiguous) offsets — the parallel-generation property."""
+    n, seed, domain = 12, 55, 300
+    rng = np.random.default_rng(0)
+    t = rng.integers(1, 2**n - 1, size=(4, 16)).astype(np.int32)
+    idx = np.asarray(lfsr_jump.lfsr_indices_kernel(t, seed, n, domain, bm=4, bn=16))
+    serial = ref.lfsr_indices(n, seed, 2**n - 2, domain)
+    expect = serial[t - 1]
+    np.testing.assert_array_equal(idx, expect)
+
+
+@pytest.mark.parametrize("n", [4, 6, 8, 10, 12, 14, 16])
+def test_primitive_taps_give_maximal_period(n):
+    """Every tap entry must be primitive: the state walk visits all 2^n - 1
+    non-zero states before repeating (paper §2.1)."""
+    period = 2**n - 1
+    states = ref.lfsr_galois_steps(n, 1, period)
+    assert len(np.unique(states)) == period
+    assert states[-1] == 1  # returned to the seed after a full period
+
+
+def test_index_mapping_in_range():
+    for domain in [1, 7, 300, 784]:
+        idx = ref.lfsr_indices(12, 99, 2000, domain)
+        assert idx.min() >= 0 and idx.max() < domain
+
+
+def test_index_mapping_near_uniform():
+    """The MSB mapping should give a near-uniform index histogram — this is
+    what makes PRS pruning behave like random pruning statistically."""
+    domain = 100
+    idx = ref.lfsr_indices(16, 1234, 2**16 - 1, domain)
+    counts = np.bincount(idx, minlength=domain)
+    # Over a full period every index appears floor/ceil(P/domain) times.
+    assert counts.min() >= (2**16 - 1) // domain - 1
+    assert counts.max() <= (2**16 - 1) // domain + 2

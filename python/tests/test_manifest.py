@@ -1,0 +1,57 @@
+# AOT manifest contract: what aot.py writes is exactly what the rust
+# runtime (rust/src/runtime/manifest.rs) expects to read.
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_models_present_with_artifacts():
+    man = _manifest()
+    for name in ["lenet300", "lenet5_mnist", "lenet5_cifar", "vgg16"]:
+        assert name in man["models"], name
+        entry = man["models"][name]
+        for kind in ["train", "eval", "fwd"]:
+            f = entry["artifacts"][kind]
+            assert os.path.exists(os.path.join(ART, f)), f
+
+
+def test_param_specs_match_live_models():
+    man = _manifest()
+    specs = M.build_specs(vgg_width=man.get("vgg_width", 0.25))
+    for name, entry in man["models"].items():
+        spec = specs[name]
+        params = spec.init(0)
+        assert [p["name"] for p in entry["params"]] == [n for n, _ in params]
+        for p, (_, arr) in zip(entry["params"], params):
+            assert p["shape"] == list(arr.shape), (name, p["name"])
+        assert entry["maskable"] == spec.maskable
+        assert entry["param_count"] == sum(int(np.prod(a.shape)) for _, a in params)
+
+
+def test_scalar_input_order_is_stable():
+    # The rust StepScalars marshalling depends on this exact order.
+    man = _manifest()
+    for entry in man["models"].values():
+        assert entry["scalar_inputs"] == ["lam", "lr", "a_l1", "a_l2", "hard_on"]
+
+
+def test_kernel_entries():
+    man = _manifest()
+    assert man["kernels"]["lfsr_idx"]["n"] in (16,)
+    assert man["kernels"]["lfsr_idx"]["domain"] == 1024
+    for k in man["kernels"].values():
+        assert os.path.exists(os.path.join(ART, k["file"]))

@@ -1,0 +1,186 @@
+# L2 semantics: the train_step implements the paper's pipeline phases
+# correctly (Eq. 4-5), param counts match the paper's Table 2, shapes hold.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPECS = M.build_specs(vgg_width=0.0625, vgg_fc=256, vgg_classes=20, vgg_batch=2, lenet_batch=8)
+
+
+def _batch(spec, rng):
+    x = jnp.asarray(rng.normal(size=(spec.batch, *spec.input_shape)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, spec.num_classes, size=spec.batch).astype(np.int32))
+    return x, y
+
+
+def _masks(spec, params, sparsity, rng):
+    shapes = dict((n, a.shape) for n, a in params)
+    return [
+        jnp.asarray((rng.random(shapes[n]) >= sparsity).astype(np.float32))
+        for n in spec.maskable
+    ]
+
+
+def _run_train(spec, params, masks, x, y, lam, lr, a1, a2, hard):
+    names = [n for n, _ in params]
+    step = M.make_train_step(spec, names)
+    args = [a for _, a in params] + masks + [x, y] + [
+        jnp.float32(lam),
+        jnp.float32(lr),
+        jnp.float32(a1),
+        jnp.float32(a2),
+        jnp.float32(hard),
+    ]
+    out = step(*args)
+    return list(zip(names, out[: len(names)])), float(out[-2]), float(out[-1])
+
+
+def test_lenet300_param_count_matches_paper():
+    """Paper Table 2: LeNet-300-100 has 267K parameters."""
+    p = SPECS["lenet300"].init()
+    total = sum(int(np.prod(a.shape)) for _, a in p)
+    assert total == 266_610  # 784*300+300 + 300*100+100 + 100*10+10
+
+
+def test_lenet5_param_count_matches_paper():
+    """Paper Table 2: LeNet-5 has 431K parameters (Han/Caffe 20-50-500)."""
+    p = SPECS["lenet5_mnist"].init()
+    total = sum(int(np.prod(a.shape)) for _, a in p)
+    assert total == 431_080
+
+
+def test_vgg_fc_dominates_params():
+    """Paper §3.1.1: FC layers dominate VGG's parameter count."""
+    spec = M.build_specs(vgg_width=0.25, vgg_fc=2048, vgg_classes=1000)["vgg16"]
+    p = spec.init()
+    fc = sum(int(np.prod(a.shape)) for n, a in p if n.startswith("fc"))
+    total = sum(int(np.prod(a.shape)) for _, a in p)
+    assert fc / total > 0.75
+
+
+@pytest.mark.parametrize("name", ["lenet300", "lenet5_mnist", "lenet5_cifar", "vgg16"])
+def test_forward_shapes(name):
+    spec = SPECS[name]
+    rng = np.random.default_rng(0)
+    params = spec.init()
+    x, _ = _batch(spec, rng)
+    masks = {n: jnp.ones(dict((k, a.shape) for k, a in params)[n], jnp.float32) for n in spec.maskable}
+    logits = spec.apply_fn(dict(params), x, masks, spec.use_pallas)
+    assert logits.shape == (spec.batch, spec.num_classes)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_soft_phase_shrinks_prune_targets():
+    """Regularization phase (hard=0, λ>0): prune-target weights must shrink,
+    kept weights must not be pulled by the penalty (paper Eq. 5 split)."""
+    spec = SPECS["lenet300"]
+    rng = np.random.default_rng(1)
+    params = spec.init()
+    masks = _masks(spec, params, 0.5, rng)
+    x, y = _batch(spec, rng)
+    # Large λ, lr=0 except reg: isolate the reg effect by zeroing data loss
+    # influence via lr on a single step with huge λ.
+    new, _, _ = _run_train(spec, params, masks, x, y, lam=10.0, lr=0.01, a1=0.0, a2=1.0, hard=0.0)
+    p0, p1 = dict(params), dict(new)
+    m = dict(zip(spec.maskable, masks))
+    for k in spec.maskable:
+        mask = np.asarray(m[k])
+        before = np.abs(np.asarray(p0[k]))
+        after = np.abs(np.asarray(p1[k]))
+        tgt = mask == 0.0
+        # penalized weights shrink on average by ~ λ·lr = 10%
+        assert after[tgt].sum() < 0.95 * before[tgt].sum()
+
+
+def test_hard_phase_keeps_pruned_exactly_zero():
+    """Retrain phase (hard=1): pruned synapses stay exactly 0 after updates."""
+    spec = SPECS["lenet300"]
+    rng = np.random.default_rng(2)
+    params = spec.init()
+    masks = _masks(spec, params, 0.7, rng)
+    x, y = _batch(spec, rng)
+    new = params
+    for _ in range(3):
+        new, _, _ = _run_train(spec, new, masks, x, y, lam=0.0, lr=0.05, a1=0.0, a2=0.0, hard=1.0)
+    m = dict(zip(spec.maskable, masks))
+    for k in spec.maskable:
+        w = np.asarray(dict(new)[k])
+        assert np.all(w[np.asarray(m[k]) == 0.0] == 0.0)
+
+
+def test_dense_phase_ignores_mask():
+    """Dense phase (λ=0, hard=0): masks must have no effect at all."""
+    spec = SPECS["lenet300"]
+    rng = np.random.default_rng(3)
+    params = spec.init()
+    x, y = _batch(spec, rng)
+    ones = [jnp.ones_like(m) for m in _masks(spec, params, 0.5, rng)]
+    holes = _masks(spec, params, 0.9, np.random.default_rng(4))
+    a, la, _ = _run_train(spec, params, ones, x, y, 0.0, 0.1, 0.0, 0.0, 0.0)
+    b, lb, _ = _run_train(spec, params, holes, x, y, 0.0, 0.1, 0.0, 0.0, 0.0)
+    assert la == lb
+    for (_, wa), (_, wb) in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(wa), np.asarray(wb))
+
+
+def test_l1_vs_l2_penalty_differ():
+    spec = SPECS["lenet300"]
+    rng = np.random.default_rng(5)
+    params = spec.init()
+    masks = _masks(spec, params, 0.5, rng)
+    x, y = _batch(spec, rng)
+    _, l1_loss, _ = _run_train(spec, params, masks, x, y, 1.0, 0.0, 1.0, 0.0, 0.0)
+    _, l2_loss, _ = _run_train(spec, params, masks, x, y, 1.0, 0.0, 0.0, 1.0, 0.0)
+    assert l1_loss != l2_loss
+    # L1 of glorot-init weights (|w|<1) exceeds 0.5*L2
+    assert l1_loss > l2_loss
+
+
+def test_training_reduces_loss():
+    """A few dense steps on a fixed batch must reduce the loss."""
+    spec = SPECS["lenet300"]
+    rng = np.random.default_rng(6)
+    params = spec.init()
+    ones = [jnp.ones_like(m) for m in _masks(spec, params, 0.5, rng)]
+    x, y = _batch(spec, rng)
+    _, loss0, _ = _run_train(spec, params, ones, x, y, 0.0, 0.0, 0.0, 0.0, 0.0)
+    new = params
+    for _ in range(20):
+        new, loss, _ = _run_train(spec, new, ones, x, y, 0.0, 0.1, 0.0, 0.0, 0.0)
+    assert loss < loss0
+
+
+def test_eval_step_matches_forward():
+    spec = SPECS["lenet300"]
+    rng = np.random.default_rng(7)
+    params = spec.init()
+    names = [n for n, _ in params]
+    masks = _masks(spec, params, 0.3, rng)
+    x, y = _batch(spec, rng)
+    ev = M.make_eval_step(spec, names)
+    loss, acc = ev(*([a for _, a in params] + masks + [x, y]))
+    fw = M.make_forward(spec, names)
+    (logits,) = fw(*([a for _, a in params] + masks + [x]))
+    assert float(loss) == pytest.approx(float(M.ce_loss(logits, y)), rel=1e-6)
+    assert float(acc) == pytest.approx(float(M.accuracy(logits, y)), rel=1e-6)
+
+
+def test_eval_applies_mask():
+    """Eval with a hole-y mask must differ from dense eval (masks applied
+    as-is in eval_step)."""
+    spec = SPECS["lenet300"]
+    rng = np.random.default_rng(8)
+    params = spec.init()
+    names = [n for n, _ in params]
+    x, y = _batch(spec, rng)
+    ev = M.make_eval_step(spec, names)
+    ones = [jnp.ones((784, 300), jnp.float32), jnp.ones((300, 100), jnp.float32), jnp.ones((100, 10), jnp.float32)]
+    holes = _masks(spec, params, 0.95, rng)
+    l_dense, _ = ev(*([a for _, a in params] + ones + [x, y]))
+    l_sparse, _ = ev(*([a for _, a in params] + holes + [x, y]))
+    assert float(l_dense) != float(l_sparse)

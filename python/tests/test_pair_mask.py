@@ -1,0 +1,75 @@
+# The two-LFSR pair mask (paper §2: LFSR-1 rows, LFSR-2 columns) — the
+# python oracle that rust/src/mask/prs.rs must agree with byte-for-byte
+# (cross-checked from the rust side via vectors; here we pin its semantics).
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(4, 120),
+    cols=st.integers(4, 120),
+    sparsity=st.floats(0.05, 0.95),
+    seed=st.integers(1, 1000),
+)
+def test_exact_sparsity(rows, cols, sparsity, seed):
+    """The walk prunes exactly round(sp * size) distinct positions."""
+    n_r, n_c = ref.pick_lfsr_widths(rows, cols)
+    m = ref.lfsr_pair_mask(rows, cols, sparsity, n_r, n_c, seed, seed + 1)
+    pruned = int((m == 0).sum())
+    assert pruned == round(sparsity * rows * cols)
+
+
+def test_deterministic_given_seeds():
+    a = ref.lfsr_pair_mask(50, 40, 0.5, 8, 9, 3, 7)
+    b = ref.lfsr_pair_mask(50, 40, 0.5, 8, 9, 3, 7)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_different_seeds_differ():
+    a = ref.lfsr_pair_mask(50, 40, 0.5, 8, 9, 3, 7)
+    b = ref.lfsr_pair_mask(50, 40, 0.5, 8, 9, 5, 11)
+    assert (a != b).any()
+
+
+def test_rows_and_cols_covered():
+    """PRS row/col marginals are near-uniform: no row or column is starved
+    (this is what preserves rank, paper Table 3)."""
+    m = ref.lfsr_pair_mask(64, 64, 0.9, 10, 11, 17, 23)
+    pruned_per_row = (m == 0).sum(axis=1)
+    pruned_per_col = (m == 0).sum(axis=0)
+    assert pruned_per_row.min() > 0.9 * 64 * 0.5
+    assert pruned_per_col.min() > 0.9 * 64 * 0.5
+
+
+def test_rank_preserved_at_moderate_sparsity():
+    """Paper Table 3: PRS-masked random matrices stay near full rank."""
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(100, 80)).astype(np.float64)
+    m = ref.lfsr_pair_mask(100, 80, 0.5, 10, 11, 9, 15)
+    r = np.linalg.matrix_rank(w * m)
+    assert r >= 78  # near-full (80) even with half the synapses pruned
+
+
+def test_zero_sparsity_all_ones():
+    m = ref.lfsr_pair_mask(20, 20, 0.0, 8, 9, 1, 2)
+    assert (m == 1.0).all()
+
+
+def test_pick_widths_coprime():
+    import math
+    for r, c in [(4, 4), (300, 784), (100, 100), (2048, 2048), (10, 1000)]:
+        a, b = ref.pick_lfsr_widths(r, c)
+        assert math.gcd(a, b) == 1
+        assert (1 << a) - 1 >= 2 * r and (1 << b) - 1 >= 2 * c
+        assert a in ref.PRIMITIVE_TAPS and b in ref.PRIMITIVE_TAPS
+
+
+def test_high_sparsity_reachable_with_coprime_widths():
+    """With coprime widths the walk reaches 95% sparsity (the paper's top
+    operating point) — the regression that motivated pick_lfsr_widths."""
+    m = ref.lfsr_pair_mask(64, 64, 0.95, 8, 9, 5, 9)
+    assert int((m == 0).sum()) == round(0.95 * 64 * 64)

@@ -1,0 +1,41 @@
+//! Cycle-engine throughput: simulated MAC-cycles per second for both
+//! datapaths (DESIGN §Perf target: ≥1e7 MAC-cycles/s) plus the mask
+//! builders that feed them.
+use lfsr_prune::data::rng::Pcg32;
+use lfsr_prune::hw::{baseline, lfsr_engine, Mode, SparseLayer};
+use lfsr_prune::mask::prs::{prs_mask, PrsMaskConfig};
+use lfsr_prune::mask::{magnitude_mask, random_mask};
+use lfsr_prune::util::bench::{black_box, Bench};
+
+fn layer(rows: usize, cols: usize, sp: f64, cfg: PrsMaskConfig) -> SparseLayer {
+    let mask = prs_mask(rows, cols, sp, cfg);
+    let mut rng = Pcg32::new(1);
+    SparseLayer {
+        rows,
+        cols,
+        weights: (0..rows * cols).map(|_| rng.next_normal()).collect(),
+        mask,
+        input: (0..rows).map(|_| rng.next_normal()).collect(),
+    }
+}
+
+fn main() {
+    let (rows, cols, sp) = (784usize, 300usize, 0.9f64);
+    let cfg = PrsMaskConfig::auto(rows, cols, 5, 13);
+    let l = layer(rows, cols, sp, cfg);
+    let nnz = l.mask.nnz() as u64;
+
+    Bench::new("engine/baseline_csc_8b (ops)").run(nnz, || black_box(baseline::run(&l, 8, 8)));
+    Bench::new("engine/baseline_csc_4b (ops)").run(nnz, || black_box(baseline::run(&l, 4, 8)));
+    Bench::new("engine/lfsr_ideal (ops)").run(nnz, || black_box(lfsr_engine::run(&l, cfg, Mode::Ideal)));
+    Bench::new("engine/lfsr_stream (ops)").run(nnz, || black_box(lfsr_engine::run(&l, cfg, Mode::Stream)));
+
+    let size = (rows * cols) as u64;
+    Bench::new("mask/prs_784x300@0.9 (cells)").run(size, || black_box(prs_mask(rows, cols, sp, cfg)));
+    Bench::new("mask/random_784x300@0.9 (cells)").run(size, || black_box(random_mask(rows, cols, sp, 7)));
+    let w: Vec<f32> = {
+        let mut rng = Pcg32::new(2);
+        (0..rows * cols).map(|_| rng.next_normal()).collect()
+    };
+    Bench::new("mask/magnitude_784x300@0.9 (cells)").run(size, || black_box(magnitude_mask(rows, cols, &w, sp)));
+}

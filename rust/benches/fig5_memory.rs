@@ -1,0 +1,36 @@
+//! Regenerates Figure 5 (memory vs sparsity) and times the footprint
+//! calculators; `repro experiment fig5` renders the full table.
+use lfsr_prune::hw::layers;
+use lfsr_prune::sparse::{baseline_footprint_analytic, proposed_footprint_analytic};
+use lfsr_prune::util::bench::{black_box, Bench};
+
+fn main() {
+    let net = layers::lenet300();
+    println!("Figure 5 series (KB), LeNet-300-100:");
+    println!("{:>9} {:>12} {:>12} {:>10}", "sparsity", "base4b", "base8b", "proposed");
+    for sp in [0.1, 0.25, 0.4, 0.55, 0.7, 0.85, 0.95] {
+        let (mut b4, mut b8, mut p) = (0u64, 0u64, 0u64);
+        for &d in &net.layers {
+            b4 += baseline_footprint_analytic(d.rows, d.cols, sp, 4, 8).total();
+            b8 += baseline_footprint_analytic(d.rows, d.cols, sp, 8, 8).total();
+            p += proposed_footprint_analytic(d.rows, d.cols, sp, 8).total();
+        }
+        println!(
+            "{:>8.0}% {:>12.2} {:>12.2} {:>10.2}",
+            sp * 100.0,
+            b4 as f64 / 8192.0,
+            b8 as f64 / 8192.0,
+            p as f64 / 8192.0
+        );
+    }
+    Bench::new("fig5/footprints_full_sweep").run(7 * 3, || {
+        let mut acc = 0u64;
+        for sp in [0.1, 0.25, 0.4, 0.55, 0.7, 0.85, 0.95] {
+            for &d in &net.layers {
+                acc += baseline_footprint_analytic(d.rows, d.cols, sp, 4, 8).total();
+                acc += proposed_footprint_analytic(d.rows, d.cols, sp, 8).total();
+            }
+        }
+        black_box(acc)
+    });
+}

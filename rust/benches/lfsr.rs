@@ -1,0 +1,45 @@
+//! L3 hot-path bench: LFSR stepping and index generation throughput.
+//! Paper claim to quantify: MSB mapping avoids the rejection sampler's
+//! redundant clock cycles (§2.4). Target (DESIGN §Perf): ≥1e8 idx/s.
+use lfsr_prune::lfsr::{GaloisLfsr, JumpTable, MsbMap, RejectionMap};
+use lfsr_prune::util::bench::{black_box, Bench};
+
+fn main() {
+    let n = 1_000_000u64;
+
+    Bench::new("lfsr/galois_step_16b").run(n, || {
+        let mut l = GaloisLfsr::new(16, 0xACE1);
+        let mut acc = 0u32;
+        for _ in 0..n {
+            acc ^= l.next_state();
+        }
+        black_box(acc)
+    });
+
+    Bench::new("lfsr/msb_index_map_784").run(n, || {
+        let mut m = MsbMap::new(GaloisLfsr::new(16, 0xACE1), 784);
+        let mut acc = 0usize;
+        for _ in 0..n {
+            acc += m.next_index();
+        }
+        black_box(acc)
+    });
+
+    Bench::new("lfsr/rejection_map_784 (paper's strawman)").run(n, || {
+        let mut m = RejectionMap::new(GaloisLfsr::new(16, 0xACE1), 784);
+        let mut acc = 0usize;
+        for _ in 0..n {
+            acc += m.next_index();
+        }
+        black_box((acc, m.rejected()))
+    });
+
+    let jt = JumpTable::new(16, 17);
+    Bench::new("lfsr/jump_state_at (random offsets)").run(100_000, || {
+        let mut acc = 0u32;
+        for t in 0..100_000u64 {
+            acc ^= jt.state_at(0xACE1, (t * 2654435761) % 65535 + 1);
+        }
+        black_box(acc)
+    });
+}

@@ -1,0 +1,91 @@
+//! End-to-end PJRT hot path: train/eval step latency through the AOT
+//! artifacts (DESIGN §Perf: dispatch overhead <5% of step time), plus
+//! the literal marshalling cost in isolation.
+use lfsr_prune::data::{synth, Batcher, SynthSpec};
+use lfsr_prune::runtime::{ModelRunner, Runtime, StepScalars, Tensor};
+use lfsr_prune::util::bench::{black_box, Bench};
+
+fn main() {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP pjrt_step bench: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::new(dir).unwrap();
+    let runner = ModelRunner::new(&rt, "lenet300").unwrap();
+    let mut params = runner.init_params(1);
+    let masks = runner.dense_masks();
+    let data = synth::generate(&SynthSpec::mnist_like(1), 512);
+    let mut b = Batcher::new(&data, runner.man.batch, 1);
+    // Warm the executable cache.
+    let batch = b.next_batch();
+    params = runner
+        .train_step(&params, &masks, &batch, StepScalars::dense(0.1))
+        .unwrap()
+        .0;
+
+    Bench::heavy("pjrt/train_step_lenet300_b64").run(64, || {
+        let batch = b.next_batch();
+        let (p, _, _) = runner
+            .train_step(&params, &masks, &batch, StepScalars::dense(0.1))
+            .unwrap();
+        black_box(p.len())
+    });
+
+    Bench::heavy("pjrt/eval_512_lenet300").run(512, || {
+        black_box(
+            runner
+                .eval(&params, &masks, &data, Some(512))
+                .unwrap()
+                .accuracy,
+        )
+    });
+
+    // §Perf optimization: literal-resident phase loop vs per-step
+    // tensor round-trips (same 16 steps of work each sample).
+    Bench::heavy("pjrt/train_16steps_tensor_roundtrip").run(16 * 64, || {
+        let mut p = params.clone();
+        for _ in 0..16 {
+            let batch = b.next_batch();
+            p = runner
+                .train_step(&p, &masks, &batch, StepScalars::dense(0.1))
+                .unwrap()
+                .0;
+        }
+        black_box(p.len())
+    });
+    Bench::heavy("pjrt/train_16steps_literal_resident").run(16 * 64, || {
+        let (p, _) = runner
+            .train_phase(
+                &params,
+                &masks,
+                &mut || b.next_batch(),
+                16,
+                StepScalars::dense(0.1),
+                None,
+            )
+            .unwrap();
+        black_box(p.len())
+    });
+
+    // Marshalling cost alone: upload all params+masks as literals.
+    Bench::new("pjrt/literal_upload_params_masks").run(1, || {
+        let mut n = 0usize;
+        for t in params.iter().chain(&masks) {
+            n += t.to_literal().unwrap().size_bytes();
+        }
+        black_box(n)
+    });
+
+    // Forward (serving) path.
+    let batch = b.next_batch();
+    Bench::heavy("pjrt/forward_lenet300_b64").run(64, || {
+        black_box(
+            runner
+                .forward(&params, &masks, batch.x.clone())
+                .unwrap()
+                .len(),
+        )
+    });
+    let _ = Tensor::scalar_f32(0.0);
+}

@@ -1,0 +1,27 @@
+//! CSC encode/decode throughput and the α-padding cost (paper §2.4).
+use lfsr_prune::data::rng::Pcg32;
+use lfsr_prune::mask::random_mask;
+use lfsr_prune::sparse::CscMatrix;
+use lfsr_prune::util::bench::{black_box, Bench};
+
+fn main() {
+    for sp in [0.4f64, 0.95] {
+        let mask = random_mask(1000, 500, sp, 3);
+        let mut rng = Pcg32::new(1);
+        let mut w: Vec<f32> = (0..500_000).map(|_| rng.next_normal()).collect();
+        mask.apply_to(&mut w);
+        for bits in [4u32, 8] {
+            let name = format!("csc/encode_1000x500@{:.0}%_{bits}b (cells)", sp * 100.0);
+            Bench::new(name).run(500_000, || black_box(CscMatrix::encode(&w, &mask, bits, 8)));
+        }
+        let csc = CscMatrix::encode(&w, &mask, 4, 8);
+        let name = format!("csc/decode@{:.0}%_4b (entries)", sp * 100.0);
+        Bench::new(name).run(csc.entries.len() as u64, || black_box(csc.decode()));
+        println!(
+            "  alpha@{:.0}%/4b = {:.3}, total {} KB",
+            sp * 100.0,
+            csc.alpha(),
+            csc.total_bits() / 8192
+        );
+    }
+}

@@ -1,0 +1,35 @@
+//! Regenerates Table 5 (system area) from the closed-form model.
+use lfsr_prune::hw::{compare, layers, Mode};
+use lfsr_prune::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("Table 5 grid (area mm², saving %):");
+    for net in layers::paper_networks() {
+        let lanes = if net.total_weights() > 1_000_000 { 256 } else { 16 };
+        for sp in [0.40, 0.70, 0.95] {
+            for bits in [4u32, 8] {
+                let c = compare(&net, sp, bits, Mode::Ideal, lanes);
+                println!(
+                    "  {:<16} {:>3.0}% {}b  base {:>8.3}  prop {:>8.3}  save {:>5.1}%",
+                    net.name,
+                    sp * 100.0,
+                    bits,
+                    c.baseline.area_mm2,
+                    c.proposed.area_mm2,
+                    c.area_saving_pct()
+                );
+            }
+        }
+    }
+    Bench::new("table5/full_grid (cells)").run(18, || {
+        let mut acc = 0.0;
+        for net in layers::paper_networks() {
+            for sp in [0.40, 0.70, 0.95] {
+                for bits in [4u32, 8] {
+                    acc += compare(&net, sp, bits, Mode::Ideal, 64).area_saving_pct();
+                }
+            }
+        }
+        black_box(acc)
+    });
+}

@@ -1,0 +1,305 @@
+//! Command-line interface for the `repro` binary (hand-rolled flag parser;
+//! clap is not in the offline vendor set).
+//!
+//! Subcommands:
+//!   info                      — manifest + PJRT platform dump
+//!   lfsr                      — PRS stream + statistics battery
+//!   train                     — one pipeline trial with live loss output
+//!   simulate                  — cycle-engine run of one hw-model cell
+//!   experiment <name|all>     — regenerate the paper's tables/figures
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::experiments::{self, ExpOptions};
+use crate::hw::{self, Mode};
+use crate::lfsr::{stats, GaloisLfsr, MsbMap};
+use crate::pipeline::{self, MaskMethod, RegType};
+use crate::runtime::Runtime;
+
+/// Parsed `--flag value` / `--flag` arguments plus positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // `--flag=value`, `--flag value`, or bare `--flag`.
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn bool_flag(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name}: cannot parse {v:?}")),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+repro — LFSR-pruning reproduction (Karimzadeh et al., 2019)
+
+USAGE:
+  repro info [--artifacts DIR]
+  repro lfsr [--width N] [--seed S] [--count K] [--domain D]
+  repro train [--model M] [--sparsity S] [--method prs|magnitude|random]
+              [--lambda L] [--reg l1|l2] [--quick] [--seed N]
+  repro simulate [--network lenet300|lenet5|vgg16] [--sparsity S]
+                 [--bits 4|8] [--stream] [--lanes N]
+  repro experiment <table2|table3|fig3|fig4|fig4.1..4|fig5|table4|table5|all>
+                 [--quick] [--trials N] [--workers N] [--out DIR]
+
+Artifacts default to ./artifacts (or $LFSR_PRUNE_ARTIFACTS); build them
+with `make artifacts` first.";
+
+pub fn main_with_args(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(&argv)?;
+    let cmd = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+    match cmd {
+        "help" | "-h" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "info" => cmd_info(&args),
+        "lfsr" => cmd_lfsr(&args),
+        "train" => cmd_train(&args),
+        "simulate" => cmd_simulate(&args),
+        "experiment" => cmd_experiment(&args),
+        other => bail!("unknown command {other}\n{USAGE}"),
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.flag("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(Runtime::default_dir)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts_dir(args))?;
+    println!("platform: {}", rt.platform());
+    for (name, m) in &rt.manifest.models {
+        println!(
+            "model {name}: batch={} params={} ({} tensors, {} maskable) pallas={}",
+            m.batch,
+            m.param_count,
+            m.params.len(),
+            m.maskable.len(),
+            m.use_pallas
+        );
+    }
+    for (name, k) in &rt.manifest.kernels {
+        println!("kernel {name}: {}", k.file);
+    }
+    Ok(())
+}
+
+fn cmd_lfsr(args: &Args) -> Result<()> {
+    let width: u32 = args.get("width", 16u32)?;
+    let seed: u32 = args.get("seed", 0xACE1u32)?;
+    let count: usize = args.get("count", 16usize)?;
+    let domain: usize = args.get("domain", 300usize)?;
+    let mut l = GaloisLfsr::new(width, seed);
+    let states: Vec<String> = (0..count).map(|_| format!("{:#x}", l.next_state())).collect();
+    println!("states[{width}b, seed {seed:#x}]: {}", states.join(" "));
+    let mut m = MsbMap::new(GaloisLfsr::new(width, seed), domain);
+    let idx: Vec<String> = (0..count).map(|_| m.next_index().to_string()).collect();
+    println!("indices -> [0,{domain}): {}", idx.join(" "));
+    println!("\nstatistics battery (full period):");
+    for r in stats::battery(width, seed, domain, usize::MAX) {
+        println!(
+            "  {:<20} statistic {:>10.4}  {}",
+            r.name,
+            r.statistic,
+            if r.pass { "PASS" } else { "FAIL" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get("model", "lenet300".to_string())?;
+    let mut cfg = experiments::config_for(&model, args.bool_flag("quick"));
+    cfg.sparsity = args.get("sparsity", cfg.sparsity)?;
+    cfg.lam = args.get("lambda", cfg.lam)?;
+    cfg.trial_seed = args.get("seed", cfg.trial_seed)?;
+    cfg.method = match args.flag("method").unwrap_or("prs") {
+        "prs" => MaskMethod::Prs { seed_base: 0xACE1 },
+        "magnitude" => MaskMethod::Magnitude,
+        "random" => MaskMethod::Random { seed: 99 },
+        m => bail!("unknown method {m}"),
+    };
+    cfg.reg = match args.flag("reg").unwrap_or("l2") {
+        "l1" => RegType::L1,
+        "l2" => RegType::L2,
+        r => bail!("unknown reg {r}"),
+    };
+    if matches!(cfg.method, MaskMethod::Magnitude) {
+        cfg = pipeline::baseline_config(cfg);
+    }
+    println!("config: {cfg:?}");
+    let rt = Runtime::new(artifacts_dir(args))?;
+    let mut cb = |phase: &str, i: usize, loss: f32| {
+        if i % 25 == 0 {
+            println!("  [{phase} {i:>4}] loss {loss:.4}");
+        }
+    };
+    let r = pipeline::run_trial(&rt, &cfg, Some(&mut cb))?;
+    println!("\ndense:      acc {:.2}% (err {:.2}%)", r.dense.accuracy * 100.0, r.dense.error_pct());
+    println!("after reg:  acc {:.2}%", r.after_reg.accuracy * 100.0);
+    println!("pruned:     acc {:.2}%", r.pruned.accuracy * 100.0);
+    println!("retrained:  acc {:.2}% (err {:.2}%)", r.retrained.accuracy * 100.0, r.retrained.error_pct());
+    println!(
+        "params:     {} -> {} nonzero ({:.1}x compression)",
+        r.params_total,
+        r.params_nonzero,
+        r.compression_rate()
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let netname = args.get("network", "lenet300".to_string())?;
+    let net = match netname.as_str() {
+        "lenet300" => hw::layers::lenet300(),
+        "lenet5" => hw::layers::lenet5(),
+        "vgg16" => hw::layers::vgg16_modified(),
+        n => bail!("unknown network {n}"),
+    };
+    let sparsity: f64 = args.get("sparsity", 0.7)?;
+    let bits: u32 = args.get("bits", 8u32)?;
+    let lanes: usize = args.get("lanes", 64usize)?;
+    let mode = if args.bool_flag("stream") {
+        Mode::Stream
+    } else {
+        Mode::Ideal
+    };
+    // Closed-form comparison...
+    let c = hw::compare(&net, sparsity, bits, mode, lanes);
+    println!("{} @ {:.0}% sparsity, {bits}b indices, {lanes} lanes, {mode:?} mode", net.name, sparsity * 100.0);
+    println!(
+        "  baseline: {:>10.2} mW  {:>8.3} mm²  {:>12.1} pJ/inference",
+        c.baseline.avg_power_mw, c.baseline.area_mm2, c.baseline.dynamic_pj
+    );
+    println!(
+        "  proposed: {:>10.2} mW  {:>8.3} mm²  {:>12.1} pJ/inference",
+        c.proposed.avg_power_mw, c.proposed.area_mm2, c.proposed.dynamic_pj
+    );
+    println!(
+        "  savings:  power {:.1}%  area {:.1}%  memory {:.2}x",
+        c.power_saving_pct(),
+        c.area_saving_pct(),
+        c.memory_reduction()
+    );
+    // ...validated by the cycle engines on the first layer (exact).
+    let dims = net.layers[0];
+    if dims.size() <= 2_000_000 {
+        let hp = hw::HwParams::paper_default(bits);
+        let est = hw::estimate_layer(dims, sparsity, hw::Method::Baseline, &hp);
+        let sim = hw::simulate_layer(dims, sparsity, hw::Method::Baseline, &hp, 42);
+        println!(
+            "  [check] layer0 baseline cycles: closed-form {} vs cycle-engine {}",
+            est.counters.cycles, sim.counters.cycles
+        );
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("experiment name required\n{USAGE}"))?;
+    let opts = ExpOptions {
+        quick: args.bool_flag("quick"),
+        trials: args.get("trials", 5usize)?,
+        workers: args.get("workers", ExpOptions::default().workers)?,
+        out_dir: args
+            .flag("out")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("results")),
+        artifacts: artifacts_dir(args),
+        verbose: !args.bool_flag("quiet"),
+    };
+    let names: Vec<&str> = if name == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![name]
+    };
+    for n in names {
+        eprintln!("=== experiment {n} ===");
+        let tables = experiments::run_by_name(n, &opts)?;
+        experiments::emit(&tables, &opts)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&argv("experiment fig4 --quick --trials 3 --out=res")).unwrap();
+        assert_eq!(a.positional, vec!["experiment", "fig4"]);
+        assert!(a.bool_flag("quick"));
+        assert_eq!(a.get("trials", 5usize).unwrap(), 3);
+        assert_eq!(a.flag("out"), Some("res"));
+    }
+
+    #[test]
+    fn default_and_error_paths() {
+        let a = Args::parse(&argv("train --sparsity 0.9")).unwrap();
+        assert_eq!(a.get("sparsity", 0.5f64).unwrap(), 0.9);
+        assert_eq!(a.get("lambda", 2.0f32).unwrap(), 2.0);
+        assert!(a.get::<usize>("sparsity", 1).is_err());
+    }
+
+    #[test]
+    fn bare_flag_before_another_flag() {
+        let a = Args::parse(&argv("x --quick --trials 2")).unwrap();
+        assert!(a.bool_flag("quick"));
+        assert_eq!(a.get("trials", 0usize).unwrap(), 2);
+    }
+}

@@ -1,0 +1,228 @@
+//! Dataset substrate: in-memory datasets + deterministic batch iteration.
+//!
+//! The coordinator owns the data path end-to-end (generation, shuffling,
+//! batching); the AOT-compiled step functions only ever see fixed-shape
+//! `[B, ...]` f32 batches and `[B]` i32 labels.
+
+pub mod rng;
+pub mod synth;
+
+pub use synth::{generate, SynthSpec};
+
+/// An in-memory dataset: row-major examples + integer labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// n × prod(example_shape), row-major.
+    pub x: Vec<f32>,
+    /// n labels in [0, classes).
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub example_shape: Vec<usize>,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn example_len(&self) -> usize {
+        self.example_shape.iter().product()
+    }
+
+    /// Split off the last `k` examples as a held-out set.
+    pub fn split_tail(&self, k: usize) -> (Dataset, Dataset) {
+        assert!(k < self.n);
+        let len = self.example_len();
+        let head = Dataset {
+            x: self.x[..(self.n - k) * len].to_vec(),
+            y: self.y[..self.n - k].to_vec(),
+            n: self.n - k,
+            example_shape: self.example_shape.clone(),
+            classes: self.classes,
+        };
+        let tail = Dataset {
+            x: self.x[(self.n - k) * len..].to_vec(),
+            y: self.y[self.n - k..].to_vec(),
+            n: k,
+            example_shape: self.example_shape.clone(),
+            classes: self.classes,
+        };
+        (head, tail)
+    }
+}
+
+/// One fixed-size batch view, already materialized for literal upload.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub size: usize,
+}
+
+/// Deterministic shuffling batcher: reshuffles each epoch with PCG32,
+/// wraps across epochs, always yields exactly `batch` examples.
+#[derive(Debug)]
+pub struct Batcher<'a> {
+    data: &'a Dataset,
+    batch: usize,
+    order: Vec<u32>,
+    cursor: usize,
+    rng: rng::Pcg32,
+    pub epochs_completed: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, seed: u64) -> Self {
+        assert!(batch <= data.n, "batch {} > dataset {}", batch, data.n);
+        let mut b = Batcher {
+            data,
+            batch,
+            order: (0..data.n as u32).collect(),
+            cursor: 0,
+            rng: rng::Pcg32::new(seed),
+            epochs_completed: 0,
+        };
+        b.shuffle();
+        b
+    }
+
+    fn shuffle(&mut self) {
+        let n = self.order.len();
+        for i in (1..n).rev() {
+            let j = self.rng.next_below((i + 1) as u32) as usize;
+            self.order.swap(i, j);
+        }
+    }
+
+    /// Next shuffled batch (reshuffles on epoch boundary; the final
+    /// partial window of an epoch is completed from the next epoch's
+    /// head so batch shape is always exact).
+    pub fn next_batch(&mut self) -> Batch {
+        let len = self.data.example_len();
+        let mut x = Vec::with_capacity(self.batch * len);
+        let mut y = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            if self.cursor == self.order.len() {
+                self.cursor = 0;
+                self.epochs_completed += 1;
+                self.shuffle();
+            }
+            let i = self.order[self.cursor] as usize;
+            self.cursor += 1;
+            x.extend_from_slice(&self.data.x[i * len..(i + 1) * len]);
+            y.push(self.data.y[i]);
+        }
+        Batch {
+            x,
+            y,
+            size: self.batch,
+        }
+    }
+}
+
+/// Sequential (unshuffled) batches for evaluation; the final short batch
+/// is padded by repeating the last example, with the true count returned
+/// so accuracy can be weighted correctly.
+pub struct EvalBatches<'a> {
+    data: &'a Dataset,
+    batch: usize,
+    cursor: usize,
+}
+
+impl<'a> EvalBatches<'a> {
+    pub fn new(data: &'a Dataset, batch: usize) -> Self {
+        EvalBatches {
+            data,
+            batch,
+            cursor: 0,
+        }
+    }
+}
+
+impl<'a> Iterator for EvalBatches<'a> {
+    /// (batch, number of real examples in it)
+    type Item = (Batch, usize);
+
+    fn next(&mut self) -> Option<(Batch, usize)> {
+        if self.cursor >= self.data.n {
+            return None;
+        }
+        let len = self.data.example_len();
+        let real = (self.data.n - self.cursor).min(self.batch);
+        let mut x = Vec::with_capacity(self.batch * len);
+        let mut y = Vec::with_capacity(self.batch);
+        for k in 0..self.batch {
+            let i = (self.cursor + k).min(self.data.n - 1);
+            x.extend_from_slice(&self.data.x[i * len..(i + 1) * len]);
+            y.push(self.data.y[i]);
+        }
+        self.cursor += real;
+        Some((
+            Batch {
+                x,
+                y,
+                size: self.batch,
+            },
+            real,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            x: (0..20).map(|v| v as f32).collect(),
+            y: (0..10).map(|v| v % 3).collect(),
+            n: 10,
+            example_shape: vec![2],
+            classes: 3,
+        }
+    }
+
+    #[test]
+    fn batcher_exact_size_and_epoch_coverage() {
+        let d = tiny();
+        let mut b = Batcher::new(&d, 3, 0);
+        let mut seen = std::collections::HashSet::new();
+        // 4 batches = 12 draws > one epoch; first 9 draws (3 batches)
+        // must be distinct examples.
+        for _ in 0..3 {
+            let batch = b.next_batch();
+            assert_eq!(batch.x.len(), 6);
+            assert_eq!(batch.y.len(), 3);
+            for pair in batch.x.chunks(2) {
+                assert!(seen.insert(pair[0] as i64), "example repeated within epoch");
+            }
+        }
+    }
+
+    #[test]
+    fn batcher_deterministic() {
+        let d = tiny();
+        let mut a = Batcher::new(&d, 4, 9);
+        let mut b = Batcher::new(&d, 4, 9);
+        for _ in 0..5 {
+            assert_eq!(a.next_batch().y, b.next_batch().y);
+        }
+    }
+
+    #[test]
+    fn eval_batches_cover_exactly_once() {
+        let d = tiny();
+        let mut total = 0usize;
+        for (batch, real) in EvalBatches::new(&d, 4) {
+            assert_eq!(batch.y.len(), 4);
+            total += real;
+        }
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn split_tail() {
+        let d = tiny();
+        let (tr, te) = d.split_tail(3);
+        assert_eq!(tr.n, 7);
+        assert_eq!(te.n, 3);
+        assert_eq!(te.y, &d.y[7..]);
+    }
+}

@@ -1,0 +1,94 @@
+//! Ablations beyond the paper's own tables (DESIGN.md "ablation-bench
+//! candidates"):
+//!
+//!  A. Mask-method control: PRS vs uniform-random vs magnitude at one
+//!     operating point — the paper's implicit claim is that PRS behaves
+//!     like random pruning statistically; magnitude is the informed
+//!     upper baseline.
+//!  B. One-shot vs iterative schedule, both methods — does the PRS
+//!     method benefit from iteration the way Han's magnitude pruning
+//!     does?
+
+use anyhow::Result;
+
+use super::{config_for, ExpOptions};
+use crate::pipeline::iterative::run_iterative_trial;
+use crate::pipeline::trials::{aggregate, run_trials, TrialJob};
+use crate::pipeline::{baseline_config, MaskMethod};
+use crate::report::Table;
+use crate::runtime::Runtime;
+
+pub fn run(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let sp = 0.9;
+    let trials = opts.trials().min(3);
+
+    // --- A: mask-method control --------------------------------------
+    let mut jobs = Vec::new();
+    for trial in 0..trials {
+        for (key, method) in [
+            ("prs", MaskMethod::Prs { seed_base: 0xACE1 + trial as u32 }),
+            ("random", MaskMethod::Random { seed: 40 + trial as u64 }),
+            ("magnitude", MaskMethod::Magnitude),
+        ] {
+            let mut cfg = config_for("lenet300", opts.quick);
+            cfg.sparsity = sp;
+            cfg.trial_seed = 200 + trial as u64;
+            cfg.method = method;
+            if key == "magnitude" {
+                cfg = baseline_config(cfg);
+            }
+            jobs.push(TrialJob {
+                key: key.into(),
+                config: cfg,
+            });
+        }
+    }
+    let outcomes = run_trials(opts.artifacts.clone(), jobs, opts.workers, opts.verbose);
+    let mut a = Table::new(
+        format!("Ablation A: mask method at {:.0}% sparsity (LeNet-300-100, {trials} trials)", sp * 100.0),
+        "ablation_mask_method",
+        &["Method", "Retrained acc (mean±std)", "Pruned acc", "n"],
+    );
+    for g in aggregate(&outcomes) {
+        a.row(vec![
+            g.key.clone(),
+            format!("{:.1}±{:.1}%", g.mean_acc * 100.0, g.std_acc * 100.0),
+            format!("{:.1}%", g.mean_pruned_acc * 100.0),
+            g.n.to_string(),
+        ]);
+    }
+
+    // --- B: one-shot vs iterative -------------------------------------
+    let rt = Runtime::new(&opts.artifacts)?;
+    let mut b = Table::new(
+        format!("Ablation B: one-shot vs iterative (4 rounds) at {:.0}% sparsity", sp * 100.0),
+        "ablation_iterative",
+        &["Method", "Schedule", "Retrained acc", "Compression"],
+    );
+    for (name, method) in [
+        ("prs", MaskMethod::Prs { seed_base: 0xACE1 }),
+        ("magnitude", MaskMethod::Magnitude),
+    ] {
+        let mut cfg = config_for("lenet300", opts.quick);
+        cfg.sparsity = sp;
+        cfg.method = method;
+        if name == "magnitude" {
+            cfg = baseline_config(cfg);
+        }
+        let one = crate::pipeline::run_trial(&rt, &cfg, None)?;
+        let iter = run_iterative_trial(&rt, &cfg, 4)?;
+        b.row(vec![
+            name.into(),
+            "one-shot".into(),
+            format!("{:.1}%", one.retrained.accuracy * 100.0),
+            format!("{:.1}x", one.compression_rate()),
+        ]);
+        b.row(vec![
+            name.into(),
+            "iterative x4".into(),
+            format!("{:.1}%", iter.retrained.accuracy * 100.0),
+            format!("{:.1}x", iter.compression_rate()),
+        ]);
+    }
+    Ok(vec![a, b])
+}

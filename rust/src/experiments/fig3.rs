@@ -1,0 +1,107 @@
+//! Figure 3: LeNet-300-100 sparsity sweeps.
+//!
+//! Right panel: accuracy loss vs sparsity before/after retraining for
+//! λ ∈ {0.1, 2, 10} (L2).  Left panel: L1 vs L2 trade-off at λ = 2.
+//! The paper's findings to reproduce: moderate/strong λ (2, 10) beat weak
+//! λ before and after retraining; L1 is better *before* retraining, L2
+//! after.
+
+use anyhow::Result;
+
+use super::{config_for, ExpOptions};
+use crate::pipeline::trials::{run_trials, TrialJob};
+use crate::pipeline::{MaskMethod, RegType};
+use crate::report::Table;
+
+const SPARSITIES: [f64; 5] = [0.5, 0.7, 0.8, 0.9, 0.95];
+const LAMBDAS: [f32; 3] = [0.1, 2.0, 10.0];
+
+pub fn run(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let sweep: Vec<f64> = if opts.quick {
+        vec![0.7, 0.95]
+    } else {
+        SPARSITIES.to_vec()
+    };
+
+    let mut jobs = Vec::new();
+    // Lambda sweep (L2).
+    for &lam in &LAMBDAS {
+        for &sp in &sweep {
+            let mut cfg = config_for("lenet300", opts.quick);
+            cfg.method = MaskMethod::Prs { seed_base: 0xACE1 };
+            cfg.sparsity = sp;
+            cfg.lam = lam;
+            cfg.reg = RegType::L2;
+            jobs.push(TrialJob {
+                key: format!("L2|lam={lam}|sp={sp}"),
+                config: cfg,
+            });
+        }
+    }
+    // L1 arm at λ=2 (the L2 arm is shared with the sweep above).
+    for &sp in &sweep {
+        let mut cfg = config_for("lenet300", opts.quick);
+        cfg.sparsity = sp;
+        cfg.lam = 2.0;
+        cfg.reg = RegType::L1;
+        jobs.push(TrialJob {
+            key: format!("L1|lam=2|sp={sp}"),
+            config: cfg,
+        });
+    }
+    let outcomes = run_trials(opts.artifacts.clone(), jobs, opts.workers, opts.verbose);
+
+    let mut right = Table::new(
+        "Figure 3 (right): accuracy loss (%) vs sparsity for λ ∈ {0.1,2,10}, \
+         L2, before/after retraining",
+        "fig3_lambda_sweep",
+        &[
+            "Sparsity", "λ", "Acc dense", "Loss before retrain", "Loss after retrain",
+        ],
+    );
+    let mut left = Table::new(
+        "Figure 3 (left): L1 vs L2 trade-off at λ=2",
+        "fig3_l1_l2",
+        &[
+            "Sparsity", "Reg", "Loss before retrain", "Loss after retrain",
+        ],
+    );
+    for o in &outcomes {
+        let Ok(r) = o.result.as_ref() else { continue };
+        let dense = r.dense.accuracy as f64 * 100.0;
+        let before = dense - r.pruned.accuracy as f64 * 100.0;
+        let after = dense - r.retrained.accuracy as f64 * 100.0;
+        let parts: Vec<&str> = o.key.split('|').collect();
+        let (reg, lam, sp) = (parts[0], parts[1], parts[2]);
+        if reg == "L2" {
+            right.row(vec![
+                sp.trim_start_matches("sp=").to_string(),
+                lam.trim_start_matches("lam=").to_string(),
+                format!("{dense:.1}%"),
+                format!("{before:.1}%"),
+                format!("{after:.1}%"),
+            ]);
+        }
+        if lam == "lam=2" {
+            left.row(vec![
+                sp.trim_start_matches("sp=").to_string(),
+                reg.to_string(),
+                format!("{before:.1}%"),
+                format!("{after:.1}%"),
+            ]);
+        }
+    }
+    sort_rows(&mut right.rows);
+    sort_rows(&mut left.rows);
+    Ok(vec![right, left])
+}
+
+fn sort_rows(rows: &mut [Vec<String>]) {
+    rows.sort_by(|a, b| {
+        a[0].parse::<f64>()
+            .unwrap_or(0.0)
+            .partial_cmp(&b[0].parse::<f64>().unwrap_or(0.0))
+            .unwrap()
+            .then(a[1].cmp(&b[1]))
+    });
+}

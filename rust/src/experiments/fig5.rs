@@ -1,0 +1,106 @@
+//! Figure 5: total required memory vs sparsity — proposed vs baseline at
+//! 4- and 8-bit index precision (paper: 1.51×-2.94× reduction).
+//!
+//! Two series are emitted per setting: the closed-form expectation (used
+//! for the paper-size VGG layers) and a measured point from actually
+//! encoding a PRS mask (validates the model; LeNet-300-100 dims).
+
+use anyhow::Result;
+
+use super::ExpOptions;
+use crate::hw::layers;
+use crate::mask::prs::PrsMaskConfig;
+use crate::mask::prs_mask;
+use crate::report::{f2, Table};
+use crate::sparse::{
+    baseline_footprint, baseline_footprint_analytic, proposed_footprint,
+    proposed_footprint_analytic,
+};
+
+const SWEEP: [f64; 7] = [0.10, 0.25, 0.40, 0.55, 0.70, 0.85, 0.95];
+
+pub fn run(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let net = layers::lenet300();
+    let mut t = Table::new(
+        "Figure 5: total sparse-model memory (KB) vs sparsity, LeNet-300-100",
+        "fig5_memory",
+        &[
+            "Sparsity",
+            "Baseline 4b (KB)",
+            "Baseline 8b (KB)",
+            "Proposed (KB)",
+            "Reduction vs 4b",
+            "Reduction vs 8b",
+        ],
+    );
+    let kb = |bits: u64| bits as f64 / 8.0 / 1024.0;
+    for sp in SWEEP {
+        let (mut b4, mut b8, mut p) = (0u64, 0u64, 0u64);
+        for &d in &net.layers {
+            b4 += baseline_footprint_analytic(d.rows, d.cols, sp, 4, 8).total();
+            b8 += baseline_footprint_analytic(d.rows, d.cols, sp, 8, 8).total();
+            p += proposed_footprint_analytic(d.rows, d.cols, sp, 8).total();
+        }
+        t.row(vec![
+            format!("{:.0}%", sp * 100.0),
+            f2(kb(b4)),
+            f2(kb(b8)),
+            f2(kb(p)),
+            format!("{:.2}x", b4 as f64 / p as f64),
+            format!("{:.2}x", b8 as f64 / p as f64),
+        ]);
+    }
+
+    // Measured validation series (materialized PRS masks + real CSC).
+    let mut v = Table::new(
+        "Figure 5 (validation): measured footprints from encoded PRS masks",
+        "fig5_memory_measured",
+        &["Sparsity", "Meas base 4b (KB)", "Meas base 8b (KB)", "Meas proposed (KB)", "Alpha 4b"],
+    );
+    let sweep: &[f64] = if opts.quick {
+        &[0.40, 0.95]
+    } else {
+        &SWEEP
+    };
+    for &sp in sweep {
+        let (mut b4, mut b8, mut p) = (0u64, 0u64, 0u64);
+        let mut alpha_acc = 0.0;
+        for (i, &d) in net.layers.iter().enumerate() {
+            let cfg = PrsMaskConfig::auto(d.rows, d.cols, 3 + i as u32, 17 + i as u32);
+            let mask = prs_mask(d.rows, d.cols, sp, cfg);
+            let f4 = baseline_footprint(&mask, 4, 8);
+            alpha_acc += f4.alpha;
+            b4 += f4.total();
+            b8 += baseline_footprint(&mask, 8, 8).total();
+            p += proposed_footprint(&mask, cfg, 8).total();
+        }
+        v.row(vec![
+            format!("{:.0}%", sp * 100.0),
+            f2(kb(b4)),
+            f2(kb(b8)),
+            f2(kb(p)),
+            f2(alpha_acc / net.layers.len() as f64),
+        ]);
+    }
+    Ok(vec![t, v])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduction_band_matches_paper() {
+        let opts = ExpOptions {
+            quick: true,
+            ..Default::default()
+        };
+        let tables = run(&opts).unwrap();
+        for row in &tables[0].rows {
+            let r4: f64 = row[4].trim_end_matches('x').parse().unwrap();
+            let r8: f64 = row[5].trim_end_matches('x').parse().unwrap();
+            assert!(r4 > 1.3 && r4 < 3.2, "4b reduction {r4}");
+            assert!(r8 > 1.8 && r8 < 3.2, "8b reduction {r8}");
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! The experiment harness: one module per table/figure of the paper
+//! (DESIGN.md carries the experiment index).  Each experiment returns
+//! [`Table`]s that `render` the same rows/series the paper reports and
+//! are persisted as CSV under `results/`.
+
+pub mod ablation;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod hw_tables;
+pub mod table2;
+pub mod table3;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::report::Table;
+
+/// Options shared by all experiments.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    /// Reduced steps/trials/sweeps for smoke runs.
+    pub quick: bool,
+    /// Trials per configuration (paper Fig. 4 uses 5).
+    pub trials: usize,
+    /// Worker threads for the trial coordinator.
+    pub workers: usize,
+    /// Where CSVs land.
+    pub out_dir: PathBuf,
+    /// AOT artifact directory.
+    pub artifacts: PathBuf,
+    pub verbose: bool,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            quick: false,
+            trials: 5,
+            workers: std::thread::available_parallelism()
+                .map(|n| (n.get() / 2).clamp(1, 6))
+                .unwrap_or(2),
+            out_dir: PathBuf::from("results"),
+            artifacts: crate::runtime::Runtime::default_dir(),
+            verbose: true,
+        }
+    }
+}
+
+impl ExpOptions {
+    pub fn trials(&self) -> usize {
+        if self.quick {
+            self.trials.min(2)
+        } else {
+            self.trials
+        }
+    }
+}
+
+/// Per-model pipeline defaults used by the training experiments.  Step
+/// counts are sized to the measured CPU-PJRT step latencies (lenet300
+/// ≈ 10 ms, lenet5 ≈ 80-150 ms, vgg16 ≈ 830 ms — EXPERIMENTS.md §Setup);
+/// `quick` halves-or-more everything for smoke runs.
+pub fn config_for(model: &str, quick: bool) -> crate::pipeline::PipelineConfig {
+    use crate::pipeline::{DataConfig, MaskMethod, PipelineConfig, RegType};
+    let mut cfg = PipelineConfig {
+        model: model.to_string(),
+        data: DataConfig::MnistLike,
+        method: MaskMethod::Prs { seed_base: 0xACE1 },
+        sparsity: 0.7,
+        lam: 2.0,
+        reg: RegType::L2,
+        dense_steps: 250,
+        reg_steps: 150,
+        retrain_steps: 150,
+        lr_dense: 0.1,
+        lr_reg: 0.05,
+        lr_retrain: 0.02,
+        n_train: 4096,
+        n_eval: 1024,
+        trial_seed: 1,
+        eval_limit: Some(512),
+        output_layer_factor: 0.8,
+    };
+    match model {
+        "lenet300" => {}
+        "lenet5_mnist" => {
+            cfg.dense_steps = 150;
+            cfg.reg_steps = 100;
+            cfg.retrain_steps = 100;
+            cfg.n_train = 2048;
+            cfg.n_eval = 512;
+        }
+        "lenet5_cifar" => {
+            cfg.data = DataConfig::CifarLike;
+            cfg.dense_steps = 150;
+            cfg.reg_steps = 100;
+            cfg.retrain_steps = 100;
+            cfg.n_train = 2048;
+            cfg.n_eval = 512;
+            cfg.lr_dense = 0.05;
+        }
+        "vgg16" => {
+            // 100 synthetic classes (the artifact's 1000-way head is a
+            // superset) and conservative lrs: VGG without batch-norm
+            // diverges easily; see EXPERIMENTS.md §Setup.
+            cfg.data = DataConfig::ImageNet64 { classes: 100 };
+            cfg.dense_steps = 150;
+            cfg.reg_steps = 80;
+            cfg.retrain_steps = 100;
+            cfg.n_train = 2048;
+            cfg.n_eval = 256;
+            cfg.eval_limit = Some(128);
+            cfg.lr_dense = 0.01;
+            cfg.lr_reg = 0.005;
+            cfg.lr_retrain = 0.005;
+        }
+        other => panic!("no experiment defaults for model {other}"),
+    }
+    if quick {
+        cfg.dense_steps = (cfg.dense_steps / 4).max(20);
+        cfg.reg_steps = (cfg.reg_steps / 4).max(15);
+        cfg.retrain_steps = (cfg.retrain_steps / 4).max(15);
+        cfg.n_train = cfg.n_train.min(1024);
+        cfg.n_eval = cfg.n_eval.min(256);
+        cfg.eval_limit = Some(cfg.eval_limit.unwrap_or(256).min(256));
+    }
+    cfg
+}
+
+/// Render + persist + print a batch of tables.
+pub fn emit(tables: &[Table], opts: &ExpOptions) -> Result<()> {
+    for t in tables {
+        println!("{}", t.render());
+        let path = t.write_csv(&opts.out_dir)?;
+        if opts.verbose {
+            eprintln!("wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+/// Run an experiment by name (the CLI entry).
+pub fn run_by_name(name: &str, opts: &ExpOptions) -> Result<Vec<Table>> {
+    match name {
+        "table2" => table2::run(opts),
+        "table3" => table3::run(opts),
+        "fig3" => fig3::run(opts),
+        "fig4" => fig4::run(opts, None),
+        "fig4.1" => fig4::run(opts, Some(0)),
+        "fig4.2" => fig4::run(opts, Some(1)),
+        "fig4.3" => fig4::run(opts, Some(2)),
+        "fig4.4" => fig4::run(opts, Some(3)),
+        "fig5" => fig5::run(opts),
+        "table4" => hw_tables::run_power(opts),
+        "table5" => hw_tables::run_area(opts),
+        "ablation" => ablation::run(opts),
+        other => anyhow::bail!(
+            "unknown experiment {other}; have: table2 table3 fig3 fig4[.1-.4] fig5 table4 table5 all"
+        ),
+    }
+}
+
+/// Everything, in paper order.
+pub const ALL: &[&str] = &[
+    "table2", "table3", "fig3", "fig4", "fig5", "table4", "table5",
+];

@@ -1,0 +1,102 @@
+//! Table 2: parameters, error before/after pruning, and compression rate
+//! for LeNet-300-100 (11×), LeNet-5 (10×) and modified VGG-16 (7×).
+//!
+//! The per-layer FC sparsity is derived from the paper's compression
+//! target: CR = total / nnz with conv/bias params unpruned, so
+//! keep = (total/CR − unmasked) / masked.
+
+use anyhow::Result;
+
+use super::{config_for, ExpOptions};
+use crate::pipeline::run_trial;
+use crate::report::{f1, Table};
+use crate::runtime::{ModelRunner, Runtime};
+
+/// Sparsity that hits a compression target given the masked/unmasked
+/// parameter split.
+pub fn sparsity_for_compression(total: usize, masked: usize, cr: f64) -> f64 {
+    let target_nnz = total as f64 / cr;
+    let unmasked = (total - masked) as f64;
+    let keep = ((target_nnz - unmasked) / masked as f64).clamp(0.001, 1.0);
+    1.0 - keep
+}
+
+/// (model, paper compression rate, paper unpruned err %, paper pruned err %).
+const ROWS: [(&str, f64, f64, f64); 3] = [
+    ("lenet300", 11.0, 4.2, 4.9),
+    ("lenet5_mnist", 10.0, 1.5, 1.6),
+    ("vgg16", 7.0, 48.5, 52.1),
+];
+
+pub fn run(opts: &ExpOptions) -> Result<Vec<Table>> {
+    let rt = Runtime::new(&opts.artifacts)?;
+    let mut t = Table::new(
+        "Table 2: parameters, error and compression rate (paper targets: \
+         11x/10x/7x)",
+        "table2_compression",
+        &[
+            "Network",
+            "Params",
+            "Params pruned",
+            "Compression",
+            "Err dense",
+            "Err pruned+retrained",
+            "Paper err (dense/pruned)",
+        ],
+    );
+    for (model, cr, paper_dense, paper_pruned) in ROWS {
+        if opts.quick && model == "vgg16" {
+            continue; // vgg trial ≈ 4 min; skipped in smoke runs
+        }
+        let runner = ModelRunner::new(&rt, model)?;
+        let total: usize = runner.man.params.iter().map(|p| p.len()).sum();
+        let masked: usize = runner
+            .maskable_indices()
+            .iter()
+            .map(|&i| runner.man.params[i].len())
+            .sum();
+        let mut cfg = config_for(model, opts.quick);
+        cfg.sparsity = sparsity_for_compression(total, masked, cr);
+        // Heavy compression needs a longer recovery phase (Han et al.
+        // retrain for many epochs at these rates).
+        if !opts.quick {
+            cfg.retrain_steps = cfg.retrain_steps * 3;
+            cfg.lr_retrain *= 1.5;
+        }
+        if opts.verbose {
+            eprintln!(
+                "table2: {model} total={total} masked={masked} -> sparsity {:.3}",
+                cfg.sparsity
+            );
+        }
+        let r = run_trial(&rt, &cfg, None)?;
+        t.row(vec![
+            model.to_string(),
+            format!("{}K", total / 1000),
+            format!("{}K", r.params_nonzero / 1000),
+            format!("{:.1}x", r.compression_rate()),
+            format!("{:.1}%", r.dense.error_pct()),
+            format!("{:.1}%", r.retrained.error_pct()),
+            format!("{}/{}%", f1(paper_dense), f1(paper_pruned)),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparsity_for_compression_math() {
+        // lenet300: all params maskable except biases (410).
+        let total = 266_610;
+        let masked = 266_200;
+        let sp = sparsity_for_compression(total, masked, 11.0);
+        let nnz = (total - masked) as f64 + (1.0 - sp) * masked as f64;
+        assert!((total as f64 / nnz - 11.0).abs() < 0.01);
+        // Impossible target clamps rather than exploding.
+        let sp2 = sparsity_for_compression(1000, 10, 100.0);
+        assert!((0.0..=1.0).contains(&sp2));
+    }
+}

@@ -1,0 +1,142 @@
+//! Shared engine types: the sparse-FC workload, the event counters every
+//! engine produces, and the functional result used for cross-validation.
+//!
+//! Both engines (baseline.rs, lfsr_engine.rs) *actually execute* the layer
+//! — they produce the output vector as well as the counters, so tests can
+//! assert the two datapaths compute the same matvec as a dense host
+//! reference before any energy/area claims are made.
+
+use crate::mask::Mask;
+
+/// One sparse FC layer workload: y[c] = Σ_r x[r]·W[r,c] over kept (r,c).
+#[derive(Debug, Clone)]
+pub struct SparseLayer {
+    pub rows: usize,
+    pub cols: usize,
+    /// Dense row-major weights (pruned entries may hold garbage — engines
+    /// must only touch kept positions).
+    pub weights: Vec<f32>,
+    pub mask: Mask,
+    /// Input activation vector, length rows.
+    pub input: Vec<f32>,
+}
+
+impl SparseLayer {
+    /// Dense host reference: the ground truth both engines must match.
+    pub fn reference_output(&self) -> Vec<f32> {
+        let mut y = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            let x = self.input[r];
+            if x == 0.0 {
+                continue;
+            }
+            for c in 0..self.cols {
+                if self.mask.get(r, c) {
+                    y[c] += x * self.weights[r * self.cols + c];
+                }
+            }
+        }
+        y
+    }
+}
+
+/// Event counters — the interface between cycle engines and the
+/// energy/area models.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// Total clock cycles (per lane-group; see energy.rs for lanes).
+    pub cycles: u64,
+    pub mac_ops: u64,
+    /// Weight-memory (S) reads.
+    pub weight_reads: u64,
+    /// Index-memory (I) reads — baseline only.
+    pub index_reads: u64,
+    /// Pointer-memory (P) reads — baseline only.
+    pub ptr_reads: u64,
+    /// Input-buffer reads.
+    pub input_reads: u64,
+    /// Output-buffer reads (proposed pays RMW per op; baseline reads none
+    /// because it accumulates a column in a register).
+    pub output_reads: u64,
+    pub output_writes: u64,
+    /// LFSR clocks (proposed only; 2 per op — row and col registers).
+    pub lfsr_ticks: u64,
+    /// Register-file accesses (accumulator etc.).
+    pub reg_ops: u64,
+    /// Filler entries processed (baseline α padding).
+    pub fillers: u64,
+    /// Collision clocks burnt (proposed stream mode).
+    pub collision_cycles: u64,
+}
+
+impl Counters {
+    pub fn add(&mut self, other: &Counters) {
+        self.cycles += other.cycles;
+        self.mac_ops += other.mac_ops;
+        self.weight_reads += other.weight_reads;
+        self.index_reads += other.index_reads;
+        self.ptr_reads += other.ptr_reads;
+        self.input_reads += other.input_reads;
+        self.output_reads += other.output_reads;
+        self.output_writes += other.output_writes;
+        self.lfsr_ticks += other.lfsr_ticks;
+        self.reg_ops += other.reg_ops;
+        self.fillers += other.fillers;
+        self.collision_cycles += other.collision_cycles;
+    }
+}
+
+/// What an engine run returns.
+#[derive(Debug, Clone)]
+pub struct EngineResult {
+    pub output: Vec<f32>,
+    pub counters: Counters,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::random_mask;
+
+    #[test]
+    fn reference_output_respects_mask() {
+        let mask = random_mask(4, 3, 0.5, 1);
+        let weights: Vec<f32> = (0..12).map(|i| i as f32 + 1.0).collect();
+        let input = vec![1.0, 2.0, 3.0, 4.0];
+        let layer = SparseLayer {
+            rows: 4,
+            cols: 3,
+            weights: weights.clone(),
+            mask: mask.clone(),
+            input: input.clone(),
+        };
+        let y = layer.reference_output();
+        for c in 0..3 {
+            let mut acc = 0.0;
+            for r in 0..4 {
+                if mask.get(r, c) {
+                    acc += input[r] * weights[r * 3 + c];
+                }
+            }
+            assert_eq!(y[c], acc);
+        }
+    }
+
+    #[test]
+    fn counters_add() {
+        let mut a = Counters {
+            cycles: 1,
+            mac_ops: 2,
+            ..Default::default()
+        };
+        let b = Counters {
+            cycles: 10,
+            fillers: 3,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.cycles, 11);
+        assert_eq!(a.mac_ops, 2);
+        assert_eq!(a.fillers, 3);
+    }
+}

@@ -1,0 +1,190 @@
+//! Cycle-level model of the proposed accelerator (paper Fig. 2 right):
+//! indices regenerated on die by two LFSRs, no index memory.
+//!
+//! Datapath per kept synapse t (walk order = weight-memory order):
+//!   * clock LFSR-1 (row) and LFSR-2 (col) — parallel registers, same
+//!     cycle as the weight read;
+//!   * read W[t] from the compact value memory (1 cycle);
+//!   * read x[row] from the input buffer;
+//!   * output-buffer read-modify-write: the column index is pseudo-random,
+//!     so unlike the baseline's per-column accumulator register the
+//!     partial sum lives in the output buffer — the paper charges
+//!     "1 cycle read and 1 cycle write" per op, and so do we;
+//!   * MAC.
+//!
+//! Two fidelity modes:
+//!   * [`Mode::Ideal`] — the paper's accounting: the engine streams
+//!     exactly nnz kept positions (collisions pre-skipped, as if the walk
+//!     had been deduplicated at training time).
+//!   * [`Mode::Stream`] — hardware-faithful: the LFSR pair replays the raw
+//!     walk including collision clocks; duplicate visits burn a cycle +
+//!     LFSR ticks and read a zero-slot from the value memory (see
+//!     DESIGN.md "Pair-stream masking").
+
+use super::engine::{Counters, EngineResult, SparseLayer};
+use crate::lfsr::GaloisLfsr;
+use crate::mask::prs::PrsMaskConfig;
+use crate::mask::Mask;
+
+/// Collision-handling fidelity (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Ideal,
+    Stream,
+}
+
+/// Run the proposed engine.  The mask MUST have been produced by
+/// `prs_mask` with the same `cfg` — the engine re-derives the positions
+/// from the seeds alone and asserts agreement (that is the paper's whole
+/// premise).
+pub fn run(layer: &SparseLayer, cfg: PrsMaskConfig, mode: Mode) -> EngineResult {
+    let (rows, cols) = (layer.rows, layer.cols);
+    let size = rows * cols;
+    let target_keep = layer.mask.nnz();
+    let mut c = Counters::default();
+    let mut y = vec![0.0f32; cols];
+    let mut lr = GaloisLfsr::new(cfg.n_row, cfg.seed_row);
+    let mut lc = GaloisLfsr::new(cfg.n_col, cfg.seed_col);
+    let mut visited = Mask::from_keep(rows, cols, vec![0; size]);
+    let mut kept = 0usize;
+    let budget = (64 * target_keep).max(16 * size) + 1024;
+    let mut steps = 0usize;
+    while kept < target_keep {
+        assert!(steps < budget, "engine walk exceeded budget");
+        let sr = lr.next_state() as u64;
+        let sc = lc.next_state() as u64;
+        steps += 1;
+        let r = ((sr * rows as u64) >> cfg.n_row) as usize;
+        let col = ((sc * cols as u64) >> cfg.n_col) as usize;
+        let fresh = !visited.get(r, col);
+        if fresh {
+            visited.set(r, col, true);
+            kept += 1;
+        }
+        match mode {
+            Mode::Ideal if !fresh => {
+                // Collisions were deduplicated offline; no hardware event.
+                continue;
+            }
+            Mode::Ideal | Mode::Stream => {
+                // LFSR row+col tick together with the weight read.
+                c.lfsr_ticks += 2;
+                c.weight_reads += 1;
+                c.cycles += 1;
+                if fresh {
+                    assert!(
+                        layer.mask.get(r, col),
+                        "engine derived ({r},{col}) not in mask — seed mismatch"
+                    );
+                    c.input_reads += 1;
+                    c.mac_ops += 1;
+                    // Output RMW: +1 read cycle +1 write cycle (paper §3.2).
+                    c.output_reads += 1;
+                    c.output_writes += 1;
+                    c.cycles += 2;
+                    y[col] += layer.input[r] * layer.weights[r * cols + col];
+                } else {
+                    // Stream-mode duplicate: zero slot read, cycle burnt.
+                    c.collision_cycles += 1;
+                }
+            }
+        }
+    }
+    EngineResult {
+        output: y,
+        counters: c,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::mask::prs::prs_mask;
+
+    fn layer_for(rows: usize, cols: usize, sp: f64, cfg: PrsMaskConfig, seed: u64) -> SparseLayer {
+        let mask = prs_mask(rows, cols, sp, cfg);
+        let mut rng = Pcg32::new(seed);
+        SparseLayer {
+            rows,
+            cols,
+            weights: (0..rows * cols).map(|_| rng.next_normal()).collect(),
+            mask,
+            input: (0..rows).map(|_| rng.next_normal()).collect(),
+        }
+    }
+
+    fn assert_close(a: &[f32], b: &[f32]) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < 1e-3, "output[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn computes_correct_matvec_both_modes() {
+        let cfg = PrsMaskConfig::auto(100, 80, 5, 11);
+        let l = layer_for(100, 80, 0.7, cfg, 3);
+        for mode in [Mode::Ideal, Mode::Stream] {
+            let r = run(&l, cfg, mode);
+            assert_close(&r.output, &l.reference_output());
+        }
+    }
+
+    #[test]
+    fn ideal_counters() {
+        let cfg = PrsMaskConfig::auto(200, 100, 7, 13);
+        let l = layer_for(200, 100, 0.9, cfg, 5);
+        let nnz = l.mask.nnz() as u64;
+        let c = run(&l, cfg, Mode::Ideal).counters;
+        assert_eq!(c.mac_ops, nnz);
+        assert_eq!(c.weight_reads, nnz);
+        assert_eq!(c.index_reads, 0); // THE point of the paper
+        assert_eq!(c.ptr_reads, 0);
+        assert_eq!(c.output_reads, nnz); // RMW penalty
+        assert_eq!(c.output_writes, nnz);
+        assert_eq!(c.lfsr_ticks, 2 * nnz);
+        assert_eq!(c.cycles, 3 * nnz); // 1 fetch + 2 RMW per op
+        assert_eq!(c.collision_cycles, 0);
+    }
+
+    #[test]
+    fn stream_mode_burns_collision_cycles_at_low_sparsity() {
+        let cfg = PrsMaskConfig::auto(64, 64, 9, 21);
+        let l = layer_for(64, 64, 0.4, cfg, 7);
+        let ideal = run(&l, cfg, Mode::Ideal).counters;
+        let stream = run(&l, cfg, Mode::Stream).counters;
+        assert_eq!(ideal.mac_ops, stream.mac_ops);
+        assert!(stream.collision_cycles > 0);
+        assert!(stream.cycles > ideal.cycles);
+        assert_eq!(
+            stream.cycles,
+            ideal.cycles + stream.collision_cycles
+        );
+        // Collisions also cost weight-memory slots/reads.
+        assert_eq!(
+            stream.weight_reads,
+            ideal.weight_reads + stream.collision_cycles
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "seed mismatch")]
+    fn wrong_seed_is_detected() {
+        let cfg = PrsMaskConfig::auto(50, 50, 3, 9);
+        let mut l = layer_for(50, 50, 0.8, cfg, 1);
+        // Corrupt: rebuild mask with different seeds but keep cfg.
+        let bad_cfg = PrsMaskConfig::auto(50, 50, 4, 10);
+        l.mask = prs_mask(50, 50, 0.8, bad_cfg);
+        let _ = run(&l, cfg, Mode::Ideal);
+    }
+
+    #[test]
+    fn engine_agrees_with_baseline_engine() {
+        // The two datapaths must compute the same function.
+        let cfg = PrsMaskConfig::auto(120, 60, 15, 27);
+        let l = layer_for(120, 60, 0.8, cfg, 11);
+        let prop = run(&l, cfg, Mode::Ideal);
+        let base = super::super::baseline::run(&l, 8, 8);
+        assert_close(&prop.output, &base.output);
+    }
+}

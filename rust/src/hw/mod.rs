@@ -1,0 +1,30 @@
+//! The 65 nm accelerator model (paper §2.4, §3.2) — the hardware half of
+//! the co-design.
+//!
+//! * [`params`] — Table 1 configuration + 65 nm energy/area constants.
+//! * [`engine`] — shared workload/counter types; engines really execute
+//!   the layer so their outputs are cross-checked against a dense host
+//!   reference.
+//! * [`baseline`] — the Han-style CSC datapath (S/I/P memories, α filler
+//!   entries, per-column accumulator).
+//! * [`lfsr_engine`] — the proposed datapath (two on-die LFSRs regenerate
+//!   indices, compact value memory, output-buffer RMW penalty).
+//! * [`energy`] / [`system`] — event counts → power (Table 4), area
+//!   (Table 5), memory (Figure 5); closed-form estimates validated
+//!   against the cycle engines.
+//! * [`layers`] — the paper's FC dimensions at full size.
+
+pub mod baseline;
+pub mod engine;
+pub mod energy;
+pub mod layers;
+pub mod lfsr_engine;
+pub mod params;
+pub mod system;
+
+pub use engine::{Counters, EngineResult, SparseLayer};
+pub use energy::{MemorySizes, PowerReport};
+pub use layers::{FcDims, Network};
+pub use lfsr_engine::Mode;
+pub use params::{AreaModel, EnergyModel, HwParams};
+pub use system::{compare, estimate_layer, evaluate_network, simulate_layer, Comparison, Method};

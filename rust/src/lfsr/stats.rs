@@ -1,0 +1,170 @@
+//! Statistical tests on the PRS (paper §2.1: "key statistical properties
+//! that preserve the rank of the generated connectivity matrix").
+//!
+//! Lightweight NIST-style checks used by tests and by `repro lfsr-stats`:
+//! monobit frequency, runs, serial correlation, and index-histogram
+//! uniformity.  These are *diagnostics*, not cryptographic certification.
+
+use super::galois::GaloisLfsr;
+use super::index_gen::MsbMap;
+
+/// Result of one statistical check.
+#[derive(Debug, Clone)]
+pub struct StatResult {
+    pub name: &'static str,
+    pub statistic: f64,
+    pub pass: bool,
+}
+
+/// Monobit test: |#ones - #zeros| / sqrt(len) should be small.
+/// An m-sequence over a full period has exactly one extra 1.
+pub fn monobit(lfsr: &mut GaloisLfsr, len: usize) -> StatResult {
+    let mut ones = 0i64;
+    for _ in 0..len {
+        ones += lfsr.next_bit() as i64;
+    }
+    let zeros = len as i64 - ones;
+    let s = (ones - zeros).abs() as f64 / (len as f64).sqrt();
+    StatResult {
+        name: "monobit",
+        statistic: s,
+        // 3.3 sigma two-sided (~1e-3); m-sequences pass with huge margin.
+        pass: s < 3.3,
+    }
+}
+
+/// Runs test: the number of runs in the bit stream vs the expected value
+/// for an i.i.d. fair stream (2·n·p·(1-p) + 1).
+pub fn runs(lfsr: &mut GaloisLfsr, len: usize) -> StatResult {
+    let mut prev = lfsr.next_bit();
+    let mut ones = prev as u64;
+    let mut run_count = 1u64;
+    for _ in 1..len {
+        let b = lfsr.next_bit();
+        ones += b as u64;
+        if b != prev {
+            run_count += 1;
+        }
+        prev = b;
+    }
+    let p = ones as f64 / len as f64;
+    let expected = 2.0 * len as f64 * p * (1.0 - p) + 1.0;
+    let var = 2.0 * len as f64 * p * (1.0 - p) * (2.0 * p * (1.0 - p));
+    let z = (run_count as f64 - expected) / var.max(1e-9).sqrt();
+    StatResult {
+        name: "runs",
+        statistic: z.abs(),
+        pass: z.abs() < 3.3,
+    }
+}
+
+/// Lag-1 serial correlation of the output *bit stream*.
+///
+/// Note this is deliberately NOT computed on the raw state values: a Galois
+/// successor state is `s >> 1` (± taps) so consecutive *states* correlate
+/// strongly by construction (~0.1); the PRS quality claim (§2.1) is about
+/// the emitted sequence, and the paper's index map uses the MSBs where the
+/// shift correlation is washed out (see `index_uniformity`).
+pub fn serial_correlation(lfsr: &mut GaloisLfsr, len: usize) -> StatResult {
+    let xs: Vec<f64> = (0..len).map(|_| lfsr.next_bit() as f64).collect();
+    let mean = xs.iter().sum::<f64>() / len as f64;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..len - 1 {
+        num += (xs[i] - mean) * (xs[i + 1] - mean);
+        den += (xs[i] - mean) * (xs[i] - mean);
+    }
+    let r = num / den.max(1e-12);
+    StatResult {
+        name: "serial_correlation",
+        statistic: r.abs(),
+        pass: r.abs() < 0.05,
+    }
+}
+
+/// Chi-square uniformity of mapped indices over `domain` bins.
+pub fn index_uniformity(map: &mut MsbMap, samples: usize) -> StatResult {
+    let domain = map.domain();
+    let mut counts = vec![0u64; domain];
+    for _ in 0..samples {
+        counts[map.next_index()] += 1;
+    }
+    let expected = samples as f64 / domain as f64;
+    let chi2: f64 = counts
+        .iter()
+        .map(|&c| {
+            let d = c as f64 - expected;
+            d * d / expected
+        })
+        .sum();
+    // Normal approx of chi-square with k-1 dof: z = (chi2 - k) / sqrt(2k).
+    let k = (domain - 1) as f64;
+    let z = (chi2 - k) / (2.0 * k).sqrt();
+    StatResult {
+        name: "index_uniformity",
+        statistic: z,
+        pass: z < 5.0,
+    }
+}
+
+/// Run the full battery for a width/seed/domain combination.
+///
+/// `len` is clamped to the full period: m-sequences are deterministic, and
+/// their i.i.d.-style statistics are only guaranteed over whole periods —
+/// partial windows of sparse-tap (trinomial) polynomials can show multi-
+/// sigma local bias without indicating any defect.
+pub fn battery(width: u32, seed: u32, domain: usize, len: usize) -> Vec<StatResult> {
+    let len = len.min(crate::lfsr::polynomials::period(width) as usize);
+    vec![
+        monobit(&mut GaloisLfsr::new(width, seed), len),
+        runs(&mut GaloisLfsr::new(width, seed), len),
+        serial_correlation(&mut GaloisLfsr::new(width, seed), len.min(100_000)),
+        index_uniformity(
+            &mut MsbMap::new(GaloisLfsr::new(width, seed), domain),
+            len,
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn m_sequences_pass_battery() {
+        for width in [12u32, 16, 20] {
+            let len = crate::lfsr::polynomials::period(width) as usize;
+            for seed in [1u32, 0xACE1, 777] {
+                for r in battery(width, seed, 300, len) {
+                    assert!(
+                        r.pass,
+                        "width={width} seed={seed}: {} failed ({})",
+                        r.name, r.statistic
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn constant_stream_fails_monobit() {
+        // Sanity: the tests can actually fail. A width-2 LFSR over a long
+        // window is fine, but a degenerate all-ones "stream" is not; fake
+        // it by checking the statistic formula directly.
+        let mut l = GaloisLfsr::new(16, 1);
+        let r = monobit(&mut l, 65_535 * 2);
+        assert!(r.pass);
+        // Construct a biased statistic by hand:
+        let s = (1000i64 - 0).abs() as f64 / (1000f64).sqrt();
+        assert!(s > 3.3);
+    }
+
+    #[test]
+    fn short_period_fails_uniformity_on_large_domain() {
+        // A 4-bit LFSR mapped onto 300 bins can hit at most 15 of them:
+        // the uniformity check must flag it.
+        let mut m = MsbMap::new(GaloisLfsr::new(4, 1), 300);
+        let r = index_uniformity(&mut m, 60_000);
+        assert!(!r.pass, "expected uniformity failure, z={}", r.statistic);
+    }
+}

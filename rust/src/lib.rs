@@ -1,0 +1,30 @@
+//! # lfsr-prune
+//!
+//! Production-grade reproduction of *"Hardware-aware Pruning of DNNs using
+//! LFSR-Generated Pseudo-Random Indices"* (Karimzadeh et al., 2019).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — rust coordinator: LFSR primitives, masks, data,
+//!   the training pipeline driving AOT-compiled JAX steps over PJRT, the
+//!   65nm accelerator model, and the experiment harness regenerating every
+//!   table and figure of the paper.
+//! * **L2** — `python/compile/model.py`: JAX fwd/bwd, lowered once to HLO
+//!   text artifacts (`make artifacts`).
+//! * **L1** — `python/compile/kernels/`: Pallas masked-matmul and LFSR
+//!   jump-index kernels, lowered inside the L2 HLO.
+//!
+//! Python never runs at request time: the `repro` binary is self-contained
+//! once `artifacts/` exists.
+
+pub mod cli;
+pub mod data;
+pub mod experiments;
+pub mod report;
+pub mod hw;
+pub mod runtime;
+pub mod util;
+pub mod lfsr;
+pub mod mask;
+pub mod pipeline;
+pub mod rank;
+pub mod sparse;

@@ -1,0 +1,10 @@
+//! `repro` — the L3 coordinator binary.  See `repro help`.
+use lfsr_prune::cli;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = cli::main_with_args(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,89 @@
+//! Han et al. 2015 baseline: prune the smallest-magnitude weights.
+//!
+//! "The connections less than a threshold are pruned" — we choose the
+//! threshold as the k-th smallest |w| so the target sparsity is hit
+//! exactly, which is how iso-compression comparisons in the paper's
+//! Figure 4 are set up.
+
+use super::{prune_target, Mask};
+
+/// Keep-mask pruning the `sparsity` fraction of smallest-|w| synapses.
+///
+/// `weights` is row-major rows×cols.  Ties at the threshold are broken by
+/// index order (first occurrences pruned first) so the result is
+/// deterministic.
+pub fn magnitude_mask(rows: usize, cols: usize, weights: &[f32], sparsity: f64) -> Mask {
+    assert_eq!(weights.len(), rows * cols);
+    assert!((0.0..=1.0).contains(&sparsity));
+    let target = prune_target(rows, cols, sparsity);
+    if target == 0 {
+        return Mask::dense(rows, cols);
+    }
+    // Select the k smallest magnitudes via a partial sort of indices.
+    let mut idx: Vec<u32> = (0..weights.len() as u32).collect();
+    let kth = target - 1;
+    idx.select_nth_unstable_by(kth, |&a, &b| {
+        let ma = weights[a as usize].abs();
+        let mb = weights[b as usize].abs();
+        ma.partial_cmp(&mb).unwrap().then(a.cmp(&b))
+    });
+    let mut keep = vec![1u8; weights.len()];
+    for &i in &idx[..target] {
+        keep[i as usize] = 0;
+    }
+    Mask::from_keep(rows, cols, keep)
+}
+
+/// The threshold actually implied by a magnitude mask (max pruned |w|) —
+/// reported by the pipeline for parity with the paper's description.
+pub fn implied_threshold(weights: &[f32], mask: &Mask) -> f32 {
+    weights
+        .iter()
+        .zip(mask.keep_bytes())
+        .filter(|(_, &k)| k == 0)
+        .map(|(w, _)| w.abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prunes_smallest_exactly() {
+        let w = vec![0.9f32, -0.1, 0.5, -0.7, 0.05, 0.3];
+        let m = magnitude_mask(2, 3, &w, 0.5);
+        // |w| sorted: 0.05(idx4), 0.1(idx1), 0.3(idx5) pruned.
+        assert_eq!(m.keep_bytes(), &[1, 0, 1, 1, 0, 0]);
+        assert_eq!(m.sparsity(), 0.5);
+    }
+
+    #[test]
+    fn zero_and_full_sparsity() {
+        let w = vec![1.0f32; 12];
+        assert_eq!(magnitude_mask(3, 4, &w, 0.0).nnz(), 12);
+        assert_eq!(magnitude_mask(3, 4, &w, 1.0).nnz(), 0);
+    }
+
+    #[test]
+    fn deterministic_under_ties() {
+        let w = vec![0.5f32; 100];
+        let a = magnitude_mask(10, 10, &w, 0.37);
+        let b = magnitude_mask(10, 10, &w, 0.37);
+        assert_eq!(a, b);
+        assert_eq!(100 - a.nnz(), prune_target(10, 10, 0.37));
+    }
+
+    #[test]
+    fn kept_weights_dominate_pruned() {
+        // Every kept |w| >= every pruned |w| (threshold semantics).
+        let w: Vec<f32> = (0..200).map(|i| ((i * 37 % 101) as f32 - 50.0) / 17.0).collect();
+        let m = magnitude_mask(10, 20, &w, 0.6);
+        let thr = implied_threshold(&w, &m);
+        for (i, &k) in m.keep_bytes().iter().enumerate() {
+            if k == 1 {
+                assert!(w[i].abs() >= thr - 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Connectivity masks: which synapses of an FC weight matrix survive.
+//!
+//! A [`Mask`] is a dense rows×cols 0/1 keep-map (1 = synapse kept).  Three
+//! constructions are provided, matching the paper's comparison:
+//!
+//! * [`prs`] — the paper's method: two-LFSR pseudo-random walk (§2).
+//! * [`magnitude`] — the Han et al. 2015 baseline: global magnitude
+//!   threshold chosen to hit the target sparsity exactly.
+//! * [`random`] — uniform random control (used by ablations).
+
+pub mod magnitude;
+pub mod prs;
+pub mod random;
+
+pub use magnitude::magnitude_mask;
+pub use prs::{prs_mask, PrsMaskConfig};
+pub use random::random_mask;
+
+/// Dense 0/1 keep-mask over a rows×cols weight matrix (row-major).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mask {
+    pub rows: usize,
+    pub cols: usize,
+    keep: Vec<u8>,
+}
+
+impl Mask {
+    /// All-ones (dense) mask.
+    pub fn dense(rows: usize, cols: usize) -> Self {
+        Mask {
+            rows,
+            cols,
+            keep: vec![1; rows * cols],
+        }
+    }
+
+    /// Build from a raw keep vector (row-major, values 0/1).
+    pub fn from_keep(rows: usize, cols: usize, keep: Vec<u8>) -> Self {
+        assert_eq!(keep.len(), rows * cols);
+        debug_assert!(keep.iter().all(|&v| v <= 1));
+        Mask { rows, cols, keep }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        self.keep[r * self.cols + c] != 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, kept: bool) {
+        self.keep[r * self.cols + c] = kept as u8;
+    }
+
+    /// Number of kept (non-zero) synapses.
+    pub fn nnz(&self) -> usize {
+        self.keep.iter().map(|&v| v as usize).sum()
+    }
+
+    /// Fraction of *pruned* synapses (the paper's "sparsity").
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Row-major f32 view for PJRT literals (1.0 = keep).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.keep.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Raw keep bytes.
+    pub fn keep_bytes(&self) -> &[u8] {
+        &self.keep
+    }
+
+    /// Per-row kept counts (used by rank/coverage diagnostics).
+    pub fn row_nnz(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|r| {
+                self.keep[r * self.cols..(r + 1) * self.cols]
+                    .iter()
+                    .map(|&v| v as usize)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Per-column kept counts.
+    pub fn col_nnz(&self) -> Vec<usize> {
+        let mut out = vec![0usize; self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[c] += self.keep[r * self.cols + c] as usize;
+            }
+        }
+        out
+    }
+
+    /// Apply to a row-major weight vector, zeroing pruned entries in place.
+    pub fn apply_to(&self, weights: &mut [f32]) {
+        assert_eq!(weights.len(), self.keep.len());
+        for (w, &k) in weights.iter_mut().zip(self.keep.iter()) {
+            if k == 0 {
+                *w = 0.0;
+            }
+        }
+    }
+}
+
+/// How many synapses must be pruned to hit `sparsity` on a rows×cols layer
+/// (banker-free round-half-away matching python's `round`).
+pub fn prune_target(rows: usize, cols: usize, sparsity: f64) -> usize {
+    let t = sparsity * (rows * cols) as f64;
+    // python round() is banker's rounding; exact halves are vanishingly
+    // rare for real sparsities, but keep the same behaviour for safety.
+    let floor = t.floor();
+    let frac = t - floor;
+    let base = floor as usize;
+    if (frac - 0.5).abs() < 1e-12 {
+        if base % 2 == 0 {
+            base
+        } else {
+            base + 1
+        }
+    } else if frac > 0.5 {
+        base + 1
+    } else {
+        base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_mask_basics() {
+        let m = Mask::dense(4, 5);
+        assert_eq!(m.nnz(), 20);
+        assert_eq!(m.sparsity(), 0.0);
+        assert!(m.get(3, 4));
+    }
+
+    #[test]
+    fn set_get_apply() {
+        let mut m = Mask::dense(2, 3);
+        m.set(0, 1, false);
+        m.set(1, 2, false);
+        assert_eq!(m.nnz(), 4);
+        let mut w = vec![1.0f32; 6];
+        m.apply_to(&mut w);
+        assert_eq!(w, vec![1.0, 0.0, 1.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn prune_target_matches_python_round() {
+        assert_eq!(prune_target(10, 10, 0.5), 50);
+        assert_eq!(prune_target(3, 3, 0.5), 4); // round(4.5) -> 4 (banker's)
+        assert_eq!(prune_target(300, 784, 0.95), (0.95f64 * 235200.0).round() as usize);
+    }
+
+    #[test]
+    fn marginals() {
+        let mut m = Mask::dense(3, 3);
+        m.set(0, 0, false);
+        m.set(0, 1, false);
+        assert_eq!(m.row_nnz(), vec![1, 3, 3]);
+        assert_eq!(m.col_nnz(), vec![2, 2, 3]);
+    }
+}

@@ -1,0 +1,214 @@
+//! The paper's PRS mask: two LFSRs stream (row, col) positions of the
+//! synapses that are KEPT.
+//!
+//! LFSR-1 emits row indices, LFSR-2 column indices (paper §2, §2.4); both
+//! use the MSB range map.  The walk visits positions until the keep target
+//! (`size - round(sparsity·size)`) of *distinct* cells is reached; the
+//! complement is regularized → pruned.  The walk enumerates the kept
+//! (non-zero) synapses because that is exactly what the inference engine
+//! re-derives from the seeds in real time ("the locations of non-zero
+//! weights are derived in real-time from LFSRs" — abstract), and the
+//! compact weight memory is laid out in this walk order
+//! (see `hw::lfsr_engine`).  Collisions are skipped.
+//!
+//! This walk is bit-for-bit `lfsr_pair_mask` in
+//! `python/compile/kernels/ref.py`; vectors pinned in
+//! `rust/tests/python_parity.rs` keep the two in lock-step — a divergence
+//! would silently corrupt every weight lookup at inference.
+
+use super::{prune_target, Mask};
+use crate::lfsr::{pick_pair_widths, GaloisLfsr};
+
+/// Seeds + register widths that fully determine a PRS mask.
+///
+/// This 4-tuple (plus dims) is the *entire* index memory of the proposed
+/// hardware — compare `sparse::memory` where the baseline stores O(nnz)
+/// index bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrsMaskConfig {
+    pub n_row: u32,
+    pub n_col: u32,
+    pub seed_row: u32,
+    pub seed_col: u32,
+}
+
+impl PrsMaskConfig {
+    /// Pick coprime widths automatically for a rows×cols layer.
+    pub fn auto(rows: usize, cols: usize, seed_row: u32, seed_col: u32) -> Self {
+        let (n_row, n_col) = pick_pair_widths(rows, cols);
+        PrsMaskConfig {
+            n_row,
+            n_col,
+            seed_row,
+            seed_col,
+        }
+    }
+
+    /// Bits of storage the proposed method needs for this layer's indices:
+    /// the two seeds (the LFSRs themselves are logic, not memory).
+    pub fn seed_bits(&self) -> u64 {
+        (self.n_row + self.n_col) as u64
+    }
+}
+
+/// Statistics of one PRS walk — used by the stream-mode hardware model
+/// (`hw::lfsr_engine`) to account for collision cycles the paper glosses
+/// over (DESIGN.md "Pair-stream masking").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalkStats {
+    /// Distinct kept positions (= nnz).
+    pub kept: usize,
+    /// Total LFSR clocks consumed, including collision re-visits.
+    pub total_steps: usize,
+}
+
+impl WalkStats {
+    /// Collision overhead factor β = total_steps / kept (≥ 1).
+    pub fn overhead(&self) -> f64 {
+        self.total_steps as f64 / self.kept.max(1) as f64
+    }
+}
+
+fn walk(
+    rows: usize,
+    cols: usize,
+    sparsity: f64,
+    cfg: PrsMaskConfig,
+    mut on_keep: impl FnMut(usize, usize),
+) -> (Mask, WalkStats) {
+    assert!((0.0..=1.0).contains(&sparsity));
+    let size = rows * cols;
+    let target_keep = size - prune_target(rows, cols, sparsity);
+    let mut visited = Mask::from_keep(rows, cols, vec![0; size]); // 1 = kept
+    let mut lr = GaloisLfsr::new(cfg.n_row, cfg.seed_row);
+    let mut lc = GaloisLfsr::new(cfg.n_col, cfg.seed_col);
+    let mut kept = 0usize;
+    let mut steps = 0usize;
+    let budget = (64 * target_keep).max(16 * size) + 1024;
+    while kept < target_keep {
+        assert!(
+            steps < budget,
+            "LFSR walk budget exhausted ({kept}/{target_keep}) — widths not coprime?"
+        );
+        let sr = lr.next_state() as u64;
+        let sc = lc.next_state() as u64;
+        steps += 1;
+        let r = ((sr * rows as u64) >> cfg.n_row) as usize;
+        let c = ((sc * cols as u64) >> cfg.n_col) as usize;
+        if !visited.get(r, c) {
+            visited.set(r, c, true);
+            kept += 1;
+            on_keep(r, c);
+        }
+    }
+    (
+        visited,
+        WalkStats {
+            kept,
+            total_steps: steps,
+        },
+    )
+}
+
+/// Build the keep-mask for one layer at the given sparsity.
+pub fn prs_mask(rows: usize, cols: usize, sparsity: f64, cfg: PrsMaskConfig) -> Mask {
+    walk(rows, cols, sparsity, cfg, |_, _| {}).0
+}
+
+/// Mask plus walk statistics (collision accounting for the hw model).
+pub fn prs_mask_with_stats(
+    rows: usize,
+    cols: usize,
+    sparsity: f64,
+    cfg: PrsMaskConfig,
+) -> (Mask, WalkStats) {
+    walk(rows, cols, sparsity, cfg, |_, _| {})
+}
+
+/// The kept positions in walk order — exactly the order the inference
+/// engine's index generators re-derive, and therefore the layout of the
+/// compact weight memory (`hw::lfsr_engine` consumes this).
+pub fn prs_keep_sequence(
+    rows: usize,
+    cols: usize,
+    sparsity: f64,
+    cfg: PrsMaskConfig,
+) -> Vec<(usize, usize)> {
+    let mut seq = Vec::new();
+    walk(rows, cols, sparsity, cfg, |r, c| seq.push((r, c)));
+    seq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_sparsity() {
+        for (rows, cols, sp) in [(300, 784, 0.4), (100, 300, 0.7), (10, 100, 0.95)] {
+            let cfg = PrsMaskConfig::auto(rows, cols, 3, 7);
+            let m = prs_mask(rows, cols, sp, cfg);
+            let pruned = rows * cols - m.nnz();
+            assert_eq!(pruned, prune_target(rows, cols, sp));
+        }
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let cfg = PrsMaskConfig::auto(64, 64, 5, 9);
+        let a = prs_mask(64, 64, 0.5, cfg);
+        let b = prs_mask(64, 64, 0.5, cfg);
+        assert_eq!(a, b);
+        let cfg2 = PrsMaskConfig::auto(64, 64, 6, 10);
+        let c = prs_mask(64, 64, 0.5, cfg2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn high_sparsity_reachable() {
+        let cfg = PrsMaskConfig::auto(2048, 2048, 17, 23);
+        let m = prs_mask(2048, 2048, 0.95, cfg);
+        assert!((m.sparsity() - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_sparsity_dense() {
+        let cfg = PrsMaskConfig::auto(20, 20, 1, 2);
+        let m = prs_mask(20, 20, 0.0, cfg);
+        assert_eq!(m.nnz(), 400);
+    }
+
+    #[test]
+    fn keep_sequence_matches_mask_and_is_distinct() {
+        let cfg = PrsMaskConfig::auto(50, 40, 11, 13);
+        let m = prs_mask(50, 40, 0.6, cfg);
+        let seq = prs_keep_sequence(50, 40, 0.6, cfg);
+        assert_eq!(seq.len(), m.nnz());
+        for &(r, c) in &seq {
+            assert!(m.get(r, c));
+        }
+        let set: std::collections::HashSet<_> = seq.iter().collect();
+        assert_eq!(set.len(), seq.len());
+    }
+
+    #[test]
+    fn walk_overhead_grows_at_low_sparsity() {
+        // Collision accounting: keeping 60% of cells costs ~S·ln(1/0.4)
+        // clocks (β≈1.5) while keeping 5% is nearly collision-free — the
+        // effect the stream-mode hw model charges for.
+        let cfg = PrsMaskConfig::auto(128, 128, 9, 21);
+        let (_, hi) = prs_mask_with_stats(128, 128, 0.95, cfg);
+        let (_, lo) = prs_mask_with_stats(128, 128, 0.40, cfg);
+        assert!(hi.overhead() < 1.1, "95% sparsity overhead {}", hi.overhead());
+        assert!(lo.overhead() > 1.3, "40% sparsity overhead {}", lo.overhead());
+    }
+
+    #[test]
+    fn marginals_near_uniform() {
+        // What preserves rank (paper Table 3): no starved rows/cols.
+        let cfg = PrsMaskConfig::auto(64, 64, 17, 23);
+        let m = prs_mask(64, 64, 0.5, cfg);
+        let rn = m.row_nnz();
+        assert!(rn.iter().all(|&k| (12..=52).contains(&k)), "{rn:?}");
+    }
+}

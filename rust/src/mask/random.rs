@@ -1,0 +1,51 @@
+//! Uniform random keep-mask (Fisher–Yates over flat indices) — the control
+//! arm for ablations: PRS pruning should behave statistically like random
+//! pruning (that is the paper's implicit claim), and ablation benches
+//! compare the two accuracy curves directly.
+
+use super::{prune_target, Mask};
+use crate::data::rng::Pcg32;
+
+/// Prune exactly `round(sparsity·rows·cols)` positions chosen uniformly.
+pub fn random_mask(rows: usize, cols: usize, sparsity: f64, seed: u64) -> Mask {
+    assert!((0.0..=1.0).contains(&sparsity));
+    let total = rows * cols;
+    let target = prune_target(rows, cols, sparsity);
+    let mut rng = Pcg32::new(seed);
+    // Partial Fisher-Yates: draw `target` distinct flat indices.
+    let mut idx: Vec<u32> = (0..total as u32).collect();
+    let mut keep = vec![1u8; total];
+    for i in 0..target {
+        let j = i + rng.next_below((total - i) as u32) as usize;
+        idx.swap(i, j);
+        keep[idx[i] as usize] = 0;
+    }
+    Mask::from_keep(rows, cols, keep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_sparsity() {
+        for sp in [0.0, 0.25, 0.5, 0.95, 1.0] {
+            let m = random_mask(30, 40, sp, 42);
+            assert_eq!(30 * 40 - m.nnz(), prune_target(30, 40, sp));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(random_mask(20, 20, 0.5, 1), random_mask(20, 20, 0.5, 1));
+        assert_ne!(random_mask(20, 20, 0.5, 1), random_mask(20, 20, 0.5, 2));
+    }
+
+    #[test]
+    fn roughly_uniform_marginals() {
+        let m = random_mask(100, 100, 0.5, 7);
+        let rn = m.row_nnz();
+        // Binomial(100, 0.5): 6-sigma band is ±30.
+        assert!(rn.iter().all(|&k| (20..=80).contains(&k)));
+    }
+}

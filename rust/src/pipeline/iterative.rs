@@ -1,0 +1,117 @@
+//! Iterative pruning extension (paper §1: Han et al. prune "via an
+//! iterative process of pruning and retraining"; the proposed method is
+//! single-shot).  This module implements the multi-round schedule for
+//! BOTH methods so the ablation can ask: does the PRS method benefit from
+//! iteration the way magnitude pruning does?
+//!
+//! Rounds ramp sparsity geometrically toward the target; each round
+//! re-selects the mask (magnitude: from current weights; PRS: a longer
+//! prefix of the SAME walk — prefix consistency, see
+//! `prop_keep_sequence_is_prefix_consistent`) and retrains under it.
+
+use anyhow::Result;
+
+use super::{build_masks, PipelineConfig, TrialResult};
+use crate::data::{synth, Batcher};
+use crate::mask::Mask;
+use crate::runtime::{ModelRunner, Runtime, StepScalars, Tensor};
+
+/// Sparsity schedule: `rounds` points ramping to `target` (cube-root ramp
+/// — aggressive early, gentle late, the standard iterative-pruning shape).
+pub fn sparsity_schedule(target: f64, rounds: usize) -> Vec<f64> {
+    (1..=rounds)
+        .map(|r| target * (1.0 - (1.0 - r as f64 / rounds as f64).powi(3)))
+        .collect()
+}
+
+/// Run the iterative variant; reuses PipelineConfig with `reg_steps`
+/// interpreted as per-round retraining budget.
+pub fn run_iterative_trial(
+    rt: &Runtime,
+    cfg: &PipelineConfig,
+    rounds: usize,
+) -> Result<TrialResult> {
+    let runner = ModelRunner::new(rt, &cfg.model)?;
+    let data = synth::generate(&cfg.data.spec(cfg.trial_seed), cfg.n_train + cfg.n_eval);
+    let (train, eval) = data.split_tail(cfg.n_eval);
+    let mut params = runner.init_params(cfg.trial_seed.wrapping_mul(0x9E37).wrapping_add(17));
+    let dense_masks = runner.dense_masks();
+    let mut batcher = Batcher::new(&train, runner.man.batch, cfg.trial_seed ^ 0x5EED);
+
+    // Dense phase.
+    for _ in 0..cfg.dense_steps {
+        let b = batcher.next_batch();
+        params = runner
+            .train_step(&params, &dense_masks, &b, StepScalars::dense(cfg.lr_dense))?
+            .0;
+    }
+    let dense = runner.eval(&params, &dense_masks, &eval, cfg.eval_limit)?;
+
+    let midx = runner.maskable_indices();
+    let mut masks: Vec<Mask> = Vec::new();
+    let per_round = (cfg.reg_steps + cfg.retrain_steps) / rounds.max(1);
+    let mut pruned = dense;
+    for (round, sp) in sparsity_schedule(cfg.sparsity, rounds).iter().enumerate() {
+        masks = build_masks(&runner, &params, cfg.method, *sp);
+        let mask_tensors: Vec<Tensor> = masks
+            .iter()
+            .zip(&midx)
+            .map(|(m, &pi)| Tensor::f32(runner.man.params[pi].shape.clone(), m.to_f32()))
+            .collect();
+        // Hard prune...
+        for (mi, &pi) in midx.iter().enumerate() {
+            masks[mi].apply_to(params[pi].as_f32_mut());
+        }
+        if round == rounds - 1 {
+            pruned = runner.eval(&params, &mask_tensors, &eval, cfg.eval_limit)?;
+        }
+        // ...then retrain under the mask.
+        for _ in 0..per_round {
+            let b = batcher.next_batch();
+            params = runner
+                .train_step(&params, &mask_tensors, &b, StepScalars::retrain(cfg.lr_retrain))?
+                .0;
+        }
+    }
+    let mask_tensors: Vec<Tensor> = masks
+        .iter()
+        .zip(&midx)
+        .map(|(m, &pi)| Tensor::f32(runner.man.params[pi].shape.clone(), m.to_f32()))
+        .collect();
+    let retrained = runner.eval(&params, &mask_tensors, &eval, cfg.eval_limit)?;
+
+    let total: usize = params.iter().map(Tensor::len).sum();
+    let masked_total: usize = midx.iter().map(|&pi| runner.man.params[pi].len()).sum();
+    let kept: usize = masks.iter().map(Mask::nnz).sum();
+    Ok(TrialResult {
+        config_model: cfg.model.clone(),
+        sparsity: cfg.sparsity,
+        dense,
+        after_reg: dense,
+        pruned,
+        retrained,
+        params_total: total,
+        params_nonzero: total - masked_total + kept,
+        masks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_ramps_to_target() {
+        let s = sparsity_schedule(0.9, 4);
+        assert_eq!(s.len(), 4);
+        assert!((s[3] - 0.9).abs() < 1e-12);
+        assert!(s.windows(2).all(|w| w[0] < w[1]), "{s:?}");
+        assert!(s[0] > 0.3, "first round too gentle: {s:?}");
+    }
+
+    #[test]
+    fn schedule_single_round_is_one_shot() {
+        let s = sparsity_schedule(0.7, 1);
+        assert_eq!(s, vec![0.7]);
+    }
+}

@@ -1,0 +1,223 @@
+//! Multi-trial coordinator: the L3 leader/worker substrate.
+//!
+//! PJRT wrapper types are not `Send`, so each worker thread owns its own
+//! `Runtime` (its own PJRT client + executable cache) and pulls
+//! `TrialJob`s from a shared queue; the leader collects `TrialOutcome`s
+//! over a channel and aggregates mean±std per configuration (the paper's
+//! Figure 4 reports mean ± std over 5 trials).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::{run_trial, PipelineConfig, TrialResult};
+use crate::runtime::Runtime;
+
+/// One unit of work for a worker.
+#[derive(Debug, Clone)]
+pub struct TrialJob {
+    /// Caller-chosen grouping key (e.g. "prs@0.7").
+    pub key: String,
+    pub config: PipelineConfig,
+}
+
+/// Result envelope (workers never panic the leader; errors are values).
+#[derive(Debug)]
+pub struct TrialOutcome {
+    pub key: String,
+    pub trial_seed: u64,
+    pub result: Result<TrialResult>,
+}
+
+/// Aggregated accuracy stats for one key (paper's mean ± std).
+#[derive(Debug, Clone)]
+pub struct Aggregate {
+    pub key: String,
+    pub n: usize,
+    pub mean_acc: f64,
+    pub std_acc: f64,
+    pub mean_err_pct: f64,
+    pub mean_pruned_acc: f64,
+    pub mean_compression: f64,
+}
+
+/// Run all jobs across `workers` threads; results keep job order grouping
+/// but not completion order.
+pub fn run_trials(
+    artifacts_dir: std::path::PathBuf,
+    jobs: Vec<TrialJob>,
+    workers: usize,
+    verbose: bool,
+) -> Vec<TrialOutcome> {
+    let total = jobs.len();
+    let queue = Arc::new(Mutex::new(jobs.into_iter().collect::<Vec<_>>()));
+    let (tx, rx) = mpsc::channel::<TrialOutcome>();
+    let workers = workers.max(1).min(total.max(1));
+    let mut handles = Vec::new();
+    for wid in 0..workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        let dir = artifacts_dir.clone();
+        handles.push(std::thread::spawn(move || {
+            // One runtime (PJRT client) per worker, reused across jobs.
+            let rt = match Runtime::new(&dir) {
+                Ok(rt) => rt,
+                Err(e) => {
+                    // Poison every remaining job with the error.
+                    while let Some(job) = queue.lock().unwrap().pop() {
+                        let _ = tx.send(TrialOutcome {
+                            key: job.key,
+                            trial_seed: job.config.trial_seed,
+                            result: Err(anyhow::anyhow!("worker {wid}: {e}")),
+                        });
+                    }
+                    return;
+                }
+            };
+            loop {
+                let job = { queue.lock().unwrap().pop() };
+                let Some(job) = job else { break };
+                if verbose {
+                    eprintln!(
+                        "[worker {wid}] {} seed={} ...",
+                        job.key, job.config.trial_seed
+                    );
+                }
+                let result = run_trial(&rt, &job.config, None);
+                let _ = tx.send(TrialOutcome {
+                    key: job.key,
+                    trial_seed: job.config.trial_seed,
+                    result,
+                });
+            }
+        }));
+    }
+    drop(tx);
+    let mut out = Vec::with_capacity(total);
+    for outcome in rx {
+        if verbose {
+            if let Ok(r) = &outcome.result {
+                eprintln!(
+                    "[done] {} seed={} dense_err={:.1}% pruned_err={:.1}% retrained_err={:.1}%",
+                    outcome.key,
+                    outcome.trial_seed,
+                    r.dense.error_pct(),
+                    r.pruned.error_pct(),
+                    r.retrained.error_pct()
+                );
+            }
+        }
+        out.push(outcome);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    out
+}
+
+/// Group outcomes by key and compute mean ± std of retrained accuracy.
+pub fn aggregate(outcomes: &[TrialOutcome]) -> Vec<Aggregate> {
+    let mut keys: Vec<&str> = outcomes.iter().map(|o| o.key.as_str()).collect();
+    keys.sort();
+    keys.dedup();
+    keys.iter()
+        .map(|&key| {
+            let accs: Vec<f64> = outcomes
+                .iter()
+                .filter(|o| o.key == key)
+                .filter_map(|o| o.result.as_ref().ok())
+                .map(|r| r.retrained.accuracy as f64)
+                .collect();
+            let pruned: Vec<f64> = outcomes
+                .iter()
+                .filter(|o| o.key == key)
+                .filter_map(|o| o.result.as_ref().ok())
+                .map(|r| r.pruned.accuracy as f64)
+                .collect();
+            let comps: Vec<f64> = outcomes
+                .iter()
+                .filter(|o| o.key == key)
+                .filter_map(|o| o.result.as_ref().ok())
+                .map(|r| r.compression_rate())
+                .collect();
+            let n = accs.len();
+            let mean = accs.iter().sum::<f64>() / n.max(1) as f64;
+            let var = if n > 1 {
+                accs.iter().map(|a| (a - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+            } else {
+                0.0
+            };
+            Aggregate {
+                key: key.to_string(),
+                n,
+                mean_acc: mean,
+                std_acc: var.sqrt(),
+                mean_err_pct: (1.0 - mean) * 100.0,
+                mean_pruned_acc: pruned.iter().sum::<f64>() / n.max(1) as f64,
+                mean_compression: comps.iter().sum::<f64>() / n.max(1) as f64,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::EvalMetrics;
+
+    fn fake_result(acc: f32) -> TrialResult {
+        let m = EvalMetrics {
+            loss: 1.0,
+            accuracy: acc,
+            examples: 100,
+        };
+        TrialResult {
+            config_model: "m".into(),
+            sparsity: 0.5,
+            dense: m,
+            after_reg: m,
+            pruned: m,
+            retrained: m,
+            params_total: 100,
+            params_nonzero: 50,
+            masks: vec![],
+        }
+    }
+
+    #[test]
+    fn aggregate_mean_std() {
+        let outcomes = vec![
+            TrialOutcome {
+                key: "a".into(),
+                trial_seed: 1,
+                result: Ok(fake_result(0.9)),
+            },
+            TrialOutcome {
+                key: "a".into(),
+                trial_seed: 2,
+                result: Ok(fake_result(0.8)),
+            },
+            TrialOutcome {
+                key: "b".into(),
+                trial_seed: 1,
+                result: Ok(fake_result(0.5)),
+            },
+            TrialOutcome {
+                key: "a".into(),
+                trial_seed: 3,
+                result: Err(anyhow::anyhow!("boom")),
+            },
+        ];
+        let aggs = aggregate(&outcomes);
+        assert_eq!(aggs.len(), 2);
+        let a = aggs.iter().find(|g| g.key == "a").unwrap();
+        assert_eq!(a.n, 2);
+        assert!((a.mean_acc - 0.85).abs() < 1e-6);
+        assert!((a.std_acc - 0.070710).abs() < 1e-4);
+        assert!((a.mean_compression - 2.0).abs() < 1e-9);
+        let b = aggs.iter().find(|g| g.key == "b").unwrap();
+        assert_eq!(b.n, 1);
+        assert_eq!(b.std_acc, 0.0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Exact matrix rank over f64 (Gaussian elimination with partial
+//! pivoting) — reproduces the paper's Table 3, which argues the PRS mask
+//! preserves the rank (and hence "expressibility") of the weight matrices.
+
+/// Numerical rank of a row-major rows×cols matrix.
+///
+/// Entries are eliminated with partial pivoting; a pivot below
+/// `eps · max_abs · sqrt(cols)` is treated as zero.  For masked random
+/// matrices (the Table 3 workload) this matches LAPACK's SVD-based rank.
+pub fn matrix_rank(rows: usize, cols: usize, data: &[f32]) -> usize {
+    assert_eq!(data.len(), rows * cols);
+    let mut a: Vec<f64> = data.iter().map(|&v| v as f64).collect();
+    let max_abs = a.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    if max_abs == 0.0 {
+        return 0;
+    }
+    // Inputs are f32: each entry carries O(eps_f32·|a|) rounding noise, so
+    // the pivot threshold must be calibrated to f32 (not f64) precision or
+    // rank-deficient matrices (e.g. outer products assembled in f32) are
+    // misread as full rank.
+    let tol = max_abs * (cols.max(rows) as f64).sqrt() * f32::EPSILON as f64 * 8.0;
+    let mut rank = 0usize;
+    let mut pivot_row = 0usize;
+    for col in 0..cols {
+        if pivot_row >= rows {
+            break;
+        }
+        // Find the largest |entry| in this column at/below pivot_row.
+        let (mut best, mut best_val) = (pivot_row, a[pivot_row * cols + col].abs());
+        for r in pivot_row + 1..rows {
+            let v = a[r * cols + col].abs();
+            if v > best_val {
+                best = r;
+                best_val = v;
+            }
+        }
+        if best_val <= tol {
+            continue;
+        }
+        // Swap pivot row into place.
+        if best != pivot_row {
+            for c in 0..cols {
+                a.swap(pivot_row * cols + c, best * cols + c);
+            }
+        }
+        // Eliminate below.
+        let p = a[pivot_row * cols + col];
+        for r in pivot_row + 1..rows {
+            let f = a[r * cols + col] / p;
+            if f != 0.0 {
+                for c in col..cols {
+                    a[r * cols + c] -= f * a[pivot_row * cols + c];
+                }
+            }
+        }
+        pivot_row += 1;
+        rank += 1;
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::mask::{prs::PrsMaskConfig, prs_mask};
+
+    fn random_matrix(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        (0..rows * cols).map(|_| rng.next_normal()).collect()
+    }
+
+    #[test]
+    fn zero_matrix_rank_zero() {
+        assert_eq!(matrix_rank(5, 5, &vec![0.0; 25]), 0);
+    }
+
+    #[test]
+    fn identity_full_rank() {
+        let mut m = vec![0.0f32; 16];
+        for i in 0..4 {
+            m[i * 4 + i] = 1.0;
+        }
+        assert_eq!(matrix_rank(4, 4, &m), 4);
+    }
+
+    #[test]
+    fn random_matrix_full_rank() {
+        let m = random_matrix(50, 30, 1);
+        assert_eq!(matrix_rank(50, 30, &m), 30);
+    }
+
+    #[test]
+    fn rank_one_outer_product() {
+        let u: Vec<f32> = (0..20).map(|i| (i as f32) * 0.3 + 1.0).collect();
+        let v: Vec<f32> = (0..15).map(|i| (i as f32) * 0.7 - 2.0).collect();
+        let mut m = Vec::with_capacity(20 * 15);
+        for r in 0..20 {
+            for c in 0..15 {
+                m.push(u[r] * v[c]);
+            }
+        }
+        assert_eq!(matrix_rank(20, 15, &m), 1);
+    }
+
+    #[test]
+    fn duplicated_rows_reduce_rank() {
+        let mut m = random_matrix(10, 10, 2);
+        for c in 0..10 {
+            m[9 * 10 + c] = m[0 * 10 + c] + m[1 * 10 + c];
+        }
+        assert_eq!(matrix_rank(10, 10, &m), 9);
+    }
+
+    #[test]
+    fn prs_masked_matrix_near_full_rank() {
+        // The paper's Table 3 claim at layer scale.
+        let rows = 100;
+        let cols = 80;
+        let mut m = random_matrix(rows, cols, 3);
+        let cfg = PrsMaskConfig::auto(rows, cols, 9, 15);
+        let mask = prs_mask(rows, cols, 0.5, cfg);
+        mask.apply_to(&mut m);
+        let r = matrix_rank(rows, cols, &m);
+        assert!(r >= 78, "rank {r} under PRS 50% pruning");
+    }
+}

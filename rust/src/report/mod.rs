@@ -1,0 +1,145 @@
+//! Table rendering + CSV output for the experiment harness.
+//!
+//! Every experiment produces [`Table`]s; `render` prints the same
+//! rows/series the paper reports, and `write_csv` persists them under
+//! `results/` for EXPERIMENTS.md.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One rendered table (or figure-as-series-table).
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// e.g. "Table 4: Measured Power (mW)".
+    pub title: String,
+    /// Stable machine name, e.g. "table4_power".
+    pub slug: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, slug: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            slug: slug.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Column-aligned ASCII rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<width$} ", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        out.push_str(&format!("\n{}\n", self.title));
+        out.push_str(&format!("{sep}\n"));
+        out.push_str(&format!("{}\n", fmt_row(&self.headers)));
+        out.push_str(&format!("{sep}\n"));
+        for row in &self.rows {
+            out.push_str(&format!("{}\n", fmt_row(row)));
+        }
+        out.push_str(&format!("{sep}\n"));
+        out
+    }
+
+    /// Write `<dir>/<slug>.csv`.
+    pub fn write_csv(&self, dir: &Path) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+        let path = dir.join(format!("{}.csv", self.slug));
+        let mut f = std::fs::File::create(&path)?;
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        writeln!(
+            f,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        )?;
+        for row in &self.rows {
+            writeln!(
+                f,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            )?;
+        }
+        Ok(path)
+    }
+}
+
+/// Format helpers shared by experiments.
+pub fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{v:.1}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("T", "t", &["name", "value"]);
+        t.row(vec!["short".into(), "1".into()]);
+        t.row(vec!["much-longer-name".into(), "2.5".into()]);
+        let r = t.render();
+        assert!(r.contains("much-longer-name"));
+        let lines: Vec<&str> = r.lines().filter(|l| l.contains('|')).collect();
+        let w: Vec<usize> = lines.iter().map(|l| l.len()).collect();
+        assert!(w.windows(2).all(|p| p[0] == p[1]), "ragged table: {r}");
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let dir = std::env::temp_dir().join("lfsr_prune_csv_test");
+        let mut t = Table::new("T", "esc", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"uote".into()]);
+        let path = t.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"x,y\""));
+        assert!(text.contains("\"q\"\"uote\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("T", "t", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,270 @@
+//! Typed view of `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`): everything the coordinator needs to marshal
+//! literals for each AOT-compiled step function.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// One named parameter (order in the vec = positional input order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Everything known about one model's artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub use_pallas: bool,
+    pub params: Vec<ParamSpec>,
+    /// Names of maskable (FC weight) params, in mask input order.
+    pub maskable: Vec<String>,
+    /// Scalar input order for the train step.
+    pub scalar_inputs: Vec<String>,
+    /// kind ("train"/"eval"/"fwd") -> artifact file name.
+    pub artifacts: BTreeMap<String, String>,
+    pub param_count: usize,
+}
+
+impl ModelManifest {
+    /// Shapes of the mask inputs (same as the maskable params' shapes).
+    pub fn mask_shapes(&self) -> Vec<Vec<usize>> {
+        self.maskable
+            .iter()
+            .map(|m| {
+                self.params
+                    .iter()
+                    .find(|p| &p.name == m)
+                    .unwrap_or_else(|| panic!("maskable {m} not in params"))
+                    .shape
+                    .clone()
+            })
+            .collect()
+    }
+
+    pub fn batch_x_shape(&self) -> Vec<usize> {
+        let mut s = vec![self.batch];
+        s.extend(&self.input_shape);
+        s
+    }
+}
+
+/// Kernel demo artifact entries (runtime smoke tests / cross-checks).
+#[derive(Debug, Clone)]
+pub struct KernelManifest {
+    pub name: String,
+    pub file: String,
+    pub fields: BTreeMap<String, f64>,
+}
+
+/// The full manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelManifest>,
+    pub kernels: BTreeMap<String, KernelManifest>,
+}
+
+fn usize_arr(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected array"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("expected number")))
+        .collect()
+}
+
+fn str_arr(j: &Json) -> Result<Vec<String>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected array"))?
+        .iter()
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("expected string"))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let mut models = BTreeMap::new();
+        for (name, m) in j
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let params = m
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing params"))?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("param missing name"))?
+                            .to_string(),
+                        shape: usize_arr(p.get("shape").ok_or_else(|| anyhow!("no shape"))?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let mm = ModelManifest {
+                name: name.clone(),
+                batch: m
+                    .get("batch")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{name}: missing batch"))?,
+                input_shape: usize_arr(
+                    m.get("input_shape").ok_or_else(|| anyhow!("no input_shape"))?,
+                )?,
+                num_classes: m
+                    .get("num_classes")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{name}: missing num_classes"))?,
+                use_pallas: m.get("use_pallas").and_then(Json::as_bool).unwrap_or(false),
+                maskable: str_arr(m.get("maskable").ok_or_else(|| anyhow!("no maskable"))?)?,
+                scalar_inputs: str_arr(
+                    m.get("scalar_inputs").ok_or_else(|| anyhow!("no scalar_inputs"))?,
+                )?,
+                artifacts: m
+                    .get("artifacts")
+                    .and_then(Json::as_obj)
+                    .ok_or_else(|| anyhow!("{name}: missing artifacts"))?
+                    .iter()
+                    .map(|(k, v)| {
+                        Ok((
+                            k.clone(),
+                            v.as_str()
+                                .ok_or_else(|| anyhow!("artifact not a string"))?
+                                .to_string(),
+                        ))
+                    })
+                    .collect::<Result<BTreeMap<_, _>>>()?,
+                param_count: m
+                    .get("param_count")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0),
+                params,
+            };
+            // Validation: every maskable name must be a param.
+            for mk in &mm.maskable {
+                if !mm.params.iter().any(|p| &p.name == mk) {
+                    return Err(anyhow!("{name}: maskable {mk} not among params"));
+                }
+            }
+            models.insert(name.clone(), mm);
+        }
+        let mut kernels = BTreeMap::new();
+        if let Some(ks) = j.get("kernels").and_then(Json::as_obj) {
+            for (name, k) in ks {
+                let mut fields = BTreeMap::new();
+                if let Some(obj) = k.as_obj() {
+                    for (fk, fv) in obj {
+                        if let Some(n) = fv.as_f64() {
+                            fields.insert(fk.clone(), n);
+                        }
+                    }
+                }
+                kernels.insert(
+                    name.clone(),
+                    KernelManifest {
+                        name: name.clone(),
+                        file: k
+                            .get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("kernel {name}: missing file"))?
+                            .to_string(),
+                        fields,
+                    },
+                );
+            }
+        }
+        Ok(Manifest { models, kernels })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "lenet300": {
+          "batch": 64,
+          "input_shape": [784],
+          "num_classes": 10,
+          "use_pallas": true,
+          "params": [
+            {"name": "fc1_w", "shape": [784, 300]},
+            {"name": "fc1_b", "shape": [300]}
+          ],
+          "maskable": ["fc1_w"],
+          "scalar_inputs": ["lam", "lr", "a_l1", "a_l2", "hard_on"],
+          "artifacts": {"train": "lenet300_train.hlo.txt"},
+          "param_count": 235500
+        }
+      },
+      "kernels": {
+        "lfsr_idx": {"file": "lfsr_idx.hlo.txt", "n": 16, "domain": 1024}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        let l = &m.models["lenet300"];
+        assert_eq!(l.batch, 64);
+        assert_eq!(l.params[0].shape, vec![784, 300]);
+        assert_eq!(l.mask_shapes(), vec![vec![784, 300]]);
+        assert_eq!(l.batch_x_shape(), vec![64, 784]);
+        assert_eq!(m.kernels["lfsr_idx"].fields["domain"], 1024.0);
+    }
+
+    #[test]
+    fn rejects_bad_maskable() {
+        let bad = SAMPLE.replace("\"maskable\": [\"fc1_w\"]", "\"maskable\": [\"nope\"]");
+        let j = parse(&bad).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.models.contains_key("lenet300"));
+            let l = &m.models["lenet300"];
+            assert_eq!(l.param_count, 266_610);
+            assert_eq!(l.maskable.len(), 3);
+        }
+    }
+}

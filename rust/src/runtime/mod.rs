@@ -1,0 +1,138 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! `Runtime` owns one PJRT CPU client plus a compiled-executable cache
+//! keyed by artifact file.  Compilation happens once per process per
+//! artifact; the training hot loop only calls `execute`.
+//!
+//! Thread model: PJRT wrapper types are not `Send`, so a `Runtime` is
+//! deliberately single-threaded; the trial coordinator
+//! (`pipeline::trials`) gives each worker thread its own `Runtime`.
+
+pub mod manifest;
+pub mod model;
+pub mod tensor;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{Manifest, ModelManifest, ParamSpec};
+pub use model::{EvalMetrics, ModelRunner, StepScalars};
+pub use tensor::{Tensor, TensorData};
+
+/// PJRT client + artifact registry + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default: `<repo>/artifacts`).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Resolve the repo-default artifacts directory.
+    pub fn default_dir() -> PathBuf {
+        // Prefer CARGO_MANIFEST_DIR (tests/benches), fall back to cwd.
+        std::env::var("LFSR_PRUNE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                let mani = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+                if mani.exists() {
+                    mani
+                } else {
+                    PathBuf::from("artifacts")
+                }
+            })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by file name.
+    pub fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {file}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on host tensors; returns the decomposed output
+    /// tuple (artifacts are always lowered with `return_tuple=True`).
+    pub fn execute(&self, file: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let outs = self.execute_literals(file, &lits)?;
+        outs.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Literal-level execute (used by the hot loop to avoid re-marshalling
+    /// inputs that don't change between steps, e.g. masks).
+    ///
+    /// Inputs are uploaded as self-managed `PjRtBuffer`s and run through
+    /// `execute_b`: the shim's literal-input `execute` path leaks its
+    /// temporary device buffers (~22 KB/call measured — see EXPERIMENTS.md
+    /// §Perf "leak"), while buffers we own are freed by their rust `Drop`.
+    pub fn execute_literals(&self, file: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(file)?;
+        let client = exe.client();
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|l| {
+                client
+                    .buffer_from_host_literal(None, l)
+                    .map_err(|e| anyhow!("uploading input for {file}: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&refs)
+            .map_err(|e| anyhow!("executing {file}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("downloading result of {file}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling {file}: {e:?}"))
+    }
+
+    /// Model manifest lookup with a helpful error.
+    pub fn model(&self, name: &str) -> Result<ModelManifest> {
+        self.manifest
+            .models
+            .get(name)
+            .cloned()
+            .with_context(|| format!("model {name} not in manifest (have: {:?})",
+                self.manifest.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

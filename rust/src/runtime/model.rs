@@ -1,0 +1,485 @@
+//! Model-level API over the raw runtime: parameter init, the train/eval
+//! step calls with the manifest's input ordering, and checkpointing.
+//!
+//! Input orders (must match python/compile/aot.py exactly):
+//!   train: params..., masks..., x, y, lam, lr, a_l1, a_l2, hard_on
+//!   eval : params..., masks..., x, y
+//!   fwd  : params..., masks..., x
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{ModelManifest, Runtime, Tensor, TensorData};
+use crate::data::rng::Pcg32;
+use crate::data::{Batch, Dataset, EvalBatches};
+
+/// The five scalar inputs controlling the training phase (paper Eq. 4-5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepScalars {
+    /// Regularization strength λ (0 in dense/retrain phases).
+    pub lam: f32,
+    /// SGD learning rate.
+    pub lr: f32,
+    /// L1 blend of the prune-target penalty.
+    pub a_l1: f32,
+    /// L2 blend of the prune-target penalty.
+    pub a_l2: f32,
+    /// 0 = soft phase (full forward), 1 = hard phase (masked forward +
+    /// projection, i.e. prune + retrain).
+    pub hard_on: f32,
+}
+
+impl StepScalars {
+    pub fn dense(lr: f32) -> Self {
+        StepScalars {
+            lam: 0.0,
+            lr,
+            a_l1: 0.0,
+            a_l2: 0.0,
+            hard_on: 0.0,
+        }
+    }
+
+    /// Regularization phase: λ with an L1/L2 switch (paper §2.2).
+    pub fn regularize(lam: f32, lr: f32, l1: bool) -> Self {
+        StepScalars {
+            lam,
+            lr,
+            a_l1: if l1 { 1.0 } else { 0.0 },
+            a_l2: if l1 { 0.0 } else { 1.0 },
+            hard_on: 0.0,
+        }
+    }
+
+    /// Retrain phase: pruned synapses frozen at zero (paper §2.3).
+    pub fn retrain(lr: f32) -> Self {
+        StepScalars {
+            lam: 0.0,
+            lr,
+            a_l1: 0.0,
+            a_l2: 0.0,
+            hard_on: 1.0,
+        }
+    }
+}
+
+/// Aggregated evaluation result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalMetrics {
+    pub loss: f32,
+    pub accuracy: f32,
+    pub examples: usize,
+}
+
+impl EvalMetrics {
+    /// Top-1 error in percent (the paper's reporting unit).
+    pub fn error_pct(&self) -> f32 {
+        (1.0 - self.accuracy) * 100.0
+    }
+}
+
+/// One model bound to a runtime: the coordinator's main handle.
+pub struct ModelRunner<'rt> {
+    rt: &'rt Runtime,
+    pub man: ModelManifest,
+}
+
+impl<'rt> ModelRunner<'rt> {
+    pub fn new(rt: &'rt Runtime, model: &str) -> Result<Self> {
+        Ok(ModelRunner {
+            man: rt.model(model)?,
+            rt,
+        })
+    }
+
+    /// Glorot-uniform init for `*_w`, zeros for biases — matches the
+    /// python init scheme (values differ; only the distribution matters,
+    /// training happens entirely on this side).
+    pub fn init_params(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = Pcg32::new(seed);
+        self.man
+            .params
+            .iter()
+            .map(|p| {
+                let n = p.len();
+                if p.name.ends_with("_b") || p.shape.len() == 1 {
+                    Tensor::zeros(p.shape.clone())
+                } else {
+                    let fan_in: usize = p.shape[..p.shape.len() - 1].iter().product();
+                    let fan_out = p.shape[p.shape.len() - 1];
+                    let lim = (6.0 / (fan_in + fan_out) as f32).sqrt();
+                    let data: Vec<f32> =
+                        (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * lim).collect();
+                    Tensor::f32(p.shape.clone(), data)
+                }
+            })
+            .collect()
+    }
+
+    /// Dense (all-ones) masks for every maskable layer.
+    pub fn dense_masks(&self) -> Vec<Tensor> {
+        self.man
+            .mask_shapes()
+            .into_iter()
+            .map(|s| {
+                let n = s.iter().product();
+                Tensor::f32(s, vec![1.0; n])
+            })
+            .collect()
+    }
+
+    fn artifact(&self, kind: &str) -> Result<&str> {
+        self.man
+            .artifacts
+            .get(kind)
+            .map(String::as_str)
+            .ok_or_else(|| anyhow!("model {} has no {kind} artifact", self.man.name))
+    }
+
+    fn check_shapes(&self, params: &[Tensor], masks: &[Tensor], batch: &Batch) -> Result<()> {
+        if params.len() != self.man.params.len() {
+            bail!(
+                "expected {} params, got {}",
+                self.man.params.len(),
+                params.len()
+            );
+        }
+        for (t, spec) in params.iter().zip(&self.man.params) {
+            if t.dims != spec.shape {
+                bail!("param {}: dims {:?} != {:?}", spec.name, t.dims, spec.shape);
+            }
+        }
+        let mshapes = self.man.mask_shapes();
+        if masks.len() != mshapes.len() {
+            bail!("expected {} masks, got {}", mshapes.len(), masks.len());
+        }
+        for (t, s) in masks.iter().zip(&mshapes) {
+            if &t.dims != s {
+                bail!("mask dims {:?} != {:?}", t.dims, s);
+            }
+        }
+        if batch.size != self.man.batch {
+            bail!("batch size {} != compiled {}", batch.size, self.man.batch);
+        }
+        Ok(())
+    }
+
+    /// One SGD step; returns (new_params, loss, batch accuracy).
+    pub fn train_step(
+        &self,
+        params: &[Tensor],
+        masks: &[Tensor],
+        batch: &Batch,
+        sc: StepScalars,
+    ) -> Result<(Vec<Tensor>, f32, f32)> {
+        self.check_shapes(params, masks, batch)?;
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(params.len() + masks.len() + 7);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(masks.iter().cloned());
+        inputs.push(Tensor::f32(self.man.batch_x_shape(), batch.x.clone()));
+        inputs.push(Tensor::i32(vec![self.man.batch], batch.y.clone()));
+        for v in [sc.lam, sc.lr, sc.a_l1, sc.a_l2, sc.hard_on] {
+            inputs.push(Tensor::scalar_f32(v));
+        }
+        let mut outs = self.rt.execute(self.artifact("train")?, &inputs)?;
+        if outs.len() != params.len() + 2 {
+            bail!(
+                "train step returned {} outputs, expected {}",
+                outs.len(),
+                params.len() + 2
+            );
+        }
+        let acc = outs.pop().unwrap().scalar_value();
+        let loss = outs.pop().unwrap().scalar_value();
+        Ok((outs, loss, acc))
+    }
+
+    /// Evaluate over (up to `limit` examples of) a dataset.
+    pub fn eval(
+        &self,
+        params: &[Tensor],
+        masks: &[Tensor],
+        data: &Dataset,
+        limit: Option<usize>,
+    ) -> Result<EvalMetrics> {
+        let eval_file = self.artifact("eval")?.to_string();
+        let mut total = 0usize;
+        let mut loss_sum = 0f64;
+        let mut acc_sum = 0f64;
+        let limit = limit.unwrap_or(data.n);
+        let mut head: Vec<Tensor> = Vec::with_capacity(params.len() + masks.len());
+        head.extend(params.iter().cloned());
+        head.extend(masks.iter().cloned());
+        for (batch, real) in EvalBatches::new(data, self.man.batch) {
+            if total >= limit {
+                break;
+            }
+            let mut inputs = head.clone();
+            inputs.push(Tensor::f32(self.man.batch_x_shape(), batch.x));
+            inputs.push(Tensor::i32(vec![self.man.batch], batch.y));
+            let outs = self.rt.execute(&eval_file, &inputs)?;
+            // Padded tail examples bias the mean slightly; weight by the
+            // full batch but count real examples — exact when B | n, and
+            // the experiment datasets are sized that way.
+            loss_sum += outs[0].scalar_value() as f64 * real as f64;
+            acc_sum += outs[1].scalar_value() as f64 * real as f64;
+            total += real;
+        }
+        Ok(EvalMetrics {
+            loss: (loss_sum / total as f64) as f32,
+            accuracy: (acc_sum / total as f64) as f32,
+            examples: total,
+        })
+    }
+
+    /// Run a whole training phase keeping parameters as XLA literals
+    /// between steps — the §Perf hot-loop path.
+    ///
+    /// `train_step` converts every param Tensor→Literal on upload and
+    /// Literal→Tensor on download, ~2 MB of memcpy per lenet300 step.
+    /// Since step outputs are already literals and masks/scalars don't
+    /// change within a phase, the loop below uploads params once, reuses
+    /// mask/scalar literals, and only marshals x/y per step.  Returns the
+    /// new params and the per-step losses.
+    pub fn train_phase(
+        &self,
+        params: &[Tensor],
+        masks: &[Tensor],
+        batches: &mut dyn FnMut() -> Batch,
+        steps: usize,
+        sc: StepScalars,
+        mut on_step: Option<&mut dyn FnMut(usize, f32)>,
+    ) -> Result<(Vec<Tensor>, Vec<f32>)> {
+        if steps == 0 {
+            return Ok((params.to_vec(), Vec::new()));
+        }
+        let file = self.artifact("train")?.to_string();
+        let np = params.len();
+        let mut param_lits: Vec<xla::Literal> = params
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let mask_lits: Vec<xla::Literal> = masks
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let scalar_lits: Vec<xla::Literal> = [sc.lam, sc.lr, sc.a_l1, sc.a_l2, sc.hard_on]
+            .iter()
+            .map(|&v| xla::Literal::scalar(v))
+            .collect();
+        let mut losses = Vec::with_capacity(steps);
+        for i in 0..steps {
+            let b = batches();
+            if b.size != self.man.batch {
+                bail!("batch size {} != compiled {}", b.size, self.man.batch);
+            }
+            let x = Tensor::f32(self.man.batch_x_shape(), b.x).to_literal()?;
+            let y = Tensor::i32(vec![self.man.batch], b.y).to_literal()?;
+            let mut inputs: Vec<&xla::Literal> =
+                Vec::with_capacity(np + mask_lits.len() + 7);
+            inputs.extend(param_lits.iter());
+            inputs.extend(mask_lits.iter());
+            inputs.push(&x);
+            inputs.push(&y);
+            inputs.extend(scalar_lits.iter());
+            // Self-managed buffer path (the shim's literal `execute`
+            // leaks its temp buffers — see Runtime::execute_literals).
+            let exe = self.rt.executable(&file)?;
+            let client = exe.client();
+            let bufs: Vec<xla::PjRtBuffer> = inputs
+                .iter()
+                .map(|l| {
+                    client
+                        .buffer_from_host_literal(None, l)
+                        .map_err(|e| anyhow!("upload: {e:?}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+            let result = exe
+                .execute_b::<&xla::PjRtBuffer>(&refs)
+                .map_err(|e| anyhow!("executing {file}: {e:?}"))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("downloading {file}: {e:?}"))?;
+            let mut outs = out.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            if outs.len() != np + 2 {
+                bail!("train step returned {} outputs", outs.len());
+            }
+            let acc = outs.pop().unwrap();
+            let loss_lit = outs.pop().unwrap();
+            let _ = acc;
+            let loss = loss_lit.get_first_element::<f32>()?;
+            losses.push(loss);
+            if let Some(cb) = on_step.as_deref_mut() {
+                cb(i, loss);
+            }
+            param_lits = outs; // stay in literal form — no host round-trip
+        }
+        let new_params = param_lits
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        Ok((new_params, losses))
+    }
+
+    /// Forward pass: logits for one batch.
+    pub fn forward(&self, params: &[Tensor], masks: &[Tensor], x: Vec<f32>) -> Result<Tensor> {
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(params.len() + masks.len() + 1);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(masks.iter().cloned());
+        inputs.push(Tensor::f32(self.man.batch_x_shape(), x));
+        let outs = self.rt.execute(self.artifact("fwd")?, &inputs)?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+
+    /// Indices of maskable params within the params vec.
+    pub fn maskable_indices(&self) -> Vec<usize> {
+        self.man
+            .maskable
+            .iter()
+            .map(|m| {
+                self.man
+                    .params
+                    .iter()
+                    .position(|p| &p.name == m)
+                    .expect("validated by manifest load")
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpointing (simple length-prefixed binary; no serde offline)
+// ---------------------------------------------------------------------------
+
+const CKPT_MAGIC: &[u8; 8] = b"LFSRPRN1";
+
+/// Save params to a checkpoint file.
+pub fn save_checkpoint(path: &Path, names: &[String], params: &[Tensor]) -> Result<()> {
+    assert_eq!(names.len(), params.len());
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    f.write_all(CKPT_MAGIC)?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for (name, t) in names.iter().zip(params) {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+        for &d in &t.dims {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                f.write_all(&[0u8])?;
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::I32(v) => {
+                f.write_all(&[1u8])?;
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load a checkpoint; returns (names, tensors).
+pub fn load_checkpoint(path: &Path) -> Result<(Vec<String>, Vec<Tensor>)> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != CKPT_MAGIC {
+        bail!("bad checkpoint magic");
+    }
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    let count = u32::from_le_bytes(u32b) as usize;
+    let mut names = Vec::with_capacity(count);
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        f.read_exact(&mut u32b)?;
+        let nlen = u32::from_le_bytes(u32b) as usize;
+        let mut nbuf = vec![0u8; nlen];
+        f.read_exact(&mut nbuf)?;
+        names.push(String::from_utf8(nbuf)?);
+        f.read_exact(&mut u32b)?;
+        let ndims = u32::from_le_bytes(u32b) as usize;
+        let mut dims = Vec::with_capacity(ndims);
+        let mut u64b = [0u8; 8];
+        for _ in 0..ndims {
+            f.read_exact(&mut u64b)?;
+            dims.push(u64::from_le_bytes(u64b) as usize);
+        }
+        let n: usize = dims.iter().product();
+        let mut tag = [0u8; 1];
+        f.read_exact(&mut tag)?;
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf)?;
+        let t = match tag[0] {
+            0 => Tensor::f32(
+                dims,
+                buf.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            1 => Tensor::i32(
+                dims,
+                buf.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            t => bail!("bad dtype tag {t}"),
+        };
+        tensors.push(t);
+    }
+    Ok((names, tensors))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_presets() {
+        let d = StepScalars::dense(0.1);
+        assert_eq!(d.hard_on, 0.0);
+        assert_eq!(d.lam, 0.0);
+        let r = StepScalars::regularize(2.0, 0.05, false);
+        assert_eq!((r.a_l1, r.a_l2), (0.0, 1.0));
+        let l1 = StepScalars::regularize(2.0, 0.05, true);
+        assert_eq!((l1.a_l1, l1.a_l2), (1.0, 0.0));
+        let rt = StepScalars::retrain(0.02);
+        assert_eq!(rt.hard_on, 1.0);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join("lfsr_prune_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ckpt");
+        let names = vec!["a_w".to_string(), "a_b".to_string(), "labels".to_string()];
+        let tensors = vec![
+            Tensor::f32(vec![2, 3], vec![1., -2., 3., 4., 5.5, -6.]),
+            Tensor::f32(vec![3], vec![0.1, 0.2, 0.3]),
+            Tensor::i32(vec![4], vec![1, 2, 3, 4]),
+        ];
+        save_checkpoint(&path, &names, &tensors).unwrap();
+        let (n2, t2) = load_checkpoint(&path).unwrap();
+        assert_eq!(n2, names);
+        assert_eq!(t2, tensors);
+    }
+
+    #[test]
+    fn eval_metrics_error_pct() {
+        let m = EvalMetrics {
+            loss: 1.0,
+            accuracy: 0.951,
+            examples: 1000,
+        };
+        assert!((m.error_pct() - 4.9).abs() < 1e-4);
+    }
+}

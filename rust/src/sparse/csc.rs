@@ -1,0 +1,226 @@
+//! Compressed sparse column storage with relative indexing — the Han/EIE
+//! baseline format the paper compares against (§2.4).
+//!
+//! Three vectors (paper's S, I, P):
+//!   * `values`   (S): non-zero weights, `weight_bits` each — plus the
+//!     padding zeros forced by the limited index width.
+//!   * `rel_idx`  (I): row index of each entry *relative to the previous
+//!     entry in its column*, `index_bits` (4 or 8) each.
+//!   * `col_ptr`  (P): entry offset of each column start, ⌈log2(entries)⌉
+//!     bits each.
+//!
+//! α padding (paper §2.4): "if more than 15 zeros appear before a non-zero
+//! four-bit entry, a zero is added to vectors S and I" — a gap g is emitted
+//! as ⌊g / 2^b⌋ filler entries of relative index 2^b - 1 and value 0,
+//! followed by the real entry with the remaining offset.  α = entries/nnz
+//! is the memory inflation the paper reports.
+
+use crate::mask::Mask;
+
+/// One encoded entry: (relative row offset, value). Fillers have value 0.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CscEntry {
+    pub rel: u32,
+    pub value: f32,
+    pub is_filler: bool,
+}
+
+/// CSC with relative `index_bits`-wide indices (paper's baseline storage).
+#[derive(Debug, Clone)]
+pub struct CscMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub index_bits: u32,
+    pub weight_bits: u32,
+    pub entries: Vec<CscEntry>,
+    /// Entry offset where each column starts; length cols + 1.
+    pub col_ptr: Vec<u32>,
+    /// True non-zero count (entries minus fillers).
+    pub nnz: usize,
+}
+
+impl CscMatrix {
+    /// Encode `weights ⊙ mask` (row-major weights) into the baseline format.
+    pub fn encode(
+        weights: &[f32],
+        mask: &Mask,
+        index_bits: u32,
+        weight_bits: u32,
+    ) -> CscMatrix {
+        assert!(index_bits >= 1 && index_bits <= 16);
+        assert_eq!(weights.len(), mask.rows * mask.cols);
+        let max_rel = (1u32 << index_bits) - 1;
+        let mut entries = Vec::new();
+        let mut col_ptr = Vec::with_capacity(mask.cols + 1);
+        let mut nnz = 0usize;
+        for c in 0..mask.cols {
+            col_ptr.push(entries.len() as u32);
+            let mut prev_row: i64 = -1;
+            for r in 0..mask.rows {
+                if !mask.get(r, c) {
+                    continue;
+                }
+                nnz += 1;
+                let mut gap = (r as i64 - prev_row - 1) as u32;
+                // Emit fillers while the gap exceeds the index range.
+                while gap > max_rel {
+                    entries.push(CscEntry {
+                        rel: max_rel,
+                        value: 0.0,
+                        is_filler: true,
+                    });
+                    gap -= max_rel + 1; // filler advances max_rel + 1 rows
+                }
+                entries.push(CscEntry {
+                    rel: gap,
+                    value: weights[r * mask.cols + c],
+                    is_filler: false,
+                });
+                prev_row = r as i64;
+            }
+        }
+        col_ptr.push(entries.len() as u32);
+        CscMatrix {
+            rows: mask.rows,
+            cols: mask.cols,
+            index_bits,
+            weight_bits,
+            entries,
+            col_ptr,
+            nnz,
+        }
+    }
+
+    /// Decode back to a dense row-major matrix (test oracle).
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for c in 0..self.cols {
+            let (lo, hi) = (self.col_ptr[c] as usize, self.col_ptr[c + 1] as usize);
+            let mut row: i64 = -1;
+            for e in &self.entries[lo..hi] {
+                row += e.rel as i64 + 1;
+                if !e.is_filler {
+                    out[row as usize * self.cols + c] = e.value;
+                }
+            }
+        }
+        out
+    }
+
+    /// α: stored entries / true non-zeros (≥ 1; the paper's padding ratio).
+    pub fn alpha(&self) -> f64 {
+        if self.nnz == 0 {
+            1.0
+        } else {
+            self.entries.len() as f64 / self.nnz as f64
+        }
+    }
+
+    /// Pointer entry width: ⌈log2(entries + 1)⌉ bits.
+    pub fn ptr_bits(&self) -> u32 {
+        let e = self.entries.len().max(1) as u64;
+        64 - (e + 1).leading_zeros() as u32
+    }
+
+    /// Total storage in bits: S + I + P (the paper's baseline memory).
+    pub fn total_bits(&self) -> u64 {
+        let s = self.entries.len() as u64 * self.weight_bits as u64;
+        let i = self.entries.len() as u64 * self.index_bits as u64;
+        let p = (self.cols as u64 + 1) * self.ptr_bits() as u64;
+        s + i + p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::{prs::PrsMaskConfig, prs_mask, random_mask};
+
+    fn dense_of(mask: &Mask, seed: u64) -> Vec<f32> {
+        use crate::data::rng::Pcg32;
+        let mut rng = Pcg32::new(seed);
+        let mut w: Vec<f32> = (0..mask.rows * mask.cols).map(|_| rng.next_normal()).collect();
+        mask.apply_to(&mut w);
+        w
+    }
+
+    #[test]
+    fn roundtrip_random_masks() {
+        for sp in [0.0, 0.4, 0.7, 0.95, 1.0] {
+            for bits in [4u32, 8] {
+                let m = random_mask(60, 50, sp, 5);
+                let w = dense_of(&m, 7);
+                let csc = CscMatrix::encode(&w, &m, bits, 8);
+                assert_eq!(csc.decode(), w, "sp={sp} bits={bits}");
+                assert_eq!(csc.nnz, m.nnz());
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_prs_mask() {
+        let cfg = PrsMaskConfig::auto(300, 100, 3, 7);
+        let m = prs_mask(300, 100, 0.9, cfg);
+        let w = dense_of(&m, 1);
+        let csc = CscMatrix::encode(&w, &m, 4, 8);
+        assert_eq!(csc.decode(), w);
+    }
+
+    #[test]
+    fn filler_semantics_long_gap() {
+        // Single kept entry at row 40 of a 64-row column, 4-bit indices:
+        // gaps of 40 need 2 fillers (16+16 rows) + rel 8.
+        let mut m = Mask::from_keep(64, 1, vec![0; 64]);
+        m.set(40, 0, true);
+        let mut w = vec![0.0f32; 64];
+        w[40] = 3.5;
+        let csc = CscMatrix::encode(&w, &m, 4, 8);
+        assert_eq!(csc.entries.len(), 3);
+        assert!(csc.entries[0].is_filler && csc.entries[1].is_filler);
+        assert_eq!(csc.entries[0].rel, 15);
+        // fillers advance 16 rows each: 40 = 16 + 16 + (rel 8)
+        assert_eq!(csc.entries[2].rel, 8);
+        assert_eq!(csc.decode(), w);
+        assert_eq!(csc.alpha(), 3.0);
+    }
+
+    #[test]
+    fn alpha_grows_with_sparsity_for_4bit() {
+        // At 95% sparsity mean gap ≈ 20 > 15: fillers are common for 4-bit
+        // indices but absent for 8-bit (paper's α effect, Figure 5).
+        let m = random_mask(1000, 100, 0.95, 9);
+        let w = dense_of(&m, 2);
+        let a4 = CscMatrix::encode(&w, &m, 4, 8).alpha();
+        let a8 = CscMatrix::encode(&w, &m, 8, 8).alpha();
+        assert!(a4 > 1.2, "alpha4={a4}");
+        assert!(a8 < 1.01, "alpha8={a8}");
+    }
+
+    #[test]
+    fn empty_and_full_matrices() {
+        let m0 = Mask::from_keep(10, 10, vec![0; 100]);
+        let w0 = vec![0.0f32; 100];
+        let c0 = CscMatrix::encode(&w0, &m0, 4, 8);
+        assert_eq!(c0.entries.len(), 0);
+        assert_eq!(c0.alpha(), 1.0);
+        assert_eq!(c0.decode(), w0);
+
+        let m1 = Mask::dense(10, 10);
+        let w1: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let c1 = CscMatrix::encode(&w1, &m1, 4, 8);
+        assert_eq!(c1.entries.len(), 100);
+        assert_eq!(c1.decode(), w1);
+    }
+
+    #[test]
+    fn total_bits_accounting() {
+        let m = random_mask(100, 100, 0.5, 3);
+        let w = dense_of(&m, 4);
+        let csc = CscMatrix::encode(&w, &m, 8, 8);
+        let e = csc.entries.len() as u64;
+        assert_eq!(
+            csc.total_bits(),
+            e * 8 + e * 8 + 101 * csc.ptr_bits() as u64
+        );
+    }
+}

@@ -1,0 +1,203 @@
+//! Memory-footprint models for baseline vs proposed storage — the
+//! quantities behind the paper's Figure 5 ("total required memory ... with
+//! 4 and 8 bit precision at different levels of sparsity").
+//!
+//! * Baseline (Han-style CSC): S + I + P bits, α-inflated (csc.rs).
+//! * Proposed (LFSR): non-zero values only + the two LFSR seeds; indices
+//!   are regenerated on die.  An optional *stream mode* charges for
+//!   collision slots (walk duplicates), quantifying the overhead the
+//!   paper's ideal model omits (DESIGN.md "Pair-stream masking").
+
+use super::csc::CscMatrix;
+use crate::mask::prs::{PrsMaskConfig, WalkStats};
+use crate::mask::Mask;
+
+/// Footprint (bits) of one layer in the baseline CSC format.
+#[derive(Debug, Clone, Copy)]
+pub struct BaselineFootprint {
+    pub value_bits: u64,
+    pub index_bits: u64,
+    pub ptr_bits: u64,
+    pub alpha: f64,
+}
+
+impl BaselineFootprint {
+    pub fn total(&self) -> u64 {
+        self.value_bits + self.index_bits + self.ptr_bits
+    }
+}
+
+/// Footprint (bits) of one layer in the proposed LFSR format.
+#[derive(Debug, Clone, Copy)]
+pub struct ProposedFootprint {
+    pub value_bits: u64,
+    pub seed_bits: u64,
+    /// Extra value slots charged in stream mode (0 in ideal mode).
+    pub collision_bits: u64,
+}
+
+impl ProposedFootprint {
+    pub fn total(&self) -> u64 {
+        self.value_bits + self.seed_bits + self.collision_bits
+    }
+}
+
+/// Measure the baseline footprint by actually encoding the mask.
+pub fn baseline_footprint(mask: &Mask, index_bits: u32, weight_bits: u32) -> BaselineFootprint {
+    // Values are irrelevant to the footprint; encode with zeros-kept.
+    let w: Vec<f32> = mask.keep_bytes().iter().map(|&k| k as f32).collect();
+    let csc = CscMatrix::encode(&w, mask, index_bits, weight_bits);
+    let e = csc.entries.len() as u64;
+    BaselineFootprint {
+        value_bits: e * weight_bits as u64,
+        index_bits: e * index_bits as u64,
+        ptr_bits: (mask.cols as u64 + 1) * csc.ptr_bits() as u64,
+        alpha: csc.alpha(),
+    }
+}
+
+/// Analytic baseline footprint (no mask materialization) for the paper's
+/// full-size layers: expected α for a uniform-random mask at `sparsity`.
+///
+/// For a random mask, the gap before a non-zero is geometric with
+/// p = 1 - sparsity; the expected fillers per entry is
+/// E⌊gap / 2^b⌋ ≈ sparsity^(2^b) / (1 - sparsity^(2^b)) summed — we use the
+/// closed form E[fillers] = q^m / (1 - q^m) with q = sparsity, m = 2^b,
+/// exact for the geometric gap model.
+pub fn baseline_footprint_analytic(
+    rows: usize,
+    cols: usize,
+    sparsity: f64,
+    index_bits: u32,
+    weight_bits: u32,
+) -> BaselineFootprint {
+    let size = (rows * cols) as f64;
+    let nnz = size * (1.0 - sparsity);
+    let m = (1u64 << index_bits) as f64;
+    let q = sparsity.min(0.999_999);
+    let fillers_per_entry = q.powf(m) / (1.0 - q.powf(m));
+    let entries = nnz * (1.0 + fillers_per_entry);
+    let ptr_w = (entries.max(1.0)).log2().ceil().max(1.0);
+    BaselineFootprint {
+        value_bits: (entries * weight_bits as f64) as u64,
+        index_bits: (entries * index_bits as f64) as u64,
+        ptr_bits: ((cols as f64 + 1.0) * ptr_w) as u64,
+        alpha: if nnz > 0.0 { entries / nnz } else { 1.0 },
+    }
+}
+
+/// Proposed footprint, ideal mode (paper's accounting): values + seeds.
+pub fn proposed_footprint(mask: &Mask, cfg: PrsMaskConfig, weight_bits: u32) -> ProposedFootprint {
+    ProposedFootprint {
+        value_bits: mask.nnz() as u64 * weight_bits as u64,
+        seed_bits: cfg.seed_bits(),
+        collision_bits: 0,
+    }
+}
+
+/// Proposed footprint, stream mode: every walk clock (collisions included)
+/// occupies a value slot so the engine can stream without dedup logic.
+pub fn proposed_footprint_stream(
+    stats: WalkStats,
+    cfg: PrsMaskConfig,
+    weight_bits: u32,
+) -> ProposedFootprint {
+    ProposedFootprint {
+        value_bits: stats.kept as u64 * weight_bits as u64,
+        seed_bits: cfg.seed_bits(),
+        collision_bits: (stats.total_steps - stats.kept) as u64 * weight_bits as u64,
+    }
+}
+
+/// Analytic proposed footprint for full-size layers (ideal mode).
+pub fn proposed_footprint_analytic(
+    rows: usize,
+    cols: usize,
+    sparsity: f64,
+    weight_bits: u32,
+) -> ProposedFootprint {
+    let nnz = ((rows * cols) as f64 * (1.0 - sparsity)).round() as u64;
+    let (a, b) = crate::lfsr::pick_pair_widths(rows, cols);
+    ProposedFootprint {
+        value_bits: nnz * weight_bits as u64,
+        seed_bits: (a + b) as u64,
+        collision_bits: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::prs::prs_mask_with_stats;
+    use crate::mask::random_mask;
+
+    #[test]
+    fn proposed_beats_baseline_across_sparsity() {
+        // Paper Fig. 5: 1.51×-2.94× reduction. Exercise measured masks.
+        for sp in [0.4, 0.7, 0.95] {
+            for bits in [4u32, 8] {
+                let m = random_mask(300, 784, sp, 11);
+                let base = baseline_footprint(&m, bits, 8);
+                let cfg = PrsMaskConfig::auto(300, 784, 3, 7);
+                let prop = proposed_footprint(&m, cfg, 8);
+                let ratio = base.total() as f64 / prop.total() as f64;
+                assert!(
+                    ratio > 1.4 && ratio < 3.2,
+                    "sp={sp} bits={bits}: ratio {ratio}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_matches_measured_baseline() {
+        for sp in [0.4, 0.7, 0.95] {
+            for bits in [4u32, 8] {
+                let m = random_mask(400, 500, sp, 23);
+                let meas = baseline_footprint(&m, bits, 8);
+                let ana = baseline_footprint_analytic(400, 500, sp, bits, 8);
+                let rel =
+                    (meas.total() as f64 - ana.total() as f64).abs() / meas.total() as f64;
+                assert!(rel < 0.05, "sp={sp} bits={bits}: rel err {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_effect_visible_at_95_4bit() {
+        let m = random_mask(1000, 200, 0.95, 5);
+        let b4 = baseline_footprint(&m, 4, 8);
+        let b8 = baseline_footprint(&m, 8, 8);
+        assert!(b4.alpha > 1.2);
+        assert!(b8.alpha < 1.01);
+        // Paper Table 4's 95%/4-bit anomaly: α makes 4-bit *worse* than
+        // 8-bit at extreme sparsity... per stored entry 4b saves index
+        // bits but pays α on the 8b values too.
+        let per_nnz_4 = b4.total() as f64;
+        let per_nnz_8 = b8.total() as f64;
+        // 4-bit total = α·(8+4)·nnz vs 8-bit (8+8)·nnz: α>4/3 flips it.
+        if b4.alpha > 4.0 / 3.0 {
+            assert!(per_nnz_4 > per_nnz_8);
+        }
+    }
+
+    #[test]
+    fn stream_mode_charges_collisions() {
+        let cfg = PrsMaskConfig::auto(128, 128, 9, 21);
+        let (m, stats) = prs_mask_with_stats(128, 128, 0.4, cfg);
+        let ideal = proposed_footprint(&m, cfg, 8);
+        let stream = proposed_footprint_stream(stats, cfg, 8);
+        assert!(stream.total() > ideal.total());
+        assert_eq!(
+            stream.collision_bits,
+            (stats.total_steps - stats.kept) as u64 * 8
+        );
+    }
+
+    #[test]
+    fn seeds_are_negligible() {
+        let p = proposed_footprint_analytic(8192, 2048, 0.95, 8);
+        assert!(p.seed_bits < 64);
+        assert!((p.seed_bits as f64 / p.total() as f64) < 1e-4);
+    }
+}

@@ -1,0 +1,13 @@
+//! Sparse-matrix storage substrate: the baseline's CSC-with-relative-
+//! indices format (S/I/P vectors, α padding) and the memory-footprint
+//! models for both methods (paper Figure 5).
+
+pub mod csc;
+pub mod memory;
+
+pub use csc::{CscEntry, CscMatrix};
+pub use memory::{
+    baseline_footprint, baseline_footprint_analytic, proposed_footprint,
+    proposed_footprint_analytic, proposed_footprint_stream, BaselineFootprint,
+    ProposedFootprint,
+};

@@ -1,0 +1,136 @@
+//! Micro-benchmark harness for the `cargo bench` targets.
+//!
+//! criterion is not in the offline vendor set, so this provides the slice
+//! of it the repo needs: warm-up, multiple timed samples, median/mean/p95,
+//! throughput reporting, and black_box.  Output format is one line per
+//! benchmark, stable enough to diff across runs (EXPERIMENTS.md §Perf logs
+//! are generated from it).
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Timing statistics over the collected samples (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub samples: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub min: f64,
+}
+
+/// One benchmark run: measures `f` (which should perform `items` units of
+/// work per call) until `min_time` has elapsed or `max_samples` collected.
+pub struct Bench {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub min_time: f64,
+    pub max_samples: usize,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Bench {
+            name: name.into(),
+            warmup_iters: 3,
+            min_time: 0.5,
+            max_samples: 50,
+        }
+    }
+
+    /// Quick preset for expensive end-to-end benches.
+    pub fn heavy(name: impl Into<String>) -> Self {
+        Bench {
+            name: name.into(),
+            warmup_iters: 1,
+            min_time: 0.2,
+            max_samples: 5,
+        }
+    }
+
+    /// Run and report. `items` scales the per-second throughput line
+    /// (pass 1 for latency-style benches).
+    pub fn run<T>(&self, items: u64, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.max_samples
+            && (times.len() < 3 || start.elapsed().as_secs_f64() < self.min_time)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        let stats = Stats {
+            samples: n,
+            mean: times.iter().sum::<f64>() / n as f64,
+            median: times[n / 2],
+            p95: times[((n as f64 * 0.95) as usize).min(n - 1)],
+            min: times[0],
+        };
+        let thr = items as f64 / stats.median;
+        println!(
+            "bench {:<40} median {:>12} mean {:>12} p95 {:>12} thr {:>14}/s n={}",
+            self.name,
+            fmt_time(stats.median),
+            fmt_time(stats.mean),
+            fmt_time(stats.p95),
+            fmt_si(thr),
+            n
+        );
+        stats
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+fn fmt_si(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else {
+        format!("{:.1}", v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_orders_stats() {
+        let b = Bench {
+            name: "t".into(),
+            warmup_iters: 0,
+            min_time: 0.01,
+            max_samples: 10,
+        };
+        let s = b.run(1, || std::thread::sleep(std::time::Duration::from_micros(50)));
+        assert!(s.samples >= 3);
+        assert!(s.min <= s.median && s.median <= s.p95);
+        assert!(s.median >= 40e-6);
+    }
+}

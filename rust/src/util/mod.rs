@@ -1,0 +1,13 @@
+//! Small shared utilities: JSON parsing (no serde offline), timing, and
+//! the bench micro-harness used by `cargo bench` targets (no criterion
+//! offline — see DESIGN.md §Substitutions).
+
+pub mod bench;
+pub mod json;
+
+/// Wall-clock a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}

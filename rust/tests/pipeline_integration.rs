@@ -1,0 +1,124 @@
+//! End-to-end pipeline integration: the paper's 4-stage process over the
+//! AOT artifacts, at reduced step counts (full-scale runs live in the
+//! experiment harness; see EXPERIMENTS.md).
+
+use lfsr_prune::pipeline::{
+    baseline_config, run_trial, trials, DataConfig, MaskMethod, PipelineConfig, RegType,
+};
+use lfsr_prune::runtime::Runtime;
+
+fn short_cfg() -> PipelineConfig {
+    PipelineConfig {
+        model: "lenet300".into(),
+        data: DataConfig::MnistLike,
+        method: MaskMethod::Prs { seed_base: 0xACE1 },
+        sparsity: 0.7,
+        lam: 2.0,
+        reg: RegType::L2,
+        dense_steps: 60,
+        reg_steps: 40,
+        retrain_steps: 40,
+        lr_dense: 0.1,
+        lr_reg: 0.05,
+        lr_retrain: 0.02,
+        n_train: 1024,
+        n_eval: 512,
+        trial_seed: 1,
+        eval_limit: Some(256),
+        output_layer_factor: 0.8,
+    }
+}
+
+fn have_artifacts() -> bool {
+    Runtime::default_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn prs_pipeline_end_to_end() {
+    if !have_artifacts() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new(Runtime::default_dir()).unwrap();
+    let cfg = short_cfg();
+    let mut curve: Vec<(String, f32)> = Vec::new();
+    let mut cb = |phase: &str, _i: usize, loss: f32| curve.push((phase.to_string(), loss));
+    let r = run_trial(&rt, &cfg, Some(&mut cb)).unwrap();
+
+    // Dense model learned something well above chance (10 classes).
+    assert!(r.dense.accuracy > 0.5, "dense acc {}", r.dense.accuracy);
+    // Masks hit the target sparsity exactly (output layer gets the
+    // configured relief factor).
+    for (i, m) in r.masks.iter().enumerate() {
+        let expect = if i == r.masks.len() - 1 { 0.7 * 0.8 } else { 0.7 };
+        assert!(
+            (m.sparsity() - expect).abs() < 2e-3,
+            "mask {i} sp {} expect {expect}",
+            m.sparsity()
+        );
+    }
+    // Retraining recovers accuracy relative to the raw pruned model.
+    assert!(
+        r.retrained.accuracy >= r.pruned.accuracy - 0.02,
+        "retrain {} vs pruned {}",
+        r.retrained.accuracy,
+        r.pruned.accuracy
+    );
+    // Compression accounting: lenet300 at 70% FC sparsity ≈ 3.3x.
+    let cr = r.compression_rate();
+    assert!(cr > 2.5 && cr < 4.5, "compression {cr}");
+    // Loss curve recorded for all three training phases.
+    for phase in ["dense", "regularize", "retrain"] {
+        assert!(curve.iter().any(|(p, _)| p == phase), "missing {phase}");
+    }
+}
+
+#[test]
+fn baseline_pipeline_and_trial_runner() {
+    if !have_artifacts() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    // Two jobs (PRS + magnitude baseline) across 2 workers; exercises the
+    // leader/worker coordinator with per-thread PJRT clients.
+    let mut prs = short_cfg();
+    prs.dense_steps = 40;
+    prs.reg_steps = 25;
+    prs.retrain_steps = 25;
+    let base = baseline_config(prs.clone());
+    let jobs = vec![
+        trials::TrialJob {
+            key: "prs@0.7".into(),
+            config: prs,
+        },
+        trials::TrialJob {
+            key: "magnitude@0.7".into(),
+            config: base,
+        },
+    ];
+    let outcomes = trials::run_trials(Runtime::default_dir(), jobs, 2, false);
+    assert_eq!(outcomes.len(), 2);
+    for o in &outcomes {
+        let r = o.result.as_ref().expect("trial failed");
+        assert!(r.retrained.accuracy > 0.3, "{}: {}", o.key, r.retrained.accuracy);
+    }
+    let aggs = trials::aggregate(&outcomes);
+    assert_eq!(aggs.len(), 2);
+    assert!(aggs.iter().all(|a| a.n == 1));
+}
+
+#[test]
+fn magnitude_baseline_beats_chance_after_heavy_prune() {
+    if !have_artifacts() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new(Runtime::default_dir()).unwrap();
+    let mut cfg = baseline_config(short_cfg());
+    cfg.sparsity = 0.9;
+    let r = run_trial(&rt, &cfg, None).unwrap();
+    // Magnitude pruning at 90% keeps the most useful synapses: even before
+    // retraining it should beat chance on this easy task.
+    assert!(r.pruned.accuracy > 0.2, "pruned acc {}", r.pruned.accuracy);
+    assert!(r.retrained.accuracy > 0.5, "retrained {}", r.retrained.accuracy);
+}

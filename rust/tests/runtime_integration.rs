@@ -1,0 +1,181 @@
+//! Integration: rust runtime ⇄ AOT artifacts over PJRT.
+//!
+//! Requires `make artifacts` (skipped gracefully if absent so `cargo test`
+//! stays green on a fresh clone; CI runs `make test` which builds them).
+
+use lfsr_prune::data::{synth, Batcher, SynthSpec};
+use lfsr_prune::lfsr::{GaloisLfsr, MsbMap};
+use lfsr_prune::mask::prs::{prs_mask, PrsMaskConfig};
+use lfsr_prune::runtime::{ModelRunner, Runtime, StepScalars, Tensor};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+#[test]
+fn mm_demo_matches_host_matmul() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let k = rt.manifest.kernels["mm_demo"].clone();
+    // Shapes fixed at AOT time: x (16,64), w/m (64,32).
+    let x: Vec<f32> = (0..16 * 64).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect();
+    let w: Vec<f32> = (0..64 * 32).map(|i| ((i % 7) as f32 - 3.0) * 0.2).collect();
+    let m: Vec<f32> = (0..64 * 32).map(|i| ((i * 31 % 10) >= 5) as u32 as f32).collect();
+    let outs = rt
+        .execute(
+            &k.file,
+            &[
+                Tensor::f32(vec![16, 64], x.clone()),
+                Tensor::f32(vec![64, 32], w.clone()),
+                Tensor::f32(vec![64, 32], m.clone()),
+            ],
+        )
+        .unwrap();
+    let y = outs[0].as_f32();
+    // Host reference.
+    for r in 0..16 {
+        for c in 0..32 {
+            let mut acc = 0f32;
+            for kk in 0..64 {
+                acc += x[r * 64 + kk] * w[kk * 32 + c] * m[kk * 32 + c];
+            }
+            let got = y[r * 32 + c];
+            assert!(
+                (got - acc).abs() < 1e-3,
+                "({r},{c}): kernel {got} vs host {acc}"
+            );
+        }
+    }
+}
+
+#[test]
+fn lfsr_idx_artifact_matches_rust_lfsr() {
+    // The Pallas jump-matrix kernel (python-built) and the rust Galois
+    // LFSR must derive identical index streams — this is the contract
+    // that lets the rust coordinator use seeds as the only shared state.
+    let Some(rt) = runtime_or_skip() else { return };
+    let k = rt.manifest.kernels["lfsr_idx"].clone();
+    let n = k.fields["n"] as u32;
+    let domain = k.fields["domain"] as usize;
+    let (r, c) = (8usize, 128usize);
+    let seed = 0x1D3u32;
+    let offsets: Vec<i32> = (1..=(r * c) as i32).collect();
+    let outs = rt
+        .execute(
+            &k.file,
+            &[
+                Tensor::i32(vec![r, c], offsets),
+                Tensor::i32(vec![], vec![seed as i32]),
+            ],
+        )
+        .unwrap();
+    let got = outs[0].as_i32();
+    let mut m = MsbMap::new(GaloisLfsr::new(n, seed), domain);
+    for (t, &g) in got.iter().enumerate() {
+        let expect = m.next_index();
+        assert_eq!(g as usize, expect, "offset {}", t + 1);
+    }
+}
+
+#[test]
+fn lenet300_train_reduces_loss_and_masks_freeze_weights() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let runner = ModelRunner::new(&rt, "lenet300").unwrap();
+    let mut params = runner.init_params(42);
+    let masks = runner.dense_masks();
+    let data = synth::generate(&SynthSpec::mnist_like(7), 512);
+    let mut batcher = Batcher::new(&data, runner.man.batch, 3);
+
+    // Dense: loss must drop.
+    let mut first = None;
+    let mut last = 0f32;
+    for _ in 0..30 {
+        let b = batcher.next_batch();
+        let (p, loss, _) = runner
+            .train_step(&params, &masks, &b, StepScalars::dense(0.1))
+            .unwrap();
+        params = p;
+        first.get_or_insert(loss);
+        last = loss;
+    }
+    assert!(
+        last < first.unwrap() * 0.8,
+        "loss {} -> {last}",
+        first.unwrap()
+    );
+
+    // Hard phase with PRS masks: pruned weights exactly zero after a step.
+    let midx = runner.maskable_indices();
+    let mut prs_masks = Vec::new();
+    for (i, &pi) in midx.iter().enumerate() {
+        let shape = runner.man.params[pi].shape.clone();
+        let cfg = PrsMaskConfig::auto(shape[0], shape[1], 11 + i as u32, 29 + i as u32);
+        let m = prs_mask(shape[0], shape[1], 0.7, cfg);
+        prs_masks.push(Tensor::f32(shape, m.to_f32()));
+    }
+    let b = batcher.next_batch();
+    let (new_params, _, _) = runner
+        .train_step(&params, &prs_masks, &b, StepScalars::retrain(0.05))
+        .unwrap();
+    for (mi, &pi) in midx.iter().enumerate() {
+        let w = new_params[pi].as_f32();
+        let m = prs_masks[mi].as_f32();
+        let violations = w
+            .iter()
+            .zip(m)
+            .filter(|(w, m)| **m == 0.0 && **w != 0.0)
+            .count();
+        assert_eq!(violations, 0, "param {pi} has nonzero pruned weights");
+    }
+
+    // Eval runs and returns sane numbers.
+    let metrics = runner.eval(&params, &masks, &data, Some(256)).unwrap();
+    assert!(metrics.accuracy > 0.2, "acc {}", metrics.accuracy);
+    assert!(metrics.examples == 256);
+}
+
+#[test]
+fn regularization_shrinks_prune_targets_via_artifact() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let runner = ModelRunner::new(&rt, "lenet300").unwrap();
+    let params = runner.init_params(1);
+    let midx = runner.maskable_indices();
+    let mut masks = runner.dense_masks();
+    // Mask out half of fc1 as prune targets.
+    let shape = runner.man.params[midx[0]].shape.clone();
+    let cfg = PrsMaskConfig::auto(shape[0], shape[1], 5, 13);
+    let m = prs_mask(shape[0], shape[1], 0.5, cfg);
+    masks[0] = Tensor::f32(shape, m.to_f32());
+
+    let data = synth::generate(&SynthSpec::mnist_like(2), 128);
+    let mut batcher = Batcher::new(&data, runner.man.batch, 1);
+    let b = batcher.next_batch();
+    let (new_params, _, _) = runner
+        .train_step(
+            &params,
+            &masks,
+            &b,
+            StepScalars::regularize(10.0, 0.01, false),
+        )
+        .unwrap();
+    let before = params[midx[0]].as_f32();
+    let after = new_params[midx[0]].as_f32();
+    let mbytes = masks[0].as_f32();
+    let (mut shrunk, mut targets) = (0usize, 0usize);
+    for i in 0..before.len() {
+        if mbytes[i] == 0.0 && before[i].abs() > 1e-3 {
+            targets += 1;
+            if after[i].abs() < before[i].abs() {
+                shrunk += 1;
+            }
+        }
+    }
+    assert!(
+        shrunk as f64 > 0.95 * targets as f64,
+        "only {shrunk}/{targets} prune-targets shrank"
+    );
+}
