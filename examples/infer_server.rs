@@ -1,128 +1,110 @@
-//! Batched-inference serving demo: the L3 coordinator accepting requests,
-//! batching them to the compiled batch size, executing the pruned model's
-//! forward artifact over PJRT, and reporting latency/throughput.
+//! Batched-inference server on the first-class serving subsystem
+//! (`lfsr_prune::serve`): LFSR seeds are expanded once into a packed
+//! compiled model, requests stream in from a client thread, the
+//! `Batcher` cuts fixed-size micro-batches (padding the final partial
+//! one), and an `InferenceSession` executes them over a worker pool with
+//! column-sharded masked GEMM.
 //!
-//! Requests are produced by a client thread at a configurable rate; the
-//! server thread drains a queue, pads the final partial batch, and
-//! answers with argmax labels (vLLM-router-style shape, single worker).
+//! Unlike the old demo this needs no AOT artifacts: the model is the
+//! shared synthetic 90%-sparse LeNet-300-100 (`serve::synthetic_lenet300`,
+//! same model `benches/serve.rs` tracks) whose non-zero positions are
+//! derived purely from the two per-layer LFSR seeds — the paper's
+//! serving premise end to end.
 //!
-//! Run: `cargo run --release --example infer_server [n_requests]`
+//! Run: `cargo run --release --example infer_server [n_requests] [workers]`
 
-use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::time::Instant;
 
 use lfsr_prune::data::{synth, SynthSpec};
-use lfsr_prune::mask::prs::{prs_mask, PrsMaskConfig};
-use lfsr_prune::runtime::{ModelRunner, Runtime, StepScalars, Tensor};
+use lfsr_prune::serve::{synthetic_lenet300, Batcher, InferenceSession};
 
-struct Request {
-    id: usize,
-    x: Vec<f32>,
-    sent_at: Instant,
-}
+const IN_DIM: usize = 784;
+const SPARSITY: f64 = 0.9;
+const BATCH: usize = 64;
 
-fn main() -> anyhow::Result<()> {
+fn main() {
     let n_requests: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
-        .unwrap_or(512);
-    let rt = Runtime::new(Runtime::default_dir())?;
-    let runner = ModelRunner::new(&rt, "lenet300")?;
-    let batch = runner.man.batch;
+        .unwrap_or(4096);
+    let workers: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(4, |n| n.get()));
 
-    // Prepare a pruned model: brief dense training, then PRS masks.
-    let data = synth::generate(&SynthSpec::mnist_like(3), 1024);
-    let mut params = runner.init_params(9);
-    let dense = runner.dense_masks();
-    let mut batcher = lfsr_prune::data::Batcher::new(&data, batch, 5);
-    for _ in 0..60 {
-        let b = batcher.next_batch();
-        params = runner
-            .train_step(&params, &dense, &b, StepScalars::dense(0.1))?
-            .0;
-    }
-    let midx = runner.maskable_indices();
-    let masks: Vec<Tensor> = midx
-        .iter()
-        .enumerate()
-        .map(|(i, &pi)| {
-            let s = runner.man.params[pi].shape.clone();
-            let m = prs_mask(s[0], s[1], 0.9, PrsMaskConfig::auto(s[0], s[1], 11 + i as u32, 31 + i as u32));
-            Tensor::f32(s, m.to_f32())
-        })
-        .collect();
-    // Project weights onto the masks (prune) with one hard step.
-    let b = batcher.next_batch();
-    params = runner
-        .train_step(&params, &masks, &b, StepScalars::retrain(0.0))?
-        .0;
-    println!("serving a 90%-sparse LeNet-300-100, batch size {batch}");
+    // Compile: expand each layer's two LFSR seeds into the packed
+    // serving layout (jump-table lanes parallelise the walk replay).
+    let t0 = Instant::now();
+    let model = synthetic_lenet300(SPARSITY, 4 * workers, workers);
+    println!(
+        "compiled 3 layers in {:.1} ms: {} kept weights ({:.0}% sparse), seeds are the only index state",
+        t0.elapsed().as_secs_f64() * 1e3,
+        model.nnz(),
+        SPARSITY * 100.0
+    );
+    println!("{}", model.describe());
+    let session = InferenceSession::new(model, workers);
+    println!("serving with {} worker thread(s), batch size {BATCH}", session.workers());
 
-    // Client thread: generates requests as fast as the server consumes.
-    let (tx, rx) = mpsc::channel::<Request>();
-    let feed = synth::generate(&SynthSpec::mnist_like(17), n_requests);
-    std::thread::spawn(move || {
+    // Client thread: streams requests as fast as the server consumes.
+    // Each request carries its send timestamp so channel wait counts
+    // toward the reported latency.
+    let (tx, rx) = mpsc::channel::<(u64, Vec<f32>, Instant)>();
+    let feed = synth::generate(&SynthSpec::mnist_like(17), n_requests.max(1));
+    let producer = std::thread::spawn(move || {
         let len = feed.example_len();
         for i in 0..n_requests {
-            let _ = tx.send(Request {
-                id: i,
-                x: feed.x[i * len..(i + 1) * len].to_vec(),
-                sent_at: Instant::now(),
-            });
+            let x = feed.x[i * len..(i + 1) * len].to_vec();
+            if tx.send((i as u64, x, Instant::now())).is_err() {
+                return;
+            }
         }
     });
 
-    // Server loop: drain into batches, execute, record latency.
-    let mut queue: VecDeque<Request> = VecDeque::new();
-    let mut latencies_ms: Vec<f64> = Vec::with_capacity(n_requests);
+    // Server loop: drain queue -> cut batches -> answer.
+    let mut batcher = Batcher::new(BATCH, IN_DIM);
     let mut answered = 0usize;
-    let t0 = Instant::now();
+    let mut disconnected = false;
     while answered < n_requests {
-        while let Ok(r) = rx.try_recv() {
-            queue.push_back(r);
+        while let Ok((id, x, sent_at)) = rx.try_recv() {
+            batcher.push_at(id, x, sent_at);
         }
-        if queue.is_empty() {
-            std::thread::yield_now();
-            continue;
-        }
-        let take = queue.len().min(batch);
-        let reqs: Vec<Request> = queue.drain(..take).collect();
-        // Pad to the compiled batch with the first request's payload.
-        let mut x = Vec::with_capacity(batch * 784);
-        for r in &reqs {
-            x.extend_from_slice(&r.x);
-        }
-        for _ in take..batch {
-            x.extend_from_slice(&reqs[0].x);
-        }
-        let logits = runner.forward(&params, &masks, x)?;
-        let l = logits.as_f32();
-        for (bi, r) in reqs.iter().enumerate() {
-            let row = &l[bi * 10..(bi + 1) * 10];
-            let label = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            let ms = r.sent_at.elapsed().as_secs_f64() * 1e3;
-            latencies_ms.push(ms);
-            if r.id % 128 == 0 {
-                println!("  req {:>4} -> class {label}  latency {ms:.2} ms", r.id);
+        disconnected = disconnected || producer.is_finished();
+        // Cut full batches while the queue is deep; flush partials only
+        // once the producer is done (no more arrivals to wait for).
+        let flush = disconnected && batcher.pending() > 0;
+        match batcher.next_batch(flush) {
+            None => std::thread::yield_now(),
+            Some(mb) => {
+                let classes = session.classify_batch(&mb.x, mb.batch);
+                for (row, &id) in mb.ids.iter().enumerate() {
+                    if id % 512 == 0 {
+                        println!("  req {id:>5} -> class {}", classes[row]);
+                    }
+                }
+                answered += mb.real;
+                batcher.complete(&mb);
             }
-            answered += 1;
         }
     }
-    let wall = t0.elapsed().as_secs_f64();
-    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p = |q: f64| latencies_ms[((latencies_ms.len() - 1) as f64 * q) as usize];
+    producer.join().expect("producer thread");
+
+    let s = batcher.stats();
     println!(
-        "\nserved {n_requests} requests in {wall:.2}s -> {:.0} req/s; latency p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
-        n_requests as f64 / wall,
-        p(0.5),
-        p(0.95),
-        p(0.99)
+        "\nserved {} requests in {:.2}s -> {:.0} req/s over {} batches ({} padded rows)",
+        s.requests,
+        s.wall_s,
+        s.throughput_rps(),
+        s.batches,
+        s.padded
     );
-    Ok(())
+    if let Some(lat) = s.latency {
+        println!(
+            "latency (send -> answer): median {:.2} ms  mean {:.2} ms  p95 {:.2} ms",
+            lat.median * 1e3,
+            lat.mean * 1e3,
+            lat.p95 * 1e3
+        );
+    }
 }

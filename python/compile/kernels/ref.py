@@ -3,8 +3,9 @@
 # Everything in this file is deliberately written in the most obvious way
 # possible (no tiling, no tricks): these are the ground truth the kernels
 # are tested against, and the numpy LFSR here is additionally the oracle
-# for the rust `lfsr` module (rust tests compare against vectors generated
-# from this implementation; see python/tests/test_lfsr_vectors.py).
+# for the rust `lfsr` module (rust/tests/python_parity.rs pins vectors
+# generated from this implementation; python/tests/test_pair_mask.py and
+# test_lfsr_kernel.py exercise it from the python side).
 from __future__ import annotations
 
 import jax.numpy as jnp

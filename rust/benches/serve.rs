@@ -1,0 +1,144 @@
+//! Serving-engine throughput: single- vs multi-thread batched GEMM over
+//! an LFSR-pruned LeNet-300-100, plus the one-time seed-expansion cost
+//! (serial walk vs jump-table lanes).  Starts the serving perf
+//! trajectory: results land in `BENCH_serve.json` at the repo root so
+//! successive PRs can diff them.
+
+use std::fmt::Write as _;
+
+use lfsr_prune::data::rng::Pcg32;
+use lfsr_prune::mask::prs::PrsMaskConfig;
+use lfsr_prune::serve::{parallel_keep_sequence, synthetic_lenet300, Batcher, InferenceSession};
+use lfsr_prune::util::bench::{black_box, Bench, Stats};
+
+const DIMS: [usize; 4] = [784, 300, 100, 10];
+const SPARSITY: f64 = 0.9;
+
+struct Row {
+    name: String,
+    batch: usize,
+    workers: usize,
+    items: u64,
+    stats: Stats,
+}
+
+impl Row {
+    fn throughput(&self) -> f64 {
+        self.items as f64 / self.stats.median
+    }
+}
+
+fn main() {
+    let hw_threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+    let multi = hw_threads.clamp(2, 8);
+    let mut rows: Vec<Row> = Vec::new();
+
+    // --- one-time compile: serial walk vs jump-table lanes -------------
+    // Same layer-0 config as synthetic_lenet300 (seeds 11/29).
+    let (r0, c0) = (DIMS[0], DIMS[1]);
+    let cfg0 = PrsMaskConfig::auto(r0, c0, 11, 29);
+    for lanes in [1usize, multi] {
+        let name = format!("serve/expand_784x300@90%_lanes{lanes} (kept)");
+        let kept = (r0 * c0) as u64 / 10;
+        let stats = Bench::new(name)
+            .run(kept, || black_box(parallel_keep_sequence(r0, c0, SPARSITY, cfg0, lanes)));
+        rows.push(Row {
+            name: format!("expand_lanes{lanes}"),
+            batch: 0,
+            workers: lanes,
+            items: kept,
+            stats,
+        });
+    }
+
+    // --- batched inference: single- vs multi-thread ---------------------
+    let mut rng = Pcg32::new(77);
+    for &workers in &[1usize, multi] {
+        let session = InferenceSession::new(
+            synthetic_lenet300(SPARSITY, 4 * workers, workers.max(2)),
+            workers,
+        );
+        for &batch in &[1usize, 16, 64] {
+            let x: Vec<f32> = (0..batch * DIMS[0]).map(|_| rng.next_f32()).collect();
+            let name = format!("serve/infer_lenet300@90%_b{batch}_w{workers} (examples)");
+            let stats = Bench::new(name)
+                .run(batch as u64, || black_box(session.infer_batch(&x, batch)));
+            rows.push(Row {
+                name: format!("infer_b{batch}_w{workers}"),
+                batch,
+                workers,
+                items: batch as u64,
+                stats,
+            });
+        }
+    }
+
+    // --- end-to-end queue -> batch -> answer loop ------------------------
+    let session = InferenceSession::new(synthetic_lenet300(SPARSITY, 4 * multi, multi), multi);
+    let n_requests = 2048usize;
+    let batch = 64usize;
+    let mut batcher = Batcher::new(batch, DIMS[0]);
+    let feed: Vec<f32> = (0..n_requests * DIMS[0]).map(|_| rng.next_f32()).collect();
+    for i in 0..n_requests {
+        batcher.push(i as u64, feed[i * DIMS[0]..(i + 1) * DIMS[0]].to_vec());
+    }
+    while let Some(mb) = batcher.next_batch(true) {
+        black_box(session.classify_batch(&mb.x, mb.batch));
+        batcher.complete(&mb);
+    }
+    let serve_stats = batcher.stats();
+    println!(
+        "bench serve/e2e_queue_b{batch}_w{multi}: {} req in {:.3}s -> {:.0} req/s (p95 latency {:.2} ms, {} padded rows)",
+        serve_stats.requests,
+        serve_stats.wall_s,
+        serve_stats.throughput_rps(),
+        serve_stats.latency.map_or(0.0, |l| l.p95 * 1e3),
+        serve_stats.padded,
+    );
+
+    // --- BENCH_serve.json at the repo root ------------------------------
+    let mut json = String::new();
+    json.push_str("{\n");
+    let _ = writeln!(json, "  \"bench\": \"serve\",");
+    let _ = writeln!(
+        json,
+        "  \"model\": {{\"dims\": [784, 300, 100, 10], \"sparsity\": {SPARSITY}}},"
+    );
+    let _ = writeln!(json, "  \"hw_threads\": {hw_threads},");
+    let _ = writeln!(json, "  \"results\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{}\", \"batch\": {}, \"workers\": {}, \"median_s\": {:.9}, \"mean_s\": {:.9}, \"p95_s\": {:.9}, \"throughput_per_s\": {:.1}}}{}",
+            r.name,
+            r.batch,
+            r.workers,
+            r.stats.median,
+            r.stats.mean,
+            r.stats.p95,
+            r.throughput(),
+            if i + 1 == rows.len() { "" } else { "," }
+        );
+    }
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(
+        json,
+        "  \"e2e\": {{\"requests\": {}, \"batch\": {batch}, \"workers\": {multi}, \"wall_s\": {:.6}, \"throughput_rps\": {:.1}, \"p95_latency_ms\": {:.3}, \"padded_rows\": {}}}",
+        serve_stats.requests,
+        serve_stats.wall_s,
+        serve_stats.throughput_rps(),
+        serve_stats.latency.map_or(0.0, |l| l.p95 * 1e3),
+        serve_stats.padded,
+    );
+    json.push_str("}\n");
+
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_serve.json");
+    std::fs::write(&out, &json).expect("writing BENCH_serve.json");
+    println!("wrote {}", out.display());
+
+    // Sanity: the parsed file round-trips through the repo's own parser.
+    let parsed = lfsr_prune::util::json::parse(&json).expect("valid json");
+    assert!(parsed.get("results").is_some());
+}

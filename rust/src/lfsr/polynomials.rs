@@ -7,8 +7,8 @@
 //!
 //! This table MUST stay in sync with `PRIMITIVE_TAPS` in
 //! `python/compile/kernels/ref.py` — the python oracle generates the test
-//! vectors in `rust/tests/lfsr_vectors.rs`, and the AOT `lfsr_idx` artifact
-//! is cross-checked against this table at runtime.
+//! vectors pinned in `rust/tests/python_parity.rs`, and the AOT `lfsr_idx`
+//! artifact is cross-checked against this table at runtime.
 
 /// Supported register widths (flip-flop counts).
 pub const MIN_WIDTH: u32 = 2;
@@ -55,6 +55,10 @@ pub const fn period(n: u32) -> u64 {
 
 /// Smallest supported width whose period covers at least `domain` values
 /// with headroom factor 2 (so the MSB index map stays near-uniform).
+///
+/// Panics when even `MAX_WIDTH` lacks the 2× headroom (domain > (2^24-1)/2):
+/// silently returning `MAX_WIDTH` would skew the MSB index map undetected —
+/// indices would repeat the low range ~twice as often as the high range.
 pub fn width_for_domain(domain: usize) -> u32 {
     let mut n = MIN_WIDTH;
     while n <= MAX_WIDTH {
@@ -63,7 +67,11 @@ pub fn width_for_domain(domain: usize) -> u32 {
         }
         n += 1;
     }
-    MAX_WIDTH
+    panic!(
+        "domain {domain} exceeds the {MAX_WIDTH}-bit register's 2x headroom \
+         (max supported domain: {})",
+        period(MAX_WIDTH) / 2
+    );
 }
 
 /// Pick coprime register widths for a row/col LFSR pair.
@@ -120,6 +128,20 @@ mod tests {
                 assert!(period(n - 1) < 2 * d as u64, "width not minimal for {d}");
             }
         }
+    }
+
+    #[test]
+    fn width_for_domain_accepts_up_to_max_headroom() {
+        let max_domain = (period(MAX_WIDTH) / 2) as usize;
+        assert_eq!(width_for_domain(max_domain), MAX_WIDTH);
+    }
+
+    #[test]
+    #[should_panic(expected = "2x headroom")]
+    fn width_for_domain_rejects_oversized_domain() {
+        // One past the widest register's headroom must fail loudly, not
+        // silently return a skewed map.
+        width_for_domain((period(MAX_WIDTH) / 2) as usize + 1);
     }
 
     #[test]

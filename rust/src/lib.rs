@@ -6,8 +6,10 @@
 //! Three-layer architecture (see DESIGN.md):
 //! * **L3 (this crate)** — rust coordinator: LFSR primitives, masks, data,
 //!   the training pipeline driving AOT-compiled JAX steps over PJRT, the
-//!   65nm accelerator model, and the experiment harness regenerating every
-//!   table and figure of the paper.
+//!   65nm accelerator model, the experiment harness regenerating every
+//!   table and figure of the paper, and the batched multi-threaded
+//!   serving engine (`serve`) that re-derives non-zero positions from
+//!   LFSR seeds at model load.
 //! * **L2** — `python/compile/model.py`: JAX fwd/bwd, lowered once to HLO
 //!   text artifacts (`make artifacts`).
 //! * **L1** — `python/compile/kernels/`: Pallas masked-matmul and LFSR
@@ -27,4 +29,5 @@ pub mod lfsr;
 pub mod mask;
 pub mod pipeline;
 pub mod rank;
+pub mod serve;
 pub mod sparse;

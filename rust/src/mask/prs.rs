@@ -127,7 +127,9 @@ pub fn prs_mask_with_stats(
 
 /// The kept positions in walk order — exactly the order the inference
 /// engine's index generators re-derive, and therefore the layout of the
-/// compact weight memory (`hw::lfsr_engine` consumes this).
+/// compact weight memory (`hw::lfsr_engine` consumes this; the software
+/// serving engine packs the same order via
+/// `serve::parallel_keep_sequence`, which is pinned to this walk).
 pub fn prs_keep_sequence(
     rows: usize,
     cols: usize,

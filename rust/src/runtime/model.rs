@@ -334,6 +334,38 @@ impl<'rt> ModelRunner<'rt> {
         Ok(outs.into_iter().next().unwrap())
     }
 
+    /// Forward a *partial* batch of `real` examples, zero-padding up to
+    /// the compiled batch size; returns logits trimmed to `[real, K]`.
+    /// The serving front-end (`serve::Batcher`) pads exactly this way, so
+    /// the artifact-backed and native paths agree on partial batches.
+    pub fn forward_padded(
+        &self,
+        params: &[Tensor],
+        masks: &[Tensor],
+        x: &[f32],
+        real: usize,
+    ) -> Result<Tensor> {
+        let shape = self.man.batch_x_shape();
+        let example_len: usize = shape[1..].iter().product();
+        if real == 0 || real > self.man.batch {
+            bail!("real {} outside 1..={}", real, self.man.batch);
+        }
+        if x.len() != real * example_len {
+            bail!("input length {} != {real} x {example_len}", x.len());
+        }
+        let mut full = vec![0.0f32; self.man.batch * example_len];
+        full[..x.len()].copy_from_slice(x);
+        let logits = self.forward(params, masks, full)?;
+        if real == self.man.batch {
+            return Ok(logits);
+        }
+        let k: usize = logits.dims[1..].iter().product();
+        let data = logits.as_f32()[..real * k].to_vec();
+        let mut dims = logits.dims.clone();
+        dims[0] = real;
+        Ok(Tensor::f32(dims, data))
+    }
+
     /// Indices of maskable params within the params vec.
     pub fn maskable_indices(&self) -> Vec<usize> {
         self.man

@@ -1,0 +1,245 @@
+//! Request queueing + micro-batch assembly + serving accounting.
+//!
+//! The compiled GEMM path is happiest at a fixed batch size, so the
+//! front-end queues single-example requests, cuts full batches while the
+//! queue is deep, and pads the final partial batch (padding rows are
+//! zeros; per-example independence of the GEMM means they cannot affect
+//! real rows).  Latency/throughput accounting reuses
+//! [`crate::util::bench::Stats`] so serving logs read like the repo's
+//! bench logs.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::util::bench::Stats;
+
+/// One queued inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub x: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// A cut micro-batch: `real` requests padded up to `batch` rows.
+#[derive(Debug, Clone)]
+pub struct MicroBatch {
+    /// Row-major `[batch, example_len]`; rows `real..batch` are zeros.
+    pub x: Vec<f32>,
+    /// Ids of the real rows (length `real`).
+    pub ids: Vec<u64>,
+    pub real: usize,
+    pub batch: usize,
+    enqueued: Vec<Instant>,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    /// Padding rows executed (wasted compute rows).
+    pub padded: u64,
+    /// Wall seconds from first push to last completion.
+    pub wall_s: f64,
+    /// Per-request queue+execute latency summary (None until something
+    /// completed).
+    pub latency: Option<Stats>,
+}
+
+impl ServeStats {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.requests as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Fixed-batch request batcher with latency accounting.
+#[derive(Debug)]
+pub struct Batcher {
+    batch: usize,
+    example_len: usize,
+    queue: VecDeque<Request>,
+    started: Option<Instant>,
+    last_done: Option<Instant>,
+    latencies_s: Vec<f64>,
+    completed: u64,
+    padded: u64,
+    batches: u64,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, example_len: usize) -> Batcher {
+        assert!(batch >= 1 && example_len >= 1);
+        Batcher {
+            batch,
+            example_len,
+            queue: VecDeque::new(),
+            started: None,
+            last_done: None,
+            latencies_s: Vec::new(),
+            completed: 0,
+            padded: 0,
+            batches: 0,
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Enqueue one request (its latency clock starts now).
+    pub fn push(&mut self, id: u64, x: Vec<f32>) {
+        self.push_at(id, x, Instant::now());
+    }
+
+    /// Enqueue with an explicit arrival timestamp — pass the instant the
+    /// client *sent* the request so transport/channel wait counts toward
+    /// latency; `push` alone would hide queueing upstream of the batcher.
+    pub fn push_at(&mut self, id: u64, x: Vec<f32>, enqueued: Instant) {
+        assert_eq!(x.len(), self.example_len, "request {id}: bad example length");
+        self.started.get_or_insert(enqueued);
+        self.queue.push_back(Request { id, x, enqueued });
+    }
+
+    /// Requests waiting in the queue.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Cut the next micro-batch.  Returns a full batch whenever the queue
+    /// is deep enough; with `flush` also cuts a padded partial batch from
+    /// whatever is queued.  `None` if nothing can be cut.
+    pub fn next_batch(&mut self, flush: bool) -> Option<MicroBatch> {
+        if self.queue.is_empty() || (self.queue.len() < self.batch && !flush) {
+            return None;
+        }
+        let real = self.queue.len().min(self.batch);
+        let mut x = vec![0.0f32; self.batch * self.example_len];
+        let mut ids = Vec::with_capacity(real);
+        let mut enqueued = Vec::with_capacity(real);
+        for i in 0..real {
+            let r = self.queue.pop_front().unwrap();
+            x[i * self.example_len..(i + 1) * self.example_len].copy_from_slice(&r.x);
+            ids.push(r.id);
+            enqueued.push(r.enqueued);
+        }
+        Some(MicroBatch {
+            x,
+            ids,
+            real,
+            batch: self.batch,
+            enqueued,
+        })
+    }
+
+    /// Record a micro-batch as answered: latencies for its real rows
+    /// stop now, padding is charged to the waste counter.
+    pub fn complete(&mut self, mb: &MicroBatch) {
+        let now = Instant::now();
+        for t in &mb.enqueued {
+            self.latencies_s.push(now.duration_since(*t).as_secs_f64());
+        }
+        self.completed += mb.real as u64;
+        self.padded += (mb.batch - mb.real) as u64;
+        self.batches += 1;
+        self.last_done = Some(now);
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        let wall_s = match (self.started, self.last_done) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            _ => 0.0,
+        };
+        ServeStats {
+            requests: self.completed,
+            batches: self.batches,
+            padded: self.padded,
+            wall_s,
+            latency: if self.latencies_s.is_empty() {
+                None
+            } else {
+                Some(Stats::from_samples(self.latencies_s.clone()))
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(i: u64) -> Vec<f32> {
+        vec![i as f32; 4]
+    }
+
+    #[test]
+    fn cuts_full_batches_only_until_flush() {
+        let mut b = Batcher::new(3, 4);
+        b.push(0, req(0));
+        b.push(1, req(1));
+        assert!(b.next_batch(false).is_none(), "partial cut without flush");
+        b.push(2, req(2));
+        let full = b.next_batch(false).expect("full batch");
+        assert_eq!(full.real, 3);
+        assert_eq!(full.ids, vec![0, 1, 2]);
+        assert_eq!(b.pending(), 0);
+        assert!(b.next_batch(true).is_none(), "empty queue");
+    }
+
+    #[test]
+    fn flush_pads_with_zeros() {
+        let mut b = Batcher::new(4, 4);
+        b.push(7, req(7));
+        let mb = b.next_batch(true).expect("flush cut");
+        assert_eq!(mb.real, 1);
+        assert_eq!(mb.batch, 4);
+        assert_eq!(&mb.x[..4], &[7.0; 4]);
+        assert!(mb.x[4..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn accounting_counts_requests_batches_padding() {
+        let mut b = Batcher::new(2, 4);
+        for i in 0..5 {
+            b.push(i, req(i));
+        }
+        while let Some(mb) = b.next_batch(true) {
+            b.complete(&mb);
+        }
+        let s = b.stats();
+        assert_eq!(s.requests, 5);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.padded, 1);
+        let lat = s.latency.expect("latencies recorded");
+        assert_eq!(lat.samples, 5);
+        assert!(lat.min >= 0.0 && lat.p95 >= lat.median);
+        assert!(s.wall_s >= 0.0);
+    }
+
+    #[test]
+    fn push_at_backdates_latency_to_send_time() {
+        let mut b = Batcher::new(1, 4);
+        b.push_at(0, req(0), Instant::now() - std::time::Duration::from_millis(50));
+        let mb = b.next_batch(true).unwrap();
+        b.complete(&mb);
+        let lat = b.stats().latency.unwrap();
+        assert!(lat.min >= 0.045, "backdated latency only {}", lat.min);
+    }
+
+    #[test]
+    fn preserves_fifo_order_across_batches() {
+        let mut b = Batcher::new(2, 4);
+        for i in 0..6 {
+            b.push(i, req(i));
+        }
+        let mut seen = Vec::new();
+        while let Some(mb) = b.next_batch(false) {
+            seen.extend(mb.ids.clone());
+        }
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+    }
+}

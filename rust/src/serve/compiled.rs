@@ -1,0 +1,442 @@
+//! One-time expansion of LFSR seeds into the packed serving layout.
+//!
+//! The paper's premise is that a layer's non-zero coordinates are not
+//! stored but *re-derived* from two LFSR seeds.  A software server pays
+//! that derivation once per model load: [`CompiledLayer::compile_prs`]
+//! replays the PRS walk and packs the kept weights, in walk order, into
+//! column-sharded [`PackedColumns`] ready for the batched GEMM in
+//! [`super::session`].
+//!
+//! The replay itself is parallel: the Galois step is linear over GF(2),
+//! so [`JumpTable`] (the same construction as the Pallas `lfsr_jump`
+//! kernel) seeks each lane's LFSR pair straight to its chunk's start
+//! offset in O(n·log t) — lanes derive their slice of the raw index
+//! stream independently, with no sequential LFSR bottleneck.  Only the
+//! collision-dedup scan that turns the raw stream into the kept sequence
+//! stays serial, and that is a bitset pass, not LFSR clocking.
+//! `rust/tests/serve_integration.rs` pins the parallel replay to
+//! `mask::prs::prs_keep_sequence` case by case.
+
+use crate::data::rng::Pcg32;
+use crate::lfsr::{GaloisLfsr, JumpTable};
+use crate::mask::prs::PrsMaskConfig;
+use crate::mask::{prune_target, Mask};
+use crate::sparse::PackedColumns;
+
+/// Most raw LFSR steps generated per lane per round during the replay
+/// (rounds size their chunks down to the expected walk length so small
+/// layers don't overshoot).
+const MAX_CHUNK_STEPS: u64 = 4096;
+
+/// Derive the PRS keep sequence (kept (row, col) in walk order) using
+/// `lanes` parallel index-stream generators seeked via jump tables.
+///
+/// Bit-for-bit equal to `mask::prs::prs_keep_sequence` for every input;
+/// `lanes = 1` degenerates to the serial walk.
+pub fn parallel_keep_sequence(
+    rows: usize,
+    cols: usize,
+    sparsity: f64,
+    cfg: PrsMaskConfig,
+    lanes: usize,
+) -> Vec<(usize, usize)> {
+    assert!((0.0..=1.0).contains(&sparsity));
+    let lanes = lanes.max(1);
+    let size = rows * cols;
+    let target_keep = size - prune_target(rows, cols, sparsity);
+    let mut seq = Vec::with_capacity(target_keep);
+    if target_keep == 0 {
+        return seq;
+    }
+    // 48 squarings cover any offset the walk budget can reach.
+    let jump_row = JumpTable::new(cfg.n_row, 48);
+    let jump_col = JumpTable::new(cfg.n_col, 48);
+    let budget = ((64 * target_keep).max(16 * size) + 1024) as u64;
+    // Size rounds to the expected walk length (coupon-collector partial
+    // sum, same model the hw estimator uses) so a small layer is not
+    // charged lanes × MAX_CHUNK_STEPS of overshoot — and below ~2 chunks
+    // of expected work the thread-spawn overhead cannot pay for itself,
+    // so derive serially.
+    let est = crate::hw::system::expected_walk_steps(size, target_keep).max(1.0);
+    let lanes = if est < 2.0 * MAX_CHUNK_STEPS as f64 { 1 } else { lanes };
+    let chunk = ((est * 1.25 / lanes as f64) as u64).clamp(256, MAX_CHUNK_STEPS);
+    let mut visited = vec![0u64; (size + 63) / 64];
+    let mut next_step: u64 = 0; // raw steps generated so far
+    let mut scanned: u64 = 0; // raw steps consumed by the dedup scan
+    while seq.len() < target_keep {
+        let starts: Vec<u64> = (0..lanes as u64).map(|w| next_step + w * chunk).collect();
+        let chunks: Vec<Vec<(u32, u32)>> = if lanes == 1 {
+            vec![raw_chunk(rows, cols, cfg, &jump_row, &jump_col, starts[0], chunk)]
+        } else {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = starts
+                    .iter()
+                    .map(|&start| {
+                        let (jr, jc) = (&jump_row, &jump_col);
+                        s.spawn(move || raw_chunk(rows, cols, cfg, jr, jc, start, chunk))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("replay lane")).collect()
+            })
+        };
+        next_step += lanes as u64 * chunk;
+        // Serial dedup in step order: first visit wins, exactly like the
+        // hardware walk.  The budget is charged per raw step scanned so a
+        // pathological config (non-coprime widths) panics at exactly the
+        // same step count as the serial walk.
+        'scan: for chunk in &chunks {
+            for &(r, c) in chunk {
+                assert!(
+                    scanned < budget,
+                    "LFSR replay budget exhausted ({}/{target_keep}) — widths not coprime?",
+                    seq.len()
+                );
+                scanned += 1;
+                let flat = r as usize * cols + c as usize;
+                if visited[flat >> 6] & (1u64 << (flat & 63)) == 0 {
+                    visited[flat >> 6] |= 1u64 << (flat & 63);
+                    seq.push((r as usize, c as usize));
+                    if seq.len() == target_keep {
+                        break 'scan;
+                    }
+                }
+            }
+        }
+    }
+    seq
+}
+
+/// One lane's slice of the raw (row, col) index stream: jump both LFSRs
+/// to `start` serial steps past the seed, then clock `count` steps.
+fn raw_chunk(
+    rows: usize,
+    cols: usize,
+    cfg: PrsMaskConfig,
+    jump_row: &JumpTable,
+    jump_col: &JumpTable,
+    start: u64,
+    count: u64,
+) -> Vec<(u32, u32)> {
+    let mut lr = GaloisLfsr::new(cfg.n_row, jump_row.state_at(cfg.seed_row, start));
+    let mut lc = GaloisLfsr::new(cfg.n_col, jump_col.state_at(cfg.seed_col, start));
+    (0..count)
+        .map(|_| {
+            let sr = lr.next_state() as u64;
+            let sc = lc.next_state() as u64;
+            (
+                ((sr * rows as u64) >> cfg.n_row) as u32,
+                ((sc * cols as u64) >> cfg.n_col) as u32,
+            )
+        })
+        .collect()
+}
+
+/// How a layer's keep-set was produced — reported by
+/// [`CompiledModel::describe`] (for PRS layers the config IS the entire
+/// index state the server holds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MaskKind {
+    /// The paper's method: positions derived from two LFSR seeds.
+    Prs { cfg: PrsMaskConfig, sparsity: f64 },
+    /// Any explicit mask (magnitude, random, dense).
+    Explicit,
+}
+
+/// One fully-expanded sparse FC layer: packed kept weights (column
+/// shards), bias, and activation.
+#[derive(Debug, Clone)]
+pub struct CompiledLayer {
+    pub rows: usize,
+    pub cols: usize,
+    pub kind: MaskKind,
+    /// Empty = no bias; else length `cols`, indexed by global column.
+    pub bias: Vec<f32>,
+    pub relu: bool,
+    /// Column-range shards, jointly covering `[0, cols)` in order.
+    pub shards: Vec<PackedColumns>,
+}
+
+impl CompiledLayer {
+    /// Expand a PRS-masked layer from its seeds: parallel walk replay
+    /// (`lanes` jump-table lanes), then pack into `n_shards` column
+    /// shards in walk order.
+    pub fn compile_prs(
+        weights: &[f32],
+        bias: Vec<f32>,
+        relu: bool,
+        rows: usize,
+        cols: usize,
+        sparsity: f64,
+        cfg: PrsMaskConfig,
+        n_shards: usize,
+        lanes: usize,
+    ) -> CompiledLayer {
+        let seq = parallel_keep_sequence(rows, cols, sparsity, cfg, lanes);
+        Self::from_sequence(
+            weights,
+            bias,
+            relu,
+            rows,
+            cols,
+            &seq,
+            MaskKind::Prs { cfg, sparsity },
+            n_shards,
+        )
+    }
+
+    /// Pack an explicit keep-mask (magnitude/random/dense), rows
+    /// ascending within each column.
+    pub fn from_mask(
+        weights: &[f32],
+        bias: Vec<f32>,
+        relu: bool,
+        mask: &Mask,
+        n_shards: usize,
+    ) -> CompiledLayer {
+        assert!(bias.is_empty() || bias.len() == mask.cols);
+        let shards = shard_ranges(mask.cols, n_shards)
+            .into_iter()
+            .map(|(lo, hi)| PackedColumns::from_mask(mask, lo, hi, weights))
+            .collect();
+        CompiledLayer {
+            rows: mask.rows,
+            cols: mask.cols,
+            kind: MaskKind::Explicit,
+            bias,
+            relu,
+            shards,
+        }
+    }
+
+    /// Pack a kept-position sequence (walk order preserved per column).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_sequence(
+        weights: &[f32],
+        bias: Vec<f32>,
+        relu: bool,
+        rows: usize,
+        cols: usize,
+        seq: &[(usize, usize)],
+        kind: MaskKind,
+        n_shards: usize,
+    ) -> CompiledLayer {
+        assert!(bias.is_empty() || bias.len() == cols);
+        let shards = shard_ranges(cols, n_shards)
+            .into_iter()
+            .map(|(lo, hi)| PackedColumns::from_sequence(rows, cols, lo, hi, seq, weights))
+            .collect();
+        CompiledLayer {
+            rows,
+            cols,
+            kind,
+            bias,
+            relu,
+            shards,
+        }
+    }
+
+    /// Kept entries across all shards.
+    pub fn nnz(&self) -> usize {
+        self.shards.iter().map(PackedColumns::nnz).sum()
+    }
+
+    /// Fraction of pruned synapses.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+/// The demo/bench workload: a synthetic PRS-pruned LeNet-300-100
+/// (784-300-100-10, Glorot-ish random weights, per-layer seeds
+/// `(11+i, 29+i)`).  One definition shared by `examples/infer_server.rs`
+/// and `benches/serve.rs` so the recorded perf trajectory
+/// (`BENCH_serve.json`) and the runnable demo stay the same model.
+pub fn synthetic_lenet300(sparsity: f64, n_shards: usize, lanes: usize) -> CompiledModel {
+    const DIMS: [usize; 4] = [784, 300, 100, 10];
+    let mut rng = Pcg32::new(9);
+    let layers = (0..3)
+        .map(|i| {
+            let (rows, cols) = (DIMS[i], DIMS[i + 1]);
+            let w: Vec<f32> = (0..rows * cols).map(|_| rng.next_normal() * 0.05).collect();
+            let b: Vec<f32> = (0..cols).map(|_| rng.next_normal() * 0.01).collect();
+            let cfg = PrsMaskConfig::auto(rows, cols, 11 + i as u32, 29 + i as u32);
+            CompiledLayer::compile_prs(
+                &w, b, i != 2, rows, cols, sparsity, cfg, n_shards, lanes,
+            )
+        })
+        .collect();
+    CompiledModel::new(layers)
+}
+
+/// Split `cols` into at most `n_shards` near-equal contiguous ranges.
+pub fn shard_ranges(cols: usize, n_shards: usize) -> Vec<(usize, usize)> {
+    let n = n_shards.max(1).min(cols.max(1));
+    let base = cols / n;
+    let extra = cols % n;
+    let mut out = Vec::with_capacity(n);
+    let mut lo = 0usize;
+    for i in 0..n {
+        let hi = lo + base + usize::from(i < extra);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// A whole compiled model: FC layers with matching inner dimensions.
+#[derive(Debug, Clone)]
+pub struct CompiledModel {
+    pub layers: Vec<CompiledLayer>,
+}
+
+impl CompiledModel {
+    pub fn new(layers: Vec<CompiledLayer>) -> CompiledModel {
+        assert!(!layers.is_empty(), "model needs at least one layer");
+        for pair in layers.windows(2) {
+            assert_eq!(
+                pair[0].cols, pair[1].rows,
+                "layer dims do not chain: {} -> {}",
+                pair[0].cols, pair[1].rows
+            );
+        }
+        CompiledModel { layers }
+    }
+
+    /// Input feature count.
+    pub fn in_dim(&self) -> usize {
+        self.layers[0].rows
+    }
+
+    /// Output (logit) count.
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().unwrap().cols
+    }
+
+    /// Total kept weights.
+    pub fn nnz(&self) -> usize {
+        self.layers.iter().map(CompiledLayer::nnz).sum()
+    }
+
+    /// One line per layer: dims, nnz, and how the keep-set is derived
+    /// (for PRS layers the printed seeds/widths are the server's entire
+    /// index state).
+    pub fn describe(&self) -> String {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let src = match l.kind {
+                    MaskKind::Prs { cfg, sparsity } => format!(
+                        "PRS seeds ({:#x}@{}b, {:#x}@{}b) @ {:.0}% sparsity",
+                        cfg.seed_row,
+                        cfg.n_row,
+                        cfg.seed_col,
+                        cfg.n_col,
+                        sparsity * 100.0
+                    ),
+                    MaskKind::Explicit => "explicit mask".to_string(),
+                };
+                format!(
+                    "layer {i}: {}x{} nnz {} ({} shards) <- {src}",
+                    l.rows,
+                    l.cols,
+                    l.nnz(),
+                    l.shards.len()
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::prs::prs_keep_sequence;
+
+    #[test]
+    fn shard_ranges_partition() {
+        for (cols, n) in [(10, 3), (8, 8), (5, 16), (300, 7), (1, 1)] {
+            let r = shard_ranges(cols, n);
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r.last().unwrap().1, cols);
+            for pair in r.windows(2) {
+                assert_eq!(pair[0].1, pair[1].0);
+            }
+            assert!(r.len() <= n.min(cols));
+            let widths: Vec<usize> = r.iter().map(|(lo, hi)| hi - lo).collect();
+            let (mn, mx) = (widths.iter().min().unwrap(), widths.iter().max().unwrap());
+            assert!(mx - mn <= 1, "uneven shards {widths:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_replay_matches_serial_walk() {
+        // The last case is large enough (expected walk ≈ 45k steps) that
+        // the multi-lane path actually engages rather than falling back
+        // to the serial lane.
+        for (rows, cols, sp, lanes) in [
+            (30, 20, 0.8, 1),
+            (30, 20, 0.8, 4),
+            (64, 64, 0.9, 3),
+            (100, 80, 0.5, 2),
+            (256, 256, 0.5, 4),
+        ] {
+            let cfg = PrsMaskConfig::auto(rows, cols, 17, 23);
+            let serial = prs_keep_sequence(rows, cols, sp, cfg);
+            let par = parallel_keep_sequence(rows, cols, sp, cfg, lanes);
+            assert_eq!(par, serial, "{rows}x{cols}@{sp} lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn compile_prs_hits_target_sparsity() {
+        let (rows, cols, sp) = (100, 60, 0.85);
+        let cfg = PrsMaskConfig::auto(rows, cols, 5, 11);
+        let w = vec![1.0f32; rows * cols];
+        let layer = CompiledLayer::compile_prs(&w, Vec::new(), true, rows, cols, sp, cfg, 4, 2);
+        assert!((layer.sparsity() - sp).abs() < 1e-6);
+        assert_eq!(layer.shards.len(), 4);
+    }
+
+    #[test]
+    fn describe_reports_mask_provenance() {
+        let model = synthetic_lenet300(0.9, 2, 1);
+        let d = model.describe();
+        assert_eq!(d.lines().count(), 3);
+        assert!(d.contains("PRS seeds"), "{d}");
+        assert!(d.contains("784x300"), "{d}");
+        let w = vec![0.0f32; 6 * 2];
+        let explicit = CompiledModel::new(vec![CompiledLayer::from_mask(
+            &w,
+            Vec::new(),
+            false,
+            &Mask::dense(6, 2),
+            1,
+        )]);
+        assert!(explicit.describe().contains("explicit mask"));
+    }
+
+    #[test]
+    fn model_dim_chaining_checked() {
+        let w1 = vec![0.0f32; 8 * 4];
+        let w2 = vec![0.0f32; 4 * 2];
+        let m = CompiledModel::new(vec![
+            CompiledLayer::from_mask(&w1, Vec::new(), true, &Mask::dense(8, 4), 2),
+            CompiledLayer::from_mask(&w2, Vec::new(), false, &Mask::dense(4, 2), 2),
+        ]);
+        assert_eq!(m.in_dim(), 8);
+        assert_eq!(m.out_dim(), 2);
+        assert_eq!(m.nnz(), 40);
+    }
+
+    #[test]
+    #[should_panic(expected = "chain")]
+    fn mismatched_dims_panic() {
+        let w = vec![0.0f32; 12];
+        CompiledModel::new(vec![
+            CompiledLayer::from_mask(&w, Vec::new(), true, &Mask::dense(3, 4), 1),
+            CompiledLayer::from_mask(&w, Vec::new(), true, &Mask::dense(6, 2), 1),
+        ]);
+    }
+}

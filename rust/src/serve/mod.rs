@@ -1,0 +1,36 @@
+//! Batched, multi-threaded serving of LFSR-pruned models — the paper's
+//! inference story ("non-zero weight locations derived in real time from
+//! two LFSR seeds") promoted to a first-class subsystem.
+//!
+//! Pipeline:
+//!
+//! 1. [`CompiledLayer::compile_prs`] expands each layer's
+//!    [`PrsMaskConfig`](crate::mask::prs::PrsMaskConfig) **once** at model
+//!    load: the PRS walk is replayed in parallel lanes (jump tables seek
+//!    each lane's LFSR pair to its chunk offset — no sequential LFSR
+//!    bottleneck) and the kept weights are packed, in walk order, into
+//!    column-sharded [`PackedColumns`](crate::sparse::PackedColumns).
+//! 2. [`InferenceSession`] runs the batched masked GEMM over a
+//!    [`WorkerPool`], one shard per job; shard outputs scatter into the
+//!    next activation.  Results are bitwise independent of worker/shard
+//!    count and batch composition.
+//! 3. [`Batcher`] queues requests, cuts fixed-size micro-batches, pads
+//!    the final partial batch, and accounts latency/throughput with
+//!    [`util::bench::Stats`](crate::util::bench::Stats).
+//!
+//! `examples/infer_server.rs` wires the three together into a runnable
+//! server; `benches/serve.rs` tracks single- vs multi-thread throughput
+//! in `BENCH_serve.json`.
+
+pub mod batcher;
+pub mod compiled;
+pub mod pool;
+pub mod session;
+
+pub use batcher::{Batcher, MicroBatch, Request, ServeStats};
+pub use compiled::{
+    parallel_keep_sequence, shard_ranges, synthetic_lenet300, CompiledLayer, CompiledModel,
+    MaskKind,
+};
+pub use pool::WorkerPool;
+pub use session::InferenceSession;

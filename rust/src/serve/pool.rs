@@ -1,0 +1,156 @@
+//! Shared-queue worker thread pool for the serving engine.
+//!
+//! Hand-rolled on std primitives (no rayon/crossbeam in the offline
+//! vendor set): one `Mutex<VecDeque<Job>>` + `Condvar`, N parked worker
+//! threads, shutdown-on-drop.  The pool is deliberately dumb — all
+//! scheduling intelligence (column sharding, batch assembly) lives in
+//! [`super::session`]; jobs here are opaque closures.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    /// (pending jobs, shutting_down)
+    state: Mutex<(VecDeque<Job>, bool)>,
+    cv: Condvar,
+}
+
+/// Fixed-size worker pool; dropping it drains nothing — pending jobs are
+/// abandoned, running jobs finish, threads are joined.
+pub struct WorkerPool {
+    queue: Arc<Queue>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `size` (≥ 1) worker threads.
+    pub fn new(size: usize) -> WorkerPool {
+        assert!(size >= 1, "worker pool needs at least one thread");
+        let queue = Arc::new(Queue {
+            state: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+        });
+        let handles = (0..size)
+            .map(|i| {
+                let q = Arc::clone(&queue);
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(q))
+                    .expect("spawning serve worker")
+            })
+            .collect();
+        WorkerPool { queue, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Enqueue one fire-and-forget job.
+    pub fn submit(&self, job: Job) {
+        let mut state = self.queue.state.lock().unwrap();
+        assert!(!state.1, "submit after shutdown");
+        state.0.push_back(job);
+        drop(state);
+        self.queue.cv.notify_one();
+    }
+
+    /// Run every job on the pool and return the results in submission
+    /// order; blocks the calling thread until all jobs finished.
+    pub fn run_all<T: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
+    ) -> Vec<T> {
+        let n = jobs.len();
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let tx = tx.clone();
+            self.submit(Box::new(move || {
+                // Receiver outlives all senders within this call; a send
+                // failure means the caller vanished, which cannot happen.
+                let _ = tx.send((i, job()));
+            }));
+        }
+        drop(tx);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, v) = rx.recv().expect("worker died with job in flight");
+            out[i] = Some(v);
+        }
+        out.into_iter().map(Option::unwrap).collect()
+    }
+}
+
+fn worker_loop(q: Arc<Queue>) {
+    loop {
+        let job = {
+            let mut state = q.state.lock().unwrap();
+            loop {
+                if let Some(j) = state.0.pop_front() {
+                    break j;
+                }
+                if state.1 {
+                    return;
+                }
+                state = q.cv.wait(state).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.queue.state.lock().unwrap().1 = true;
+        self.queue.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_jobs_in_submission_order_results() {
+        let pool = WorkerPool::new(4);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..64)
+            .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let got = pool.run_all(jobs);
+        let expect: Vec<usize> = (0..64).map(|i| i * i).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn submit_executes_eventually() {
+        // Single worker: strict FIFO, so the run_all flush below runs
+        // after every earlier submit has completed.
+        let pool = WorkerPool::new(1);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..32 {
+            let c = Arc::clone(&counter);
+            pool.submit(Box::new(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        let flush: Vec<Box<dyn FnOnce() + Send>> = vec![Box::new(|| ())];
+        pool.run_all(flush);
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.size(), 3);
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,199 @@
+//! Batched inference over a compiled model and a worker pool.
+//!
+//! Each layer step fans its column shards out as pool jobs: workers run
+//! [`PackedColumns::gemm_into`] on disjoint column ranges (no shared
+//! mutable state), the session scatters the shard outputs into the next
+//! activation buffer in shard order.  Because the per-(example, column)
+//! accumulation order is fixed by the packed layout, the produced floats
+//! are **bitwise identical** for any worker count, any shard count, and
+//! any batch composition — the parity tests in
+//! `rust/tests/serve_integration.rs` assert all three.
+
+use std::sync::Arc;
+
+use super::compiled::CompiledModel;
+use super::pool::WorkerPool;
+use crate::sparse::PackedColumns;
+
+/// A model bound to a worker pool, ready to serve batches.
+pub struct InferenceSession {
+    model: Arc<CompiledModel>,
+    /// `None` = run shards inline on the caller thread (true
+    /// single-threaded baseline, no pool overhead).
+    pool: Option<WorkerPool>,
+}
+
+impl InferenceSession {
+    /// `workers == 1` executes inline; `workers > 1` spawns a pool.
+    /// `workers == 0` uses the machine's available parallelism.
+    pub fn new(model: CompiledModel, workers: usize) -> InferenceSession {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        } else {
+            workers
+        };
+        InferenceSession {
+            model: Arc::new(model),
+            pool: if workers > 1 { Some(WorkerPool::new(workers)) } else { None },
+        }
+    }
+
+    /// Worker threads backing this session (1 = inline).
+    pub fn workers(&self) -> usize {
+        self.pool.as_ref().map_or(1, WorkerPool::size)
+    }
+
+    pub fn model(&self) -> &CompiledModel {
+        &self.model
+    }
+
+    /// Forward `batch` examples (`x` row-major `[batch, in_dim]`);
+    /// returns row-major `[batch, out_dim]` logits.
+    pub fn infer_batch(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        assert_eq!(x.len(), batch * self.model.in_dim(), "bad input length");
+        let mut act: Arc<Vec<f32>> = Arc::new(x.to_vec());
+        for li in 0..self.model.layers.len() {
+            let layer = &self.model.layers[li];
+            let mut out = vec![0.0f32; batch * layer.cols];
+            match &self.pool {
+                None => {
+                    for shard in &layer.shards {
+                        let mut buf = vec![0.0f32; batch * shard.width()];
+                        shard.gemm_into(&act, batch, &layer.bias, layer.relu, &mut buf);
+                        scatter(&buf, shard, batch, layer.cols, &mut out);
+                    }
+                }
+                Some(pool) => {
+                    type ShardJob = Box<dyn FnOnce() -> Vec<f32> + Send + 'static>;
+                    let jobs: Vec<ShardJob> = (0..layer.shards.len())
+                        .map(|si| {
+                            let model = Arc::clone(&self.model);
+                            let act = Arc::clone(&act);
+                            Box::new(move || {
+                                let layer = &model.layers[li];
+                                let shard = &layer.shards[si];
+                                let mut buf = vec![0.0f32; batch * shard.width()];
+                                shard.gemm_into(&act, batch, &layer.bias, layer.relu, &mut buf);
+                                buf
+                            }) as ShardJob
+                        })
+                        .collect();
+                    for (si, buf) in pool.run_all(jobs).into_iter().enumerate() {
+                        scatter(&buf, &layer.shards[si], batch, layer.cols, &mut out);
+                    }
+                }
+            }
+            act = Arc::new(out);
+        }
+        Arc::try_unwrap(act).unwrap_or_else(|a| (*a).clone())
+    }
+
+    /// Forward one example.
+    pub fn infer_one(&self, x: &[f32]) -> Vec<f32> {
+        self.infer_batch(x, 1)
+    }
+
+    /// Argmax per example — the classification answer path.
+    pub fn classify_batch(&self, x: &[f32], batch: usize) -> Vec<usize> {
+        let logits = self.infer_batch(x, batch);
+        let k = self.model.out_dim();
+        (0..batch)
+            .map(|b| {
+                let row = &logits[b * k..(b + 1) * k];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+/// Copy a shard's `[batch, width]` output into the `[batch, cols]` layer
+/// activation at the shard's column offset.
+fn scatter(buf: &[f32], shard: &PackedColumns, batch: usize, cols: usize, out: &mut [f32]) {
+    let width = shard.width();
+    for b in 0..batch {
+        out[b * cols + shard.col_start..b * cols + shard.col_end]
+            .copy_from_slice(&buf[b * width..(b + 1) * width]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::mask::prs::PrsMaskConfig;
+    use crate::serve::CompiledLayer;
+
+    fn toy_model(shards: usize) -> CompiledModel {
+        let mut rng = Pcg32::new(7);
+        let (d0, d1, d2) = (12usize, 9usize, 4usize);
+        let w1: Vec<f32> = (0..d0 * d1).map(|_| rng.next_normal()).collect();
+        let w2: Vec<f32> = (0..d1 * d2).map(|_| rng.next_normal()).collect();
+        let b1: Vec<f32> = (0..d1).map(|_| rng.next_normal()).collect();
+        let b2: Vec<f32> = (0..d2).map(|_| rng.next_normal()).collect();
+        let cfg1 = PrsMaskConfig::auto(d0, d1, 3, 5);
+        let cfg2 = PrsMaskConfig::auto(d1, d2, 7, 11);
+        CompiledModel::new(vec![
+            CompiledLayer::compile_prs(&w1, b1, true, d0, d1, 0.5, cfg1, shards, 1),
+            CompiledLayer::compile_prs(&w2, b2, false, d1, d2, 0.5, cfg2, shards, 1),
+        ])
+    }
+
+    #[test]
+    fn pooled_equals_inline_bitwise() {
+        let mut rng = Pcg32::new(1);
+        let batch = 5;
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.next_normal()).collect();
+        let inline = InferenceSession::new(toy_model(3), 1);
+        let pooled = InferenceSession::new(toy_model(3), 4);
+        assert_eq!(pooled.workers(), 4);
+        let a = inline.infer_batch(&x, batch);
+        let b = pooled.infer_batch(&x, batch);
+        assert_eq!(a.len(), batch * 4);
+        for (i, (&u, &v)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "logit {i}");
+        }
+    }
+
+    #[test]
+    fn shard_count_does_not_change_bits() {
+        let mut rng = Pcg32::new(2);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.next_normal()).collect();
+        let one = InferenceSession::new(toy_model(1), 2).infer_batch(&x, batch);
+        let many = InferenceSession::new(toy_model(9), 2).infer_batch(&x, batch);
+        for (&u, &v) in one.iter().zip(&many) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn batched_rows_equal_single_requests() {
+        let mut rng = Pcg32::new(3);
+        let batch = 6;
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.next_normal()).collect();
+        let session = InferenceSession::new(toy_model(4), 3);
+        let all = session.infer_batch(&x, batch);
+        for b in 0..batch {
+            let one = session.infer_one(&x[b * 12..(b + 1) * 12]);
+            assert_eq!(&all[b * 4..(b + 1) * 4], &one[..], "row {b}");
+        }
+    }
+
+    #[test]
+    fn classify_matches_argmax() {
+        let mut rng = Pcg32::new(4);
+        let x: Vec<f32> = (0..2 * 12).map(|_| rng.next_normal()).collect();
+        let session = InferenceSession::new(toy_model(2), 1);
+        let logits = session.infer_batch(&x, 2);
+        let classes = session.classify_batch(&x, 2);
+        for b in 0..2 {
+            let row = &logits[b * 4..(b + 1) * 4];
+            let best = (0..4).max_by(|&i, &j| row[i].partial_cmp(&row[j]).unwrap()).unwrap();
+            assert_eq!(classes[b], best);
+        }
+    }
+}

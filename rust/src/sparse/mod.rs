@@ -1,11 +1,14 @@
 //! Sparse-matrix storage substrate: the baseline's CSC-with-relative-
-//! indices format (S/I/P vectors, α padding) and the memory-footprint
-//! models for both methods (paper Figure 5).
+//! indices format (S/I/P vectors, α padding), the packed column-shard
+//! layout the serving engine executes, and the memory-footprint models
+//! for both methods (paper Figure 5).
 
 pub mod csc;
 pub mod memory;
+pub mod packed;
 
 pub use csc::{CscEntry, CscMatrix};
+pub use packed::PackedColumns;
 pub use memory::{
     baseline_footprint, baseline_footprint_analytic, proposed_footprint,
     proposed_footprint_analytic, proposed_footprint_stream, BaselineFootprint,

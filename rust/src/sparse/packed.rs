@@ -1,0 +1,282 @@
+//! Packed kept-weight storage for the serving hot path.
+//!
+//! Where [`super::csc`] models the *baseline accelerator's* S/I/P memories
+//! (relative indices, α filler entries), this is the layout the **software
+//! serving engine** (`serve::CompiledLayer`) actually executes: one column
+//! range ("shard") of a rows×cols weight matrix, holding only the kept
+//! weights, grouped per output column, each column's entries in a caller
+//! chosen order.
+//!
+//! Two orders matter:
+//! * **walk order** ([`PackedColumns::from_sequence`]) — the PRS walk
+//!   order of `mask::prs::prs_keep_sequence`, i.e. exactly the order the
+//!   paper's inference engine re-derives from the two LFSR seeds and the
+//!   order `hw::lfsr_engine` accumulates in.  Using it makes the software
+//!   engine's per-column float accumulation bit-identical to the cycle
+//!   engine's.
+//! * **row order** ([`PackedColumns::from_mask`]) — ascending row ids, for
+//!   magnitude/random masks that have no walk.
+//!
+//! Column grouping means output columns are independent: shards can be
+//! executed by different worker threads with no synchronisation, and the
+//! per-(batch, column) accumulation order — hence the exact float result —
+//! does not depend on how many workers run.
+
+use crate::mask::Mask;
+
+/// Kept weights of columns `[col_start, col_end)` of a rows×cols matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedColumns {
+    pub rows: usize,
+    pub col_start: usize,
+    pub col_end: usize,
+    /// Entry offset where each local column starts; length width + 1.
+    col_ptr: Vec<u32>,
+    /// Kept row index of each entry.
+    row_idx: Vec<u32>,
+    /// Kept weight of each entry.
+    values: Vec<f32>,
+}
+
+impl PackedColumns {
+    /// Pack from a kept-position sequence (walk order).  `seq` is the
+    /// whole matrix's kept (row, col) stream; entries outside
+    /// `[col_start, col_end)` are ignored, entries inside keep their
+    /// relative order within each column.
+    pub fn from_sequence(
+        rows: usize,
+        cols: usize,
+        col_start: usize,
+        col_end: usize,
+        seq: &[(usize, usize)],
+        weights: &[f32],
+    ) -> PackedColumns {
+        assert!(col_start <= col_end && col_end <= cols);
+        assert_eq!(weights.len(), rows * cols);
+        let width = col_end - col_start;
+        // Counting sort by column: one pass for sizes, one for placement,
+        // preserving walk order within each column.
+        let mut counts = vec![0u32; width];
+        for &(r, c) in seq {
+            debug_assert!(r < rows && c < cols);
+            if (col_start..col_end).contains(&c) {
+                counts[c - col_start] += 1;
+            }
+        }
+        let mut col_ptr = vec![0u32; width + 1];
+        for i in 0..width {
+            col_ptr[i + 1] = col_ptr[i] + counts[i];
+        }
+        let total = col_ptr[width] as usize;
+        let mut row_idx = vec![0u32; total];
+        let mut values = vec![0.0f32; total];
+        let mut cursor = col_ptr[..width].to_vec();
+        for &(r, c) in seq {
+            if !(col_start..col_end).contains(&c) {
+                continue;
+            }
+            let slot = cursor[c - col_start] as usize;
+            cursor[c - col_start] += 1;
+            row_idx[slot] = r as u32;
+            values[slot] = weights[r * cols + c];
+        }
+        PackedColumns {
+            rows,
+            col_start,
+            col_end,
+            col_ptr,
+            row_idx,
+            values,
+        }
+    }
+
+    /// Pack from a dense keep-mask, rows ascending within each column.
+    pub fn from_mask(
+        mask: &Mask,
+        col_start: usize,
+        col_end: usize,
+        weights: &[f32],
+    ) -> PackedColumns {
+        assert!(col_start <= col_end && col_end <= mask.cols);
+        assert_eq!(weights.len(), mask.rows * mask.cols);
+        let width = col_end - col_start;
+        let mut col_ptr = Vec::with_capacity(width + 1);
+        let mut row_idx = Vec::new();
+        let mut values = Vec::new();
+        col_ptr.push(0u32);
+        for c in col_start..col_end {
+            for r in 0..mask.rows {
+                if mask.get(r, c) {
+                    row_idx.push(r as u32);
+                    values.push(weights[r * mask.cols + c]);
+                }
+            }
+            col_ptr.push(row_idx.len() as u32);
+        }
+        PackedColumns {
+            rows: mask.rows,
+            col_start,
+            col_end,
+            col_ptr,
+            row_idx,
+            values,
+        }
+    }
+
+    /// Number of columns covered.
+    pub fn width(&self) -> usize {
+        self.col_end - self.col_start
+    }
+
+    /// Kept entries stored.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// (row, value) entries of one local column, in stored order.
+    pub fn column(&self, local: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let (lo, hi) = (self.col_ptr[local] as usize, self.col_ptr[local + 1] as usize);
+        self.row_idx[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(|(&r, &v)| (r as usize, v))
+    }
+
+    /// Batched masked GEMM over this shard's columns.
+    ///
+    /// `x` is row-major `[batch, rows]`; `out` is row-major
+    /// `[batch, width]` and is fully overwritten.  `bias` is indexed by
+    /// *global* column id (empty slice = no bias).  Accumulation per
+    /// (batch row, column) follows stored entry order, so results are
+    /// bitwise independent of sharding and batch composition.
+    pub fn gemm_into(
+        &self,
+        x: &[f32],
+        batch: usize,
+        bias: &[f32],
+        relu: bool,
+        out: &mut [f32],
+    ) {
+        let width = self.width();
+        assert_eq!(x.len(), batch * self.rows);
+        assert_eq!(out.len(), batch * width);
+        assert!(bias.is_empty() || bias.len() >= self.col_end);
+        for b in 0..batch {
+            let xrow = &x[b * self.rows..(b + 1) * self.rows];
+            let orow = &mut out[b * width..(b + 1) * width];
+            for local in 0..width {
+                let (lo, hi) =
+                    (self.col_ptr[local] as usize, self.col_ptr[local + 1] as usize);
+                let mut acc = 0.0f32;
+                for e in lo..hi {
+                    acc += xrow[self.row_idx[e] as usize] * self.values[e];
+                }
+                if !bias.is_empty() {
+                    acc += bias[self.col_start + local];
+                }
+                orow[local] = if relu { acc.max(0.0) } else { acc };
+            }
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::mask::prs::{prs_keep_sequence, prs_mask, PrsMaskConfig};
+    use crate::mask::random_mask;
+
+    fn weights(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| rng.next_normal()).collect()
+    }
+
+    #[test]
+    fn from_mask_matches_dense_gemm() {
+        let (rows, cols, batch) = (40, 30, 3);
+        let mask = random_mask(rows, cols, 0.6, 9);
+        let w = weights(rows * cols, 1);
+        let x = weights(batch * rows, 2);
+        let packed = PackedColumns::from_mask(&mask, 0, cols, &w);
+        assert_eq!(packed.nnz(), mask.nnz());
+        let mut y = vec![0.0f32; batch * cols];
+        packed.gemm_into(&x, batch, &[], false, &mut y);
+        for b in 0..batch {
+            for c in 0..cols {
+                let mut acc = 0.0f32;
+                for r in 0..rows {
+                    if mask.get(r, c) {
+                        acc += x[b * rows + r] * w[r * cols + c];
+                    }
+                }
+                assert!((y[b * cols + c] - acc).abs() < 1e-4, "({b},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn from_sequence_covers_mask_in_walk_order() {
+        let (rows, cols) = (20, 16);
+        let cfg = PrsMaskConfig::auto(rows, cols, 5, 9);
+        let mask = prs_mask(rows, cols, 0.7, cfg);
+        let seq = prs_keep_sequence(rows, cols, 0.7, cfg);
+        let w = weights(rows * cols, 3);
+        let packed = PackedColumns::from_sequence(rows, cols, 0, cols, &seq, &w);
+        assert_eq!(packed.nnz(), mask.nnz());
+        // Each column's stored rows appear in walk order.
+        for c in 0..cols {
+            let expect: Vec<usize> = seq
+                .iter()
+                .filter(|&&(_, cc)| cc == c)
+                .map(|&(r, _)| r)
+                .collect();
+            let got: Vec<usize> = packed.column(c).map(|(r, _)| r).collect();
+            assert_eq!(got, expect, "column {c}");
+        }
+    }
+
+    #[test]
+    fn sharded_equals_whole() {
+        let (rows, cols, batch) = (24, 20, 2);
+        let cfg = PrsMaskConfig::auto(rows, cols, 3, 7);
+        let seq = prs_keep_sequence(rows, cols, 0.5, cfg);
+        let w = weights(rows * cols, 5);
+        let bias = weights(cols, 6);
+        let x = weights(batch * rows, 7);
+        let whole = PackedColumns::from_sequence(rows, cols, 0, cols, &seq, &w);
+        let mut y_whole = vec![0.0f32; batch * cols];
+        whole.gemm_into(&x, batch, &bias, true, &mut y_whole);
+        for split in [1usize, 7, 11] {
+            let a = PackedColumns::from_sequence(rows, cols, 0, split, &seq, &w);
+            let b = PackedColumns::from_sequence(rows, cols, split, cols, &seq, &w);
+            let mut ya = vec![0.0f32; batch * a.width()];
+            let mut yb = vec![0.0f32; batch * b.width()];
+            a.gemm_into(&x, batch, &bias, true, &mut ya);
+            b.gemm_into(&x, batch, &bias, true, &mut yb);
+            for bi in 0..batch {
+                for c in 0..cols {
+                    let got = if c < split {
+                        ya[bi * a.width() + c]
+                    } else {
+                        yb[bi * b.width() + (c - split)]
+                    };
+                    // Bitwise: same accumulation order regardless of split.
+                    assert_eq!(got.to_bits(), y_whole[bi * cols + c].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shard_is_fine() {
+        let mask = random_mask(8, 8, 0.5, 1);
+        let w = weights(64, 1);
+        let p = PackedColumns::from_mask(&mask, 4, 4, &w);
+        assert_eq!(p.width(), 0);
+        assert_eq!(p.nnz(), 0);
+        let mut out = vec![0.0f32; 0];
+        p.gemm_into(&weights(16, 2), 2, &[], false, &mut out);
+    }
+}

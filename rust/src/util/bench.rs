@@ -25,6 +25,24 @@ pub struct Stats {
     pub min: f64,
 }
 
+impl Stats {
+    /// Reduce raw samples (seconds) to summary statistics.  Shared by
+    /// [`Bench::run`] and the serving front-end's latency accounting
+    /// (`serve::batcher`). Panics on an empty sample set.
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty(), "no samples collected");
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        Stats {
+            samples: n,
+            mean: samples.iter().sum::<f64>() / n as f64,
+            median: samples[n / 2],
+            p95: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+            min: samples[0],
+        }
+    }
+}
+
 /// One benchmark run: measures `f` (which should perform `items` units of
 /// work per call) until `min_time` has elapsed or `max_samples` collected.
 pub struct Bench {
@@ -69,15 +87,8 @@ impl Bench {
             black_box(f());
             times.push(t0.elapsed().as_secs_f64());
         }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let n = times.len();
-        let stats = Stats {
-            samples: n,
-            mean: times.iter().sum::<f64>() / n as f64,
-            median: times[n / 2],
-            p95: times[((n as f64 * 0.95) as usize).min(n - 1)],
-            min: times[0],
-        };
+        let stats = Stats::from_samples(times);
+        let n = stats.samples;
         let thr = items as f64 / stats.median;
         println!(
             "bench {:<40} median {:>12} mean {:>12} p95 {:>12} thr {:>14}/s n={}",
@@ -119,6 +130,16 @@ fn fmt_si(v: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn from_samples_summary() {
+        let s = Stats::from_samples(vec![0.3, 0.1, 0.2, 0.5, 0.4]);
+        assert_eq!(s.samples, 5);
+        assert_eq!(s.min, 0.1);
+        assert_eq!(s.median, 0.3);
+        assert_eq!(s.p95, 0.5);
+        assert!((s.mean - 0.3).abs() < 1e-12);
+    }
 
     #[test]
     fn collects_samples_and_orders_stats() {

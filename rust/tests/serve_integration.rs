@@ -1,0 +1,248 @@
+//! Integration: the batched serving engine against every other way the
+//! repo computes a masked forward pass.
+//!
+//! * batched == sequential single-request execution, bit-for-bit, with
+//!   worker count > 1 and partial (padded) final batches — PRS,
+//!   magnitude, and random masks;
+//! * serve single-layer matvec == `hw::lfsr_engine` cycle engine,
+//!   bit-for-bit (same walk order ⇒ same float accumulation order);
+//! * parallel jump-table walk replay == `mask::prs::prs_keep_sequence`;
+//! * serve forward ≈ `runtime::ModelRunner::forward` through the AOT
+//!   artifacts (skipped gracefully when `make artifacts` has not run).
+
+use lfsr_prune::data::rng::Pcg32;
+use lfsr_prune::hw::{lfsr_engine, Mode, SparseLayer};
+use lfsr_prune::mask::prs::{prs_keep_sequence, prs_mask, PrsMaskConfig};
+use lfsr_prune::mask::{magnitude_mask, random_mask, Mask};
+use lfsr_prune::serve::{
+    parallel_keep_sequence, Batcher, CompiledLayer, CompiledModel, InferenceSession,
+};
+
+const D0: usize = 48;
+const D1: usize = 32;
+const D2: usize = 10;
+
+fn weights(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..n).map(|_| rng.next_normal()).collect()
+}
+
+/// Two-layer model with one mask method applied to both layers.
+fn model_for(method: &str, shards: usize) -> CompiledModel {
+    let w1 = weights(D0 * D1, 10);
+    let w2 = weights(D1 * D2, 11);
+    let b1 = weights(D1, 12);
+    let b2 = weights(D2, 13);
+    let layer = |w: &[f32], b: Vec<f32>, relu: bool, rows: usize, cols: usize, salt: u32| {
+        match method {
+            "prs" => {
+                let cfg = PrsMaskConfig::auto(rows, cols, 3 + salt, 7 + salt);
+                CompiledLayer::compile_prs(w, b, relu, rows, cols, 0.8, cfg, shards, 2)
+            }
+            "magnitude" => {
+                let m = magnitude_mask(rows, cols, w, 0.8);
+                CompiledLayer::from_mask(w, b, relu, &m, shards)
+            }
+            "random" => {
+                let m = random_mask(rows, cols, 0.8, 99 + salt as u64);
+                CompiledLayer::from_mask(w, b, relu, &m, shards)
+            }
+            other => panic!("unknown method {other}"),
+        }
+    };
+    CompiledModel::new(vec![
+        layer(&w1, b1, true, D0, D1, 0),
+        layer(&w2, b2, false, D1, D2, 1),
+    ])
+}
+
+#[test]
+fn batched_equals_sequential_all_mask_methods() {
+    let batch = 7;
+    let x = weights(batch * D0, 21);
+    for method in ["prs", "magnitude", "random"] {
+        let session = InferenceSession::new(model_for(method, 4), 4);
+        assert!(session.workers() > 1, "parity must hold under real threading");
+        let all = session.infer_batch(&x, batch);
+        assert_eq!(all.len(), batch * D2);
+        for b in 0..batch {
+            let one = session.infer_one(&x[b * D0..(b + 1) * D0]);
+            for k in 0..D2 {
+                assert_eq!(
+                    all[b * D2 + k].to_bits(),
+                    one[k].to_bits(),
+                    "{method}: row {b} logit {k}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn partial_final_batch_parity_through_batcher() {
+    // 11 requests at batch 4: three cuts, the last one padded 3+1.
+    let session = InferenceSession::new(model_for("prs", 3), 3);
+    let n = 11usize;
+    let batch = 4usize;
+    let xs = weights(n * D0, 33);
+    let mut batcher = Batcher::new(batch, D0);
+    for i in 0..n {
+        batcher.push(i as u64, xs[i * D0..(i + 1) * D0].to_vec());
+    }
+    let mut answered = vec![Vec::new(); n];
+    let mut cuts = 0;
+    while let Some(mb) = batcher.next_batch(true) {
+        let logits = session.infer_batch(&mb.x, mb.batch);
+        for (row, &id) in mb.ids.iter().enumerate() {
+            answered[id as usize] = logits[row * D2..(row + 1) * D2].to_vec();
+        }
+        batcher.complete(&mb);
+        cuts += 1;
+    }
+    assert_eq!(cuts, 3);
+    let stats = batcher.stats();
+    assert_eq!(stats.requests, n as u64);
+    assert_eq!(stats.padded, (batch - n % batch) as u64);
+    // Every request's answer equals its standalone single-request answer,
+    // padded batch included.
+    for i in 0..n {
+        let one = session.infer_one(&xs[i * D0..(i + 1) * D0]);
+        for k in 0..D2 {
+            assert_eq!(answered[i][k].to_bits(), one[k].to_bits(), "req {i} logit {k}");
+        }
+    }
+}
+
+#[test]
+fn serve_matvec_bitwise_matches_cycle_engine() {
+    // Single layer, no bias/relu, batch 1: the serving GEMM and the
+    // hw cycle engine accumulate each output column in the same walk
+    // order, so the floats must agree bit-for-bit.
+    let (rows, cols, sp) = (100, 80, 0.7);
+    let cfg = PrsMaskConfig::auto(rows, cols, 5, 11);
+    let w = weights(rows * cols, 41);
+    let x = weights(rows, 42);
+    let mask = prs_mask(rows, cols, sp, cfg);
+    let engine_out = lfsr_engine::run(
+        &SparseLayer {
+            rows,
+            cols,
+            weights: w.clone(),
+            mask,
+            input: x.clone(),
+        },
+        cfg,
+        Mode::Ideal,
+    )
+    .output;
+    let layer = CompiledLayer::compile_prs(&w, Vec::new(), false, rows, cols, sp, cfg, 5, 3);
+    let session = InferenceSession::new(CompiledModel::new(vec![layer]), 2);
+    let serve_out = session.infer_one(&x);
+    assert_eq!(serve_out.len(), engine_out.len());
+    for c in 0..cols {
+        assert_eq!(serve_out[c].to_bits(), engine_out[c].to_bits(), "col {c}");
+    }
+}
+
+#[test]
+fn parallel_walk_replay_is_pinned_to_serial_walk() {
+    // 784x300@0.9 (the demo model's first layer) has an expected walk of
+    // ~25k raw steps — enough that the jump-table lanes really run.
+    for (rows, cols, sp) in [(30, 20, 0.8), (64, 64, 0.95), (300, 100, 0.9), (784, 300, 0.9)] {
+        let cfg = PrsMaskConfig::auto(rows, cols, 17, 23);
+        let serial = prs_keep_sequence(rows, cols, sp, cfg);
+        for lanes in [1usize, 2, 5] {
+            let par = parallel_keep_sequence(rows, cols, sp, cfg, lanes);
+            assert_eq!(par, serial, "{rows}x{cols}@{sp} lanes={lanes}");
+        }
+    }
+}
+
+#[test]
+fn dense_serve_matches_host_matmul() {
+    // Dense mask sanity: serving reduces to plain x·W + b with relu.
+    let (rows, cols, batch) = (9, 6, 2);
+    let w = weights(rows * cols, 51);
+    let b = weights(cols, 52);
+    let x = weights(batch * rows, 53);
+    let layer = CompiledLayer::from_mask(&w, b.clone(), true, &Mask::dense(rows, cols), 2);
+    let session = InferenceSession::new(CompiledModel::new(vec![layer]), 2);
+    let y = session.infer_batch(&x, batch);
+    for bi in 0..batch {
+        for c in 0..cols {
+            let mut acc = 0.0f32;
+            for r in 0..rows {
+                acc += x[bi * rows + r] * w[r * cols + c];
+            }
+            acc = (acc + b[c]).max(0.0);
+            assert!((y[bi * cols + c] - acc).abs() < 1e-4, "({bi},{c})");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated parity vs the PJRT runtime (skips without `make artifacts`)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serve_matches_model_runner_forward() {
+    use lfsr_prune::runtime::{ModelRunner, Runtime, Tensor};
+
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new(dir).expect("runtime");
+    let runner = ModelRunner::new(&rt, "lenet300").expect("lenet300");
+    let params = runner.init_params(5);
+    let midx = runner.maskable_indices();
+
+    // PRS masks for the runtime, same seeds for the serve compile; each
+    // weight's bias is the matching `*_b` parameter (zeros if absent).
+    let mut masks = runner.dense_masks();
+    let mut serve_layers = Vec::new();
+    for (i, &pi) in midx.iter().enumerate() {
+        let shape = runner.man.params[pi].shape.clone();
+        let cfg = PrsMaskConfig::auto(shape[0], shape[1], 11 + i as u32, 29 + i as u32);
+        let m = prs_mask(shape[0], shape[1], 0.9, cfg);
+        masks[i] = Tensor::f32(shape.clone(), m.to_f32());
+        let w = params[pi].as_f32().to_vec();
+        let wname = &runner.man.params[pi].name;
+        let bias = runner
+            .man
+            .params
+            .iter()
+            .position(|p| p.name == wname.replace("_w", "_b"))
+            .map(|bi| params[bi].as_f32().to_vec())
+            .unwrap_or_default();
+        let last = i + 1 == midx.len();
+        serve_layers.push(CompiledLayer::compile_prs(
+            &w,
+            bias,
+            !last,
+            shape[0],
+            shape[1],
+            0.9,
+            cfg,
+            4,
+            2,
+        ));
+    }
+    let session = InferenceSession::new(CompiledModel::new(serve_layers), 3);
+
+    let batch = runner.man.batch.min(8);
+    let x = weights(batch * session.model().in_dim(), 61);
+    let native = session.infer_batch(&x, batch);
+    let xla_out = runner
+        .forward_padded(&params, &masks, &x, batch)
+        .expect("artifact forward");
+    let xla = xla_out.as_f32();
+    assert_eq!(xla.len(), native.len());
+    for (i, (&a, &b)) in native.iter().zip(xla).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3 * (1.0 + a.abs().max(b.abs())),
+            "logit {i}: native {a} vs artifact {b}"
+        );
+    }
+}

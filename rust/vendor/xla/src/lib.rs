@@ -1,0 +1,344 @@
+//! Offline shim for the `xla` PJRT bindings.
+//!
+//! The real bindings wrap a PJRT CPU plugin and are not in the offline
+//! vendor set.  This crate reproduces the exact API slice that
+//! `lfsr_prune::runtime` consumes so the workspace builds and tests
+//! everywhere:
+//!
+//! * [`Literal`] is **fully functional** (host-side construction, reshape,
+//!   download, tuples) — the tensor marshalling layer and its tests run
+//!   for real against it.
+//! * [`PjRtClient::compile`] / [`PjRtLoadedExecutable::execute_b`] return a
+//!   descriptive error: executing AOT artifacts needs the real plugin.
+//!   Everything artifact-dependent already skips gracefully when
+//!   `artifacts/manifest.json` is absent, so tier-1 stays green.
+//!
+//! Dropping in the real bindings is a one-line Cargo.toml change; no
+//! `lfsr_prune` source changes are required.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the bindings' (stringly, Debug-printable).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable in the offline xla shim; swap \
+         `xla = {{ path = \"vendor/xla\" }}` for the real PJRT bindings to \
+         run AOT artifacts"
+    ))
+}
+
+/// Element types (the artifacts only use F32/S32; the rest exist so
+/// dtype mismatches stay representable, as in the real bindings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+}
+
+/// Host dtypes a [`Literal`] can hold.
+pub trait NativeType: Copy + sealed::Sealed {
+    fn element_type() -> ElementType;
+    fn into_data(v: Vec<Self>) -> Data;
+    fn slice_of(d: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn element_type() -> ElementType {
+        ElementType::F32
+    }
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn slice_of(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn element_type() -> ElementType {
+        ElementType::S32
+    }
+    fn into_data(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn slice_of(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Literal payload (public only so `NativeType` can name it).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Array shape: dims + element type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host-side literal: a dense array (f32/i32) or a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            data: T::into_data(vec![v]),
+        }
+    }
+
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            dims: vec![v.len() as i64],
+            data: T::into_data(v.to_vec()),
+        }
+    }
+
+    /// Tuple literal (what executables return with `return_tuple=True`).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            data: Data::Tuple(elems),
+        }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(_) => 0,
+        }
+    }
+
+    /// Same data, new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            Data::F32(_) => ElementType::F32,
+            Data::I32(_) => ElementType::S32,
+            Data::Tuple(_) => return Err(Error("tuple literal has no array shape".into())),
+        };
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+            ty,
+        })
+    }
+
+    /// Download as a host vector of `T` (dtype must match).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::slice_of(&self.data)
+            .map(<[T]>::to_vec)
+            .ok_or_else(|| Error("literal dtype mismatch in to_vec".into()))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            Data::Tuple(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+
+    /// First element of a dense literal (loss/accuracy scalars).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::slice_of(&self.data)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error("empty or mismatched literal in get_first_element".into()))
+    }
+}
+
+/// Parsed HLO module. The shim cannot parse HLO text, so construction
+/// fails with a descriptive error (artifact-gated code never reaches it
+/// without `make artifacts`, which documents the real-bindings setup).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Err(unavailable(&format!(
+            "parsing HLO text ({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle. Construction succeeds so manifest-less tooling
+/// (`repro help`, mask/hw paths) works; only compile/execute are gated.
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu (offline xla shim; compile/execute disabled)".to_string()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { lit: lit.clone() })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling an XlaComputation"))
+    }
+}
+
+/// Device buffer (host-backed in the shim).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing a PjRtLoadedExecutable"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_scalar_and_vec1() {
+        let s = Literal::scalar(2.5f32);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 2.5);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+        let v = Literal::vec1(&[1i32, 2, 3]);
+        assert_eq!(v.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+        assert_eq!(v.array_shape().unwrap().ty(), ElementType::S32);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let v = Literal::vec1(&[0f32; 6]);
+        let m = v.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.array_shape().unwrap().dims(), &[2, 3]);
+        assert!(v.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_roundtrip() {
+        let t = Literal::tuple(vec![Literal::scalar(1f32), Literal::vec1(&[7i32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.array_shape().is_err());
+        assert!(Literal::scalar(0f32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn execution_paths_report_shim() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("shim"));
+        let err = client.compile(&XlaComputation).unwrap_err();
+        assert!(err.to_string().contains("offline xla shim"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+
+    #[test]
+    fn buffers_roundtrip_host_literals() {
+        let client = PjRtClient::cpu().unwrap();
+        let lit = Literal::vec1(&[1f32, 2.0]).reshape(&[2, 1]).unwrap();
+        let buf = client.buffer_from_host_literal(None, &lit).unwrap();
+        assert_eq!(buf.to_literal_sync().unwrap(), lit);
+    }
+}
