@@ -11,13 +11,20 @@
 //! derived purely from the two per-layer LFSR seeds — the paper's
 //! serving premise end to end.
 //!
-//! Run: `cargo run --release --example infer_server [n_requests] [workers]`
+//! Run: `cargo run --release --example infer_server [n_requests] [workers] [models]`
+//!
+//! With `models > 1` the server switches to multi-tenant mode: `models`
+//! differently-seeded LFSR-pruned LeNets register in a
+//! `store::ModelRegistry`, share ONE worker pool, and requests are routed
+//! round-robin by model id — each tenant's partial batches are cut by a
+//! flush deadline so low-QPS tenants are not starved.
 
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use lfsr_prune::data::{synth, SynthSpec};
 use lfsr_prune::serve::{synthetic_lenet300, Batcher, InferenceSession};
+use lfsr_prune::store::{ModelRegistry, TenantConfig};
 
 const IN_DIM: usize = 784;
 const SPARSITY: f64 = 0.9;
@@ -32,6 +39,13 @@ fn main() {
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or_else(|| std::thread::available_parallelism().map_or(4, |n| n.get()));
+    let models: usize = std::env::args()
+        .nth(3)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    if models > 1 {
+        return serve_multi_model(n_requests, workers, models);
+    }
 
     // Compile: expand each layer's two LFSR seeds into the packed
     // serving layout (jump-table lanes parallelise the walk replay).
@@ -105,6 +119,76 @@ fn main() {
             lat.median * 1e3,
             lat.mean * 1e3,
             lat.p95 * 1e3
+        );
+    }
+}
+
+/// Multi-tenant mode: N differently-seeded models, one shared pool,
+/// requests routed by model id through the registry.
+fn serve_multi_model(n_requests: usize, workers: usize, models: usize) {
+    let reg = ModelRegistry::new(workers);
+    let cfg = TenantConfig { batch: BATCH, max_wait: Some(Duration::from_millis(5)) };
+    let t0 = Instant::now();
+    let ids: Vec<String> = (0..models)
+        .map(|m| {
+            let id = format!("lenet300-s{m}");
+            let model = lfsr_prune::serve::synthetic_lenet300_seeded(
+                SPARSITY,
+                4 * workers.max(1),
+                workers.max(1),
+                11 + 40 * m as u32,
+            );
+            reg.insert(&id, model, cfg).expect("unique model id");
+            id
+        })
+        .collect();
+    println!(
+        "registered {models} models (seed bases {:?}) in {:.1} ms on {} shared worker thread(s)",
+        (0..models).map(|m| 11 + 40 * m).collect::<Vec<_>>(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        reg.workers()
+    );
+
+    // Client thread: streams requests round-robin across tenants.
+    let (tx, rx) = mpsc::channel::<(usize, u64, Vec<f32>)>();
+    let feed = synth::generate(&SynthSpec::mnist_like(17), n_requests.max(1));
+    let producer = std::thread::spawn(move || {
+        let len = feed.example_len();
+        for i in 0..n_requests {
+            let x = feed.x[i * len..(i + 1) * len].to_vec();
+            if tx.send((i % models, i as u64, x)).is_err() {
+                return;
+            }
+        }
+    });
+
+    let mut answered = 0usize;
+    while answered < n_requests {
+        while let Ok((m, id, x)) = rx.try_recv() {
+            reg.push(&ids[m], id, x).expect("routed push");
+        }
+        let flush = producer.is_finished() && reg.pending() > 0;
+        let batch = reg.drain(flush);
+        if batch.is_empty() {
+            std::thread::yield_now();
+        }
+        answered += batch.len();
+    }
+    producer.join().expect("producer thread");
+
+    println!("\nper-tenant stats ({} requests total):", n_requests);
+    for info in reg.list() {
+        let s = &info.stats;
+        let lat = s.latency.map_or(0.0, |l| l.p95 * 1e3);
+        println!(
+            "  {}: {} req / {} batches -> {:.0} req/s (p95 {:.2} ms, {} padded rows, nnz {})",
+            info.id,
+            s.requests,
+            s.batches,
+            s.throughput_rps(),
+            lat,
+            s.padded,
+            info.nnz
         );
     }
 }

@@ -9,7 +9,7 @@ use std::fmt::Write as _;
 use lfsr_prune::data::rng::Pcg32;
 use lfsr_prune::mask::prs::PrsMaskConfig;
 use lfsr_prune::serve::{parallel_keep_sequence, synthetic_lenet300, Batcher, InferenceSession};
-use lfsr_prune::util::bench::{black_box, Bench, Stats};
+use lfsr_prune::util::bench::{bench_out_path, black_box, Bench, Stats};
 
 const DIMS: [usize; 4] = [784, 300, 100, 10];
 const SPARSITY: f64 = 0.9;
@@ -132,9 +132,7 @@ fn main() {
     );
     json.push_str("}\n");
 
-    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("..")
-        .join("BENCH_serve.json");
+    let out = bench_out_path("BENCH_serve.json");
     std::fs::write(&out, &json).expect("writing BENCH_serve.json");
     println!("wrote {}", out.display());
 

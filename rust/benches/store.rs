@@ -1,0 +1,155 @@
+//! Artifact-store benches: cold-start (recompile-from-seeds vs
+//! `.lfsrpack` load, with and without walk verification) and multi-model
+//! throughput through the shared-pool registry.  Results land in
+//! `BENCH_store.json` (repo root, or `$BENCH_OUT_DIR`) so the perf
+//! trajectory is diffable across PRs alongside `BENCH_serve.json`.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use lfsr_prune::data::rng::Pcg32;
+use lfsr_prune::serve::{synthetic_lenet300, synthetic_lenet300_seeded};
+use lfsr_prune::store::{export_model, load_model, LoadOptions, ModelRegistry, TenantConfig};
+use lfsr_prune::util::bench::{bench_out_path, black_box, Bench, Stats};
+
+const SPARSITY: f64 = 0.9;
+const IN_DIM: usize = 784;
+
+struct Row {
+    name: String,
+    stats: Stats,
+}
+
+fn main() {
+    let hw_threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+    let multi = hw_threads.clamp(2, 8);
+    let shards = 4 * multi;
+    let mut rows: Vec<Row> = Vec::new();
+
+    // --- cold start: recompile-from-seeds vs artifact load ---------------
+    // Recompile = what the server had to do before the store existed:
+    // materialize dense weights, walk, gather, pack.
+    let stats = Bench::new("store/coldstart_recompile_from_seeds (models)")
+        .run(1, || black_box(synthetic_lenet300(SPARSITY, shards, multi)));
+    rows.push(Row { name: "coldstart_recompile_from_seeds".into(), stats });
+    let recompile = rows.last().unwrap().stats;
+
+    let model = synthetic_lenet300(SPARSITY, shards, multi);
+    let tmp = std::env::temp_dir().join(format!("bench_store_{}.lfsrpack", std::process::id()));
+    let report = export_model(&model, &tmp, multi).expect("export artifact");
+    println!(
+        "artifact: {} B total ({} B values, {} B bias, {} B seeds/polynomials)",
+        report.total_bytes, report.value_bytes, report.bias_bytes, report.seed_bytes
+    );
+
+    for (name, verify) in
+        [("coldstart_artifact_load", false), ("coldstart_artifact_load_verify", true)]
+    {
+        let opts = LoadOptions { n_shards: shards, lanes: multi, verify };
+        let stats = Bench::new(format!("store/{name} (models)"))
+            .run(1, || black_box(load_model(&tmp, &opts).expect("load artifact")));
+        rows.push(Row { name: name.into(), stats });
+    }
+    let load = rows[1].stats;
+    println!(
+        "bench store/coldstart_speedup: artifact load {:.2}x faster than recompile (median \
+         {:.2} ms vs {:.2} ms)",
+        recompile.median / load.median,
+        load.median * 1e3,
+        recompile.median * 1e3
+    );
+
+    // --- multi-model throughput over one shared pool ---------------------
+    // N differently-seeded tenants, round-robin traffic, 5 ms flush
+    // deadline; one shared pool of `multi` workers regardless of N.
+    let n_requests = 2048usize;
+    let mut tenant_rows: Vec<(usize, f64)> = Vec::new();
+    for models in [1usize, 2, 4] {
+        let reg = ModelRegistry::new(multi);
+        let cfg = TenantConfig {
+            batch: 64,
+            max_wait: Some(std::time::Duration::from_millis(5)),
+        };
+        let ids: Vec<String> = (0..models)
+            .map(|m| {
+                let id = format!("lenet300-s{m}");
+                let net =
+                    synthetic_lenet300_seeded(SPARSITY, shards, multi, 11 + 40 * m as u32);
+                reg.insert(&id, net, cfg).expect("unique id");
+                id
+            })
+            .collect();
+        let mut rng = Pcg32::new(77);
+        let t0 = Instant::now();
+        for i in 0..n_requests {
+            let x: Vec<f32> = (0..IN_DIM).map(|_| rng.next_f32()).collect();
+            reg.push(&ids[i % models], i as u64, x).expect("push");
+        }
+        let mut answered = 0usize;
+        while answered < n_requests {
+            answered += reg.drain(true).len();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = n_requests as f64 / wall;
+        println!(
+            "bench store/registry_m{models}_w{multi}: {n_requests} req in {wall:.3}s -> \
+             {rps:.0} req/s across {models} tenant(s)"
+        );
+        tenant_rows.push((models, rps));
+    }
+
+    // --- BENCH_store.json ------------------------------------------------
+    let mut json = String::new();
+    json.push_str("{\n");
+    let _ = writeln!(json, "  \"bench\": \"store\",");
+    let _ = writeln!(
+        json,
+        "  \"model\": {{\"dims\": [784, 300, 100, 10], \"sparsity\": {SPARSITY}}},"
+    );
+    let _ = writeln!(json, "  \"hw_threads\": {hw_threads},");
+    let _ = writeln!(
+        json,
+        "  \"artifact_bytes\": {{\"total\": {}, \"values\": {}, \"bias\": {}, \"seeds\": {}}},",
+        report.total_bytes, report.value_bytes, report.bias_bytes, report.seed_bytes
+    );
+    let _ = writeln!(json, "  \"coldstart\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{}\", \"median_s\": {:.9}, \"mean_s\": {:.9}, \"p95_s\": \
+             {:.9}}}{}",
+            r.name,
+            r.stats.median,
+            r.stats.mean,
+            r.stats.p95,
+            if i + 1 == rows.len() { "" } else { "," }
+        );
+    }
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(
+        json,
+        "  \"coldstart_speedup\": {:.3},",
+        recompile.median / load.median
+    );
+    let _ = writeln!(json, "  \"registry\": [");
+    for (i, (models, rps)) in tenant_rows.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"models\": {models}, \"workers\": {multi}, \"requests\": {n_requests}, \
+             \"throughput_rps\": {rps:.1}}}{}",
+            if i + 1 == tenant_rows.len() { "" } else { "," }
+        );
+    }
+    let _ = writeln!(json, "  ]");
+    json.push_str("}\n");
+
+    let out = bench_out_path("BENCH_store.json");
+    std::fs::write(&out, &json).expect("writing BENCH_store.json");
+    println!("wrote {}", out.display());
+    let _ = std::fs::remove_file(&tmp);
+
+    // Sanity: the file round-trips through the repo's own parser.
+    let parsed = lfsr_prune::util::json::parse(&json).expect("valid json");
+    assert!(parsed.get("coldstart").is_some());
+    assert!(parsed.get("registry").is_some());
+}

@@ -7,17 +7,23 @@
 //!   train                     — one pipeline trial with live loss output
 //!   simulate                  — cycle-engine run of one hw-model cell
 //!   experiment <name|all>     — regenerate the paper's tables/figures
+//!   export                    — write a compiled model as an .lfsrpack artifact
+//!   serve-artifact <paths..>  — load artifacts into the registry and serve
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::data::rng::Pcg32;
 use crate::experiments::{self, ExpOptions};
 use crate::hw::{self, Mode};
 use crate::lfsr::{stats, GaloisLfsr, MsbMap};
 use crate::pipeline::{self, MaskMethod, RegType};
 use crate::runtime::Runtime;
+use crate::serve::synthetic_lenet300_seeded;
+use crate::store::{self, LoadOptions, ModelRegistry, TenantConfig};
 
 /// Parsed `--flag value` / `--flag` arguments plus positionals.
 #[derive(Debug, Default)]
@@ -80,6 +86,16 @@ USAGE:
                  [--bits 4|8] [--stream] [--lanes N]
   repro experiment <table2|table3|fig3|fig4|fig4.1..4|fig5|table4|table5|all>
                  [--quick] [--trials N] [--workers N] [--out DIR]
+  repro export [--out PATH] [--sparsity S] [--shards N] [--lanes N]
+               [--seed-base B] [--verify]
+  repro serve-artifact PATH [PATH..] [--requests N] [--workers N]
+               [--batch B] [--deadline-ms D] [--shards N] [--lanes N]
+               [--verify]
+
+`export` writes the demo LFSR-pruned LeNet-300-100 as a `.lfsrpack`
+artifact (per layer: packed kept values + two LFSR seeds — no index
+storage); `serve-artifact` loads one or more artifacts into a shared
+worker-pool registry and serves synthetic traffic across them.
 
 Artifacts default to ./artifacts (or $LFSR_PRUNE_ARTIFACTS); build them
 with `make artifacts` first.";
@@ -101,6 +117,8 @@ pub fn main_with_args(argv: Vec<String>) -> Result<()> {
         "train" => cmd_train(&args),
         "simulate" => cmd_simulate(&args),
         "experiment" => cmd_experiment(&args),
+        "export" => cmd_export(&args),
+        "serve-artifact" => cmd_serve_artifact(&args),
         other => bail!("unknown command {other}\n{USAGE}"),
     }
 }
@@ -236,6 +254,104 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!(
             "  [check] layer0 baseline cycles: closed-form {} vs cycle-engine {}",
             est.counters.cycles, sim.counters.cycles
+        );
+    }
+    Ok(())
+}
+
+fn cmd_export(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.flag("out").unwrap_or("lenet300.lfsrpack"));
+    let sparsity: f64 = args.get("sparsity", 0.9)?;
+    let shards: usize = args.get("shards", 4usize)?;
+    let lanes: usize = args.get("lanes", 2usize)?;
+    let seed_base: u32 = args.get("seed-base", 11u32)?;
+    let (model, compile_s) = crate::util::time_it(|| {
+        synthetic_lenet300_seeded(sparsity, shards, lanes, seed_base)
+    });
+    println!("{}", model.describe());
+    let report = store::export_model(&model, &out, lanes)?;
+    println!(
+        "exported {} in {:.1} ms compile + write: {} B total = {} B values + {} B bias + {} B \
+         seeds/polynomials ({} layers, no per-weight index storage)",
+        out.display(),
+        compile_s * 1e3,
+        report.total_bytes,
+        report.value_bytes,
+        report.bias_bytes,
+        report.seed_bytes,
+        report.layers,
+    );
+    if args.bool_flag("verify") {
+        let v = store::verify_file(&out, lanes)?;
+        println!(
+            "verified: {} layers, {} kept weights, {} PRS walk(s) replayed bit-for-bit",
+            v.layers, v.nnz, v.prs_layers_verified
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve_artifact(args: &Args) -> Result<()> {
+    let paths: Vec<PathBuf> = args.positional[1..].iter().map(PathBuf::from).collect();
+    if paths.is_empty() {
+        bail!("serve-artifact needs at least one .lfsrpack path\n{USAGE}");
+    }
+    let workers: usize = args.get("workers", 0usize)?; // 0 = available cores
+    let batch: usize = args.get("batch", 32usize)?;
+    if batch == 0 {
+        bail!("--batch must be >= 1");
+    }
+    let requests: usize = args.get("requests", 2048usize)?;
+    let deadline_ms: u64 = args.get("deadline-ms", 5u64)?;
+    let opts = LoadOptions {
+        n_shards: args.get("shards", 4usize)?,
+        lanes: args.get("lanes", 2usize)?,
+        verify: args.bool_flag("verify"),
+    };
+    let cfg = TenantConfig { batch, max_wait: Some(Duration::from_millis(deadline_ms)) };
+    let reg = ModelRegistry::new(workers);
+    let mut ids = Vec::new();
+    for path in &paths {
+        let id = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("model")
+            .to_string();
+        let ((), load_s) = {
+            let (r, s) = crate::util::time_it(|| reg.load(&id, path, &opts, cfg));
+            (r?, s)
+        };
+        println!("loaded {id} from {} in {:.1} ms", path.display(), load_s * 1e3);
+        ids.push(id);
+    }
+    let in_dims: BTreeMap<String, usize> =
+        reg.list().into_iter().map(|m| (m.id, m.in_dim)).collect();
+    println!(
+        "serving {requests} synthetic requests round-robin over {} model(s), {} shared worker \
+         thread(s), batch {batch}, flush deadline {deadline_ms} ms",
+        ids.len(),
+        reg.workers(),
+    );
+    let mut rng = Pcg32::new(123);
+    for i in 0..requests {
+        let id = &ids[i % ids.len()];
+        let x: Vec<f32> = (0..in_dims[id]).map(|_| rng.next_f32()).collect();
+        reg.push(id, i as u64, x)?;
+    }
+    let mut answered = 0usize;
+    while answered < requests {
+        answered += reg.drain(true).len();
+    }
+    for m in reg.list() {
+        let lat = m.stats.latency.map_or(0.0, |l| l.p95 * 1e3);
+        println!(
+            "  {}: {} req over {} batches -> {:.0} req/s (p95 {:.2} ms, {} padded rows)",
+            m.id,
+            m.stats.requests,
+            m.stats.batches,
+            m.stats.throughput_rps(),
+            lat,
+            m.stats.padded
         );
     }
     Ok(())

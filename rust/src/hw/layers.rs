@@ -33,6 +33,23 @@ impl Network {
     pub fn total_weights(&self) -> usize {
         self.layers.iter().map(FcDims::size).sum()
     }
+
+    /// Bytes of packed non-zero FC values at `sparsity`, in the f32
+    /// serving precision — the value payload an `.lfsrpack` artifact
+    /// stores.  Everything else a PRS artifact adds is O(1) per layer
+    /// (seeds, widths, polynomial ids — `store::format::PRS_EXTRA_BYTES`),
+    /// which is the paper's no-index-memory claim restated as a file-size
+    /// model; `tests/store_roundtrip.rs` pins the two against each other
+    /// for modified VGG-16.
+    pub fn fc_param_bytes(&self, sparsity: f64) -> u64 {
+        self.layers
+            .iter()
+            .map(|d| {
+                let kept = d.size() - crate::mask::prune_target(d.rows, d.cols, sparsity);
+                4 * kept as u64
+            })
+            .sum()
+    }
 }
 
 /// LeNet-300-100 (784-300-100-10).
@@ -85,6 +102,19 @@ mod tests {
         // FC-dominated; our three layers alone are 22.9M).
         let v = vgg16_modified().total_weights();
         assert!(v > 22_000_000 && v < 24_000_000, "{v}");
+    }
+
+    #[test]
+    fn fc_param_bytes_scales_with_density() {
+        let net = lenet300();
+        let dense = net.fc_param_bytes(0.0);
+        assert_eq!(dense, 4 * net.total_weights() as u64);
+        let sparse = net.fc_param_bytes(0.9);
+        // 10% kept (± per-layer rounding).
+        let expect = dense / 10;
+        let slack = 4 * net.layers.len() as u64; // one entry of rounding per layer
+        assert!(sparse.abs_diff(expect) <= slack, "{sparse} vs {expect}");
+        assert_eq!(net.fc_param_bytes(1.0), 0);
     }
 
     #[test]

@@ -16,7 +16,21 @@
 //!   jump-index kernels, lowered inside the L2 HLO.
 //!
 //! Python never runs at request time: the `repro` binary is self-contained
-//! once `artifacts/` exists.
+//! once `artifacts/` exists.  Compiled models persist as `.lfsrpack`
+//! artifacts (`store`) — two LFSR seeds per layer are the entire on-disk
+//! index state — and many artifacts serve side by side through
+//! `store::ModelRegistry` over one shared worker pool.
+
+// CI gates on `cargo clippy -- -D warnings`.  These allows carve out the
+// style lints that fight the repo's index-heavy numeric idiom (explicit
+// row/column loops, wide hardware-parameter constructors); everything
+// correctness-oriented still denies.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_div_ceil,
+    clippy::type_complexity
+)]
 
 pub mod cli;
 pub mod data;
@@ -31,3 +45,4 @@ pub mod pipeline;
 pub mod rank;
 pub mod serve;
 pub mod sparse;
+pub mod store;

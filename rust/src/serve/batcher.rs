@@ -4,12 +4,14 @@
 //! front-end queues single-example requests, cuts full batches while the
 //! queue is deep, and pads the final partial batch (padding rows are
 //! zeros; per-example independence of the GEMM means they cannot affect
-//! real rows).  Latency/throughput accounting reuses
+//! real rows).  A [`Batcher::with_deadline`] batcher additionally cuts an
+//! overdue partial batch, bounding queueing latency for low-QPS tenants
+//! in the multi-model registry.  Latency/throughput accounting reuses
 //! [`crate::util::bench::Stats`] so serving logs read like the repo's
 //! bench logs.
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::util::bench::Stats;
 
@@ -62,6 +64,9 @@ impl ServeStats {
 pub struct Batcher {
     batch: usize,
     example_len: usize,
+    /// Flush deadline: cut a padded partial batch once the oldest queued
+    /// request has waited this long (None = partials wait for `flush`).
+    max_wait: Option<Duration>,
     queue: VecDeque<Request>,
     started: Option<Instant>,
     last_done: Option<Instant>,
@@ -77,6 +82,7 @@ impl Batcher {
         Batcher {
             batch,
             example_len,
+            max_wait: None,
             queue: VecDeque::new(),
             started: None,
             last_done: None,
@@ -87,8 +93,23 @@ impl Batcher {
         }
     }
 
+    /// A batcher that also cuts padded partial batches once the oldest
+    /// queued request has waited `max_wait` — bounds queueing latency for
+    /// a tenant whose arrival rate cannot fill a batch
+    /// (`store::ModelRegistry` gives every low-QPS model one of these).
+    pub fn with_deadline(batch: usize, example_len: usize, max_wait: Duration) -> Batcher {
+        let mut b = Batcher::new(batch, example_len);
+        b.max_wait = Some(max_wait);
+        b
+    }
+
     pub fn batch_size(&self) -> usize {
         self.batch
+    }
+
+    /// The flush deadline, if any.
+    pub fn max_wait(&self) -> Option<Duration> {
+        self.max_wait
     }
 
     /// Enqueue one request (its latency clock starts now).
@@ -111,10 +132,18 @@ impl Batcher {
     }
 
     /// Cut the next micro-batch.  Returns a full batch whenever the queue
-    /// is deep enough; with `flush` also cuts a padded partial batch from
-    /// whatever is queued.  `None` if nothing can be cut.
+    /// is deep enough; with `flush` — or once the oldest queued request
+    /// has outwaited the deadline of [`with_deadline`] — also cuts a
+    /// padded partial batch from whatever is queued.  `None` if nothing
+    /// can be cut.
+    ///
+    /// [`with_deadline`]: Batcher::with_deadline
     pub fn next_batch(&mut self, flush: bool) -> Option<MicroBatch> {
-        if self.queue.is_empty() || (self.queue.len() < self.batch && !flush) {
+        let due = match (self.max_wait, self.queue.front()) {
+            (Some(w), Some(r)) => r.enqueued.elapsed() >= w,
+            _ => false,
+        };
+        if self.queue.is_empty() || (self.queue.len() < self.batch && !flush && !due) {
             return None;
         }
         let real = self.queue.len().min(self.batch);
@@ -228,6 +257,33 @@ mod tests {
         b.complete(&mb);
         let lat = b.stats().latency.unwrap();
         assert!(lat.min >= 0.045, "backdated latency only {}", lat.min);
+    }
+
+    #[test]
+    fn deadline_cuts_overdue_partial_without_flush() {
+        // Fresh request: not due, not full, no flush -> wait.
+        let mut fresh = Batcher::with_deadline(4, 4, std::time::Duration::from_millis(20));
+        assert_eq!(fresh.max_wait(), Some(std::time::Duration::from_millis(20)));
+        fresh.push(0, req(0));
+        assert!(fresh.next_batch(false).is_none(), "fresh partial must wait");
+        // Oldest (front) request past the deadline: due even without
+        // flush, and the cut takes everything queued behind it too.
+        let mut b = Batcher::with_deadline(4, 4, std::time::Duration::from_millis(20));
+        b.push_at(0, req(0), Instant::now() - std::time::Duration::from_millis(50));
+        b.push(1, req(1));
+        let mb = b.next_batch(false).expect("overdue partial cut");
+        assert_eq!(mb.real, 2);
+        assert_eq!(mb.batch, 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn no_deadline_keeps_partial_semantics() {
+        let mut b = Batcher::new(4, 4);
+        assert_eq!(b.max_wait(), None);
+        b.push_at(0, req(0), Instant::now() - std::time::Duration::from_secs(5));
+        assert!(b.next_batch(false).is_none(), "no deadline -> partial waits for flush");
+        assert!(b.next_batch(true).is_some());
     }
 
     #[test]

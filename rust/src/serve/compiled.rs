@@ -252,6 +252,19 @@ impl CompiledLayer {
 /// and `benches/serve.rs` so the recorded perf trajectory
 /// (`BENCH_serve.json`) and the runnable demo stay the same model.
 pub fn synthetic_lenet300(sparsity: f64, n_shards: usize, lanes: usize) -> CompiledModel {
+    synthetic_lenet300_seeded(sparsity, n_shards, lanes, 11)
+}
+
+/// [`synthetic_lenet300`] with a per-layer LFSR seed base (layer `i` uses
+/// seeds `(base+i, base+18+i)`; base 11 is the canonical demo model).
+/// Same weights, different masks — how the multi-model registry demos and
+/// benches get N genuinely distinct tenants from one weight set.
+pub fn synthetic_lenet300_seeded(
+    sparsity: f64,
+    n_shards: usize,
+    lanes: usize,
+    seed_base: u32,
+) -> CompiledModel {
     const DIMS: [usize; 4] = [784, 300, 100, 10];
     let mut rng = Pcg32::new(9);
     let layers = (0..3)
@@ -259,7 +272,8 @@ pub fn synthetic_lenet300(sparsity: f64, n_shards: usize, lanes: usize) -> Compi
             let (rows, cols) = (DIMS[i], DIMS[i + 1]);
             let w: Vec<f32> = (0..rows * cols).map(|_| rng.next_normal() * 0.05).collect();
             let b: Vec<f32> = (0..cols).map(|_| rng.next_normal() * 0.01).collect();
-            let cfg = PrsMaskConfig::auto(rows, cols, 11 + i as u32, 29 + i as u32);
+            let cfg =
+                PrsMaskConfig::auto(rows, cols, seed_base + i as u32, seed_base + 18 + i as u32);
             CompiledLayer::compile_prs(
                 &w, b, i != 2, rows, cols, sparsity, cfg, n_shards, lanes,
             )

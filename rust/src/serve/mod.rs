@@ -21,6 +21,13 @@
 //! `examples/infer_server.rs` wires the three together into a runnable
 //! server; `benches/serve.rs` tracks single- vs multi-thread throughput
 //! in `BENCH_serve.json`.
+//!
+//! Compiled models need not be rebuilt from seeds on every cold start:
+//! [`crate::store`] persists them as `.lfsrpack` artifacts whose on-disk
+//! index state per PRS layer is just the two LFSR seeds (the paper's
+//! no-index-memory claim, §2/Fig. 5), and
+//! [`crate::store::ModelRegistry`] serves many loaded artifacts through
+//! one shared [`WorkerPool`] with per-model [`ServeStats`].
 
 pub mod batcher;
 pub mod compiled;
@@ -29,8 +36,8 @@ pub mod session;
 
 pub use batcher::{Batcher, MicroBatch, Request, ServeStats};
 pub use compiled::{
-    parallel_keep_sequence, shard_ranges, synthetic_lenet300, CompiledLayer, CompiledModel,
-    MaskKind,
+    parallel_keep_sequence, shard_ranges, synthetic_lenet300, synthetic_lenet300_seeded,
+    CompiledLayer, CompiledModel, MaskKind,
 };
 pub use pool::WorkerPool;
 pub use session::InferenceSession;

@@ -19,8 +19,10 @@ use crate::sparse::PackedColumns;
 pub struct InferenceSession {
     model: Arc<CompiledModel>,
     /// `None` = run shards inline on the caller thread (true
-    /// single-threaded baseline, no pool overhead).
-    pool: Option<WorkerPool>,
+    /// single-threaded baseline, no pool overhead).  The pool is an `Arc`
+    /// so many sessions can multiplex one set of workers
+    /// (`store::ModelRegistry`).
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl InferenceSession {
@@ -34,13 +36,20 @@ impl InferenceSession {
         };
         InferenceSession {
             model: Arc::new(model),
-            pool: if workers > 1 { Some(WorkerPool::new(workers)) } else { None },
+            pool: if workers > 1 { Some(Arc::new(WorkerPool::new(workers))) } else { None },
         }
+    }
+
+    /// Bind to an existing pool instead of spawning one — how the
+    /// multi-tenant registry gives N models one shared set of worker
+    /// threads.
+    pub fn with_shared_pool(model: CompiledModel, pool: Arc<WorkerPool>) -> InferenceSession {
+        InferenceSession { model: Arc::new(model), pool: Some(pool) }
     }
 
     /// Worker threads backing this session (1 = inline).
     pub fn workers(&self) -> usize {
-        self.pool.as_ref().map_or(1, WorkerPool::size)
+        self.pool.as_ref().map_or(1, |p| p.size())
     }
 
     pub fn model(&self) -> &CompiledModel {
@@ -180,6 +189,26 @@ mod tests {
         for b in 0..batch {
             let one = session.infer_one(&x[b * 12..(b + 1) * 12]);
             assert_eq!(&all[b * 4..(b + 1) * 4], &one[..], "row {b}");
+        }
+    }
+
+    #[test]
+    fn shared_pool_sessions_match_inline_bitwise() {
+        let mut rng = Pcg32::new(9);
+        let batch = 4;
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.next_normal()).collect();
+        let pool = Arc::new(crate::serve::WorkerPool::new(3));
+        let a = InferenceSession::with_shared_pool(toy_model(2), Arc::clone(&pool));
+        let b = InferenceSession::with_shared_pool(toy_model(5), pool);
+        assert_eq!(a.workers(), 3);
+        let inline = InferenceSession::new(toy_model(2), 1);
+        for (&u, &v) in a.infer_batch(&x, batch).iter().zip(&inline.infer_batch(&x, batch)) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        // The second tenant on the same pool still answers correctly.
+        let inline_b = InferenceSession::new(toy_model(5), 1);
+        for (&u, &v) in b.infer_batch(&x, batch).iter().zip(&inline_b.infer_batch(&x, batch)) {
+            assert_eq!(u.to_bits(), v.to_bits());
         }
     }
 

@@ -51,11 +51,35 @@ impl PackedColumns {
         seq: &[(usize, usize)],
         weights: &[f32],
     ) -> PackedColumns {
-        assert!(col_start <= col_end && col_end <= cols);
         assert_eq!(weights.len(), rows * cols);
+        // Gather in sequence order, then defer to the one counting sort —
+        // the artifact loader's parity with this path is structural, not
+        // maintained by hand.
+        let values: Vec<f32> = seq.iter().map(|&(r, c)| weights[r * cols + c]).collect();
+        Self::from_walk_values(rows, cols, col_start, col_end, seq, &values)
+    }
+
+    /// Pack from a kept-position sequence whose values are already
+    /// gathered in sequence order (`values[i]` belongs to `seq[i]`) — the
+    /// `.lfsrpack` fast-load path (`store::artifact`): an artifact stores
+    /// the kept values in walk order, so reconstruction needs no dense
+    /// rows×cols weight matrix, only the replayed walk and this counting
+    /// sort by column (one pass for sizes, one for placement, preserving
+    /// walk order within each column).  [`from_sequence`] is this plus a
+    /// dense-weight gather.
+    ///
+    /// [`from_sequence`]: PackedColumns::from_sequence
+    pub fn from_walk_values(
+        rows: usize,
+        cols: usize,
+        col_start: usize,
+        col_end: usize,
+        seq: &[(usize, usize)],
+        values: &[f32],
+    ) -> PackedColumns {
+        assert!(col_start <= col_end && col_end <= cols);
+        assert_eq!(seq.len(), values.len(), "one value per kept position");
         let width = col_end - col_start;
-        // Counting sort by column: one pass for sizes, one for placement,
-        // preserving walk order within each column.
         let mut counts = vec![0u32; width];
         for &(r, c) in seq {
             debug_assert!(r < rows && c < cols);
@@ -69,16 +93,16 @@ impl PackedColumns {
         }
         let total = col_ptr[width] as usize;
         let mut row_idx = vec![0u32; total];
-        let mut values = vec![0.0f32; total];
+        let mut vals = vec![0.0f32; total];
         let mut cursor = col_ptr[..width].to_vec();
-        for &(r, c) in seq {
+        for (i, &(r, c)) in seq.iter().enumerate() {
             if !(col_start..col_end).contains(&c) {
                 continue;
             }
             let slot = cursor[c - col_start] as usize;
             cursor[c - col_start] += 1;
             row_idx[slot] = r as u32;
-            values[slot] = weights[r * cols + c];
+            vals[slot] = values[i];
         }
         PackedColumns {
             rows,
@@ -86,7 +110,7 @@ impl PackedColumns {
             col_end,
             col_ptr,
             row_idx,
-            values,
+            values: vals,
         }
     }
 
@@ -266,6 +290,21 @@ mod tests {
                     assert_eq!(got.to_bits(), y_whole[bi * cols + c].to_bits());
                 }
             }
+        }
+    }
+
+    #[test]
+    fn from_walk_values_bitwise_equals_from_sequence() {
+        let (rows, cols) = (24, 18);
+        let cfg = PrsMaskConfig::auto(rows, cols, 7, 13);
+        let seq = prs_keep_sequence(rows, cols, 0.6, cfg);
+        let w = weights(rows * cols, 8);
+        // Gather values in walk order, as the artifact stores them.
+        let walk_vals: Vec<f32> = seq.iter().map(|&(r, c)| w[r * cols + c]).collect();
+        for (lo, hi) in [(0, cols), (0, 7), (7, cols), (5, 5)] {
+            let dense = PackedColumns::from_sequence(rows, cols, lo, hi, &seq, &w);
+            let packed = PackedColumns::from_walk_values(rows, cols, lo, hi, &seq, &walk_vals);
+            assert_eq!(packed, dense, "shard [{lo},{hi})");
         }
     }
 

@@ -1,0 +1,590 @@
+//! `.lfsrpack` writer, strict reader, and verify mode.
+//!
+//! **Write** ([`export_model`]): for each PRS layer the walk is replayed
+//! once (multi-lane, via [`parallel_keep_sequence`]) to recover the global
+//! walk order, the kept values are flattened into that order, and only
+//! `{dims, widths/polynomials, seeds, keep budget, bias, values}` hit the
+//! disk — the index side of a PRS layer is [`PRS_EXTRA_BYTES`] regardless
+//! of size.  Explicit (magnitude/random) layers additionally store their
+//! positions column-major, CSC-style, since they have no seeds to
+//! regenerate from.
+//!
+//! **Read** ([`load_model`]): the whole file is read, length-checked
+//! against the header, checksum-verified, then parsed with bounds-checked
+//! cursors — corrupt or truncated input yields a typed [`StoreError`],
+//! never a panic.  For PRS layers the loader re-derives positions from the
+//! two seeds (that regeneration *is* the paper's storage claim) and packs
+//! the stored walk-order values straight into shard layouts via
+//! [`PackedColumns::from_walk_values`] — no dense rows×cols weight matrix
+//! is ever materialized, so cold-start cost is file I/O plus the
+//! jump-table walk replay instead of dense-weight gather
+//! (`benches/store.rs` records the difference).
+//!
+//! **Verify** (`LoadOptions { verify: true }` or [`verify_file`]): replays
+//! the PRS walk and compares its FNV hash against the stored `walk_hash`,
+//! confirming bit-for-bit that the value packing on disk corresponds to
+//! the seeds' walk — e.g. a re-seeded-but-not-repacked artifact is
+//! rejected with [`StoreError::WalkMismatch`].
+
+use std::path::Path;
+
+use crate::lfsr::polynomials::{period, primitive_taps, MAX_WIDTH, MIN_WIDTH};
+use crate::mask::prs::PrsMaskConfig;
+use crate::mask::prune_target;
+use crate::serve::{parallel_keep_sequence, shard_ranges, CompiledLayer, CompiledModel, MaskKind};
+use crate::sparse::PackedColumns;
+
+use super::format::{
+    explicit_record_bytes, fnv1a64, hash_keep_sequence, prs_record_bytes, ByteReader, ByteWriter,
+    StoreError, FILE_CHECKSUM_BYTES, FILE_HEADER_BYTES, MAGIC, MAX_CELLS, MAX_DIM, MAX_LAYERS,
+    PRS_EXTRA_BYTES, VERSION,
+};
+
+/// How to reconstruct a model from an artifact.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadOptions {
+    /// Column shards per layer (serving parallelism; any value is
+    /// bitwise-equivalent).
+    pub n_shards: usize,
+    /// Jump-table lanes for the PRS walk replay.
+    pub lanes: usize,
+    /// Replay-and-compare the stored `walk_hash` per PRS layer.
+    pub verify: bool,
+}
+
+impl Default for LoadOptions {
+    fn default() -> Self {
+        LoadOptions { n_shards: 4, lanes: 2, verify: false }
+    }
+}
+
+/// What a write put on disk — the CLI prints this as the paper's
+/// storage-claim receipt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExportReport {
+    pub total_bytes: u64,
+    /// Packed kept-weight payload.
+    pub value_bytes: u64,
+    /// Bias payload.
+    pub bias_bytes: u64,
+    /// Index storage of PRS layers: seeds + widths + polynomials + walk
+    /// hash — O(1) per layer.
+    pub seed_bytes: u64,
+    /// Index storage of explicit layers: O(nnz) positions (zero for an
+    /// all-PRS model).
+    pub explicit_index_bytes: u64,
+    pub layers: u32,
+}
+
+/// Serialize a compiled model to `.lfsrpack` bytes.
+///
+/// `lanes` parallelises the walk replay used to recover each PRS layer's
+/// global walk order.
+pub fn encode_model(model: &CompiledModel, lanes: usize) -> Result<Vec<u8>, StoreError> {
+    Ok(encode_with_report(model, lanes)?.0)
+}
+
+/// Export to a file; returns the byte breakdown.
+pub fn export_model(
+    model: &CompiledModel,
+    path: &Path,
+    lanes: usize,
+) -> Result<ExportReport, StoreError> {
+    let (bytes, report) = encode_with_report(model, lanes)?;
+    std::fs::write(path, bytes)?;
+    Ok(report)
+}
+
+/// Encode and also return the byte breakdown.
+pub fn encode_with_report(
+    model: &CompiledModel,
+    lanes: usize,
+) -> Result<(Vec<u8>, ExportReport), StoreError> {
+    let mut w = ByteWriter::new();
+    w.put_bytes(&MAGIC);
+    w.put_u32(VERSION);
+    w.put_u32(model.layers.len() as u32);
+    let len_at = w.len();
+    w.put_u64(0);
+    let mut report = ExportReport {
+        total_bytes: 0,
+        value_bytes: 0,
+        bias_bytes: 0,
+        seed_bytes: 0,
+        explicit_index_bytes: 0,
+        layers: model.layers.len() as u32,
+    };
+    for (li, layer) in model.layers.iter().enumerate() {
+        write_layer(&mut w, li, layer, lanes, &mut report)?;
+    }
+    let total = w.len() as u64 + 8;
+    w.patch_u64(len_at, total);
+    let checksum = fnv1a64(&w.buf);
+    w.put_u64(checksum);
+    report.total_bytes = total;
+    Ok((w.buf, report))
+}
+
+fn write_layer(
+    w: &mut ByteWriter,
+    li: usize,
+    layer: &CompiledLayer,
+    lanes: usize,
+    report: &mut ExportReport,
+) -> Result<(), StoreError> {
+    let nnz = layer.nnz();
+    let flags = u8::from(layer.relu);
+    let record_start = w.len() as u64;
+    match layer.kind {
+        MaskKind::Prs { cfg, sparsity } => {
+            let seq = parallel_keep_sequence(layer.rows, layer.cols, sparsity, cfg, lanes);
+            if seq.len() != nnz {
+                return Err(StoreError::WalkMismatch {
+                    layer: li,
+                    detail: format!("walk keeps {} positions, layer stores {nnz}", seq.len()),
+                });
+            }
+            let values = gather_walk_values(layer, li, &seq)?;
+            w.put_u8(0);
+            w.put_u8(flags);
+            w.put_u32(layer.rows as u32);
+            w.put_u32(layer.cols as u32);
+            w.put_u64(nnz as u64);
+            w.put_u32(layer.bias.len() as u32);
+            w.put_u8(cfg.n_row as u8);
+            w.put_u8(cfg.n_col as u8);
+            w.put_u32(primitive_taps(cfg.n_row).expect("compiled layer has a valid width"));
+            w.put_u32(primitive_taps(cfg.n_col).expect("compiled layer has a valid width"));
+            w.put_u32(cfg.seed_row);
+            w.put_u32(cfg.seed_col);
+            w.put_f64(sparsity);
+            w.put_u64(hash_keep_sequence(&seq));
+            w.put_f32_slice(&layer.bias);
+            w.put_f32_slice(&values);
+            report.seed_bytes += PRS_EXTRA_BYTES;
+            debug_assert_eq!(
+                w.len() as u64 - record_start,
+                prs_record_bytes(nnz as u64, layer.bias.len() as u64)
+            );
+        }
+        MaskKind::Explicit => {
+            let mut counts = vec![0u32; layer.cols];
+            let mut row_idx = Vec::with_capacity(nnz);
+            let mut values = Vec::with_capacity(nnz);
+            for shard in &layer.shards {
+                for local in 0..shard.width() {
+                    let c = shard.col_start + local;
+                    for (r, v) in shard.column(local) {
+                        counts[c] += 1;
+                        row_idx.push(r as u32);
+                        values.push(v);
+                    }
+                }
+            }
+            w.put_u8(1);
+            w.put_u8(flags);
+            w.put_u32(layer.rows as u32);
+            w.put_u32(layer.cols as u32);
+            w.put_u64(nnz as u64);
+            w.put_u32(layer.bias.len() as u32);
+            w.put_u32_slice(&counts);
+            w.put_u32_slice(&row_idx);
+            w.put_f32_slice(&layer.bias);
+            w.put_f32_slice(&values);
+            report.explicit_index_bytes += 4 * (layer.cols as u64 + nnz as u64);
+            debug_assert_eq!(
+                w.len() as u64 - record_start,
+                explicit_record_bytes(layer.cols as u64, nnz as u64, layer.bias.len() as u64)
+            );
+        }
+    }
+    report.value_bytes += 4 * nnz as u64;
+    report.bias_bytes += 4 * layer.bias.len() as u64;
+    Ok(())
+}
+
+/// Flatten a PRS layer's per-column stored values back into global walk
+/// order.  The shards hold each column's entries in walk order, so the
+/// global order is recovered by consuming one entry per column visit.
+fn gather_walk_values(
+    layer: &CompiledLayer,
+    li: usize,
+    seq: &[(usize, usize)],
+) -> Result<Vec<f32>, StoreError> {
+    let mut per_col: Vec<Vec<(usize, f32)>> = vec![Vec::new(); layer.cols];
+    for shard in &layer.shards {
+        for local in 0..shard.width() {
+            per_col[shard.col_start + local] = shard.column(local).collect();
+        }
+    }
+    let mut cursor = vec![0usize; layer.cols];
+    let mut out = Vec::with_capacity(seq.len());
+    for &(r, c) in seq {
+        match per_col[c].get(cursor[c]) {
+            Some(&(er, ev)) if er == r => {
+                cursor[c] += 1;
+                out.push(ev);
+            }
+            _ => {
+                return Err(StoreError::WalkMismatch {
+                    layer: li,
+                    detail: format!("column {c} entries disagree with the seeds' walk"),
+                })
+            }
+        }
+    }
+    if cursor.iter().zip(&per_col).any(|(&k, col)| k != col.len()) {
+        return Err(StoreError::WalkMismatch {
+            layer: li,
+            detail: "layer stores entries the seeds' walk never visits".into(),
+        });
+    }
+    Ok(out)
+}
+
+/// Load an artifact from a file.
+pub fn load_model(path: &Path, opts: &LoadOptions) -> Result<CompiledModel, StoreError> {
+    let bytes = std::fs::read(path)?;
+    decode_model(&bytes, opts)
+}
+
+/// Decode `.lfsrpack` bytes into a served-ready model.
+pub fn decode_model(bytes: &[u8], opts: &LoadOptions) -> Result<CompiledModel, StoreError> {
+    let min = FILE_HEADER_BYTES + FILE_CHECKSUM_BYTES;
+    if (bytes.len() as u64) < min {
+        return Err(StoreError::Truncated { expected: min, got: bytes.len() as u64 });
+    }
+    let mut r = ByteReader::new(bytes);
+    if r.bytes(8)? != MAGIC {
+        return Err(StoreError::BadMagic);
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(StoreError::UnsupportedVersion { found: version });
+    }
+    let n_layers = r.u32()?;
+    let file_len = r.u64()?;
+    if (bytes.len() as u64) < file_len {
+        return Err(StoreError::Truncated { expected: file_len, got: bytes.len() as u64 });
+    }
+    if (bytes.len() as u64) > file_len || file_len < min {
+        return Err(StoreError::Corrupt {
+            detail: format!("file_len field {file_len} does not match {} bytes", bytes.len()),
+        });
+    }
+    let payload_end = (file_len - 8) as usize;
+    let stored = u64::from_le_bytes(bytes[payload_end..].try_into().unwrap());
+    let computed = fnv1a64(&bytes[..payload_end]);
+    if stored != computed {
+        return Err(StoreError::ChecksumMismatch { stored, computed });
+    }
+    if n_layers == 0 || n_layers > MAX_LAYERS {
+        return Err(StoreError::Corrupt { detail: format!("layer count {n_layers} out of range") });
+    }
+    let mut payload = ByteReader::new(&bytes[FILE_HEADER_BYTES as usize..payload_end]);
+    let mut layers = Vec::with_capacity(n_layers as usize);
+    for li in 0..n_layers as usize {
+        layers.push(read_layer(&mut payload, li, opts)?);
+    }
+    if payload.remaining() != 0 {
+        return Err(StoreError::Corrupt {
+            detail: format!("{} unparsed payload bytes after last layer", payload.remaining()),
+        });
+    }
+    for (i, pair) in layers.windows(2).enumerate() {
+        if pair[0].cols != pair[1].rows {
+            return Err(StoreError::Corrupt {
+                detail: format!(
+                    "layers {i}->{}: dims do not chain ({} -> {})",
+                    i + 1,
+                    pair[0].cols,
+                    pair[1].rows
+                ),
+            });
+        }
+    }
+    Ok(CompiledModel::new(layers))
+}
+
+/// Per-layer verification outcome from [`verify_file`].
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    pub layers: usize,
+    pub nnz: usize,
+    /// PRS layers whose walk hash was replayed and confirmed.
+    pub prs_layers_verified: usize,
+}
+
+/// Strict full check of an artifact on disk: checksum, structure, and a
+/// PRS walk replay per seed-derived layer.
+pub fn verify_file(path: &Path, lanes: usize) -> Result<VerifyReport, StoreError> {
+    let opts = LoadOptions { n_shards: 1, lanes, verify: true };
+    let model = load_model(path, &opts)?;
+    let prs = model
+        .layers
+        .iter()
+        .filter(|l| matches!(l.kind, MaskKind::Prs { .. }))
+        .count();
+    Ok(VerifyReport { layers: model.layers.len(), nnz: model.nnz(), prs_layers_verified: prs })
+}
+
+fn corrupt(detail: String) -> StoreError {
+    StoreError::Corrupt { detail }
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn read_layer(
+    r: &mut ByteReader,
+    li: usize,
+    opts: &LoadOptions,
+) -> Result<CompiledLayer, StoreError> {
+    let kind = r.u8()?;
+    let flags = r.u8()?;
+    if flags & !1 != 0 {
+        return Err(corrupt(format!("layer {li}: unknown flags {flags:#x}")));
+    }
+    let relu = flags & 1 == 1;
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    if rows == 0 || cols == 0 || rows > MAX_DIM || cols > MAX_DIM {
+        return Err(corrupt(format!("layer {li}: dims {rows}x{cols} out of range")));
+    }
+    if rows as u64 * cols as u64 > MAX_CELLS {
+        return Err(corrupt(format!(
+            "layer {li}: {rows}x{cols} exceeds the {MAX_CELLS}-cell replay bound"
+        )));
+    }
+    let nnz64 = r.u64()?;
+    if nnz64 > rows as u64 * cols as u64 {
+        return Err(corrupt(format!("layer {li}: nnz {nnz64} exceeds {rows}x{cols}")));
+    }
+    let nnz = nnz64 as usize;
+    let bias_len = r.u32()? as usize;
+    if bias_len != 0 && bias_len != cols {
+        return Err(corrupt(format!("layer {li}: bias length {bias_len}, expected 0 or {cols}")));
+    }
+    match kind {
+        0 => {
+            let n_row = r.u8()? as u32;
+            let n_col = r.u8()? as u32;
+            let taps_row = r.u32()?;
+            let taps_col = r.u32()?;
+            let seed_row = r.u32()?;
+            let seed_col = r.u32()?;
+            let sparsity = r.f64()?;
+            let walk_hash = r.u64()?;
+            let bias = r.f32_vec(bias_len)?;
+            let values = r.f32_vec(nnz)?;
+            for (name, n, taps) in [("row", n_row, taps_row), ("col", n_col, taps_col)] {
+                if !(MIN_WIDTH..=MAX_WIDTH).contains(&n) {
+                    return Err(corrupt(format!("layer {li}: {name} LFSR width {n} unsupported")));
+                }
+                if primitive_taps(n) != Some(taps) {
+                    return Err(corrupt(format!(
+                        "layer {li}: {name} polynomial {taps:#x} not this build's table entry \
+                         for width {n}"
+                    )));
+                }
+            }
+            if gcd(period(n_row), period(n_col)) != 1 {
+                return Err(corrupt(format!(
+                    "layer {li}: LFSR periods not coprime ({n_row}b, {n_col}b) — walk cannot \
+                     cover the matrix"
+                )));
+            }
+            // 2x headroom, like the compile-side width picker: the LFSR
+            // state is never 0, so with 2^n >= 2*dim every index still
+            // has >= 1 nonzero preimage under the MSB map — without it,
+            // index 0 can be unreachable (e.g. dim = 2^n) and the walk
+            // replay would exhaust its budget and panic instead of
+            // erroring.
+            if (1u64 << n_row) < 2 * rows as u64 || (1u64 << n_col) < 2 * cols as u64 {
+                return Err(corrupt(format!(
+                    "layer {li}: LFSR widths ({n_row}b, {n_col}b) lack headroom to cover \
+                     {rows}x{cols}"
+                )));
+            }
+            if !sparsity.is_finite() || !(0.0..=1.0).contains(&sparsity) {
+                return Err(corrupt(format!("layer {li}: sparsity {sparsity} out of range")));
+            }
+            let expected_keep = rows * cols - prune_target(rows, cols, sparsity);
+            if expected_keep != nnz {
+                return Err(corrupt(format!(
+                    "layer {li}: keep budget {nnz} inconsistent with sparsity {sparsity} \
+                     (expected {expected_keep})"
+                )));
+            }
+            let cfg = PrsMaskConfig { n_row, n_col, seed_row, seed_col };
+            // The only non-I/O work on the load path: regenerate positions
+            // from the two seeds (multi-lane).  Values are already in walk
+            // order, so packing is a counting sort — no dense weights.
+            let seq = parallel_keep_sequence(rows, cols, sparsity, cfg, opts.lanes.max(1));
+            if opts.verify {
+                let replayed = hash_keep_sequence(&seq);
+                if replayed != walk_hash {
+                    return Err(StoreError::WalkMismatch {
+                        layer: li,
+                        detail: format!(
+                            "replayed walk hash {replayed:#018x} != stored {walk_hash:#018x}"
+                        ),
+                    });
+                }
+            }
+            let shards = shard_ranges(cols, opts.n_shards)
+                .into_iter()
+                .map(|(lo, hi)| PackedColumns::from_walk_values(rows, cols, lo, hi, &seq, &values))
+                .collect();
+            Ok(CompiledLayer {
+                rows,
+                cols,
+                kind: MaskKind::Prs { cfg, sparsity },
+                bias,
+                relu,
+                shards,
+            })
+        }
+        1 => {
+            let counts = r.u32_vec(cols)?;
+            let total: u64 = counts.iter().map(|&c| c as u64).sum();
+            if total != nnz64 {
+                return Err(corrupt(format!(
+                    "layer {li}: column counts sum to {total}, nnz field says {nnz}"
+                )));
+            }
+            let row_idx = r.u32_vec(nnz)?;
+            if row_idx.iter().any(|&ri| ri as usize >= rows) {
+                return Err(corrupt(format!("layer {li}: row index out of range (rows {rows})")));
+            }
+            let bias = r.f32_vec(bias_len)?;
+            let values = r.f32_vec(nnz)?;
+            let mut seq = Vec::with_capacity(nnz);
+            let mut at = 0usize;
+            for (c, &count) in counts.iter().enumerate() {
+                for _ in 0..count {
+                    seq.push((row_idx[at] as usize, c));
+                    at += 1;
+                }
+            }
+            let shards = shard_ranges(cols, opts.n_shards)
+                .into_iter()
+                .map(|(lo, hi)| PackedColumns::from_walk_values(rows, cols, lo, hi, &seq, &values))
+                .collect();
+            Ok(CompiledLayer { rows, cols, kind: MaskKind::Explicit, bias, relu, shards })
+        }
+        k => Err(corrupt(format!("layer {li}: unknown mask kind tag {k}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::mask::{magnitude_mask, Mask};
+
+    fn weights(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| rng.next_normal()).collect()
+    }
+
+    fn small_prs_model(shards: usize) -> CompiledModel {
+        let (d0, d1, d2) = (20usize, 14usize, 6usize);
+        let w1 = weights(d0 * d1, 1);
+        let w2 = weights(d1 * d2, 2);
+        let b1 = weights(d1, 3);
+        let cfg1 = PrsMaskConfig::auto(d0, d1, 5, 9);
+        let cfg2 = PrsMaskConfig::auto(d1, d2, 7, 11);
+        CompiledModel::new(vec![
+            CompiledLayer::compile_prs(&w1, b1, true, d0, d1, 0.7, cfg1, shards, 1),
+            CompiledLayer::compile_prs(&w2, Vec::new(), false, d1, d2, 0.5, cfg2, shards, 1),
+        ])
+    }
+
+    #[test]
+    fn encode_decode_round_trip_prs_bitwise() {
+        let model = small_prs_model(3);
+        let bytes = encode_model(&model, 2).unwrap();
+        // Same shard count: the reconstructed shards are identical
+        // structures, not merely equivalent.
+        let opts = LoadOptions { n_shards: 3, lanes: 1, verify: true };
+        let loaded = decode_model(&bytes, &opts).unwrap();
+        assert_eq!(loaded.layers.len(), model.layers.len());
+        for (a, b) in loaded.layers.iter().zip(&model.layers) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.relu, b.relu);
+            assert_eq!(a.bias, b.bias);
+            assert_eq!(a.shards, b.shards);
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trip_explicit() {
+        let (rows, cols) = (16usize, 10usize);
+        let w = weights(rows * cols, 4);
+        let m = magnitude_mask(rows, cols, &w, 0.6);
+        let layer = CompiledLayer::from_mask(&w, weights(cols, 5), true, &m, 2);
+        let model = CompiledModel::new(vec![layer]);
+        let bytes = encode_model(&model, 1).unwrap();
+        let loaded =
+            decode_model(&bytes, &LoadOptions { n_shards: 2, lanes: 1, verify: true }).unwrap();
+        assert_eq!(loaded.layers[0].shards, model.layers[0].shards);
+        assert_eq!(loaded.layers[0].kind, MaskKind::Explicit);
+    }
+
+    #[test]
+    fn export_report_accounts_every_byte() {
+        let model = small_prs_model(2);
+        let (bytes, report) = encode_with_report(&model, 1).unwrap();
+        assert_eq!(report.total_bytes, bytes.len() as u64);
+        assert_eq!(report.explicit_index_bytes, 0);
+        assert_eq!(report.seed_bytes, 2 * PRS_EXTRA_BYTES);
+        assert_eq!(report.value_bytes, 4 * model.nnz() as u64);
+        // total = header + per-layer fixed + seeds + bias + values + crc.
+        let fixed: u64 = model.layers.len() as u64 * super::super::format::RECORD_FIXED_BYTES;
+        assert_eq!(
+            report.total_bytes,
+            super::super::format::file_overhead_bytes()
+                + fixed
+                + report.seed_bytes
+                + report.bias_bytes
+                + report.value_bytes
+        );
+    }
+
+    #[test]
+    fn dense_explicit_layer_round_trips() {
+        let (rows, cols) = (6usize, 4usize);
+        let w = weights(rows * cols, 6);
+        let layer = CompiledLayer::from_mask(&w, Vec::new(), false, &Mask::dense(rows, cols), 1);
+        let model = CompiledModel::new(vec![layer]);
+        let bytes = encode_model(&model, 1).unwrap();
+        let loaded = decode_model(&bytes, &LoadOptions::default()).unwrap();
+        assert_eq!(loaded.nnz(), rows * cols);
+    }
+
+    #[test]
+    fn mismatched_seeds_rejected_at_export() {
+        // A layer whose shards were packed for different seeds than its
+        // recorded config: export must refuse rather than write garbage.
+        let (rows, cols) = (20usize, 14usize);
+        let w = weights(rows * cols, 7);
+        let cfg_real = PrsMaskConfig::auto(rows, cols, 5, 9);
+        let mut layer =
+            CompiledLayer::compile_prs(&w, Vec::new(), false, rows, cols, 0.7, cfg_real, 2, 1);
+        layer.kind = MaskKind::Prs {
+            cfg: PrsMaskConfig::auto(rows, cols, 6, 10),
+            sparsity: 0.7,
+        };
+        let model = CompiledModel::new(vec![layer]);
+        match encode_model(&model, 1) {
+            Err(StoreError::WalkMismatch { layer: 0, .. }) => {}
+            other => panic!("expected WalkMismatch, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,421 @@
+//! The `.lfsrpack` binary layout: constants, typed errors, checksums, and
+//! bounds-checked byte cursors.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic     8 B   "LFSRPACK"
+//! version   u32   = 1
+//! n_layers  u32
+//! file_len  u64   total file bytes, trailing checksum included
+//! layer records ...
+//! checksum  u64   FNV-1a 64 over every preceding byte
+//! ```
+//!
+//! Per-layer record (fixed part, then kind-specific part):
+//!
+//! ```text
+//! kind      u8    0 = PRS (seed-derived), 1 = explicit positions
+//! flags     u8    bit 0 = relu
+//! rows      u32
+//! cols      u32
+//! nnz       u64   keep budget = stored value count
+//! bias_len  u32   0 or cols
+//! -- kind 0 (PRS) --
+//! n_row     u8    LFSR widths; each width names its primitive polynomial
+//! n_col     u8    in the repo-wide table (`lfsr::polynomials`)
+//! taps_row  u32   the polynomials themselves, for self-description and a
+//! taps_col  u32   table cross-check at load
+//! seed_row  u32   ← with the widths, the layer's ENTIRE index storage
+//! seed_col  u32
+//! sparsity  f64
+//! walk_hash u64   FNV-1a 64 over the keep sequence (verify mode)
+//! -- kind 1 (explicit) --
+//! col_counts u32 × cols   entries per column
+//! row_idx    u32 × nnz    kept rows, column-major, per-column order kept
+//! -- both --
+//! bias      f32 × bias_len
+//! values    f32 × nnz     PRS: global walk order; explicit: column-major
+//! ```
+//!
+//! The PRS record carries **no positions at all** — the paper's claim made
+//! durable: per layer, the index side is two seeds + two polynomial ids
+//! ([`PRS_EXTRA_BYTES`], a constant), while a CSC artifact would pay
+//! O(nnz) index entries.  `walk_hash` is how `verify` confirms the stored
+//! packing bit-for-bit without storing the walk: it replays the walk from
+//! the seeds and compares hashes.
+
+use std::fmt;
+
+/// File magic.
+pub const MAGIC: [u8; 8] = *b"LFSRPACK";
+
+/// Current (only) format version.
+pub const VERSION: u32 = 1;
+
+/// Bytes before the first layer record: magic, version, n_layers, file_len.
+pub const FILE_HEADER_BYTES: u64 = 8 + 4 + 4 + 8;
+
+/// Trailing FNV-1a 64 checksum.
+pub const FILE_CHECKSUM_BYTES: u64 = 8;
+
+/// Kind-independent fixed record bytes: kind, flags, rows, cols, nnz,
+/// bias_len.
+pub const RECORD_FIXED_BYTES: u64 = 1 + 1 + 4 + 4 + 8 + 4;
+
+/// PRS kind-specific bytes: widths, polynomials, seeds, sparsity,
+/// walk hash.  This is the whole per-layer index overhead — O(1),
+/// independent of dims and nnz.
+pub const PRS_EXTRA_BYTES: u64 = 1 + 1 + 4 + 4 + 4 + 4 + 8 + 8;
+
+/// Dimension sanity bound for the strict reader (largest paper layer is
+/// 8192×2048; 2^26 leaves ample headroom without letting a corrupt header
+/// claim absurd shapes).
+pub const MAX_DIM: usize = 1 << 26;
+
+/// Total-cell bound (rows × cols) for the strict reader: the PRS walk
+/// replay allocates a visited bitset over the whole matrix, so a crafted
+/// header must not be able to demand one before its values are even
+/// looked at.  2^30 cells (a 128 MiB bitset, 64× the paper's largest
+/// layer) is the ceiling.
+pub const MAX_CELLS: u64 = 1 << 30;
+
+/// Layer-count sanity bound for the strict reader.
+pub const MAX_LAYERS: u32 = 4096;
+
+/// Whole-file overhead outside the layer records.
+pub const fn file_overhead_bytes() -> u64 {
+    FILE_HEADER_BYTES + FILE_CHECKSUM_BYTES
+}
+
+/// On-disk bytes of one PRS layer record.
+pub const fn prs_record_bytes(nnz: u64, bias_len: u64) -> u64 {
+    RECORD_FIXED_BYTES + PRS_EXTRA_BYTES + 4 * bias_len + 4 * nnz
+}
+
+/// On-disk bytes of one explicit-positions layer record.
+pub const fn explicit_record_bytes(cols: u64, nnz: u64, bias_len: u64) -> u64 {
+    RECORD_FIXED_BYTES + 4 * cols + 4 * nnz + 4 * bias_len + 4 * nnz
+}
+
+/// Everything that can go wrong reading or writing an artifact.  The
+/// strict reader returns these — it never panics on corrupt, truncated,
+/// or adversarial input (random corruption is caught by the checksum
+/// before any field is trusted; field validation catches the rest).
+#[derive(Debug)]
+pub enum StoreError {
+    Io(std::io::Error),
+    /// First 8 bytes are not `LFSRPACK`.
+    BadMagic,
+    /// Version field is not [`VERSION`].
+    UnsupportedVersion { found: u32 },
+    /// File is shorter than its header claims (or than any valid file).
+    Truncated { expected: u64, got: u64 },
+    /// A record read ran past the end of the payload.
+    UnexpectedEof { offset: usize, need: usize },
+    /// Trailing checksum does not match the bytes.
+    ChecksumMismatch { stored: u64, computed: u64 },
+    /// A structurally invalid field (bad kind tag, dims out of range,
+    /// keep budget inconsistent with sparsity, ...).
+    Corrupt { detail: String },
+    /// The PRS walk replayed from the stored seeds does not reproduce the
+    /// stored packing (export-side: the layer's shards disagree with its
+    /// seeds; load-side `verify`: the walk hash differs).
+    WalkMismatch { layer: usize, detail: String },
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "artifact io error: {e}"),
+            StoreError::BadMagic => write!(f, "not an .lfsrpack artifact (bad magic)"),
+            StoreError::UnsupportedVersion { found } => {
+                write!(f, "unsupported artifact version {found} (expected {VERSION})")
+            }
+            StoreError::Truncated { expected, got } => {
+                write!(f, "truncated artifact: {got} bytes, expected {expected}")
+            }
+            StoreError::UnexpectedEof { offset, need } => {
+                write!(f, "artifact ends mid-record at byte {offset} (needed {need} more)")
+            }
+            StoreError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "artifact checksum mismatch: stored {stored:#018x}, computed {computed:#018x}"
+            ),
+            StoreError::Corrupt { detail } => write!(f, "corrupt artifact: {detail}"),
+            StoreError::WalkMismatch { layer, detail } => {
+                write!(f, "layer {layer}: PRS walk does not match stored packing: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> Self {
+        StoreError::Io(e)
+    }
+}
+
+/// Streaming FNV-1a 64 — the file checksum and the walk hash.  Chosen for
+/// the same reason as the hand-rolled JSON parser: zero dependencies, and
+/// it catches every single-byte corruption (the robustness tests flip
+/// bytes and expect a typed error).
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a64 {
+    state: u64,
+}
+
+impl Fnv1a64 {
+    pub const OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Self {
+        Fnv1a64 { state: Self::OFFSET_BASIS }
+    }
+
+    #[inline]
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.state;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(Self::PRIME);
+        }
+        self.state = h;
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+impl Default for Fnv1a64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot FNV-1a 64.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Hash a keep sequence (each position as two little-endian u32s) — the
+/// per-layer `walk_hash`.  O(1) stored bytes standing in for the whole
+/// O(nnz) position stream.
+pub fn hash_keep_sequence(seq: &[(usize, usize)]) -> u64 {
+    let mut h = Fnv1a64::new();
+    for &(r, c) in seq {
+        h.update(&(r as u32).to_le_bytes());
+        h.update(&(c as u32).to_le_bytes());
+    }
+    h.finish()
+}
+
+/// Bounds-checked little-endian reader over an in-memory artifact.  Every
+/// `take` validates against the real buffer length *before* any
+/// allocation, so a corrupt length field cannot trigger an allocation
+/// bomb or a slice panic.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], StoreError> {
+        if self.remaining() < n {
+            return Err(StoreError::UnexpectedEof { offset: self.pos, need: n - self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, StoreError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, StoreError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, StoreError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, StoreError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], StoreError> {
+        self.take(n)
+    }
+
+    pub fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>, StoreError> {
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| StoreError::Corrupt {
+            detail: format!("u32 vector length {n} overflows"),
+        })?)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, StoreError> {
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| StoreError::Corrupt {
+            detail: format!("f32 vector length {n} overflows"),
+        })?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// Little-endian writer accumulating an artifact in memory.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    pub buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_f32_slice(&mut self, v: &[f32]) {
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn put_u32_slice(&mut self, v: &[u32]) {
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Overwrite 8 bytes at `offset` (the `file_len` back-patch).
+    pub fn patch_u64(&mut self, offset: usize, v: u64) {
+        self.buf[offset..offset + 8].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_reference_vectors() {
+        // Canonical FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv_streaming_equals_one_shot() {
+        let mut h = Fnv1a64::new();
+        h.update(b"foo");
+        h.update(b"bar");
+        assert_eq!(h.finish(), fnv1a64(b"foobar"));
+    }
+
+    #[test]
+    fn keep_sequence_hash_is_order_sensitive() {
+        let a = hash_keep_sequence(&[(1, 2), (3, 4)]);
+        let b = hash_keep_sequence(&[(3, 4), (1, 2)]);
+        let c = hash_keep_sequence(&[(1, 2), (3, 4)]);
+        assert_eq!(a, c);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn reader_round_trips_writer() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(1 << 40);
+        w.put_f64(0.25);
+        w.put_u32_slice(&[1, 2, 3]);
+        w.put_f32_slice(&[1.5, -2.5]);
+        let mut r = ByteReader::new(&w.buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f64().unwrap(), 0.25);
+        assert_eq!(r.u32_vec(3).unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.f32_vec(2).unwrap(), vec![1.5, -2.5]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn reader_reports_eof_not_panic() {
+        let mut r = ByteReader::new(&[1, 2, 3]);
+        assert_eq!(r.u8().unwrap(), 1);
+        match r.u32() {
+            Err(StoreError::UnexpectedEof { offset, need }) => {
+                assert_eq!(offset, 1);
+                assert_eq!(need, 2);
+            }
+            other => panic!("expected eof, got {other:?}"),
+        }
+        // A huge claimed vector length must not allocate before bounds
+        // checking.
+        let mut r = ByteReader::new(&[0u8; 16]);
+        assert!(matches!(r.f32_vec(1 << 40), Err(StoreError::UnexpectedEof { .. })));
+    }
+
+    #[test]
+    fn record_size_arithmetic() {
+        assert_eq!(RECORD_FIXED_BYTES, 22);
+        assert_eq!(PRS_EXTRA_BYTES, 34);
+        assert_eq!(prs_record_bytes(100, 10), 22 + 34 + 40 + 400);
+        assert_eq!(explicit_record_bytes(10, 100, 10), 22 + 40 + 400 + 40 + 400);
+        assert_eq!(file_overhead_bytes(), 32);
+    }
+}

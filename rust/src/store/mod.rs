@@ -1,0 +1,44 @@
+//! Durable model artifacts + multi-tenant registry — the layer between
+//! compilation ([`serve::CompiledModel`](crate::serve::CompiledModel)) and
+//! request serving ([`serve::InferenceSession`](crate::serve::InferenceSession)).
+//!
+//! The paper's storage claim (§2, Fig. 5) is that an LFSR-pruned layer
+//! needs **no index memory**: the non-zero positions are regenerated from
+//! two LFSR seeds, so only the packed kept values travel with the model —
+//! the same property that cuts the proposed accelerator's SRAM by
+//! 1.51–2.94× and underwrites its 63.96%/64.23% energy/area savings.
+//! This module makes that claim a deployment format:
+//!
+//! * [`format`] — the `.lfsrpack` layout: versioned, checksummed, with a
+//!   per-layer record of `{dims, mask kind, polynomial ids, the two LFSR
+//!   seeds, keep budget, bias, packed kept values in walk order}`.  A PRS
+//!   layer's index side on disk is a constant
+//!   [`PRS_EXTRA_BYTES`](format::PRS_EXTRA_BYTES) bytes — seeds, widths,
+//!   polynomials, and a walk hash — independent of layer size.
+//! * [`artifact`] — writer, strict reader (corrupt/truncated input →
+//!   typed [`StoreError`], never a panic), verify mode that replays the
+//!   PRS walk via
+//!   [`serve::parallel_keep_sequence`](crate::serve::parallel_keep_sequence)
+//!   and confirms the stored packing bit-for-bit, and a fast loader that
+//!   rebuilds [`PackedColumns`](crate::sparse::PackedColumns) from the
+//!   stored walk-order values without ever materializing a dense weight
+//!   matrix.
+//! * [`registry`] — [`ModelRegistry`]: load/evict/list many artifacts
+//!   concurrently and route requests by model id through one shared
+//!   [`WorkerPool`](crate::serve::WorkerPool), with per-model
+//!   [`ServeStats`](crate::serve::ServeStats).
+//!
+//! `repro export` / `repro serve-artifact` (cli), the multi-model mode of
+//! `examples/infer_server.rs`, and `benches/store.rs` (cold-start +
+//! multi-model throughput → `BENCH_store.json`) drive this end to end.
+
+pub mod artifact;
+pub mod format;
+pub mod registry;
+
+pub use artifact::{
+    decode_model, encode_model, encode_with_report, export_model, load_model, verify_file,
+    ExportReport, LoadOptions, VerifyReport,
+};
+pub use format::StoreError;
+pub use registry::{Answer, ModelInfo, ModelRegistry, RegistryError, TenantConfig};

@@ -1,0 +1,478 @@
+//! Multi-tenant model registry: many compiled models, one worker pool.
+//!
+//! Each registered model gets its own [`Batcher`] (with an optional flush
+//! deadline so a low-QPS tenant's partial batches still get cut) and its
+//! own [`ServeStats`], while every [`InferenceSession`] shares a single
+//! [`WorkerPool`] — N models multiplex one set of threads instead of
+//! N×workers oversubscription.  [`serve::Request`](crate::serve::Request)s
+//! are routed by model id: [`ModelRegistry::push`] enqueues into the named
+//! model's batcher, [`ModelRegistry::drain`] cuts every due micro-batch
+//! and executes it on the shared pool.
+//!
+//! Load/evict/list are concurrent with serving: the model table is behind
+//! a `RwLock`, entries are `Arc`s, and a drain in flight keeps its entry
+//! alive even if the model is evicted mid-batch.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use crate::serve::{Batcher, CompiledModel, InferenceSession, ServeStats, WorkerPool};
+
+use super::artifact::{load_model, LoadOptions};
+use super::format::StoreError;
+
+/// Registry-level failures (artifact problems nest a [`StoreError`]).
+#[derive(Debug)]
+pub enum RegistryError {
+    DuplicateModel(String),
+    NoSuchModel(String),
+    /// Request input length does not match the model's input dim.
+    BadInput { model: String, got: usize, expected: usize },
+    /// Rejected [`TenantConfig`] (e.g. batch size 0).
+    BadConfig { model: String, detail: String },
+    Store(StoreError),
+}
+
+impl fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegistryError::DuplicateModel(id) => write!(f, "model {id:?} already registered"),
+            RegistryError::NoSuchModel(id) => write!(f, "no model {id:?} in the registry"),
+            RegistryError::BadInput { model, got, expected } => {
+                write!(f, "model {model:?}: request length {got}, expected {expected}")
+            }
+            RegistryError::BadConfig { model, detail } => {
+                write!(f, "model {model:?}: {detail}")
+            }
+            RegistryError::Store(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RegistryError::Store(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<StoreError> for RegistryError {
+    fn from(e: StoreError) -> Self {
+        RegistryError::Store(e)
+    }
+}
+
+/// Per-tenant batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantConfig {
+    /// Micro-batch size for this model.
+    pub batch: usize,
+    /// Cut a padded partial batch once the oldest queued request has
+    /// waited this long (None = only cut full batches until flush).
+    pub max_wait: Option<Duration>,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        TenantConfig { batch: 32, max_wait: Some(Duration::from_millis(5)) }
+    }
+}
+
+struct ModelEntry {
+    session: InferenceSession,
+    batcher: Mutex<Batcher>,
+}
+
+/// One answered request from [`ModelRegistry::drain`].
+#[derive(Debug, Clone)]
+pub struct Answer {
+    pub model: String,
+    pub request: u64,
+    pub logits: Vec<f32>,
+}
+
+/// A row of [`ModelRegistry::list`].
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub id: String,
+    pub layers: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub nnz: usize,
+    /// Requests currently queued.
+    pub pending: usize,
+    pub stats: ServeStats,
+}
+
+/// Many models, one shared worker pool.
+pub struct ModelRegistry {
+    pool: Arc<WorkerPool>,
+    models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+}
+
+impl ModelRegistry {
+    /// `workers == 0` uses the machine's available parallelism.
+    pub fn new(workers: usize) -> ModelRegistry {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        } else {
+            workers
+        };
+        ModelRegistry {
+            pool: Arc::new(WorkerPool::new(workers)),
+            models: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// Worker threads shared by every registered model.
+    pub fn workers(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Register an already-compiled model.
+    pub fn insert(
+        &self,
+        id: &str,
+        model: CompiledModel,
+        cfg: TenantConfig,
+    ) -> Result<(), RegistryError> {
+        if cfg.batch == 0 {
+            // Typed error rather than the Batcher constructor's assert:
+            // batch size reaches here straight from CLI flags.
+            return Err(RegistryError::BadConfig {
+                model: id.to_string(),
+                detail: "tenant batch size must be >= 1".into(),
+            });
+        }
+        let in_dim = model.in_dim();
+        let entry = Arc::new(ModelEntry {
+            session: InferenceSession::with_shared_pool(model, Arc::clone(&self.pool)),
+            batcher: Mutex::new(match cfg.max_wait {
+                Some(w) => Batcher::with_deadline(cfg.batch, in_dim, w),
+                None => Batcher::new(cfg.batch, in_dim),
+            }),
+        });
+        let mut map = self.models.write().unwrap();
+        if map.contains_key(id) {
+            return Err(RegistryError::DuplicateModel(id.to_string()));
+        }
+        map.insert(id.to_string(), entry);
+        Ok(())
+    }
+
+    /// Load an `.lfsrpack` artifact and register it under `id`.
+    pub fn load(
+        &self,
+        id: &str,
+        path: &Path,
+        opts: &LoadOptions,
+        cfg: TenantConfig,
+    ) -> Result<(), RegistryError> {
+        // Refuse duplicates before paying the load.
+        if self.models.read().unwrap().contains_key(id) {
+            return Err(RegistryError::DuplicateModel(id.to_string()));
+        }
+        let model = load_model(path, opts)?;
+        self.insert(id, model, cfg)
+    }
+
+    /// Drop a model; its queued (unanswered) requests are dropped too.
+    /// Returns false if no such model.
+    pub fn evict(&self, id: &str) -> bool {
+        self.models.write().unwrap().remove(id).is_some()
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.models.read().unwrap().contains_key(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.read().unwrap().is_empty()
+    }
+
+    fn entry(&self, id: &str) -> Result<Arc<ModelEntry>, RegistryError> {
+        self.models
+            .read()
+            .unwrap()
+            .get(id)
+            .cloned()
+            .ok_or_else(|| RegistryError::NoSuchModel(id.to_string()))
+    }
+
+    /// Route one request to `model`'s queue (its latency clock starts
+    /// now).
+    pub fn push(&self, model: &str, request: u64, x: Vec<f32>) -> Result<(), RegistryError> {
+        let e = self.entry(model)?;
+        let expected = e.session.model().in_dim();
+        if x.len() != expected {
+            return Err(RegistryError::BadInput {
+                model: model.to_string(),
+                got: x.len(),
+                expected,
+            });
+        }
+        e.batcher.lock().unwrap().push(request, x);
+        Ok(())
+    }
+
+    /// Requests queued across all models.
+    pub fn pending(&self) -> usize {
+        let entries: Vec<Arc<ModelEntry>> =
+            self.models.read().unwrap().values().cloned().collect();
+        entries.iter().map(|e| e.batcher.lock().unwrap().pending()).sum()
+    }
+
+    /// Cut and execute every due micro-batch across all models on the
+    /// shared pool.  A batch is due when full, when its tenant's flush
+    /// deadline expired, or — with `flush` — whenever anything is queued.
+    /// Returns the answers in (model, cut) order.
+    pub fn drain(&self, flush: bool) -> Vec<Answer> {
+        let entries: Vec<(String, Arc<ModelEntry>)> = self
+            .models
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Arc::clone(v)))
+            .collect();
+        let mut out = Vec::new();
+        for (id, e) in entries {
+            loop {
+                // Batcher lock is held only to cut/account, never while
+                // inferring — pushes for this model proceed concurrently.
+                let mb = e.batcher.lock().unwrap().next_batch(flush);
+                let Some(mb) = mb else { break };
+                let logits = e.session.infer_batch(&mb.x, mb.batch);
+                let k = e.session.model().out_dim();
+                for (row, &rid) in mb.ids.iter().enumerate() {
+                    out.push(Answer {
+                        model: id.clone(),
+                        request: rid,
+                        logits: logits[row * k..(row + 1) * k].to_vec(),
+                    });
+                }
+                e.batcher.lock().unwrap().complete(&mb);
+            }
+        }
+        out
+    }
+
+    /// Direct single-batch inference on one model, bypassing the batcher
+    /// (parity tests, admin endpoints).
+    pub fn infer(&self, model: &str, x: &[f32], batch: usize) -> Result<Vec<f32>, RegistryError> {
+        let e = self.entry(model)?;
+        let expected = batch * e.session.model().in_dim();
+        if x.len() != expected {
+            return Err(RegistryError::BadInput {
+                model: model.to_string(),
+                got: x.len(),
+                expected,
+            });
+        }
+        Ok(e.session.infer_batch(x, batch))
+    }
+
+    /// Serving stats for one model.
+    pub fn stats(&self, model: &str) -> Result<ServeStats, RegistryError> {
+        let e = self.entry(model)?;
+        let s = e.batcher.lock().unwrap().stats();
+        Ok(s)
+    }
+
+    /// Snapshot of every registered model.
+    pub fn list(&self) -> Vec<ModelInfo> {
+        let entries: Vec<(String, Arc<ModelEntry>)> = self
+            .models
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Arc::clone(v)))
+            .collect();
+        entries
+            .into_iter()
+            .map(|(id, e)| {
+                let m = e.session.model();
+                let (pending, stats) = {
+                    let b = e.batcher.lock().unwrap();
+                    (b.pending(), b.stats())
+                };
+                ModelInfo {
+                    id,
+                    layers: m.layers.len(),
+                    in_dim: m.in_dim(),
+                    out_dim: m.out_dim(),
+                    nnz: m.nnz(),
+                    pending,
+                    stats,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+    use crate::mask::prs::PrsMaskConfig;
+    use crate::serve::CompiledLayer;
+    use std::time::Instant;
+
+    fn toy_model(seed_base: u32) -> CompiledModel {
+        let mut rng = Pcg32::new(seed_base as u64);
+        let (d0, d1) = (12usize, 5usize);
+        let w: Vec<f32> = (0..d0 * d1).map(|_| rng.next_normal()).collect();
+        let cfg = PrsMaskConfig::auto(d0, d1, seed_base, seed_base + 4);
+        CompiledModel::new(vec![CompiledLayer::compile_prs(
+            &w,
+            Vec::new(),
+            false,
+            d0,
+            d1,
+            0.5,
+            cfg,
+            2,
+            1,
+        )])
+    }
+
+    fn cfg_no_deadline(batch: usize) -> TenantConfig {
+        TenantConfig { batch, max_wait: None }
+    }
+
+    #[test]
+    fn routes_by_model_id_bitwise() {
+        let reg = ModelRegistry::new(3);
+        reg.insert("a", toy_model(3), cfg_no_deadline(2)).unwrap();
+        reg.insert("b", toy_model(17), cfg_no_deadline(2)).unwrap();
+        let mut rng = Pcg32::new(42);
+        let xs: Vec<Vec<f32>> = (0..4).map(|_| (0..12).map(|_| rng.next_normal()).collect()).collect();
+        reg.push("a", 0, xs[0].clone()).unwrap();
+        reg.push("b", 1, xs[1].clone()).unwrap();
+        reg.push("a", 2, xs[2].clone()).unwrap();
+        reg.push("b", 3, xs[3].clone()).unwrap();
+        let answers = reg.drain(true);
+        assert_eq!(answers.len(), 4);
+        // Each answer equals the direct single-model inference, bitwise —
+        // the shared pool never mixes tenants.
+        for ans in &answers {
+            let x = &xs[ans.request as usize];
+            let direct = reg.infer(&ans.model, x, 1).unwrap();
+            for (i, (&u, &v)) in ans.logits.iter().zip(&direct).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "{}#{} logit {i}", ans.model, ans.request);
+            }
+        }
+        // Different seeds really are different models.
+        let xa = reg.infer("a", &xs[0], 1).unwrap();
+        let xb = reg.infer("b", &xs[0], 1).unwrap();
+        assert_ne!(xa, xb);
+    }
+
+    #[test]
+    fn deadline_cuts_partial_batch_without_flush() {
+        let reg = ModelRegistry::new(1);
+        reg.insert(
+            "m",
+            toy_model(5),
+            TenantConfig { batch: 8, max_wait: Some(Duration::ZERO) },
+        )
+        .unwrap();
+        reg.push("m", 7, vec![0.5; 12]).unwrap();
+        // Not a full batch, no flush — but the zero deadline makes it due.
+        let answers = reg.drain(false);
+        assert_eq!(answers.len(), 1);
+        assert_eq!(answers[0].request, 7);
+        let s = reg.stats("m").unwrap();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.padded, 7);
+    }
+
+    #[test]
+    fn no_deadline_waits_for_full_batch() {
+        let reg = ModelRegistry::new(1);
+        reg.insert("m", toy_model(5), cfg_no_deadline(4)).unwrap();
+        reg.push("m", 0, vec![0.5; 12]).unwrap();
+        assert!(reg.drain(false).is_empty(), "partial batch must wait");
+        assert_eq!(reg.pending(), 1);
+        assert_eq!(reg.drain(true).len(), 1);
+    }
+
+    #[test]
+    fn load_evict_list_lifecycle() {
+        let reg = ModelRegistry::new(2);
+        reg.insert("a", toy_model(3), TenantConfig::default()).unwrap();
+        assert!(matches!(
+            reg.insert("a", toy_model(3), TenantConfig::default()),
+            Err(RegistryError::DuplicateModel(_))
+        ));
+        assert!(matches!(
+            reg.insert("z", toy_model(7), TenantConfig { batch: 0, max_wait: None }),
+            Err(RegistryError::BadConfig { .. })
+        ));
+        assert!(matches!(
+            reg.push("ghost", 0, vec![0.0; 12]),
+            Err(RegistryError::NoSuchModel(_))
+        ));
+        assert!(matches!(
+            reg.push("a", 0, vec![0.0; 3]),
+            Err(RegistryError::BadInput { expected: 12, got: 3, .. })
+        ));
+        let info = reg.list();
+        assert_eq!(info.len(), 1);
+        assert_eq!(info[0].in_dim, 12);
+        assert_eq!(info[0].out_dim, 5);
+        assert!(reg.evict("a"));
+        assert!(!reg.evict("a"));
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn concurrent_tenants_share_one_pool() {
+        // 4 tenants, 2 workers: pushes and drains from multiple threads
+        // must neither deadlock nor cross answers between tenants.
+        let reg = Arc::new(ModelRegistry::new(2));
+        for (i, id) in ["a", "b", "c", "d"].into_iter().enumerate() {
+            reg.insert(id, toy_model(3 + 2 * i as u32), cfg_no_deadline(2)).unwrap();
+        }
+        assert_eq!(reg.workers(), 2);
+        let n_each = 6usize;
+        let pushers: Vec<_> = ["a", "b", "c", "d"]
+            .into_iter()
+            .map(|id| {
+                let reg = Arc::clone(&reg);
+                let id = id.to_string();
+                std::thread::spawn(move || {
+                    for k in 0..n_each {
+                        reg.push(&id, k as u64, vec![k as f32 * 0.1; 12]).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let t0 = Instant::now();
+        let mut got = 0usize;
+        let mut answers = Vec::new();
+        while got < 4 * n_each {
+            assert!(t0.elapsed() < Duration::from_secs(30), "drain stalled");
+            let done = pushers.iter().all(|h| h.is_finished());
+            let batch = reg.drain(done);
+            got += batch.len();
+            answers.extend(batch);
+        }
+        for h in pushers {
+            h.join().unwrap();
+        }
+        for ans in &answers {
+            let x = vec![ans.request as f32 * 0.1; 12];
+            let direct = reg.infer(&ans.model, &x, 1).unwrap();
+            assert_eq!(ans.logits, direct, "{}#{}", ans.model, ans.request);
+        }
+    }
+}

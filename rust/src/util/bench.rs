@@ -103,6 +103,16 @@ impl Bench {
     }
 }
 
+/// Where a bench target's JSON output lands: `$BENCH_OUT_DIR` if set,
+/// else the repo root — one convention for every `BENCH_*.json` so the
+/// perf trajectory is diffable across PRs (and redirectable in CI).
+pub fn bench_out_path(file_name: &str) -> std::path::PathBuf {
+    match std::env::var_os("BENCH_OUT_DIR") {
+        Some(dir) => std::path::PathBuf::from(dir).join(file_name),
+        None => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(file_name),
+    }
+}
+
 fn fmt_time(s: f64) -> String {
     if s < 1e-6 {
         format!("{:.1}ns", s * 1e9)
