@@ -76,8 +76,12 @@ fn main() {
         }
     });
 
-    // Server loop: drain queue -> cut batches -> answer.
+    // Server loop: drain queue -> cut batches -> answer.  The logits and
+    // classes buffers live outside the loop so the steady-state cut ->
+    // classify -> complete cycle is allocation-free (arena inference +
+    // recycled batcher buffers).
     let mut batcher = Batcher::new(BATCH, IN_DIM);
+    let (mut logits, mut classes) = (Vec::new(), Vec::new());
     let mut answered = 0usize;
     let mut disconnected = false;
     while answered < n_requests {
@@ -91,14 +95,14 @@ fn main() {
         match batcher.next_batch(flush) {
             None => std::thread::yield_now(),
             Some(mb) => {
-                let classes = session.classify_batch(&mb.x, mb.batch);
+                session.classify_batch_into(&mb.x, mb.batch, &mut logits, &mut classes);
                 for (row, &id) in mb.ids.iter().enumerate() {
                     if id % 512 == 0 {
                         println!("  req {id:>5} -> class {}", classes[row]);
                     }
                 }
                 answered += mb.real;
-                batcher.complete(&mb);
+                batcher.complete(mb);
             }
         }
     }

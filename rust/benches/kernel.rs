@@ -1,0 +1,266 @@
+//! Scalar vs batch-major register-blocked sparse kernel.
+//!
+//! Two levels, both on the demo LeNet-300-100 @ 90% PRS sparsity:
+//!
+//! * **kernel** — one 784×300 layer, single thread: the scalar
+//!   batch-outer `gemm_into` against the blocked
+//!   `transpose_panels` + `gemm_panel_into` path, across batch sizes
+//!   {1, 8, 32, 128}.
+//! * **model** — full 3-layer forward: the pre-blocked serving path
+//!   (per-shard `[batch, width]` buffers + scatter, boxed pool jobs —
+//!   reconstructed here from public API) against
+//!   `InferenceSession::infer_batch_into` (blocked kernel, scratch
+//!   arena, scoped jobs), at worker counts {1, multi}.
+//!
+//! Results land in `BENCH_kernel.json` (repo root or `$BENCH_OUT_DIR`) —
+//! the measurable record of this kernel's speedup; CI uploads it with
+//! the other bench artifacts.  `BENCH_SMOKE=1` switches to a quick
+//! low-sample preset for the CI smoke job.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use lfsr_prune::data::rng::Pcg32;
+use lfsr_prune::mask::prs::PrsMaskConfig;
+use lfsr_prune::serve::{
+    synthetic_lenet300, CompiledLayer, CompiledModel, InferenceSession, WorkerPool,
+};
+use lfsr_prune::sparse::{transpose_panels, BATCH_LANES};
+use lfsr_prune::util::bench::{bench_out_path, black_box, Bench, Stats};
+
+const DIMS: [usize; 4] = [784, 300, 100, 10];
+const SPARSITY: f64 = 0.9;
+const BATCHES: [usize; 4] = [1, 8, 32, 128];
+
+struct Row {
+    name: String,
+    kernel: &'static str,
+    batch: usize,
+    workers: usize,
+    stats: Stats,
+}
+
+impl Row {
+    fn throughput(&self) -> f64 {
+        self.batch as f64 / self.stats.median
+    }
+}
+
+fn smoke() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some()
+}
+
+fn bench(name: String) -> Bench {
+    let mut b = Bench::new(name);
+    if smoke() {
+        b.warmup_iters = 1;
+        b.min_time = 0.05;
+        b.max_samples = 5;
+    }
+    b
+}
+
+/// The pre-blocked serving path, reconstructed from public API: per
+/// shard, scalar `gemm_into` into a `[batch, width]` buffer, scattered
+/// into the layer activation; boxed `'static` closures over `run_all`
+/// when pooled.
+fn scalar_forward(
+    model: &Arc<CompiledModel>,
+    pool: Option<&WorkerPool>,
+    x: &[f32],
+    batch: usize,
+) -> Vec<f32> {
+    let mut act: Arc<Vec<f32>> = Arc::new(x.to_vec());
+    for li in 0..model.layers.len() {
+        let layer = &model.layers[li];
+        let mut out = vec![0.0f32; batch * layer.cols];
+        let scatter = |buf: &[f32], si: usize, out: &mut [f32]| {
+            let shard = &layer.shards[si];
+            let width = shard.width();
+            for b in 0..batch {
+                out[b * layer.cols + shard.col_start..b * layer.cols + shard.col_end]
+                    .copy_from_slice(&buf[b * width..(b + 1) * width]);
+            }
+        };
+        match pool {
+            None => {
+                for si in 0..layer.shards.len() {
+                    let shard = &layer.shards[si];
+                    let mut buf = vec![0.0f32; batch * shard.width()];
+                    shard.gemm_into(&act, batch, &layer.bias, layer.relu, &mut buf);
+                    scatter(&buf, si, &mut out);
+                }
+            }
+            Some(pool) => {
+                type ShardJob = Box<dyn FnOnce() -> Vec<f32> + Send + 'static>;
+                let jobs: Vec<ShardJob> = (0..layer.shards.len())
+                    .map(|si| {
+                        let model = Arc::clone(model);
+                        let act = Arc::clone(&act);
+                        Box::new(move || {
+                            let layer = &model.layers[li];
+                            let shard = &layer.shards[si];
+                            let mut buf = vec![0.0f32; batch * shard.width()];
+                            shard.gemm_into(&act, batch, &layer.bias, layer.relu, &mut buf);
+                            buf
+                        }) as ShardJob
+                    })
+                    .collect();
+                for (si, buf) in pool.run_all(jobs).into_iter().enumerate() {
+                    scatter(&buf, si, &mut out);
+                }
+            }
+        }
+        act = Arc::new(out);
+    }
+    Arc::try_unwrap(act).unwrap_or_else(|a| (*a).clone())
+}
+
+fn main() {
+    let hw_threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+    let multi = hw_threads.clamp(2, 8);
+    let mut rows: Vec<Row> = Vec::new();
+    let mut rng = Pcg32::new(42);
+
+    // --- kernel level: one 784x300 layer, single thread ------------------
+    let (r0, c0) = (DIMS[0], DIMS[1]);
+    let cfg0 = PrsMaskConfig::auto(r0, c0, 11, 29);
+    let w0: Vec<f32> = (0..r0 * c0).map(|_| rng.next_normal() * 0.05).collect();
+    let b0: Vec<f32> = (0..c0).map(|_| rng.next_normal() * 0.01).collect();
+    let layer0 = CompiledLayer::compile_prs(&w0, b0, true, r0, c0, SPARSITY, cfg0, 1, 2);
+    let shard0 = &layer0.shards[0];
+    for &batch in &BATCHES {
+        let x: Vec<f32> = (0..batch * r0).map(|_| rng.next_f32()).collect();
+        let mut out = vec![0.0f32; batch * c0];
+        let stats = bench(format!("kernel/scalar_784x300@90%_b{batch} (examples)"))
+            .run(batch as u64, || {
+                shard0.gemm_into(&x, batch, &layer0.bias, true, &mut out);
+                black_box(out[0])
+            });
+        rows.push(Row {
+            name: format!("kernel_scalar_b{batch}"),
+            kernel: "scalar",
+            batch,
+            workers: 1,
+            stats,
+        });
+
+        let mut panels = Vec::new();
+        let n_panels = (batch + BATCH_LANES - 1) / BATCH_LANES;
+        let stats = bench(format!("kernel/blocked_784x300@90%_b{batch} (examples)"))
+            .run(batch as u64, || {
+                transpose_panels(&x, batch, r0, &mut panels);
+                for p in 0..n_panels {
+                    let lanes = (batch - p * BATCH_LANES).min(BATCH_LANES);
+                    let panel = &panels[p * r0 * BATCH_LANES..][..r0 * BATCH_LANES];
+                    let dst = &mut out[p * BATCH_LANES * c0..];
+                    shard0.gemm_panel_into(panel, lanes, &layer0.bias, true, dst, c0);
+                }
+                black_box(out[0])
+            });
+        rows.push(Row {
+            name: format!("kernel_blocked_b{batch}"),
+            kernel: "blocked",
+            batch,
+            workers: 1,
+            stats,
+        });
+    }
+
+    // --- model level: full forward, scalar-legacy vs blocked session -----
+    for &workers in &[1usize, multi] {
+        let shards = 4 * workers;
+        let model = Arc::new(synthetic_lenet300(SPARSITY, shards, workers.max(2)));
+        let pool = (workers > 1).then(|| WorkerPool::new(workers));
+        let session =
+            InferenceSession::new(synthetic_lenet300(SPARSITY, shards, workers.max(2)), workers);
+        for &batch in &BATCHES {
+            let x: Vec<f32> = (0..batch * DIMS[0]).map(|_| rng.next_f32()).collect();
+            let stats = bench(format!("model/scalar_lenet300@90%_b{batch}_w{workers} (examples)"))
+                .run(batch as u64, || {
+                    black_box(scalar_forward(&model, pool.as_ref(), &x, batch))
+                });
+            rows.push(Row {
+                name: format!("model_scalar_b{batch}_w{workers}"),
+                kernel: "scalar",
+                batch,
+                workers,
+                stats,
+            });
+
+            let mut out = Vec::new();
+            let stats = bench(format!("model/blocked_lenet300@90%_b{batch}_w{workers} (examples)"))
+                .run(batch as u64, || {
+                    session.infer_batch_into(&x, batch, &mut out);
+                    black_box(out[0])
+                });
+            rows.push(Row {
+                name: format!("model_blocked_b{batch}_w{workers}"),
+                kernel: "blocked",
+                batch,
+                workers,
+                stats,
+            });
+        }
+    }
+
+    // Blocked-vs-scalar speedup per (level, batch, workers) pairing —
+    // rows push scalar immediately before blocked, so pair them up.
+    let mut speedups = Vec::new();
+    for pair in rows.chunks(2) {
+        if let [s, b] = pair {
+            assert_eq!((s.kernel, b.kernel), ("scalar", "blocked"));
+            let ratio = b.throughput() / s.throughput();
+            println!(
+                "bench speedup {:<32} blocked/scalar = {ratio:.2}x",
+                b.name.replace("_blocked", "")
+            );
+            speedups.push((b.name.replace("_blocked", ""), b.batch, b.workers, ratio));
+        }
+    }
+
+    // --- BENCH_kernel.json ----------------------------------------------
+    let mut json = String::new();
+    json.push_str("{\n");
+    let _ = writeln!(json, "  \"bench\": \"kernel\",");
+    let _ = writeln!(
+        json,
+        "  \"model\": {{\"dims\": [784, 300, 100, 10], \"sparsity\": {SPARSITY}}},"
+    );
+    let _ = writeln!(json, "  \"hw_threads\": {hw_threads},");
+    let _ = writeln!(json, "  \"smoke\": {},", smoke());
+    let _ = writeln!(json, "  \"results\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{}\", \"kernel\": \"{}\", \"batch\": {}, \"workers\": {}, \"median_s\": {:.9}, \"mean_s\": {:.9}, \"p95_s\": {:.9}, \"throughput_per_s\": {:.1}}}{}",
+            r.name,
+            r.kernel,
+            r.batch,
+            r.workers,
+            r.stats.median,
+            r.stats.mean,
+            r.stats.p95,
+            r.throughput(),
+            if i + 1 == rows.len() { "" } else { "," }
+        );
+    }
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(json, "  \"speedup_blocked_vs_scalar\": [");
+    for (i, (name, batch, workers, ratio)) in speedups.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{name}\", \"batch\": {batch}, \"workers\": {workers}, \"speedup\": {ratio:.3}}}{}",
+            if i + 1 == speedups.len() { "" } else { "," }
+        );
+    }
+    json.push_str("  ]\n}\n");
+
+    let out = bench_out_path("BENCH_kernel.json");
+    std::fs::write(&out, &json).expect("writing BENCH_kernel.json");
+    println!("wrote {}", out.display());
+
+    // Sanity: the file round-trips through the repo's own parser.
+    let parsed = lfsr_prune::util::json::parse(&json).expect("valid json");
+    assert!(parsed.get("results").is_some());
+}

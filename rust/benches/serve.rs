@@ -82,9 +82,11 @@ fn main() {
     for i in 0..n_requests {
         batcher.push(i as u64, feed[i * DIMS[0]..(i + 1) * DIMS[0]].to_vec());
     }
+    let (mut logits, mut classes) = (Vec::new(), Vec::new());
     while let Some(mb) = batcher.next_batch(true) {
-        black_box(session.classify_batch(&mb.x, mb.batch));
-        batcher.complete(&mb);
+        session.classify_batch_into(&mb.x, mb.batch, &mut logits, &mut classes);
+        black_box(classes.last().copied());
+        batcher.complete(mb);
     }
     let serve_stats = batcher.stats();
     println!(

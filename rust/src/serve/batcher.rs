@@ -9,6 +9,12 @@
 //! in the multi-model registry.  Latency/throughput accounting reuses
 //! [`crate::util::bench::Stats`] so serving logs read like the repo's
 //! bench logs.
+//!
+//! The padded `[batch, example_len]` buffer (and the id/timestamp side
+//! vectors) of a [`MicroBatch`] is recycled: [`Batcher::complete`] takes
+//! the batch by value and stashes its buffers for the next
+//! [`Batcher::next_batch`] cut, so a steady-state
+//! cut → infer → complete loop reallocates nothing per flush.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -74,6 +80,11 @@ pub struct Batcher {
     completed: u64,
     padded: u64,
     batches: u64,
+    /// Buffers recycled from the last [`Batcher::complete`]d micro-batch
+    /// so the next cut reuses their capacity instead of reallocating.
+    spare_x: Vec<f32>,
+    spare_ids: Vec<u64>,
+    spare_enqueued: Vec<Instant>,
 }
 
 impl Batcher {
@@ -90,6 +101,9 @@ impl Batcher {
             completed: 0,
             padded: 0,
             batches: 0,
+            spare_x: Vec::new(),
+            spare_ids: Vec::new(),
+            spare_enqueued: Vec::new(),
         }
     }
 
@@ -147,9 +161,18 @@ impl Batcher {
             return None;
         }
         let real = self.queue.len().min(self.batch);
-        let mut x = vec![0.0f32; self.batch * self.example_len];
-        let mut ids = Vec::with_capacity(real);
-        let mut enqueued = Vec::with_capacity(real);
+        // Reuse the buffers recycled by `complete`.  Real rows are
+        // overwritten below; only the padding rows need the zeros
+        // contract re-established on a recycled buffer.
+        let mut x = std::mem::take(&mut self.spare_x);
+        x.resize(self.batch * self.example_len, 0.0);
+        for v in &mut x[real * self.example_len..] {
+            *v = 0.0;
+        }
+        let mut ids = std::mem::take(&mut self.spare_ids);
+        ids.clear();
+        let mut enqueued = std::mem::take(&mut self.spare_enqueued);
+        enqueued.clear();
         for i in 0..real {
             let r = self.queue.pop_front().unwrap();
             x[i * self.example_len..(i + 1) * self.example_len].copy_from_slice(&r.x);
@@ -166,8 +189,10 @@ impl Batcher {
     }
 
     /// Record a micro-batch as answered: latencies for its real rows
-    /// stop now, padding is charged to the waste counter.
-    pub fn complete(&mut self, mb: &MicroBatch) {
+    /// stop now, padding is charged to the waste counter.  Takes the
+    /// batch by value so its buffers can be recycled into the next
+    /// [`next_batch`](Batcher::next_batch) cut.
+    pub fn complete(&mut self, mb: MicroBatch) {
         let now = Instant::now();
         for t in &mb.enqueued {
             self.latencies_s.push(now.duration_since(*t).as_secs_f64());
@@ -176,6 +201,9 @@ impl Batcher {
         self.padded += (mb.batch - mb.real) as u64;
         self.batches += 1;
         self.last_done = Some(now);
+        self.spare_x = mb.x;
+        self.spare_ids = mb.ids;
+        self.spare_enqueued = mb.enqueued;
     }
 
     pub fn stats(&self) -> ServeStats {
@@ -237,7 +265,7 @@ mod tests {
             b.push(i, req(i));
         }
         while let Some(mb) = b.next_batch(true) {
-            b.complete(&mb);
+            b.complete(mb);
         }
         let s = b.stats();
         assert_eq!(s.requests, 5);
@@ -254,7 +282,7 @@ mod tests {
         let mut b = Batcher::new(1, 4);
         b.push_at(0, req(0), Instant::now() - std::time::Duration::from_millis(50));
         let mb = b.next_batch(true).unwrap();
-        b.complete(&mb);
+        b.complete(mb);
         let lat = b.stats().latency.unwrap();
         assert!(lat.min >= 0.045, "backdated latency only {}", lat.min);
     }
@@ -284,6 +312,33 @@ mod tests {
         b.push_at(0, req(0), Instant::now() - std::time::Duration::from_secs(5));
         assert!(b.next_batch(false).is_none(), "no deadline -> partial waits for flush");
         assert!(b.next_batch(true).is_some());
+    }
+
+    #[test]
+    fn completed_batch_buffers_are_recycled() {
+        let mut b = Batcher::new(3, 4);
+        for i in 0..3 {
+            b.push(i, req(i));
+        }
+        let mb = b.next_batch(false).expect("full batch");
+        let (x_ptr, ids_ptr) = (mb.x.as_ptr(), mb.ids.as_ptr());
+        b.complete(mb);
+        // The next cut must reuse the recycled allocations verbatim...
+        for i in 3..6 {
+            b.push(i, req(i));
+        }
+        let mb = b.next_batch(false).expect("second full batch");
+        assert_eq!(mb.x.as_ptr(), x_ptr, "padded buffer reallocated");
+        assert_eq!(mb.ids.as_ptr(), ids_ptr, "id buffer reallocated");
+        assert_eq!(mb.ids, vec![3, 4, 5]);
+        assert_eq!(&mb.x[..4], &[3.0; 4]);
+        b.complete(mb);
+        // ...and a padded cut after a full one still zero-fills padding.
+        b.push(6, req(6));
+        let mb = b.next_batch(true).expect("padded cut");
+        assert_eq!(mb.x.as_ptr(), x_ptr);
+        assert_eq!(mb.real, 1);
+        assert!(mb.x[4..].iter().all(|&v| v == 0.0), "stale rows leaked into padding");
     }
 
     #[test]

@@ -11,16 +11,25 @@
 //!    bottleneck) and the kept weights are packed, in walk order, into
 //!    column-sharded [`PackedColumns`](crate::sparse::PackedColumns).
 //! 2. [`InferenceSession`] runs the batched masked GEMM over a
-//!    [`WorkerPool`], one shard per job; shard outputs scatter into the
-//!    next activation.  Results are bitwise independent of worker/shard
-//!    count and batch composition.
+//!    [`WorkerPool`]: activations are transposed once per layer into
+//!    batch-major 8-lane panels and each column shard executes the
+//!    register-blocked kernel
+//!    ([`PackedColumns::gemm_panel_into`](crate::sparse::PackedColumns::gemm_panel_into))
+//!    as a *scoped* (borrowed, unboxed) pool task, writing straight into
+//!    the layer output at its column offset.  Scratch lives in a
+//!    per-session arena, layer 0 reads the caller's input in place, and
+//!    steady-state inference allocates nothing.  Results are bitwise
+//!    independent of worker/shard count and batch composition.
 //! 3. [`Batcher`] queues requests, cuts fixed-size micro-batches, pads
-//!    the final partial batch, and accounts latency/throughput with
+//!    the final partial batch (reusing one recycled batch buffer across
+//!    cuts), and accounts latency/throughput with
 //!    [`util::bench::Stats`](crate::util::bench::Stats).
 //!
 //! `examples/infer_server.rs` wires the three together into a runnable
 //! server; `benches/serve.rs` tracks single- vs multi-thread throughput
-//! in `BENCH_serve.json`.
+//! in `BENCH_serve.json`, and `benches/kernel.rs` tracks the scalar-vs-
+//! blocked kernel speedup across batch sizes and thread counts in
+//! `BENCH_kernel.json`.
 //!
 //! Compiled models need not be rebuilt from seeds on every cold start:
 //! [`crate::store`] persists them as `.lfsrpack` artifacts whose on-disk
@@ -40,4 +49,4 @@ pub use compiled::{
     CompiledLayer, CompiledModel, MaskKind,
 };
 pub use pool::WorkerPool;
-pub use session::InferenceSession;
+pub use session::{argmax_total, InferenceSession};

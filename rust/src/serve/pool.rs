@@ -1,21 +1,74 @@
 //! Shared-queue worker thread pool for the serving engine.
 //!
 //! Hand-rolled on std primitives (no rayon/crossbeam in the offline
-//! vendor set): one `Mutex<VecDeque<Job>>` + `Condvar`, N parked worker
+//! vendor set): one `Mutex<VecDeque<Task>>` + `Condvar`, N parked worker
 //! threads, shutdown-on-drop.  The pool is deliberately dumb — all
 //! scheduling intelligence (column sharding, batch assembly) lives in
 //! [`super::session`]; jobs here are opaque closures.
+//!
+//! Two submission paths:
+//!
+//! * [`WorkerPool::submit`]/[`WorkerPool::run_all`] — boxed `'static`
+//!   closures, one heap allocation per job.  Fine for setup work and
+//!   tests.
+//! * [`WorkerPool::run_scoped`] — the steady-state serving path: the
+//!   caller's closure is *borrowed*, shared with workers as a raw
+//!   pointer plus a monomorphized trampoline, and the call blocks until
+//!   every task finished (so the borrow provably outlives all
+//!   executions).  Queue entries are small plain values whose `VecDeque`
+//!   capacity is retained across calls, so after warm-up a
+//!   `run_scoped` dispatch performs **zero heap allocation** — the
+//!   per-request boxed-closure churn of the old serving path is gone.
 
+use std::any::Any;
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Stack-allocated control block of one [`WorkerPool::run_scoped`] call.
+/// Lives on the caller's stack; workers reach it through the raw pointer
+/// in [`Task::Scoped`], which is sound because `run_scoped` blocks until
+/// `remaining` hits zero.
+struct ScopedBatch {
+    /// Monomorphized trampoline: casts `ctx` back to the caller's
+    /// concrete closure type and invokes it with the task index.
+    func: unsafe fn(*const (), usize),
+    /// Type-erased `&F` of the caller's `F: Fn(usize) + Sync` closure.
+    ctx: *const (),
+    remaining: AtomicUsize,
+    /// First panic payload of the batch, re-raised on the caller so the
+    /// original assertion message/location survives.
+    panic_payload: Mutex<Option<Box<dyn Any + Send>>>,
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+// SAFETY: `ctx` points at an `F: Sync` closure shared read-only across
+// workers; the atomics/mutex/condvar are Sync by themselves.
+unsafe impl Sync for ScopedBatch {}
+
+unsafe fn call_erased<F: Fn(usize)>(ctx: *const (), index: usize) {
+    (*(ctx as *const F))(index)
+}
+
+enum Task {
+    Boxed(Job),
+    Scoped { batch: *const ScopedBatch, index: usize },
+}
+
+// SAFETY: the `Scoped` pointer is only dereferenced by workers while the
+// originating `run_scoped` call (which owns the pointee) is still blocked
+// waiting for the batch, and `ScopedBatch` itself is `Sync`.
+unsafe impl Send for Task {}
+
 struct Queue {
-    /// (pending jobs, shutting_down)
-    state: Mutex<(VecDeque<Job>, bool)>,
+    /// (pending tasks, shutting_down)
+    state: Mutex<(VecDeque<Task>, bool)>,
     cv: Condvar,
 }
 
@@ -55,7 +108,7 @@ impl WorkerPool {
     pub fn submit(&self, job: Job) {
         let mut state = self.queue.state.lock().unwrap();
         assert!(!state.1, "submit after shutdown");
-        state.0.push_back(job);
+        state.0.push_back(Task::Boxed(job));
         drop(state);
         self.queue.cv.notify_one();
     }
@@ -84,15 +137,57 @@ impl WorkerPool {
         }
         out.into_iter().map(Option::unwrap).collect()
     }
+
+    /// Execute `f(0) .. f(n-1)` on the pool and block until all have
+    /// finished.  The closure is **borrowed**, not boxed: tasks enqueue
+    /// as plain `(pointer, index)` values whose queue capacity is
+    /// retained, so the steady-state serving path allocates nothing
+    /// here.  Tasks may run in any order and concurrently; if any task
+    /// panics, the panic is re-raised on the caller after the whole
+    /// batch drained (workers survive).
+    pub fn run_scoped<F: Fn(usize) + Sync>(&self, n: usize, f: &F) {
+        if n == 0 {
+            return;
+        }
+        let batch = ScopedBatch {
+            func: call_erased::<F>,
+            ctx: f as *const F as *const (),
+            remaining: AtomicUsize::new(n),
+            panic_payload: Mutex::new(None),
+            done: Mutex::new(false),
+            cv: Condvar::new(),
+        };
+        {
+            let mut state = self.queue.state.lock().unwrap();
+            assert!(!state.1, "run_scoped after shutdown");
+            for index in 0..n {
+                state.0.push_back(Task::Scoped { batch: &batch, index });
+            }
+            drop(state);
+            if n == 1 {
+                self.queue.cv.notify_one();
+            } else {
+                self.queue.cv.notify_all();
+            }
+        }
+        let mut done = batch.done.lock().unwrap();
+        while !*done {
+            done = batch.cv.wait(done).unwrap();
+        }
+        drop(done);
+        if let Some(payload) = batch.panic_payload.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
 }
 
 fn worker_loop(q: Arc<Queue>) {
     loop {
-        let job = {
+        let task = {
             let mut state = q.state.lock().unwrap();
             loop {
-                if let Some(j) = state.0.pop_front() {
-                    break j;
+                if let Some(t) = state.0.pop_front() {
+                    break t;
                 }
                 if state.1 {
                     return;
@@ -100,7 +195,38 @@ fn worker_loop(q: Arc<Queue>) {
                 state = q.cv.wait(state).unwrap();
             }
         };
-        job();
+        match task {
+            Task::Boxed(job) => {
+                // A panicking boxed job must not kill the worker: on a
+                // shared pool a dead worker means later scoped batches
+                // are popped by nobody and their callers hang forever.
+                // (run_all's receiver sees the dropped sender and
+                // reports the failure on the caller side.)
+                let _ = catch_unwind(AssertUnwindSafe(job));
+            }
+            Task::Scoped { batch, index } => {
+                // SAFETY: the originating `run_scoped` call blocks until
+                // `remaining` reaches zero, so `batch` (on its stack) is
+                // alive for the whole execution below.
+                let b = unsafe { &*batch };
+                let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (b.func)(b.ctx, index) }));
+                if let Err(payload) = ok {
+                    // Keep the first payload; later ones are dropped.
+                    let mut slot = b.panic_payload.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+                if b.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                    // Last task: signal completion *while holding the
+                    // lock* so the caller cannot observe `done`, return,
+                    // and free the batch between our store and notify.
+                    let mut d = b.done.lock().unwrap();
+                    *d = true;
+                    b.cv.notify_all();
+                }
+            }
+        }
     }
 }
 
@@ -145,6 +271,91 @@ mod tests {
         let flush: Vec<Box<dyn FnOnce() + Send>> = vec![Box::new(|| ())];
         pool.run_all(flush);
         assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn scoped_runs_every_index_exactly_once() {
+        let pool = WorkerPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        for round in 0..5 {
+            pool.run_scoped(hits.len(), &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), round + 1, "index {i}");
+            }
+        }
+        pool.run_scoped(0, &|_| panic!("no tasks for n == 0"));
+    }
+
+    #[test]
+    fn scoped_tasks_borrow_caller_state() {
+        // The whole point of run_scoped: non-'static borrows, no boxing.
+        let pool = WorkerPool::new(2);
+        let input: Vec<usize> = (0..40).collect();
+        let out: Vec<AtomicUsize> = (0..40).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_scoped(input.len(), &|i| {
+            out[i].store(input[i] * 3, Ordering::SeqCst);
+        });
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.load(Ordering::SeqCst), i * 3);
+        }
+    }
+
+    #[test]
+    fn scoped_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_scoped(4, &|i| {
+                if i == 2 {
+                    panic!("task boom");
+                }
+            });
+        }))
+        .expect_err("panic must reach the caller");
+        // The ORIGINAL payload is re-raised, not a generic wrapper.
+        assert_eq!(err.downcast_ref::<&str>(), Some(&"task boom"));
+        // Workers survived the panic and keep serving.
+        let n = AtomicUsize::new(0);
+        pool.run_scoped(8, &|_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn boxed_job_panic_does_not_kill_worker() {
+        // Single worker: if the panicking boxed job killed it, the
+        // scoped batch below would hang forever.
+        let pool = WorkerPool::new(1);
+        pool.submit(Box::new(|| panic!("boxed boom")));
+        let n = AtomicUsize::new(0);
+        pool.run_scoped(4, &|_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn scoped_from_many_threads_concurrently() {
+        let pool = Arc::new(WorkerPool::new(3));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        let sum = AtomicUsize::new(0);
+                        pool.run_scoped(10, &|i| {
+                            sum.fetch_add(i + t, Ordering::SeqCst);
+                        });
+                        assert_eq!(sum.load(Ordering::SeqCst), 45 + 10 * t);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

@@ -1,28 +1,75 @@
 //! Batched inference over a compiled model and a worker pool.
 //!
-//! Each layer step fans its column shards out as pool jobs: workers run
-//! [`PackedColumns::gemm_into`] on disjoint column ranges (no shared
-//! mutable state), the session scatters the shard outputs into the next
-//! activation buffer in shard order.  Because the per-(example, column)
-//! accumulation order is fixed by the packed layout, the produced floats
-//! are **bitwise identical** for any worker count, any shard count, and
-//! any batch composition — the parity tests in
-//! `rust/tests/serve_integration.rs` assert all three.
+//! Each layer step transposes the incoming activations once into
+//! batch-major panels ([`transpose_panels`], 8 batch lanes per panel) and
+//! fans the layer's column shards out as **scoped** pool tasks: workers
+//! run the register-blocked
+//! [`PackedColumns::gemm_panel_into`](crate::sparse::PackedColumns::gemm_panel_into)
+//! kernel and
+//! write straight into the `[batch, cols]` layer output at their shard's
+//! column offset — no per-shard `[batch, width]` intermediate, no scatter
+//! copy, no boxed per-request closures ([`WorkerPool::run_scoped`]
+//! borrows one closure for the whole shard fan-out).
+//!
+//! All scratch (panel buffer + ping-pong activation buffers) lives in a
+//! per-session arena that is checked out per call and returned after, so
+//! steady-state [`InferenceSession::infer_batch_into`] performs **zero
+//! heap allocation** once warmed up (`rust/tests/alloc_steady_state.rs`
+//! counts).  Layer 0 reads the caller's input slice directly — the input
+//! is never copied.
+//!
+//! Because the per-(example, column) accumulation order is fixed by the
+//! packed layout (and the blocked kernel replays it exactly — see
+//! `sparse::packed`), the produced floats are **bitwise identical** for
+//! any worker count, any shard count, and any batch composition — the
+//! parity tests in `rust/tests/serve_integration.rs` and
+//! `rust/tests/kernel_parity.rs` assert all three.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use super::compiled::CompiledModel;
+use super::compiled::{CompiledLayer, CompiledModel};
 use super::pool::WorkerPool;
-use crate::sparse::PackedColumns;
+use crate::sparse::packed::{transpose_panels, BATCH_LANES};
+
+/// Reusable per-call scratch: the transposed activation panels and the
+/// ping-pong buffers that carry activations between layers.  Checked out
+/// of the session's arena pool at the top of an inference call and
+/// returned at the end, so repeated calls at the same batch size reuse
+/// the same capacity and allocate nothing.
+#[derive(Default)]
+struct ScratchArena {
+    panels: Vec<f32>,
+    ping: Vec<f32>,
+    pong: Vec<f32>,
+}
+
+/// Shared write target for one layer's shard fan-out.  Shards write
+/// disjoint column ranges of the same `[batch, cols]` output; the ranges
+/// interleave row by row, so they cannot be expressed as disjoint `&mut`
+/// slices — workers go through this raw pointer instead.
+#[derive(Clone, Copy)]
+struct SharedOut(*mut f32);
+
+// SAFETY: every task of one `run_scoped` fan-out writes only its own
+// shard's `[col_start, col_end)` columns (see `run_layer`), and the
+// pointee outlives the blocking `run_scoped` call.
+unsafe impl Send for SharedOut {}
+unsafe impl Sync for SharedOut {}
 
 /// A model bound to a worker pool, ready to serve batches.
 pub struct InferenceSession {
-    model: Arc<CompiledModel>,
+    model: CompiledModel,
     /// `None` = run shards inline on the caller thread (true
     /// single-threaded baseline, no pool overhead).  The pool is an `Arc`
     /// so many sessions can multiplex one set of workers
     /// (`store::ModelRegistry`).
     pool: Option<Arc<WorkerPool>>,
+    /// Idle scratch arenas.  One concurrent caller ⇒ one arena that is
+    /// recycled forever; N concurrent callers grow the pool to N and
+    /// then stop allocating.  (The registry's per-tenant sessions each
+    /// carry their own arenas, so shared-pool tenants stay zero-alloc
+    /// too.)
+    arenas: Mutex<Vec<ScratchArena>>,
 }
 
 impl InferenceSession {
@@ -35,8 +82,9 @@ impl InferenceSession {
             workers
         };
         InferenceSession {
-            model: Arc::new(model),
+            model,
             pool: if workers > 1 { Some(Arc::new(WorkerPool::new(workers))) } else { None },
+            arenas: Mutex::new(Vec::new()),
         }
     }
 
@@ -44,7 +92,7 @@ impl InferenceSession {
     /// multi-tenant registry gives N models one shared set of worker
     /// threads.
     pub fn with_shared_pool(model: CompiledModel, pool: Arc<WorkerPool>) -> InferenceSession {
-        InferenceSession { model: Arc::new(model), pool: Some(pool) }
+        InferenceSession { model, pool: Some(pool), arenas: Mutex::new(Vec::new()) }
     }
 
     /// Worker threads backing this session (1 = inline).
@@ -57,44 +105,104 @@ impl InferenceSession {
     }
 
     /// Forward `batch` examples (`x` row-major `[batch, in_dim]`);
-    /// returns row-major `[batch, out_dim]` logits.
+    /// returns row-major `[batch, out_dim]` logits.  Allocates the
+    /// result vector; the zero-allocation serving path is
+    /// [`infer_batch_into`](InferenceSession::infer_batch_into).
     pub fn infer_batch(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.infer_batch_into(x, batch, &mut out);
+        out
+    }
+
+    /// Forward `batch` examples into a caller-provided buffer (cleared
+    /// and resized to `batch * out_dim`).  After warm-up — arena and
+    /// queue capacities grown, `out` capacity reached — repeated calls
+    /// at the same batch size perform no heap allocation at all: layer 0
+    /// reads `x` in place, scratch comes from the arena, shard tasks are
+    /// borrowed (not boxed), and the kernel writes layer outputs
+    /// directly.
+    pub fn infer_batch_into(&self, x: &[f32], batch: usize, out: &mut Vec<f32>) {
         assert_eq!(x.len(), batch * self.model.in_dim(), "bad input length");
-        let mut act: Arc<Vec<f32>> = Arc::new(x.to_vec());
-        for li in 0..self.model.layers.len() {
+        let mut arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
+        let mut a = std::mem::take(&mut arena.ping);
+        let mut b = std::mem::take(&mut arena.pong);
+        let mut panels = std::mem::take(&mut arena.panels);
+        let n_layers = self.model.layers.len();
+        for li in 0..n_layers {
             let layer = &self.model.layers[li];
-            let mut out = vec![0.0f32; batch * layer.cols];
-            match &self.pool {
-                None => {
-                    for shard in &layer.shards {
-                        let mut buf = vec![0.0f32; batch * shard.width()];
-                        shard.gemm_into(&act, batch, &layer.bias, layer.relu, &mut buf);
-                        scatter(&buf, shard, batch, layer.cols, &mut out);
-                    }
-                }
-                Some(pool) => {
-                    type ShardJob = Box<dyn FnOnce() -> Vec<f32> + Send + 'static>;
-                    let jobs: Vec<ShardJob> = (0..layer.shards.len())
-                        .map(|si| {
-                            let model = Arc::clone(&self.model);
-                            let act = Arc::clone(&act);
-                            Box::new(move || {
-                                let layer = &model.layers[li];
-                                let shard = &layer.shards[si];
-                                let mut buf = vec![0.0f32; batch * shard.width()];
-                                shard.gemm_into(&act, batch, &layer.bias, layer.relu, &mut buf);
-                                buf
-                            }) as ShardJob
-                        })
-                        .collect();
-                    for (si, buf) in pool.run_all(jobs).into_iter().enumerate() {
-                        scatter(&buf, &layer.shards[si], batch, layer.cols, &mut out);
+            // Invariant: layer li's input lives in `a` (layer 0 borrows
+            // the caller's slice instead — never copied).
+            let src: &[f32] = if li == 0 { x } else { &a };
+            transpose_panels(src, batch, layer.rows, &mut panels);
+            // Resize without zero-filling retained capacity: the shard
+            // fan-out overwrites every element (shards jointly cover
+            // [0, cols) and every real batch row is written).
+            if li + 1 == n_layers {
+                out.resize(batch * layer.cols, 0.0);
+                self.run_layer(layer, &panels, batch, out);
+            } else {
+                b.resize(batch * layer.cols, 0.0);
+                self.run_layer(layer, &panels, batch, &mut b);
+                std::mem::swap(&mut a, &mut b);
+            }
+        }
+        arena.ping = a;
+        arena.pong = b;
+        arena.panels = panels;
+        self.arenas.lock().unwrap().push(arena);
+    }
+
+    /// One layer: every shard × every panel of the blocked kernel,
+    /// writing directly into the `[batch, cols]` output.
+    fn run_layer(&self, layer: &CompiledLayer, panels: &[f32], batch: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), batch * layer.cols);
+        let slab = layer.rows * BATCH_LANES;
+        let n_panels = (batch + BATCH_LANES - 1) / BATCH_LANES;
+        match &self.pool {
+            None => {
+                for shard in &layer.shards {
+                    for p in 0..n_panels {
+                        let lanes = (batch - p * BATCH_LANES).min(BATCH_LANES);
+                        let panel = &panels[p * slab..][..slab];
+                        let dst = &mut out[p * BATCH_LANES * layer.cols..];
+                        shard.gemm_panel_into(
+                            panel,
+                            lanes,
+                            &layer.bias,
+                            layer.relu,
+                            dst,
+                            layer.cols,
+                        );
                     }
                 }
             }
-            act = Arc::new(out);
+            Some(pool) => {
+                let shared = SharedOut(out.as_mut_ptr());
+                let shards = &layer.shards;
+                pool.run_scoped(shards.len(), &|si: usize| {
+                    let shard = &shards[si];
+                    for p in 0..n_panels {
+                        let lanes = (batch - p * BATCH_LANES).min(BATCH_LANES);
+                        let panel = &panels[p * slab..][..slab];
+                        // SAFETY: task si writes only columns
+                        // [shard.col_start, shard.col_end) — disjoint
+                        // across tasks — at lane offsets bounded by
+                        // `lanes`, all inside `out`, which outlives the
+                        // blocking run_scoped call.
+                        unsafe {
+                            shard.gemm_panel_raw(
+                                panel,
+                                lanes,
+                                &layer.bias,
+                                layer.relu,
+                                shared.0.add(p * BATCH_LANES * layer.cols),
+                                layer.cols,
+                            );
+                        }
+                    }
+                });
+            }
         }
-        Arc::try_unwrap(act).unwrap_or_else(|a| (*a).clone())
     }
 
     /// Forward one example.
@@ -102,31 +210,51 @@ impl InferenceSession {
         self.infer_batch(x, 1)
     }
 
-    /// Argmax per example — the classification answer path.
+    /// Argmax per example — the classification answer path.  Uses the
+    /// [`argmax_total`] total order, so NaN logits yield a deterministic
+    /// class instead of a panic.  Allocates the result vectors; the
+    /// zero-allocation loop is
+    /// [`classify_batch_into`](InferenceSession::classify_batch_into).
     pub fn classify_batch(&self, x: &[f32], batch: usize) -> Vec<usize> {
-        let logits = self.infer_batch(x, batch);
+        let mut logits = Vec::new();
+        let mut classes = Vec::new();
+        self.classify_batch_into(x, batch, &mut logits, &mut classes);
+        classes
+    }
+
+    /// [`classify_batch`](InferenceSession::classify_batch) into
+    /// caller-provided buffers (both cleared and refilled): with warm
+    /// `logits`/`classes` capacity this performs no heap allocation, so
+    /// a cut → classify → complete serving loop stays allocation-free
+    /// end to end.
+    pub fn classify_batch_into(
+        &self,
+        x: &[f32],
+        batch: usize,
+        logits: &mut Vec<f32>,
+        classes: &mut Vec<usize>,
+    ) {
+        self.infer_batch_into(x, batch, logits);
         let k = self.model.out_dim();
-        (0..batch)
-            .map(|b| {
-                let row = &logits[b * k..(b + 1) * k];
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap()
-            })
-            .collect()
+        classes.clear();
+        classes.extend((0..batch).map(|b| argmax_total(&logits[b * k..(b + 1) * k])));
     }
 }
 
-/// Copy a shard's `[batch, width]` output into the `[batch, cols]` layer
-/// activation at the shard's column offset.
-fn scatter(buf: &[f32], shard: &PackedColumns, batch: usize, cols: usize, out: &mut [f32]) {
-    let width = shard.width();
-    for b in 0..batch {
-        out[b * cols + shard.col_start..b * cols + shard.col_end]
-            .copy_from_slice(&buf[b * width..(b + 1) * width]);
+/// Index of the maximum value under [`f32::total_cmp`]'s total order,
+/// first index winning ties.  Never panics: NaN is ordered, not
+/// poisonous — `-NaN < -∞ < … < +∞ < +NaN`, so a positive-bit NaN logit
+/// deterministically wins and a negative-bit NaN deterministically
+/// loses.  Panics only on an empty slice.
+pub fn argmax_total(row: &[f32]) -> usize {
+    assert!(!row.is_empty(), "argmax of an empty row");
+    let mut best = 0usize;
+    for (i, v) in row.iter().enumerate().skip(1) {
+        if v.total_cmp(&row[best]) == std::cmp::Ordering::Greater {
+            best = i;
+        }
     }
+    best
 }
 
 #[cfg(test)]
@@ -213,6 +341,38 @@ mod tests {
     }
 
     #[test]
+    fn arena_reuse_is_bitwise_stable() {
+        // Consecutive calls through the same (warm) arena, including a
+        // different batch size in between, keep returning the same bits.
+        let mut rng = Pcg32::new(12);
+        let batch = 9; // exercises a padded tail panel (8 + 1)
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.next_normal()).collect();
+        for workers in [1usize, 3] {
+            let session = InferenceSession::new(toy_model(3), workers);
+            let first = session.infer_batch(&x, batch);
+            let mid = session.infer_batch(&x[..2 * 12], 2);
+            assert_eq!(mid.len(), 2 * 4);
+            let mut second = Vec::new();
+            session.infer_batch_into(&x, batch, &mut second);
+            for (i, (&u, &v)) in first.iter().zip(&second).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "workers {workers} logit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn infer_batch_into_reuses_out_buffer() {
+        let session = InferenceSession::new(toy_model(2), 1);
+        let x = vec![0.25f32; 3 * 12];
+        let mut out = Vec::new();
+        session.infer_batch_into(&x, 3, &mut out);
+        assert_eq!(out.len(), 3 * 4);
+        let ptr = out.as_ptr();
+        session.infer_batch_into(&x, 3, &mut out);
+        assert_eq!(out.as_ptr(), ptr, "warm out buffer must not reallocate");
+    }
+
+    #[test]
     fn classify_matches_argmax() {
         let mut rng = Pcg32::new(4);
         let x: Vec<f32> = (0..2 * 12).map(|_| rng.next_normal()).collect();
@@ -224,5 +384,20 @@ mod tests {
             let best = (0..4).max_by(|&i, &j| row[i].partial_cmp(&row[j]).unwrap()).unwrap();
             assert_eq!(classes[b], best);
         }
+    }
+
+    #[test]
+    fn argmax_total_is_total_and_deterministic() {
+        assert_eq!(argmax_total(&[1.0, 3.0, 2.0]), 1);
+        // First index wins exact ties.
+        assert_eq!(argmax_total(&[2.0, 2.0, 1.0]), 0);
+        // Positive NaN is the top of the total order...
+        assert_eq!(argmax_total(&[1.0, f32::NAN, 5.0]), 1);
+        // ...negative-bit NaN is the bottom.
+        let neg_nan = f32::from_bits(f32::NAN.to_bits() | 0x8000_0000);
+        assert_eq!(argmax_total(&[neg_nan, -f32::INFINITY, -1.0]), 2);
+        // All-NaN rows still answer deterministically.
+        assert_eq!(argmax_total(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax_total(&[f32::INFINITY, f32::NAN]), 1);
     }
 }

@@ -8,7 +8,7 @@ pub mod memory;
 pub mod packed;
 
 pub use csc::{CscEntry, CscMatrix};
-pub use packed::PackedColumns;
+pub use packed::{transpose_panels, PackedColumns, BATCH_LANES};
 pub use memory::{
     baseline_footprint, baseline_footprint_analytic, proposed_footprint,
     proposed_footprint_analytic, proposed_footprint_stream, BaselineFootprint,

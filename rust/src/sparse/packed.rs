@@ -21,8 +21,76 @@
 //! executed by different worker threads with no synchronisation, and the
 //! per-(batch, column) accumulation order — hence the exact float result —
 //! does not depend on how many workers run.
+//!
+//! # Batch-major blocked kernel
+//!
+//! The scalar [`PackedColumns::gemm_into`] walks one batch row at a time,
+//! so every kept-weight entry (`row_idx`/`values` pair) is re-loaded
+//! `batch` times and each activation gather is a strided scalar load.
+//! The blocked path inverts that: [`transpose_panels`] repacks the
+//! row-major `[batch, rows]` activations into panels of
+//! [`BATCH_LANES`] = 8 batch lanes, each panel a row-major
+//! `[rows, BATCH_LANES]` slab, so one pass over a column's entries feeds
+//! 8 examples at once — the entry load is amortized 8× and the 8
+//! activation lanes for a row are one contiguous load the compiler
+//! auto-vectorizes against a `[f32; 8]` accumulator array.
+//!
+//! Determinism is preserved by construction: each (batch lane, column)
+//! accumulator still sums that column's entries in exactly the stored
+//! order, then adds bias, then applies ReLU — the identical sequence of
+//! f32 operations the scalar kernel performs — so the blocked kernel is
+//! **bit-for-bit** equal to `gemm_into` for any batch size, shard count,
+//! or lane padding (padded tail lanes are zero and never written out).
+//! `rust/tests/kernel_parity.rs` pins this.
+//!
+//! [`PackedColumns::gemm_panel_into`] also writes straight into the
+//! `[batch, cols]` layer output at the shard's own column offset
+//! (`out_stride` = layer cols), which removes the per-shard `[batch,
+//! width]` intermediate and the scatter copy the serving engine used to
+//! pay per layer.
 
 use crate::mask::Mask;
+
+/// Batch lanes per activation panel of the blocked kernel (one
+/// register-resident `[f32; BATCH_LANES]` accumulator row).
+pub const BATCH_LANES: usize = 8;
+
+/// Transpose a row-major `[batch, rows]` activation block into
+/// batch-major panels: panel `p` holds batch rows
+/// `p*BATCH_LANES .. p*BATCH_LANES+8` as a row-major
+/// `[rows, BATCH_LANES]` slab, so lane loads for one activation row are
+/// contiguous.  `panels` is cleared and resized to
+/// `ceil(batch/8) * rows * 8`; tail lanes past `batch` are zero-filled
+/// (they are never written back out, so padding cannot leak).
+pub fn transpose_panels(x: &[f32], batch: usize, rows: usize, panels: &mut Vec<f32>) {
+    assert_eq!(x.len(), batch * rows);
+    let n_panels = (batch + BATCH_LANES - 1) / BATCH_LANES;
+    // No full-buffer zero-fill on the warm path: resize only zeroes newly
+    // grown capacity; every retained element is either a real lane
+    // (overwritten below) or a tail-panel padding lane (zeroed
+    // explicitly — only the last panel can be partial).
+    panels.resize(n_panels * rows * BATCH_LANES, 0.0);
+    for p in 0..n_panels {
+        let lanes = (batch - p * BATCH_LANES).min(BATCH_LANES);
+        let slab = &mut panels[p * rows * BATCH_LANES..(p + 1) * rows * BATCH_LANES];
+        for l in 0..lanes {
+            let xrow = &x[(p * BATCH_LANES + l) * rows..][..rows];
+            for (r, &v) in xrow.iter().enumerate() {
+                slab[r * BATCH_LANES + l] = v;
+            }
+        }
+        if lanes < BATCH_LANES {
+            // Keep padding lanes zero — their accumulators are discarded,
+            // but stale subnormal/NaN garbage would still ride through
+            // the SIMD lanes.
+            for r in 0..rows {
+                for l in lanes..BATCH_LANES {
+                    slab[r * BATCH_LANES + l] = 0.0;
+                }
+            }
+        }
+    }
+}
 
 /// Kept weights of columns `[col_start, col_end)` of a rows×cols matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -203,6 +271,92 @@ impl PackedColumns {
         }
     }
 
+    /// Batch-major blocked GEMM over one activation panel.
+    ///
+    /// `panel` is one [`transpose_panels`] slab (`rows * BATCH_LANES`
+    /// floats); `lanes` (1..=[`BATCH_LANES`]) is how many of its batch
+    /// lanes are real rows.  Results are written **directly into the
+    /// layer output** at this shard's column offset: lane `l`, local
+    /// column `c` lands at `out[l * out_stride + col_start + c]`, so no
+    /// `[batch, width]` intermediate or scatter copy exists.
+    ///
+    /// Bit-for-bit equal to [`gemm_into`](PackedColumns::gemm_into): per
+    /// (lane, column) the accumulation order over stored entries, the
+    /// bias add, and the ReLU are the same f32 operation sequence.
+    pub fn gemm_panel_into(
+        &self,
+        panel: &[f32],
+        lanes: usize,
+        bias: &[f32],
+        relu: bool,
+        out: &mut [f32],
+        out_stride: usize,
+    ) {
+        assert!((1..=BATCH_LANES).contains(&lanes));
+        assert_eq!(panel.len(), self.rows * BATCH_LANES);
+        assert!(out_stride >= self.col_end);
+        assert!(self.width() == 0 || out.len() >= (lanes - 1) * out_stride + self.col_end);
+        assert!(bias.is_empty() || bias.len() >= self.col_end);
+        // SAFETY: the asserts above bound every write offset
+        // `l * out_stride + col` (l < lanes, col < col_end) inside `out`.
+        unsafe { self.gemm_panel_raw(panel, lanes, bias, relu, out.as_mut_ptr(), out_stride) }
+    }
+
+    /// Raw-pointer variant of [`gemm_panel_into`] for concurrent shard
+    /// execution: shards of one layer write disjoint column ranges of the
+    /// same `[batch, cols]` output, which safe `&mut` slices cannot
+    /// express (the ranges interleave row by row).
+    ///
+    /// # Safety
+    ///
+    /// * `out` must be valid for writes at every offset
+    ///   `l * out_stride + c` for `l < lanes`, `c ∈ [col_start, col_end)`;
+    /// * no other thread may concurrently read or write those offsets
+    ///   (shards with disjoint `[col_start, col_end)` never collide);
+    /// * `panel.len() == rows * BATCH_LANES` and
+    ///   `1 <= lanes <= BATCH_LANES` must hold, and `bias` must be empty
+    ///   or have length `>= col_end`.
+    ///
+    /// [`gemm_panel_into`]: PackedColumns::gemm_panel_into
+    pub unsafe fn gemm_panel_raw(
+        &self,
+        panel: &[f32],
+        lanes: usize,
+        bias: &[f32],
+        relu: bool,
+        out: *mut f32,
+        out_stride: usize,
+    ) {
+        debug_assert!((1..=BATCH_LANES).contains(&lanes));
+        debug_assert_eq!(panel.len(), self.rows * BATCH_LANES);
+        let width = self.width();
+        for local in 0..width {
+            let (lo, hi) = (self.col_ptr[local] as usize, self.col_ptr[local + 1] as usize);
+            let mut acc = [0.0f32; BATCH_LANES];
+            for e in lo..hi {
+                let v = self.values[e];
+                let slab = &panel[self.row_idx[e] as usize * BATCH_LANES..][..BATCH_LANES];
+                for l in 0..BATCH_LANES {
+                    acc[l] += slab[l] * v;
+                }
+            }
+            let col = self.col_start + local;
+            // Bias is *skipped*, not added as 0.0, when absent — adding
+            // 0.0 would flip a -0.0 accumulator to +0.0 and break bitwise
+            // parity with the scalar kernel.
+            let b = if bias.is_empty() { None } else { Some(bias[col]) };
+            for (l, &a) in acc.iter().take(lanes).enumerate() {
+                let mut y = a;
+                if let Some(b) = b {
+                    y += b;
+                }
+                if relu {
+                    y = y.max(0.0);
+                }
+                out.add(l * out_stride + col).write(y);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -317,5 +471,125 @@ mod tests {
         assert_eq!(p.nnz(), 0);
         let mut out = vec![0.0f32; 0];
         p.gemm_into(&weights(16, 2), 2, &[], false, &mut out);
+        let mut panels = Vec::new();
+        transpose_panels(&weights(16, 2), 2, 8, &mut panels);
+        p.gemm_panel_into(&panels, 2, &[], false, &mut out, 8);
+    }
+
+    #[test]
+    fn transpose_panels_layout_and_zero_padding() {
+        // batch 3, rows 2: one panel, lanes 3 real + 5 zero.
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut panels = Vec::new();
+        transpose_panels(&x, 3, 2, &mut panels);
+        assert_eq!(panels.len(), 2 * BATCH_LANES);
+        for l in 0..3 {
+            assert_eq!(panels[l], x[l * 2], "row 0 lane {l}");
+            assert_eq!(panels[BATCH_LANES + l], x[l * 2 + 1], "row 1 lane {l}");
+        }
+        for l in 3..BATCH_LANES {
+            assert_eq!(panels[l], 0.0);
+            assert_eq!(panels[BATCH_LANES + l], 0.0);
+        }
+        // batch 9: two panels, second has one real lane.
+        let x: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        transpose_panels(&x, 9, 1, &mut panels);
+        assert_eq!(panels.len(), 2 * BATCH_LANES);
+        assert_eq!(&panels[..8], &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(panels[BATCH_LANES], 8.0);
+        assert!(panels[BATCH_LANES + 1..].iter().all(|&v| v == 0.0));
+    }
+
+    /// Run the blocked kernel over a full `[batch, cols]` output the way
+    /// the serving engine does: transpose once, then every shard writes
+    /// its columns of every panel in place.
+    fn blocked_forward(
+        shards: &[PackedColumns],
+        x: &[f32],
+        batch: usize,
+        rows: usize,
+        cols: usize,
+        bias: &[f32],
+        relu: bool,
+    ) -> Vec<f32> {
+        let mut panels = Vec::new();
+        transpose_panels(x, batch, rows, &mut panels);
+        let mut out = vec![0.0f32; batch * cols];
+        let n_panels = (batch + BATCH_LANES - 1) / BATCH_LANES;
+        for shard in shards {
+            for p in 0..n_panels {
+                let lanes = (batch - p * BATCH_LANES).min(BATCH_LANES);
+                let panel = &panels[p * rows * BATCH_LANES..][..rows * BATCH_LANES];
+                let dst = &mut out[p * BATCH_LANES * cols..];
+                shard.gemm_panel_into(panel, lanes, bias, relu, dst, cols);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn panel_kernel_bitwise_matches_scalar_all_batches_and_shards() {
+        let (rows, cols) = (40, 30);
+        let cfg = PrsMaskConfig::auto(rows, cols, 5, 9);
+        let seq = prs_keep_sequence(rows, cols, 0.7, cfg);
+        let w = weights(rows * cols, 11);
+        let bias = weights(cols, 12);
+        for batch in [1usize, 3, 8, 9, 16, 33] {
+            let x = weights(batch * rows, 13 + batch as u64);
+            for n_shards in [1usize, 3, 7] {
+                let bounds = (0..n_shards)
+                    .map(|i| (cols * i / n_shards, cols * (i + 1) / n_shards))
+                    .collect::<Vec<_>>();
+                let shards: Vec<PackedColumns> = bounds
+                    .iter()
+                    .map(|&(lo, hi)| PackedColumns::from_sequence(rows, cols, lo, hi, &seq, &w))
+                    .collect();
+                for (bias, relu) in [(&bias[..], true), (&[][..], false)] {
+                    // Scalar reference: per-shard gemm + scatter.
+                    let mut expect = vec![0.0f32; batch * cols];
+                    for shard in &shards {
+                        let mut buf = vec![0.0f32; batch * shard.width()];
+                        shard.gemm_into(&x, batch, bias, relu, &mut buf);
+                        for b in 0..batch {
+                            expect[b * cols + shard.col_start..b * cols + shard.col_end]
+                                .copy_from_slice(&buf[b * shard.width()..(b + 1) * shard.width()]);
+                        }
+                    }
+                    let got = blocked_forward(&shards, &x, batch, rows, cols, bias, relu);
+                    for (i, (&u, &v)) in got.iter().zip(&expect).enumerate() {
+                        assert_eq!(
+                            u.to_bits(),
+                            v.to_bits(),
+                            "batch {batch} shards {n_shards} relu {relu} out {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_kernel_matches_scalar_on_explicit_masks() {
+        let (rows, cols, batch) = (24, 20, 5);
+        let w = weights(rows * cols, 21);
+        let x = weights(batch * rows, 22);
+        let mask = random_mask(rows, cols, 0.6, 23);
+        let shards = vec![
+            PackedColumns::from_mask(&mask, 0, 11, &w),
+            PackedColumns::from_mask(&mask, 11, cols, &w),
+        ];
+        let mut expect = vec![0.0f32; batch * cols];
+        for shard in &shards {
+            let mut buf = vec![0.0f32; batch * shard.width()];
+            shard.gemm_into(&x, batch, &[], false, &mut buf);
+            for b in 0..batch {
+                expect[b * cols + shard.col_start..b * cols + shard.col_end]
+                    .copy_from_slice(&buf[b * shard.width()..(b + 1) * shard.width()]);
+            }
+        }
+        let got = blocked_forward(&shards, &x, batch, rows, cols, &[], false);
+        for (&u, &v) in got.iter().zip(&expect) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
     }
 }

@@ -12,6 +12,13 @@
 //! Load/evict/list are concurrent with serving: the model table is behind
 //! a `RwLock`, entries are `Arc`s, and a drain in flight keeps its entry
 //! alive even if the model is evicted mid-batch.
+//!
+//! Steady-state drains ride the arena path end to end: each tenant's
+//! session carries its own scratch arenas (so shared-pool tenants stay
+//! allocation-free inside `infer_batch_into`), shard work is dispatched
+//! to the shared pool as borrowed scoped tasks rather than boxed
+//! closures, and completed micro-batches hand their padded buffers back
+//! to the tenant's batcher for the next cut.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -244,13 +251,17 @@ impl ModelRegistry {
             .map(|(k, v)| (k.clone(), Arc::clone(v)))
             .collect();
         let mut out = Vec::new();
+        // One logits buffer for the whole drain: the session writes into
+        // it arena-style (`infer_batch_into`), so the per-batch inference
+        // itself allocates nothing once warm.
+        let mut logits = Vec::new();
         for (id, e) in entries {
             loop {
                 // Batcher lock is held only to cut/account, never while
                 // inferring — pushes for this model proceed concurrently.
                 let mb = e.batcher.lock().unwrap().next_batch(flush);
                 let Some(mb) = mb else { break };
-                let logits = e.session.infer_batch(&mb.x, mb.batch);
+                e.session.infer_batch_into(&mb.x, mb.batch, &mut logits);
                 let k = e.session.model().out_dim();
                 for (row, &rid) in mb.ids.iter().enumerate() {
                     out.push(Answer {
@@ -259,7 +270,9 @@ impl ModelRegistry {
                         logits: logits[row * k..(row + 1) * k].to_vec(),
                     });
                 }
-                e.batcher.lock().unwrap().complete(&mb);
+                // By-value complete recycles the padded batch buffer
+                // into the tenant's next cut.
+                e.batcher.lock().unwrap().complete(mb);
             }
         }
         out

@@ -1,0 +1,86 @@
+//! Steady-state serving performs **zero heap allocation**: after a
+//! couple of warm-up calls (arena buffers, pool-queue capacity, output
+//! capacity all grown), `InferenceSession::infer_batch_into` must not
+//! allocate at all — inline and pooled alike.
+//!
+//! Verified with a counting global allocator.  This file deliberately
+//! holds a single `#[test]` so no parallel test can allocate on another
+//! thread inside the measurement window (worker threads of the sessions
+//! under test are quiescent between calls and allocation-free inside
+//! them — that is the property being measured).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use lfsr_prune::serve::{synthetic_lenet300, InferenceSession};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// Warm `session` then count allocations across `calls` further
+/// inferences at the same batch size.
+fn allocs_after_warmup(session: &InferenceSession, batch: usize, calls: usize) -> u64 {
+    let x = vec![0.25f32; batch * session.model().in_dim()];
+    let mut out = Vec::new();
+    for _ in 0..3 {
+        session.infer_batch_into(&x, batch, &mut out);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..calls {
+        session.infer_batch_into(&x, batch, &mut out);
+    }
+    assert_eq!(out.len(), batch * session.model().out_dim());
+    ALLOCS.load(Ordering::SeqCst) - before
+}
+
+#[test]
+fn steady_state_infer_allocates_nothing() {
+    // Small but real model: 3 LFSR-pruned layers, padded tail panel at
+    // batch 33.
+    let batch = 33usize;
+
+    let inline = InferenceSession::new(synthetic_lenet300(0.95, 4, 1), 1);
+    let n = allocs_after_warmup(&inline, batch, 10);
+    assert_eq!(n, 0, "inline steady-state infer allocated {n} times");
+
+    let pooled = InferenceSession::new(synthetic_lenet300(0.95, 8, 2), 4);
+    let n = allocs_after_warmup(&pooled, batch, 10);
+    assert_eq!(n, 0, "pooled steady-state infer allocated {n} times");
+
+    // The classification path (infer + argmax into warm buffers) is
+    // allocation-free too.
+    let x = vec![0.25f32; batch * inline.model().in_dim()];
+    let (mut logits, mut classes) = (Vec::new(), Vec::new());
+    for _ in 0..3 {
+        inline.classify_batch_into(&x, batch, &mut logits, &mut classes);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        inline.classify_batch_into(&x, batch, &mut logits, &mut classes);
+    }
+    let n = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(classes.len(), batch);
+    assert_eq!(n, 0, "steady-state classify allocated {n} times");
+}

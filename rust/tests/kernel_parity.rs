@@ -1,0 +1,133 @@
+//! Property-style parity: the batch-major register-blocked kernel that
+//! now drives `InferenceSession` must be **bit-for-bit** equal to the
+//! scalar reference (`PackedColumns::gemm_into` + scatter — the serving
+//! path before this kernel landed) across batch sizes, shard counts,
+//! worker counts, and every mask family — plus arena-reuse and NaN
+//! argmax behaviour.
+
+use lfsr_prune::data::rng::Pcg32;
+use lfsr_prune::mask::prs::PrsMaskConfig;
+use lfsr_prune::mask::{magnitude_mask, random_mask};
+use lfsr_prune::serve::{argmax_total, CompiledLayer, CompiledModel, InferenceSession};
+
+const D0: usize = 37;
+const D1: usize = 29;
+const D2: usize = 10;
+
+fn weights(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..n).map(|_| rng.next_normal()).collect()
+}
+
+/// Two-layer model with one mask method applied to both layers.
+fn model_for(method: &str, shards: usize) -> CompiledModel {
+    let w1 = weights(D0 * D1, 100);
+    let w2 = weights(D1 * D2, 101);
+    let b1 = weights(D1, 102);
+    let b2 = weights(D2, 103);
+    let layer = |w: &[f32], b: Vec<f32>, relu: bool, rows: usize, cols: usize, salt: u32| {
+        match method {
+            "prs" => {
+                let cfg = PrsMaskConfig::auto(rows, cols, 13 + salt, 19 + salt);
+                CompiledLayer::compile_prs(w, b, relu, rows, cols, 0.75, cfg, shards, 2)
+            }
+            "magnitude" => {
+                let m = magnitude_mask(rows, cols, w, 0.75);
+                CompiledLayer::from_mask(w, b, relu, &m, shards)
+            }
+            "random" => {
+                let m = random_mask(rows, cols, 0.75, 7 + salt as u64);
+                CompiledLayer::from_mask(w, b, relu, &m, shards)
+            }
+            other => panic!("unknown method {other}"),
+        }
+    };
+    CompiledModel::new(vec![
+        layer(&w1, b1, true, D0, D1, 0),
+        layer(&w2, b2, false, D1, D2, 1),
+    ])
+}
+
+/// Scalar reference forward: the pre-blocked serving path — per-shard
+/// `gemm_into` into a `[batch, width]` buffer, scattered into the layer
+/// output at the shard's column offset.
+fn scalar_forward(model: &CompiledModel, x: &[f32], batch: usize) -> Vec<f32> {
+    let mut act = x.to_vec();
+    for layer in &model.layers {
+        let mut out = vec![0.0f32; batch * layer.cols];
+        for shard in &layer.shards {
+            let width = shard.width();
+            let mut buf = vec![0.0f32; batch * width];
+            shard.gemm_into(&act, batch, &layer.bias, layer.relu, &mut buf);
+            for b in 0..batch {
+                out[b * layer.cols + shard.col_start..b * layer.cols + shard.col_end]
+                    .copy_from_slice(&buf[b * width..(b + 1) * width]);
+            }
+        }
+        act = out;
+    }
+    act
+}
+
+#[test]
+fn blocked_session_bitwise_equals_scalar_reference() {
+    for method in ["prs", "magnitude", "random"] {
+        for shards in [1usize, 4, 7] {
+            let model = model_for(method, shards);
+            for workers in [1usize, 4] {
+                let session = InferenceSession::new(model_for(method, shards), workers);
+                for batch in [1usize, 3, 8, 33] {
+                    let x = weights(batch * D0, 200 + batch as u64);
+                    let expect = scalar_forward(&model, &x, batch);
+                    let got = session.infer_batch(&x, batch);
+                    assert_eq!(got.len(), expect.len());
+                    for (i, (&u, &v)) in got.iter().zip(&expect).enumerate() {
+                        assert_eq!(
+                            u.to_bits(),
+                            v.to_bits(),
+                            "{method} shards={shards} workers={workers} batch={batch} out {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn consecutive_calls_through_warm_arena_are_identical() {
+    let session = InferenceSession::new(model_for("prs", 3), 4);
+    for batch in [1usize, 8, 33] {
+        let x = weights(batch * D0, 300 + batch as u64);
+        let first = session.infer_batch(&x, batch);
+        let second = session.infer_batch(&x, batch);
+        for (i, (&u, &v)) in first.iter().zip(&second).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "batch {batch} out {i}");
+        }
+    }
+}
+
+#[test]
+fn nan_logits_classify_deterministically() {
+    // A dense layer whose weights inject NaN/Inf into specific logits:
+    // classify_batch must not panic and must follow the documented
+    // total_cmp order (positive-bit NaN on top, first index wins ties).
+    use lfsr_prune::mask::Mask;
+    let (rows, cols) = (4usize, 3usize);
+    // x = all ones, so logit c = sum of column c.
+    let mut w = vec![0.0f32; rows * cols];
+    w[0] = 1.0; // logit 0 = 1.0
+    w[1] = f32::NAN; // logit 1 = NaN
+    w[2] = 5.0; // logit 2 = 5.0
+    let layer = CompiledLayer::from_mask(&w, Vec::new(), false, &Mask::dense(rows, cols), 1);
+    let session = InferenceSession::new(CompiledModel::new(vec![layer]), 1);
+    let x = vec![1.0f32; rows];
+    let logits = session.infer_one(&x);
+    assert!(logits[1].is_nan(), "test setup: logit 1 must be NaN");
+    let classes = session.classify_batch(&x, 1);
+    // NaN (positive bit pattern) tops the total order.
+    assert_eq!(classes[0], 1);
+    // And argmax_total never panics on all-NaN / mixed rows.
+    assert_eq!(argmax_total(&[f32::NAN, f32::NAN, f32::NAN]), 0);
+    assert_eq!(argmax_total(&[2.0, 2.0]), 0);
+}

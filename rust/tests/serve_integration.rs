@@ -96,7 +96,7 @@ fn partial_final_batch_parity_through_batcher() {
         for (row, &id) in mb.ids.iter().enumerate() {
             answered[id as usize] = logits[row * D2..(row + 1) * D2].to_vec();
         }
-        batcher.complete(&mb);
+        batcher.complete(mb);
         cuts += 1;
     }
     assert_eq!(cuts, 3);
