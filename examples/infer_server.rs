@@ -17,7 +17,10 @@
 //! differently-seeded LFSR-pruned LeNets register in a
 //! `store::ModelRegistry`, share ONE worker pool, and requests are routed
 //! round-robin by model id — each tenant's partial batches are cut by a
-//! flush deadline so low-QPS tenants are not starved.
+//! flush deadline so low-QPS tenants are not starved.  Every other
+//! tenant serves the i8 precision tier (per-column-quantized kept
+//! values, ~4x smaller value memory) to demonstrate mixed f32/i8
+//! tenants on the one shared pool.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -127,27 +130,37 @@ fn main() {
     }
 }
 
-/// Multi-tenant mode: N differently-seeded models, one shared pool,
-/// requests routed by model id through the registry.
+/// Multi-tenant mode: N differently-seeded models — odd-indexed tenants
+/// quantized to the i8 tier — one shared pool, requests routed by model
+/// id through the registry.
 fn serve_multi_model(n_requests: usize, workers: usize, models: usize) {
+    use lfsr_prune::sparse::Precision;
     let reg = ModelRegistry::new(workers);
     let cfg = TenantConfig { batch: BATCH, max_wait: Some(Duration::from_millis(5)) };
     let t0 = Instant::now();
     let ids: Vec<String> = (0..models)
         .map(|m| {
-            let id = format!("lenet300-s{m}");
+            let tier = if m % 2 == 1 { Precision::I8 } else { Precision::F32 };
+            let id = format!("lenet300-s{m}-{tier}");
             let model = lfsr_prune::serve::synthetic_lenet300_seeded(
                 SPARSITY,
                 4 * workers.max(1),
                 workers.max(1),
                 11 + 40 * m as u32,
             );
+            // Compilation already produces f32 — only the i8 tenants pay
+            // a conversion.
+            let model = match tier {
+                Precision::I8 => model.to_precision(tier),
+                Precision::F32 => model,
+            };
             reg.insert(&id, model, cfg).expect("unique model id");
             id
         })
         .collect();
     println!(
-        "registered {models} models (seed bases {:?}) in {:.1} ms on {} shared worker thread(s)",
+        "registered {models} models (seed bases {:?}, mixed f32/i8 tiers) in {:.1} ms on {} \
+         shared worker thread(s)",
         (0..models).map(|m| 11 + 40 * m).collect::<Vec<_>>(),
         t0.elapsed().as_secs_f64() * 1e3,
         reg.workers()
@@ -184,15 +197,18 @@ fn serve_multi_model(n_requests: usize, workers: usize, models: usize) {
     for info in reg.list() {
         let s = &info.stats;
         let lat = s.latency.map_or(0.0, |l| l.p95 * 1e3);
+        let tier = info.precision.map_or("mixed".to_string(), |p| p.to_string());
         println!(
-            "  {}: {} req / {} batches -> {:.0} req/s (p95 {:.2} ms, {} padded rows, nnz {})",
+            "  {}: {} req / {} batches -> {:.0} req/s (p95 {:.2} ms, {} padded rows, nnz {}, \
+             {} values)",
             info.id,
             s.requests,
             s.batches,
             s.throughput_rps(),
             lat,
             s.padded,
-            info.nnz
+            info.nnz,
+            tier
         );
     }
 }

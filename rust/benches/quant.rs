@@ -1,0 +1,227 @@
+//! f32 vs i8 precision tiers: throughput and artifact bytes.
+//!
+//! Two throughput levels, both on the demo LeNet-300-100 @ 90% PRS
+//! sparsity, f32 plane against its i8-quantized twin:
+//!
+//! * **kernel** — one 784×300 layer, single thread, the blocked
+//!   `transpose_panels` + `gemm_panel_into` path, across batch sizes
+//!   {1, 8, 32, 128}.  Same index side, same op order — the delta is
+//!   the value-plane read (4 B f32 load vs 1 B code + one dequantize
+//!   per kept entry).
+//! * **model** — full 3-layer `InferenceSession::infer_batch_into`, at
+//!   worker counts {1, multi}.
+//!
+//! Plus the storage side: `encode_with_report` for both tiers — values,
+//! scales, seeds, and total `.lfsrpack` bytes, with the values ratio
+//! (~4×, scales are the only thing keeping it under exactly 4×).
+//!
+//! Results land in `BENCH_quant.json` (repo root or `$BENCH_OUT_DIR`);
+//! CI uploads it with the other bench artifacts.  `BENCH_SMOKE=1`
+//! switches to a quick low-sample preset for the CI smoke job.
+
+use std::fmt::Write as _;
+
+use lfsr_prune::data::rng::Pcg32;
+use lfsr_prune::serve::{synthetic_lenet300, InferenceSession};
+use lfsr_prune::sparse::Precision;
+use lfsr_prune::store::encode_with_report;
+use lfsr_prune::util::bench::{bench_out_path, black_box, Bench, Stats};
+
+const SPARSITY: f64 = 0.9;
+const BATCHES: [usize; 4] = [1, 8, 32, 128];
+
+struct Row {
+    name: String,
+    tier: &'static str,
+    level: &'static str,
+    batch: usize,
+    workers: usize,
+    stats: Stats,
+}
+
+impl Row {
+    fn throughput(&self) -> f64 {
+        self.batch as f64 / self.stats.median
+    }
+}
+
+fn smoke() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some()
+}
+
+fn bench(name: String) -> Bench {
+    let mut b = Bench::new(name);
+    if smoke() {
+        b.warmup_iters = 1;
+        b.min_time = 0.05;
+        b.max_samples = 5;
+    }
+    b
+}
+
+fn main() {
+    let hw_threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+    let multi = hw_threads.clamp(2, 8);
+    let mut rows: Vec<Row> = Vec::new();
+    let mut rng = Pcg32::new(42);
+
+    // --- kernel level: layer 0 (784x300), single thread ------------------
+    // One-shard, one-layer sessions isolate the kernel: same blocked
+    // path the server runs, value plane being the only variable.
+    let f32_layer = {
+        let m = synthetic_lenet300(SPARSITY, 1, 2);
+        lfsr_prune::serve::CompiledModel::new(vec![m.layers[0].clone()])
+    };
+    let i8_layer = f32_layer.to_precision(Precision::I8);
+    for (tier, model) in [("f32", &f32_layer), ("i8", &i8_layer)] {
+        let session = InferenceSession::new(model.clone(), 1);
+        for &batch in &BATCHES {
+            let x: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32()).collect();
+            let mut out = Vec::new();
+            let stats = bench(format!("quant/kernel_{tier}_784x300@90%_b{batch} (examples)"))
+                .run(batch as u64, || {
+                    session.infer_batch_into(&x, batch, &mut out);
+                    black_box(out[0])
+                });
+            rows.push(Row {
+                name: format!("kernel_{tier}_b{batch}"),
+                tier,
+                level: "kernel",
+                batch,
+                workers: 1,
+                stats,
+            });
+        }
+    }
+
+    // --- model level: full 3-layer forward, {1, multi} workers -----------
+    for &workers in &[1usize, multi] {
+        let shards = 4 * workers;
+        let f32_model = synthetic_lenet300(SPARSITY, shards, 2);
+        let i8_model = f32_model.to_precision(Precision::I8);
+        for (tier, model) in [("f32", &f32_model), ("i8", &i8_model)] {
+            let session = InferenceSession::new(model.clone(), workers);
+            for &batch in &BATCHES {
+                let x: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32()).collect();
+                let mut out = Vec::new();
+                let stats =
+                    bench(format!("quant/model_{tier}_lenet300@90%_b{batch}_w{workers} (examples)"))
+                        .run(batch as u64, || {
+                            session.infer_batch_into(&x, batch, &mut out);
+                            black_box(out[0])
+                        });
+                rows.push(Row {
+                    name: format!("model_{tier}_b{batch}_w{workers}"),
+                    tier,
+                    level: "model",
+                    batch,
+                    workers,
+                    stats,
+                });
+            }
+        }
+    }
+
+    // --- artifact bytes ---------------------------------------------------
+    let f32_model = synthetic_lenet300(SPARSITY, 2, 1);
+    let i8_model = f32_model.to_precision(Precision::I8);
+    let (f32_bytes, f32_report) = encode_with_report(&f32_model, 1).expect("f32 encode");
+    let (i8_bytes, i8_report) = encode_with_report(&i8_model, 1).expect("i8 encode");
+    let values_ratio = f32_report.value_bytes as f64
+        / (i8_report.value_bytes + i8_report.scale_bytes) as f64;
+    println!(
+        "bench artifact bytes: f32 {} B ({} B values) vs i8 {} B ({} B values + {} B scales) \
+         -> values cut {values_ratio:.2}x, index state unchanged ({} B seeds)",
+        f32_bytes.len(),
+        f32_report.value_bytes,
+        i8_bytes.len(),
+        i8_report.value_bytes,
+        i8_report.scale_bytes,
+        i8_report.seed_bytes,
+    );
+    assert_eq!(f32_report.seed_bytes, i8_report.seed_bytes, "index state is tier-independent");
+    assert!(values_ratio > 3.0, "values reduction {values_ratio:.2}x should approach 4x");
+
+    // i8-vs-f32 throughput per (level, batch, workers): the f32 rows of a
+    // block precede its i8 rows in lockstep order, so pair by offset.
+    let mut ratios = Vec::new();
+    let mut by_key: std::collections::BTreeMap<(String, usize, usize), [Option<f64>; 2]> =
+        std::collections::BTreeMap::new();
+    for r in &rows {
+        let slot = usize::from(r.tier == "i8");
+        by_key
+            .entry((r.level.to_string(), r.batch, r.workers))
+            .or_default()[slot] = Some(r.throughput());
+    }
+    for ((level, batch, workers), [f, q]) in &by_key {
+        let (f, q) = (f.expect("f32 row"), q.expect("i8 row"));
+        let ratio = q / f;
+        println!("bench ratio {level}_b{batch}_w{workers} i8/f32 = {ratio:.2}x");
+        ratios.push((level.clone(), *batch, *workers, ratio));
+    }
+
+    // --- BENCH_quant.json -------------------------------------------------
+    let mut json = String::new();
+    json.push_str("{\n");
+    let _ = writeln!(json, "  \"bench\": \"quant\",");
+    let _ = writeln!(
+        json,
+        "  \"model\": {{\"dims\": [784, 300, 100, 10], \"sparsity\": {SPARSITY}}},"
+    );
+    let _ = writeln!(json, "  \"hw_threads\": {hw_threads},");
+    let _ = writeln!(json, "  \"smoke\": {},", smoke());
+    let _ = writeln!(json, "  \"artifact_bytes\": {{");
+    let _ = writeln!(
+        json,
+        "    \"f32\": {{\"total\": {}, \"values\": {}, \"scales\": 0, \"seeds\": {}}},",
+        f32_bytes.len(),
+        f32_report.value_bytes,
+        f32_report.seed_bytes
+    );
+    let _ = writeln!(
+        json,
+        "    \"i8\": {{\"total\": {}, \"values\": {}, \"scales\": {}, \"seeds\": {}}},",
+        i8_bytes.len(),
+        i8_report.value_bytes,
+        i8_report.scale_bytes,
+        i8_report.seed_bytes
+    );
+    let _ = writeln!(json, "    \"values_reduction\": {values_ratio:.3}");
+    let _ = writeln!(json, "  }},");
+    let _ = writeln!(json, "  \"results\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{}\", \"tier\": \"{}\", \"level\": \"{}\", \"batch\": {}, \"workers\": {}, \"median_s\": {:.9}, \"mean_s\": {:.9}, \"p95_s\": {:.9}, \"throughput_per_s\": {:.1}}}{}",
+            r.name,
+            r.tier,
+            r.level,
+            r.batch,
+            r.workers,
+            r.stats.median,
+            r.stats.mean,
+            r.stats.p95,
+            r.throughput(),
+            if i + 1 == rows.len() { "" } else { "," }
+        );
+    }
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(json, "  \"throughput_i8_vs_f32\": [");
+    for (i, (level, batch, workers, ratio)) in ratios.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"level\": \"{level}\", \"batch\": {batch}, \"workers\": {workers}, \"ratio\": {ratio:.3}}}{}",
+            if i + 1 == ratios.len() { "" } else { "," }
+        );
+    }
+    json.push_str("  ]\n}\n");
+
+    let out = bench_out_path("BENCH_quant.json");
+    std::fs::write(&out, &json).expect("writing BENCH_quant.json");
+    println!("wrote {}", out.display());
+
+    // Sanity: the file round-trips through the repo's own parser.
+    let parsed = lfsr_prune::util::json::parse(&json).expect("valid json");
+    assert!(parsed.get("results").is_some());
+    assert!(parsed.get("artifact_bytes").is_some());
+}

@@ -45,7 +45,7 @@ fn main() {
     for (name, verify) in
         [("coldstart_artifact_load", false), ("coldstart_artifact_load_verify", true)]
     {
-        let opts = LoadOptions { n_shards: shards, lanes: multi, verify };
+        let opts = LoadOptions { n_shards: shards, lanes: multi, verify, precision: None };
         let stats = Bench::new(format!("store/{name} (models)"))
             .run(1, || black_box(load_model(&tmp, &opts).expect("load artifact")));
         rows.push(Row { name: name.into(), stats });

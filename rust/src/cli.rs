@@ -23,6 +23,7 @@ use crate::lfsr::{stats, GaloisLfsr, MsbMap};
 use crate::pipeline::{self, MaskMethod, RegType};
 use crate::runtime::Runtime;
 use crate::serve::synthetic_lenet300_seeded;
+use crate::sparse::Precision;
 use crate::store::{self, LoadOptions, ModelRegistry, TenantConfig};
 
 /// Parsed `--flag value` / `--flag` arguments plus positionals.
@@ -87,15 +88,20 @@ USAGE:
   repro experiment <table2|table3|fig3|fig4|fig4.1..4|fig5|table4|table5|all>
                  [--quick] [--trials N] [--workers N] [--out DIR]
   repro export [--out PATH] [--sparsity S] [--shards N] [--lanes N]
-               [--seed-base B] [--verify]
+               [--seed-base B] [--precision f32|i8] [--verify]
   repro serve-artifact PATH [PATH..] [--requests N] [--workers N]
                [--batch B] [--deadline-ms D] [--shards N] [--lanes N]
-               [--verify]
+               [--precision keep|f32|i8[,..]] [--verify]
 
 `export` writes the demo LFSR-pruned LeNet-300-100 as a `.lfsrpack`
 artifact (per layer: packed kept values + two LFSR seeds — no index
-storage); `serve-artifact` loads one or more artifacts into a shared
-worker-pool registry and serves synthetic traffic across them.
+storage); `--precision i8` quantizes the kept values to per-column
+symmetric i8 first (~4x smaller value payload, format v2).
+`serve-artifact` loads one or more artifacts into a shared worker-pool
+registry and serves synthetic traffic across them; `--precision` picks
+each tenant's serving tier (`keep` = as stored; one value for all
+paths, or a comma list with one tier per path — mixed f32/i8 tenants
+share the one pool).
 
 Artifacts default to ./artifacts (or $LFSR_PRUNE_ARTIFACTS); build them
 with `make artifacts` first.";
@@ -259,24 +265,56 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a `--precision` tier name; `keep` (load only) means "as stored".
+fn parse_precision(s: &str) -> Result<Option<Precision>> {
+    match s {
+        "keep" => Ok(None),
+        "f32" => Ok(Some(Precision::F32)),
+        "i8" => Ok(Some(Precision::I8)),
+        other => bail!("unknown precision {other:?} (expected keep, f32, or i8)"),
+    }
+}
+
+/// Per-tenant precision list: one entry applies to every path, a comma
+/// list must match the path count.
+fn tenant_precisions(args: &Args, n_paths: usize) -> Result<Vec<Option<Precision>>> {
+    let spec = args.flag("precision").unwrap_or("keep");
+    let tiers: Vec<Option<Precision>> =
+        spec.split(',').map(parse_precision).collect::<Result<_>>()?;
+    match tiers.len() {
+        1 => Ok(vec![tiers[0]; n_paths]),
+        n if n == n_paths => Ok(tiers),
+        n => bail!("--precision lists {n} tiers for {n_paths} artifact path(s)"),
+    }
+}
+
 fn cmd_export(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.flag("out").unwrap_or("lenet300.lfsrpack"));
     let sparsity: f64 = args.get("sparsity", 0.9)?;
     let shards: usize = args.get("shards", 4usize)?;
     let lanes: usize = args.get("lanes", 2usize)?;
     let seed_base: u32 = args.get("seed-base", 11u32)?;
+    let precision = match parse_precision(args.flag("precision").unwrap_or("f32"))? {
+        Some(p) => p,
+        None => bail!("export --precision must be f32 or i8 (there is no stored tier to keep)"),
+    };
     let (model, compile_s) = crate::util::time_it(|| {
-        synthetic_lenet300_seeded(sparsity, shards, lanes, seed_base)
+        let m = synthetic_lenet300_seeded(sparsity, shards, lanes, seed_base);
+        match precision {
+            Precision::F32 => m,
+            Precision::I8 => m.to_precision(Precision::I8),
+        }
     });
     println!("{}", model.describe());
     let report = store::export_model(&model, &out, lanes)?;
     println!(
-        "exported {} in {:.1} ms compile + write: {} B total = {} B values + {} B bias + {} B \
-         seeds/polynomials ({} layers, no per-weight index storage)",
+        "exported {} in {:.1} ms compile + write: {} B total = {} B values + {} B scales + \
+         {} B bias + {} B seeds/polynomials ({} layers, no per-weight index storage)",
         out.display(),
         compile_s * 1e3,
         report.total_bytes,
         report.value_bytes,
+        report.scale_bytes,
         report.bias_bytes,
         report.seed_bytes,
         report.layers,
@@ -303,15 +341,17 @@ fn cmd_serve_artifact(args: &Args) -> Result<()> {
     }
     let requests: usize = args.get("requests", 2048usize)?;
     let deadline_ms: u64 = args.get("deadline-ms", 5u64)?;
-    let opts = LoadOptions {
-        n_shards: args.get("shards", 4usize)?,
-        lanes: args.get("lanes", 2usize)?,
-        verify: args.bool_flag("verify"),
-    };
+    let precisions = tenant_precisions(args, paths.len())?;
     let cfg = TenantConfig { batch, max_wait: Some(Duration::from_millis(deadline_ms)) };
     let reg = ModelRegistry::new(workers);
     let mut ids = Vec::new();
-    for path in &paths {
+    for (path, precision) in paths.iter().zip(precisions) {
+        let opts = LoadOptions {
+            n_shards: args.get("shards", 4usize)?,
+            lanes: args.get("lanes", 2usize)?,
+            verify: args.bool_flag("verify"),
+            precision,
+        };
         let id = path
             .file_stem()
             .and_then(|s| s.to_str())
@@ -321,7 +361,8 @@ fn cmd_serve_artifact(args: &Args) -> Result<()> {
             let (r, s) = crate::util::time_it(|| reg.load(&id, path, &opts, cfg));
             (r?, s)
         };
-        println!("loaded {id} from {} in {:.1} ms", path.display(), load_s * 1e3);
+        let tier = precision.map_or("stored tier".to_string(), |p| format!("{p} values"));
+        println!("loaded {id} from {} in {:.1} ms ({tier})", path.display(), load_s * 1e3);
         ids.push(id);
     }
     let in_dims: BTreeMap<String, usize> =
@@ -417,5 +458,22 @@ mod tests {
         let a = Args::parse(&argv("x --quick --trials 2")).unwrap();
         assert!(a.bool_flag("quick"));
         assert_eq!(a.get("trials", 0usize).unwrap(), 2);
+    }
+
+    #[test]
+    fn precision_flag_parses_per_tenant() {
+        assert_eq!(parse_precision("keep").unwrap(), None);
+        assert_eq!(parse_precision("f32").unwrap(), Some(Precision::F32));
+        assert_eq!(parse_precision("i8").unwrap(), Some(Precision::I8));
+        assert!(parse_precision("fp16").is_err());
+        // One tier fans out to every path; a list must match the count.
+        let a = Args::parse(&argv("serve-artifact a b c --precision i8")).unwrap();
+        assert_eq!(tenant_precisions(&a, 3).unwrap(), vec![Some(Precision::I8); 3]);
+        let a = Args::parse(&argv("serve-artifact a b --precision i8,keep")).unwrap();
+        assert_eq!(tenant_precisions(&a, 2).unwrap(), vec![Some(Precision::I8), None]);
+        assert!(tenant_precisions(&a, 3).is_err(), "2 tiers for 3 paths");
+        // Default keeps each artifact's stored tier.
+        let a = Args::parse(&argv("serve-artifact a b")).unwrap();
+        assert_eq!(tenant_precisions(&a, 2).unwrap(), vec![None, None]);
     }
 }

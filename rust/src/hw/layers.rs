@@ -42,12 +42,18 @@ impl Network {
     /// model; `tests/store_roundtrip.rs` pins the two against each other
     /// for modified VGG-16.
     pub fn fc_param_bytes(&self, sparsity: f64) -> u64 {
+        self.fc_value_bytes(sparsity, crate::sparse::Precision::F32)
+    }
+
+    /// [`fc_param_bytes`](Network::fc_param_bytes) generalized over the
+    /// serving precision tier: the i8 tier stores 1 B per kept value plus
+    /// a 4 B per-column dequantization scale
+    /// ([`crate::sparse::memory::artifact_value_bytes`] per layer) — a
+    /// ~4× cut of the value payload with the index state unchanged.
+    pub fn fc_value_bytes(&self, sparsity: f64, precision: crate::sparse::Precision) -> u64 {
         self.layers
             .iter()
-            .map(|d| {
-                let kept = d.size() - crate::mask::prune_target(d.rows, d.cols, sparsity);
-                4 * kept as u64
-            })
+            .map(|d| crate::sparse::memory::artifact_value_bytes(d.rows, d.cols, sparsity, precision))
             .sum()
     }
 }

@@ -134,6 +134,13 @@ impl Batcher {
     /// Enqueue with an explicit arrival timestamp — pass the instant the
     /// client *sent* the request so transport/channel wait counts toward
     /// latency; `push` alone would hide queueing upstream of the batcher.
+    ///
+    /// The length assert is the *direct* (single-tenant) API's contract:
+    /// callers own their inputs.  Multi-tenant ingress goes through
+    /// [`ModelRegistry::push`](crate::store::ModelRegistry::push), which
+    /// validates first and returns a typed
+    /// [`RegistryError::BadInput`](crate::store::RegistryError) so one
+    /// malformed request cannot take the shared server down.
     pub fn push_at(&mut self, id: u64, x: Vec<f32>, enqueued: Instant) {
         assert_eq!(x.len(), self.example_len, "request {id}: bad example length");
         self.started.get_or_insert(enqueued);

@@ -21,7 +21,7 @@ use crate::data::rng::Pcg32;
 use crate::lfsr::{GaloisLfsr, JumpTable};
 use crate::mask::prs::PrsMaskConfig;
 use crate::mask::{prune_target, Mask};
-use crate::sparse::PackedColumns;
+use crate::sparse::{PackedColumns, Precision};
 
 /// Most raw LFSR steps generated per lane per round during the replay
 /// (rounds size their chunks down to the expected walk length so small
@@ -152,6 +152,11 @@ pub struct CompiledLayer {
     /// Empty = no bias; else length `cols`, indexed by global column.
     pub bias: Vec<f32>,
     pub relu: bool,
+    /// Value-plane tier of every shard (compilation always produces
+    /// [`Precision::F32`]; [`CompiledLayer::to_precision`] quantizes the
+    /// *kept* values only, per column — the dense weights are never
+    /// revisited).  Bias stays f32 in every tier.
+    pub precision: Precision,
     /// Column-range shards, jointly covering `[0, cols)` in order.
     pub shards: Vec<PackedColumns>,
 }
@@ -204,6 +209,7 @@ impl CompiledLayer {
             kind: MaskKind::Explicit,
             bias,
             relu,
+            precision: Precision::F32,
             shards,
         }
     }
@@ -231,6 +237,7 @@ impl CompiledLayer {
             kind,
             bias,
             relu,
+            precision: Precision::F32,
             shards,
         }
     }
@@ -243,6 +250,25 @@ impl CompiledLayer {
     /// Fraction of pruned synapses.
     pub fn sparsity(&self) -> f64 {
         1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// This layer at a value-plane tier: every shard's kept values are
+    /// converted ([`PackedColumns::to_precision`] — per-column symmetric
+    /// i8 quantization, or dequantization back to f32); positions, bias,
+    /// mask kind, and sharding are untouched.  Because the per-column
+    /// scale depends only on that column's kept values, the result is
+    /// identical for any shard count (quantize-then-shard ≡
+    /// shard-then-quantize).
+    pub fn to_precision(&self, precision: Precision) -> CompiledLayer {
+        CompiledLayer {
+            rows: self.rows,
+            cols: self.cols,
+            kind: self.kind,
+            bias: self.bias.clone(),
+            relu: self.relu,
+            precision,
+            shards: self.shards.iter().map(|s| s.to_precision(precision)).collect(),
+        }
     }
 }
 
@@ -331,6 +357,22 @@ impl CompiledModel {
         self.layers.iter().map(CompiledLayer::nnz).sum()
     }
 
+    /// Every layer converted to one value-plane tier (see
+    /// [`CompiledLayer::to_precision`]).
+    pub fn to_precision(&self, precision: Precision) -> CompiledModel {
+        CompiledModel {
+            layers: self.layers.iter().map(|l| l.to_precision(precision)).collect(),
+        }
+    }
+
+    /// The tier shared by every layer, or `None` for a mixed-tier model
+    /// (layers may legitimately differ — e.g. a quantized trunk with an
+    /// f32 output layer).
+    pub fn uniform_precision(&self) -> Option<Precision> {
+        let p = self.layers[0].precision;
+        self.layers.iter().all(|l| l.precision == p).then_some(p)
+    }
+
     /// One line per layer: dims, nnz, and how the keep-set is derived
     /// (for PRS layers the printed seeds/widths are the server's entire
     /// index state).
@@ -351,11 +393,12 @@ impl CompiledModel {
                     MaskKind::Explicit => "explicit mask".to_string(),
                 };
                 format!(
-                    "layer {i}: {}x{} nnz {} ({} shards) <- {src}",
+                    "layer {i}: {}x{} nnz {} ({} shards, {} values) <- {src}",
                     l.rows,
                     l.cols,
                     l.nnz(),
-                    l.shards.len()
+                    l.shards.len(),
+                    l.precision
                 )
             })
             .collect::<Vec<_>>()
@@ -411,6 +454,50 @@ mod tests {
         let layer = CompiledLayer::compile_prs(&w, Vec::new(), true, rows, cols, sp, cfg, 4, 2);
         assert!((layer.sparsity() - sp).abs() < 1e-6);
         assert_eq!(layer.shards.len(), 4);
+        assert_eq!(layer.precision, Precision::F32);
+    }
+
+    #[test]
+    fn to_precision_preserves_structure_and_is_shard_invariant() {
+        let model = synthetic_lenet300(0.9, 3, 1);
+        let q = model.to_precision(Precision::I8);
+        assert_eq!(q.nnz(), model.nnz());
+        assert_eq!(q.uniform_precision(), Some(Precision::I8));
+        assert_eq!(model.uniform_precision(), Some(Precision::F32));
+        for (a, b) in q.layers.iter().zip(&model.layers) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.bias, b.bias, "bias stays f32");
+            assert_eq!(a.precision, Precision::I8);
+            for s in &a.shards {
+                assert_eq!(s.precision(), Precision::I8);
+            }
+        }
+        // Mixed-tier models report no uniform precision.
+        let mut mixed = model.clone();
+        mixed.layers[1] = mixed.layers[1].to_precision(Precision::I8);
+        assert_eq!(mixed.uniform_precision(), None);
+        // Quantizing a differently-sharded compile gives the same codes:
+        // per-column scales see the same kept values either way.
+        let other = synthetic_lenet300(0.9, 7, 2).to_precision(Precision::I8);
+        let round_trip = |m: &CompiledModel| {
+            m.layers
+                .iter()
+                .flat_map(|l| {
+                    let mut cols: Vec<(usize, Vec<(usize, u32)>)> = Vec::new();
+                    for s in &l.shards {
+                        for local in 0..s.width() {
+                            cols.push((
+                                s.col_start + local,
+                                s.column(local).map(|(r, v)| (r, v.to_bits())).collect(),
+                            ));
+                        }
+                    }
+                    cols.sort_by_key(|&(c, _)| c);
+                    cols
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(round_trip(&q), round_trip(&other));
     }
 
     #[test]

@@ -31,12 +31,25 @@
 //! blocked kernel speedup across batch sizes and thread counts in
 //! `BENCH_kernel.json`.
 //!
+//! Layers carry a **precision tier**
+//! ([`Precision`](crate::sparse::Precision)): compilation produces f32
+//! value planes, and [`CompiledLayer::to_precision`] /
+//! [`CompiledModel::to_precision`] quantize the *kept* values to
+//! symmetric per-column i8 (+ one f32 scale per column) — ~4× smaller
+//! value memory, same packed index side, same zero-allocation serving
+//! path, and the same bitwise determinism across worker/shard/batch
+//! composition (the kernels dispatch on the plane outside their inner
+//! loops; `rust/tests/quant_parity.rs` pins the i8 tier against the
+//! same matrix `kernel_parity.rs` pins for f32).
+//!
 //! Compiled models need not be rebuilt from seeds on every cold start:
 //! [`crate::store`] persists them as `.lfsrpack` artifacts whose on-disk
 //! index state per PRS layer is just the two LFSR seeds (the paper's
-//! no-index-memory claim, §2/Fig. 5), and
-//! [`crate::store::ModelRegistry`] serves many loaded artifacts through
-//! one shared [`WorkerPool`] with per-model [`ServeStats`].
+//! no-index-memory claim, §2/Fig. 5) — format v2 adds the per-layer
+//! precision tag and scale vector so quantized models round-trip
+//! bitwise — and [`crate::store::ModelRegistry`] serves many loaded
+//! artifacts through one shared [`WorkerPool`] with per-model
+//! [`ServeStats`], f32 and i8 tenants side by side.
 
 pub mod batcher;
 pub mod compiled;

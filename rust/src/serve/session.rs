@@ -24,6 +24,17 @@
 //! any worker count, any shard count, and any batch composition — the
 //! parity tests in `rust/tests/serve_integration.rs` and
 //! `rust/tests/kernel_parity.rs` assert all three.
+//!
+//! Precision tiers are transparent here: the value-plane dispatch
+//! (`f32` vs per-column-quantized `i8` —
+//! [`Precision`](crate::sparse::Precision)) happens inside the kernel,
+//! once per shard call and outside every inner loop, so a quantized
+//! layer rides exactly the same arena/scoped-task/steady-state path —
+//! zero heap allocation after warm-up for both tiers
+//! (`rust/tests/alloc_steady_state.rs` counts both) and the same
+//! bitwise-determinism guarantees (`rust/tests/quant_parity.rs`).
+//! Mixed-tier models (and mixed f32/i8 tenants on one shared pool) need
+//! no special handling: each layer's shards carry their own plane.
 
 use std::sync::{Arc, Mutex};
 
@@ -338,6 +349,31 @@ mod tests {
         for (&u, &v) in b.infer_batch(&x, batch).iter().zip(&inline_b.infer_batch(&x, batch)) {
             assert_eq!(u.to_bits(), v.to_bits());
         }
+    }
+
+    #[test]
+    fn quantized_pooled_equals_inline_bitwise_and_differs_from_f32() {
+        use crate::sparse::Precision;
+        let mut rng = Pcg32::new(21);
+        let batch = 9; // padded tail panel
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.next_normal()).collect();
+        let q = toy_model(3).to_precision(Precision::I8);
+        let inline = InferenceSession::new(q.clone(), 1);
+        let pooled = InferenceSession::new(q, 4);
+        let a = inline.infer_batch(&x, batch);
+        let b = pooled.infer_batch(&x, batch);
+        for (i, (&u, &v)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "logit {i}");
+        }
+        // The i8 tier is a real approximation, not a pass-through: at
+        // least one logit moves relative to the f32 model.
+        let f = InferenceSession::new(toy_model(3), 1).infer_batch(&x, batch);
+        assert!(a.iter().zip(&f).any(|(&u, &v)| u.to_bits() != v.to_bits()));
+        // And a mixed-tier model (f32 layer 0, i8 layer 1) serves fine.
+        let mut mixed = toy_model(2);
+        mixed.layers[1] = mixed.layers[1].to_precision(Precision::I8);
+        let m = InferenceSession::new(mixed, 2).infer_batch(&x, batch);
+        assert_eq!(m.len(), batch * 4);
     }
 
     #[test]

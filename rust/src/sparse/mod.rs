@@ -1,16 +1,19 @@
 //! Sparse-matrix storage substrate: the baseline's CSC-with-relative-
 //! indices format (S/I/P vectors, α padding), the packed column-shard
-//! layout the serving engine executes, and the memory-footprint models
-//! for both methods (paper Figure 5).
+//! layout the serving engine executes — whose kept-value plane comes in
+//! [`Precision`] tiers (`f32`, or per-column-quantized `i8` + scales) —
+//! and the memory-footprint models for both methods (paper Figure 5),
+//! including the quantized-values artifact accounting
+//! ([`memory::artifact_value_bytes`]).
 
 pub mod csc;
 pub mod memory;
 pub mod packed;
 
 pub use csc::{CscEntry, CscMatrix};
-pub use packed::{transpose_panels, PackedColumns, BATCH_LANES};
 pub use memory::{
-    baseline_footprint, baseline_footprint_analytic, proposed_footprint,
-    proposed_footprint_analytic, proposed_footprint_stream, BaselineFootprint,
-    ProposedFootprint,
+    artifact_value_bytes, baseline_footprint, baseline_footprint_analytic, proposed_footprint,
+    proposed_footprint_analytic, proposed_footprint_stream, proposed_footprint_tier,
+    BaselineFootprint, ProposedFootprint,
 };
+pub use packed::{transpose_panels, PackedColumns, Precision, ValuePlane, BATCH_LANES};

@@ -22,10 +22,37 @@
 //! per-(batch, column) accumulation order — hence the exact float result —
 //! does not depend on how many workers run.
 //!
+//! # The value plane and precision tiers
+//!
+//! The index side of a shard (`col_ptr`/`row_idx`) is fixed, but the
+//! **value plane** — what a kept entry multiplies by — comes in
+//! [`Precision`] tiers:
+//!
+//! * [`Precision::F32`] — one `f32` per kept entry (the historical
+//!   layout).
+//! * [`Precision::I8`] — one `i8` code per kept entry plus one `f32`
+//!   scale per *column* (symmetric per-column quantization:
+//!   `scale = max|v| / 127` over that column's kept values, codes
+//!   `round(v / scale)` in `-127..=127`).  Values memory shrinks ~4×;
+//!   stacked on the paper's no-index-memory claim the whole layer
+//!   becomes `nnz` bytes + two LFSR seeds.
+//!
+//! Both kernels dispatch on the plane **outside** their inner loops and
+//! share one op-order contract: per (example, column) the i8 path
+//! dequantizes each kept entry exactly once (`q as f32 * scale`, a fixed
+//! two-op f32 sequence) and then accumulates in f32 in stored-entry
+//! order, identically in the scalar and blocked kernels.  Results are
+//! therefore **bitwise deterministic** across worker count, shard count,
+//! and batch composition for the i8 tier exactly as for f32 —
+//! `rust/tests/quant_parity.rs` pins the same matrix
+//! `tests/kernel_parity.rs` pins for f32.  Quantization itself is
+//! per-column, so it commutes with column sharding (quantize-then-shard
+//! ≡ shard-then-quantize, also pinned).
+//!
 //! # Batch-major blocked kernel
 //!
 //! The scalar [`PackedColumns::gemm_into`] walks one batch row at a time,
-//! so every kept-weight entry (`row_idx`/`values` pair) is re-loaded
+//! so every kept-weight entry (`row_idx`/value pair) is re-loaded
 //! `batch` times and each activation gather is a strided scalar load.
 //! The blocked path inverts that: [`transpose_panels`] repacks the
 //! row-major `[batch, rows]` activations into panels of
@@ -54,6 +81,67 @@ use crate::mask::Mask;
 /// Batch lanes per activation panel of the blocked kernel (one
 /// register-resident `[f32; BATCH_LANES]` accumulator row).
 pub const BATCH_LANES: usize = 8;
+
+/// Levels on each side of zero in the symmetric i8 quantizer (code -128
+/// is unused so `+v` and `-v` always round-trip to codes of equal
+/// magnitude).
+pub const I8_LEVELS: f32 = 127.0;
+
+/// Precision tier of a kept-value plane — what one stored entry costs
+/// and how the kernels read it back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// One `f32` per kept value.
+    F32,
+    /// One `i8` code per kept value + one `f32` scale per column
+    /// (symmetric per-column quantization).
+    I8,
+}
+
+impl Precision {
+    /// Bytes one kept value occupies (excluding the I8 tier's per-column
+    /// scale — see [`super::memory::artifact_value_bytes`] for whole-layer
+    /// accounting).
+    pub const fn value_bytes(self) -> u64 {
+        match self {
+            Precision::F32 => 4,
+            Precision::I8 => 1,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Precision::F32 => "f32",
+            Precision::I8 => "i8",
+        })
+    }
+}
+
+/// The kept values of one shard, in one of the [`Precision`] tiers.
+/// Entry order (and `row_idx`/`col_ptr`) is tier-independent — only the
+/// representation of the multiplier changes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ValuePlane {
+    /// `values[e]` is entry `e`'s weight.
+    F32(Vec<f32>),
+    /// Entry `e` of local column `c` carries weight
+    /// `q[e] as f32 * scales[c]`; `scales` has one entry per local
+    /// column (zero for an empty or all-zero column).
+    I8 { q: Vec<i8>, scales: Vec<f32> },
+}
+
+/// Symmetric per-column scale over a column's kept values:
+/// `max|v| / 127`, `0.0` when the column is empty or all-zero.
+fn column_scale(vals: &[f32]) -> f32 {
+    vals.iter().fold(0.0f32, |m, v| m.max(v.abs())) / I8_LEVELS
+}
+
+/// Quantize one value against a (positive) column scale.
+fn quantize_value(v: f32, scale: f32) -> i8 {
+    (v / scale).round().clamp(-I8_LEVELS, I8_LEVELS) as i8
+}
 
 /// Transpose a row-major `[batch, rows]` activation block into
 /// batch-major panels: panel `p` holds batch rows
@@ -92,6 +180,47 @@ pub fn transpose_panels(x: &[f32], batch: usize, rows: usize, panels: &mut Vec<f
     }
 }
 
+/// Counting sort of a walk-order (row, col) stream into per-column entry
+/// storage, preserving walk order within each column — the one packing
+/// pass both value planes share.
+fn walk_pack<T: Copy + Default>(
+    rows: usize,
+    cols: usize,
+    col_start: usize,
+    col_end: usize,
+    seq: &[(usize, usize)],
+    values: &[T],
+) -> (Vec<u32>, Vec<u32>, Vec<T>) {
+    assert!(col_start <= col_end && col_end <= cols);
+    assert_eq!(seq.len(), values.len(), "one value per kept position");
+    let width = col_end - col_start;
+    let mut counts = vec![0u32; width];
+    for &(r, c) in seq {
+        debug_assert!(r < rows && c < cols);
+        if (col_start..col_end).contains(&c) {
+            counts[c - col_start] += 1;
+        }
+    }
+    let mut col_ptr = vec![0u32; width + 1];
+    for i in 0..width {
+        col_ptr[i + 1] = col_ptr[i] + counts[i];
+    }
+    let total = col_ptr[width] as usize;
+    let mut row_idx = vec![0u32; total];
+    let mut vals = vec![T::default(); total];
+    let mut cursor = col_ptr[..width].to_vec();
+    for (i, &(r, c)) in seq.iter().enumerate() {
+        if !(col_start..col_end).contains(&c) {
+            continue;
+        }
+        let slot = cursor[c - col_start] as usize;
+        cursor[c - col_start] += 1;
+        row_idx[slot] = r as u32;
+        vals[slot] = values[i];
+    }
+    (col_ptr, row_idx, vals)
+}
+
 /// Kept weights of columns `[col_start, col_end)` of a rows×cols matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PackedColumns {
@@ -102,8 +231,8 @@ pub struct PackedColumns {
     col_ptr: Vec<u32>,
     /// Kept row index of each entry.
     row_idx: Vec<u32>,
-    /// Kept weight of each entry.
-    values: Vec<f32>,
+    /// Kept weight of each entry, in one of the precision tiers.
+    plane: ValuePlane,
 }
 
 impl PackedColumns {
@@ -145,40 +274,42 @@ impl PackedColumns {
         seq: &[(usize, usize)],
         values: &[f32],
     ) -> PackedColumns {
-        assert!(col_start <= col_end && col_end <= cols);
-        assert_eq!(seq.len(), values.len(), "one value per kept position");
-        let width = col_end - col_start;
-        let mut counts = vec![0u32; width];
-        for &(r, c) in seq {
-            debug_assert!(r < rows && c < cols);
-            if (col_start..col_end).contains(&c) {
-                counts[c - col_start] += 1;
-            }
-        }
-        let mut col_ptr = vec![0u32; width + 1];
-        for i in 0..width {
-            col_ptr[i + 1] = col_ptr[i] + counts[i];
-        }
-        let total = col_ptr[width] as usize;
-        let mut row_idx = vec![0u32; total];
-        let mut vals = vec![0.0f32; total];
-        let mut cursor = col_ptr[..width].to_vec();
-        for (i, &(r, c)) in seq.iter().enumerate() {
-            if !(col_start..col_end).contains(&c) {
-                continue;
-            }
-            let slot = cursor[c - col_start] as usize;
-            cursor[c - col_start] += 1;
-            row_idx[slot] = r as u32;
-            vals[slot] = values[i];
-        }
+        let (col_ptr, row_idx, vals) = walk_pack(rows, cols, col_start, col_end, seq, values);
         PackedColumns {
             rows,
             col_start,
             col_end,
             col_ptr,
             row_idx,
-            values: vals,
+            plane: ValuePlane::F32(vals),
+        }
+    }
+
+    /// [`from_walk_values`](PackedColumns::from_walk_values) for the i8
+    /// tier — the `.lfsrpack` v2 quantized fast-load path: `q[i]` is the
+    /// i8 code of `seq[i]` and `scales` holds one dequantization scale
+    /// per **global** column (length `cols`); the shard keeps the
+    /// `[col_start, col_end)` slice.  Same counting sort, no dense
+    /// matrix, no requantization — loading is bitwise faithful to what
+    /// was exported.
+    pub fn from_walk_values_i8(
+        rows: usize,
+        cols: usize,
+        col_start: usize,
+        col_end: usize,
+        seq: &[(usize, usize)],
+        q: &[i8],
+        scales: &[f32],
+    ) -> PackedColumns {
+        assert_eq!(scales.len(), cols, "one scale per global column");
+        let (col_ptr, row_idx, vals) = walk_pack(rows, cols, col_start, col_end, seq, q);
+        PackedColumns {
+            rows,
+            col_start,
+            col_end,
+            col_ptr,
+            row_idx,
+            plane: ValuePlane::I8 { q: vals, scales: scales[col_start..col_end].to_vec() },
         }
     }
 
@@ -211,7 +342,7 @@ impl PackedColumns {
             col_end,
             col_ptr,
             row_idx,
-            values,
+            plane: ValuePlane::F32(values),
         }
     }
 
@@ -222,16 +353,97 @@ impl PackedColumns {
 
     /// Kept entries stored.
     pub fn nnz(&self) -> usize {
-        self.values.len()
+        self.row_idx.len()
     }
 
-    /// (row, value) entries of one local column, in stored order.
+    /// This shard's value-plane tier.
+    pub fn precision(&self) -> Precision {
+        match self.plane {
+            ValuePlane::F32(_) => Precision::F32,
+            ValuePlane::I8 { .. } => Precision::I8,
+        }
+    }
+
+    /// The raw value plane — how `store::artifact` reaches the i8 codes
+    /// and scales without a dequantization round trip.
+    pub fn plane(&self) -> &ValuePlane {
+        &self.plane
+    }
+
+    /// Entry range of one local column in the shard's entry arrays.
+    pub fn col_range(&self, local: usize) -> std::ops::Range<usize> {
+        self.col_ptr[local] as usize..self.col_ptr[local + 1] as usize
+    }
+
+    /// Kept row ids of every entry (index with [`col_range`]).
+    ///
+    /// [`col_range`]: PackedColumns::col_range
+    pub fn row_ids(&self) -> &[u32] {
+        &self.row_idx
+    }
+
+    /// The effective f32 multiplier of entry `e` in local column `local`
+    /// — the exact value both kernels feed their accumulators (for the
+    /// i8 plane that is the two-op dequantization `q as f32 * scale`).
+    #[inline]
+    fn value_f32(&self, local: usize, e: usize) -> f32 {
+        match &self.plane {
+            ValuePlane::F32(values) => values[e],
+            ValuePlane::I8 { q, scales } => q[e] as f32 * scales[local],
+        }
+    }
+
+    /// Convert this shard to a precision tier.
+    ///
+    /// * `F32 → I8`: symmetric per-column quantization of the kept
+    ///   values (`scale = max|v| / 127`, codes `round(v / scale)`).  The
+    ///   scale depends only on the column's own kept values, so
+    ///   quantization commutes with column sharding.
+    /// * `I8 → F32`: materializes the dequantized values
+    ///   (`q as f32 * scale`) — the resulting f32 shard computes
+    ///   bit-identical results to the i8 one.
+    /// * Same tier: a plain clone.
+    pub fn to_precision(&self, precision: Precision) -> PackedColumns {
+        let plane = match (&self.plane, precision) {
+            (ValuePlane::F32(vals), Precision::I8) => {
+                let mut scales = vec![0.0f32; self.width()];
+                let mut q = vec![0i8; vals.len()];
+                for (local, s) in scales.iter_mut().enumerate() {
+                    *s = column_scale(&vals[self.col_range(local)]);
+                    if *s > 0.0 {
+                        for e in self.col_range(local) {
+                            q[e] = quantize_value(vals[e], *s);
+                        }
+                    }
+                }
+                ValuePlane::I8 { q, scales }
+            }
+            (ValuePlane::I8 { q, scales }, Precision::F32) => {
+                let mut vals = vec![0.0f32; q.len()];
+                for (local, &s) in scales.iter().enumerate() {
+                    for e in self.col_range(local) {
+                        vals[e] = q[e] as f32 * s;
+                    }
+                }
+                ValuePlane::F32(vals)
+            }
+            _ => self.plane.clone(),
+        };
+        PackedColumns {
+            rows: self.rows,
+            col_start: self.col_start,
+            col_end: self.col_end,
+            col_ptr: self.col_ptr.clone(),
+            row_idx: self.row_idx.clone(),
+            plane,
+        }
+    }
+
+    /// (row, value) entries of one local column, in stored order; i8
+    /// entries are dequantized.
     pub fn column(&self, local: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
-        let (lo, hi) = (self.col_ptr[local] as usize, self.col_ptr[local + 1] as usize);
-        self.row_idx[lo..hi]
-            .iter()
-            .zip(&self.values[lo..hi])
-            .map(|(&r, &v)| (r as usize, v))
+        self.col_range(local)
+            .map(move |e| (self.row_idx[e] as usize, self.value_f32(local, e)))
     }
 
     /// Batched masked GEMM over this shard's columns.
@@ -240,7 +452,9 @@ impl PackedColumns {
     /// `[batch, width]` and is fully overwritten.  `bias` is indexed by
     /// *global* column id (empty slice = no bias).  Accumulation per
     /// (batch row, column) follows stored entry order, so results are
-    /// bitwise independent of sharding and batch composition.
+    /// bitwise independent of sharding and batch composition — for both
+    /// precision tiers (the i8 plane dequantizes each entry with the
+    /// same two f32 ops everywhere).
     pub fn gemm_into(
         &self,
         x: &[f32],
@@ -249,10 +463,33 @@ impl PackedColumns {
         relu: bool,
         out: &mut [f32],
     ) {
-        let width = self.width();
         assert_eq!(x.len(), batch * self.rows);
-        assert_eq!(out.len(), batch * width);
+        assert_eq!(out.len(), batch * self.width());
         assert!(bias.is_empty() || bias.len() >= self.col_end);
+        match &self.plane {
+            ValuePlane::F32(values) => {
+                self.gemm_into_with(x, batch, bias, relu, out, |_, e| values[e])
+            }
+            ValuePlane::I8 { q, scales } => {
+                self.gemm_into_with(x, batch, bias, relu, out, |local, e| {
+                    q[e] as f32 * scales[local]
+                })
+            }
+        }
+    }
+
+    /// Scalar kernel body, generic over the per-entry value read (the
+    /// only thing the precision tiers change).
+    fn gemm_into_with<V: Fn(usize, usize) -> f32>(
+        &self,
+        x: &[f32],
+        batch: usize,
+        bias: &[f32],
+        relu: bool,
+        out: &mut [f32],
+        value: V,
+    ) {
+        let width = self.width();
         for b in 0..batch {
             let xrow = &x[b * self.rows..(b + 1) * self.rows];
             let orow = &mut out[b * width..(b + 1) * width];
@@ -261,7 +498,7 @@ impl PackedColumns {
                     (self.col_ptr[local] as usize, self.col_ptr[local + 1] as usize);
                 let mut acc = 0.0f32;
                 for e in lo..hi {
-                    acc += xrow[self.row_idx[e] as usize] * self.values[e];
+                    acc += xrow[self.row_idx[e] as usize] * value(local, e);
                 }
                 if !bias.is_empty() {
                     acc += bias[self.col_start + local];
@@ -280,9 +517,11 @@ impl PackedColumns {
     /// column `c` lands at `out[l * out_stride + col_start + c]`, so no
     /// `[batch, width]` intermediate or scatter copy exists.
     ///
-    /// Bit-for-bit equal to [`gemm_into`](PackedColumns::gemm_into): per
-    /// (lane, column) the accumulation order over stored entries, the
-    /// bias add, and the ReLU are the same f32 operation sequence.
+    /// Bit-for-bit equal to [`gemm_into`](PackedColumns::gemm_into) in
+    /// both precision tiers: per (lane, column) the per-entry value read
+    /// (including the i8 dequantization), the accumulation order over
+    /// stored entries, the bias add, and the ReLU are the same f32
+    /// operation sequence.
     pub fn gemm_panel_into(
         &self,
         panel: &[f32],
@@ -329,12 +568,43 @@ impl PackedColumns {
     ) {
         debug_assert!((1..=BATCH_LANES).contains(&lanes));
         debug_assert_eq!(panel.len(), self.rows * BATCH_LANES);
+        match &self.plane {
+            ValuePlane::F32(values) => {
+                self.panel_raw_with(panel, lanes, bias, relu, out, out_stride, |_, e| values[e])
+            }
+            ValuePlane::I8 { q, scales } => {
+                self.panel_raw_with(panel, lanes, bias, relu, out, out_stride, |local, e| {
+                    q[e] as f32 * scales[local]
+                })
+            }
+        }
+    }
+
+    /// Blocked kernel body, generic over the per-entry value read.  The
+    /// value is materialized **once per kept entry** and broadcast to
+    /// all 8 lanes — the i8 tier pays one dequantization per entry, not
+    /// per lane.
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`gemm_panel_raw`](PackedColumns::gemm_panel_raw).
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn panel_raw_with<V: Fn(usize, usize) -> f32>(
+        &self,
+        panel: &[f32],
+        lanes: usize,
+        bias: &[f32],
+        relu: bool,
+        out: *mut f32,
+        out_stride: usize,
+        value: V,
+    ) {
         let width = self.width();
         for local in 0..width {
             let (lo, hi) = (self.col_ptr[local] as usize, self.col_ptr[local + 1] as usize);
             let mut acc = [0.0f32; BATCH_LANES];
             for e in lo..hi {
-                let v = self.values[e];
+                let v = value(local, e);
                 let slab = &panel[self.row_idx[e] as usize * BATCH_LANES..][..BATCH_LANES];
                 for l in 0..BATCH_LANES {
                     acc[l] += slab[l] * v;
@@ -474,6 +744,10 @@ mod tests {
         let mut panels = Vec::new();
         transpose_panels(&weights(16, 2), 2, 8, &mut panels);
         p.gemm_panel_into(&panels, 2, &[], false, &mut out, 8);
+        // Precision conversion of an empty shard is a no-op either way.
+        let q = p.to_precision(Precision::I8);
+        assert_eq!(q.precision(), Precision::I8);
+        assert_eq!(q.nnz(), 0);
     }
 
     #[test]
@@ -590,6 +864,149 @@ mod tests {
         let got = blocked_forward(&shards, &x, batch, rows, cols, &[], false);
         for (&u, &v) in got.iter().zip(&expect) {
             assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    // -- precision tier tests ---------------------------------------------
+
+    #[test]
+    fn quantize_round_trip_is_bounded_by_half_a_step() {
+        let (rows, cols) = (40, 24);
+        let mask = random_mask(rows, cols, 0.6, 31);
+        let w = weights(rows * cols, 32);
+        let f = PackedColumns::from_mask(&mask, 0, cols, &w);
+        let q = f.to_precision(Precision::I8);
+        assert_eq!(q.precision(), Precision::I8);
+        assert_eq!(q.nnz(), f.nnz());
+        let ValuePlane::I8 { scales, .. } = q.plane() else { panic!("i8 plane") };
+        for c in 0..cols {
+            // Scale is the column's max magnitude spread over 127 levels
+            // (bitwise: same fold over the same stored order).
+            let max = f.column(c).fold(0.0f32, |m, (_, v)| m.max(v.abs()));
+            assert_eq!(scales[c].to_bits(), (max / 127.0).to_bits(), "column {c}");
+            // Dequantized entries land within half a quantization step.
+            for ((_, orig), (r, deq)) in f.column(c).zip(q.column(c)) {
+                // Half a step, with epsilon headroom for the f32 divide
+                // and multiply themselves.
+                assert!(
+                    (deq - orig).abs() <= scales[c] * 0.501 + 1e-12,
+                    "column {c} row {r}: {orig} -> {deq} (scale {})",
+                    scales[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantization_commutes_with_sharding() {
+        let (rows, cols) = (30, 22);
+        let cfg = PrsMaskConfig::auto(rows, cols, 9, 15);
+        let seq = prs_keep_sequence(rows, cols, 0.6, cfg);
+        let w = weights(rows * cols, 41);
+        let whole = PackedColumns::from_sequence(rows, cols, 0, cols, &seq, &w)
+            .to_precision(Precision::I8);
+        for (lo, hi) in [(0usize, 9usize), (9, cols), (0, cols)] {
+            let shard = PackedColumns::from_sequence(rows, cols, lo, hi, &seq, &w)
+                .to_precision(Precision::I8);
+            let (ValuePlane::I8 { q: qw, scales: sw }, ValuePlane::I8 { q: qs, scales: ss }) =
+                (whole.plane(), shard.plane())
+            else {
+                panic!("i8 planes")
+            };
+            for local in 0..shard.width() {
+                let c = lo + local;
+                assert_eq!(sw[c].to_bits(), ss[local].to_bits(), "scale of column {c}");
+                assert_eq!(
+                    &qw[whole.col_range(c)],
+                    &qs[shard.col_range(local)],
+                    "codes of column {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn i8_panel_kernel_bitwise_matches_i8_scalar() {
+        let (rows, cols) = (40, 30);
+        let cfg = PrsMaskConfig::auto(rows, cols, 5, 9);
+        let seq = prs_keep_sequence(rows, cols, 0.7, cfg);
+        let w = weights(rows * cols, 51);
+        let bias = weights(cols, 52);
+        for batch in [1usize, 3, 8, 33] {
+            let x = weights(batch * rows, 53 + batch as u64);
+            for n_shards in [1usize, 3, 7] {
+                let shards: Vec<PackedColumns> = (0..n_shards)
+                    .map(|i| {
+                        PackedColumns::from_sequence(
+                            rows,
+                            cols,
+                            cols * i / n_shards,
+                            cols * (i + 1) / n_shards,
+                            &seq,
+                            &w,
+                        )
+                        .to_precision(Precision::I8)
+                    })
+                    .collect();
+                let mut expect = vec![0.0f32; batch * cols];
+                for shard in &shards {
+                    let mut buf = vec![0.0f32; batch * shard.width()];
+                    shard.gemm_into(&x, batch, &bias, true, &mut buf);
+                    for b in 0..batch {
+                        expect[b * cols + shard.col_start..b * cols + shard.col_end]
+                            .copy_from_slice(&buf[b * shard.width()..(b + 1) * shard.width()]);
+                    }
+                }
+                let got = blocked_forward(&shards, &x, batch, rows, cols, &bias, true);
+                for (i, (&u, &v)) in got.iter().zip(&expect).enumerate() {
+                    assert_eq!(u.to_bits(), v.to_bits(), "batch {batch} shards {n_shards} out {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dequantized_f32_plane_matches_i8_kernel_bitwise() {
+        // I8 -> F32 materializes exactly the multipliers the i8 kernel
+        // feeds its accumulator, so both planes produce identical bits.
+        let (rows, cols, batch) = (24, 18, 5);
+        let mask = random_mask(rows, cols, 0.5, 61);
+        let w = weights(rows * cols, 62);
+        let x = weights(batch * rows, 63);
+        let q = PackedColumns::from_mask(&mask, 0, cols, &w).to_precision(Precision::I8);
+        let back = q.to_precision(Precision::F32);
+        assert_eq!(back.precision(), Precision::F32);
+        let mut ya = vec![0.0f32; batch * cols];
+        let mut yb = vec![0.0f32; batch * cols];
+        q.gemm_into(&x, batch, &[], false, &mut ya);
+        back.gemm_into(&x, batch, &[], false, &mut yb);
+        for (&u, &v) in ya.iter().zip(&yb) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn from_walk_values_i8_round_trips_export_order() {
+        // Pack, quantize, flatten back to walk order (what the artifact
+        // stores), rebuild via from_walk_values_i8: identical shard.
+        let (rows, cols) = (24, 18);
+        let cfg = PrsMaskConfig::auto(rows, cols, 7, 13);
+        let seq = prs_keep_sequence(rows, cols, 0.6, cfg);
+        let w = weights(rows * cols, 71);
+        let whole =
+            PackedColumns::from_sequence(rows, cols, 0, cols, &seq, &w).to_precision(Precision::I8);
+        let ValuePlane::I8 { q, scales } = whole.plane() else { panic!("i8 plane") };
+        // Flatten per-column storage into global walk order.
+        let mut cursors: Vec<std::ops::Range<usize>> =
+            (0..cols).map(|c| whole.col_range(c)).collect();
+        let walk_q: Vec<i8> =
+            seq.iter().map(|&(_, c)| q[cursors[c].next().expect("entry per visit")]).collect();
+        for (lo, hi) in [(0, cols), (0, 7), (7, cols)] {
+            let rebuilt =
+                PackedColumns::from_walk_values_i8(rows, cols, lo, hi, &seq, &walk_q, scales);
+            let direct = PackedColumns::from_sequence(rows, cols, lo, hi, &seq, &w)
+                .to_precision(Precision::I8);
+            assert_eq!(rebuilt, direct, "shard [{lo},{hi})");
         }
     }
 }

@@ -7,7 +7,11 @@
 //! disk — the index side of a PRS layer is [`PRS_EXTRA_BYTES`] regardless
 //! of size.  Explicit (magnitude/random) layers additionally store their
 //! positions column-major, CSC-style, since they have no seeds to
-//! regenerate from.
+//! regenerate from.  An i8-tier layer
+//! ([`Precision::I8`](crate::sparse::Precision)) stores its raw codes (1 B
+//! each, same order) plus the per-column f32 scale vector — the stored
+//! plane is the *exact* in-memory plane, so a quantized model round-trips
+//! bitwise with no requantization on either side.
 //!
 //! **Read** ([`load_model`]): the whole file is read, length-checked
 //! against the header, checksum-verified, then parsed with bounds-checked
@@ -32,12 +36,13 @@ use crate::lfsr::polynomials::{period, primitive_taps, MAX_WIDTH, MIN_WIDTH};
 use crate::mask::prs::PrsMaskConfig;
 use crate::mask::prune_target;
 use crate::serve::{parallel_keep_sequence, shard_ranges, CompiledLayer, CompiledModel, MaskKind};
-use crate::sparse::PackedColumns;
+use crate::sparse::{PackedColumns, Precision, ValuePlane};
 
 use super::format::{
-    explicit_record_bytes, fnv1a64, hash_keep_sequence, prs_record_bytes, ByteReader, ByteWriter,
-    StoreError, FILE_CHECKSUM_BYTES, FILE_HEADER_BYTES, MAGIC, MAX_CELLS, MAX_DIM, MAX_LAYERS,
-    PRS_EXTRA_BYTES, VERSION,
+    explicit_record_bytes, explicit_record_bytes_i8, fnv1a64, hash_keep_sequence,
+    prs_record_bytes, prs_record_bytes_i8, ByteReader, ByteWriter, StoreError,
+    FILE_CHECKSUM_BYTES, FILE_HEADER_BYTES, FLAG_I8, FLAG_RELU, MAGIC, MAX_CELLS, MAX_DIM,
+    MAX_LAYERS, MIN_VERSION, PRS_EXTRA_BYTES, VERSION,
 };
 
 /// How to reconstruct a model from an artifact.
@@ -50,11 +55,17 @@ pub struct LoadOptions {
     pub lanes: usize,
     /// Replay-and-compare the stored `walk_hash` per PRS layer.
     pub verify: bool,
+    /// Per-tenant precision selection at load time: `None` keeps each
+    /// layer's stored tier; `Some(I8)` quantizes an f32 artifact's kept
+    /// values after decode (bit-identical to compile-time quantization);
+    /// `Some(F32)` dequantizes an i8 artifact (the resulting f32 model
+    /// computes bit-identical logits to the i8 one).
+    pub precision: Option<Precision>,
 }
 
 impl Default for LoadOptions {
     fn default() -> Self {
-        LoadOptions { n_shards: 4, lanes: 2, verify: false }
+        LoadOptions { n_shards: 4, lanes: 2, verify: false, precision: None }
     }
 }
 
@@ -63,10 +74,14 @@ impl Default for LoadOptions {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExportReport {
     pub total_bytes: u64,
-    /// Packed kept-weight payload.
+    /// Packed kept-weight payload (4 B/value for f32 layers, 1 B/value
+    /// for i8 layers — scales counted separately).
     pub value_bytes: u64,
     /// Bias payload.
     pub bias_bytes: u64,
+    /// Per-column dequantization scales of i8 layers (zero for an
+    /// all-f32 model).
+    pub scale_bytes: u64,
     /// Index storage of PRS layers: seeds + widths + polynomials + walk
     /// hash — O(1) per layer.
     pub seed_bytes: u64,
@@ -110,6 +125,7 @@ pub fn encode_with_report(
         total_bytes: 0,
         value_bytes: 0,
         bias_bytes: 0,
+        scale_bytes: 0,
         seed_bytes: 0,
         explicit_index_bytes: 0,
         layers: model.layers.len() as u32,
@@ -125,6 +141,31 @@ pub fn encode_with_report(
     Ok((w.buf, report))
 }
 
+/// The value payload of one layer, gathered in on-disk order (global
+/// walk order for PRS, column-major for explicit).
+enum Payload {
+    F32(Vec<f32>),
+    /// Codes in on-disk order + one scale per global column.
+    I8 { q: Vec<i8>, scales: Vec<f32> },
+}
+
+impl Payload {
+    fn write(&self, w: &mut ByteWriter, report: &mut ExportReport) {
+        match self {
+            Payload::F32(values) => {
+                w.put_f32_slice(values);
+                report.value_bytes += 4 * values.len() as u64;
+            }
+            Payload::I8 { q, scales } => {
+                w.put_f32_slice(scales);
+                w.put_i8_slice(q);
+                report.scale_bytes += 4 * scales.len() as u64;
+                report.value_bytes += q.len() as u64;
+            }
+        }
+    }
+}
+
 fn write_layer(
     w: &mut ByteWriter,
     li: usize,
@@ -133,7 +174,8 @@ fn write_layer(
     report: &mut ExportReport,
 ) -> Result<(), StoreError> {
     let nnz = layer.nnz();
-    let flags = u8::from(layer.relu);
+    let quantized = layer.precision == Precision::I8;
+    let flags = if layer.relu { FLAG_RELU } else { 0 } | if quantized { FLAG_I8 } else { 0 };
     let record_start = w.len() as u64;
     match layer.kind {
         MaskKind::Prs { cfg, sparsity } => {
@@ -144,7 +186,7 @@ fn write_layer(
                     detail: format!("walk keeps {} positions, layer stores {nnz}", seq.len()),
                 });
             }
-            let values = gather_walk_values(layer, li, &seq)?;
+            let payload = gather_payload(layer, li, Some(&seq))?;
             w.put_u8(0);
             w.put_u8(flags);
             w.put_u32(layer.rows as u32);
@@ -160,27 +202,28 @@ fn write_layer(
             w.put_f64(sparsity);
             w.put_u64(hash_keep_sequence(&seq));
             w.put_f32_slice(&layer.bias);
-            w.put_f32_slice(&values);
+            payload.write(w, report);
             report.seed_bytes += PRS_EXTRA_BYTES;
             debug_assert_eq!(
                 w.len() as u64 - record_start,
-                prs_record_bytes(nnz as u64, layer.bias.len() as u64)
+                if quantized {
+                    prs_record_bytes_i8(nnz as u64, layer.cols as u64, layer.bias.len() as u64)
+                } else {
+                    prs_record_bytes(nnz as u64, layer.bias.len() as u64)
+                }
             );
         }
         MaskKind::Explicit => {
             let mut counts = vec![0u32; layer.cols];
             let mut row_idx = Vec::with_capacity(nnz);
-            let mut values = Vec::with_capacity(nnz);
             for shard in &layer.shards {
                 for local in 0..shard.width() {
                     let c = shard.col_start + local;
-                    for (r, v) in shard.column(local) {
-                        counts[c] += 1;
-                        row_idx.push(r as u32);
-                        values.push(v);
-                    }
+                    counts[c] += shard.col_range(local).len() as u32;
+                    row_idx.extend(shard.col_range(local).map(|e| shard.row_ids()[e]));
                 }
             }
+            let payload = gather_payload(layer, li, None)?;
             w.put_u8(1);
             w.put_u8(flags);
             w.put_u32(layer.rows as u32);
@@ -190,34 +233,94 @@ fn write_layer(
             w.put_u32_slice(&counts);
             w.put_u32_slice(&row_idx);
             w.put_f32_slice(&layer.bias);
-            w.put_f32_slice(&values);
+            payload.write(w, report);
             report.explicit_index_bytes += 4 * (layer.cols as u64 + nnz as u64);
             debug_assert_eq!(
                 w.len() as u64 - record_start,
-                explicit_record_bytes(layer.cols as u64, nnz as u64, layer.bias.len() as u64)
+                if quantized {
+                    explicit_record_bytes_i8(
+                        layer.cols as u64,
+                        nnz as u64,
+                        layer.bias.len() as u64,
+                    )
+                } else {
+                    explicit_record_bytes(layer.cols as u64, nnz as u64, layer.bias.len() as u64)
+                }
             );
         }
     }
-    report.value_bytes += 4 * nnz as u64;
     report.bias_bytes += 4 * layer.bias.len() as u64;
     Ok(())
 }
 
-/// Flatten a PRS layer's per-column stored values back into global walk
-/// order.  The shards hold each column's entries in walk order, so the
-/// global order is recovered by consuming one entry per column visit.
-fn gather_walk_values(
+/// Gather a layer's value payload in on-disk order.  With `seq` (PRS),
+/// per-column entries are flattened back into global walk order —
+/// checking the shards against the seeds' walk as it goes; without
+/// (explicit), column-major order.  The i8 tier gathers the raw codes
+/// and assembles the global per-column scale vector — no dequantization
+/// round trip, so the stored plane is bit-exact.
+fn gather_payload(
     layer: &CompiledLayer,
     li: usize,
-    seq: &[(usize, usize)],
-) -> Result<Vec<f32>, StoreError> {
-    let mut per_col: Vec<Vec<(usize, f32)>> = vec![Vec::new(); layer.cols];
-    for shard in &layer.shards {
-        for local in 0..shard.width() {
-            per_col[shard.col_start + local] = shard.column(local).collect();
+    seq: Option<&[(usize, usize)]>,
+) -> Result<Payload, StoreError> {
+    // The layer's declared tier must match every shard's actual plane:
+    // exporting a drifted layer would either lose the tier tag (writing
+    // i8 shards dequantized as a 4x-larger f32 artifact) or read a plane
+    // that is not there — refuse in both directions.
+    if let Some(shard) = layer.shards.iter().find(|s| s.precision() != layer.precision) {
+        return Err(StoreError::Corrupt {
+            detail: format!(
+                "layer {li}: declared precision {} but a shard stores {} values",
+                layer.precision,
+                shard.precision()
+            ),
+        });
+    }
+    match layer.precision {
+        Precision::F32 => {
+            let mut per_col: Vec<Vec<(usize, f32)>> = vec![Vec::new(); layer.cols];
+            for shard in &layer.shards {
+                for local in 0..shard.width() {
+                    per_col[shard.col_start + local] = shard.column(local).collect();
+                }
+            }
+            Ok(Payload::F32(flatten_cols(per_col, li, seq)?))
+        }
+        Precision::I8 => {
+            let mut per_col: Vec<Vec<(usize, i8)>> = vec![Vec::new(); layer.cols];
+            let mut scales = vec![0.0f32; layer.cols];
+            for shard in &layer.shards {
+                let ValuePlane::I8 { q, scales: s } = shard.plane() else {
+                    unreachable!("tier/plane agreement checked above");
+                };
+                for local in 0..shard.width() {
+                    let c = shard.col_start + local;
+                    scales[c] = s[local];
+                    per_col[c] = shard
+                        .col_range(local)
+                        .map(|e| (shard.row_ids()[e] as usize, q[e]))
+                        .collect();
+                }
+            }
+            Ok(Payload::I8 { q: flatten_cols(per_col, li, seq)?, scales })
         }
     }
-    let mut cursor = vec![0usize; layer.cols];
+}
+
+/// Flatten per-column entry lists into on-disk order: the walk order of
+/// `seq` (consuming one entry per column visit, verifying row ids — a
+/// mismatch means the shards disagree with the recorded seeds), or
+/// column-major when there is no walk.
+fn flatten_cols<T: Copy>(
+    per_col: Vec<Vec<(usize, T)>>,
+    li: usize,
+    seq: Option<&[(usize, usize)]>,
+) -> Result<Vec<T>, StoreError> {
+    let Some(seq) = seq else {
+        return Ok(per_col.iter().flatten().map(|&(_, v)| v).collect());
+    };
+    let mut cursor = vec![0usize; per_col.len()];
     let mut out = Vec::with_capacity(seq.len());
     for &(r, c) in seq {
         match per_col[c].get(cursor[c]) {
@@ -259,7 +362,7 @@ pub fn decode_model(bytes: &[u8], opts: &LoadOptions) -> Result<CompiledModel, S
         return Err(StoreError::BadMagic);
     }
     let version = r.u32()?;
-    if version != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&version) {
         return Err(StoreError::UnsupportedVersion { found: version });
     }
     let n_layers = r.u32()?;
@@ -284,7 +387,7 @@ pub fn decode_model(bytes: &[u8], opts: &LoadOptions) -> Result<CompiledModel, S
     let mut payload = ByteReader::new(&bytes[FILE_HEADER_BYTES as usize..payload_end]);
     let mut layers = Vec::with_capacity(n_layers as usize);
     for li in 0..n_layers as usize {
-        layers.push(read_layer(&mut payload, li, opts)?);
+        layers.push(read_layer(&mut payload, li, version, opts)?);
     }
     if payload.remaining() != 0 {
         return Err(StoreError::Corrupt {
@@ -303,7 +406,17 @@ pub fn decode_model(bytes: &[u8], opts: &LoadOptions) -> Result<CompiledModel, S
             });
         }
     }
-    Ok(CompiledModel::new(layers))
+    let model = CompiledModel::new(layers);
+    // Per-tenant precision selection: convert after the structural
+    // decode so verify-mode walk hashes and shard layouts are checked
+    // against what is actually on disk.  Skipped when the stored tier
+    // already matches — conversion deep-clones every shard, and the
+    // cold-start load path this module exists to keep fast should not
+    // pay that for a no-op.
+    Ok(match opts.precision {
+        Some(p) if model.uniform_precision() != Some(p) => model.to_precision(p),
+        _ => model,
+    })
 }
 
 /// Per-layer verification outcome from [`verify_file`].
@@ -318,7 +431,7 @@ pub struct VerifyReport {
 /// Strict full check of an artifact on disk: checksum, structure, and a
 /// PRS walk replay per seed-derived layer.
 pub fn verify_file(path: &Path, lanes: usize) -> Result<VerifyReport, StoreError> {
-    let opts = LoadOptions { n_shards: 1, lanes, verify: true };
+    let opts = LoadOptions { n_shards: 1, lanes, verify: true, precision: None };
     let model = load_model(path, &opts)?;
     let prs = model
         .layers
@@ -340,17 +453,39 @@ fn gcd(a: u64, b: u64) -> u64 {
     }
 }
 
+/// Validate an i8 layer's per-column scale vector: NaN, ±∞, and negative
+/// scales are typed errors ([`StoreError::BadScale`]) — zero is legal
+/// (an empty or all-zero column quantizes to scale 0 with all-zero
+/// codes).
+fn validate_scales(li: usize, scales: &[f32]) -> Result<(), StoreError> {
+    for (column, &value) in scales.iter().enumerate() {
+        if !value.is_finite() || value < 0.0 {
+            return Err(StoreError::BadScale { layer: li, column, value });
+        }
+    }
+    Ok(())
+}
+
 fn read_layer(
     r: &mut ByteReader,
     li: usize,
+    version: u32,
     opts: &LoadOptions,
 ) -> Result<CompiledLayer, StoreError> {
     let kind = r.u8()?;
     let flags = r.u8()?;
-    if flags & !1 != 0 {
-        return Err(corrupt(format!("layer {li}: unknown flags {flags:#x}")));
+    let known = if version >= 2 { FLAG_RELU | FLAG_I8 } else { FLAG_RELU };
+    if flags & !known != 0 {
+        return Err(corrupt(if version < 2 && flags & FLAG_I8 != 0 {
+            format!(
+                "layer {li}: i8 precision flag requires format v2, file claims v{version}"
+            )
+        } else {
+            format!("layer {li}: unknown flags {flags:#x}")
+        }));
     }
-    let relu = flags & 1 == 1;
+    let relu = flags & FLAG_RELU != 0;
+    let quantized = flags & FLAG_I8 != 0;
     let rows = r.u32()? as usize;
     let cols = r.u32()? as usize;
     if rows == 0 || cols == 0 || rows > MAX_DIM || cols > MAX_DIM {
@@ -381,7 +516,7 @@ fn read_layer(
             let sparsity = r.f64()?;
             let walk_hash = r.u64()?;
             let bias = r.f32_vec(bias_len)?;
-            let values = r.f32_vec(nnz)?;
+            let payload = read_payload(r, li, quantized, nnz, cols)?;
             for (name, n, taps) in [("row", n_row, taps_row), ("col", n_col, taps_col)] {
                 if !(MIN_WIDTH..=MAX_WIDTH).contains(&n) {
                     return Err(corrupt(format!("layer {li}: {name} LFSR width {n} unsupported")));
@@ -437,16 +572,14 @@ fn read_layer(
                     });
                 }
             }
-            let shards = shard_ranges(cols, opts.n_shards)
-                .into_iter()
-                .map(|(lo, hi)| PackedColumns::from_walk_values(rows, cols, lo, hi, &seq, &values))
-                .collect();
+            let shards = payload.pack_shards(rows, cols, &seq, opts.n_shards);
             Ok(CompiledLayer {
                 rows,
                 cols,
                 kind: MaskKind::Prs { cfg, sparsity },
                 bias,
                 relu,
+                precision: payload.precision(),
                 shards,
             })
         }
@@ -463,7 +596,7 @@ fn read_layer(
                 return Err(corrupt(format!("layer {li}: row index out of range (rows {rows})")));
             }
             let bias = r.f32_vec(bias_len)?;
-            let values = r.f32_vec(nnz)?;
+            let payload = read_payload(r, li, quantized, nnz, cols)?;
             let mut seq = Vec::with_capacity(nnz);
             let mut at = 0usize;
             for (c, &count) in counts.iter().enumerate() {
@@ -472,13 +605,67 @@ fn read_layer(
                     at += 1;
                 }
             }
-            let shards = shard_ranges(cols, opts.n_shards)
-                .into_iter()
-                .map(|(lo, hi)| PackedColumns::from_walk_values(rows, cols, lo, hi, &seq, &values))
-                .collect();
-            Ok(CompiledLayer { rows, cols, kind: MaskKind::Explicit, bias, relu, shards })
+            let shards = payload.pack_shards(rows, cols, &seq, opts.n_shards);
+            Ok(CompiledLayer {
+                rows,
+                cols,
+                kind: MaskKind::Explicit,
+                bias,
+                relu,
+                precision: payload.precision(),
+                shards,
+            })
         }
         k => Err(corrupt(format!("layer {li}: unknown mask kind tag {k}"))),
+    }
+}
+
+/// Read a layer's value payload (f32 values, or scales + i8 codes) and
+/// validate the scales.
+fn read_payload(
+    r: &mut ByteReader,
+    li: usize,
+    quantized: bool,
+    nnz: usize,
+    cols: usize,
+) -> Result<Payload, StoreError> {
+    if quantized {
+        let scales = r.f32_vec(cols)?;
+        validate_scales(li, &scales)?;
+        Ok(Payload::I8 { q: r.i8_vec(nnz)?, scales })
+    } else {
+        Ok(Payload::F32(r.f32_vec(nnz)?))
+    }
+}
+
+impl Payload {
+    fn precision(&self) -> Precision {
+        match self {
+            Payload::F32(_) => Precision::F32,
+            Payload::I8 { .. } => Precision::I8,
+        }
+    }
+
+    /// Rebuild the column shards from on-disk-order values — the
+    /// counting-sort fast path, no dense matrix, no requantization.
+    fn pack_shards(
+        &self,
+        rows: usize,
+        cols: usize,
+        seq: &[(usize, usize)],
+        n_shards: usize,
+    ) -> Vec<PackedColumns> {
+        shard_ranges(cols, n_shards)
+            .into_iter()
+            .map(|(lo, hi)| match self {
+                Payload::F32(values) => {
+                    PackedColumns::from_walk_values(rows, cols, lo, hi, seq, values)
+                }
+                Payload::I8 { q, scales } => {
+                    PackedColumns::from_walk_values_i8(rows, cols, lo, hi, seq, q, scales)
+                }
+            })
+            .collect()
     }
 }
 
@@ -512,7 +699,7 @@ mod tests {
         let bytes = encode_model(&model, 2).unwrap();
         // Same shard count: the reconstructed shards are identical
         // structures, not merely equivalent.
-        let opts = LoadOptions { n_shards: 3, lanes: 1, verify: true };
+        let opts = LoadOptions { n_shards: 3, lanes: 1, verify: true, precision: None };
         let loaded = decode_model(&bytes, &opts).unwrap();
         assert_eq!(loaded.layers.len(), model.layers.len());
         for (a, b) in loaded.layers.iter().zip(&model.layers) {
@@ -531,8 +718,8 @@ mod tests {
         let layer = CompiledLayer::from_mask(&w, weights(cols, 5), true, &m, 2);
         let model = CompiledModel::new(vec![layer]);
         let bytes = encode_model(&model, 1).unwrap();
-        let loaded =
-            decode_model(&bytes, &LoadOptions { n_shards: 2, lanes: 1, verify: true }).unwrap();
+        let opts = LoadOptions { n_shards: 2, lanes: 1, verify: true, precision: None };
+        let loaded = decode_model(&bytes, &opts).unwrap();
         assert_eq!(loaded.layers[0].shards, model.layers[0].shards);
         assert_eq!(loaded.layers[0].kind, MaskKind::Explicit);
     }
@@ -545,16 +732,62 @@ mod tests {
         assert_eq!(report.explicit_index_bytes, 0);
         assert_eq!(report.seed_bytes, 2 * PRS_EXTRA_BYTES);
         assert_eq!(report.value_bytes, 4 * model.nnz() as u64);
-        // total = header + per-layer fixed + seeds + bias + values + crc.
+        assert_eq!(report.scale_bytes, 0, "f32 layers store no scales");
+        // total = header + per-layer fixed + seeds + bias + scales +
+        // values + crc.
         let fixed: u64 = model.layers.len() as u64 * super::super::format::RECORD_FIXED_BYTES;
-        assert_eq!(
-            report.total_bytes,
+        let accounted = |r: &ExportReport| {
             super::super::format::file_overhead_bytes()
                 + fixed
-                + report.seed_bytes
-                + report.bias_bytes
-                + report.value_bytes
-        );
+                + r.seed_bytes
+                + r.bias_bytes
+                + r.scale_bytes
+                + r.value_bytes
+        };
+        assert_eq!(report.total_bytes, accounted(&report));
+        // The i8 tier shifts values 4 B -> 1 B and adds 4 B per column;
+        // the seed/index side is untouched.
+        let q = small_prs_model(2).to_precision(Precision::I8);
+        let (qbytes, qreport) = encode_with_report(&q, 1).unwrap();
+        assert_eq!(qreport.total_bytes, qbytes.len() as u64);
+        assert_eq!(qreport.value_bytes, q.nnz() as u64);
+        let cols: u64 = q.layers.iter().map(|l| l.cols as u64).sum();
+        assert_eq!(qreport.scale_bytes, 4 * cols);
+        assert_eq!(qreport.seed_bytes, report.seed_bytes);
+        assert_eq!(qreport.total_bytes, accounted(&qreport));
+        assert!(qreport.total_bytes < report.total_bytes);
+    }
+
+    #[test]
+    fn quantized_round_trip_is_bitwise_and_marks_precision() {
+        let model = small_prs_model(3).to_precision(Precision::I8);
+        let bytes = encode_model(&model, 2).unwrap();
+        let opts = LoadOptions { n_shards: 3, lanes: 1, verify: true, precision: None };
+        let loaded = decode_model(&bytes, &opts).unwrap();
+        for (a, b) in loaded.layers.iter().zip(&model.layers) {
+            assert_eq!(a.precision, Precision::I8);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.bias, b.bias);
+            assert_eq!(a.shards, b.shards, "stored i8 plane must round-trip bit-exact");
+        }
+    }
+
+    #[test]
+    fn load_time_precision_override_matches_compile_time_quantization() {
+        let f32_model = small_prs_model(2);
+        let bytes = encode_model(&f32_model, 1).unwrap();
+        let opts = LoadOptions {
+            n_shards: 2,
+            lanes: 1,
+            verify: false,
+            precision: Some(Precision::I8),
+        };
+        let loaded = decode_model(&bytes, &opts).unwrap();
+        let direct = f32_model.to_precision(Precision::I8);
+        for (a, b) in loaded.layers.iter().zip(&direct.layers) {
+            assert_eq!(a.precision, Precision::I8);
+            assert_eq!(a.shards, b.shards, "load-time quantization == compile-time");
+        }
     }
 
     #[test]
@@ -566,6 +799,59 @@ mod tests {
         let bytes = encode_model(&model, 1).unwrap();
         let loaded = decode_model(&bytes, &LoadOptions::default()).unwrap();
         assert_eq!(loaded.nnz(), rows * cols);
+    }
+
+    #[test]
+    fn tier_plane_drift_rejected_at_export_both_directions() {
+        // `precision` is declared layer state; a hand-mutated layer whose
+        // shards disagree must be refused — in BOTH directions (an f32
+        // declaration over i8 shards would otherwise silently export a
+        // 4x-larger dequantized artifact and lose the tier tag).
+        let mut says_f32 = small_prs_model(2).to_precision(Precision::I8);
+        says_f32.layers[0].precision = Precision::F32;
+        match encode_model(&says_f32, 1) {
+            Err(StoreError::Corrupt { detail }) => {
+                assert!(detail.contains("f32") && detail.contains("i8"), "{detail}")
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        let mut says_i8 = small_prs_model(2);
+        says_i8.layers[0].precision = Precision::I8;
+        match encode_model(&says_i8, 1) {
+            Err(StoreError::Corrupt { .. }) => {}
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn load_time_no_op_precision_is_accepted() {
+        // Asking for the tier the artifact already stores must load (and
+        // skip the conversion clone); a mixed-tier artifact with an
+        // explicit request still converts every layer.
+        let q = small_prs_model(2).to_precision(Precision::I8);
+        let bytes = encode_model(&q, 1).unwrap();
+        let opts = LoadOptions {
+            n_shards: 2,
+            lanes: 1,
+            verify: true,
+            precision: Some(Precision::I8),
+        };
+        let loaded = decode_model(&bytes, &opts).unwrap();
+        assert_eq!(loaded.uniform_precision(), Some(Precision::I8));
+        for (a, b) in loaded.layers.iter().zip(&q.layers) {
+            assert_eq!(a.shards, b.shards);
+        }
+        let mut mixed = small_prs_model(2);
+        mixed.layers[1] = mixed.layers[1].to_precision(Precision::I8);
+        let bytes = encode_model(&mixed, 1).unwrap();
+        let opts = LoadOptions {
+            n_shards: 2,
+            lanes: 1,
+            verify: false,
+            precision: Some(Precision::F32),
+        };
+        let loaded = decode_model(&bytes, &opts).unwrap();
+        assert_eq!(loaded.uniform_precision(), Some(Precision::F32));
     }
 
     #[test]

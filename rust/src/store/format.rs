@@ -5,7 +5,7 @@
 //!
 //! ```text
 //! magic     8 B   "LFSRPACK"
-//! version   u32   = 1
+//! version   u32   = 2 (v1 files — no precision flag — still load)
 //! n_layers  u32
 //! file_len  u64   total file bytes, trailing checksum included
 //! layer records ...
@@ -16,7 +16,7 @@
 //!
 //! ```text
 //! kind      u8    0 = PRS (seed-derived), 1 = explicit positions
-//! flags     u8    bit 0 = relu
+//! flags     u8    bit 0 = relu; bit 1 = i8 value plane (v2 only)
 //! rows      u32
 //! cols      u32
 //! nnz       u64   keep budget = stored value count
@@ -33,9 +33,13 @@
 //! -- kind 1 (explicit) --
 //! col_counts u32 × cols   entries per column
 //! row_idx    u32 × nnz    kept rows, column-major, per-column order kept
-//! -- both --
+//! -- both, f32 plane (flags bit 1 clear) --
 //! bias      f32 × bias_len
 //! values    f32 × nnz     PRS: global walk order; explicit: column-major
+//! -- both, i8 plane (flags bit 1 set, v2) --
+//! bias      f32 × bias_len
+//! scales    f32 × cols    per-column symmetric dequantization scales
+//! values    i8  × nnz     codes, same order as the f32 plane
 //! ```
 //!
 //! The PRS record carries **no positions at all** — the paper's claim made
@@ -44,14 +48,33 @@
 //! O(nnz) index entries.  `walk_hash` is how `verify` confirms the stored
 //! packing bit-for-bit without storing the walk: it replays the walk from
 //! the seeds and compares hashes.
+//!
+//! **Version history.**  v1 had no precision flag: every value plane was
+//! f32.  v2 (this build) adds flags bit 1 + the scale vector, cutting the
+//! value payload of an i8 layer ~4× (`nnz + 4·cols` bytes vs `4·nnz`)
+//! while the PRS index state stays the same constant 34 B/layer.  The
+//! reader accepts [`MIN_VERSION`]..=[`VERSION`]; a v1 byte stream decodes
+//! exactly as before (same record layout, f32 plane), and a v1 file
+//! carrying the i8 flag is rejected as corrupt.
 
 use std::fmt;
 
 /// File magic.
 pub const MAGIC: [u8; 8] = *b"LFSRPACK";
 
-/// Current (only) format version.
-pub const VERSION: u32 = 1;
+/// Newest format version this build writes (v2: per-layer precision flag
+/// + i8 value planes with per-column scale vectors).
+pub const VERSION: u32 = 2;
+
+/// Oldest format version this build still reads (v1: f32 value planes
+/// only; identical layout otherwise).
+pub const MIN_VERSION: u32 = 1;
+
+/// Layer flag: apply ReLU after bias.
+pub const FLAG_RELU: u8 = 1;
+
+/// Layer flag (v2+): the value plane is i8 codes + per-column scales.
+pub const FLAG_I8: u8 = 1 << 1;
 
 /// Bytes before the first layer record: magic, version, n_layers, file_len.
 pub const FILE_HEADER_BYTES: u64 = 8 + 4 + 4 + 8;
@@ -98,6 +121,19 @@ pub const fn explicit_record_bytes(cols: u64, nnz: u64, bias_len: u64) -> u64 {
     RECORD_FIXED_BYTES + 4 * cols + 4 * nnz + 4 * bias_len + 4 * nnz
 }
 
+/// On-disk bytes of one i8-plane PRS layer record: the value payload is
+/// `nnz + 4·cols` (codes + scale vector) instead of `4·nnz` — a ~4× cut
+/// whenever `nnz ≫ cols`, stacked on the constant
+/// [`PRS_EXTRA_BYTES`]-per-layer index state.
+pub const fn prs_record_bytes_i8(nnz: u64, cols: u64, bias_len: u64) -> u64 {
+    RECORD_FIXED_BYTES + PRS_EXTRA_BYTES + 4 * bias_len + 4 * cols + nnz
+}
+
+/// On-disk bytes of one i8-plane explicit-positions layer record.
+pub const fn explicit_record_bytes_i8(cols: u64, nnz: u64, bias_len: u64) -> u64 {
+    RECORD_FIXED_BYTES + 4 * cols + 4 * nnz + 4 * bias_len + 4 * cols + nnz
+}
+
 /// Everything that can go wrong reading or writing an artifact.  The
 /// strict reader returns these — it never panics on corrupt, truncated,
 /// or adversarial input (random corruption is caught by the checksum
@@ -118,6 +154,11 @@ pub enum StoreError {
     /// A structurally invalid field (bad kind tag, dims out of range,
     /// keep budget inconsistent with sparsity, ...).
     Corrupt { detail: String },
+    /// An i8 layer's per-column dequantization scale is NaN, infinite,
+    /// or negative — checksum-valid bytes from a broken quantizer (or
+    /// deliberate tampering) that would poison every logit the column
+    /// touches if loaded.
+    BadScale { layer: usize, column: usize, value: f32 },
     /// The PRS walk replayed from the stored seeds does not reproduce the
     /// stored packing (export-side: the layer's shards disagree with its
     /// seeds; load-side `verify`: the walk hash differs).
@@ -129,9 +170,11 @@ impl fmt::Display for StoreError {
         match self {
             StoreError::Io(e) => write!(f, "artifact io error: {e}"),
             StoreError::BadMagic => write!(f, "not an .lfsrpack artifact (bad magic)"),
-            StoreError::UnsupportedVersion { found } => {
-                write!(f, "unsupported artifact version {found} (expected {VERSION})")
-            }
+            StoreError::UnsupportedVersion { found } => write!(
+                f,
+                "unsupported artifact version {found} (this build reads v{MIN_VERSION} \
+                 through v{VERSION})"
+            ),
             StoreError::Truncated { expected, got } => {
                 write!(f, "truncated artifact: {got} bytes, expected {expected}")
             }
@@ -143,6 +186,11 @@ impl fmt::Display for StoreError {
                 "artifact checksum mismatch: stored {stored:#018x}, computed {computed:#018x}"
             ),
             StoreError::Corrupt { detail } => write!(f, "corrupt artifact: {detail}"),
+            StoreError::BadScale { layer, column, value } => write!(
+                f,
+                "layer {layer}: column {column} quantization scale {value} is not a finite \
+                 non-negative number"
+            ),
             StoreError::WalkMismatch { layer, detail } => {
                 write!(f, "layer {layer}: PRS walk does not match stored packing: {detail}")
             }
@@ -286,6 +334,10 @@ impl<'a> ByteReader<'a> {
         })?)?;
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
+
+    pub fn i8_vec(&mut self, n: usize) -> Result<Vec<i8>, StoreError> {
+        Ok(self.take(n)?.iter().map(|&b| b as i8).collect())
+    }
 }
 
 /// Little-endian writer accumulating an artifact in memory.
@@ -337,6 +389,10 @@ impl ByteWriter {
         for &x in v {
             self.buf.extend_from_slice(&x.to_le_bytes());
         }
+    }
+
+    pub fn put_i8_slice(&mut self, v: &[i8]) {
+        self.buf.extend(v.iter().map(|&x| x as u8));
     }
 
     /// Overwrite 8 bytes at `offset` (the `file_len` back-patch).
@@ -417,5 +473,33 @@ mod tests {
         assert_eq!(prs_record_bytes(100, 10), 22 + 34 + 40 + 400);
         assert_eq!(explicit_record_bytes(10, 100, 10), 22 + 40 + 400 + 40 + 400);
         assert_eq!(file_overhead_bytes(), 32);
+        // i8 plane: values cost nnz + 4*cols instead of 4*nnz; the PRS
+        // index state is the same 34 B either way.
+        assert_eq!(prs_record_bytes_i8(100, 10, 10), 22 + 34 + 40 + 40 + 100);
+        assert_eq!(explicit_record_bytes_i8(10, 100, 10), 22 + 40 + 400 + 40 + 40 + 100);
+        assert_eq!(
+            prs_record_bytes(100, 10) - prs_record_bytes_i8(100, 10, 10),
+            4 * 100 - (100 + 4 * 10)
+        );
+    }
+
+    #[test]
+    fn i8_slices_round_trip_two_complement() {
+        let mut w = ByteWriter::new();
+        w.put_i8_slice(&[0, 1, -1, 127, -127, -128]);
+        assert_eq!(w.len(), 6);
+        let mut r = ByteReader::new(&w.buf);
+        assert_eq!(r.i8_vec(6).unwrap(), vec![0, 1, -1, 127, -127, -128]);
+        assert!(matches!(r.i8_vec(1), Err(StoreError::UnexpectedEof { .. })));
+    }
+
+    #[test]
+    fn version_error_names_the_supported_range() {
+        // The version-skew contract: the message names the found version
+        // AND both supported versions, so operators can tell which side
+        // of the skew to upgrade.
+        let msg = StoreError::UnsupportedVersion { found: 3 }.to_string();
+        assert!(msg.contains('3'), "{msg}");
+        assert!(msg.contains("v1") && msg.contains("v2"), "{msg}");
     }
 }

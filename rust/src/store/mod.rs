@@ -11,22 +11,33 @@
 //!
 //! * [`format`] — the `.lfsrpack` layout: versioned, checksummed, with a
 //!   per-layer record of `{dims, mask kind, polynomial ids, the two LFSR
-//!   seeds, keep budget, bias, packed kept values in walk order}`.  A PRS
-//!   layer's index side on disk is a constant
+//!   seeds, keep budget, bias, packed kept value plane in walk order}`.
+//!   A PRS layer's index side on disk is a constant
 //!   [`PRS_EXTRA_BYTES`](format::PRS_EXTRA_BYTES) bytes — seeds, widths,
-//!   polynomials, and a walk hash — independent of layer size.
+//!   polynomials, and a walk hash — independent of layer size.  Format
+//!   v2 tags each layer's **precision tier**
+//!   ([`Precision`](crate::sparse::Precision)): an i8 layer stores raw
+//!   codes (1 B per kept value) plus a per-column f32 scale vector —
+//!   ~4× less value payload stacked on the no-index-memory claim, and
+//!   the stored plane is the exact in-memory plane so quantized models
+//!   round-trip bitwise.  v1 artifacts (f32-only) still load.
 //! * [`artifact`] — writer, strict reader (corrupt/truncated input →
-//!   typed [`StoreError`], never a panic), verify mode that replays the
-//!   PRS walk via
+//!   typed [`StoreError`], never a panic — malformed scale vectors get
+//!   [`StoreError::BadScale`]), verify mode that replays the PRS walk
+//!   via
 //!   [`serve::parallel_keep_sequence`](crate::serve::parallel_keep_sequence)
-//!   and confirms the stored packing bit-for-bit, and a fast loader that
+//!   and confirms the stored packing bit-for-bit, a fast loader that
 //!   rebuilds [`PackedColumns`](crate::sparse::PackedColumns) from the
 //!   stored walk-order values without ever materializing a dense weight
-//!   matrix.
+//!   matrix (`from_walk_values` / `from_walk_values_i8`), and per-tenant
+//!   precision selection at load time (`LoadOptions::precision`
+//!   quantizes or dequantizes after the structural decode).
 //! * [`registry`] — [`ModelRegistry`]: load/evict/list many artifacts
 //!   concurrently and route requests by model id through one shared
 //!   [`WorkerPool`](crate::serve::WorkerPool), with per-model
-//!   [`ServeStats`](crate::serve::ServeStats).
+//!   [`ServeStats`](crate::serve::ServeStats) — f32 and i8 tenants side
+//!   by side, and wrong-length requests rejected as typed
+//!   [`RegistryError::BadInput`] instead of panicking the server.
 //!
 //! `repro export` / `repro serve-artifact` (cli), the multi-model mode of
 //! `examples/infer_server.rs`, and `benches/store.rs` (cold-start +

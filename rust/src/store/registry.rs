@@ -19,6 +19,17 @@
 //! to the shared pool as borrowed scoped tasks rather than boxed
 //! closures, and completed micro-batches hand their padded buffers back
 //! to the tenant's batcher for the next cut.
+//!
+//! Tenants pick their own precision tier: `LoadOptions::precision`
+//! quantizes (or dequantizes) at load time, so one shared pool serves
+//! f32 and i8 models side by side — the value-plane dispatch lives
+//! inside the kernel, and [`ModelInfo::precision`] reports each tenant's
+//! tier (`None` for a mixed-tier model).
+//!
+//! A malformed request cannot take the server down: [`ModelRegistry::push`]
+//! checks the input length against the model's input dim and returns
+//! [`RegistryError::BadInput`] instead of reaching the `Batcher`'s
+//! assert (which remains the contract of the direct single-tenant API).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -27,6 +38,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::serve::{Batcher, CompiledModel, InferenceSession, ServeStats, WorkerPool};
+use crate::sparse::Precision;
 
 use super::artifact::{load_model, LoadOptions};
 use super::format::StoreError;
@@ -111,6 +123,8 @@ pub struct ModelInfo {
     pub in_dim: usize,
     pub out_dim: usize,
     pub nnz: usize,
+    /// The tier every layer shares, or `None` for a mixed-tier model.
+    pub precision: Option<Precision>,
     /// Requests currently queued.
     pub pending: usize,
     pub stats: ServeStats,
@@ -323,6 +337,7 @@ impl ModelRegistry {
                     in_dim: m.in_dim(),
                     out_dim: m.out_dim(),
                     nnz: m.nnz(),
+                    precision: m.uniform_precision(),
                     pending,
                     stats,
                 }
@@ -445,6 +460,61 @@ mod tests {
         assert!(reg.evict("a"));
         assert!(!reg.evict("a"));
         assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn mixed_precision_tenants_share_one_pool() {
+        // An f32 tenant and its i8-quantized twin on the same pool:
+        // routing stays bitwise per tenant, the tiers really differ, and
+        // `list` reports each tenant's tier.
+        let reg = ModelRegistry::new(2);
+        reg.insert("f32", toy_model(3), cfg_no_deadline(2)).unwrap();
+        reg.insert("i8", toy_model(3).to_precision(Precision::I8), cfg_no_deadline(2)).unwrap();
+        let mut rng = Pcg32::new(7);
+        let xs: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..12).map(|_| rng.next_normal()).collect()).collect();
+        for (i, x) in xs.iter().enumerate() {
+            reg.push(if i % 2 == 0 { "f32" } else { "i8" }, i as u64, x.clone()).unwrap();
+        }
+        let answers = reg.drain(true);
+        assert_eq!(answers.len(), 4);
+        for ans in &answers {
+            let direct = reg.infer(&ans.model, &xs[ans.request as usize], 1).unwrap();
+            for (i, (&u, &v)) in ans.logits.iter().zip(&direct).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "{}#{} logit {i}", ans.model, ans.request);
+            }
+        }
+        // Same weights, different value planes: at least one logit moves.
+        let a = reg.infer("f32", &xs[0], 1).unwrap();
+        let b = reg.infer("i8", &xs[0], 1).unwrap();
+        assert!(a.iter().zip(&b).any(|(&u, &v)| u.to_bits() != v.to_bits()));
+        let tiers: std::collections::BTreeMap<String, Option<Precision>> =
+            reg.list().into_iter().map(|m| (m.id, m.precision)).collect();
+        assert_eq!(tiers["f32"], Some(Precision::F32));
+        assert_eq!(tiers["i8"], Some(Precision::I8));
+    }
+
+    #[test]
+    fn bad_input_rejection_leaves_tenant_serving() {
+        // One wrong-length request must not poison the tenant (the
+        // registry rejects it before the Batcher's length assert): a
+        // typed error comes back and the queue keeps serving.
+        let reg = ModelRegistry::new(1);
+        reg.insert("m", toy_model(5), cfg_no_deadline(2)).unwrap();
+        reg.push("m", 0, vec![0.5; 12]).unwrap();
+        assert!(matches!(
+            reg.push("m", 1, vec![0.5; 13]),
+            Err(RegistryError::BadInput { model: _, got: 13, expected: 12 })
+        ));
+        assert_eq!(reg.pending(), 1, "rejected request must not enqueue");
+        reg.push("m", 2, vec![0.5; 12]).unwrap();
+        let answers = reg.drain(true);
+        assert_eq!(answers.len(), 2);
+        assert_eq!(
+            answers.iter().map(|a| a.request).collect::<Vec<_>>(),
+            vec![0, 2],
+            "good requests before and after the rejection are answered"
+        );
     }
 
     #[test]

@@ -13,6 +13,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use lfsr_prune::serve::{synthetic_lenet300, InferenceSession};
+use lfsr_prune::sparse::Precision;
 
 struct CountingAlloc;
 
@@ -68,6 +69,17 @@ fn steady_state_infer_allocates_nothing() {
     let pooled = InferenceSession::new(synthetic_lenet300(0.95, 8, 2), 4);
     let n = allocs_after_warmup(&pooled, batch, 10);
     assert_eq!(n, 0, "pooled steady-state infer allocated {n} times");
+
+    // The i8 precision tier rides the same arena path: the value-plane
+    // dispatch happens outside the kernels' inner loops, so a quantized
+    // model's steady state is allocation-free too — inline and pooled.
+    let quantized = synthetic_lenet300(0.95, 4, 1).to_precision(Precision::I8);
+    let q_inline = InferenceSession::new(quantized.clone(), 1);
+    let n = allocs_after_warmup(&q_inline, batch, 10);
+    assert_eq!(n, 0, "inline i8 steady-state infer allocated {n} times");
+    let q_pooled = InferenceSession::new(quantized, 4);
+    let n = allocs_after_warmup(&q_pooled, batch, 10);
+    assert_eq!(n, 0, "pooled i8 steady-state infer allocated {n} times");
 
     // The classification path (infer + argmax into warm buffers) is
     // allocation-free too.

@@ -1,13 +1,16 @@
 //! Artifact-store integration: round-trip bitwise parity across every
-//! mask kind and worker/shard count, corruption robustness (typed errors,
-//! never panics), verify-mode walk replay, and the paper's artifact-size
-//! claim (packed values + O(1) seed overhead per layer — no index
-//! memory).
+//! mask kind and worker/shard count (f32 and i8 value planes),
+//! corruption robustness (typed errors, never panics — malformed scale
+//! vectors included), v1 back-compat + version-skew behaviour,
+//! verify-mode walk replay, and the paper's artifact-size claim (packed
+//! values + O(1) seed overhead per layer — no index memory; the i8 tier
+//! cuts the values ~4x on top).
 
 use lfsr_prune::hw::layers::vgg16_modified;
 use lfsr_prune::mask::prs::PrsMaskConfig;
 use lfsr_prune::mask::{magnitude_mask, prune_target, random_mask};
 use lfsr_prune::serve::{synthetic_lenet300, CompiledLayer, CompiledModel, InferenceSession};
+use lfsr_prune::sparse::Precision;
 use lfsr_prune::store::format::{
     file_overhead_bytes, fnv1a64, prs_record_bytes, PRS_EXTRA_BYTES, RECORD_FIXED_BYTES,
 };
@@ -82,7 +85,7 @@ fn roundtrip_bitwise_all_mask_methods_any_workers_shards() {
         let bytes = encode_model(&original, 2).expect("encode");
         for n_shards in [1usize, 3, 7] {
             for workers in [1usize, 4] {
-                let opts = LoadOptions { n_shards, lanes: 2, verify: true };
+                let opts = LoadOptions { n_shards, lanes: 2, verify: true, precision: None };
                 let loaded = decode_model(&bytes, &opts).expect("decode");
                 let got = InferenceSession::new(loaded, workers).infer_batch(&x, batch);
                 assert_bitwise_eq(
@@ -108,7 +111,7 @@ fn synthetic_lenet300_export_load_parity() {
     let report = export_model(&original, &path, 2).expect("export");
     assert_eq!(report.layers, 3);
     for (n_shards, workers) in [(1usize, 1usize), (5, 3), (16, 2)] {
-        let opts = LoadOptions { n_shards, lanes: 2, verify: false };
+        let opts = LoadOptions { n_shards, lanes: 2, verify: false, precision: None };
         let loaded = load_model(&path, &opts).expect("load");
         assert_eq!(loaded.nnz(), original.nnz());
         let got = InferenceSession::new(loaded, workers).infer_batch(&x, batch);
@@ -124,7 +127,7 @@ fn synthetic_lenet300_export_load_parity() {
 // ---------------------------------------------------------------------------
 
 fn opts() -> LoadOptions {
-    LoadOptions { n_shards: 2, lanes: 1, verify: false }
+    LoadOptions { n_shards: 2, lanes: 1, verify: false, precision: None }
 }
 
 #[test]
@@ -237,11 +240,157 @@ fn verify_catches_reseeded_artifact() {
     assert_eq!(loaded.nnz(), model_for("prs", 2).nnz());
     // ...which is exactly what verify exists to catch: the replayed walk
     // hash no longer matches the stored packing.
-    let strict = LoadOptions { n_shards: 2, lanes: 1, verify: true };
+    let strict = LoadOptions { n_shards: 2, lanes: 1, verify: true, precision: None };
     match decode_model(&reseeded, &strict) {
         Err(StoreError::WalkMismatch { layer: 0, .. }) => {}
         other => panic!("expected WalkMismatch, got {other:?}"),
     }
+}
+
+// ---------------------------------------------------------------------------
+// Precision tiers: v2 round-trip, v1 back-compat, malformed scales
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quantized_roundtrip_bitwise_all_mask_methods_any_workers_shards() {
+    // The v2 acceptance case: an i8-tier model encodes its raw codes +
+    // scales (no dequantization round trip), so a load must reproduce
+    // the exact logits of the in-memory quantized model — any shard or
+    // worker count, every mask family.
+    let batch = 5;
+    let x = weights(batch * D0, 61);
+    for method in ["prs", "magnitude", "random"] {
+        let original = model_for(method, 3).to_precision(Precision::I8);
+        let reference = InferenceSession::new(original.clone(), 1).infer_batch(&x, batch);
+        let bytes = encode_model(&original, 2).expect("encode");
+        for n_shards in [1usize, 3, 7] {
+            for workers in [1usize, 4] {
+                let opts = LoadOptions { n_shards, lanes: 2, verify: true, precision: None };
+                let loaded = decode_model(&bytes, &opts).expect("decode");
+                assert_eq!(loaded.uniform_precision(), Some(Precision::I8));
+                let got = InferenceSession::new(loaded, workers).infer_batch(&x, batch);
+                assert_bitwise_eq(
+                    &got,
+                    &reference,
+                    &format!("i8 {method} shards={n_shards} workers={workers}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_lenet300_artifact_cuts_value_bytes_4x() {
+    let f = synthetic_lenet300(0.9, 2, 1);
+    let q = f.to_precision(Precision::I8);
+    let (fb, fr) = encode_with_report(&f, 1).expect("f32 encode");
+    let (qb, qr) = encode_with_report(&q, 1).expect("i8 encode");
+    // Values shrink exactly 4x (4 B -> 1 B per kept entry); the new cost
+    // is one 4 B scale per column; seeds/index state are unchanged.
+    assert_eq!(fr.value_bytes, 4 * qr.value_bytes);
+    let cols: u64 = q.layers.iter().map(|l| l.cols as u64).sum();
+    assert_eq!(qr.scale_bytes, 4 * cols);
+    assert_eq!(fr.seed_bytes, qr.seed_bytes);
+    assert!(qb.len() < fb.len());
+    // And a mixed-tier model (quantized trunk, f32 head) round-trips
+    // with per-layer tags.
+    let mut mixed = f.clone();
+    mixed.layers[0] = mixed.layers[0].to_precision(Precision::I8);
+    mixed.layers[1] = mixed.layers[1].to_precision(Precision::I8);
+    let bytes = encode_model(&mixed, 1).expect("mixed encode");
+    let loaded = decode_model(&bytes, &opts()).expect("mixed decode");
+    assert_eq!(loaded.uniform_precision(), None);
+    assert_eq!(loaded.layers[0].precision, Precision::I8);
+    assert_eq!(loaded.layers[2].precision, Precision::F32);
+}
+
+#[test]
+fn v1_artifact_still_loads_as_f32() {
+    // Fixture: a v1 byte stream.  v1 and v2 have the identical record
+    // layout for f32 planes (the only plane v1 had), so the canonical
+    // way to produce one is to stamp version 1 over an f32 v2 encode and
+    // re-checksum — the payload bytes are untouched.
+    let batch = 4;
+    let x = weights(batch * D0, 71);
+    for method in ["prs", "magnitude"] {
+        let model = model_for(method, 2);
+        let v2 = encode_model(&model, 1).expect("encode");
+        assert_eq!(u32::from_le_bytes(v2[8..12].try_into().unwrap()), 2, "writer is at v2");
+        let v1 = patch_and_restamp(&v2, 8, &1u32.to_le_bytes());
+        let strict = LoadOptions { n_shards: 3, lanes: 1, verify: true, precision: None };
+        let loaded = decode_model(&v1, &strict).expect("v1 decodes");
+        assert_eq!(loaded.uniform_precision(), Some(Precision::F32));
+        let got = InferenceSession::new(loaded, 2).infer_batch(&x, batch);
+        let reference = InferenceSession::new(model, 1).infer_batch(&x, batch);
+        assert_bitwise_eq(&got, &reference, &format!("v1 {method}"));
+        // A v1 load can still opt into the i8 tier at load time.
+        let quantizing = LoadOptions {
+            n_shards: 3,
+            lanes: 1,
+            verify: false,
+            precision: Some(Precision::I8),
+        };
+        let q = decode_model(&v1, &quantizing).expect("v1 + load-time i8");
+        assert_eq!(q.uniform_precision(), Some(Precision::I8));
+    }
+}
+
+#[test]
+fn v1_artifact_with_i8_flag_is_corrupt_not_misread() {
+    // The i8 flag did not exist in v1: a v1 header claiming it is
+    // corrupt (re-stamped so the checksum gate cannot catch it first).
+    let q = model_for("prs", 2).to_precision(Precision::I8);
+    let v2 = encode_model(&q, 1).expect("encode");
+    let v1 = patch_and_restamp(&v2, 8, &1u32.to_le_bytes());
+    match decode_model(&v1, &opts()) {
+        Err(StoreError::Corrupt { detail }) => {
+            assert!(detail.contains("v2") && detail.contains("v1"), "{detail}");
+        }
+        other => panic!("expected Corrupt, got {other:?}"),
+    }
+}
+
+#[test]
+fn version_skew_error_names_both_supported_versions() {
+    // A future v3 artifact must fail with a message an operator can act
+    // on: the found version AND the v1..=v2 range this build reads.
+    let bytes = encode_model(&model_for("prs", 1), 1).expect("encode");
+    let v3 = patch_and_restamp(&bytes, 8, &3u32.to_le_bytes());
+    match decode_model(&v3, &opts()) {
+        Err(e @ StoreError::UnsupportedVersion { found: 3 }) => {
+            let msg = e.to_string();
+            assert!(msg.contains('3'), "{msg}");
+            assert!(msg.contains("v1") && msg.contains("v2"), "{msg}");
+        }
+        other => panic!("expected UnsupportedVersion, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_scales_are_typed_errors() {
+    // Checksum-valid bytes whose scale vector is poison (NaN / -1 / inf)
+    // must come back as BadScale naming layer and column — never load.
+    let q = model_for("prs", 2).to_precision(Precision::I8);
+    let bytes = encode_model(&q, 1).expect("encode");
+    // Layer 0 scale vector starts after the fixed record, PRS extras,
+    // and the bias payload (D1 f32s).
+    let record0 = (8 + 4 + 4 + 8) as usize;
+    let scales_at = record0 + (RECORD_FIXED_BYTES + PRS_EXTRA_BYTES) as usize + 4 * D1;
+    for (bad, name) in [
+        (f32::NAN, "NaN"),
+        (f32::NEG_INFINITY, "-inf"),
+        (-1.0f32, "negative"),
+    ] {
+        let patched = patch_and_restamp(&bytes, scales_at + 4 * 2, &bad.to_le_bytes());
+        match decode_model(&patched, &opts()) {
+            Err(StoreError::BadScale { layer: 0, column: 2, value }) => {
+                assert!(value.is_nan() || value < 0.0, "{name}: value {value}");
+            }
+            other => panic!("{name}: expected BadScale, got {other:?}"),
+        }
+    }
+    // Zero is legal (all-zero column) — the untouched artifact loads.
+    decode_model(&bytes, &opts()).expect("clean quantized artifact loads");
 }
 
 // ---------------------------------------------------------------------------
