@@ -4,12 +4,25 @@
 //! longer. Records dense vs pruned accuracy and the full-size hw view.
 //!
 //! Run: `cargo run --release --example vgg_imagenet64 [dense_steps]`
+//!
+//! **Serve mode** (no AOT artifacts needed): compile the synthetic
+//! modified VGG-16 — 13 dense 3×3 convs + 4 max-pools + the PRS-pruned
+//! 8192-2048-2048-1000 classifier — and serve batched traffic through
+//! the registry over one worker pool:
+//!
+//! `cargo run --release --example vgg_imagenet64 serve [requests] [workers] [input_hw] [ch_div]`
+//!
+//! `input_hw`/`ch_div` (default 64/1 = paper size) scale the model for
+//! quick smoke runs, e.g. `serve 512 4 32 4`.
 
 use lfsr_prune::hw::{self, Mode};
 use lfsr_prune::pipeline::{run_trial, DataConfig, MaskMethod, PipelineConfig, RegType};
 use lfsr_prune::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
+    if std::env::args().nth(1).as_deref() == Some("serve") {
+        return serve_mode();
+    }
     let dense_steps: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -65,6 +78,75 @@ fn main() -> anyhow::Result<()> {
             c.power_saving_pct(),
             c.area_saving_pct(),
             c.memory_reduction()
+        );
+    }
+    Ok(())
+}
+
+/// Serve the compiled VGG-16 end to end: compile from seeds (conv stack
+/// dense, classifier PRS-derived), register in a `ModelRegistry` on one
+/// shared pool, push synthetic 64×64×3 requests, drain, report.
+fn serve_mode() -> anyhow::Result<()> {
+    use lfsr_prune::data::rng::Pcg32;
+    use lfsr_prune::serve::synthetic_vgg16_scaled;
+    use lfsr_prune::store::{ModelRegistry, TenantConfig};
+    use std::time::{Duration, Instant};
+
+    let arg = |n: usize, default: usize| {
+        std::env::args().nth(n).and_then(|s| s.parse().ok()).unwrap_or(default)
+    };
+    let requests = arg(2, 256);
+    let workers = arg(3, std::thread::available_parallelism().map_or(4, |n| n.get()));
+    let input_hw = arg(4, 64);
+    let ch_div = arg(5, 1);
+
+    let t0 = Instant::now();
+    let model = synthetic_vgg16_scaled(input_hw, ch_div, 0.9, 4 * workers.max(1), workers.max(1));
+    let in_dim = model.in_dim();
+    let counts = model.layer_kind_counts();
+    println!(
+        "compiled modified VGG-16 ({input_hw}x{input_hw}x3, ch/{ch_div}) in {:.0} ms: {} conv + \
+         {} pool + {} fc layers, {} kept weights",
+        t0.elapsed().as_secs_f64() * 1e3,
+        counts.conv,
+        counts.pool,
+        counts.fc,
+        model.nnz()
+    );
+    println!("{}", model.describe());
+
+    let reg = ModelRegistry::new(workers);
+    reg.insert(
+        "vgg16",
+        model,
+        TenantConfig { batch: 16, max_wait: Some(Duration::from_millis(10)) },
+    )
+    .expect("fresh registry");
+    let mut rng = Pcg32::new(64);
+    let t1 = Instant::now();
+    let mut answered = 0usize;
+    let mut pushed = 0usize;
+    while answered < requests {
+        // Feed in bursts so the batcher always has a full cut available.
+        while pushed < requests && pushed < answered + 64 {
+            let x: Vec<f32> = (0..in_dim).map(|_| rng.next_f32()).collect();
+            reg.push("vgg16", pushed as u64, x).expect("routed push");
+            pushed += 1;
+        }
+        answered += reg.drain(pushed == requests).len();
+    }
+    let wall = t1.elapsed().as_secs_f64();
+    for info in reg.list() {
+        let s = &info.stats;
+        println!(
+            "served {} requests in {:.2}s -> {:.1} req/s over {} batches ({} padded rows, p95 \
+             {:.1} ms)",
+            s.requests,
+            wall,
+            requests as f64 / wall,
+            s.batches,
+            s.padded,
+            s.latency.map_or(0.0, |l| l.p95 * 1e3),
         );
     }
     Ok(())

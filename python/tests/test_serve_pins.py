@@ -1,0 +1,121 @@
+# The lenet300 serving-layout pins: an exact integer-only mirror of the
+# rust side's width picker (lfsr::pick_pair_widths), prune target
+# (mask::prune_target), two-LFSR keep walk (mask::prs), and walk hash
+# (store::format::hash_keep_sequence, FNV-1a 64 over u32le pairs).
+#
+# rust/tests/serve_integration.rs pins the SAME constants
+# (`lenet300_walk_and_packing_pinned`); this file is where they were
+# generated, and running it re-derives them — if either side drifts, the
+# demo model's packed layout (and every artifact built from those seeds)
+# has silently changed.
+from __future__ import annotations
+
+import math
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from compile.kernels.ref import PRIMITIVE_TAPS, lfsr_pair_mask  # noqa: E402
+
+MAX_WIDTH = 24
+
+# (rows, cols, n_row, n_col, nnz, walk_hash, first_kept, last_kept) per
+# layer of serve::synthetic_lenet300 at 90% sparsity, seeds (11+i, 29+i).
+PINS = [
+    (784, 300, 12, 11, 23520, 0x8185404F420A032A, (688, 189), (779, 243)),
+    (300, 100, 11, 9, 3000, 0x9A5895CC909D5509, (0, 2), (184, 82)),
+    (100, 10, 9, 7, 100, 0x42BBEC3609D91B22, (54, 8), (56, 2)),
+]
+
+
+def pick_pair_widths(rows: int, cols: int) -> tuple[int, int]:
+    """Mirror of rust lfsr::pick_pair_widths (NOT ref.py's variant —
+    the rust picker clamps at MAX_WIDTH and scans for coprimality)."""
+
+    def bitlen(v: int) -> int:
+        return (max(v, 2) - 1).bit_length()
+
+    n_row = min(max(bitlen(rows) + 2, 4), MAX_WIDTH)
+    n_col = min(max(bitlen(cols) + 2, 4), MAX_WIDTH)
+    while math.gcd(n_row, n_col) != 1 or n_col not in PRIMITIVE_TAPS:
+        n_col += 1
+        assert n_col <= MAX_WIDTH
+    return n_row, n_col
+
+
+def prune_target(rows: int, cols: int, sparsity: float) -> int:
+    """Mirror of rust mask::prune_target (python-round / banker's)."""
+    t = sparsity * rows * cols
+    floor = int(t // 1)
+    frac = t - floor
+    if abs(frac - 0.5) < 1e-12:
+        return floor if floor % 2 == 0 else floor + 1
+    return floor + 1 if frac > 0.5 else floor
+
+
+def keep_sequence(rows, cols, sparsity, n_row, n_col, seed_row, seed_col):
+    size = rows * cols
+    target = size - prune_target(rows, cols, sparsity)
+    taps_r, taps_c = PRIMITIVE_TAPS[n_row], PRIMITIVE_TAPS[n_col]
+    sr = seed_row & ((1 << n_row) - 1) or 1
+    sc = seed_col & ((1 << n_col) - 1) or 1
+    visited = bytearray(size)
+    seq = []
+    budget = max(64 * target, 16 * size) + 1024
+    for _ in range(budget):
+        if len(seq) >= target:
+            break
+        lsb = sr & 1
+        sr >>= 1
+        if lsb:
+            sr ^= taps_r
+        lsb = sc & 1
+        sc >>= 1
+        if lsb:
+            sc ^= taps_c
+        r = (sr * rows) >> n_row
+        c = (sc * cols) >> n_col
+        flat = r * cols + c
+        if not visited[flat]:
+            visited[flat] = 1
+            seq.append((r, c))
+    assert len(seq) == target, "walk budget exhausted"
+    return seq
+
+
+def fnv1a64_keep_sequence(seq) -> int:
+    h = 0xCBF29CE484222325
+    for r, c in seq:
+        for b in r.to_bytes(4, "little") + c.to_bytes(4, "little"):
+            h ^= b
+            h = (h * 0x00000100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def test_lenet300_pins_rederive():
+    for i, (rows, cols, n_row, n_col, nnz, walk_hash, first, last) in enumerate(PINS):
+        assert pick_pair_widths(rows, cols) == (n_row, n_col), f"layer {i} widths"
+        seq = keep_sequence(rows, cols, 0.9, n_row, n_col, 11 + i, 29 + i)
+        assert len(seq) == nnz, f"layer {i} keep budget"
+        assert seq[0] == first and seq[-1] == last, f"layer {i} endpoints"
+        assert fnv1a64_keep_sequence(seq) == walk_hash, f"layer {i} walk hash"
+
+
+def test_walk_agrees_with_ref_oracle():
+    # The mirror's kept set must equal ref.py's lfsr_pair_mask exactly.
+    rows, cols = 300, 100
+    n_row, n_col = pick_pair_widths(rows, cols)
+    mask = lfsr_pair_mask(rows, cols, 0.9, n_row, n_col, 12, 30)
+    seq = keep_sequence(rows, cols, 0.9, n_row, n_col, 12, 30)
+    kept = {(r, c) for r, c in seq}
+    for r in range(rows):
+        for c in range(cols):
+            assert ((r, c) in kept) == (mask[r, c] == 1.0), (r, c)
+
+
+if __name__ == "__main__":
+    test_lenet300_pins_rederive()
+    test_walk_agrees_with_ref_oracle()
+    print("serve pins OK")
+    for rows, cols, n_row, n_col, nnz, walk_hash, first, last in PINS:
+        print(f"  {rows}x{cols} ({n_row},{n_col}b): nnz {nnz} hash {walk_hash:#018x}")

@@ -1,14 +1,21 @@
 //! Serving-engine throughput: single- vs multi-thread batched GEMM over
-//! an LFSR-pruned LeNet-300-100, plus the one-time seed-expansion cost
-//! (serial walk vs jump-table lanes).  Starts the serving perf
-//! trajectory: results land in `BENCH_serve.json` at the repo root so
-//! successive PRs can diff them.
+//! an LFSR-pruned LeNet-300-100, the one-time seed-expansion cost
+//! (serial walk vs jump-table lanes), and the paper's flagship VGG-16
+//! workload through the conv-capable serving path (im2col panels + the
+//! same blocked kernel).  Results land in `BENCH_serve.json` at the repo
+//! root so successive PRs can diff them.
+//!
+//! `BENCH_SMOKE=1` (CI) scales the VGG rows down (32×32 input, channels
+//! /4) so the smoke run stays quick; the full-size paper model runs by
+//! default.
 
 use std::fmt::Write as _;
 
 use lfsr_prune::data::rng::Pcg32;
 use lfsr_prune::mask::prs::PrsMaskConfig;
-use lfsr_prune::serve::{parallel_keep_sequence, synthetic_lenet300, Batcher, InferenceSession};
+use lfsr_prune::serve::{
+    parallel_keep_sequence, synthetic_lenet300, synthetic_vgg16_scaled, Batcher, InferenceSession,
+};
 use lfsr_prune::util::bench::{bench_out_path, black_box, Bench, Stats};
 
 const DIMS: [usize; 4] = [784, 300, 100, 10];
@@ -73,6 +80,38 @@ fn main() {
         }
     }
 
+    // --- the paper's VGG-16 through the conv serving path ----------------
+    // 13 dense 3x3 convs + 4 max-pools + PRS-pruned classifier; im2col
+    // feeds the same blocked kernel the FC rows use.  BENCH_SMOKE scales
+    // it down for CI.
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
+    let (vgg_hw, vgg_div) = if smoke { (32usize, 4usize) } else { (64usize, 1usize) };
+    let mut vgg_nnz = 0usize;
+    for &workers in &[1usize, multi] {
+        let t0 = std::time::Instant::now();
+        let model = synthetic_vgg16_scaled(vgg_hw, vgg_div, SPARSITY, 4 * workers, workers.max(2));
+        vgg_nnz = model.nnz();
+        let in_dim = model.in_dim();
+        println!(
+            "bench serve/compile_vgg16_{vgg_hw}div{vgg_div}_w{workers}: {:.1} ms ({vgg_nnz} kept)",
+            t0.elapsed().as_secs_f64() * 1e3,
+        );
+        let session = InferenceSession::new(model, workers);
+        for &batch in &[1usize, 8] {
+            let x: Vec<f32> = (0..batch * in_dim).map(|_| rng.next_f32()).collect();
+            let name = format!("serve/vgg16_{vgg_hw}div{vgg_div}_b{batch}_w{workers} (examples)");
+            let stats =
+                Bench::heavy(name).run(batch as u64, || black_box(session.infer_batch(&x, batch)));
+            rows.push(Row {
+                name: format!("vgg_infer_b{batch}_w{workers}"),
+                batch,
+                workers,
+                items: batch as u64,
+                stats,
+            });
+        }
+    }
+
     // --- end-to-end queue -> batch -> answer loop ------------------------
     let session = InferenceSession::new(synthetic_lenet300(SPARSITY, 4 * multi, multi), multi);
     let n_requests = 2048usize;
@@ -107,6 +146,11 @@ fn main() {
         "  \"model\": {{\"dims\": [784, 300, 100, 10], \"sparsity\": {SPARSITY}}},"
     );
     let _ = writeln!(json, "  \"hw_threads\": {hw_threads},");
+    let _ = writeln!(
+        json,
+        "  \"vgg\": {{\"input_hw\": {vgg_hw}, \"ch_div\": {vgg_div}, \"nnz\": {vgg_nnz}, \
+         \"smoke\": {smoke}}},"
+    );
     let _ = writeln!(json, "  \"results\": [");
     for (i, r) in rows.iter().enumerate() {
         let _ = writeln!(

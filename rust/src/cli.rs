@@ -87,21 +87,27 @@ USAGE:
                  [--bits 4|8] [--stream] [--lanes N]
   repro experiment <table2|table3|fig3|fig4|fig4.1..4|fig5|table4|table5|all>
                  [--quick] [--trials N] [--workers N] [--out DIR]
-  repro export [--out PATH] [--sparsity S] [--shards N] [--lanes N]
-               [--seed-base B] [--precision f32|i8] [--verify]
+  repro export [--out PATH] [--model lenet300|vgg16] [--sparsity S]
+               [--shards N] [--lanes N] [--seed-base B]
+               [--input-hw H] [--ch-div D]
+               [--precision f32|i8] [--verify]
   repro serve-artifact PATH [PATH..] [--requests N] [--workers N]
                [--batch B] [--deadline-ms D] [--shards N] [--lanes N]
                [--precision keep|f32|i8[,..]] [--verify]
 
-`export` writes the demo LFSR-pruned LeNet-300-100 as a `.lfsrpack`
-artifact (per layer: packed kept values + two LFSR seeds — no index
-storage); `--precision i8` quantizes the kept values to per-column
-symmetric i8 first (~4x smaller value payload, format v2).
-`serve-artifact` loads one or more artifacts into a shared worker-pool
-registry and serves synthetic traffic across them; `--precision` picks
-each tenant's serving tier (`keep` = as stored; one value for all
-paths, or a comma list with one tier per path — mixed f32/i8 tenants
-share the one pool).
+`export` writes a demo model as a `.lfsrpack` artifact: the LFSR-pruned
+LeNet-300-100 (default), or `--model vgg16` — the paper's modified
+VGG-16 with its 13 dense 3x3 conv layers, 4 max-pools, and PRS-pruned
+8192-2048-2048-1000 classifier (format v3 conv records; `--input-hw` /
+`--ch-div` scale it down for smoke runs).  Per layer the file stores
+packed kept values + two LFSR seeds (PRS) or values only (dense) — no
+per-weight index storage either way; `--precision i8` quantizes the
+kept values to per-column symmetric i8 first (~4x smaller value
+payload).  `serve-artifact` loads one or more artifacts (conv or FC)
+into a shared worker-pool registry and serves synthetic traffic across
+them; `--precision` picks each tenant's serving tier (`keep` = as
+stored; one value for all paths, or a comma list with one tier per
+path — mixed f32/i8 tenants share the one pool).
 
 Artifacts default to ./artifacts (or $LFSR_PRUNE_ARTIFACTS); build them
 with `make artifacts` first.";
@@ -289,7 +295,9 @@ fn tenant_precisions(args: &Args, n_paths: usize) -> Result<Vec<Option<Precision
 }
 
 fn cmd_export(args: &Args) -> Result<()> {
-    let out = PathBuf::from(args.flag("out").unwrap_or("lenet300.lfsrpack"));
+    let model_name = args.get("model", "lenet300".to_string())?;
+    let default_out = format!("{model_name}.lfsrpack");
+    let out = PathBuf::from(args.flag("out").unwrap_or(&default_out));
     let sparsity: f64 = args.get("sparsity", 0.9)?;
     let shards: usize = args.get("shards", 4usize)?;
     let lanes: usize = args.get("lanes", 2usize)?;
@@ -298,18 +306,31 @@ fn cmd_export(args: &Args) -> Result<()> {
         Some(p) => p,
         None => bail!("export --precision must be f32 or i8 (there is no stored tier to keep)"),
     };
-    let (model, compile_s) = crate::util::time_it(|| {
-        let m = synthetic_lenet300_seeded(sparsity, shards, lanes, seed_base);
-        match precision {
+    let input_hw: usize = args.get("input-hw", 64usize)?;
+    let ch_div: usize = args.get("ch-div", 1usize)?;
+    if input_hw == 0 || input_hw % 16 != 0 {
+        bail!("--input-hw must be a positive multiple of 16 (four 2x2 pools)");
+    }
+    let (model, compile_s) = crate::util::time_it(|| -> Result<_> {
+        let m = match model_name.as_str() {
+            "lenet300" => synthetic_lenet300_seeded(sparsity, shards, lanes, seed_base),
+            "vgg16" => {
+                crate::serve::synthetic_vgg16_scaled(input_hw, ch_div, sparsity, shards, lanes)
+            }
+            other => bail!("unknown export model {other} (expected lenet300 or vgg16)"),
+        };
+        Ok(match precision {
             Precision::F32 => m,
             Precision::I8 => m.to_precision(Precision::I8),
-        }
+        })
     });
+    let model = model?;
     println!("{}", model.describe());
     let report = store::export_model(&model, &out, lanes)?;
     println!(
         "exported {} in {:.1} ms compile + write: {} B total = {} B values + {} B scales + \
-         {} B bias + {} B seeds/polynomials ({} layers, no per-weight index storage)",
+         {} B bias + {} B seeds/polynomials + {} B conv/pool geometry ({} layers, no \
+         per-weight index storage)",
         out.display(),
         compile_s * 1e3,
         report.total_bytes,
@@ -317,6 +338,7 @@ fn cmd_export(args: &Args) -> Result<()> {
         report.scale_bytes,
         report.bias_bytes,
         report.seed_bytes,
+        report.geom_bytes,
         report.layers,
     );
     if args.bool_flag("verify") {
@@ -386,8 +408,12 @@ fn cmd_serve_artifact(args: &Args) -> Result<()> {
     for m in reg.list() {
         let lat = m.stats.latency.map_or(0.0, |l| l.p95 * 1e3);
         println!(
-            "  {}: {} req over {} batches -> {:.0} req/s (p95 {:.2} ms, {} padded rows)",
+            "  {} ({}fc+{}conv+{}pool): {} req over {} batches -> {:.0} req/s (p95 {:.2} ms, \
+             {} padded rows)",
             m.id,
+            m.kinds.fc,
+            m.kinds.conv,
+            m.kinds.pool,
             m.stats.requests,
             m.stats.batches,
             m.stats.throughput_rps(),

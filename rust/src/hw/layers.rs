@@ -1,8 +1,10 @@
-//! The paper's evaluated networks as FC-layer dimension lists (the pruned
-//! layers — §3.1.1: "we focused on pruning fully connected layers").
+//! The paper's evaluated networks as layer dimension lists.  The
+//! *pruned* layers are the FC ones (§3.1.1: "we focused on pruning fully
+//! connected layers") and Tables 4/5 / Figure 5 depend only on those +
+//! sparsity — but the serving/artifact footprint models need the whole
+//! network, so each [`Network`] also records its (dense) conv layers.
 //!
-//! Tables 4/5 and Figure 5 depend only on these dimensions + sparsity, so
-//! the hw model always uses the *paper's full sizes* regardless of the
+//! The hw model always uses the *paper's full sizes* regardless of the
 //! width scaling used for CPU training (DESIGN.md §Substitutions).
 
 /// One FC layer: rows = inputs (N), cols = outputs (M).
@@ -22,16 +24,56 @@ impl FcDims {
     }
 }
 
-/// A network = named list of FC layers.
+/// One (dense, unpruned) conv layer: `kernel²·in_c·out_c` weights — the
+/// im2col-lowered matrix is `[kernel²·in_c, out_c]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvDims {
+    pub in_c: usize,
+    pub out_c: usize,
+    pub kernel: usize,
+}
+
+impl ConvDims {
+    pub const fn new(in_c: usize, out_c: usize, kernel: usize) -> Self {
+        ConvDims { in_c, out_c, kernel }
+    }
+
+    /// Rows of the im2col-lowered weight matrix.
+    pub fn rows(&self) -> usize {
+        self.kernel * self.kernel * self.in_c
+    }
+
+    pub fn size(&self) -> usize {
+        self.rows() * self.out_c
+    }
+}
+
+/// A network = named list of FC layers (the pruned ones — what the hw
+/// tables sweep) plus its dense conv layers (what the whole-network
+/// artifact/footprint models additionally count).
 #[derive(Debug, Clone)]
 pub struct Network {
     pub name: &'static str,
     pub layers: Vec<FcDims>,
+    pub conv_layers: Vec<ConvDims>,
 }
 
 impl Network {
+    /// FC weights only — the layers the paper prunes and the hw
+    /// energy/area tables sweep.  (Conv weights are counted separately:
+    /// [`Network::conv_weights`].)
     pub fn total_weights(&self) -> usize {
         self.layers.iter().map(FcDims::size).sum()
+    }
+
+    /// Dense conv weights.
+    pub fn conv_weights(&self) -> usize {
+        self.conv_layers.iter().map(ConvDims::size).sum()
+    }
+
+    /// Every weight in the network, conv stack included.
+    pub fn all_weights(&self) -> usize {
+        self.total_weights() + self.conv_weights()
     }
 
     /// Bytes of packed non-zero FC values at `sparsity`, in the f32
@@ -56,9 +98,26 @@ impl Network {
             .map(|d| crate::sparse::memory::artifact_value_bytes(d.rows, d.cols, sparsity, precision))
             .sum()
     }
+
+    /// Value-plane bytes of the (dense, unpruned) conv layers at a
+    /// precision tier — sparsity 0 through the same per-layer model.
+    pub fn conv_value_bytes(&self, precision: crate::sparse::Precision) -> u64 {
+        self.conv_layers
+            .iter()
+            .map(|d| crate::sparse::memory::artifact_value_bytes(d.rows(), d.out_c, 0.0, precision))
+            .sum()
+    }
+
+    /// Whole-network value payload: PRS-pruned FC layers at `sparsity`
+    /// plus the dense conv stack — what a conv-capable `.lfsrpack`
+    /// artifact of the full network stores as values, since both PRS and
+    /// dense records carry zero per-weight index bytes.
+    pub fn value_bytes(&self, sparsity: f64, precision: crate::sparse::Precision) -> u64 {
+        self.fc_value_bytes(sparsity, precision) + self.conv_value_bytes(precision)
+    }
 }
 
-/// LeNet-300-100 (784-300-100-10).
+/// LeNet-300-100 (784-300-100-10) — all-FC.
 pub fn lenet300() -> Network {
     Network {
         name: "LeNet-300-100",
@@ -67,20 +126,29 @@ pub fn lenet300() -> Network {
             FcDims::new(300, 100),
             FcDims::new(100, 10),
         ],
+        conv_layers: Vec::new(),
     }
 }
 
-/// LeNet-5 FC layers (Han/Caffe variant: 800-500-10).
+/// LeNet-5 (Han/Caffe variant): 5×5 convs 20/50, FC 800-500-10.
 pub fn lenet5() -> Network {
     Network {
         name: "LeNet-5",
         layers: vec![FcDims::new(800, 500), FcDims::new(500, 10)],
+        conv_layers: vec![ConvDims::new(1, 20, 5), ConvDims::new(20, 50, 5)],
     }
 }
 
-/// Modified VGG-16 FC layers (paper §3.1.4: flatten 8192 → 2048 → 2048 →
-/// 1000; FC width changed to 2048, last pool eliminated).
+/// Modified VGG-16 (paper §3.1.4): the 13 dense 3×3 conv layers plus the
+/// pruned FC stack (flatten 8192 → 2048 → 2048 → 1000; FC width changed
+/// to 2048, last pool eliminated).
 pub fn vgg16_modified() -> Network {
+    let mut conv_layers = Vec::new();
+    let mut in_c = 3;
+    for (out_c, _) in crate::serve::VGG16_CONV_PLAN {
+        conv_layers.push(ConvDims::new(in_c, out_c, 3));
+        in_c = out_c;
+    }
     Network {
         name: "modified VGG-16",
         layers: vec![
@@ -88,6 +156,7 @@ pub fn vgg16_modified() -> Network {
             FcDims::new(2048, 2048),
             FcDims::new(2048, 1000),
         ],
+        conv_layers,
     }
 }
 
@@ -103,11 +172,28 @@ mod tests {
     #[test]
     fn dims_match_paper() {
         assert_eq!(lenet300().total_weights(), 784 * 300 + 300 * 100 + 100 * 10);
+        assert_eq!(lenet300().conv_weights(), 0);
         assert_eq!(lenet5().total_weights(), 800 * 500 + 500 * 10);
+        assert_eq!(lenet5().conv_weights(), 25 * 20 + 25 * 20 * 50);
         // VGG FC params ≈ 23M (paper's "modified VGG-16 ... 23M" count is
         // FC-dominated; our three layers alone are 22.9M).
-        let v = vgg16_modified().total_weights();
+        let vgg = vgg16_modified();
+        let v = vgg.total_weights();
         assert!(v > 22_000_000 && v < 24_000_000, "{v}");
+        // The conv stack: 13 layers of 3x3, 3->64 ... 512->512, ~14.7M
+        // dense weights.
+        assert_eq!(vgg.conv_layers.len(), 13);
+        assert_eq!(vgg.conv_layers[0], ConvDims::new(3, 64, 3));
+        assert_eq!(vgg.conv_layers[12], ConvDims::new(512, 512, 3));
+        let c = vgg.conv_weights();
+        assert_eq!(c, 14_710_464, "sum of 9*in_c*out_c over the plan");
+        assert_eq!(vgg.all_weights(), v + c);
+        // Conv channel chain is consistent.
+        for pair in vgg.conv_layers.windows(2) {
+            assert_eq!(pair[0].out_c, pair[1].in_c);
+        }
+        // Flatten matches FC1: 4*4*512 = 8192.
+        assert_eq!(4 * 4 * vgg.conv_layers.last().unwrap().out_c, vgg.layers[0].rows);
     }
 
     #[test]

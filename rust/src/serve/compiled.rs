@@ -21,7 +21,7 @@ use crate::data::rng::Pcg32;
 use crate::lfsr::{GaloisLfsr, JumpTable};
 use crate::mask::prs::PrsMaskConfig;
 use crate::mask::{prune_target, Mask};
-use crate::sparse::{PackedColumns, Precision};
+use crate::sparse::{ConvGeom, PackedColumns, PoolGeom, Precision};
 
 /// Most raw LFSR steps generated per lane per round during the replay
 /// (rounds size their chunks down to the expected walk length so small
@@ -142,11 +142,45 @@ pub enum MaskKind {
     Explicit,
 }
 
-/// One fully-expanded sparse FC layer: packed kept weights (column
-/// shards), bias, and activation.
+/// What a compiled layer *is* — how its packed matrix (if any) maps onto
+/// the activation stream.
+///
+/// * [`Fc`](LayerShape::Fc): the historical shape — input length `rows`,
+///   output length `cols`, one GEMM.
+/// * [`Conv`](LayerShape::Conv): NHWC convolution lowered via im2col —
+///   the packed matrix is `[kernel²·in_c, out_c]` (HWIO row order) and
+///   every output pixel is one virtual batch row of the same GEMM, so
+///   conv rides both kernels, both precision tiers, and the bitwise
+///   determinism contract unchanged (`sparse::im2col`).
+/// * [`MaxPool`](LayerShape::MaxPool): weightless channel-wise window
+///   max; the layer carries no shards, bias, or mask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerShape {
+    Fc,
+    Conv(ConvGeom),
+    MaxPool(PoolGeom),
+}
+
+/// Per-kind layer census of a [`CompiledModel`] — surfaced through
+/// `store::ModelInfo` so operators can see a tenant's topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LayerKindCounts {
+    pub fc: usize,
+    pub conv: usize,
+    pub pool: usize,
+}
+
+/// One fully-expanded serving layer: packed kept weights (column
+/// shards), bias, activation, and the [`LayerShape`] describing how the
+/// matrix maps onto the activation stream (FC GEMM, im2col conv, or a
+/// weightless max-pool).
 #[derive(Debug, Clone)]
 pub struct CompiledLayer {
+    /// Packed-matrix rows: input features (FC) or `kernel²·in_c` (conv);
+    /// 0 for a pool layer.
     pub rows: usize,
+    /// Packed-matrix cols: output features (FC) or `out_c` (conv); 0 for
+    /// a pool layer.
     pub cols: usize,
     pub kind: MaskKind,
     /// Empty = no bias; else length `cols`, indexed by global column.
@@ -159,6 +193,8 @@ pub struct CompiledLayer {
     pub precision: Precision,
     /// Column-range shards, jointly covering `[0, cols)` in order.
     pub shards: Vec<PackedColumns>,
+    /// How the matrix maps onto the activation stream.
+    pub shape: LayerShape,
 }
 
 impl CompiledLayer {
@@ -211,6 +247,7 @@ impl CompiledLayer {
             relu,
             precision: Precision::F32,
             shards,
+            shape: LayerShape::Fc,
         }
     }
 
@@ -239,7 +276,99 @@ impl CompiledLayer {
             relu,
             precision: Precision::F32,
             shards,
+            shape: LayerShape::Fc,
         }
+    }
+
+    /// A conv layer from an explicit keep-mask over the im2col-lowered
+    /// matrix: `weights` are HWIO row-major (`[kernel, kernel, in_c,
+    /// out_c]` flattened — i.e. row `(ky·kernel + kx)·in_c + ic` of a
+    /// `[kernel²·in_c, out_c]` matrix), `mask` has those same dims.
+    /// Use [`Mask::dense`] for the paper's unpruned convs (§3.1.1).
+    pub fn conv_from_mask(
+        weights: &[f32],
+        bias: Vec<f32>,
+        relu: bool,
+        mask: &Mask,
+        geom: ConvGeom,
+        n_shards: usize,
+    ) -> CompiledLayer {
+        geom.validate().expect("valid conv geometry");
+        assert_eq!(mask.rows, geom.patch_len(), "mask rows == kernel^2 * in_c");
+        assert_eq!(mask.cols, geom.out_c, "mask cols == out_c");
+        let mut layer = Self::from_mask(weights, bias, relu, mask, n_shards);
+        layer.shape = LayerShape::Conv(geom);
+        layer
+    }
+
+    /// A PRS-pruned conv layer: the two-LFSR walk runs over the lowered
+    /// `[kernel²·in_c, out_c]` matrix exactly as it would over an FC
+    /// layer of those dims, so the seeds remain the entire index state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compile_conv_prs(
+        weights: &[f32],
+        bias: Vec<f32>,
+        relu: bool,
+        geom: ConvGeom,
+        sparsity: f64,
+        cfg: PrsMaskConfig,
+        n_shards: usize,
+        lanes: usize,
+    ) -> CompiledLayer {
+        geom.validate().expect("valid conv geometry");
+        let mut layer = Self::compile_prs(
+            weights,
+            bias,
+            relu,
+            geom.patch_len(),
+            geom.out_c,
+            sparsity,
+            cfg,
+            n_shards,
+            lanes,
+        );
+        layer.shape = LayerShape::Conv(geom);
+        layer
+    }
+
+    /// A weightless max-pool layer: no shards, no bias, no mask — only
+    /// geometry.
+    pub fn maxpool(geom: PoolGeom) -> CompiledLayer {
+        geom.validate().expect("valid pool geometry");
+        CompiledLayer {
+            rows: 0,
+            cols: 0,
+            kind: MaskKind::Explicit,
+            bias: Vec::new(),
+            relu: false,
+            precision: Precision::F32,
+            shards: Vec::new(),
+            shape: LayerShape::MaxPool(geom),
+        }
+    }
+
+    /// Activation elements per example entering this layer.
+    pub fn in_len(&self) -> usize {
+        match &self.shape {
+            LayerShape::Fc => self.rows,
+            LayerShape::Conv(g) => g.in_len(),
+            LayerShape::MaxPool(g) => g.in_len(),
+        }
+    }
+
+    /// Activation elements per example leaving this layer.
+    pub fn out_len(&self) -> usize {
+        match &self.shape {
+            LayerShape::Fc => self.cols,
+            LayerShape::Conv(g) => g.out_len(),
+            LayerShape::MaxPool(g) => g.out_len(),
+        }
+    }
+
+    /// Whether this layer carries a packed weight matrix (pool layers do
+    /// not, and are excluded from precision accounting).
+    pub fn has_weights(&self) -> bool {
+        !matches!(self.shape, LayerShape::MaxPool(_))
     }
 
     /// Kept entries across all shards.
@@ -247,8 +376,11 @@ impl CompiledLayer {
         self.shards.iter().map(PackedColumns::nnz).sum()
     }
 
-    /// Fraction of pruned synapses.
+    /// Fraction of pruned synapses (0 for a weightless pool layer).
     pub fn sparsity(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
         1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
     }
 
@@ -260,6 +392,10 @@ impl CompiledLayer {
     /// identical for any shard count (quantize-then-shard ≡
     /// shard-then-quantize).
     pub fn to_precision(&self, precision: Precision) -> CompiledLayer {
+        if !self.has_weights() {
+            // A pool layer has no value plane to convert.
+            return self.clone();
+        }
         CompiledLayer {
             rows: self.rows,
             cols: self.cols,
@@ -268,6 +404,7 @@ impl CompiledLayer {
             relu: self.relu,
             precision,
             shards: self.shards.iter().map(|s| s.to_precision(precision)).collect(),
+            shape: self.shape,
         }
     }
 }
@@ -308,6 +445,90 @@ pub fn synthetic_lenet300_seeded(
     CompiledModel::new(layers)
 }
 
+/// The VGG-16 conv plan shared by the demo builder and the paper's hw
+/// model: 13 conv widths with a 2×2/2 max-pool after blocks 1, 2, 3, 4
+/// (the paper's *fifth* pool is eliminated — §3.1.4 — which is what
+/// makes the flatten 4·4·512 = 8192 at 64×64 input).
+pub const VGG16_CONV_PLAN: [(usize, bool); 13] = [
+    (64, false),
+    (64, true),
+    (128, false),
+    (128, true),
+    (256, false),
+    (256, false),
+    (256, true),
+    (512, false),
+    (512, false),
+    (512, true),
+    (512, false),
+    (512, false),
+    (512, false),
+];
+
+/// The paper's flagship serving workload: modified VGG-16 on 64×64
+/// down-sampled-ImageNet dims — 13 dense 3×3 SAME convs (+ReLU), four
+/// 2×2 max-pools, then the PRS-pruned 8192-2048-2048-1000 FC classifier
+/// (the only layers the paper prunes, §3.1.1).  Synthetic Glorot-ish
+/// weights; per-FC-layer LFSR seeds `(101+i, 131+i)`.
+pub fn synthetic_vgg16(sparsity: f64, n_shards: usize, lanes: usize) -> CompiledModel {
+    synthetic_vgg16_scaled(64, 1, sparsity, n_shards, lanes)
+}
+
+/// [`synthetic_vgg16`] with the input resolution and channel widths
+/// scaled down (`input_hw` must be a positive multiple of 16 so the four
+/// pools divide it; every channel count and the FC widths divide by
+/// `ch_div`, floored at small minimums).  `(64, 1)` is the paper-size
+/// model; tests and smoke benches use smaller instances with the exact
+/// same 13-conv + 4-pool + 3-FC topology.
+pub fn synthetic_vgg16_scaled(
+    input_hw: usize,
+    ch_div: usize,
+    sparsity: f64,
+    n_shards: usize,
+    lanes: usize,
+) -> CompiledModel {
+    assert!(input_hw >= 16 && input_hw % 16 == 0, "input must be a positive multiple of 16");
+    let ch_div = ch_div.max(1);
+    let ch = |c: usize| (c / ch_div).max(4);
+    let fc_width = (2048 / ch_div).max(4);
+    let classes = (1000 / ch_div).max(10);
+    let mut rng = Pcg32::new(23);
+    let mut layers = Vec::new();
+    let (mut hw, mut in_c) = (input_hw, 3usize);
+    for (width, pool_after) in VGG16_CONV_PLAN {
+        let out_c = ch(width);
+        let geom = ConvGeom::same3x3(hw, hw, in_c, out_c);
+        let n = geom.patch_len() * out_c;
+        let w: Vec<f32> = (0..n).map(|_| rng.next_normal() * 0.05).collect();
+        let b: Vec<f32> = (0..out_c).map(|_| rng.next_normal() * 0.01).collect();
+        layers.push(CompiledLayer::conv_from_mask(
+            &w,
+            b,
+            true,
+            &Mask::dense(geom.patch_len(), out_c),
+            geom,
+            n_shards,
+        ));
+        if pool_after {
+            layers.push(CompiledLayer::maxpool(PoolGeom::pool2(hw, hw, out_c)));
+            hw /= 2;
+        }
+        in_c = out_c;
+    }
+    let flat = hw * hw * in_c;
+    let fc_dims = [flat, fc_width, fc_width, classes];
+    for i in 0..3 {
+        let (rows, cols) = (fc_dims[i], fc_dims[i + 1]);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.next_normal() * 0.05).collect();
+        let b: Vec<f32> = (0..cols).map(|_| rng.next_normal() * 0.01).collect();
+        let cfg = PrsMaskConfig::auto(rows, cols, 101 + i as u32, 131 + i as u32);
+        layers.push(CompiledLayer::compile_prs(
+            &w, b, i != 2, rows, cols, sparsity, cfg, n_shards, lanes,
+        ));
+    }
+    CompiledModel::new(layers)
+}
+
 /// Split `cols` into at most `n_shards` near-equal contiguous ranges.
 pub fn shard_ranges(cols: usize, n_shards: usize) -> Vec<(usize, usize)> {
     let n = n_shards.max(1).min(cols.max(1));
@@ -323,7 +544,8 @@ pub fn shard_ranges(cols: usize, n_shards: usize) -> Vec<(usize, usize)> {
     out
 }
 
-/// A whole compiled model: FC layers with matching inner dimensions.
+/// A whole compiled model: a chain of FC / conv / max-pool layers whose
+/// per-example activation lengths match end to end.
 #[derive(Debug, Clone)]
 pub struct CompiledModel {
     pub layers: Vec<CompiledLayer>,
@@ -334,22 +556,24 @@ impl CompiledModel {
         assert!(!layers.is_empty(), "model needs at least one layer");
         for pair in layers.windows(2) {
             assert_eq!(
-                pair[0].cols, pair[1].rows,
+                pair[0].out_len(),
+                pair[1].in_len(),
                 "layer dims do not chain: {} -> {}",
-                pair[0].cols, pair[1].rows
+                pair[0].out_len(),
+                pair[1].in_len()
             );
         }
         CompiledModel { layers }
     }
 
-    /// Input feature count.
+    /// Input elements per example.
     pub fn in_dim(&self) -> usize {
-        self.layers[0].rows
+        self.layers[0].in_len()
     }
 
-    /// Output (logit) count.
+    /// Output (logit) count per example.
     pub fn out_dim(&self) -> usize {
-        self.layers.last().unwrap().cols
+        self.layers.last().unwrap().out_len()
     }
 
     /// Total kept weights.
@@ -357,30 +581,52 @@ impl CompiledModel {
         self.layers.iter().map(CompiledLayer::nnz).sum()
     }
 
-    /// Every layer converted to one value-plane tier (see
-    /// [`CompiledLayer::to_precision`]).
+    /// Layer census by [`LayerShape`].
+    pub fn layer_kind_counts(&self) -> LayerKindCounts {
+        let mut counts = LayerKindCounts::default();
+        for l in &self.layers {
+            match l.shape {
+                LayerShape::Fc => counts.fc += 1,
+                LayerShape::Conv(_) => counts.conv += 1,
+                LayerShape::MaxPool(_) => counts.pool += 1,
+            }
+        }
+        counts
+    }
+
+    /// Every weighted layer converted to one value-plane tier (see
+    /// [`CompiledLayer::to_precision`]; pool layers have no values and
+    /// pass through).
     pub fn to_precision(&self, precision: Precision) -> CompiledModel {
         CompiledModel {
             layers: self.layers.iter().map(|l| l.to_precision(precision)).collect(),
         }
     }
 
-    /// The tier shared by every layer, or `None` for a mixed-tier model
+    /// The tier shared by every *weighted* layer (weightless pools carry
+    /// no value plane and are skipped), or `None` for a mixed-tier model
     /// (layers may legitimately differ — e.g. a quantized trunk with an
     /// f32 output layer).
     pub fn uniform_precision(&self) -> Option<Precision> {
-        let p = self.layers[0].precision;
-        self.layers.iter().all(|l| l.precision == p).then_some(p)
+        let mut weighted = self.layers.iter().filter(|l| l.has_weights());
+        let p = weighted.next().map_or(Precision::F32, |l| l.precision);
+        weighted.all(|l| l.precision == p).then_some(p)
     }
 
-    /// One line per layer: dims, nnz, and how the keep-set is derived
-    /// (for PRS layers the printed seeds/widths are the server's entire
-    /// index state).
+    /// One line per layer: shape, dims, nnz, and how the keep-set is
+    /// derived (for PRS layers the printed seeds/widths are the server's
+    /// entire index state).
     pub fn describe(&self) -> String {
         self.layers
             .iter()
             .enumerate()
             .map(|(i, l)| {
+                if let LayerShape::MaxPool(g) = l.shape {
+                    return format!(
+                        "layer {i}: maxpool {}x{} /{} over {}x{}x{}",
+                        g.kernel, g.kernel, g.stride, g.in_h, g.in_w, g.channels
+                    );
+                }
                 let src = match l.kind {
                     MaskKind::Prs { cfg, sparsity } => format!(
                         "PRS seeds ({:#x}@{}b, {:#x}@{}b) @ {:.0}% sparsity",
@@ -392,8 +638,21 @@ impl CompiledModel {
                     ),
                     MaskKind::Explicit => "explicit mask".to_string(),
                 };
+                let shape = match l.shape {
+                    LayerShape::Conv(g) => format!(
+                        "conv {k}x{k}s{s}p{p} {ih}x{iw}x{ic}->{oc} as ",
+                        k = g.kernel,
+                        s = g.stride,
+                        p = g.pad,
+                        ih = g.in_h,
+                        iw = g.in_w,
+                        ic = g.in_c,
+                        oc = g.out_c
+                    ),
+                    _ => String::new(),
+                };
                 format!(
-                    "layer {i}: {}x{} nnz {} ({} shards, {} values) <- {src}",
+                    "layer {i}: {shape}{}x{} nnz {} ({} shards, {} values) <- {src}",
                     l.rows,
                     l.cols,
                     l.nnz(),
@@ -539,5 +798,79 @@ mod tests {
             CompiledLayer::from_mask(&w, Vec::new(), true, &Mask::dense(3, 4), 1),
             CompiledLayer::from_mask(&w, Vec::new(), true, &Mask::dense(6, 2), 1),
         ]);
+    }
+
+    #[test]
+    fn synthetic_vgg16_topology() {
+        // Scaled instance, same 13-conv + 4-pool + 3-FC topology as the
+        // paper-size model.
+        let m = synthetic_vgg16_scaled(16, 16, 0.9, 2, 1);
+        let counts = m.layer_kind_counts();
+        assert_eq!((counts.conv, counts.pool, counts.fc), (13, 4, 3));
+        assert_eq!(m.layers.len(), 20);
+        assert_eq!(m.in_dim(), 16 * 16 * 3);
+        assert_eq!(m.out_dim(), 62); // 1000 / 16
+        // Convs are dense + ReLU'd; the classifier head is PRS-pruned
+        // with no ReLU on the logits.
+        for l in &m.layers {
+            match l.shape {
+                LayerShape::Conv(g) => {
+                    assert_eq!(l.nnz(), g.patch_len() * g.out_c, "convs are dense");
+                    assert!(l.relu);
+                    assert_eq!(l.kind, MaskKind::Explicit);
+                }
+                LayerShape::MaxPool(g) => {
+                    assert_eq!((g.kernel, g.stride), (2, 2));
+                    assert!(!l.has_weights());
+                }
+                LayerShape::Fc => {
+                    assert!(matches!(l.kind, MaskKind::Prs { .. }));
+                    assert!((l.sparsity() - 0.9).abs() < 1e-3);
+                }
+            }
+        }
+        assert!(!m.layers.last().unwrap().relu);
+        let d = m.describe();
+        assert!(d.contains("conv 3x3s1p1"), "{d}");
+        assert!(d.contains("maxpool 2x2 /2"), "{d}");
+        assert!(d.contains("PRS seeds"), "{d}");
+    }
+
+    #[test]
+    fn paper_size_vgg16_flattens_to_8192() {
+        // Geometry only — no compile: replay the plan at full size.
+        let (mut hw, mut in_c) = (64usize, 3usize);
+        for (width, pool) in VGG16_CONV_PLAN {
+            let g = ConvGeom::same3x3(hw, hw, in_c, width);
+            assert_eq!((g.out_h(), g.out_w()), (hw, hw));
+            if pool {
+                hw /= 2;
+            }
+            in_c = width;
+        }
+        assert_eq!(hw * hw * in_c, 8192, "paper §3.1.4: 4x4x512 flatten");
+    }
+
+    #[test]
+    fn pool_layers_do_not_break_uniform_precision() {
+        let m = synthetic_vgg16_scaled(16, 16, 0.9, 2, 1);
+        assert_eq!(m.uniform_precision(), Some(Precision::F32));
+        let q = m.to_precision(Precision::I8);
+        assert_eq!(q.uniform_precision(), Some(Precision::I8));
+        assert_eq!(q.nnz(), m.nnz());
+        for (a, b) in q.layers.iter().zip(&m.layers) {
+            assert_eq!(a.shape, b.shape, "shape survives precision conversion");
+            if !a.has_weights() {
+                assert_eq!(a.precision, Precision::F32, "pools carry no value plane");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "valid conv geometry")]
+    fn invalid_conv_geometry_panics_at_compile() {
+        let g = ConvGeom { in_h: 4, in_w: 4, in_c: 1, out_c: 2, kernel: 3, stride: 0, pad: 1 };
+        let w = vec![0.0f32; 9 * 2];
+        CompiledLayer::conv_from_mask(&w, Vec::new(), true, &Mask::dense(9, 2), g, 1);
     }
 }

@@ -31,6 +31,15 @@
 //! blocked kernel speedup across batch sizes and thread counts in
 //! `BENCH_kernel.json`.
 //!
+//! Layers carry a **shape** ([`LayerShape`]): FC GEMM, NHWC convolution,
+//! or weightless max-pool.  Conv layers are lowered via im2col
+//! (`sparse::im2col`) into the *same* 8-lane panels — one virtual batch
+//! row per output pixel — so they execute the identical shard fan-out,
+//! both kernels, and both precision tiers with zero new kernel code;
+//! [`synthetic_vgg16`] is the paper's flagship workload (13 dense 3×3
+//! convs + 4 max-pools + the PRS-pruned 8192-2048-2048-1000 classifier)
+//! built on exactly that path.
+//!
 //! Layers carry a **precision tier**
 //! ([`Precision`](crate::sparse::Precision)): compilation produces f32
 //! value planes, and [`CompiledLayer::to_precision`] /
@@ -59,7 +68,8 @@ pub mod session;
 pub use batcher::{Batcher, MicroBatch, Request, ServeStats};
 pub use compiled::{
     parallel_keep_sequence, shard_ranges, synthetic_lenet300, synthetic_lenet300_seeded,
-    CompiledLayer, CompiledModel, MaskKind,
+    synthetic_vgg16, synthetic_vgg16_scaled, CompiledLayer, CompiledModel, LayerKindCounts,
+    LayerShape, MaskKind, VGG16_CONV_PLAN,
 };
 pub use pool::WorkerPool;
 pub use session::{argmax_total, InferenceSession};

@@ -1,8 +1,13 @@
 //! Batched inference over a compiled model and a worker pool.
 //!
-//! Each layer step transposes the incoming activations once into
+//! Each FC layer step transposes the incoming activations once into
 //! batch-major panels ([`transpose_panels`], 8 batch lanes per panel) and
-//! fans the layer's column shards out as **scoped** pool tasks: workers
+//! fans the layer's column shards out as **scoped** pool tasks; a conv
+//! layer ([`LayerShape::Conv`]) gathers im2col patches into the *same*
+//! panel layout ([`im2col_panels`]) with one virtual batch row per output
+//! pixel, so both shapes execute the identical shard fan-out below — and
+//! a weightless [`LayerShape::MaxPool`] runs a channel-wise window max
+//! inline.  Workers
 //! run the register-blocked
 //! [`PackedColumns::gemm_panel_into`](crate::sparse::PackedColumns::gemm_panel_into)
 //! kernel and
@@ -38,8 +43,9 @@
 
 use std::sync::{Arc, Mutex};
 
-use super::compiled::{CompiledLayer, CompiledModel};
+use super::compiled::{CompiledLayer, CompiledModel, LayerShape};
 use super::pool::WorkerPool;
+use crate::sparse::im2col::{im2col_panels, maxpool_into};
 use crate::sparse::packed::{transpose_panels, BATCH_LANES};
 
 /// Reusable per-call scratch: the transposed activation panels and the
@@ -144,16 +150,34 @@ impl InferenceSession {
             // Invariant: layer li's input lives in `a` (layer 0 borrows
             // the caller's slice instead — never copied).
             let src: &[f32] = if li == 0 { x } else { &a };
-            transpose_panels(src, batch, layer.rows, &mut panels);
-            // Resize without zero-filling retained capacity: the shard
-            // fan-out overwrites every element (shards jointly cover
-            // [0, cols) and every real batch row is written).
-            if li + 1 == n_layers {
-                out.resize(batch * layer.cols, 0.0);
-                self.run_layer(layer, &panels, batch, out);
-            } else {
-                b.resize(batch * layer.cols, 0.0);
-                self.run_layer(layer, &panels, batch, &mut b);
+            // Resize without zero-filling retained capacity: every
+            // element of the output is overwritten (the shard fan-out
+            // jointly covers [0, cols) and writes every real batch row;
+            // maxpool writes every output pixel).
+            let dst: &mut Vec<f32> = if li + 1 == n_layers { &mut *out } else { &mut b };
+            match &layer.shape {
+                LayerShape::Fc => {
+                    transpose_panels(src, batch, layer.rows, &mut panels);
+                    dst.resize(batch * layer.cols, 0.0);
+                    self.run_layer(layer, &panels, batch, dst);
+                }
+                LayerShape::Conv(g) => {
+                    // im2col: each output pixel is a virtual batch row of
+                    // the same panel GEMM; the kernel writes the NHWC
+                    // [batch·oh·ow, out_c] conv output directly.
+                    let vrows = batch * g.out_h() * g.out_w();
+                    im2col_panels(src, batch, g, &mut panels);
+                    dst.resize(vrows * layer.cols, 0.0);
+                    self.run_layer(layer, &panels, vrows, dst);
+                }
+                LayerShape::MaxPool(g) => {
+                    // Weightless and memory-bound: runs inline on the
+                    // caller thread, no panels, no shard fan-out.
+                    dst.resize(batch * g.out_len(), 0.0);
+                    maxpool_into(src, batch, g, dst);
+                }
+            }
+            if li + 1 != n_layers {
                 std::mem::swap(&mut a, &mut b);
             }
         }
@@ -163,8 +187,11 @@ impl InferenceSession {
         self.arenas.lock().unwrap().push(arena);
     }
 
-    /// One layer: every shard × every panel of the blocked kernel,
-    /// writing directly into the `[batch, cols]` output.
+    /// One weighted layer: every shard × every panel of the blocked
+    /// kernel, writing directly into the `[batch, cols]` output.  For a
+    /// conv layer `batch` is the virtual row count (`batch · oh · ow`,
+    /// one row per output pixel) and the panels come from
+    /// [`im2col_panels`] — the kernel cannot tell the difference.
     fn run_layer(&self, layer: &CompiledLayer, panels: &[f32], batch: usize, out: &mut [f32]) {
         debug_assert_eq!(out.len(), batch * layer.cols);
         let slab = layer.rows * BATCH_LANES;
@@ -374,6 +401,98 @@ mod tests {
         mixed.layers[1] = mixed.layers[1].to_precision(Precision::I8);
         let m = InferenceSession::new(mixed, 2).infer_batch(&x, batch);
         assert_eq!(m.len(), batch * 4);
+    }
+
+    /// Tiny conv model: 3x3 SAME conv (dense) -> 2x2 pool -> PRS conv ->
+    /// PRS FC head.  Exercises every LayerShape in one chain.
+    fn toy_conv_model(shards: usize) -> CompiledModel {
+        use crate::mask::Mask;
+        use crate::sparse::{ConvGeom, PoolGeom};
+        let mut rng = Pcg32::new(31);
+        let g1 = ConvGeom::same3x3(6, 6, 2, 3);
+        let w1: Vec<f32> = (0..g1.patch_len() * 3).map(|_| rng.next_normal() * 0.2).collect();
+        let b1: Vec<f32> = (0..3).map(|_| rng.next_normal() * 0.1).collect();
+        let pool = PoolGeom::pool2(6, 6, 3);
+        let g2 = ConvGeom { in_h: 3, in_w: 3, in_c: 3, out_c: 4, kernel: 2, stride: 1, pad: 0 };
+        let w2: Vec<f32> = (0..g2.patch_len() * 4).map(|_| rng.next_normal() * 0.2).collect();
+        let cfg2 = PrsMaskConfig::auto(g2.patch_len(), 4, 5, 9);
+        let flat = g2.out_len(); // 2*2*4 = 16
+        let w3: Vec<f32> = (0..flat * 5).map(|_| rng.next_normal() * 0.2).collect();
+        let b3: Vec<f32> = (0..5).map(|_| rng.next_normal() * 0.1).collect();
+        let cfg3 = PrsMaskConfig::auto(flat, 5, 7, 11);
+        CompiledModel::new(vec![
+            crate::serve::CompiledLayer::conv_from_mask(
+                &w1,
+                b1,
+                true,
+                &Mask::dense(g1.patch_len(), 3),
+                g1,
+                shards,
+            ),
+            crate::serve::CompiledLayer::maxpool(pool),
+            crate::serve::CompiledLayer::compile_conv_prs(
+                &w2,
+                Vec::new(),
+                true,
+                g2,
+                0.5,
+                cfg2,
+                shards,
+                1,
+            ),
+            crate::serve::CompiledLayer::compile_prs(&w3, b3, false, flat, 5, 0.5, cfg3, shards, 1),
+        ])
+    }
+
+    #[test]
+    fn conv_model_pooled_equals_inline_bitwise_both_tiers() {
+        use crate::sparse::Precision;
+        let mut rng = Pcg32::new(41);
+        let model = toy_conv_model(3);
+        assert_eq!(model.in_dim(), 6 * 6 * 2);
+        assert_eq!(model.out_dim(), 5);
+        for tier in [Precision::F32, Precision::I8] {
+            let m = model.to_precision(tier);
+            let inline = InferenceSession::new(m.clone(), 1);
+            let pooled = InferenceSession::new(m, 4);
+            for batch in [1usize, 3, 9] {
+                let x: Vec<f32> =
+                    (0..batch * inline.model().in_dim()).map(|_| rng.next_normal()).collect();
+                let a = inline.infer_batch(&x, batch);
+                let b = pooled.infer_batch(&x, batch);
+                assert_eq!(a.len(), batch * 5);
+                for (i, (&u, &v)) in a.iter().zip(&b).enumerate() {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{tier} batch {batch} logit {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_model_batched_rows_equal_single_requests() {
+        let mut rng = Pcg32::new(43);
+        let session = InferenceSession::new(toy_conv_model(2), 3);
+        let batch = 5;
+        let d = session.model().in_dim();
+        let x: Vec<f32> = (0..batch * d).map(|_| rng.next_normal()).collect();
+        let all = session.infer_batch(&x, batch);
+        for b in 0..batch {
+            let one = session.infer_one(&x[b * d..(b + 1) * d]);
+            assert_eq!(&all[b * 5..(b + 1) * 5], &one[..], "row {b}");
+        }
+    }
+
+    #[test]
+    fn conv_shard_count_does_not_change_bits() {
+        let mut rng = Pcg32::new(47);
+        let batch = 2;
+        let d = 6 * 6 * 2;
+        let x: Vec<f32> = (0..batch * d).map(|_| rng.next_normal()).collect();
+        let one = InferenceSession::new(toy_conv_model(1), 2).infer_batch(&x, batch);
+        let many = InferenceSession::new(toy_conv_model(5), 2).infer_batch(&x, batch);
+        for (&u, &v) in one.iter().zip(&many) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
     }
 
     #[test]

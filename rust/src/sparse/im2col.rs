@@ -1,0 +1,487 @@
+//! im2col lowering: convolution as the packed-column GEMM the serving
+//! engine already executes.
+//!
+//! A conv layer's kept weights live in a rows×cols matrix with
+//! `rows = kernel² · in_c` (one row per patch position, HWIO order:
+//! `r = (ky·kernel + kx)·in_c + ic`) and `cols = out_c`.  Every output
+//! pixel of every example is one *virtual batch row*: gathering its
+//! receptive field into a `rows`-long patch turns the convolution into
+//! exactly the batched masked GEMM of `sparse::packed` — both kernels
+//! (`gemm_into` scalar, `gemm_panel_into` blocked), both value planes
+//! (f32 / i8), and all their determinism guarantees are inherited with
+//! zero new kernel code.
+//!
+//! [`im2col_panels`] gathers patches straight into the 8-lane batch-major
+//! panel layout of [`transpose_panels`](super::packed::transpose_panels)
+//! — lane `l` of panel `p` is virtual row `p·8 + l`, a row-major
+//! `[rows, 8]` slab — so the serving engine feeds conv layers to
+//! `gemm_panel_into` exactly as it feeds FC layers, writing the NHWC
+//! `[batch·out_h·out_w, out_c]` output directly.  Out-of-bounds taps
+//! (zero padding) and tail lanes are written as 0.0.
+//!
+//! Because a conv output pixel's accumulator consumes its column's kept
+//! entries in stored order regardless of which panel/lane the pixel lands
+//! in, conv results are **bitwise independent** of batch composition,
+//! shard count, and worker count — the same contract as FC, pinned by
+//! `rust/tests/prop_invariants.rs`.
+//!
+//! [`maxpool_into`] is the one op that is not a GEMM: channel-wise window
+//! max in fixed (ky, kx) scan order, VALID boundary handling (windows
+//! never cross the edge) — mirroring `maxpool2` in
+//! `python/compile/model.py`.
+
+/// Geometry of one 2-D convolution, NHWC activations, HWIO weights,
+/// symmetric zero padding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub out_c: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvGeom {
+    /// 3×3 stride-1 SAME conv (pad 1) — the VGG block shape.
+    pub fn same3x3(in_h: usize, in_w: usize, in_c: usize, out_c: usize) -> ConvGeom {
+        ConvGeom { in_h, in_w, in_c, out_c, kernel: 3, stride: 1, pad: 1 }
+    }
+
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.kernel) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.kernel) / self.stride + 1
+    }
+
+    /// Activation elements per example entering this layer.
+    pub fn in_len(&self) -> usize {
+        self.in_h * self.in_w * self.in_c
+    }
+
+    /// Activation elements per example leaving this layer (NHWC).
+    pub fn out_len(&self) -> usize {
+        self.out_h() * self.out_w() * self.out_c
+    }
+
+    /// Rows of the lowered weight matrix: one per (ky, kx, ic) tap.
+    pub fn patch_len(&self) -> usize {
+        self.kernel * self.kernel * self.in_c
+    }
+
+    /// Structural validity: every dimension positive, the kernel fits the
+    /// padded input, and padding never exceeds the kernel (a pad ≥ kernel
+    /// would leave entire kernel taps permanently in the padding — always
+    /// a config bug).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.in_h == 0 || self.in_w == 0 || self.in_c == 0 || self.out_c == 0 {
+            return Err(format!(
+                "conv dims {}x{}x{} -> {} must all be positive",
+                self.in_h, self.in_w, self.in_c, self.out_c
+            ));
+        }
+        if self.kernel == 0 || self.stride == 0 {
+            return Err(format!(
+                "conv kernel {} / stride {} must be positive",
+                self.kernel, self.stride
+            ));
+        }
+        if self.pad >= self.kernel {
+            return Err(format!("conv pad {} must be < kernel {}", self.pad, self.kernel));
+        }
+        if self.in_h + 2 * self.pad < self.kernel || self.in_w + 2 * self.pad < self.kernel {
+            return Err(format!(
+                "conv kernel {} does not fit {}x{} input with pad {}",
+                self.kernel, self.in_h, self.in_w, self.pad
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Geometry of one 2-D max-pool, NHWC, VALID boundary (windows never
+/// cross the input edge).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolGeom {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub channels: usize,
+    pub kernel: usize,
+    pub stride: usize,
+}
+
+impl PoolGeom {
+    /// The VGG block pool: 2×2, stride 2.
+    pub fn pool2(in_h: usize, in_w: usize, channels: usize) -> PoolGeom {
+        PoolGeom { in_h, in_w, channels, kernel: 2, stride: 2 }
+    }
+
+    pub fn out_h(&self) -> usize {
+        (self.in_h - self.kernel) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w - self.kernel) / self.stride + 1
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.in_h * self.in_w * self.channels
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.out_h() * self.out_w() * self.channels
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.in_h == 0 || self.in_w == 0 || self.channels == 0 {
+            return Err(format!(
+                "pool dims {}x{}x{} must all be positive",
+                self.in_h, self.in_w, self.channels
+            ));
+        }
+        if self.kernel == 0 || self.stride == 0 {
+            return Err(format!(
+                "pool kernel {} / stride {} must be positive",
+                self.kernel, self.stride
+            ));
+        }
+        if self.kernel > self.in_h || self.kernel > self.in_w {
+            return Err(format!(
+                "pool kernel {} exceeds {}x{} input",
+                self.kernel, self.in_h, self.in_w
+            ));
+        }
+        Ok(())
+    }
+}
+
+use super::packed::BATCH_LANES;
+
+/// Gather conv patches directly into 8-lane batch-major panels.
+///
+/// `x` is NHWC row-major `[batch, in_h, in_w, in_c]`; lane `l` of panel
+/// `p` holds virtual row `p·8 + l` — output pixel
+/// `(b, oy, ox) = divmod(vrow, out_h·out_w)` — as a `[patch_len]` column
+/// of the row-major `[patch_len, 8]` slab.  `panels` is cleared and
+/// resized to `ceil(vrows/8) · patch_len · 8`; zero-padding taps and tail
+/// lanes past `vrows` are written 0.0, so no stale value can leak into a
+/// SIMD lane.  Feeding these panels to
+/// [`gemm_panel_into`](super::PackedColumns::gemm_panel_into) with
+/// `out_stride = out_c` produces the NHWC conv output in place.
+pub fn im2col_panels(x: &[f32], batch: usize, g: &ConvGeom, panels: &mut Vec<f32>) {
+    assert_eq!(x.len(), batch * g.in_len());
+    let (oh, ow, k, s) = (g.out_h(), g.out_w(), g.kernel, g.stride);
+    let vrows = batch * oh * ow;
+    let patch = g.patch_len();
+    let n_panels = (vrows + BATCH_LANES - 1) / BATCH_LANES;
+    // resize (not a full zero-fill): every slab element is overwritten
+    // below — real tap, padding zero, or tail-lane zero.
+    panels.resize(n_panels * patch * BATCH_LANES, 0.0);
+    for p in 0..n_panels {
+        let slab = &mut panels[p * patch * BATCH_LANES..(p + 1) * patch * BATCH_LANES];
+        for l in 0..BATCH_LANES {
+            let vrow = p * BATCH_LANES + l;
+            if vrow >= vrows {
+                for r in 0..patch {
+                    slab[r * BATCH_LANES + l] = 0.0;
+                }
+                continue;
+            }
+            let b = vrow / (oh * ow);
+            let oy = (vrow / ow) % oh;
+            let ox = vrow % ow;
+            for ky in 0..k {
+                let y = (oy * s + ky).wrapping_sub(g.pad);
+                for kx in 0..k {
+                    let xq = (ox * s + kx).wrapping_sub(g.pad);
+                    let base = (ky * k + kx) * g.in_c;
+                    if y < g.in_h && xq < g.in_w {
+                        let src = &x[((b * g.in_h + y) * g.in_w + xq) * g.in_c..][..g.in_c];
+                        for (ic, &v) in src.iter().enumerate() {
+                            slab[(base + ic) * BATCH_LANES + l] = v;
+                        }
+                    } else {
+                        for ic in 0..g.in_c {
+                            slab[(base + ic) * BATCH_LANES + l] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Materialize the im2col matrix row-major: `[batch·out_h·out_w,
+/// patch_len]`, one virtual row per output pixel — the scalar-reference
+/// lowering (feed it to [`gemm_into`](super::PackedColumns::gemm_into)
+/// with `batch = vrows`).  Bit-identical patch values to
+/// [`im2col_panels`]; only the memory layout differs.
+pub fn im2col_into(x: &[f32], batch: usize, g: &ConvGeom, cols: &mut Vec<f32>) {
+    assert_eq!(x.len(), batch * g.in_len());
+    let (oh, ow, k, s) = (g.out_h(), g.out_w(), g.kernel, g.stride);
+    let vrows = batch * oh * ow;
+    let patch = g.patch_len();
+    cols.clear();
+    cols.resize(vrows * patch, 0.0);
+    for vrow in 0..vrows {
+        let b = vrow / (oh * ow);
+        let oy = (vrow / ow) % oh;
+        let ox = vrow % ow;
+        let dst = &mut cols[vrow * patch..(vrow + 1) * patch];
+        for ky in 0..k {
+            let y = (oy * s + ky).wrapping_sub(g.pad);
+            for kx in 0..k {
+                let xq = (ox * s + kx).wrapping_sub(g.pad);
+                let base = (ky * k + kx) * g.in_c;
+                if y < g.in_h && xq < g.in_w {
+                    let src = &x[((b * g.in_h + y) * g.in_w + xq) * g.in_c..][..g.in_c];
+                    dst[base..base + g.in_c].copy_from_slice(src);
+                }
+                // else: stays 0.0 (zero padding)
+            }
+        }
+    }
+}
+
+/// Scatter-add an im2col matrix back onto the input grid (the transpose
+/// of [`im2col_into`]): every patch entry is added to the input pixel it
+/// was gathered from; padding taps fall outside and are dropped.
+///
+/// `col2im(im2col(x)) = x ⊙ coverage`, where `coverage[p]` counts the
+/// patches touching pixel `p` — an exact identity for non-overlapping
+/// full tilings (`stride == kernel`, `pad == 0`), the property
+/// `rust/tests/prop_invariants.rs` pins.
+pub fn col2im_into(cols: &[f32], batch: usize, g: &ConvGeom, x: &mut Vec<f32>) {
+    let (oh, ow, k, s) = (g.out_h(), g.out_w(), g.kernel, g.stride);
+    let vrows = batch * oh * ow;
+    let patch = g.patch_len();
+    assert_eq!(cols.len(), vrows * patch);
+    x.clear();
+    x.resize(batch * g.in_len(), 0.0);
+    for vrow in 0..vrows {
+        let b = vrow / (oh * ow);
+        let oy = (vrow / ow) % oh;
+        let ox = vrow % ow;
+        let src = &cols[vrow * patch..(vrow + 1) * patch];
+        for ky in 0..k {
+            let y = (oy * s + ky).wrapping_sub(g.pad);
+            for kx in 0..k {
+                let xq = (ox * s + kx).wrapping_sub(g.pad);
+                if y < g.in_h && xq < g.in_w {
+                    let base = (ky * k + kx) * g.in_c;
+                    let dst = &mut x[((b * g.in_h + y) * g.in_w + xq) * g.in_c..][..g.in_c];
+                    for (ic, d) in dst.iter_mut().enumerate() {
+                        *d += src[base + ic];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Channel-wise max pooling, NHWC in → NHWC out, VALID boundary.
+///
+/// `out` must be `batch · out_len` long and is fully overwritten.  Each
+/// output value folds its window in fixed (ky, kx) scan order starting
+/// from the window's first element, so results are deterministic for any
+/// batch composition (and NaN inputs degrade deterministically —
+/// `f32::max` drops NaN in favour of the other operand).
+pub fn maxpool_into(x: &[f32], batch: usize, g: &PoolGeom, out: &mut [f32]) {
+    assert_eq!(x.len(), batch * g.in_len());
+    let (oh, ow, ch, k, s) = (g.out_h(), g.out_w(), g.channels, g.kernel, g.stride);
+    assert_eq!(out.len(), batch * oh * ow * ch);
+    for b in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = &mut out[((b * oh + oy) * ow + ox) * ch..][..ch];
+                for (c, d) in dst.iter_mut().enumerate() {
+                    let mut m = f32::NEG_INFINITY;
+                    for ky in 0..k {
+                        let row = &x[((b * g.in_h + oy * s + ky) * g.in_w + ox * s) * ch..];
+                        for kx in 0..k {
+                            m = m.max(row[kx * ch + c]);
+                        }
+                    }
+                    *d = m;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg32;
+
+    fn values(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        (0..n).map(|_| rng.next_normal()).collect()
+    }
+
+    #[test]
+    fn geometry_formulas() {
+        let g = ConvGeom::same3x3(64, 64, 3, 64);
+        assert_eq!((g.out_h(), g.out_w()), (64, 64), "SAME 3x3 preserves dims");
+        assert_eq!(g.patch_len(), 27);
+        assert_eq!(g.out_len(), 64 * 64 * 64);
+        assert!(g.validate().is_ok());
+        let p = PoolGeom::pool2(64, 64, 64);
+        assert_eq!((p.out_h(), p.out_w()), (32, 32));
+        assert!(p.validate().is_ok());
+        // VALID conv, stride 2.
+        let g = ConvGeom { in_h: 7, in_w: 9, in_c: 2, out_c: 4, kernel: 3, stride: 2, pad: 0 };
+        assert_eq!((g.out_h(), g.out_w()), (3, 4));
+        // Odd input under a 2x2 pool: trailing row/col dropped (VALID).
+        let p = PoolGeom::pool2(5, 5, 1);
+        assert_eq!((p.out_h(), p.out_w()), (2, 2));
+    }
+
+    #[test]
+    fn invalid_geometry_rejected() {
+        let good = ConvGeom::same3x3(8, 8, 2, 4);
+        assert!(good.validate().is_ok());
+        assert!(ConvGeom { kernel: 0, ..good }.validate().is_err());
+        assert!(ConvGeom { stride: 0, ..good }.validate().is_err());
+        assert!(ConvGeom { pad: 3, ..good }.validate().is_err(), "pad >= kernel");
+        assert!(ConvGeom { in_c: 0, ..good }.validate().is_err());
+        assert!(
+            ConvGeom { in_h: 1, in_w: 1, kernel: 5, pad: 1, ..good }.validate().is_err(),
+            "kernel larger than padded input"
+        );
+        let pool = PoolGeom::pool2(8, 8, 2);
+        assert!(pool.validate().is_ok());
+        assert!(PoolGeom { kernel: 0, ..pool }.validate().is_err());
+        assert!(PoolGeom { stride: 0, ..pool }.validate().is_err());
+        assert!(PoolGeom { kernel: 9, ..pool }.validate().is_err());
+    }
+
+    #[test]
+    fn panels_match_row_major_gather_bitwise() {
+        for (g, batch) in [
+            (ConvGeom::same3x3(5, 6, 3, 4), 3usize),
+            (ConvGeom { in_h: 6, in_w: 6, in_c: 2, out_c: 3, kernel: 2, stride: 2, pad: 0 }, 5),
+            (ConvGeom { in_h: 7, in_w: 5, in_c: 1, out_c: 2, kernel: 3, stride: 2, pad: 1 }, 2),
+        ] {
+            let x = values(batch * g.in_len(), 7);
+            let mut rows = Vec::new();
+            im2col_into(&x, batch, &g, &mut rows);
+            let mut panels = Vec::new();
+            im2col_panels(&x, batch, &g, &mut panels);
+            let vrows = batch * g.out_h() * g.out_w();
+            let patch = g.patch_len();
+            let n_panels = (vrows + BATCH_LANES - 1) / BATCH_LANES;
+            assert_eq!(panels.len(), n_panels * patch * BATCH_LANES);
+            for vrow in 0..vrows {
+                let (p, l) = (vrow / BATCH_LANES, vrow % BATCH_LANES);
+                for r in 0..patch {
+                    assert_eq!(
+                        panels[(p * patch + r) * BATCH_LANES + l].to_bits(),
+                        rows[vrow * patch + r].to_bits(),
+                        "vrow {vrow} tap {r}"
+                    );
+                }
+            }
+            // Tail lanes are zero.
+            for vrow in vrows..n_panels * BATCH_LANES {
+                let (p, l) = (vrow / BATCH_LANES, vrow % BATCH_LANES);
+                for r in 0..patch {
+                    assert_eq!(panels[(p * patch + r) * BATCH_LANES + l], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panels_overwrite_stale_buffer() {
+        // A warm (dirty) buffer from a previous larger layer must not leak
+        // values into padding taps or tail lanes.
+        let g = ConvGeom::same3x3(4, 4, 1, 2);
+        let x = values(2 * g.in_len(), 9);
+        let mut dirty = vec![f32::NAN; 4096];
+        im2col_panels(&x, 2, &g, &mut dirty);
+        let mut fresh = Vec::new();
+        im2col_panels(&x, 2, &g, &mut fresh);
+        assert_eq!(dirty.len(), fresh.len());
+        for (a, b) in dirty.iter().zip(&fresh) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn col2im_identity_on_full_tilings_and_coverage_elsewhere() {
+        // Non-overlapping full tiling: exact identity.
+        let g = ConvGeom { in_h: 6, in_w: 4, in_c: 2, out_c: 1, kernel: 2, stride: 2, pad: 0 };
+        let x = values(3 * g.in_len(), 11);
+        let (mut cols, mut back) = (Vec::new(), Vec::new());
+        im2col_into(&x, 3, &g, &mut cols);
+        col2im_into(&cols, 3, &g, &mut back);
+        assert_eq!(back.len(), x.len());
+        for (i, (&a, &b)) in back.iter().zip(&x).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "pixel {i}");
+        }
+        // Overlapping windows: col2im(im2col(x)) = x * coverage, with the
+        // coverage counts read off col2im(im2col(ones)).
+        let g = ConvGeom::same3x3(5, 5, 2, 1);
+        let x = values(2 * g.in_len(), 12);
+        let ones = vec![1.0f32; 2 * g.in_len()];
+        let (mut cx, mut cover) = (Vec::new(), Vec::new());
+        im2col_into(&ones, 2, &g, &mut cx);
+        col2im_into(&cx, 2, &g, &mut cover);
+        im2col_into(&x, 2, &g, &mut cx);
+        let mut got = Vec::new();
+        col2im_into(&cx, 2, &g, &mut got);
+        for i in 0..x.len() {
+            let cnt = cover[i];
+            assert!((4.0..=9.0).contains(&cnt), "3x3 SAME coverage {cnt}");
+            assert!(
+                (got[i] - x[i] * cnt).abs() <= 1e-5 * (1.0 + x[i].abs() * cnt.abs()),
+                "pixel {i}: {} vs {} * {cnt}",
+                got[i],
+                x[i]
+            );
+        }
+    }
+
+    #[test]
+    fn maxpool_matches_naive_window_max() {
+        let g = PoolGeom::pool2(6, 6, 3);
+        let batch = 2;
+        let x = values(batch * g.in_len(), 13);
+        let mut out = vec![0.0f32; batch * g.out_len()];
+        maxpool_into(&x, batch, &g, &mut out);
+        for b in 0..batch {
+            for oy in 0..3 {
+                for ox in 0..3 {
+                    for c in 0..3 {
+                        let mut m = f32::NEG_INFINITY;
+                        for ky in 0..2 {
+                            for kx in 0..2 {
+                                m = m.max(
+                                    x[((b * 6 + oy * 2 + ky) * 6 + ox * 2 + kx) * 3 + c],
+                                );
+                            }
+                        }
+                        assert_eq!(out[((b * 3 + oy) * 3 + ox) * 3 + c].to_bits(), m.to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn maxpool_valid_drops_trailing_edge() {
+        // 5x5 input, 2x2/2 pool: row/col 4 never read.
+        let g = PoolGeom::pool2(5, 5, 1);
+        let mut x = vec![0.0f32; g.in_len()];
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = if i / 5 == 4 || i % 5 == 4 { 1e9 } else { -(i as f32) };
+        }
+        let mut out = vec![0.0f32; g.out_len()];
+        maxpool_into(&x, 1, &g, &mut out);
+        assert!(out.iter().all(|&v| v < 1e8), "edge values leaked: {out:?}");
+    }
+}

@@ -275,4 +275,34 @@ mod tests {
             .sum();
         assert_eq!(i8_bytes, by_hand);
     }
+
+    #[test]
+    fn vgg16_whole_network_values_cut_about_4x() {
+        // The conv-capable pin: with the 13 dense conv layers counted
+        // (im2col dims, sparsity 0), the WHOLE modified VGG-16 — not just
+        // the FC classifier — shows the ~4x i8 values cut.  Conv values
+        // dominate the artifact (14.7M dense weights vs 2.3M kept FC
+        // weights at 90% sparsity), which is exactly why the FC-only
+        // accounting undersold the serving footprint.
+        let net = crate::hw::layers::vgg16_modified();
+        let conv_f32 = net.conv_value_bytes(Precision::F32);
+        assert_eq!(conv_f32, 4 * 14_710_464, "13 dense 3x3 conv layers");
+        let conv_cols: u64 = net.conv_layers.iter().map(|d| d.out_c as u64).sum();
+        assert_eq!(conv_cols, 4224);
+        assert_eq!(
+            net.conv_value_bytes(Precision::I8),
+            14_710_464 + 4 * conv_cols,
+            "1 B/value + one scale per output channel"
+        );
+        let f32_bytes = net.value_bytes(0.9, Precision::F32);
+        let i8_bytes = net.value_bytes(0.9, Precision::I8);
+        assert_eq!(f32_bytes, conv_f32 + net.fc_value_bytes(0.9, Precision::F32));
+        assert!(f32_bytes > 60_000_000, "whole-network values are ~68 MB: {f32_bytes}");
+        assert!(
+            conv_f32 > net.fc_value_bytes(0.9, Precision::F32),
+            "dense convs dominate the pruned FCs"
+        );
+        let ratio = f32_bytes as f64 / i8_bytes as f64;
+        assert!(ratio > 3.9 && ratio < 4.0, "whole-network values reduction {ratio}");
+    }
 }

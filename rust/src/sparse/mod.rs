@@ -2,15 +2,20 @@
 //! indices format (S/I/P vectors, α padding), the packed column-shard
 //! layout the serving engine executes — whose kept-value plane comes in
 //! [`Precision`] tiers (`f32`, or per-column-quantized `i8` + scales) —
-//! and the memory-footprint models for both methods (paper Figure 5),
+//! the [`im2col`] lowering that turns NHWC convolutions into that same
+//! packed GEMM (so conv layers inherit both kernels, both value planes,
+//! and the bitwise-determinism contract with zero new kernel code), and
+//! the memory-footprint models for both methods (paper Figure 5),
 //! including the quantized-values artifact accounting
 //! ([`memory::artifact_value_bytes`]).
 
 pub mod csc;
+pub mod im2col;
 pub mod memory;
 pub mod packed;
 
 pub use csc::{CscEntry, CscMatrix};
+pub use im2col::{col2im_into, im2col_into, im2col_panels, maxpool_into, ConvGeom, PoolGeom};
 pub use memory::{
     artifact_value_bytes, baseline_footprint, baseline_footprint_analytic, proposed_footprint,
     proposed_footprint_analytic, proposed_footprint_stream, proposed_footprint_tier,

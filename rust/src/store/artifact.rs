@@ -7,7 +7,12 @@
 //! disk — the index side of a PRS layer is [`PRS_EXTRA_BYTES`] regardless
 //! of size.  Explicit (magnitude/random) layers additionally store their
 //! positions column-major, CSC-style, since they have no seeds to
-//! regenerate from.  An i8-tier layer
+//! regenerate from — except *dense* layers (the paper's unpruned convs),
+//! which v3 stores as kind-3 records with implicit positions: zero index
+//! bytes from the other direction.  Conv layers carry a 15-byte geometry
+//! block ([`FLAG_CONV`]) and max-pool layers a geometry-only record, so a
+//! compiled VGG-16 (conv stack + PRS classifier) round-trips end to end.
+//! An i8-tier layer
 //! ([`Precision::I8`](crate::sparse::Precision)) stores its raw codes (1 B
 //! each, same order) plus the per-column f32 scale vector — the stored
 //! plane is the *exact* in-memory plane, so a quantized model round-trips
@@ -35,14 +40,17 @@ use std::path::Path;
 use crate::lfsr::polynomials::{period, primitive_taps, MAX_WIDTH, MIN_WIDTH};
 use crate::mask::prs::PrsMaskConfig;
 use crate::mask::prune_target;
-use crate::serve::{parallel_keep_sequence, shard_ranges, CompiledLayer, CompiledModel, MaskKind};
-use crate::sparse::{PackedColumns, Precision, ValuePlane};
+use crate::serve::{
+    parallel_keep_sequence, shard_ranges, CompiledLayer, CompiledModel, LayerShape, MaskKind,
+};
+use crate::sparse::{ConvGeom, PackedColumns, PoolGeom, Precision, ValuePlane};
 
 use super::format::{
-    explicit_record_bytes, explicit_record_bytes_i8, fnv1a64, hash_keep_sequence,
-    prs_record_bytes, prs_record_bytes_i8, ByteReader, ByteWriter, StoreError,
-    FILE_CHECKSUM_BYTES, FILE_HEADER_BYTES, FLAG_I8, FLAG_RELU, MAGIC, MAX_CELLS, MAX_DIM,
-    MAX_LAYERS, MIN_VERSION, PRS_EXTRA_BYTES, VERSION,
+    dense_record_bytes, dense_record_bytes_i8, explicit_record_bytes, explicit_record_bytes_i8,
+    fnv1a64, hash_keep_sequence, pool_record_bytes, prs_record_bytes, prs_record_bytes_i8,
+    ByteReader, ByteWriter, StoreError, CONV_GEOM_BYTES, FILE_CHECKSUM_BYTES, FILE_HEADER_BYTES,
+    FLAG_CONV, FLAG_I8, FLAG_RELU, MAGIC, MAX_CELLS, MAX_DIM, MAX_LAYERS, MIN_VERSION,
+    POOL_GEOM_BYTES, PRS_EXTRA_BYTES, VERSION,
 };
 
 /// How to reconstruct a model from an artifact.
@@ -85,9 +93,11 @@ pub struct ExportReport {
     /// Index storage of PRS layers: seeds + widths + polynomials + walk
     /// hash — O(1) per layer.
     pub seed_bytes: u64,
-    /// Index storage of explicit layers: O(nnz) positions (zero for an
-    /// all-PRS model).
+    /// Index storage of explicit *sparse* layers: O(nnz) positions (zero
+    /// for a model whose layers are all PRS, dense, or pool).
     pub explicit_index_bytes: u64,
+    /// Conv/pool geometry blocks — O(1) per conv or pool layer.
+    pub geom_bytes: u64,
     pub layers: u32,
 }
 
@@ -128,6 +138,7 @@ pub fn encode_with_report(
         scale_bytes: 0,
         seed_bytes: 0,
         explicit_index_bytes: 0,
+        geom_bytes: 0,
         layers: model.layers.len() as u32,
     };
     for (li, layer) in model.layers.iter().enumerate() {
@@ -166,6 +177,34 @@ impl Payload {
     }
 }
 
+/// A layer is *dense-ascending* when every column stores every row in
+/// ascending order — the layout `from_mask(Mask::dense)` produces and
+/// the implicit positions of a kind-3 record.  (A dense layer packed in
+/// some other order — e.g. a full-coverage PRS walk — must NOT be
+/// written as kind 3: its value order would be misread.)
+fn is_dense_ascending(layer: &CompiledLayer) -> bool {
+    if layer.nnz() != layer.rows * layer.cols {
+        return false;
+    }
+    layer.shards.iter().all(|shard| {
+        (0..shard.width()).all(|local| {
+            let range = shard.col_range(local);
+            range.len() == layer.rows
+                && shard.row_ids()[range].iter().enumerate().all(|(i, &r)| r as usize == i)
+        })
+    })
+}
+
+/// Write a conv geometry block ([`FLAG_CONV`]).
+fn write_conv_geom(w: &mut ByteWriter, g: &ConvGeom) {
+    w.put_u32(g.in_h as u32);
+    w.put_u32(g.in_w as u32);
+    w.put_u32(g.in_c as u32);
+    w.put_u8(g.kernel as u8);
+    w.put_u8(g.stride as u8);
+    w.put_u8(g.pad as u8);
+}
+
 fn write_layer(
     w: &mut ByteWriter,
     li: usize,
@@ -173,10 +212,47 @@ fn write_layer(
     lanes: usize,
     report: &mut ExportReport,
 ) -> Result<(), StoreError> {
+    let record_start = w.len() as u64;
+    // Weightless max-pool: geometry-only record, no flags/bias/values.
+    if let LayerShape::MaxPool(g) = layer.shape {
+        if g.kernel > u8::MAX as usize || g.stride > u8::MAX as usize {
+            return Err(StoreError::Corrupt {
+                detail: format!("layer {li}: pool kernel/stride exceed the u8 format field"),
+            });
+        }
+        w.put_u8(2);
+        w.put_u8(0);
+        w.put_u32(0);
+        w.put_u32(0);
+        w.put_u64(0);
+        w.put_u32(0);
+        w.put_u32(g.in_h as u32);
+        w.put_u32(g.in_w as u32);
+        w.put_u32(g.channels as u32);
+        w.put_u8(g.kernel as u8);
+        w.put_u8(g.stride as u8);
+        report.geom_bytes += POOL_GEOM_BYTES;
+        debug_assert_eq!(w.len() as u64 - record_start, pool_record_bytes());
+        return Ok(());
+    }
     let nnz = layer.nnz();
     let quantized = layer.precision == Precision::I8;
-    let flags = if layer.relu { FLAG_RELU } else { 0 } | if quantized { FLAG_I8 } else { 0 };
-    let record_start = w.len() as u64;
+    let conv = match &layer.shape {
+        LayerShape::Conv(g) => Some(*g),
+        _ => None,
+    };
+    let geom_extra = if conv.is_some() { CONV_GEOM_BYTES } else { 0 };
+    let flags = if layer.relu { FLAG_RELU } else { 0 }
+        | if quantized { FLAG_I8 } else { 0 }
+        | if conv.is_some() { FLAG_CONV } else { 0 };
+    if let Some(g) = &conv {
+        if g.kernel > u8::MAX as usize || g.stride > u8::MAX as usize || g.pad > u8::MAX as usize
+        {
+            return Err(StoreError::Corrupt {
+                detail: format!("layer {li}: conv kernel/stride/pad exceed the u8 format field"),
+            });
+        }
+    }
     match layer.kind {
         MaskKind::Prs { cfg, sparsity } => {
             let seq = parallel_keep_sequence(layer.rows, layer.cols, sparsity, cfg, lanes);
@@ -193,6 +269,10 @@ fn write_layer(
             w.put_u32(layer.cols as u32);
             w.put_u64(nnz as u64);
             w.put_u32(layer.bias.len() as u32);
+            if let Some(g) = &conv {
+                write_conv_geom(w, g);
+                report.geom_bytes += CONV_GEOM_BYTES;
+            }
             w.put_u8(cfg.n_row as u8);
             w.put_u8(cfg.n_col as u8);
             w.put_u32(primitive_taps(cfg.n_row).expect("compiled layer has a valid width"));
@@ -205,11 +285,42 @@ fn write_layer(
             payload.write(w, report);
             report.seed_bytes += PRS_EXTRA_BYTES;
             debug_assert_eq!(
-                w.len() as u64 - record_start,
+                w.len() as u64 - record_start - geom_extra,
                 if quantized {
                     prs_record_bytes_i8(nnz as u64, layer.cols as u64, layer.bias.len() as u64)
                 } else {
                     prs_record_bytes(nnz as u64, layer.bias.len() as u64)
+                }
+            );
+        }
+        MaskKind::Explicit if is_dense_ascending(layer) => {
+            // Dense layer (the paper's unpruned convs): positions are
+            // implicit, so the record is values + bias + O(1) framing —
+            // no per-weight index bytes, mirroring the PRS story.
+            let payload = gather_payload(layer, li, None)?;
+            w.put_u8(3);
+            w.put_u8(flags);
+            w.put_u32(layer.rows as u32);
+            w.put_u32(layer.cols as u32);
+            w.put_u64(nnz as u64);
+            w.put_u32(layer.bias.len() as u32);
+            if let Some(g) = &conv {
+                write_conv_geom(w, g);
+                report.geom_bytes += CONV_GEOM_BYTES;
+            }
+            w.put_f32_slice(&layer.bias);
+            payload.write(w, report);
+            debug_assert_eq!(
+                w.len() as u64 - record_start,
+                if quantized {
+                    dense_record_bytes_i8(
+                        layer.cols as u64,
+                        nnz as u64,
+                        layer.bias.len() as u64,
+                        conv.is_some(),
+                    )
+                } else {
+                    dense_record_bytes(nnz as u64, layer.bias.len() as u64, conv.is_some())
                 }
             );
         }
@@ -230,13 +341,17 @@ fn write_layer(
             w.put_u32(layer.cols as u32);
             w.put_u64(nnz as u64);
             w.put_u32(layer.bias.len() as u32);
+            if let Some(g) = &conv {
+                write_conv_geom(w, g);
+                report.geom_bytes += CONV_GEOM_BYTES;
+            }
             w.put_u32_slice(&counts);
             w.put_u32_slice(&row_idx);
             w.put_f32_slice(&layer.bias);
             payload.write(w, report);
             report.explicit_index_bytes += 4 * (layer.cols as u64 + nnz as u64);
             debug_assert_eq!(
-                w.len() as u64 - record_start,
+                w.len() as u64 - record_start - geom_extra,
                 if quantized {
                     explicit_record_bytes_i8(
                         layer.cols as u64,
@@ -395,13 +510,13 @@ pub fn decode_model(bytes: &[u8], opts: &LoadOptions) -> Result<CompiledModel, S
         });
     }
     for (i, pair) in layers.windows(2).enumerate() {
-        if pair[0].cols != pair[1].rows {
+        if pair[0].out_len() != pair[1].in_len() {
             return Err(StoreError::Corrupt {
                 detail: format!(
                     "layers {i}->{}: dims do not chain ({} -> {})",
                     i + 1,
-                    pair[0].cols,
-                    pair[1].rows
+                    pair[0].out_len(),
+                    pair[1].in_len()
                 ),
             });
         }
@@ -445,6 +560,13 @@ fn corrupt(detail: String) -> StoreError {
     StoreError::Corrupt { detail }
 }
 
+/// `h·w·c` as a u64, or `None` on overflow — the activation-volume bound
+/// must never be computed with wrapping arithmetic on attacker-supplied
+/// dims.
+fn checked_volume(h: usize, w: usize, c: usize) -> Option<u64> {
+    (h as u64).checked_mul(w as u64)?.checked_mul(c as u64)
+}
+
 fn gcd(a: u64, b: u64) -> u64 {
     if b == 0 {
         a
@@ -474,11 +596,19 @@ fn read_layer(
 ) -> Result<CompiledLayer, StoreError> {
     let kind = r.u8()?;
     let flags = r.u8()?;
-    let known = if version >= 2 { FLAG_RELU | FLAG_I8 } else { FLAG_RELU };
+    let known = match version {
+        1 => FLAG_RELU,
+        2 => FLAG_RELU | FLAG_I8,
+        _ => FLAG_RELU | FLAG_I8 | FLAG_CONV,
+    };
     if flags & !known != 0 {
         return Err(corrupt(if version < 2 && flags & FLAG_I8 != 0 {
             format!(
                 "layer {li}: i8 precision flag requires format v2, file claims v{version}"
+            )
+        } else if version < 3 && flags & FLAG_CONV != 0 {
+            format!(
+                "layer {li}: conv geometry flag requires format v3, file claims v{version}"
             )
         } else {
             format!("layer {li}: unknown flags {flags:#x}")
@@ -486,8 +616,52 @@ fn read_layer(
     }
     let relu = flags & FLAG_RELU != 0;
     let quantized = flags & FLAG_I8 != 0;
+    let conv_flag = flags & FLAG_CONV != 0;
     let rows = r.u32()? as usize;
     let cols = r.u32()? as usize;
+    let nnz64 = r.u64()?;
+    let bias_len_raw = r.u32()? as usize;
+    if kind == 2 {
+        // Max-pool: geometry-only record (v3).
+        if version < 3 {
+            return Err(corrupt(format!(
+                "layer {li}: max-pool record kind requires format v3, file claims v{version}"
+            )));
+        }
+        if flags != 0 {
+            return Err(corrupt(format!(
+                "layer {li}: max-pool layer cannot carry flags {flags:#x}"
+            )));
+        }
+        if rows != 0 || cols != 0 || nnz64 != 0 || bias_len_raw != 0 {
+            return Err(corrupt(format!(
+                "layer {li}: max-pool record must have zero dims/nnz/bias"
+            )));
+        }
+        let in_h = r.u32()? as usize;
+        let in_w = r.u32()? as usize;
+        let channels = r.u32()? as usize;
+        let kernel = r.u8()? as usize;
+        let stride = r.u8()? as usize;
+        if in_h > MAX_DIM || in_w > MAX_DIM || channels > MAX_DIM {
+            return Err(corrupt(format!(
+                "layer {li}: pool dims {in_h}x{in_w}x{channels} out of range"
+            )));
+        }
+        let g = PoolGeom { in_h, in_w, channels, kernel, stride };
+        g.validate().map_err(|e| corrupt(format!("layer {li}: {e}")))?;
+        // Checked multiply: each factor fits MAX_DIM = 2^26, so the raw
+        // u64 product of three could wrap past 2^64 and dodge the bound.
+        match checked_volume(in_h, in_w, channels) {
+            Some(v) if v <= MAX_CELLS => {}
+            _ => {
+                return Err(corrupt(format!(
+                    "layer {li}: pool input exceeds the {MAX_CELLS}-cell bound"
+                )))
+            }
+        }
+        return Ok(CompiledLayer::maxpool(g));
+    }
     if rows == 0 || cols == 0 || rows > MAX_DIM || cols > MAX_DIM {
         return Err(corrupt(format!("layer {li}: dims {rows}x{cols} out of range")));
     }
@@ -496,15 +670,58 @@ fn read_layer(
             "layer {li}: {rows}x{cols} exceeds the {MAX_CELLS}-cell replay bound"
         )));
     }
-    let nnz64 = r.u64()?;
     if nnz64 > rows as u64 * cols as u64 {
         return Err(corrupt(format!("layer {li}: nnz {nnz64} exceeds {rows}x{cols}")));
     }
     let nnz = nnz64 as usize;
-    let bias_len = r.u32()? as usize;
+    let bias_len = bias_len_raw;
     if bias_len != 0 && bias_len != cols {
         return Err(corrupt(format!("layer {li}: bias length {bias_len}, expected 0 or {cols}")));
     }
+    let shape = if conv_flag {
+        let in_h = r.u32()? as usize;
+        let in_w = r.u32()? as usize;
+        let in_c = r.u32()? as usize;
+        let kernel = r.u8()? as usize;
+        let stride = r.u8()? as usize;
+        let pad = r.u8()? as usize;
+        if in_h > MAX_DIM || in_w > MAX_DIM || in_c > MAX_DIM {
+            return Err(corrupt(format!(
+                "layer {li}: conv input {in_h}x{in_w}x{in_c} out of range"
+            )));
+        }
+        let g = ConvGeom { in_h, in_w, in_c, out_c: cols, kernel, stride, pad };
+        g.validate().map_err(|e| corrupt(format!("layer {li}: {e}")))?;
+        if g.patch_len() != rows {
+            return Err(corrupt(format!(
+                "layer {li}: conv geometry implies {} matrix rows (kernel^2 * in_c), record \
+                 says {rows}",
+                g.patch_len()
+            )));
+        }
+        // The session sizes im2col/activation buffers from these — bound
+        // them before any load proceeds, with CHECKED multiplication:
+        // three factors each under MAX_DIM = 2^26 can wrap a u64 (or, in
+        // debug builds, panic inside `in_len()`), which would let a
+        // ~100-byte crafted header dodge the bound and abort the server
+        // at first inference.
+        for (what, len) in [
+            ("input", checked_volume(in_h, in_w, in_c)),
+            ("output", checked_volume(g.out_h(), g.out_w(), g.out_c)),
+        ] {
+            match len {
+                Some(v) if v <= MAX_CELLS => {}
+                _ => {
+                    return Err(corrupt(format!(
+                        "layer {li}: conv {what} exceeds the {MAX_CELLS}-cell bound"
+                    )))
+                }
+            }
+        }
+        LayerShape::Conv(g)
+    } else {
+        LayerShape::Fc
+    };
     match kind {
         0 => {
             let n_row = r.u8()? as u32;
@@ -581,6 +798,7 @@ fn read_layer(
                 relu,
                 precision: payload.precision(),
                 shards,
+                shape,
             })
         }
         1 => {
@@ -614,6 +832,39 @@ fn read_layer(
                 relu,
                 precision: payload.precision(),
                 shards,
+                shape,
+            })
+        }
+        3 => {
+            // Dense: every position kept, column-major rows-ascending —
+            // stored with zero index bytes.
+            if version < 3 {
+                return Err(corrupt(format!(
+                    "layer {li}: dense record kind requires format v3, file claims v{version}"
+                )));
+            }
+            if nnz64 != rows as u64 * cols as u64 {
+                return Err(corrupt(format!(
+                    "layer {li}: dense record nnz {nnz} != {rows}x{cols}"
+                )));
+            }
+            let bias = r.f32_vec(bias_len)?;
+            let payload = read_payload(r, li, quantized, nnz, cols)?;
+            // Implicit positions stay implicit: the dense packer slices
+            // the column-major payload straight into shards — no
+            // position vector, no counting sort (a full-size VGG conv
+            // layer would otherwise materialize ~38 MB of (row, col)
+            // tuples per layer just to throw them away).
+            let shards = payload.pack_dense_shards(rows, cols, opts.n_shards);
+            Ok(CompiledLayer {
+                rows,
+                cols,
+                kind: MaskKind::Explicit,
+                bias,
+                relu,
+                precision: payload.precision(),
+                shards,
+                shape,
             })
         }
         k => Err(corrupt(format!("layer {li}: unknown mask kind tag {k}"))),
@@ -663,6 +914,22 @@ impl Payload {
                 }
                 Payload::I8 { q, scales } => {
                     PackedColumns::from_walk_values_i8(rows, cols, lo, hi, seq, q, scales)
+                }
+            })
+            .collect()
+    }
+
+    /// Rebuild shards of a dense (kind 3) layer from the column-major
+    /// payload — implicit positions never materialize.
+    fn pack_dense_shards(&self, rows: usize, cols: usize, n_shards: usize) -> Vec<PackedColumns> {
+        shard_ranges(cols, n_shards)
+            .into_iter()
+            .map(|(lo, hi)| match self {
+                Payload::F32(values) => {
+                    PackedColumns::from_dense_values(rows, cols, lo, hi, values)
+                }
+                Payload::I8 { q, scales } => {
+                    PackedColumns::from_dense_values_i8(rows, cols, lo, hi, q, scales)
                 }
             })
             .collect()
@@ -733,13 +1000,14 @@ mod tests {
         assert_eq!(report.seed_bytes, 2 * PRS_EXTRA_BYTES);
         assert_eq!(report.value_bytes, 4 * model.nnz() as u64);
         assert_eq!(report.scale_bytes, 0, "f32 layers store no scales");
-        // total = header + per-layer fixed + seeds + bias + scales +
-        // values + crc.
+        // total = header + per-layer fixed + seeds + geometry + bias +
+        // scales + values + crc.
         let fixed: u64 = model.layers.len() as u64 * super::super::format::RECORD_FIXED_BYTES;
         let accounted = |r: &ExportReport| {
             super::super::format::file_overhead_bytes()
                 + fixed
                 + r.seed_bytes
+                + r.geom_bytes
                 + r.bias_bytes
                 + r.scale_bytes
                 + r.value_bytes
@@ -852,6 +1120,109 @@ mod tests {
         };
         let loaded = decode_model(&bytes, &opts).unwrap();
         assert_eq!(loaded.uniform_precision(), Some(Precision::F32));
+    }
+
+    fn small_conv_model(shards: usize) -> CompiledModel {
+        let mut rng = Pcg32::new(83);
+        let g1 = ConvGeom::same3x3(6, 6, 2, 3);
+        let w1: Vec<f32> =
+            (0..g1.patch_len() * 3).map(|_| rng.next_normal() * 0.2).collect();
+        let b1: Vec<f32> = (0..3).map(|_| rng.next_normal() * 0.1).collect();
+        let pool = PoolGeom::pool2(6, 6, 3);
+        let g2 = ConvGeom { in_h: 3, in_w: 3, in_c: 3, out_c: 4, kernel: 2, stride: 1, pad: 0 };
+        let w2: Vec<f32> =
+            (0..g2.patch_len() * 4).map(|_| rng.next_normal() * 0.2).collect();
+        let cfg2 = PrsMaskConfig::auto(g2.patch_len(), 4, 5, 9);
+        let flat = g2.out_len();
+        let w3: Vec<f32> = (0..flat * 5).map(|_| rng.next_normal() * 0.2).collect();
+        let cfg3 = PrsMaskConfig::auto(flat, 5, 7, 11);
+        CompiledModel::new(vec![
+            CompiledLayer::conv_from_mask(
+                &w1,
+                b1,
+                true,
+                &Mask::dense(g1.patch_len(), 3),
+                g1,
+                shards,
+            ),
+            CompiledLayer::maxpool(pool),
+            CompiledLayer::compile_conv_prs(&w2, Vec::new(), true, g2, 0.5, cfg2, shards, 1),
+            CompiledLayer::compile_prs(&w3, Vec::new(), false, flat, 5, 0.5, cfg3, shards, 1),
+        ])
+    }
+
+    #[test]
+    fn conv_model_round_trips_with_shapes_and_geometry() {
+        let model = small_conv_model(2);
+        let (bytes, report) = encode_with_report(&model, 1).unwrap();
+        // Dense conv + pool pay zero per-weight index bytes; only the
+        // PRS walks and the sparse explicit side would — and there is no
+        // sparse explicit layer here.
+        assert_eq!(report.explicit_index_bytes, 0);
+        assert_eq!(
+            report.geom_bytes,
+            2 * super::super::format::CONV_GEOM_BYTES + super::super::format::POOL_GEOM_BYTES
+        );
+        let opts = LoadOptions { n_shards: 2, lanes: 1, verify: true, precision: None };
+        let loaded = decode_model(&bytes, &opts).unwrap();
+        assert_eq!(loaded.layers.len(), 4);
+        for (a, b) in loaded.layers.iter().zip(&model.layers) {
+            assert_eq!(a.shape, b.shape, "geometry must round-trip exactly");
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.bias, b.bias);
+            assert_eq!(a.shards, b.shards);
+        }
+        let counts = loaded.layer_kind_counts();
+        assert_eq!((counts.conv, counts.pool, counts.fc), (2, 1, 1));
+    }
+
+    #[test]
+    fn quantized_conv_model_round_trips_bitwise() {
+        let q = small_conv_model(3).to_precision(Precision::I8);
+        let bytes = encode_model(&q, 1).unwrap();
+        let opts = LoadOptions { n_shards: 3, lanes: 1, verify: true, precision: None };
+        let loaded = decode_model(&bytes, &opts).unwrap();
+        assert_eq!(loaded.uniform_precision(), Some(Precision::I8));
+        for (a, b) in loaded.layers.iter().zip(&q.layers) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(a.shards, b.shards, "stored i8 plane must round-trip bit-exact");
+        }
+    }
+
+    #[test]
+    fn dense_layer_writes_kind3_with_no_index_bytes() {
+        let (rows, cols) = (10usize, 6usize);
+        let w = weights(rows * cols, 91);
+        let dense = CompiledModel::new(vec![CompiledLayer::from_mask(
+            &w,
+            weights(cols, 92),
+            false,
+            &Mask::dense(rows, cols),
+            2,
+        )]);
+        let (bytes, report) = encode_with_report(&dense, 1).unwrap();
+        assert_eq!(report.explicit_index_bytes, 0, "dense positions are implicit");
+        assert_eq!(
+            bytes.len() as u64,
+            super::super::format::file_overhead_bytes()
+                + super::super::format::dense_record_bytes(
+                    (rows * cols) as u64,
+                    cols as u64,
+                    false
+                )
+        );
+        let loaded = decode_model(&bytes, &LoadOptions::default()).unwrap();
+        assert_eq!(loaded.layers[0].shards, dense.layers[0].shards);
+        // A NON-dense explicit layer still writes CSC-style positions.
+        let sparse = CompiledModel::new(vec![CompiledLayer::from_mask(
+            &w,
+            Vec::new(),
+            false,
+            &crate::mask::random_mask(rows, cols, 0.5, 7),
+            2,
+        )]);
+        let (_, sparse_report) = encode_with_report(&sparse, 1).unwrap();
+        assert!(sparse_report.explicit_index_bytes > 0);
     }
 
     #[test]

@@ -5,22 +5,33 @@
 //!
 //! ```text
 //! magic     8 B   "LFSRPACK"
-//! version   u32   = 2 (v1 files — no precision flag — still load)
+//! version   u32   = 3 (v1/v2 files still load)
 //! n_layers  u32
 //! file_len  u64   total file bytes, trailing checksum included
 //! layer records ...
 //! checksum  u64   FNV-1a 64 over every preceding byte
 //! ```
 //!
-//! Per-layer record (fixed part, then kind-specific part):
+//! Per-layer record (fixed part, optional conv geometry, then
+//! kind-specific part):
 //!
 //! ```text
-//! kind      u8    0 = PRS (seed-derived), 1 = explicit positions
-//! flags     u8    bit 0 = relu; bit 1 = i8 value plane (v2 only)
-//! rows      u32
-//! cols      u32
-//! nnz       u64   keep budget = stored value count
+//! kind      u8    0 = PRS (seed-derived), 1 = explicit positions,
+//!                 2 = max-pool (v3), 3 = dense (v3: every cell kept,
+//!                 positions implicit — no index bytes at all)
+//! flags     u8    bit 0 = relu; bit 1 = i8 value plane (v2+);
+//!                 bit 2 = conv geometry follows (v3+, kinds 0/1/3)
+//! rows      u32   kernel²·in_c for a conv layer; 0 for kind 2
+//! cols      u32   out_c for a conv layer; 0 for kind 2
+//! nnz       u64   keep budget = stored value count (0 for kind 2)
 //! bias_len  u32   0 or cols
+//! -- conv geometry (flags bit 2) --
+//! in_h      u32   NHWC input height/width/channels
+//! in_w      u32
+//! in_c      u32
+//! kernel    u8
+//! stride    u8
+//! pad       u8    symmetric zero padding
 //! -- kind 0 (PRS) --
 //! n_row     u8    LFSR widths; each width names its primitive polynomial
 //! n_col     u8    in the repo-wide table (`lfsr::polynomials`)
@@ -33,10 +44,19 @@
 //! -- kind 1 (explicit) --
 //! col_counts u32 × cols   entries per column
 //! row_idx    u32 × nnz    kept rows, column-major, per-column order kept
-//! -- both, f32 plane (flags bit 1 clear) --
+//! -- kind 2 (max-pool; no flags, no bias, no values) --
+//! in_h      u32   NHWC input height/width/channels
+//! in_w      u32
+//! channels  u32
+//! kernel    u8
+//! stride    u8    VALID boundary: windows never cross the input edge
+//! -- kind 3 (dense): nothing — positions are every (row, col),
+//!    column-major, rows ascending --
+//! -- kinds 0/1/3, f32 plane (flags bit 1 clear) --
 //! bias      f32 × bias_len
-//! values    f32 × nnz     PRS: global walk order; explicit: column-major
-//! -- both, i8 plane (flags bit 1 set, v2) --
+//! values    f32 × nnz     PRS: global walk order; explicit/dense:
+//!                         column-major
+//! -- kinds 0/1/3, i8 plane (flags bit 1 set, v2+) --
 //! bias      f32 × bias_len
 //! scales    f32 × cols    per-column symmetric dequantization scales
 //! values    i8  × nnz     codes, same order as the f32 plane
@@ -47,24 +67,31 @@
 //! ([`PRS_EXTRA_BYTES`], a constant), while a CSC artifact would pay
 //! O(nnz) index entries.  `walk_hash` is how `verify` confirms the stored
 //! packing bit-for-bit without storing the walk: it replays the walk from
-//! the seeds and compares hashes.
+//! the seeds and compares hashes.  Dense layers (the paper's unpruned
+//! convs, §3.1.1) get the same O(1)-index treatment from the other
+//! direction: kind 3 stores values only, because "every position" needs
+//! no positions.
 //!
 //! **Version history.**  v1 had no precision flag: every value plane was
-//! f32.  v2 (this build) adds flags bit 1 + the scale vector, cutting the
-//! value payload of an i8 layer ~4× (`nnz + 4·cols` bytes vs `4·nnz`)
-//! while the PRS index state stays the same constant 34 B/layer.  The
-//! reader accepts [`MIN_VERSION`]..=[`VERSION`]; a v1 byte stream decodes
-//! exactly as before (same record layout, f32 plane), and a v1 file
-//! carrying the i8 flag is rejected as corrupt.
+//! f32.  v2 added flags bit 1 + the scale vector, cutting the value
+//! payload of an i8 layer ~4× (`nnz + 4·cols` bytes vs `4·nnz`) while the
+//! PRS index state stays the same constant 34 B/layer.  v3 (this build)
+//! adds the conv layer plane: the conv-geometry flag + block
+//! ([`CONV_GEOM_BYTES`]), the max-pool record (kind 2,
+//! [`POOL_GEOM_BYTES`]), and the dense record (kind 3) — compiled VGG-16
+//! round-trips with its conv stack instead of FC-only.  The reader
+//! accepts [`MIN_VERSION`]..=[`VERSION`]; v1/v2 byte streams decode
+//! exactly as before, and a v1/v2 file carrying v3-only kinds or flags is
+//! rejected as corrupt (naming both versions of the skew).
 
 use std::fmt;
 
 /// File magic.
 pub const MAGIC: [u8; 8] = *b"LFSRPACK";
 
-/// Newest format version this build writes (v2: per-layer precision flag
-/// + i8 value planes with per-column scale vectors).
-pub const VERSION: u32 = 2;
+/// Newest format version this build writes (v3: conv geometry blocks,
+/// max-pool records, dense records).
+pub const VERSION: u32 = 3;
 
 /// Oldest format version this build still reads (v1: f32 value planes
 /// only; identical layout otherwise).
@@ -75,6 +102,10 @@ pub const FLAG_RELU: u8 = 1;
 
 /// Layer flag (v2+): the value plane is i8 codes + per-column scales.
 pub const FLAG_I8: u8 = 1 << 1;
+
+/// Layer flag (v3+): a conv-geometry block follows the fixed record part
+/// — the layer's matrix is the im2col lowering `[kernel²·in_c, out_c]`.
+pub const FLAG_CONV: u8 = 1 << 2;
 
 /// Bytes before the first layer record: magic, version, n_layers, file_len.
 pub const FILE_HEADER_BYTES: u64 = 8 + 4 + 4 + 8;
@@ -90,6 +121,15 @@ pub const RECORD_FIXED_BYTES: u64 = 1 + 1 + 4 + 4 + 8 + 4;
 /// walk hash.  This is the whole per-layer index overhead — O(1),
 /// independent of dims and nnz.
 pub const PRS_EXTRA_BYTES: u64 = 1 + 1 + 4 + 4 + 4 + 4 + 8 + 8;
+
+/// Conv-geometry block bytes (v3, [`FLAG_CONV`]): in_h, in_w, in_c,
+/// kernel, stride, pad.  O(1) per conv layer — geometry, like PRS seeds,
+/// never scales with nnz.
+pub const CONV_GEOM_BYTES: u64 = 4 + 4 + 4 + 1 + 1 + 1;
+
+/// Max-pool record geometry bytes (v3, kind 2): in_h, in_w, channels,
+/// kernel, stride.
+pub const POOL_GEOM_BYTES: u64 = 4 + 4 + 4 + 1 + 1;
 
 /// Dimension sanity bound for the strict reader (largest paper layer is
 /// 8192×2048; 2^26 leaves ample headroom without letting a corrupt header
@@ -132,6 +172,28 @@ pub const fn prs_record_bytes_i8(nnz: u64, cols: u64, bias_len: u64) -> u64 {
 /// On-disk bytes of one i8-plane explicit-positions layer record.
 pub const fn explicit_record_bytes_i8(cols: u64, nnz: u64, bias_len: u64) -> u64 {
     RECORD_FIXED_BYTES + 4 * cols + 4 * nnz + 4 * bias_len + 4 * cols + nnz
+}
+
+/// On-disk bytes of one dense (kind 3) layer record: values + bias only
+/// — `nnz = rows·cols` implicit positions cost zero index bytes.  A conv
+/// layer adds [`CONV_GEOM_BYTES`] on top (pass `conv = true`).
+pub const fn dense_record_bytes(nnz: u64, bias_len: u64, conv: bool) -> u64 {
+    RECORD_FIXED_BYTES + 4 * bias_len + 4 * nnz + if conv { CONV_GEOM_BYTES } else { 0 }
+}
+
+/// On-disk bytes of one i8-plane dense layer record.
+pub const fn dense_record_bytes_i8(cols: u64, nnz: u64, bias_len: u64, conv: bool) -> u64 {
+    RECORD_FIXED_BYTES
+        + 4 * bias_len
+        + 4 * cols
+        + nnz
+        + if conv { CONV_GEOM_BYTES } else { 0 }
+}
+
+/// On-disk bytes of one max-pool record (kind 2): the fixed part plus
+/// geometry — no values, no bias, no index.
+pub const fn pool_record_bytes() -> u64 {
+    RECORD_FIXED_BYTES + POOL_GEOM_BYTES
 }
 
 /// Everything that can go wrong reading or writing an artifact.  The
@@ -470,6 +532,8 @@ mod tests {
     fn record_size_arithmetic() {
         assert_eq!(RECORD_FIXED_BYTES, 22);
         assert_eq!(PRS_EXTRA_BYTES, 34);
+        assert_eq!(CONV_GEOM_BYTES, 15);
+        assert_eq!(POOL_GEOM_BYTES, 14);
         assert_eq!(prs_record_bytes(100, 10), 22 + 34 + 40 + 400);
         assert_eq!(explicit_record_bytes(10, 100, 10), 22 + 40 + 400 + 40 + 400);
         assert_eq!(file_overhead_bytes(), 32);
@@ -481,6 +545,13 @@ mod tests {
             prs_record_bytes(100, 10) - prs_record_bytes_i8(100, 10, 10),
             4 * 100 - (100 + 4 * 10)
         );
+        // Dense records pay zero index bytes — values + bias (+ conv
+        // geometry) only; a dense conv layer's whole non-value overhead
+        // is 22 + 15 B.
+        assert_eq!(dense_record_bytes(100, 10, false), 22 + 40 + 400);
+        assert_eq!(dense_record_bytes(100, 10, true), 22 + 15 + 40 + 400);
+        assert_eq!(dense_record_bytes_i8(10, 100, 10, true), 22 + 15 + 40 + 40 + 100);
+        assert_eq!(pool_record_bytes(), 22 + 14);
     }
 
     #[test]
@@ -496,10 +567,10 @@ mod tests {
     #[test]
     fn version_error_names_the_supported_range() {
         // The version-skew contract: the message names the found version
-        // AND both supported versions, so operators can tell which side
+        // AND the full supported range, so operators can tell which side
         // of the skew to upgrade.
-        let msg = StoreError::UnsupportedVersion { found: 3 }.to_string();
-        assert!(msg.contains('3'), "{msg}");
-        assert!(msg.contains("v1") && msg.contains("v2"), "{msg}");
+        let msg = StoreError::UnsupportedVersion { found: 4 }.to_string();
+        assert!(msg.contains('4'), "{msg}");
+        assert!(msg.contains("v1") && msg.contains("v3"), "{msg}");
     }
 }

@@ -20,7 +20,13 @@
 //!   codes (1 B per kept value) plus a per-column f32 scale vector —
 //!   ~4× less value payload stacked on the no-index-memory claim, and
 //!   the stored plane is the exact in-memory plane so quantized models
-//!   round-trip bitwise.  v1 artifacts (f32-only) still load.
+//!   round-trip bitwise.  Format v3 adds the **conv layer plane**
+//!   ([`LayerShape`](crate::serve::LayerShape)): conv layers carry a
+//!   15 B geometry block, max-pools a geometry-only record, and dense
+//!   layers (the paper's unpruned convs) store values with *implicit*
+//!   positions — zero index bytes — so the whole modified VGG-16
+//!   round-trips with under 1 KiB of non-value overhead.  v1/v2
+//!   artifacts (FC-only) still load.
 //! * [`artifact`] — writer, strict reader (corrupt/truncated input →
 //!   typed [`StoreError`], never a panic — malformed scale vectors get
 //!   [`StoreError::BadScale`]), verify mode that replays the PRS walk

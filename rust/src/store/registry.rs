@@ -24,7 +24,10 @@
 //! quantizes (or dequantizes) at load time, so one shared pool serves
 //! f32 and i8 models side by side — the value-plane dispatch lives
 //! inside the kernel, and [`ModelInfo::precision`] reports each tenant's
-//! tier (`None` for a mixed-tier model).
+//! tier (`None` for a mixed-tier model).  Tenants also mix *shapes*:
+//! conv-capable models (VGG-16's conv stack + PRS classifier) and MLPs
+//! ride the same shard fan-out, and [`ModelInfo::kinds`] reports each
+//! tenant's FC/conv/pool layer census.
 //!
 //! A malformed request cannot take the server down: [`ModelRegistry::push`]
 //! checks the input length against the model's input dim and returns
@@ -37,7 +40,9 @@ use std::path::Path;
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
-use crate::serve::{Batcher, CompiledModel, InferenceSession, ServeStats, WorkerPool};
+use crate::serve::{
+    Batcher, CompiledModel, InferenceSession, LayerKindCounts, ServeStats, WorkerPool,
+};
 use crate::sparse::Precision;
 
 use super::artifact::{load_model, LoadOptions};
@@ -123,8 +128,12 @@ pub struct ModelInfo {
     pub in_dim: usize,
     pub out_dim: usize,
     pub nnz: usize,
-    /// The tier every layer shares, or `None` for a mixed-tier model.
+    /// The tier every weighted layer shares, or `None` for a mixed-tier
+    /// model.
     pub precision: Option<Precision>,
+    /// Layer census by shape (FC / conv / max-pool) — how an operator
+    /// tells a VGG tenant from an MLP tenant at a glance.
+    pub kinds: LayerKindCounts,
     /// Requests currently queued.
     pub pending: usize,
     pub stats: ServeStats,
@@ -338,6 +347,7 @@ impl ModelRegistry {
                     out_dim: m.out_dim(),
                     nnz: m.nnz(),
                     precision: m.uniform_precision(),
+                    kinds: m.layer_kind_counts(),
                     pending,
                     stats,
                 }
@@ -492,6 +502,37 @@ mod tests {
             reg.list().into_iter().map(|m| (m.id, m.precision)).collect();
         assert_eq!(tiers["f32"], Some(Precision::F32));
         assert_eq!(tiers["i8"], Some(Precision::I8));
+    }
+
+    #[test]
+    fn conv_tenant_serves_next_to_fc_and_reports_kinds() {
+        // A conv-capable tenant (scaled VGG-16 topology) and an MLP
+        // tenant share one pool; answers stay bitwise per tenant and
+        // `list` reports each tenant's layer census.
+        let reg = ModelRegistry::new(2);
+        let vgg = crate::serve::synthetic_vgg16_scaled(16, 16, 0.9, 2, 1);
+        let vgg_in = vgg.in_dim();
+        reg.insert("vgg", vgg, cfg_no_deadline(2)).unwrap();
+        reg.insert("mlp", toy_model(3), cfg_no_deadline(2)).unwrap();
+        let mut rng = Pcg32::new(77);
+        let xs: Vec<Vec<f32>> = (0..2)
+            .map(|_| (0..vgg_in).map(|_| rng.next_normal()).collect())
+            .collect();
+        reg.push("vgg", 0, xs[0].clone()).unwrap();
+        reg.push("vgg", 1, xs[1].clone()).unwrap();
+        reg.push("mlp", 2, vec![0.5; 12]).unwrap();
+        let answers = reg.drain(true);
+        assert_eq!(answers.len(), 3);
+        for ans in answers.iter().filter(|a| a.model == "vgg") {
+            let direct = reg.infer("vgg", &xs[ans.request as usize], 1).unwrap();
+            for (i, (&u, &v)) in ans.logits.iter().zip(&direct).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "vgg#{} logit {i}", ans.request);
+            }
+        }
+        let kinds: std::collections::BTreeMap<String, crate::serve::LayerKindCounts> =
+            reg.list().into_iter().map(|m| (m.id, m.kinds)).collect();
+        assert_eq!((kinds["vgg"].conv, kinds["vgg"].pool, kinds["vgg"].fc), (13, 4, 3));
+        assert_eq!((kinds["mlp"].conv, kinds["mlp"].pool, kinds["mlp"].fc), (0, 0, 1));
     }
 
     #[test]

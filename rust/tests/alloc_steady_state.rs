@@ -12,7 +12,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use lfsr_prune::serve::{synthetic_lenet300, InferenceSession};
+use lfsr_prune::serve::{synthetic_lenet300, synthetic_vgg16_scaled, InferenceSession};
 use lfsr_prune::sparse::Precision;
 
 struct CountingAlloc;
@@ -80,6 +80,20 @@ fn steady_state_infer_allocates_nothing() {
     let q_pooled = InferenceSession::new(quantized, 4);
     let n = allocs_after_warmup(&q_pooled, batch, 10);
     assert_eq!(n, 0, "pooled i8 steady-state infer allocated {n} times");
+
+    // Conv models ride the same arena: the im2col panel gather reuses
+    // the panel buffer, max-pool writes into the resized ping-pong
+    // buffer, and the shard fan-out is unchanged — so the scaled VGG-16
+    // topology (13 convs + 4 pools + 3 PRS FCs) is allocation-free at
+    // steady state too, inline and pooled, f32 and i8.  Batch 9 ensures
+    // padded tail panels on the conv virtual rows as well.
+    let vgg = synthetic_vgg16_scaled(16, 16, 0.9, 4, 1);
+    let conv_inline = InferenceSession::new(vgg.clone(), 1);
+    let n = allocs_after_warmup(&conv_inline, 9, 5);
+    assert_eq!(n, 0, "inline conv steady-state infer allocated {n} times");
+    let conv_pooled = InferenceSession::new(vgg.to_precision(Precision::I8), 4);
+    let n = allocs_after_warmup(&conv_pooled, 9, 5);
+    assert_eq!(n, 0, "pooled i8 conv steady-state infer allocated {n} times");
 
     // The classification path (infer + argmax into warm buffers) is
     // allocation-free too.

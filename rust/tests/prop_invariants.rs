@@ -11,9 +11,9 @@ use lfsr_prune::data::{synth, Batcher, SynthSpec};
 use lfsr_prune::hw::{baseline, lfsr_engine, Mode, SparseLayer};
 use lfsr_prune::lfsr::{period, GaloisLfsr, JumpTable, MsbMap};
 use lfsr_prune::mask::prs::{prs_keep_sequence, prs_mask, PrsMaskConfig};
-use lfsr_prune::mask::{magnitude_mask, prune_target, random_mask};
-use lfsr_prune::rank::matrix_rank;
-use lfsr_prune::sparse::CscMatrix;
+use lfsr_prune::mask::{magnitude_mask, prune_target, random_mask, Mask};
+use lfsr_prune::serve::{CompiledLayer, CompiledModel, InferenceSession};
+use lfsr_prune::sparse::{col2im_into, im2col_into, ConvGeom, CscMatrix, Precision};
 use lfsr_prune::util::json;
 
 const CASES: usize = 60;
@@ -232,6 +232,194 @@ fn prop_rank_bounded_and_mask_monotone() {
         mask.apply_to(&mut wm);
         let masked = matrix_rank(r, c, &wm);
         assert!(masked <= full, "case {case}: masking raised rank?");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Conv geometry properties (the im2col lowering behind LayerShape::Conv)
+// ---------------------------------------------------------------------------
+
+/// Random small-but-varied conv geometry: kernel 1..=3, stride 1..=3,
+/// pad < kernel, dims sized so batch 33 stays cheap.
+fn gen_conv_geom(rng: &mut Pcg32) -> ConvGeom {
+    let kernel = 1 + rng.next_below(3) as usize;
+    let stride = 1 + rng.next_below(3) as usize;
+    let pad = rng.next_below(kernel as u32) as usize;
+    ConvGeom {
+        in_h: kernel + rng.next_below(6) as usize,
+        in_w: kernel + rng.next_below(6) as usize,
+        in_c: 1 + rng.next_below(3) as usize,
+        out_c: 1 + rng.next_below(5) as usize,
+        kernel,
+        stride,
+        pad,
+    }
+}
+
+#[test]
+fn prop_conv_output_dims_match_window_count() {
+    // The closed-form out_h/out_w must equal the number of kernel
+    // placements counted by brute force over the padded input.
+    let mut rng = Pcg32::new(0xC09);
+    for case in 0..CASES {
+        let g = gen_conv_geom(&mut rng);
+        g.validate().unwrap_or_else(|e| panic!("case {case}: generator invalid: {e}"));
+        let count = |len: usize| {
+            let padded = len + 2 * g.pad;
+            let mut n = 0usize;
+            let mut start = 0usize;
+            while start + g.kernel <= padded {
+                n += 1;
+                start += g.stride;
+            }
+            n
+        };
+        assert_eq!(g.out_h(), count(g.in_h), "case {case}: {g:?}");
+        assert_eq!(g.out_w(), count(g.in_w), "case {case}: {g:?}");
+        assert_eq!(g.out_len(), g.out_h() * g.out_w() * g.out_c, "case {case}");
+        assert_eq!(g.patch_len(), g.kernel * g.kernel * g.in_c, "case {case}");
+    }
+}
+
+#[test]
+fn prop_im2col_col2im_identity() {
+    let mut rng = Pcg32::new(0xC01);
+    // Non-overlapping full tilings (stride == kernel, pad 0, dims are
+    // multiples of the kernel): col2im ∘ im2col is the exact identity.
+    for case in 0..20 {
+        let k = 1 + rng.next_below(3) as usize;
+        let g = ConvGeom {
+            in_h: k * (1 + rng.next_below(4) as usize),
+            in_w: k * (1 + rng.next_below(4) as usize),
+            in_c: 1 + rng.next_below(3) as usize,
+            out_c: 1,
+            kernel: k,
+            stride: k,
+            pad: 0,
+        };
+        let batch = 1 + rng.next_below(3) as usize;
+        let x: Vec<f32> = (0..batch * g.in_len()).map(|_| rng.next_normal()).collect();
+        let (mut cols, mut back) = (Vec::new(), Vec::new());
+        im2col_into(&x, batch, &g, &mut cols);
+        col2im_into(&cols, batch, &g, &mut back);
+        for (i, (&a, &b)) in back.iter().zip(&x).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case} pixel {i} ({g:?})");
+        }
+    }
+    // General geometries: col2im(im2col(x)) = x ⊙ coverage, coverage read
+    // off the all-ones image (and every pixel of a valid geometry is
+    // covered at least once).
+    for case in 0..20 {
+        let g = gen_conv_geom(&mut rng);
+        let batch = 1 + rng.next_below(2) as usize;
+        let x: Vec<f32> = (0..batch * g.in_len()).map(|_| rng.next_normal()).collect();
+        let ones = vec![1.0f32; batch * g.in_len()];
+        let (mut cols, mut cover, mut got) = (Vec::new(), Vec::new(), Vec::new());
+        im2col_into(&ones, batch, &g, &mut cols);
+        col2im_into(&cols, batch, &g, &mut cover);
+        im2col_into(&x, batch, &g, &mut cols);
+        col2im_into(&cols, batch, &g, &mut got);
+        for i in 0..x.len() {
+            // A stride larger than the kernel legitimately skips pixels.
+            if g.stride <= g.kernel {
+                assert!(cover[i] >= 1.0, "case {case} pixel {i} uncovered ({g:?})");
+            }
+            assert!(
+                (got[i] - x[i] * cover[i]).abs()
+                    <= 1e-5 * (1.0 + (x[i] * cover[i]).abs()),
+                "case {case} pixel {i}: {} vs {} * {} ({g:?})",
+                got[i],
+                x[i],
+                cover[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_panel_conv_bitwise_equals_scalar_conv_all_compositions() {
+    // The conv acceptance matrix: the serving path (im2col panels + the
+    // blocked kernel, any shard count, any worker count, any batch
+    // composition) is bit-for-bit the scalar reference (im2col rows +
+    // gemm_into), in BOTH precision tiers.
+    let mut rng = Pcg32::new(0xC0F);
+    for case in 0..5 {
+        let g = gen_conv_geom(&mut rng);
+        let dense = rng.next_below(2) == 0;
+        let w: Vec<f32> =
+            (0..g.patch_len() * g.out_c).map(|_| rng.next_normal() * 0.3).collect();
+        let bias: Vec<f32> = (0..g.out_c).map(|_| rng.next_normal() * 0.1).collect();
+        let build = |shards: usize| {
+            if dense {
+                CompiledLayer::conv_from_mask(
+                    &w,
+                    bias.clone(),
+                    true,
+                    &Mask::dense(g.patch_len(), g.out_c),
+                    g,
+                    shards,
+                )
+            } else {
+                let cfg = PrsMaskConfig::auto(g.patch_len(), g.out_c, 3 + case, 7 + case);
+                CompiledLayer::compile_conv_prs(
+                    &w,
+                    bias.clone(),
+                    true,
+                    g,
+                    0.5,
+                    cfg,
+                    shards,
+                    1,
+                )
+            }
+        };
+        for tier in [Precision::F32, Precision::I8] {
+            for n_shards in [1usize, 3, 7] {
+                let layer = build(n_shards).to_precision(tier);
+                // Scalar reference per batch: materialized im2col rows
+                // through the scalar kernel, shard by shard,
+                // scatter-copied.
+                let cases: Vec<(usize, Vec<f32>, Vec<f32>)> = [1usize, 3, 8, 33]
+                    .into_iter()
+                    .map(|batch| {
+                        let x: Vec<f32> =
+                            (0..batch * g.in_len()).map(|_| rng.next_normal()).collect();
+                        let vrows = batch * g.out_h() * g.out_w();
+                        let mut cols_buf = Vec::new();
+                        im2col_into(&x, batch, &g, &mut cols_buf);
+                        let mut expect = vec![0.0f32; vrows * g.out_c];
+                        for shard in &layer.shards {
+                            let mut buf = vec![0.0f32; vrows * shard.width()];
+                            shard.gemm_into(&cols_buf, vrows, &bias, true, &mut buf);
+                            for v in 0..vrows {
+                                expect
+                                    [v * g.out_c + shard.col_start..v * g.out_c + shard.col_end]
+                                    .copy_from_slice(
+                                        &buf[v * shard.width()..(v + 1) * shard.width()],
+                                    );
+                            }
+                        }
+                        (batch, x, expect)
+                    })
+                    .collect();
+                for workers in [1usize, 4] {
+                    let session =
+                        InferenceSession::new(CompiledModel::new(vec![layer.clone()]), workers);
+                    for (batch, x, expect) in &cases {
+                        let got = session.infer_batch(x, *batch);
+                        assert_eq!(got.len(), expect.len());
+                        for (i, (&u, &v)) in got.iter().zip(expect.iter()).enumerate() {
+                            assert_eq!(
+                                u.to_bits(),
+                                v.to_bits(),
+                                "case {case} {tier} dense={dense} shards={n_shards} \
+                                 batch={batch} workers={workers} out {i} ({g:?})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 

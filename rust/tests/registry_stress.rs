@@ -1,0 +1,137 @@
+//! Registry stress: mixed FC + conv tenants (f32 and i8 tiers) on ONE
+//! shared worker pool, with concurrent pushes, drains, and artifact
+//! load/evict churn in flight — and every answer bitwise-identical to
+//! the same model served alone.  The serving contract under
+//! multi-tenancy is not "approximately right under load": tenant mix,
+//! drain interleaving, and registry churn must not move a single bit.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lfsr_prune::data::rng::Pcg32;
+use lfsr_prune::serve::{
+    synthetic_lenet300_seeded, synthetic_vgg16_scaled, CompiledModel, InferenceSession,
+};
+use lfsr_prune::sparse::Precision;
+use lfsr_prune::store::{export_model, LoadOptions, ModelRegistry, TenantConfig};
+
+/// Deterministic per-request input, independent of push order.
+fn request_input(dim: usize, id: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(0x5EED ^ id);
+    (0..dim).map(|_| rng.next_normal()).collect()
+}
+
+#[test]
+fn mixed_fc_conv_tenants_bitwise_under_concurrent_churn() {
+    let n_each = 16usize;
+    let fc = synthetic_lenet300_seeded(0.9, 3, 1, 11);
+    let vgg = synthetic_vgg16_scaled(16, 16, 0.9, 3, 1);
+    let tenants: Vec<(&str, CompiledModel)> = vec![
+        ("fc-f32", fc.clone()),
+        ("fc-i8", fc.to_precision(Precision::I8)),
+        ("vgg-f32", vgg.clone()),
+        ("vgg-i8", vgg.to_precision(Precision::I8)),
+    ];
+
+    // Ground truth: each tenant's answers computed ALONE (inline
+    // single-worker session — serving is bitwise invariant to pool and
+    // batch composition, which is exactly what this test then proves
+    // under multi-tenant churn).
+    let expected: Vec<Vec<Vec<f32>>> = tenants
+        .iter()
+        .map(|(_, model)| {
+            let solo = InferenceSession::new(model.clone(), 1);
+            (0..n_each)
+                .map(|id| solo.infer_one(&request_input(model.in_dim(), id as u64)))
+                .collect()
+        })
+        .collect();
+
+    let reg = Arc::new(ModelRegistry::new(2));
+    let cfg = TenantConfig { batch: 4, max_wait: Some(Duration::from_millis(1)) };
+    for (id, model) in &tenants {
+        reg.insert(id, model.clone(), cfg).unwrap();
+    }
+
+    // Churn artifact for load/evict traffic: a real .lfsrpack round
+    // trip per cycle, on the same shared pool.
+    let churn_path = std::env::temp_dir()
+        .join(format!("lfsrpack_stress_{}.lfsrpack", std::process::id()));
+    export_model(&synthetic_lenet300_seeded(0.95, 2, 1, 71), &churn_path, 1).expect("export");
+
+    let pushers: Vec<_> = tenants
+        .iter()
+        .enumerate()
+        .map(|(ti, (id, model))| {
+            let reg = Arc::clone(&reg);
+            let id = id.to_string();
+            let dim = model.in_dim();
+            std::thread::spawn(move || {
+                for k in 0..n_each {
+                    let rid = (ti * n_each + k) as u64;
+                    reg.push(&id, rid, request_input(dim, k as u64)).unwrap();
+                }
+            })
+        })
+        .collect();
+    let churner = {
+        let reg = Arc::clone(&reg);
+        let path = churn_path.clone();
+        std::thread::spawn(move || {
+            for round in 0..6 {
+                let opts = LoadOptions {
+                    n_shards: 2,
+                    lanes: 1,
+                    verify: false,
+                    precision: if round % 2 == 0 { None } else { Some(Precision::I8) },
+                };
+                reg.load("churn", &path, &opts, TenantConfig::default()).unwrap();
+                reg.push("churn", 9000 + round, vec![0.25; 784]).unwrap();
+                assert!(reg.contains("churn"));
+                let _ = reg.list(); // list() races with load/evict by design
+                assert!(reg.evict("churn"));
+            }
+        })
+    };
+
+    // Drain concurrently with the pushes and the churn.
+    let total = tenants.len() * n_each;
+    let mut answers = Vec::new();
+    let t0 = Instant::now();
+    while answers.len() < total {
+        assert!(t0.elapsed() < Duration::from_secs(60), "drain stalled");
+        let done = pushers.iter().all(|h| h.is_finished());
+        for ans in reg.drain(done) {
+            if ans.model != "churn" {
+                answers.push(ans);
+            }
+        }
+    }
+    for h in pushers {
+        h.join().unwrap();
+    }
+    churner.join().unwrap();
+    let _ = std::fs::remove_file(&churn_path);
+
+    // Every answer equals its solo-serving reference, bit for bit —
+    // tenant mix, shared pool, churn, and batch padding included.
+    assert_eq!(answers.len(), total);
+    let mut seen = vec![false; total];
+    for ans in &answers {
+        let ti = tenants.iter().position(|(id, _)| *id == ans.model).unwrap();
+        let k = ans.request as usize - ti * n_each;
+        assert!(!seen[ans.request as usize], "duplicate answer {}", ans.request);
+        seen[ans.request as usize] = true;
+        let reference = &expected[ti][k];
+        assert_eq!(ans.logits.len(), reference.len());
+        for (i, (&u, &v)) in ans.logits.iter().zip(reference).enumerate() {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "{}#{k} logit {i} differs from solo serving",
+                ans.model
+            );
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "every request answered exactly once");
+}

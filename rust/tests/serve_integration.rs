@@ -15,8 +15,11 @@ use lfsr_prune::hw::{lfsr_engine, Mode, SparseLayer};
 use lfsr_prune::mask::prs::{prs_keep_sequence, prs_mask, PrsMaskConfig};
 use lfsr_prune::mask::{magnitude_mask, random_mask, Mask};
 use lfsr_prune::serve::{
-    parallel_keep_sequence, Batcher, CompiledLayer, CompiledModel, InferenceSession,
+    parallel_keep_sequence, synthetic_lenet300, Batcher, CompiledLayer, CompiledModel,
+    InferenceSession,
 };
+use lfsr_prune::sparse::{transpose_panels, ConvGeom, PoolGeom, BATCH_LANES};
+use lfsr_prune::store::format::hash_keep_sequence;
 
 const D0: usize = 48;
 const D1: usize = 32;
@@ -181,6 +184,80 @@ fn dense_serve_matches_host_matmul() {
 }
 
 // ---------------------------------------------------------------------------
+// Regression pins: the FC-only path is byte-identical across refactors
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lenet300_walk_and_packing_pinned() {
+    // Constants generated by an exact integer-only python mirror of the
+    // two-LFSR walk (cross-checked against ref.py's `lfsr_pair_mask`).
+    // These pin the demo model's index derivation across refactors: if
+    // any value moves, every artifact and every serving layout built
+    // from these seeds has silently changed.
+    type Pin = (usize, usize, u32, u32, usize, u64, (usize, usize), (usize, usize));
+    const PINS: [Pin; 3] = [
+        (784, 300, 12, 11, 23520, 0x8185_404f_420a_032a, (688, 189), (779, 243)),
+        (300, 100, 11, 9, 3000, 0x9a58_95cc_909d_5509, (0, 2), (184, 82)),
+        (100, 10, 9, 7, 100, 0x42bb_ec36_09d9_1b22, (54, 8), (56, 2)),
+    ];
+    for (i, &(rows, cols, n_row, n_col, nnz, hash, first, last)) in PINS.iter().enumerate() {
+        let cfg = PrsMaskConfig::auto(rows, cols, 11 + i as u32, 29 + i as u32);
+        assert_eq!((cfg.n_row, cfg.n_col), (n_row, n_col), "layer {i}: widths");
+        let seq = parallel_keep_sequence(rows, cols, 0.9, cfg, 2);
+        assert_eq!(seq.len(), nnz, "layer {i}: keep budget");
+        assert_eq!(seq[0], first, "layer {i}: first kept position");
+        assert_eq!(*seq.last().unwrap(), last, "layer {i}: last kept position");
+        assert_eq!(hash_keep_sequence(&seq), hash, "layer {i}: walk hash");
+    }
+    // And the compiled demo model really is built from those walks.
+    let model = synthetic_lenet300(0.9, 4, 2);
+    assert_eq!(model.nnz(), 23520 + 3000 + 100);
+}
+
+#[test]
+fn fc_session_path_byte_identical_to_manual_panel_reference() {
+    // The conv-plane refactor must not perturb FC serving by a single
+    // bit: replay the pre-refactor op sequence by hand from the sparse
+    // primitives (transpose -> per-shard panel GEMM -> ping-pong) and
+    // compare the session's logits bitwise — padded tail panels, bias
+    // skipping, ReLU, shard offsets and all.
+    let model = synthetic_lenet300(0.9, 5, 2);
+    for workers in [1usize, 3] {
+        let session = InferenceSession::new(model.clone(), workers);
+        for batch in [1usize, 9] {
+            let x = weights(batch * 784, 90 + batch as u64);
+            let mut a = x.clone();
+            let mut panels = Vec::new();
+            for layer in &model.layers {
+                transpose_panels(&a, batch, layer.rows, &mut panels);
+                let mut out = vec![0.0f32; batch * layer.cols];
+                let slab = layer.rows * BATCH_LANES;
+                let n_panels = batch.div_ceil(BATCH_LANES);
+                for shard in &layer.shards {
+                    for p in 0..n_panels {
+                        let lanes = (batch - p * BATCH_LANES).min(BATCH_LANES);
+                        shard.gemm_panel_into(
+                            &panels[p * slab..][..slab],
+                            lanes,
+                            &layer.bias,
+                            layer.relu,
+                            &mut out[p * BATCH_LANES * layer.cols..],
+                            layer.cols,
+                        );
+                    }
+                }
+                a = out;
+            }
+            let got = session.infer_batch(&x, batch);
+            assert_eq!(got.len(), a.len());
+            for (i, (&u, &v)) in got.iter().zip(&a).enumerate() {
+                assert_eq!(u.to_bits(), v.to_bits(), "workers {workers} batch {batch} logit {i}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Artifact-gated parity vs the PJRT runtime (skips without `make artifacts`)
 // ---------------------------------------------------------------------------
 
@@ -242,6 +319,116 @@ fn serve_matches_model_runner_forward() {
     for (i, (&a, &b)) in native.iter().zip(xla).enumerate() {
         assert!(
             (a - b).abs() < 1e-3 * (1.0 + a.abs().max(b.abs())),
+            "logit {i}: native {a} vs artifact {b}"
+        );
+    }
+}
+
+#[test]
+fn vgg16_serve_matches_model_runner_forward() {
+    // The paper's flagship network end to end: build the conv-capable
+    // serve model (dense 3x3 SAME convs + 2x2 pools + PRS-pruned FC
+    // head) from the SAME params/masks the AOT vgg16 graph consumes, and
+    // compare logits against `ModelRunner::forward`.  Skips without
+    // `make artifacts`, like the lenet parity test above.
+    use lfsr_prune::runtime::{ModelRunner, Runtime, Tensor};
+
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new(dir).expect("runtime");
+    let runner = ModelRunner::new(&rt, "vgg16").expect("vgg16");
+    let params = runner.init_params(7);
+    let by_name = |name: &str| {
+        runner
+            .man
+            .params
+            .iter()
+            .position(|p| p.name == name)
+            .unwrap_or_else(|| panic!("vgg16 manifest has no param {name}"))
+    };
+
+    // Conv trunk: conv{i}_w are HWIO [k, k, in_c, out_c]; the python
+    // graph pools after convs 1, 3, 6, 9 (the paper's eliminated fifth
+    // pool never appears).  Input is NHWC [batch, 64, 64, 3].
+    let shape_x = runner.man.batch_x_shape();
+    let mut hw_dim = shape_x[1];
+    let mut serve_layers = Vec::new();
+    let mut ci = 0usize;
+    while runner.man.params.iter().any(|p| p.name == format!("conv{ci}_w")) {
+        let wi = by_name(&format!("conv{ci}_w"));
+        let shape = runner.man.params[wi].shape.clone();
+        let (k, in_c, out_c) = (shape[0], shape[2], shape[3]);
+        let geom = ConvGeom {
+            in_h: hw_dim,
+            in_w: hw_dim,
+            in_c,
+            out_c,
+            kernel: k,
+            stride: 1,
+            pad: (k - 1) / 2, // SAME for the odd kernels VGG uses
+        };
+        let w = params[wi].as_f32().to_vec();
+        let bias = params[by_name(&format!("conv{ci}_b"))].as_f32().to_vec();
+        serve_layers.push(CompiledLayer::conv_from_mask(
+            &w,
+            bias,
+            true,
+            &Mask::dense(geom.patch_len(), out_c),
+            geom,
+            4,
+        ));
+        if matches!(ci, 1 | 3 | 6 | 9) {
+            serve_layers.push(CompiledLayer::maxpool(PoolGeom::pool2(hw_dim, hw_dim, out_c)));
+            hw_dim /= 2;
+        }
+        ci += 1;
+    }
+    assert_eq!(ci, 13, "modified VGG-16 has 13 conv layers");
+
+    // PRS-pruned FC head, masks fed to the runtime exactly as compiled.
+    let midx = runner.maskable_indices();
+    let mut masks = runner.dense_masks();
+    for (i, &pi) in midx.iter().enumerate() {
+        let shape = runner.man.params[pi].shape.clone();
+        let cfg = PrsMaskConfig::auto(shape[0], shape[1], 11 + i as u32, 29 + i as u32);
+        let m = prs_mask(shape[0], shape[1], 0.9, cfg);
+        masks[i] = Tensor::f32(shape.clone(), m.to_f32());
+        let w = params[pi].as_f32().to_vec();
+        let wname = &runner.man.params[pi].name;
+        let bias = params[by_name(&wname.replace("_w", "_b"))].as_f32().to_vec();
+        let last = i + 1 == midx.len();
+        serve_layers.push(CompiledLayer::compile_prs(
+            &w,
+            bias,
+            !last,
+            shape[0],
+            shape[1],
+            0.9,
+            cfg,
+            4,
+            2,
+        ));
+    }
+    let session = InferenceSession::new(CompiledModel::new(serve_layers), 3);
+    let counts = session.model().layer_kind_counts();
+    assert_eq!((counts.conv, counts.pool, counts.fc), (13, 4, 3));
+
+    let batch = runner.man.batch.min(4);
+    let x = weights(batch * session.model().in_dim(), 67);
+    let native = session.infer_batch(&x, batch);
+    let xla_out = runner
+        .forward_padded(&params, &masks, &x, batch)
+        .expect("artifact forward");
+    let xla = xla_out.as_f32();
+    assert_eq!(xla.len(), native.len());
+    // Looser than the lenet bound: 13 conv layers of f32 accumulation in
+    // different orders (im2col walk vs XLA's conv) legitimately drift.
+    for (i, (&a, &b)) in native.iter().zip(xla).enumerate() {
+        assert!(
+            (a - b).abs() < 5e-3 * (1.0 + a.abs().max(b.abs())),
             "logit {i}: native {a} vs artifact {b}"
         );
     }

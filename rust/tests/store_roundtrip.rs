@@ -1,18 +1,24 @@
 //! Artifact-store integration: round-trip bitwise parity across every
-//! mask kind and worker/shard count (f32 and i8 value planes),
-//! corruption robustness (typed errors, never panics — malformed scale
-//! vectors included), v1 back-compat + version-skew behaviour,
+//! mask kind and worker/shard count (f32 and i8 value planes), conv/pool
+//! layer records (v3) with geometry validation, corruption robustness
+//! (typed errors, never panics — malformed scale vectors and crafted
+//! conv geometry included), v1/v2 back-compat + version-skew behaviour,
 //! verify-mode walk replay, and the paper's artifact-size claim (packed
-//! values + O(1) seed overhead per layer — no index memory; the i8 tier
+//! values + O(1) seed/geometry overhead per layer — no index memory,
+//! now for the WHOLE VGG-16 including its dense conv stack; the i8 tier
 //! cuts the values ~4x on top).
 
 use lfsr_prune::hw::layers::vgg16_modified;
 use lfsr_prune::mask::prs::PrsMaskConfig;
-use lfsr_prune::mask::{magnitude_mask, prune_target, random_mask};
-use lfsr_prune::serve::{synthetic_lenet300, CompiledLayer, CompiledModel, InferenceSession};
-use lfsr_prune::sparse::Precision;
+use lfsr_prune::mask::{magnitude_mask, prune_target, random_mask, Mask};
+use lfsr_prune::serve::{
+    synthetic_lenet300, synthetic_vgg16_scaled, CompiledLayer, CompiledModel, InferenceSession,
+    LayerShape,
+};
+use lfsr_prune::sparse::{ConvGeom, PoolGeom, Precision};
 use lfsr_prune::store::format::{
-    file_overhead_bytes, fnv1a64, prs_record_bytes, PRS_EXTRA_BYTES, RECORD_FIXED_BYTES,
+    dense_record_bytes, file_overhead_bytes, fnv1a64, pool_record_bytes, prs_record_bytes,
+    CONV_GEOM_BYTES, POOL_GEOM_BYTES, PRS_EXTRA_BYTES, RECORD_FIXED_BYTES,
 };
 use lfsr_prune::store::{
     decode_model, encode_model, encode_with_report, export_model, load_model, verify_file,
@@ -306,16 +312,17 @@ fn quantized_lenet300_artifact_cuts_value_bytes_4x() {
 
 #[test]
 fn v1_artifact_still_loads_as_f32() {
-    // Fixture: a v1 byte stream.  v1 and v2 have the identical record
-    // layout for f32 planes (the only plane v1 had), so the canonical
-    // way to produce one is to stamp version 1 over an f32 v2 encode and
-    // re-checksum — the payload bytes are untouched.
+    // Fixture: a v1 byte stream.  v1..v3 have the identical record
+    // layout for f32 FC planes (the only records v1 had), so the
+    // canonical way to produce one is to stamp version 1 over an f32
+    // FC-only encode and re-checksum — the payload bytes are untouched.
+    // (The magnitude model is NOT dense, so no v3 kind-3 record appears.)
     let batch = 4;
     let x = weights(batch * D0, 71);
     for method in ["prs", "magnitude"] {
         let model = model_for(method, 2);
         let v2 = encode_model(&model, 1).expect("encode");
-        assert_eq!(u32::from_le_bytes(v2[8..12].try_into().unwrap()), 2, "writer is at v2");
+        assert_eq!(u32::from_le_bytes(v2[8..12].try_into().unwrap()), 3, "writer is at v3");
         let v1 = patch_and_restamp(&v2, 8, &1u32.to_le_bytes());
         let strict = LoadOptions { n_shards: 3, lanes: 1, verify: true, precision: None };
         let loaded = decode_model(&v1, &strict).expect("v1 decodes");
@@ -351,19 +358,272 @@ fn v1_artifact_with_i8_flag_is_corrupt_not_misread() {
 }
 
 #[test]
-fn version_skew_error_names_both_supported_versions() {
-    // A future v3 artifact must fail with a message an operator can act
-    // on: the found version AND the v1..=v2 range this build reads.
+fn version_skew_error_names_the_supported_range() {
+    // A future v4 artifact must fail with a message an operator can act
+    // on: the found version AND the v1..=v3 range this build reads.
     let bytes = encode_model(&model_for("prs", 1), 1).expect("encode");
-    let v3 = patch_and_restamp(&bytes, 8, &3u32.to_le_bytes());
-    match decode_model(&v3, &opts()) {
-        Err(e @ StoreError::UnsupportedVersion { found: 3 }) => {
+    let v4 = patch_and_restamp(&bytes, 8, &4u32.to_le_bytes());
+    match decode_model(&v4, &opts()) {
+        Err(e @ StoreError::UnsupportedVersion { found: 4 }) => {
             let msg = e.to_string();
-            assert!(msg.contains('3'), "{msg}");
-            assert!(msg.contains("v1") && msg.contains("v2"), "{msg}");
+            assert!(msg.contains('4'), "{msg}");
+            assert!(msg.contains("v1") && msg.contains("v3"), "{msg}");
         }
         other => panic!("expected UnsupportedVersion, got {other:?}"),
     }
+}
+
+// ---------------------------------------------------------------------------
+// v3: conv / pool / dense records
+// ---------------------------------------------------------------------------
+
+/// Small conv chain: dense 3x3 SAME conv -> 2x2 pool -> PRS conv -> PRS
+/// FC head.  Every v3 record kind in one model.
+fn conv_model(shards: usize) -> CompiledModel {
+    let mut rng = Pcg32::new(57);
+    let g1 = ConvGeom::same3x3(6, 6, 2, 3);
+    let w1: Vec<f32> = (0..g1.patch_len() * 3).map(|_| rng.next_normal() * 0.2).collect();
+    let b1: Vec<f32> = (0..3).map(|_| rng.next_normal() * 0.1).collect();
+    let g2 = ConvGeom { in_h: 3, in_w: 3, in_c: 3, out_c: 4, kernel: 2, stride: 1, pad: 0 };
+    let w2: Vec<f32> = (0..g2.patch_len() * 4).map(|_| rng.next_normal() * 0.2).collect();
+    let cfg2 = PrsMaskConfig::auto(g2.patch_len(), 4, 5, 9);
+    let flat = g2.out_len();
+    let w3: Vec<f32> = (0..flat * 6).map(|_| rng.next_normal() * 0.2).collect();
+    let b3: Vec<f32> = (0..6).map(|_| rng.next_normal() * 0.1).collect();
+    let cfg3 = PrsMaskConfig::auto(flat, 6, 7, 11);
+    CompiledModel::new(vec![
+        CompiledLayer::conv_from_mask(&w1, b1, true, &Mask::dense(g1.patch_len(), 3), g1, shards),
+        CompiledLayer::maxpool(PoolGeom::pool2(6, 6, 3)),
+        CompiledLayer::compile_conv_prs(&w2, Vec::new(), true, g2, 0.5, cfg2, shards, 1),
+        CompiledLayer::compile_prs(&w3, b3, false, flat, 6, 0.5, cfg3, shards, 1),
+    ])
+}
+
+#[test]
+fn conv_model_roundtrip_bitwise_both_tiers_any_workers_shards() {
+    // The v3 acceptance case: a conv-capable model (dense conv, pool,
+    // PRS conv, PRS FC) round-trips to the exact same logits for any
+    // shard/worker composition, in both precision tiers.
+    let batch = 5;
+    let in_dim = 6 * 6 * 2;
+    let x = weights(batch * in_dim, 81);
+    for tier in [Precision::F32, Precision::I8] {
+        let original = conv_model(3).to_precision(tier);
+        let reference = InferenceSession::new(original.clone(), 1).infer_batch(&x, batch);
+        let bytes = encode_model(&original, 2).expect("encode");
+        for n_shards in [1usize, 3, 7] {
+            for workers in [1usize, 4] {
+                let opts = LoadOptions { n_shards, lanes: 2, verify: true, precision: None };
+                let loaded = decode_model(&bytes, &opts).expect("decode");
+                assert_eq!(loaded.layer_kind_counts().conv, 2);
+                assert_eq!(loaded.layer_kind_counts().pool, 1);
+                let got = InferenceSession::new(loaded, workers).infer_batch(&x, batch);
+                assert_bitwise_eq(
+                    &got,
+                    &reference,
+                    &format!("conv {tier} shards={n_shards} workers={workers}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn scaled_vgg16_roundtrip_bitwise_and_size_model_exact() {
+    // The flagship topology end to end through the store: 13 convs, 4
+    // pools, 3 PRS FCs — encoded size matches the record-size model
+    // EXACTLY, and a load serves bitwise-identical logits.
+    let model = synthetic_vgg16_scaled(16, 16, 0.9, 2, 1);
+    let (bytes, report) = encode_with_report(&model, 2).expect("encode");
+    let predicted: u64 = file_overhead_bytes()
+        + model
+            .layers
+            .iter()
+            .map(|l| match l.shape {
+                LayerShape::MaxPool(_) => pool_record_bytes(),
+                LayerShape::Conv(_) => {
+                    dense_record_bytes(l.nnz() as u64, l.bias.len() as u64, true)
+                }
+                LayerShape::Fc => prs_record_bytes(l.nnz() as u64, l.bias.len() as u64),
+            })
+            .sum::<u64>();
+    assert_eq!(bytes.len() as u64, predicted);
+    assert_eq!(report.total_bytes, predicted);
+    assert_eq!(report.explicit_index_bytes, 0, "dense convs store no positions");
+    let batch = 2;
+    let x = weights(batch * model.in_dim(), 83);
+    let reference = InferenceSession::new(model.clone(), 1).infer_batch(&x, batch);
+    let opts = LoadOptions { n_shards: 3, lanes: 2, verify: true, precision: None };
+    let loaded = decode_model(&bytes, &opts).expect("decode");
+    let got = InferenceSession::new(loaded, 2).infer_batch(&x, batch);
+    assert_bitwise_eq(&got, &reference, "scaled vgg16");
+}
+
+#[test]
+fn v2_fixture_still_decodes_fc_and_i8() {
+    // v2 files (FC records, optional i8 plane) must keep loading: the FC
+    // record layout is unchanged between v2 and v3, so re-stamping an
+    // FC-only encode to version 2 produces a canonical v2 byte stream.
+    let batch = 4;
+    let x = weights(batch * D0, 73);
+    for tier in [Precision::F32, Precision::I8] {
+        let model = model_for("prs", 2).to_precision(tier);
+        let v3 = encode_model(&model, 1).expect("encode");
+        let v2 = patch_and_restamp(&v3, 8, &2u32.to_le_bytes());
+        let strict = LoadOptions { n_shards: 3, lanes: 1, verify: true, precision: None };
+        let loaded = decode_model(&v2, &strict).expect("v2 decodes");
+        assert_eq!(loaded.uniform_precision(), Some(tier));
+        let got = InferenceSession::new(loaded, 2).infer_batch(&x, batch);
+        let reference = InferenceSession::new(model, 1).infer_batch(&x, batch);
+        assert_bitwise_eq(&got, &reference, &format!("v2 {tier}"));
+    }
+}
+
+#[test]
+fn v3_records_stamped_as_older_versions_are_corrupt_not_misread() {
+    // The version-skew story from the reader's side: conv geometry,
+    // pool records, and dense records did not exist before v3 — a v1/v2
+    // header claiming them must fail with BOTH versions named, never a
+    // silent misparse.
+    let conv = encode_model(&conv_model(2), 1).expect("encode conv");
+    let v2 = patch_and_restamp(&conv, 8, &2u32.to_le_bytes());
+    match decode_model(&v2, &opts()) {
+        Err(StoreError::Corrupt { detail }) => {
+            assert!(detail.contains("v3") && detail.contains("v2"), "{detail}");
+        }
+        other => panic!("conv@v2: expected Corrupt, got {other:?}"),
+    }
+    // A model starting with a pool record: kind 2 under v2.
+    let pool_first = CompiledModel::new(vec![CompiledLayer::maxpool(PoolGeom::pool2(4, 4, 2))]);
+    let bytes = encode_model(&pool_first, 1).expect("encode pool");
+    let v2 = patch_and_restamp(&bytes, 8, &2u32.to_le_bytes());
+    match decode_model(&v2, &opts()) {
+        Err(StoreError::Corrupt { detail }) => {
+            assert!(detail.contains("v3") && detail.contains("v2"), "{detail}");
+        }
+        other => panic!("pool@v2: expected Corrupt, got {other:?}"),
+    }
+    // A dense FC layer: kind 3 under v1.
+    let w = weights(8 * 3, 85);
+    let dense = CompiledModel::new(vec![CompiledLayer::from_mask(
+        &w,
+        Vec::new(),
+        false,
+        &Mask::dense(8, 3),
+        1,
+    )]);
+    let bytes = encode_model(&dense, 1).expect("encode dense");
+    let v1 = patch_and_restamp(&bytes, 8, &1u32.to_le_bytes());
+    match decode_model(&v1, &opts()) {
+        Err(StoreError::Corrupt { detail }) => {
+            assert!(detail.contains("v3") && detail.contains("v1"), "{detail}");
+        }
+        other => panic!("dense@v1: expected Corrupt, got {other:?}"),
+    }
+}
+
+#[test]
+fn corrupted_conv_geometry_fields_are_typed_errors() {
+    // conv_model layer 0 is a dense conv (kind 3 + FLAG_CONV): its
+    // geometry block sits right after the fixed record part.
+    let bytes = encode_model(&conv_model(2), 1).expect("encode");
+    let record0 = (8 + 4 + 4 + 8) as usize;
+    let geom = record0 + RECORD_FIXED_BYTES as usize;
+    let (in_h_at, in_w_at, in_c_at) = (geom, geom + 4, geom + 8);
+    let (kernel_at, stride_at, pad_at) = (geom + 12, geom + 13, geom + 14);
+    let cases: Vec<(usize, Vec<u8>, &str)> = vec![
+        (kernel_at, vec![0u8], "kernel zero"),
+        (stride_at, vec![0u8], "stride zero"),
+        (pad_at, vec![9u8], "pad >= kernel"),
+        (in_h_at, 0u32.to_le_bytes().to_vec(), "zero input height"),
+        (in_w_at, u32::MAX.to_le_bytes().to_vec(), "input width beyond MAX_DIM"),
+        // in_c changed => kernel^2*in_c no longer matches the record's
+        // rows field.
+        (in_c_at, 7u32.to_le_bytes().to_vec(), "geometry/rows mismatch"),
+    ];
+    for (at, patch, what) in cases {
+        let bad = patch_and_restamp(&bytes, at, &patch);
+        match decode_model(&bad, &opts()) {
+            Err(StoreError::Corrupt { detail }) => {
+                assert!(detail.contains("layer 0"), "{what}: {detail}");
+            }
+            other => panic!("{what}: expected Corrupt, got {other:?}"),
+        }
+    }
+    // Overflow attack: all geometry fields individually satisfy the
+    // MAX_DIM bound, every per-field check passes (kernel 1, pad 0,
+    // rows = kernel^2 * in_c = 2^26, rows*cols within MAX_CELLS), but
+    // in_h*in_w*in_c = 2^64 — a wrapping multiply would read it as 0 and
+    // let the loader accept a layer whose first inference must allocate
+    // ~petabytes of im2col panels.  The checked-volume guard must refuse.
+    let mut patched = patch_and_restamp(&bytes, record0 + 2, &(1u32 << 26).to_le_bytes());
+    patched = patch_and_restamp(&patched, in_h_at, &(1u32 << 19).to_le_bytes());
+    patched = patch_and_restamp(&patched, in_w_at, &(1u32 << 19).to_le_bytes());
+    patched = patch_and_restamp(&patched, in_c_at, &(1u32 << 26).to_le_bytes());
+    patched = patch_and_restamp(&patched, kernel_at, &[1u8]);
+    patched = patch_and_restamp(&patched, pad_at, &[0u8]);
+    match decode_model(&patched, &opts()) {
+        Err(StoreError::Corrupt { detail }) => {
+            assert!(
+                detail.contains("layer 0") && detail.contains("exceeds"),
+                "{detail}"
+            );
+        }
+        other => panic!("volume overflow: expected Corrupt, got {other:?}"),
+    }
+    // Pool geometry: corrupt the kernel of the pool record (layer 1).
+    // Its record starts after layer 0's record.
+    let model = conv_model(2);
+    let layer0 = &model.layers[0];
+    let layer0_bytes =
+        dense_record_bytes(layer0.nnz() as u64, layer0.bias.len() as u64, true) as usize;
+    let pool_geom = record0 + layer0_bytes + RECORD_FIXED_BYTES as usize;
+    let bad = patch_and_restamp(&bytes, pool_geom + 12, &[0u8]);
+    match decode_model(&bad, &opts()) {
+        Err(StoreError::Corrupt { detail }) => {
+            assert!(detail.contains("layer 1"), "{detail}");
+        }
+        other => panic!("pool kernel zero: expected Corrupt, got {other:?}"),
+    }
+    // The untouched artifact still loads.
+    decode_model(&bytes, &opts()).expect("clean conv artifact loads");
+}
+
+#[test]
+fn vgg16_whole_network_artifact_overhead_is_constant_per_layer() {
+    // The conv-capable artifact-size pin at the paper's FULL dims (pure
+    // arithmetic — no 68 MB encode in the test suite): the whole modified
+    // VGG-16 — 13 dense convs, 4 pools, 3 PRS FCs at 90% sparsity —
+    // stores its ~17M values with under 1 KiB of total index/geometry/
+    // framing overhead.  CSC-style positions for the same network would
+    // cost ~65 MB.
+    let net = vgg16_modified();
+    let sp = 0.9;
+    let value_bytes = net.value_bytes(sp, Precision::F32);
+    assert!(value_bytes > 60_000_000, "whole network is ~68 MB of values: {value_bytes}");
+    let artifact_bytes: u64 = file_overhead_bytes()
+        + net
+            .conv_layers
+            .iter()
+            .map(|d| dense_record_bytes(d.size() as u64, 0, true))
+            .sum::<u64>()
+        + 4 * pool_record_bytes()
+        + net
+            .layers
+            .iter()
+            .map(|d| {
+                let kept = (d.size() - prune_target(d.rows, d.cols, sp)) as u64;
+                prs_record_bytes(kept, 0)
+            })
+            .sum::<u64>();
+    let overhead = artifact_bytes - value_bytes;
+    let expected = file_overhead_bytes()
+        + 13 * (RECORD_FIXED_BYTES + CONV_GEOM_BYTES)
+        + 4 * (RECORD_FIXED_BYTES + POOL_GEOM_BYTES)
+        + 3 * (RECORD_FIXED_BYTES + PRS_EXTRA_BYTES);
+    assert_eq!(overhead, expected);
+    assert!(overhead < 1024, "whole-network overhead {overhead}");
+    assert!((overhead as f64) < 1e-4 * value_bytes as f64);
 }
 
 #[test]
