@@ -1,19 +1,28 @@
-//! f32 vs i8 precision tiers: throughput and artifact bytes.
+//! The precision-tier frontier: bytes vs accuracy vs throughput for
+//! every value plane — f32, i8, packed i4, and ternary.
 //!
 //! Two throughput levels, both on the demo LeNet-300-100 @ 90% PRS
-//! sparsity, f32 plane against its i8-quantized twin:
+//! sparsity, the f32 plane against each of its quantized twins:
 //!
 //! * **kernel** — one 784×300 layer, single thread, the blocked
 //!   `transpose_panels` + `gemm_panel_into` path, across batch sizes
 //!   {1, 8, 32, 128}.  Same index side, same op order — the delta is
-//!   the value-plane read (4 B f32 load vs 1 B code + one dequantize
-//!   per kept entry).
+//!   the value-plane read (4 B f32 load; 1 B code + dequantize; nibble
+//!   decode + dequantize; 2-bit decode feeding the multiply-free
+//!   add/sub loop).
 //! * **model** — full 3-layer `InferenceSession::infer_batch_into`, at
 //!   worker counts {1, multi}.
 //!
-//! Plus the storage side: `encode_with_report` for both tiers — values,
-//! scales, seeds, and total `.lfsrpack` bytes, with the values ratio
-//! (~4×, scales are the only thing keeping it under exactly 4×).
+//! Plus the other two frontier axes:
+//!
+//! * **bytes** — `encode_with_report` per tier: values, scales, seeds,
+//!   total `.lfsrpack` bytes, and the values-side reduction vs f32
+//!   (~4× / ~8× / ~16×; the per-column scale vectors are the only
+//!   thing keeping each under its exact power of two).
+//! * **accuracy** — max |Δlogit| and top-1 agreement vs the f32 logits
+//!   on the same batch-256 Pcg32(123) uniform inputs the quant parity
+//!   tests pin (`rust/tests/quant_parity.rs`,
+//!   `python/tests/test_quant_pins.py`).
 //!
 //! Results land in `BENCH_quant.json` (repo root or `$BENCH_OUT_DIR`);
 //! CI uploads it with the other bench artifacts.  `BENCH_SMOKE=1`
@@ -22,13 +31,21 @@
 use std::fmt::Write as _;
 
 use lfsr_prune::data::rng::Pcg32;
-use lfsr_prune::serve::{synthetic_lenet300, InferenceSession};
+use lfsr_prune::serve::{argmax_total, synthetic_lenet300, InferenceSession};
 use lfsr_prune::sparse::Precision;
 use lfsr_prune::store::encode_with_report;
 use lfsr_prune::util::bench::{bench_out_path, black_box, Bench, Stats};
 
 const SPARSITY: f64 = 0.9;
 const BATCHES: [usize; 4] = [1, 8, 32, 128];
+
+/// Every tier in frontier order, coarsest last.
+const TIERS: [(&str, Precision); 4] = [
+    ("f32", Precision::F32),
+    ("i8", Precision::I8),
+    ("i4", Precision::I4),
+    ("ternary", Precision::Ternary),
+];
 
 struct Row {
     name: String,
@@ -72,9 +89,8 @@ fn main() {
         let m = synthetic_lenet300(SPARSITY, 1, 2);
         lfsr_prune::serve::CompiledModel::new(vec![m.layers[0].clone()])
     };
-    let i8_layer = f32_layer.to_precision(Precision::I8);
-    for (tier, model) in [("f32", &f32_layer), ("i8", &i8_layer)] {
-        let session = InferenceSession::new(model.clone(), 1);
+    for (tier, precision) in TIERS {
+        let session = InferenceSession::new(f32_layer.to_precision(precision), 1);
         for &batch in &BATCHES {
             let x: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32()).collect();
             let mut out = Vec::new();
@@ -98,9 +114,8 @@ fn main() {
     for &workers in &[1usize, multi] {
         let shards = 4 * workers;
         let f32_model = synthetic_lenet300(SPARSITY, shards, 2);
-        let i8_model = f32_model.to_precision(Precision::I8);
-        for (tier, model) in [("f32", &f32_model), ("i8", &i8_model)] {
-            let session = InferenceSession::new(model.clone(), workers);
+        for (tier, precision) in TIERS {
+            let session = InferenceSession::new(f32_model.to_precision(precision), workers);
             for &batch in &BATCHES {
                 let x: Vec<f32> = (0..batch * 784).map(|_| rng.next_f32()).collect();
                 let mut out = Vec::new();
@@ -122,42 +137,88 @@ fn main() {
         }
     }
 
-    // --- artifact bytes ---------------------------------------------------
-    let f32_model = synthetic_lenet300(SPARSITY, 2, 1);
-    let i8_model = f32_model.to_precision(Precision::I8);
-    let (f32_bytes, f32_report) = encode_with_report(&f32_model, 1).expect("f32 encode");
-    let (i8_bytes, i8_report) = encode_with_report(&i8_model, 1).expect("i8 encode");
-    let values_ratio = f32_report.value_bytes as f64
-        / (i8_report.value_bytes + i8_report.scale_bytes) as f64;
-    println!(
-        "bench artifact bytes: f32 {} B ({} B values) vs i8 {} B ({} B values + {} B scales) \
-         -> values cut {values_ratio:.2}x, index state unchanged ({} B seeds)",
-        f32_bytes.len(),
-        f32_report.value_bytes,
-        i8_bytes.len(),
-        i8_report.value_bytes,
-        i8_report.scale_bytes,
-        i8_report.seed_bytes,
-    );
-    assert_eq!(f32_report.seed_bytes, i8_report.seed_bytes, "index state is tier-independent");
-    assert!(values_ratio > 3.0, "values reduction {values_ratio:.2}x should approach 4x");
-
-    // i8-vs-f32 throughput per (level, batch, workers): the f32 rows of a
-    // block precede its i8 rows in lockstep order, so pair by offset.
-    let mut ratios = Vec::new();
-    let mut by_key: std::collections::BTreeMap<(String, usize, usize), [Option<f64>; 2]> =
-        std::collections::BTreeMap::new();
-    for r in &rows {
-        let slot = usize::from(r.tier == "i8");
-        by_key
-            .entry((r.level.to_string(), r.batch, r.workers))
-            .or_default()[slot] = Some(r.throughput());
+    // --- frontier axis 1: artifact bytes per tier -------------------------
+    let base_model = synthetic_lenet300(SPARSITY, 2, 1);
+    // (tier, total, values, scales, seeds, values_reduction vs f32)
+    let mut artifact: Vec<(&str, usize, u64, u64, u64, f64)> = Vec::new();
+    let mut f32_value_bytes = 0u64;
+    for (tier, precision) in TIERS {
+        let m = base_model.to_precision(precision);
+        let (bytes, report) = encode_with_report(&m, 1).expect("encode");
+        if precision == Precision::F32 {
+            f32_value_bytes = report.value_bytes;
+        }
+        let ratio = f32_value_bytes as f64 / (report.value_bytes + report.scale_bytes) as f64;
+        println!(
+            "bench artifact bytes: {tier} {} B total ({} B values + {} B scales, {} B seeds) \
+             -> values cut {ratio:.2}x",
+            bytes.len(),
+            report.value_bytes,
+            report.scale_bytes,
+            report.seed_bytes,
+        );
+        if !artifact.is_empty() {
+            assert_eq!(
+                artifact[0].4, report.seed_bytes,
+                "index state is tier-independent"
+            );
+        }
+        artifact.push((tier, bytes.len(), report.value_bytes, report.scale_bytes,
+            report.seed_bytes, ratio));
     }
-    for ((level, batch, workers), [f, q]) in &by_key {
-        let (f, q) = (f.expect("f32 row"), q.expect("i8 row"));
-        let ratio = q / f;
-        println!("bench ratio {level}_b{batch}_w{workers} i8/f32 = {ratio:.2}x");
-        ratios.push((level.clone(), *batch, *workers, ratio));
+    // The frontier pins: each quantized tier's value+scale bytes approach
+    // its code-width power of two (scale vectors are the only overhead).
+    let ratio_of = |t: &str| artifact.iter().find(|a| a.0 == t).expect("tier row").5;
+    assert!(ratio_of("i8") > 3.0, "i8 values reduction should approach 4x");
+    assert!(ratio_of("i4") > 6.0, "i4 values reduction should approach 8x");
+    assert!(ratio_of("ternary") > 10.0, "ternary values reduction should approach 16x");
+    assert!(ratio_of("i8") < 4.0 && ratio_of("i4") < 8.0 && ratio_of("ternary") < 16.0);
+
+    // --- frontier axis 2: accuracy vs f32 ---------------------------------
+    // Same inputs the parity tests pin: batch-256 Pcg32(123) uniforms.
+    let acc_batch = 256usize;
+    let mut acc_rng = Pcg32::new(123);
+    let x: Vec<f32> = (0..acc_batch * 784).map(|_| acc_rng.next_f32()).collect();
+    let f32_logits =
+        InferenceSession::new(base_model.clone(), 1).infer_batch(&x, acc_batch);
+    // (tier, max |Δlogit|, top-1 agreement count)
+    let mut accuracy: Vec<(&str, f32, usize)> = Vec::new();
+    for (tier, precision) in TIERS {
+        let lq = InferenceSession::new(base_model.to_precision(precision), 1)
+            .infer_batch(&x, acc_batch);
+        let mut max_diff = 0.0f32;
+        for (&a, &b) in f32_logits.iter().zip(&lq) {
+            max_diff = max_diff.max((a - b).abs());
+        }
+        let agree = (0..acc_batch)
+            .filter(|&b| {
+                argmax_total(&f32_logits[b * 10..(b + 1) * 10])
+                    == argmax_total(&lq[b * 10..(b + 1) * 10])
+            })
+            .count();
+        println!(
+            "bench accuracy: {tier} max |Δlogit| {max_diff:.6} top-1 {agree}/{acc_batch}"
+        );
+        accuracy.push((tier, max_diff, agree));
+    }
+
+    // --- frontier axis 3: per-tier throughput vs f32 ----------------------
+    // The f32 rows of each (level, batch, workers) block precede their
+    // quantized rows in lockstep order, so key by block and divide.
+    let mut ratios: Vec<(&str, String, usize, usize, f64)> = Vec::new();
+    let mut f32_by_key: std::collections::BTreeMap<(String, usize, usize), f64> =
+        std::collections::BTreeMap::new();
+    for r in rows.iter().filter(|r| r.tier == "f32") {
+        f32_by_key.insert((r.level.to_string(), r.batch, r.workers), r.throughput());
+    }
+    for r in rows.iter().filter(|r| r.tier != "f32") {
+        let f = f32_by_key[&(r.level.to_string(), r.batch, r.workers)];
+        let ratio = r.throughput() / f;
+        println!(
+            "bench ratio {}_b{}_w{} {}/f32 = {ratio:.2}x",
+            r.level, r.batch, r.workers, r.tier
+        );
+        ratios.push((r.tier, r.level.to_string(), r.batch, r.workers, ratio));
     }
 
     // --- BENCH_quant.json -------------------------------------------------
@@ -171,23 +232,25 @@ fn main() {
     let _ = writeln!(json, "  \"hw_threads\": {hw_threads},");
     let _ = writeln!(json, "  \"smoke\": {},", smoke());
     let _ = writeln!(json, "  \"artifact_bytes\": {{");
-    let _ = writeln!(
-        json,
-        "    \"f32\": {{\"total\": {}, \"values\": {}, \"scales\": 0, \"seeds\": {}}},",
-        f32_bytes.len(),
-        f32_report.value_bytes,
-        f32_report.seed_bytes
-    );
-    let _ = writeln!(
-        json,
-        "    \"i8\": {{\"total\": {}, \"values\": {}, \"scales\": {}, \"seeds\": {}}},",
-        i8_bytes.len(),
-        i8_report.value_bytes,
-        i8_report.scale_bytes,
-        i8_report.seed_bytes
-    );
-    let _ = writeln!(json, "    \"values_reduction\": {values_ratio:.3}");
+    for (tier, total, values, scales, seeds, ratio) in &artifact {
+        let _ = writeln!(
+            json,
+            "    \"{tier}\": {{\"total\": {total}, \"values\": {values}, \"scales\": {scales}, \
+             \"seeds\": {seeds}, \"values_reduction\": {ratio:.3}}}{}",
+            if *tier == "ternary" { "" } else { "," }
+        );
+    }
     let _ = writeln!(json, "  }},");
+    let _ = writeln!(json, "  \"accuracy\": [");
+    for (i, (tier, max_diff, agree)) in accuracy.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"tier\": \"{tier}\", \"max_abs_dlogit\": {max_diff:.6}, \
+             \"top1_agree\": {agree}, \"batch\": {acc_batch}}}{}",
+            if i + 1 == accuracy.len() { "" } else { "," }
+        );
+    }
+    let _ = writeln!(json, "  ],");
     let _ = writeln!(json, "  \"results\": [");
     for (i, r) in rows.iter().enumerate() {
         let _ = writeln!(
@@ -206,11 +269,11 @@ fn main() {
         );
     }
     let _ = writeln!(json, "  ],");
-    let _ = writeln!(json, "  \"throughput_i8_vs_f32\": [");
-    for (i, (level, batch, workers, ratio)) in ratios.iter().enumerate() {
+    let _ = writeln!(json, "  \"throughput_vs_f32\": [");
+    for (i, (tier, level, batch, workers, ratio)) in ratios.iter().enumerate() {
         let _ = writeln!(
             json,
-            "    {{\"level\": \"{level}\", \"batch\": {batch}, \"workers\": {workers}, \"ratio\": {ratio:.3}}}{}",
+            "    {{\"tier\": \"{tier}\", \"level\": \"{level}\", \"batch\": {batch}, \"workers\": {workers}, \"ratio\": {ratio:.3}}}{}",
             if i + 1 == ratios.len() { "" } else { "," }
         );
     }
@@ -224,4 +287,6 @@ fn main() {
     let parsed = lfsr_prune::util::json::parse(&json).expect("valid json");
     assert!(parsed.get("results").is_some());
     assert!(parsed.get("artifact_bytes").is_some());
+    assert!(parsed.get("accuracy").is_some());
+    assert!(parsed.get("throughput_vs_f32").is_some());
 }

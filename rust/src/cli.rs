@@ -90,24 +90,26 @@ USAGE:
   repro export [--out PATH] [--model lenet300|vgg16] [--sparsity S]
                [--shards N] [--lanes N] [--seed-base B]
                [--input-hw H] [--ch-div D]
-               [--precision f32|i8] [--verify]
+               [--precision f32|i8|i4|ternary] [--verify]
   repro serve-artifact PATH [PATH..] [--requests N] [--workers N]
                [--batch B] [--deadline-ms D] [--shards N] [--lanes N]
-               [--precision keep|f32|i8[,..]] [--verify]
+               [--precision keep|f32|i8|i4|ternary[,..]] [--verify]
 
 `export` writes a demo model as a `.lfsrpack` artifact: the LFSR-pruned
 LeNet-300-100 (default), or `--model vgg16` — the paper's modified
 VGG-16 with its 13 dense 3x3 conv layers, 4 max-pools, and PRS-pruned
-8192-2048-2048-1000 classifier (format v3 conv records; `--input-hw` /
+8192-2048-2048-1000 classifier (format v4 records; `--input-hw` /
 `--ch-div` scale it down for smoke runs).  Per layer the file stores
 packed kept values + two LFSR seeds (PRS) or values only (dense) — no
-per-weight index storage either way; `--precision i8` quantizes the
-kept values to per-column symmetric i8 first (~4x smaller value
-payload).  `serve-artifact` loads one or more artifacts (conv or FC)
-into a shared worker-pool registry and serves synthetic traffic across
-them; `--precision` picks each tenant's serving tier (`keep` = as
-stored; one value for all paths, or a comma list with one tier per
-path — mixed f32/i8 tenants share the one pool).
+per-weight index storage either way; `--precision` quantizes the kept
+values first: `i8` per-column symmetric codes (~4x smaller value
+payload), `i4` packed two-per-byte codes (~8x), `ternary` packed
+{-1,0,+1} codes, four per byte (~16x, multiply-free inner loop).
+`serve-artifact` loads one or more artifacts (conv or FC) into a
+shared worker-pool registry and serves synthetic traffic across them;
+`--precision` picks each tenant's serving tier (`keep` = as stored;
+one value for all paths, or a comma list with one tier per path —
+mixed-tier tenants share the one pool).
 
 Artifacts default to ./artifacts (or $LFSR_PRUNE_ARTIFACTS); build them
 with `make artifacts` first.";
@@ -277,7 +279,9 @@ fn parse_precision(s: &str) -> Result<Option<Precision>> {
         "keep" => Ok(None),
         "f32" => Ok(Some(Precision::F32)),
         "i8" => Ok(Some(Precision::I8)),
-        other => bail!("unknown precision {other:?} (expected keep, f32, or i8)"),
+        "i4" => Ok(Some(Precision::I4)),
+        "ternary" => Ok(Some(Precision::Ternary)),
+        other => bail!("unknown precision {other:?} (expected keep, f32, i8, i4, or ternary)"),
     }
 }
 
@@ -304,7 +308,10 @@ fn cmd_export(args: &Args) -> Result<()> {
     let seed_base: u32 = args.get("seed-base", 11u32)?;
     let precision = match parse_precision(args.flag("precision").unwrap_or("f32"))? {
         Some(p) => p,
-        None => bail!("export --precision must be f32 or i8 (there is no stored tier to keep)"),
+        None => bail!(
+            "export --precision must be f32, i8, i4, or ternary (there is no stored tier \
+             to keep)"
+        ),
     };
     let input_hw: usize = args.get("input-hw", 64usize)?;
     let ch_div: usize = args.get("ch-div", 1usize)?;
@@ -321,7 +328,7 @@ fn cmd_export(args: &Args) -> Result<()> {
         };
         Ok(match precision {
             Precision::F32 => m,
-            Precision::I8 => m.to_precision(Precision::I8),
+            tier => m.to_precision(tier),
         })
     });
     let model = model?;
@@ -491,7 +498,14 @@ mod tests {
         assert_eq!(parse_precision("keep").unwrap(), None);
         assert_eq!(parse_precision("f32").unwrap(), Some(Precision::F32));
         assert_eq!(parse_precision("i8").unwrap(), Some(Precision::I8));
+        assert_eq!(parse_precision("i4").unwrap(), Some(Precision::I4));
+        assert_eq!(parse_precision("ternary").unwrap(), Some(Precision::Ternary));
         assert!(parse_precision("fp16").is_err());
+        let a = Args::parse(&argv("serve-artifact a b --precision i4,ternary")).unwrap();
+        assert_eq!(
+            tenant_precisions(&a, 2).unwrap(),
+            vec![Some(Precision::I4), Some(Precision::Ternary)]
+        );
         // One tier fans out to every path; a list must match the count.
         let a = Args::parse(&argv("serve-artifact a b c --precision i8")).unwrap();
         assert_eq!(tenant_precisions(&a, 3).unwrap(), vec![Some(Precision::I8); 3]);

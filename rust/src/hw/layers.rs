@@ -88,10 +88,12 @@ impl Network {
     }
 
     /// [`fc_param_bytes`](Network::fc_param_bytes) generalized over the
-    /// serving precision tier: the i8 tier stores 1 B per kept value plus
-    /// a 4 B per-column dequantization scale
+    /// serving precision tier: the quantized tiers store 1 B (i8), a
+    /// nibble (i4), or 2 bits (ternary) per kept value plus a 4 B
+    /// per-column dequantization scale
     /// ([`crate::sparse::memory::artifact_value_bytes`] per layer) — a
-    /// ~4× cut of the value payload with the index state unchanged.
+    /// ~4× / ~8× / ~16× cut of the value payload with the index state
+    /// unchanged.
     pub fn fc_value_bytes(&self, sparsity: f64, precision: crate::sparse::Precision) -> u64 {
         self.layers
             .iter()

@@ -386,9 +386,10 @@ impl CompiledLayer {
 
     /// This layer at a value-plane tier: every shard's kept values are
     /// converted ([`PackedColumns::to_precision`] — per-column symmetric
-    /// i8 quantization, or dequantization back to f32); positions, bias,
-    /// mask kind, and sharding are untouched.  Because the per-column
-    /// scale depends only on that column's kept values, the result is
+    /// i8/i4 quantization, TWN-style ternary thresholding, or
+    /// dequantization back to f32); positions, bias, mask kind, and
+    /// sharding are untouched.  Because every tier's per-column stats
+    /// depend only on that column's kept values, the result is
     /// identical for any shard count (quantize-then-shard ≡
     /// shard-then-quantize).
     pub fn to_precision(&self, precision: Precision) -> CompiledLayer {
@@ -719,18 +720,21 @@ mod tests {
     #[test]
     fn to_precision_preserves_structure_and_is_shard_invariant() {
         let model = synthetic_lenet300(0.9, 3, 1);
-        let q = model.to_precision(Precision::I8);
-        assert_eq!(q.nnz(), model.nnz());
-        assert_eq!(q.uniform_precision(), Some(Precision::I8));
-        assert_eq!(model.uniform_precision(), Some(Precision::F32));
-        for (a, b) in q.layers.iter().zip(&model.layers) {
-            assert_eq!(a.kind, b.kind);
-            assert_eq!(a.bias, b.bias, "bias stays f32");
-            assert_eq!(a.precision, Precision::I8);
-            for s in &a.shards {
-                assert_eq!(s.precision(), Precision::I8);
+        for tier in [Precision::I8, Precision::I4, Precision::Ternary] {
+            let q = model.to_precision(tier);
+            assert_eq!(q.nnz(), model.nnz());
+            assert_eq!(q.uniform_precision(), Some(tier));
+            for (a, b) in q.layers.iter().zip(&model.layers) {
+                assert_eq!(a.kind, b.kind);
+                assert_eq!(a.bias, b.bias, "bias stays f32");
+                assert_eq!(a.precision, tier);
+                for s in &a.shards {
+                    assert_eq!(s.precision(), tier);
+                }
             }
         }
+        let q = model.to_precision(Precision::I8);
+        assert_eq!(model.uniform_precision(), Some(Precision::F32));
         // Mixed-tier models report no uniform precision.
         let mut mixed = model.clone();
         mixed.layers[1] = mixed.layers[1].to_precision(Precision::I8);

@@ -44,11 +44,13 @@
 //! ([`Precision`](crate::sparse::Precision)): compilation produces f32
 //! value planes, and [`CompiledLayer::to_precision`] /
 //! [`CompiledModel::to_precision`] quantize the *kept* values to
-//! symmetric per-column i8 (+ one f32 scale per column) — ~4× smaller
-//! value memory, same packed index side, same zero-allocation serving
-//! path, and the same bitwise determinism across worker/shard/batch
-//! composition (the kernels dispatch on the plane outside their inner
-//! loops; `rust/tests/quant_parity.rs` pins the i8 tier against the
+//! symmetric per-column i8 or packed i4 (+ one f32 scale per column)
+//! or TWN-style ternary codes — ~4× / ~8× / ~16× smaller value
+//! memory, same packed index side, same zero-allocation serving path,
+//! and the same bitwise determinism across worker/shard/batch
+//! composition (each kernel instantiates one generic value reader per
+//! shard call — dispatch never happens inside a loop;
+//! `rust/tests/quant_parity.rs` pins every quantized tier against the
 //! same matrix `kernel_parity.rs` pins for f32).
 //!
 //! Compiled models need not be rebuilt from seeds on every cold start:
@@ -58,7 +60,7 @@
 //! precision tag and scale vector so quantized models round-trip
 //! bitwise — and [`crate::store::ModelRegistry`] serves many loaded
 //! artifacts through one shared [`WorkerPool`] with per-model
-//! [`ServeStats`], f32 and i8 tenants side by side.
+//! [`ServeStats`], tenants of all four precision tiers side by side.
 
 pub mod batcher;
 pub mod compiled;

@@ -31,15 +31,16 @@
 //! `rust/tests/kernel_parity.rs` assert all three.
 //!
 //! Precision tiers are transparent here: the value-plane dispatch
-//! (`f32` vs per-column-quantized `i8` —
+//! (`f32` vs quantized `i8`/`i4`/`ternary` —
 //! [`Precision`](crate::sparse::Precision)) happens inside the kernel,
-//! once per shard call and outside every inner loop, so a quantized
-//! layer rides exactly the same arena/scoped-task/steady-state path —
-//! zero heap allocation after warm-up for both tiers
-//! (`rust/tests/alloc_steady_state.rs` counts both) and the same
-//! bitwise-determinism guarantees (`rust/tests/quant_parity.rs`).
-//! Mixed-tier models (and mixed f32/i8 tenants on one shared pool) need
-//! no special handling: each layer's shards carry their own plane.
+//! which instantiates one generic value reader per shard call and
+//! outside every inner loop, so a quantized layer rides exactly the
+//! same arena/scoped-task/steady-state path — zero heap allocation
+//! after warm-up at every tier (`rust/tests/alloc_steady_state.rs`
+//! counts them all) and the same bitwise-determinism guarantees
+//! (`rust/tests/quant_parity.rs`).  Mixed-tier models (and
+//! mixed-tier tenants on one shared pool) need no special handling:
+//! each layer's shards carry their own plane.
 
 use std::sync::{Arc, Mutex};
 
@@ -445,13 +446,13 @@ mod tests {
     }
 
     #[test]
-    fn conv_model_pooled_equals_inline_bitwise_both_tiers() {
+    fn conv_model_pooled_equals_inline_bitwise_every_tier() {
         use crate::sparse::Precision;
         let mut rng = Pcg32::new(41);
         let model = toy_conv_model(3);
         assert_eq!(model.in_dim(), 6 * 6 * 2);
         assert_eq!(model.out_dim(), 5);
-        for tier in [Precision::F32, Precision::I8] {
+        for tier in [Precision::F32, Precision::I8, Precision::I4, Precision::Ternary] {
             let m = model.to_precision(tier);
             let inline = InferenceSession::new(m.clone(), 1);
             let pooled = InferenceSession::new(m, 4);

@@ -1,13 +1,15 @@
 //! Sparse-matrix storage substrate: the baseline's CSC-with-relative-
 //! indices format (S/I/P vectors, α padding), the packed column-shard
 //! layout the serving engine executes — whose kept-value plane comes in
-//! [`Precision`] tiers (`f32`, or per-column-quantized `i8` + scales) —
-//! the [`im2col`] lowering that turns NHWC convolutions into that same
-//! packed GEMM (so conv layers inherit both kernels, both value planes,
-//! and the bitwise-determinism contract with zero new kernel code), and
-//! the memory-footprint models for both methods (paper Figure 5),
-//! including the quantized-values artifact accounting
-//! ([`memory::artifact_value_bytes`]).
+//! four [`Precision`] tiers (`f32`; per-column-quantized `i8` + scales;
+//! packed `i4`, two codes per byte; packed ternary {-1, 0, +1}, four
+//! 2-bit codes per byte — the `.lfsrpack` v4 record layout mirrors the
+//! in-memory planes byte for byte) — the [`im2col`] lowering that turns
+//! NHWC convolutions into that same packed GEMM (so conv layers inherit
+//! both kernels, all four value planes, and the bitwise-determinism
+//! contract with zero new kernel code), and the memory-footprint models
+//! for both methods (paper Figure 5), including the quantized-values
+//! artifact accounting ([`memory::artifact_value_bytes`]).
 
 pub mod csc;
 pub mod im2col;
@@ -21,4 +23,7 @@ pub use memory::{
     proposed_footprint_analytic, proposed_footprint_stream, proposed_footprint_tier,
     BaselineFootprint, ProposedFootprint,
 };
-pub use packed::{transpose_panels, PackedColumns, Precision, ValuePlane, BATCH_LANES};
+pub use packed::{
+    i4_code, i4_packed_len, pack_i4, pack_ternary, ternary_code, ternary_packed_len,
+    transpose_panels, PackedColumns, Precision, ValuePlane, BATCH_LANES,
+};

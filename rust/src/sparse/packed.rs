@@ -33,21 +33,55 @@
 //! * [`Precision::I8`] — one `i8` code per kept entry plus one `f32`
 //!   scale per *column* (symmetric per-column quantization:
 //!   `scale = max|v| / 127` over that column's kept values, codes
-//!   `round(v / scale)` in `-127..=127`).  Values memory shrinks ~4×;
-//!   stacked on the paper's no-index-memory claim the whole layer
-//!   becomes `nnz` bytes + two LFSR seeds.
+//!   `round(v / scale)` in `-127..=127`).  Values memory shrinks ~4×.
+//! * [`Precision::I4`] — two 4-bit codes per byte (low nibble first,
+//!   nibble `e` of the shard's entry stream is entry `e`'s code), same
+//!   symmetric per-column scale recipe over 7 levels
+//!   (`scale = max|v| / 7`, codes in `-7..=7`; nibble `-8` unused).
+//!   ~8× smaller values than f32.
+//! * [`Precision::Ternary`] — codes in `{-1, 0, +1}` packed four per
+//!   byte as 2-bit two's-complement fields (low pair first), quantized
+//!   TWN-style per column: threshold `Δ = 0.7 · mean|v|`, code
+//!   `sign(v)` where `|v| > Δ` else `0`, and
+//!   `scale = mean(|v| : |v| > Δ)`.  ~16× smaller values than f32, and
+//!   a *multiply-free inner loop*: the kernel adds or subtracts
+//!   activations per entry and multiplies by the column scale **once**,
+//!   after the accumulation.
 //!
-//! Both kernels dispatch on the plane **outside** their inner loops and
-//! share one op-order contract: per (example, column) the i8 path
-//! dequantizes each kept entry exactly once (`q as f32 * scale`, a fixed
-//! two-op f32 sequence) and then accumulates in f32 in stored-entry
-//! order, identically in the scalar and blocked kernels.  Results are
-//! therefore **bitwise deterministic** across worker count, shard count,
-//! and batch composition for the i8 tier exactly as for f32 —
+//! Stacked on the paper's no-index-memory claim, a PRS layer at the
+//! ternary tier is 2 bits per kept value + two LFSR seeds.
+//!
+//! # The generic value reader
+//!
+//! Both kernels dispatch on the plane **once per shard call** through
+//! the sealed `ValueRead` trait and stay tier-generic inside: a reader
+//! hoists its per-column state (the dequantization scale) via
+//! `ValueRead::col` *before* the entry loop, folds one stored entry
+//! into the accumulator(s) via `accum`/`accum_lanes`, and maps the
+//! accumulated sum to the column's pre-bias output via `finish`
+//! (identity everywhere except ternary, whose one multiply per column
+//! lives there).  The op-order contract per (example, column) is
+//! therefore fixed per tier and *identical between the scalar and
+//! blocked kernels*:
+//!
+//! * f32 — `acc += x · v` over stored entries;
+//! * i8/i4 — `acc += x · (q as f32 · scale)`, the code dequantized
+//!   exactly once per entry with the hoisted column scale;
+//! * ternary — `acc += x` / `acc -= x` per nonzero code (zero codes are
+//!   skipped, never added as `0.0`), then `acc · scale` once.
+//!
+//! Results are **bitwise deterministic** across worker count, shard
+//! count, and batch composition for every tier —
 //! `rust/tests/quant_parity.rs` pins the same matrix
 //! `tests/kernel_parity.rs` pins for f32.  Quantization itself is
-//! per-column, so it commutes with column sharding (quantize-then-shard
-//! ≡ shard-then-quantize, also pinned).
+//! per-column (scales and ternary thresholds depend only on a column's
+//! own kept values, folded in stored order), so it commutes with column
+//! sharding (quantize-then-shard ≡ shard-then-quantize, also pinned).
+//! Note one tier-specific caveat: ternary's factored op order means a
+//! ternary shard dequantized to f32 (`to_precision(F32)` materializes
+//! `code · scale` per entry) is numerically close but **not** bitwise
+//! identical to serving the ternary plane directly — unlike i8/i4,
+//! whose dequantized twins are exact.
 //!
 //! # Batch-major blocked kernel
 //!
@@ -87,6 +121,15 @@ pub const BATCH_LANES: usize = 8;
 /// magnitude).
 pub const I8_LEVELS: f32 = 127.0;
 
+/// Levels on each side of zero in the symmetric i4 quantizer (nibble
+/// -8 is unused, mirroring the i8 tier's symmetric code book).
+pub const I4_LEVELS: f32 = 7.0;
+
+/// Ternary (TWN-style) threshold factor: a kept value quantizes to
+/// `sign(v)` when `|v| > TERNARY_THRESHOLD * mean|v|` over its column's
+/// kept values, to `0` otherwise.
+pub const TERNARY_THRESHOLD: f32 = 0.7;
+
 /// Precision tier of a kept-value plane — what one stored entry costs
 /// and how the kernels read it back.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -96,16 +139,32 @@ pub enum Precision {
     /// One `i8` code per kept value + one `f32` scale per column
     /// (symmetric per-column quantization).
     I8,
+    /// One 4-bit code per kept value, two per byte (low nibble first),
+    /// + one `f32` scale per column (symmetric per-column quantization
+    /// over 7 levels).
+    I4,
+    /// One 2-bit `{-1, 0, +1}` code per kept value, four per byte (low
+    /// pair first), + one `f32` scale per column (TWN-style threshold
+    /// quantization) — the kernel's inner loop is multiply-free.
+    Ternary,
 }
 
 impl Precision {
-    /// Bytes one kept value occupies (excluding the I8 tier's per-column
-    /// scale — see [`super::memory::artifact_value_bytes`] for whole-layer
-    /// accounting).
-    pub const fn value_bytes(self) -> u64 {
+    /// Every tier, in Display order — the sweep axis of tier-parametric
+    /// tests and benches.
+    pub const ALL: [Precision; 4] =
+        [Precision::F32, Precision::I8, Precision::I4, Precision::Ternary];
+
+    /// Bits one kept value's code occupies (excluding the quantized
+    /// tiers' per-column scale — see
+    /// [`super::memory::artifact_value_bytes`] for whole-layer
+    /// accounting, byte-rounding included).
+    pub const fn value_bits(self) -> u64 {
         match self {
-            Precision::F32 => 4,
-            Precision::I8 => 1,
+            Precision::F32 => 32,
+            Precision::I8 => 8,
+            Precision::I4 => 4,
+            Precision::Ternary => 2,
         }
     }
 }
@@ -115,6 +174,8 @@ impl std::fmt::Display for Precision {
         f.write_str(match self {
             Precision::F32 => "f32",
             Precision::I8 => "i8",
+            Precision::I4 => "i4",
+            Precision::Ternary => "ternary",
         })
     }
 }
@@ -130,17 +191,113 @@ pub enum ValuePlane {
     /// `q[e] as f32 * scales[c]`; `scales` has one entry per local
     /// column (zero for an empty or all-zero column).
     I8 { q: Vec<i8>, scales: Vec<f32> },
+    /// Entry `e` of local column `c` carries weight
+    /// `i4_code(packed, e) as f32 * scales[c]` — two sign-extended
+    /// 4-bit codes per byte, low nibble first.
+    I4 { packed: Vec<u8>, scales: Vec<f32> },
+    /// Entry `e` of local column `c` carries weight
+    /// `ternary_code(packed, e) as f32 * scales[c]` — four 2-bit
+    /// two's-complement `{-1, 0, +1}` codes per byte, low pair first.
+    /// The kernels never form that product per entry: they add/subtract
+    /// activations and multiply by `scales[c]` once per column.
+    Ternary { packed: Vec<u8>, scales: Vec<f32> },
+}
+
+/// Bytes the packed i4 plane needs for `n` codes (two per byte; a
+/// trailing odd nibble pads its high half with zero).
+pub const fn i4_packed_len(n: usize) -> usize {
+    (n + 1) / 2
+}
+
+/// Bytes the packed ternary plane needs for `n` codes (four per byte;
+/// trailing pad fields are zero).
+pub const fn ternary_packed_len(n: usize) -> usize {
+    (n + 3) / 4
+}
+
+/// Sign-extended 4-bit code of entry `e` (low nibble first).
+#[inline(always)]
+pub fn i4_code(packed: &[u8], e: usize) -> i8 {
+    let nib = (packed[e >> 1] >> ((e & 1) * 4)) & 0x0F;
+    ((nib << 4) as i8) >> 4
+}
+
+/// Sign-extended 2-bit code of entry `e` (low pair first).
+#[inline(always)]
+pub fn ternary_code(packed: &[u8], e: usize) -> i8 {
+    let two = (packed[e >> 2] >> ((e & 3) * 2)) & 0b11;
+    ((two << 6) as i8) >> 6
+}
+
+/// Pack sign-extended codes in `-7..=7` into nibbles, low nibble first.
+pub fn pack_i4(codes: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; i4_packed_len(codes.len())];
+    for (e, &c) in codes.iter().enumerate() {
+        debug_assert!((-7..=7).contains(&c));
+        out[e >> 1] |= ((c as u8) & 0x0F) << ((e & 1) * 4);
+    }
+    out
+}
+
+/// Pack sign-extended codes in `{-1, 0, +1}` into 2-bit fields, low
+/// pair first.
+pub fn pack_ternary(codes: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; ternary_packed_len(codes.len())];
+    for (e, &c) in codes.iter().enumerate() {
+        debug_assert!((-1..=1).contains(&c));
+        out[e >> 2] |= ((c as u8) & 0b11) << ((e & 3) * 2);
+    }
+    out
 }
 
 /// Symmetric per-column scale over a column's kept values:
-/// `max|v| / 127`, `0.0` when the column is empty or all-zero.
-fn column_scale(vals: &[f32]) -> f32 {
-    vals.iter().fold(0.0f32, |m, v| m.max(v.abs())) / I8_LEVELS
+/// `max|v| / levels`, `0.0` when the column is empty or all-zero.
+fn column_scale(vals: &[f32], levels: f32) -> f32 {
+    vals.iter().fold(0.0f32, |m, v| m.max(v.abs())) / levels
 }
 
 /// Quantize one value against a (positive) column scale.
-fn quantize_value(v: f32, scale: f32) -> i8 {
-    (v / scale).round().clamp(-I8_LEVELS, I8_LEVELS) as i8
+fn quantize_value(v: f32, scale: f32, levels: f32) -> i8 {
+    (v / scale).round().clamp(-levels, levels) as i8
+}
+
+/// Wrap one-code-per-entry shard-local codes + local scales into the
+/// tier's in-memory plane (packing i4/ternary codes to their bit
+/// width).  `precision` must be a quantized tier.
+fn code_plane(codes: Vec<i8>, scales: Vec<f32>, precision: Precision) -> ValuePlane {
+    match precision {
+        Precision::I8 => ValuePlane::I8 { q: codes, scales },
+        Precision::I4 => ValuePlane::I4 { packed: pack_i4(&codes), scales },
+        Precision::Ternary => ValuePlane::Ternary { packed: pack_ternary(&codes), scales },
+        Precision::F32 => panic!("code_plane is for quantized tiers"),
+    }
+}
+
+/// TWN-style per-column ternary stats over a column's kept values in
+/// stored order: `(scale, threshold)` where
+/// `threshold = TERNARY_THRESHOLD * mean|v|` and `scale` is the mean
+/// magnitude of the values that pass it (`0.0` when none do — then
+/// every code is `0` and the column contributes nothing).  Both folds
+/// run over the stored order, which is shard-invariant within a
+/// column, so ternary quantization commutes with column sharding.
+fn ternary_column(vals: &[f32]) -> (f32, f32) {
+    if vals.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean_abs = vals.iter().fold(0.0f32, |s, v| s + v.abs()) / vals.len() as f32;
+    let thr = TERNARY_THRESHOLD * mean_abs;
+    let (mut sum, mut n) = (0.0f32, 0u32);
+    for v in vals {
+        if v.abs() > thr {
+            sum += v.abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        (0.0, thr)
+    } else {
+        (sum / n as f32, thr)
+    }
 }
 
 /// Transpose a row-major `[batch, rows]` activation block into
@@ -219,6 +376,177 @@ fn walk_pack<T: Copy + Default>(
         vals[slot] = values[i];
     }
     (col_ptr, row_idx, vals)
+}
+
+/// Sealed per-tier value reader both kernels instantiate **once per
+/// shard call** (the only `ValuePlane` match the kernels perform —
+/// dispatch never happens inside a loop).  A reader hoists its
+/// per-column state via [`col`](ValueRead::col) before the entry loop,
+/// folds one stored entry into the accumulator(s) via
+/// [`accum`](ValueRead::accum) (scalar kernel) or
+/// [`accum_lanes`](ValueRead::accum_lanes) (blocked kernel — the
+/// per-entry work, e.g. the i8/i4 dequantization, is materialized once
+/// and fed to all 8 lanes), and maps the accumulated sum to the
+/// column's pre-bias output via [`finish`](ValueRead::finish) —
+/// identity for the multiplier tiers, the single per-column
+/// `acc * scale` for ternary.  Scalar and blocked kernels perform the
+/// identical per-(example, column) f32 op sequence by construction.
+trait ValueRead {
+    /// Hoisted per-column state (the dequantization scale for the
+    /// quantized tiers).
+    type Col: Copy;
+
+    fn col(&self, local: usize) -> Self::Col;
+
+    /// Fold stored entry `e` (activation `x`) into a scalar accumulator.
+    fn accum(&self, col: Self::Col, acc: f32, x: f32, e: usize) -> f32;
+
+    /// Fold stored entry `e` (8 activation lanes at `slab[..8]`) into
+    /// the lane accumulators.
+    fn accum_lanes(&self, col: Self::Col, acc: &mut [f32; BATCH_LANES], slab: &[f32], e: usize);
+
+    /// Map a finished accumulation to the column's pre-bias output.
+    fn finish(&self, col: Self::Col, acc: f32) -> f32;
+}
+
+struct F32Read<'a>(&'a [f32]);
+
+impl ValueRead for F32Read<'_> {
+    type Col = ();
+
+    #[inline(always)]
+    fn col(&self, _local: usize) {}
+
+    #[inline(always)]
+    fn accum(&self, _col: (), acc: f32, x: f32, e: usize) -> f32 {
+        acc + x * self.0[e]
+    }
+
+    #[inline(always)]
+    fn accum_lanes(&self, _col: (), acc: &mut [f32; BATCH_LANES], slab: &[f32], e: usize) {
+        let v = self.0[e];
+        for l in 0..BATCH_LANES {
+            acc[l] += slab[l] * v;
+        }
+    }
+
+    #[inline(always)]
+    fn finish(&self, _col: (), acc: f32) -> f32 {
+        acc
+    }
+}
+
+struct I8Read<'a> {
+    q: &'a [i8],
+    scales: &'a [f32],
+}
+
+impl ValueRead for I8Read<'_> {
+    type Col = f32;
+
+    #[inline(always)]
+    fn col(&self, local: usize) -> f32 {
+        self.scales[local]
+    }
+
+    #[inline(always)]
+    fn accum(&self, scale: f32, acc: f32, x: f32, e: usize) -> f32 {
+        acc + x * (self.q[e] as f32 * scale)
+    }
+
+    #[inline(always)]
+    fn accum_lanes(&self, scale: f32, acc: &mut [f32; BATCH_LANES], slab: &[f32], e: usize) {
+        let v = self.q[e] as f32 * scale;
+        for l in 0..BATCH_LANES {
+            acc[l] += slab[l] * v;
+        }
+    }
+
+    #[inline(always)]
+    fn finish(&self, _scale: f32, acc: f32) -> f32 {
+        acc
+    }
+}
+
+struct I4Read<'a> {
+    packed: &'a [u8],
+    scales: &'a [f32],
+}
+
+impl ValueRead for I4Read<'_> {
+    type Col = f32;
+
+    #[inline(always)]
+    fn col(&self, local: usize) -> f32 {
+        self.scales[local]
+    }
+
+    #[inline(always)]
+    fn accum(&self, scale: f32, acc: f32, x: f32, e: usize) -> f32 {
+        acc + x * (i4_code(self.packed, e) as f32 * scale)
+    }
+
+    #[inline(always)]
+    fn accum_lanes(&self, scale: f32, acc: &mut [f32; BATCH_LANES], slab: &[f32], e: usize) {
+        let v = i4_code(self.packed, e) as f32 * scale;
+        for l in 0..BATCH_LANES {
+            acc[l] += slab[l] * v;
+        }
+    }
+
+    #[inline(always)]
+    fn finish(&self, _scale: f32, acc: f32) -> f32 {
+        acc
+    }
+}
+
+struct TernaryRead<'a> {
+    packed: &'a [u8],
+    scales: &'a [f32],
+}
+
+impl ValueRead for TernaryRead<'_> {
+    type Col = f32;
+
+    #[inline(always)]
+    fn col(&self, local: usize) -> f32 {
+        self.scales[local]
+    }
+
+    // The multiply-free inner loop: nonzero codes add or subtract the
+    // activation, zero codes are skipped entirely (adding 0.0 would
+    // flip a -0.0 accumulator to +0.0 and break scalar/blocked
+    // parity); `finish` applies the column scale once.
+    #[inline(always)]
+    fn accum(&self, _scale: f32, acc: f32, x: f32, e: usize) -> f32 {
+        match ternary_code(self.packed, e) {
+            1 => acc + x,
+            -1 => acc - x,
+            _ => acc,
+        }
+    }
+
+    #[inline(always)]
+    fn accum_lanes(&self, _scale: f32, acc: &mut [f32; BATCH_LANES], slab: &[f32], e: usize) {
+        match ternary_code(self.packed, e) {
+            1 => {
+                for l in 0..BATCH_LANES {
+                    acc[l] += slab[l];
+                }
+            }
+            -1 => {
+                for l in 0..BATCH_LANES {
+                    acc[l] -= slab[l];
+                }
+            }
+            _ => {}
+        }
+    }
+
+    #[inline(always)]
+    fn finish(&self, scale: f32, acc: f32) -> f32 {
+        acc * scale
+    }
 }
 
 /// Kept weights of columns `[col_start, col_end)` of a rows×cols matrix.
@@ -301,15 +629,41 @@ impl PackedColumns {
         q: &[i8],
         scales: &[f32],
     ) -> PackedColumns {
+        Self::from_walk_codes(rows, cols, col_start, col_end, seq, q, scales, Precision::I8)
+    }
+
+    /// The quantized fast-load path shared by every sub-f32 tier:
+    /// `codes[i]` is the sign-extended code of `seq[i]` (an artifact's
+    /// packed i4/ternary bytes are unpacked to one code per entry by
+    /// the caller), `scales` holds one dequantization scale per
+    /// **global** column, and `precision` picks the plane.  The same
+    /// counting sort as [`from_walk_values`], then the shard-local
+    /// entry stream is re-packed to the tier's in-memory code width —
+    /// no dense matrix, no requantization, so loading is bitwise
+    /// faithful to what was exported.
+    ///
+    /// [`from_walk_values`]: PackedColumns::from_walk_values
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_walk_codes(
+        rows: usize,
+        cols: usize,
+        col_start: usize,
+        col_end: usize,
+        seq: &[(usize, usize)],
+        codes: &[i8],
+        scales: &[f32],
+        precision: Precision,
+    ) -> PackedColumns {
         assert_eq!(scales.len(), cols, "one scale per global column");
-        let (col_ptr, row_idx, vals) = walk_pack(rows, cols, col_start, col_end, seq, q);
+        let (col_ptr, row_idx, vals) = walk_pack(rows, cols, col_start, col_end, seq, codes);
+        let scales = scales[col_start..col_end].to_vec();
         PackedColumns {
             rows,
             col_start,
             col_end,
             col_ptr,
             row_idx,
-            plane: ValuePlane::I8 { q: vals, scales: scales[col_start..col_end].to_vec() },
+            plane: code_plane(vals, scales, precision),
         }
     }
 
@@ -361,8 +715,29 @@ impl PackedColumns {
         q: &[i8],
         scales: &[f32],
     ) -> PackedColumns {
+        Self::from_dense_codes(rows, cols, col_start, col_end, q, scales, Precision::I8)
+    }
+
+    /// [`from_dense_values`](PackedColumns::from_dense_values) for every
+    /// sub-f32 tier: `codes` are sign-extended column-major codes (one
+    /// per cell — a kind-3 record's packed i4/ternary bytes unpacked by
+    /// the caller), `scales` one per **global** column, `precision`
+    /// picks the plane.  The shard's code slice is re-packed to the
+    /// tier's in-memory width; nibble/pair alignment restarts at the
+    /// shard's first entry, exactly as [`to_precision`] lays it out.
+    ///
+    /// [`to_precision`]: PackedColumns::to_precision
+    pub fn from_dense_codes(
+        rows: usize,
+        cols: usize,
+        col_start: usize,
+        col_end: usize,
+        codes: &[i8],
+        scales: &[f32],
+        precision: Precision,
+    ) -> PackedColumns {
         assert!(col_start <= col_end && col_end <= cols);
-        assert_eq!(q.len(), rows * cols, "column-major dense codes");
+        assert_eq!(codes.len(), rows * cols, "column-major dense codes");
         assert_eq!(scales.len(), cols, "one scale per global column");
         let (col_ptr, row_idx) = Self::dense_index(rows, col_end - col_start);
         PackedColumns {
@@ -371,10 +746,11 @@ impl PackedColumns {
             col_end,
             col_ptr,
             row_idx,
-            plane: ValuePlane::I8 {
-                q: q[col_start * rows..col_end * rows].to_vec(),
-                scales: scales[col_start..col_end].to_vec(),
-            },
+            plane: code_plane(
+                codes[col_start * rows..col_end * rows].to_vec(),
+                scales[col_start..col_end].to_vec(),
+                precision,
+            ),
         }
     }
 
@@ -426,6 +802,8 @@ impl PackedColumns {
         match self.plane {
             ValuePlane::F32(_) => Precision::F32,
             ValuePlane::I8 { .. } => Precision::I8,
+            ValuePlane::I4 { .. } => Precision::I4,
+            ValuePlane::Ternary { .. } => Precision::Ternary,
         }
     }
 
@@ -447,52 +825,105 @@ impl PackedColumns {
         &self.row_idx
     }
 
-    /// The effective f32 multiplier of entry `e` in local column `local`
-    /// — the exact value both kernels feed their accumulators (for the
-    /// i8 plane that is the two-op dequantization `q as f32 * scale`).
+    /// The dequantized f32 value of entry `e` in local column `local` —
+    /// for the multiplier tiers (f32/i8/i4) this is the exact value
+    /// both kernels feed their accumulators; for ternary it is
+    /// `code as f32 * scale`, numerically what the entry contributes
+    /// but *not* the kernel's op order (the kernels factor the scale
+    /// out of the ternary accumulation).
     #[inline]
     fn value_f32(&self, local: usize, e: usize) -> f32 {
         match &self.plane {
             ValuePlane::F32(values) => values[e],
             ValuePlane::I8 { q, scales } => q[e] as f32 * scales[local],
+            ValuePlane::I4 { packed, scales } => i4_code(packed, e) as f32 * scales[local],
+            ValuePlane::Ternary { packed, scales } => {
+                ternary_code(packed, e) as f32 * scales[local]
+            }
         }
+    }
+
+    /// The dequantized f32 multipliers of every entry, in shard entry
+    /// order — for f32 a copy, for quantized planes the per-entry
+    /// `code as f32 * scale`.
+    fn dequantized_values(&self) -> Vec<f32> {
+        if let ValuePlane::F32(vals) = &self.plane {
+            return vals.clone();
+        }
+        let mut vals = vec![0.0f32; self.nnz()];
+        for local in 0..self.width() {
+            for e in self.col_range(local) {
+                vals[e] = self.value_f32(local, e);
+            }
+        }
+        vals
+    }
+
+    /// Quantize per-entry f32 multipliers into `precision`'s plane,
+    /// column by column (`vals` in shard entry order).
+    fn quantize_plane(&self, vals: &[f32], precision: Precision) -> ValuePlane {
+        let width = self.width();
+        let mut scales = vec![0.0f32; width];
+        let mut q = vec![0i8; vals.len()];
+        match precision {
+            Precision::I8 | Precision::I4 => {
+                let levels = if precision == Precision::I8 { I8_LEVELS } else { I4_LEVELS };
+                for (local, s) in scales.iter_mut().enumerate() {
+                    *s = column_scale(&vals[self.col_range(local)], levels);
+                    if *s > 0.0 {
+                        for e in self.col_range(local) {
+                            q[e] = quantize_value(vals[e], *s, levels);
+                        }
+                    }
+                }
+            }
+            Precision::Ternary => {
+                for (local, s) in scales.iter_mut().enumerate() {
+                    let (scale, thr) = ternary_column(&vals[self.col_range(local)]);
+                    *s = scale;
+                    if scale > 0.0 {
+                        for e in self.col_range(local) {
+                            if vals[e].abs() > thr {
+                                q[e] = if vals[e] > 0.0 { 1 } else { -1 };
+                            }
+                        }
+                    }
+                }
+            }
+            Precision::F32 => unreachable!("quantize_plane is for quantized tiers"),
+        }
+        code_plane(q, scales, precision)
     }
 
     /// Convert this shard to a precision tier.
     ///
-    /// * `F32 → I8`: symmetric per-column quantization of the kept
-    ///   values (`scale = max|v| / 127`, codes `round(v / scale)`).  The
-    ///   scale depends only on the column's own kept values, so
-    ///   quantization commutes with column sharding.
-    /// * `I8 → F32`: materializes the dequantized values
-    ///   (`q as f32 * scale`) — the resulting f32 shard computes
-    ///   bit-identical results to the i8 one.
-    /// * Same tier: a plain clone.
+    /// * `* → F32`: materializes the dequantized values
+    ///   (`code as f32 * scale` per entry).  For i8/i4 the resulting
+    ///   f32 shard computes bit-identical results to the quantized one
+    ///   (the kernel multiplier *is* that product); for ternary it is
+    ///   numerically close but not bitwise (the ternary kernel factors
+    ///   the scale out of the accumulation).
+    /// * `* → I8 / I4`: symmetric per-column quantization of the
+    ///   (dequantized) kept values — `scale = max|v| / levels` (127 or
+    ///   7), codes `round(v / scale)`.
+    /// * `* → Ternary`: TWN-style per-column threshold quantization —
+    ///   `Δ = 0.7 · mean|v|`, codes `sign(v) · [|v| > Δ]`,
+    ///   `scale = mean(|v| : |v| > Δ)`.
+    /// * Same tier: a plain clone.  Cross-quantized conversions (e.g.
+    ///   `I8 → I4`) go through the dequantized multipliers.
+    ///
+    /// Every tier's per-column stats depend only on that column's own
+    /// kept values (folded in stored order), so quantization commutes
+    /// with column sharding.
     pub fn to_precision(&self, precision: Precision) -> PackedColumns {
-        let plane = match (&self.plane, precision) {
-            (ValuePlane::F32(vals), Precision::I8) => {
-                let mut scales = vec![0.0f32; self.width()];
-                let mut q = vec![0i8; vals.len()];
-                for (local, s) in scales.iter_mut().enumerate() {
-                    *s = column_scale(&vals[self.col_range(local)]);
-                    if *s > 0.0 {
-                        for e in self.col_range(local) {
-                            q[e] = quantize_value(vals[e], *s);
-                        }
-                    }
-                }
-                ValuePlane::I8 { q, scales }
+        let plane = if self.precision() == precision {
+            self.plane.clone()
+        } else {
+            let vals = self.dequantized_values();
+            match precision {
+                Precision::F32 => ValuePlane::F32(vals),
+                _ => self.quantize_plane(&vals, precision),
             }
-            (ValuePlane::I8 { q, scales }, Precision::F32) => {
-                let mut vals = vec![0.0f32; q.len()];
-                for (local, &s) in scales.iter().enumerate() {
-                    for e in self.col_range(local) {
-                        vals[e] = q[e] as f32 * s;
-                    }
-                }
-                ValuePlane::F32(vals)
-            }
-            _ => self.plane.clone(),
         };
         PackedColumns {
             rows: self.rows,
@@ -533,42 +964,49 @@ impl PackedColumns {
         assert!(bias.is_empty() || bias.len() >= self.col_end);
         match &self.plane {
             ValuePlane::F32(values) => {
-                self.gemm_into_with(x, batch, bias, relu, out, |_, e| values[e])
+                self.gemm_into_with(x, batch, bias, relu, out, F32Read(values))
             }
             ValuePlane::I8 { q, scales } => {
-                self.gemm_into_with(x, batch, bias, relu, out, |local, e| {
-                    q[e] as f32 * scales[local]
-                })
+                self.gemm_into_with(x, batch, bias, relu, out, I8Read { q, scales })
+            }
+            ValuePlane::I4 { packed, scales } => {
+                self.gemm_into_with(x, batch, bias, relu, out, I4Read { packed, scales })
+            }
+            ValuePlane::Ternary { packed, scales } => {
+                self.gemm_into_with(x, batch, bias, relu, out, TernaryRead { packed, scales })
             }
         }
     }
 
-    /// Scalar kernel body, generic over the per-entry value read (the
-    /// only thing the precision tiers change).
-    fn gemm_into_with<V: Fn(usize, usize) -> f32>(
+    /// Scalar kernel body, generic over the tier's [`ValueRead`]er (the
+    /// only thing the precision tiers change).  Per-column state is
+    /// hoisted once before the entry loop.
+    fn gemm_into_with<R: ValueRead>(
         &self,
         x: &[f32],
         batch: usize,
         bias: &[f32],
         relu: bool,
         out: &mut [f32],
-        value: V,
+        reader: R,
     ) {
         let width = self.width();
         for b in 0..batch {
             let xrow = &x[b * self.rows..(b + 1) * self.rows];
             let orow = &mut out[b * width..(b + 1) * width];
             for local in 0..width {
+                let col = reader.col(local);
                 let (lo, hi) =
                     (self.col_ptr[local] as usize, self.col_ptr[local + 1] as usize);
                 let mut acc = 0.0f32;
                 for e in lo..hi {
-                    acc += xrow[self.row_idx[e] as usize] * value(local, e);
+                    acc = reader.accum(col, acc, xrow[self.row_idx[e] as usize], e);
                 }
+                let mut y = reader.finish(col, acc);
                 if !bias.is_empty() {
-                    acc += bias[self.col_start + local];
+                    y += bias[self.col_start + local];
                 }
-                orow[local] = if relu { acc.max(0.0) } else { acc };
+                orow[local] = if relu { y.max(0.0) } else { y };
             }
         }
     }
@@ -635,26 +1073,49 @@ impl PackedColumns {
         debug_assert_eq!(panel.len(), self.rows * BATCH_LANES);
         match &self.plane {
             ValuePlane::F32(values) => {
-                self.panel_raw_with(panel, lanes, bias, relu, out, out_stride, |_, e| values[e])
+                self.panel_raw_with(panel, lanes, bias, relu, out, out_stride, F32Read(values))
             }
-            ValuePlane::I8 { q, scales } => {
-                self.panel_raw_with(panel, lanes, bias, relu, out, out_stride, |local, e| {
-                    q[e] as f32 * scales[local]
-                })
-            }
+            ValuePlane::I8 { q, scales } => self.panel_raw_with(
+                panel,
+                lanes,
+                bias,
+                relu,
+                out,
+                out_stride,
+                I8Read { q, scales },
+            ),
+            ValuePlane::I4 { packed, scales } => self.panel_raw_with(
+                panel,
+                lanes,
+                bias,
+                relu,
+                out,
+                out_stride,
+                I4Read { packed, scales },
+            ),
+            ValuePlane::Ternary { packed, scales } => self.panel_raw_with(
+                panel,
+                lanes,
+                bias,
+                relu,
+                out,
+                out_stride,
+                TernaryRead { packed, scales },
+            ),
         }
     }
 
-    /// Blocked kernel body, generic over the per-entry value read.  The
-    /// value is materialized **once per kept entry** and broadcast to
-    /// all 8 lanes — the i8 tier pays one dequantization per entry, not
-    /// per lane.
+    /// Blocked kernel body, generic over the tier's [`ValueRead`]er.
+    /// Per-column state is hoisted once before the entry loop, and the
+    /// per-entry work (e.g. the i8/i4 dequantization, or the ternary
+    /// code branch) is materialized **once per kept entry** inside the
+    /// reader and fed to all 8 lanes.
     ///
     /// # Safety
     ///
     /// Same contract as [`gemm_panel_raw`](PackedColumns::gemm_panel_raw).
     #[allow(clippy::too_many_arguments)]
-    unsafe fn panel_raw_with<V: Fn(usize, usize) -> f32>(
+    unsafe fn panel_raw_with<R: ValueRead>(
         &self,
         panel: &[f32],
         lanes: usize,
@@ -662,33 +1123,31 @@ impl PackedColumns {
         relu: bool,
         out: *mut f32,
         out_stride: usize,
-        value: V,
+        reader: R,
     ) {
         let width = self.width();
         for local in 0..width {
+            let col = reader.col(local);
             let (lo, hi) = (self.col_ptr[local] as usize, self.col_ptr[local + 1] as usize);
             let mut acc = [0.0f32; BATCH_LANES];
             for e in lo..hi {
-                let v = value(local, e);
                 let slab = &panel[self.row_idx[e] as usize * BATCH_LANES..][..BATCH_LANES];
-                for l in 0..BATCH_LANES {
-                    acc[l] += slab[l] * v;
-                }
+                reader.accum_lanes(col, &mut acc, slab, e);
             }
-            let col = self.col_start + local;
+            let colid = self.col_start + local;
             // Bias is *skipped*, not added as 0.0, when absent — adding
             // 0.0 would flip a -0.0 accumulator to +0.0 and break bitwise
             // parity with the scalar kernel.
-            let b = if bias.is_empty() { None } else { Some(bias[col]) };
+            let b = if bias.is_empty() { None } else { Some(bias[colid]) };
             for (l, &a) in acc.iter().take(lanes).enumerate() {
-                let mut y = a;
+                let mut y = reader.finish(col, a);
                 if let Some(b) = b {
                     y += b;
                 }
                 if relu {
                     y = y.max(0.0);
                 }
-                out.add(l * out_stride + col).write(y);
+                out.add(l * out_stride + colid).write(y);
             }
         }
     }
@@ -1108,6 +1567,277 @@ mod tests {
             let direct = PackedColumns::from_sequence(rows, cols, lo, hi, &seq, &w)
                 .to_precision(Precision::I8);
             assert_eq!(rebuilt, direct, "shard [{lo},{hi})");
+        }
+    }
+
+    // -- sub-8-bit tiers ---------------------------------------------------
+
+    /// Per-entry sign-extended codes of a quantized shard (test-side
+    /// unpack of whichever code width the plane uses).
+    fn unpacked_codes(p: &PackedColumns) -> Vec<i8> {
+        (0..p.nnz())
+            .map(|e| match p.plane() {
+                ValuePlane::I8 { q, .. } => q[e],
+                ValuePlane::I4 { packed, .. } => i4_code(packed, e),
+                ValuePlane::Ternary { packed, .. } => ternary_code(packed, e),
+                ValuePlane::F32(_) => panic!("quantized plane expected"),
+            })
+            .collect()
+    }
+
+    fn plane_scales(p: &PackedColumns) -> &[f32] {
+        match p.plane() {
+            ValuePlane::I8 { scales, .. }
+            | ValuePlane::I4 { scales, .. }
+            | ValuePlane::Ternary { scales, .. } => scales,
+            ValuePlane::F32(_) => panic!("quantized plane expected"),
+        }
+    }
+
+    #[test]
+    fn i4_and_ternary_code_packing_round_trips() {
+        // Every representable code survives pack -> extract, at every
+        // alignment (odd/even nibble, all four 2-bit slots, odd tails).
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 31] {
+            let codes: Vec<i8> = (0..n).map(|i| ((i as i64 % 15) - 7) as i8).collect();
+            let packed = pack_i4(&codes);
+            assert_eq!(packed.len(), i4_packed_len(n));
+            for (e, &c) in codes.iter().enumerate() {
+                assert_eq!(i4_code(&packed, e), c, "i4 n={n} e={e}");
+            }
+            let codes: Vec<i8> = (0..n).map(|i| ((i as i64 % 3) - 1) as i8).collect();
+            let packed = pack_ternary(&codes);
+            assert_eq!(packed.len(), ternary_packed_len(n));
+            for (e, &c) in codes.iter().enumerate() {
+                assert_eq!(ternary_code(&packed, e), c, "ternary n={n} e={e}");
+            }
+        }
+    }
+
+    #[test]
+    fn i4_quantize_round_trip_is_bounded_by_half_a_step() {
+        let (rows, cols) = (40, 24);
+        let mask = random_mask(rows, cols, 0.6, 35);
+        let w = weights(rows * cols, 36);
+        let f = PackedColumns::from_mask(&mask, 0, cols, &w);
+        let q = f.to_precision(Precision::I4);
+        assert_eq!(q.precision(), Precision::I4);
+        assert_eq!(q.nnz(), f.nnz());
+        let scales = plane_scales(&q).to_vec();
+        let codes = unpacked_codes(&q);
+        for c in 0..cols {
+            let max = f.column(c).fold(0.0f32, |m, (_, v)| m.max(v.abs()));
+            assert_eq!(scales[c].to_bits(), (max / 7.0).to_bits(), "column {c}");
+            for e in q.col_range(c) {
+                assert!((-7..=7).contains(&codes[e]), "column {c} code {}", codes[e]);
+            }
+            for ((_, orig), (r, deq)) in f.column(c).zip(q.column(c)) {
+                assert!(
+                    (deq - orig).abs() <= scales[c] * 0.501 + 1e-12,
+                    "column {c} row {r}: {orig} -> {deq} (scale {})",
+                    scales[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ternary_codes_and_scale_follow_the_twn_recipe() {
+        let (rows, cols) = (48, 20);
+        let mask = random_mask(rows, cols, 0.5, 45);
+        let w = weights(rows * cols, 46);
+        let f = PackedColumns::from_mask(&mask, 0, cols, &w);
+        let t = f.to_precision(Precision::Ternary);
+        assert_eq!(t.precision(), Precision::Ternary);
+        let scales = plane_scales(&t).to_vec();
+        let codes = unpacked_codes(&t);
+        for c in 0..cols {
+            let vals: Vec<f32> = f.column(c).map(|(_, v)| v).collect();
+            if vals.is_empty() {
+                assert_eq!(scales[c], 0.0);
+                continue;
+            }
+            let mean = vals.iter().fold(0.0f32, |s, v| s + v.abs()) / vals.len() as f32;
+            let thr = 0.7 * mean;
+            let passing: Vec<f32> =
+                vals.iter().filter(|v| v.abs() > thr).map(|v| v.abs()).collect();
+            let expect_scale = if passing.is_empty() {
+                0.0
+            } else {
+                passing.iter().fold(0.0f32, |s, &v| s + v) / passing.len() as f32
+            };
+            assert_eq!(scales[c].to_bits(), expect_scale.to_bits(), "column {c} scale");
+            for (e, &v) in t.col_range(c).zip(&vals) {
+                let expect = if v.abs() > thr {
+                    if v > 0.0 { 1 } else { -1 }
+                } else {
+                    0
+                };
+                assert_eq!(codes[e], expect, "column {c} entry {e}");
+            }
+            // A normal column must produce a real mix: some zeros (the
+            // tier genuinely prunes) and some nonzeros (it still
+            // computes).
+            assert!(t.col_range(c).any(|e| codes[e] != 0), "column {c} all-zero");
+        }
+        assert!(
+            (0..t.nnz()).any(|e| codes[e] == 0),
+            "threshold never zeroed anything — not a ternary quantizer"
+        );
+    }
+
+    #[test]
+    fn sub8_panel_kernel_bitwise_matches_scalar_per_tier() {
+        let (rows, cols) = (40, 30);
+        let cfg = PrsMaskConfig::auto(rows, cols, 5, 9);
+        let seq = prs_keep_sequence(rows, cols, 0.7, cfg);
+        let w = weights(rows * cols, 55);
+        let bias = weights(cols, 56);
+        for tier in [Precision::I4, Precision::Ternary] {
+            for batch in [1usize, 3, 8, 33] {
+                let x = weights(batch * rows, 57 + batch as u64);
+                for n_shards in [1usize, 3, 7] {
+                    let shards: Vec<PackedColumns> = (0..n_shards)
+                        .map(|i| {
+                            PackedColumns::from_sequence(
+                                rows,
+                                cols,
+                                cols * i / n_shards,
+                                cols * (i + 1) / n_shards,
+                                &seq,
+                                &w,
+                            )
+                            .to_precision(tier)
+                        })
+                        .collect();
+                    let mut expect = vec![0.0f32; batch * cols];
+                    for shard in &shards {
+                        let mut buf = vec![0.0f32; batch * shard.width()];
+                        shard.gemm_into(&x, batch, &bias, true, &mut buf);
+                        for b in 0..batch {
+                            expect[b * cols + shard.col_start..b * cols + shard.col_end]
+                                .copy_from_slice(
+                                    &buf[b * shard.width()..(b + 1) * shard.width()],
+                                );
+                        }
+                    }
+                    let got = blocked_forward(&shards, &x, batch, rows, cols, &bias, true);
+                    for (i, (&u, &v)) in got.iter().zip(&expect).enumerate() {
+                        assert_eq!(
+                            u.to_bits(),
+                            v.to_bits(),
+                            "{tier} batch {batch} shards {n_shards} out {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantization_commutes_with_sharding_every_tier() {
+        let (rows, cols) = (30, 22);
+        let cfg = PrsMaskConfig::auto(rows, cols, 9, 15);
+        let seq = prs_keep_sequence(rows, cols, 0.6, cfg);
+        let w = weights(rows * cols, 47);
+        for tier in [Precision::I8, Precision::I4, Precision::Ternary] {
+            let whole =
+                PackedColumns::from_sequence(rows, cols, 0, cols, &seq, &w).to_precision(tier);
+            let wq = unpacked_codes(&whole);
+            let ws = plane_scales(&whole).to_vec();
+            for (lo, hi) in [(0usize, 9usize), (9, cols)] {
+                let shard = PackedColumns::from_sequence(rows, cols, lo, hi, &seq, &w)
+                    .to_precision(tier);
+                let sq = unpacked_codes(&shard);
+                let ss = plane_scales(&shard);
+                for local in 0..shard.width() {
+                    let c = lo + local;
+                    assert_eq!(ws[c].to_bits(), ss[local].to_bits(), "{tier} scale col {c}");
+                    assert_eq!(
+                        &wq[whole.col_range(c)],
+                        &sq[shard.col_range(local)],
+                        "{tier} codes col {c}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dequantized_twin_is_bitwise_for_i4_and_close_for_ternary() {
+        let (rows, cols, batch) = (24, 18, 5);
+        let mask = random_mask(rows, cols, 0.5, 65);
+        let w = weights(rows * cols, 66);
+        let x = weights(batch * rows, 67);
+        // I4 -> F32 materializes exactly the kernel's multipliers.
+        let q = PackedColumns::from_mask(&mask, 0, cols, &w).to_precision(Precision::I4);
+        let back = q.to_precision(Precision::F32);
+        let mut ya = vec![0.0f32; batch * cols];
+        let mut yb = vec![0.0f32; batch * cols];
+        q.gemm_into(&x, batch, &[], false, &mut ya);
+        back.gemm_into(&x, batch, &[], false, &mut yb);
+        for (&u, &v) in ya.iter().zip(&yb) {
+            assert_eq!(u.to_bits(), v.to_bits(), "i4 twin");
+        }
+        // Ternary factors the scale out of the accumulation, so its
+        // f32 twin (per-entry code*scale multipliers) is numerically
+        // close but not guaranteed bitwise.
+        let t = PackedColumns::from_mask(&mask, 0, cols, &w).to_precision(Precision::Ternary);
+        let tb = t.to_precision(Precision::F32);
+        t.gemm_into(&x, batch, &[], false, &mut ya);
+        tb.gemm_into(&x, batch, &[], false, &mut yb);
+        for (c, (&u, &v)) in ya.iter().zip(&yb).enumerate() {
+            assert!((u - v).abs() <= 1e-4 * u.abs().max(1.0), "ternary twin out {c}: {u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn from_walk_codes_round_trips_export_order_per_tier() {
+        // Pack, quantize, flatten codes back to walk order (what a v4
+        // artifact stores before bit packing), rebuild via
+        // from_walk_codes: identical shard, packed bytes included.
+        let (rows, cols) = (24, 18);
+        let cfg = PrsMaskConfig::auto(rows, cols, 7, 13);
+        let seq = prs_keep_sequence(rows, cols, 0.6, cfg);
+        let w = weights(rows * cols, 81);
+        for tier in [Precision::I8, Precision::I4, Precision::Ternary] {
+            let whole =
+                PackedColumns::from_sequence(rows, cols, 0, cols, &seq, &w).to_precision(tier);
+            let q = unpacked_codes(&whole);
+            let scales = plane_scales(&whole).to_vec();
+            let mut cursors: Vec<std::ops::Range<usize>> =
+                (0..cols).map(|c| whole.col_range(c)).collect();
+            let walk_q: Vec<i8> = seq
+                .iter()
+                .map(|&(_, c)| q[cursors[c].next().expect("entry per visit")])
+                .collect();
+            for (lo, hi) in [(0, cols), (0, 7), (7, cols)] {
+                let rebuilt = PackedColumns::from_walk_codes(
+                    rows, cols, lo, hi, &seq, &walk_q, &scales, tier,
+                );
+                let direct =
+                    PackedColumns::from_sequence(rows, cols, lo, hi, &seq, &w).to_precision(tier);
+                assert_eq!(rebuilt, direct, "{tier} shard [{lo},{hi})");
+            }
+        }
+    }
+
+    #[test]
+    fn from_dense_codes_round_trips_per_tier() {
+        let (rows, cols) = (9, 7);
+        let w = weights(rows * cols, 91); // row-major
+        for tier in [Precision::I8, Precision::I4, Precision::Ternary] {
+            let whole = PackedColumns::from_mask(&Mask::dense(rows, cols), 0, cols, &w)
+                .to_precision(tier);
+            let codes = unpacked_codes(&whole); // column-major: dense entry order
+            let scales = plane_scales(&whole).to_vec();
+            for (lo, hi) in [(0, cols), (0, 3), (3, cols), (2, 2)] {
+                let rebuilt =
+                    PackedColumns::from_dense_codes(rows, cols, lo, hi, &codes, &scales, tier);
+                let direct = PackedColumns::from_mask(&Mask::dense(rows, cols), lo, hi, &w)
+                    .to_precision(tier);
+                assert_eq!(rebuilt, direct, "{tier} shard [{lo},{hi})");
+            }
         }
     }
 }

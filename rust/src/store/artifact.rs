@@ -12,11 +12,13 @@
 //! bytes from the other direction.  Conv layers carry a 15-byte geometry
 //! block ([`FLAG_CONV`]) and max-pool layers a geometry-only record, so a
 //! compiled VGG-16 (conv stack + PRS classifier) round-trips end to end.
-//! An i8-tier layer
-//! ([`Precision::I8`](crate::sparse::Precision)) stores its raw codes (1 B
-//! each, same order) plus the per-column f32 scale vector — the stored
-//! plane is the *exact* in-memory plane, so a quantized model round-trips
-//! bitwise with no requantization on either side.
+//! A quantized layer stores its raw codes plus the per-column f32 scale
+//! vector — 1 B per code for the i8 tier, two 4-bit codes per byte for
+//! i4 (v4, [`FLAG_I4`]), four 2-bit codes per byte for ternary (v4,
+//! [`FLAG_TERNARY`]) — the stored plane is the *exact* in-memory plane
+//! (packing alignment restarts at each shard's first entry on both
+//! sides), so a quantized model round-trips bitwise with no
+//! requantization on either side.
 //!
 //! **Read** ([`load_model`]): the whole file is read, length-checked
 //! against the header, checksum-verified, then parsed with bounds-checked
@@ -43,13 +45,17 @@ use crate::mask::prune_target;
 use crate::serve::{
     parallel_keep_sequence, shard_ranges, CompiledLayer, CompiledModel, LayerShape, MaskKind,
 };
-use crate::sparse::{ConvGeom, PackedColumns, PoolGeom, Precision, ValuePlane};
+use crate::sparse::{
+    i4_code, i4_packed_len, pack_i4, pack_ternary, ternary_code, ternary_packed_len, ConvGeom,
+    PackedColumns, PoolGeom, Precision, ValuePlane,
+};
 
 use super::format::{
-    dense_record_bytes, dense_record_bytes_i8, explicit_record_bytes, explicit_record_bytes_i8,
-    fnv1a64, hash_keep_sequence, pool_record_bytes, prs_record_bytes, prs_record_bytes_i8,
-    ByteReader, ByteWriter, StoreError, CONV_GEOM_BYTES, FILE_CHECKSUM_BYTES, FILE_HEADER_BYTES,
-    FLAG_CONV, FLAG_I8, FLAG_RELU, MAGIC, MAX_CELLS, MAX_DIM, MAX_LAYERS, MIN_VERSION,
+    dense_record_bytes, dense_record_bytes_i8, dense_record_bytes_packed, explicit_record_bytes,
+    explicit_record_bytes_i8, explicit_record_bytes_packed, fnv1a64, hash_keep_sequence,
+    pool_record_bytes, prs_record_bytes, prs_record_bytes_i8, prs_record_bytes_packed, ByteReader,
+    ByteWriter, StoreError, CONV_GEOM_BYTES, FILE_CHECKSUM_BYTES, FILE_HEADER_BYTES, FLAG_CONV,
+    FLAG_I4, FLAG_I8, FLAG_RELU, FLAG_TERNARY, MAGIC, MAX_CELLS, MAX_DIM, MAX_LAYERS, MIN_VERSION,
     POOL_GEOM_BYTES, PRS_EXTRA_BYTES, VERSION,
 };
 
@@ -64,10 +70,12 @@ pub struct LoadOptions {
     /// Replay-and-compare the stored `walk_hash` per PRS layer.
     pub verify: bool,
     /// Per-tenant precision selection at load time: `None` keeps each
-    /// layer's stored tier; `Some(I8)` quantizes an f32 artifact's kept
-    /// values after decode (bit-identical to compile-time quantization);
-    /// `Some(F32)` dequantizes an i8 artifact (the resulting f32 model
-    /// computes bit-identical logits to the i8 one).
+    /// layer's stored tier; `Some(I8)`/`Some(I4)`/`Some(Ternary)`
+    /// quantizes an f32 artifact's kept values after decode
+    /// (bit-identical to compile-time quantization); `Some(F32)`
+    /// dequantizes a quantized artifact (for i8/i4 the resulting f32
+    /// model computes bit-identical logits; the ternary kernel's
+    /// factored op order makes its f32 twin only numerically close).
     pub precision: Option<Precision>,
 }
 
@@ -83,12 +91,12 @@ impl Default for LoadOptions {
 pub struct ExportReport {
     pub total_bytes: u64,
     /// Packed kept-weight payload (4 B/value for f32 layers, 1 B/value
-    /// for i8 layers — scales counted separately).
+    /// for i8, ½ B for i4, ¼ B for ternary — scales counted separately).
     pub value_bytes: u64,
     /// Bias payload.
     pub bias_bytes: u64,
-    /// Per-column dequantization scales of i8 layers (zero for an
-    /// all-f32 model).
+    /// Per-column dequantization scales of quantized layers (zero for
+    /// an all-f32 model).
     pub scale_bytes: u64,
     /// Index storage of PRS layers: seeds + widths + polynomials + walk
     /// hash — O(1) per layer.
@@ -153,11 +161,19 @@ pub fn encode_with_report(
 }
 
 /// The value payload of one layer, gathered in on-disk order (global
-/// walk order for PRS, column-major for explicit).
+/// walk order for PRS, column-major for explicit).  The sub-8-bit tiers
+/// hold their codes *unpacked* (one `i8` each) while in transit — the
+/// writer packs nibbles/pairs at the last moment and the reader unpacks
+/// immediately, so global-order packing never leaks into the shard-local
+/// alignment the in-memory planes use.
 enum Payload {
     F32(Vec<f32>),
     /// Codes in on-disk order + one scale per global column.
     I8 { q: Vec<i8>, scales: Vec<f32> },
+    /// i4 codes (`-7..=7`), packed two per byte on disk.
+    I4 { q: Vec<i8>, scales: Vec<f32> },
+    /// Ternary codes (`{-1, 0, +1}`), packed four per byte on disk.
+    Ternary { q: Vec<i8>, scales: Vec<f32> },
 }
 
 impl Payload {
@@ -172,6 +188,20 @@ impl Payload {
                 w.put_i8_slice(q);
                 report.scale_bytes += 4 * scales.len() as u64;
                 report.value_bytes += q.len() as u64;
+            }
+            Payload::I4 { q, scales } => {
+                w.put_f32_slice(scales);
+                let packed = pack_i4(q);
+                report.scale_bytes += 4 * scales.len() as u64;
+                report.value_bytes += packed.len() as u64;
+                w.put_bytes(&packed);
+            }
+            Payload::Ternary { q, scales } => {
+                w.put_f32_slice(scales);
+                let packed = pack_ternary(q);
+                report.scale_bytes += 4 * scales.len() as u64;
+                report.value_bytes += packed.len() as u64;
+                w.put_bytes(&packed);
             }
         }
     }
@@ -236,15 +266,19 @@ fn write_layer(
         return Ok(());
     }
     let nnz = layer.nnz();
-    let quantized = layer.precision == Precision::I8;
+    let tier_flag = match layer.precision {
+        Precision::F32 => 0,
+        Precision::I8 => FLAG_I8,
+        Precision::I4 => FLAG_I4,
+        Precision::Ternary => FLAG_TERNARY,
+    };
     let conv = match &layer.shape {
         LayerShape::Conv(g) => Some(*g),
         _ => None,
     };
     let geom_extra = if conv.is_some() { CONV_GEOM_BYTES } else { 0 };
-    let flags = if layer.relu { FLAG_RELU } else { 0 }
-        | if quantized { FLAG_I8 } else { 0 }
-        | if conv.is_some() { FLAG_CONV } else { 0 };
+    let flags =
+        if layer.relu { FLAG_RELU } else { 0 } | tier_flag | if conv.is_some() { FLAG_CONV } else { 0 };
     if let Some(g) = &conv {
         if g.kernel > u8::MAX as usize || g.stride > u8::MAX as usize || g.pad > u8::MAX as usize
         {
@@ -286,10 +320,25 @@ fn write_layer(
             report.seed_bytes += PRS_EXTRA_BYTES;
             debug_assert_eq!(
                 w.len() as u64 - record_start - geom_extra,
-                if quantized {
-                    prs_record_bytes_i8(nnz as u64, layer.cols as u64, layer.bias.len() as u64)
-                } else {
-                    prs_record_bytes(nnz as u64, layer.bias.len() as u64)
+                match layer.precision {
+                    Precision::F32 => prs_record_bytes(nnz as u64, layer.bias.len() as u64),
+                    Precision::I8 => prs_record_bytes_i8(
+                        nnz as u64,
+                        layer.cols as u64,
+                        layer.bias.len() as u64,
+                    ),
+                    Precision::I4 => prs_record_bytes_packed(
+                        nnz as u64,
+                        layer.cols as u64,
+                        layer.bias.len() as u64,
+                        2,
+                    ),
+                    Precision::Ternary => prs_record_bytes_packed(
+                        nnz as u64,
+                        layer.cols as u64,
+                        layer.bias.len() as u64,
+                        4,
+                    ),
                 }
             );
         }
@@ -312,15 +361,29 @@ fn write_layer(
             payload.write(w, report);
             debug_assert_eq!(
                 w.len() as u64 - record_start,
-                if quantized {
-                    dense_record_bytes_i8(
+                match layer.precision {
+                    Precision::F32 =>
+                        dense_record_bytes(nnz as u64, layer.bias.len() as u64, conv.is_some()),
+                    Precision::I8 => dense_record_bytes_i8(
                         layer.cols as u64,
                         nnz as u64,
                         layer.bias.len() as u64,
                         conv.is_some(),
-                    )
-                } else {
-                    dense_record_bytes(nnz as u64, layer.bias.len() as u64, conv.is_some())
+                    ),
+                    Precision::I4 => dense_record_bytes_packed(
+                        layer.cols as u64,
+                        nnz as u64,
+                        layer.bias.len() as u64,
+                        conv.is_some(),
+                        2,
+                    ),
+                    Precision::Ternary => dense_record_bytes_packed(
+                        layer.cols as u64,
+                        nnz as u64,
+                        layer.bias.len() as u64,
+                        conv.is_some(),
+                        4,
+                    ),
                 }
             );
         }
@@ -352,14 +415,29 @@ fn write_layer(
             report.explicit_index_bytes += 4 * (layer.cols as u64 + nnz as u64);
             debug_assert_eq!(
                 w.len() as u64 - record_start - geom_extra,
-                if quantized {
-                    explicit_record_bytes_i8(
+                match layer.precision {
+                    Precision::F32 => explicit_record_bytes(
                         layer.cols as u64,
                         nnz as u64,
                         layer.bias.len() as u64,
-                    )
-                } else {
-                    explicit_record_bytes(layer.cols as u64, nnz as u64, layer.bias.len() as u64)
+                    ),
+                    Precision::I8 => explicit_record_bytes_i8(
+                        layer.cols as u64,
+                        nnz as u64,
+                        layer.bias.len() as u64,
+                    ),
+                    Precision::I4 => explicit_record_bytes_packed(
+                        layer.cols as u64,
+                        nnz as u64,
+                        layer.bias.len() as u64,
+                        2,
+                    ),
+                    Precision::Ternary => explicit_record_bytes_packed(
+                        layer.cols as u64,
+                        nnz as u64,
+                        layer.bias.len() as u64,
+                        4,
+                    ),
                 }
             );
         }
@@ -402,23 +480,40 @@ fn gather_payload(
             }
             Ok(Payload::F32(flatten_cols(per_col, li, seq)?))
         }
-        Precision::I8 => {
+        tier => {
+            // All three quantized tiers gather the same way: per-entry
+            // codes (unpacking the sub-8-bit planes shard-locally) + the
+            // global per-column scale vector.
             let mut per_col: Vec<Vec<(usize, i8)>> = vec![Vec::new(); layer.cols];
             let mut scales = vec![0.0f32; layer.cols];
             for shard in &layer.shards {
-                let ValuePlane::I8 { q, scales: s } = shard.plane() else {
-                    unreachable!("tier/plane agreement checked above");
+                let n = shard.row_ids().len();
+                let (codes, s): (Vec<i8>, &[f32]) = match shard.plane() {
+                    ValuePlane::I8 { q, scales: s } => (q.clone(), s),
+                    ValuePlane::I4 { packed, scales: s } => {
+                        ((0..n).map(|e| i4_code(packed, e)).collect(), s)
+                    }
+                    ValuePlane::Ternary { packed, scales: s } => {
+                        ((0..n).map(|e| ternary_code(packed, e)).collect(), s)
+                    }
+                    ValuePlane::F32(_) => unreachable!("tier/plane agreement checked above"),
                 };
                 for local in 0..shard.width() {
                     let c = shard.col_start + local;
                     scales[c] = s[local];
                     per_col[c] = shard
                         .col_range(local)
-                        .map(|e| (shard.row_ids()[e] as usize, q[e]))
+                        .map(|e| (shard.row_ids()[e] as usize, codes[e]))
                         .collect();
                 }
             }
-            Ok(Payload::I8 { q: flatten_cols(per_col, li, seq)?, scales })
+            let q = flatten_cols(per_col, li, seq)?;
+            Ok(match tier {
+                Precision::I8 => Payload::I8 { q, scales },
+                Precision::I4 => Payload::I4 { q, scales },
+                Precision::Ternary => Payload::Ternary { q, scales },
+                Precision::F32 => unreachable!("handled above"),
+            })
         }
     }
 }
@@ -575,7 +670,7 @@ fn gcd(a: u64, b: u64) -> u64 {
     }
 }
 
-/// Validate an i8 layer's per-column scale vector: NaN, ±∞, and negative
+/// Validate a quantized layer's per-column scale vector: NaN, ±∞, and negative
 /// scales are typed errors ([`StoreError::BadScale`]) — zero is legal
 /// (an empty or all-zero column quantizes to scale 0 with all-zero
 /// codes).
@@ -599,7 +694,8 @@ fn read_layer(
     let known = match version {
         1 => FLAG_RELU,
         2 => FLAG_RELU | FLAG_I8,
-        _ => FLAG_RELU | FLAG_I8 | FLAG_CONV,
+        3 => FLAG_RELU | FLAG_I8 | FLAG_CONV,
+        _ => FLAG_RELU | FLAG_I8 | FLAG_CONV | FLAG_I4 | FLAG_TERNARY,
     };
     if flags & !known != 0 {
         return Err(corrupt(if version < 2 && flags & FLAG_I8 != 0 {
@@ -610,12 +706,29 @@ fn read_layer(
             format!(
                 "layer {li}: conv geometry flag requires format v3, file claims v{version}"
             )
+        } else if version < 4 && flags & (FLAG_I4 | FLAG_TERNARY) != 0 {
+            let plane = if flags & FLAG_I4 != 0 { "i4" } else { "ternary" };
+            format!(
+                "layer {li}: packed {plane} precision flag requires format v4, file claims \
+                 v{version}"
+            )
         } else {
             format!("layer {li}: unknown flags {flags:#x}")
         }));
     }
     let relu = flags & FLAG_RELU != 0;
-    let quantized = flags & FLAG_I8 != 0;
+    let tier = match flags & (FLAG_I8 | FLAG_I4 | FLAG_TERNARY) {
+        0 => Precision::F32,
+        f if f == FLAG_I8 => Precision::I8,
+        f if f == FLAG_I4 => Precision::I4,
+        f if f == FLAG_TERNARY => Precision::Ternary,
+        f => {
+            return Err(corrupt(format!(
+                "layer {li}: conflicting precision flags {f:#x} (a layer has exactly one \
+                 value plane)"
+            )))
+        }
+    };
     let conv_flag = flags & FLAG_CONV != 0;
     let rows = r.u32()? as usize;
     let cols = r.u32()? as usize;
@@ -733,7 +846,7 @@ fn read_layer(
             let sparsity = r.f64()?;
             let walk_hash = r.u64()?;
             let bias = r.f32_vec(bias_len)?;
-            let payload = read_payload(r, li, quantized, nnz, cols)?;
+            let payload = read_payload(r, li, tier, nnz, cols)?;
             for (name, n, taps) in [("row", n_row, taps_row), ("col", n_col, taps_col)] {
                 if !(MIN_WIDTH..=MAX_WIDTH).contains(&n) {
                     return Err(corrupt(format!("layer {li}: {name} LFSR width {n} unsupported")));
@@ -814,7 +927,7 @@ fn read_layer(
                 return Err(corrupt(format!("layer {li}: row index out of range (rows {rows})")));
             }
             let bias = r.f32_vec(bias_len)?;
-            let payload = read_payload(r, li, quantized, nnz, cols)?;
+            let payload = read_payload(r, li, tier, nnz, cols)?;
             let mut seq = Vec::with_capacity(nnz);
             let mut at = 0usize;
             for (c, &count) in counts.iter().enumerate() {
@@ -849,7 +962,7 @@ fn read_layer(
                 )));
             }
             let bias = r.f32_vec(bias_len)?;
-            let payload = read_payload(r, li, quantized, nnz, cols)?;
+            let payload = read_payload(r, li, tier, nnz, cols)?;
             // Implicit positions stay implicit: the dense packer slices
             // the column-major payload straight into shards — no
             // position vector, no counting sort (a full-size VGG conv
@@ -871,21 +984,65 @@ fn read_layer(
     }
 }
 
-/// Read a layer's value payload (f32 values, or scales + i8 codes) and
-/// validate the scales.
+/// Read a layer's value payload (f32 values, or scales + codes at the
+/// tier's packing) and validate the scales.  The sub-8-bit planes are
+/// strict-decoded: i4 rejects the unused `-8` nibble, ternary rejects
+/// the unused `-2` pattern, and both reject nonzero padding in the tail
+/// byte — checksum-valid bytes that no writer of this format produces.
 fn read_payload(
     r: &mut ByteReader,
     li: usize,
-    quantized: bool,
+    tier: Precision,
     nnz: usize,
     cols: usize,
 ) -> Result<Payload, StoreError> {
-    if quantized {
-        let scales = r.f32_vec(cols)?;
-        validate_scales(li, &scales)?;
-        Ok(Payload::I8 { q: r.i8_vec(nnz)?, scales })
-    } else {
-        Ok(Payload::F32(r.f32_vec(nnz)?))
+    if tier == Precision::F32 {
+        return Ok(Payload::F32(r.f32_vec(nnz)?));
+    }
+    let scales = r.f32_vec(cols)?;
+    validate_scales(li, &scales)?;
+    match tier {
+        Precision::I8 => Ok(Payload::I8 { q: r.i8_vec(nnz)?, scales }),
+        Precision::I4 => {
+            let packed = r.bytes(i4_packed_len(nnz))?;
+            let mut q = Vec::with_capacity(nnz);
+            for e in 0..nnz {
+                let code = i4_code(packed, e);
+                if code == -8 {
+                    return Err(corrupt(format!(
+                        "layer {li}: i4 code -8 at entry {e} is outside the symmetric \
+                         [-7, 7] plane"
+                    )));
+                }
+                q.push(code);
+            }
+            if nnz % 2 == 1 && packed[nnz / 2] >> 4 != 0 {
+                return Err(corrupt(format!(
+                    "layer {li}: nonzero padding nibble after the last i4 code"
+                )));
+            }
+            Ok(Payload::I4 { q, scales })
+        }
+        Precision::Ternary => {
+            let packed = r.bytes(ternary_packed_len(nnz))?;
+            let mut q = Vec::with_capacity(nnz);
+            for e in 0..nnz {
+                let code = ternary_code(packed, e);
+                if code == -2 {
+                    return Err(corrupt(format!(
+                        "layer {li}: ternary code -2 at entry {e} is outside {{-1, 0, +1}}"
+                    )));
+                }
+                q.push(code);
+            }
+            if nnz % 4 != 0 && packed[nnz / 4] >> (2 * (nnz % 4)) != 0 {
+                return Err(corrupt(format!(
+                    "layer {li}: nonzero padding bits after the last ternary code"
+                )));
+            }
+            Ok(Payload::Ternary { q, scales })
+        }
+        Precision::F32 => unreachable!("handled above"),
     }
 }
 
@@ -894,6 +1051,8 @@ impl Payload {
         match self {
             Payload::F32(_) => Precision::F32,
             Payload::I8 { .. } => Precision::I8,
+            Payload::I4 { .. } => Precision::I4,
+            Payload::Ternary { .. } => Precision::Ternary,
         }
     }
 
@@ -915,6 +1074,26 @@ impl Payload {
                 Payload::I8 { q, scales } => {
                     PackedColumns::from_walk_values_i8(rows, cols, lo, hi, seq, q, scales)
                 }
+                Payload::I4 { q, scales } => PackedColumns::from_walk_codes(
+                    rows,
+                    cols,
+                    lo,
+                    hi,
+                    seq,
+                    q,
+                    scales,
+                    Precision::I4,
+                ),
+                Payload::Ternary { q, scales } => PackedColumns::from_walk_codes(
+                    rows,
+                    cols,
+                    lo,
+                    hi,
+                    seq,
+                    q,
+                    scales,
+                    Precision::Ternary,
+                ),
             })
             .collect()
     }
@@ -931,6 +1110,18 @@ impl Payload {
                 Payload::I8 { q, scales } => {
                     PackedColumns::from_dense_values_i8(rows, cols, lo, hi, q, scales)
                 }
+                Payload::I4 { q, scales } => {
+                    PackedColumns::from_dense_codes(rows, cols, lo, hi, q, scales, Precision::I4)
+                }
+                Payload::Ternary { q, scales } => PackedColumns::from_dense_codes(
+                    rows,
+                    cols,
+                    lo,
+                    hi,
+                    q,
+                    scales,
+                    Precision::Ternary,
+                ),
             })
             .collect()
     }
@@ -1024,6 +1215,107 @@ mod tests {
         assert_eq!(qreport.seed_bytes, report.seed_bytes);
         assert_eq!(qreport.total_bytes, accounted(&qreport));
         assert!(qreport.total_bytes < report.total_bytes);
+    }
+
+    #[test]
+    fn sub8_round_trip_is_bitwise_every_tier_and_shard_count() {
+        // The v4 planes: packed codes + scales round-trip to the exact
+        // in-memory shard layouts, including shard counts that split
+        // packing alignment mid-column-range, and including a layer
+        // whose nnz is odd (i4 tail nibble) / not a multiple of 4
+        // (ternary tail pair).
+        for tier in [Precision::I4, Precision::Ternary] {
+            for n_shards in [1usize, 3] {
+                let model = small_prs_model(n_shards).to_precision(tier);
+                let bytes = encode_model(&model, 2).unwrap();
+                let opts =
+                    LoadOptions { n_shards, lanes: 1, verify: true, precision: None };
+                let loaded = decode_model(&bytes, &opts).unwrap();
+                for (a, b) in loaded.layers.iter().zip(&model.layers) {
+                    assert_eq!(a.precision, tier);
+                    assert_eq!(a.kind, b.kind);
+                    assert_eq!(a.bias, b.bias);
+                    assert_eq!(
+                        a.shards, b.shards,
+                        "{tier} x {n_shards} shards must round-trip bit-exact"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sub8_export_report_charges_packed_bytes() {
+        for (tier, cpb) in [(Precision::I4, 2u64), (Precision::Ternary, 4u64)] {
+            let q = small_prs_model(2).to_precision(tier);
+            let (qbytes, report) = encode_with_report(&q, 1).unwrap();
+            assert_eq!(report.total_bytes, qbytes.len() as u64);
+            let expect: u64 = q
+                .layers
+                .iter()
+                .map(|l| (l.nnz() as u64 + cpb - 1) / cpb)
+                .sum();
+            assert_eq!(report.value_bytes, expect, "{tier} packs {cpb} codes/byte");
+            let cols: u64 = q.layers.iter().map(|l| l.cols as u64).sum();
+            assert_eq!(report.scale_bytes, 4 * cols);
+        }
+    }
+
+    #[test]
+    fn load_time_sub8_override_matches_compile_time_quantization() {
+        let f32_model = small_prs_model(2);
+        let bytes = encode_model(&f32_model, 1).unwrap();
+        for tier in [Precision::I4, Precision::Ternary] {
+            let opts =
+                LoadOptions { n_shards: 2, lanes: 1, verify: false, precision: Some(tier) };
+            let loaded = decode_model(&bytes, &opts).unwrap();
+            let direct = f32_model.to_precision(tier);
+            for (a, b) in loaded.layers.iter().zip(&direct.layers) {
+                assert_eq!(a.precision, tier);
+                assert_eq!(a.shards, b.shards, "load-time {tier} == compile-time");
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_sub8_codes_and_padding_are_typed_corrupt() {
+        // Flip bits inside the packed code payload of a v4 artifact so
+        // the checksum still passes (recomputed) but the plane carries
+        // patterns no writer produces: the strict reader must name them.
+        fn restamp_checksum(bytes: &mut [u8]) {
+            let end = bytes.len() - 8;
+            let sum = fnv1a64(&bytes[..end]);
+            bytes[end..].copy_from_slice(&sum.to_le_bytes());
+        }
+        // Ternary: find a zero code byte-aligned region to poison with
+        // 0b10 (-2).  The last layer's payload sits right before the
+        // checksum; its final code byte is at len - 8 - 1.
+        let t = small_prs_model(1).to_precision(Precision::Ternary);
+        let mut bytes = encode_model(&t, 1).unwrap();
+        let poison_at = bytes.len() - 9;
+        bytes[poison_at] = 0b10; // entry 0 of that byte becomes -2 (or pad garbage)
+        restamp_checksum(&mut bytes);
+        match decode_model(&bytes, &LoadOptions::default()) {
+            Err(StoreError::Corrupt { detail }) => {
+                assert!(
+                    detail.contains("-2") || detail.contains("padding"),
+                    "{detail}"
+                );
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // I4: set a nibble to 0x8 (-8).
+        let q = small_prs_model(1).to_precision(Precision::I4);
+        let mut bytes = encode_model(&q, 1).unwrap();
+        let poison_at = bytes.len() - 9;
+        bytes[poison_at] = (bytes[poison_at] & 0xF0) | 0x08;
+        restamp_checksum(&mut bytes);
+        match decode_model(&bytes, &LoadOptions::default()) {
+            Err(StoreError::Corrupt { detail }) => {
+                assert!(detail.contains("-8") || detail.contains("padding"), "{detail}");
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
     }
 
     #[test]

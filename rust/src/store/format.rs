@@ -5,7 +5,7 @@
 //!
 //! ```text
 //! magic     8 B   "LFSRPACK"
-//! version   u32   = 3 (v1/v2 files still load)
+//! version   u32   = 4 (v1/v2/v3 files still load)
 //! n_layers  u32
 //! file_len  u64   total file bytes, trailing checksum included
 //! layer records ...
@@ -20,7 +20,9 @@
 //!                 2 = max-pool (v3), 3 = dense (v3: every cell kept,
 //!                 positions implicit — no index bytes at all)
 //! flags     u8    bit 0 = relu; bit 1 = i8 value plane (v2+);
-//!                 bit 2 = conv geometry follows (v3+, kinds 0/1/3)
+//!                 bit 2 = conv geometry follows (v3+, kinds 0/1/3);
+//!                 bit 3 = packed i4 value plane (v4+);
+//!                 bit 4 = packed ternary value plane (v4+)
 //! rows      u32   kernel²·in_c for a conv layer; 0 for kind 2
 //! cols      u32   out_c for a conv layer; 0 for kind 2
 //! nnz       u64   keep budget = stored value count (0 for kind 2)
@@ -60,6 +62,18 @@
 //! bias      f32 × bias_len
 //! scales    f32 × cols    per-column symmetric dequantization scales
 //! values    i8  × nnz     codes, same order as the f32 plane
+//! -- kinds 0/1/3, i4 plane (flags bit 3 set, v4+) --
+//! bias      f32 × bias_len
+//! scales    f32 × cols    per-column symmetric dequantization scales
+//! values    u8  × ⌈nnz/2⌉ two 4-bit codes per byte, low nibble first,
+//!                         same entry order as the f32 plane; odd tail
+//!                         nibble is zero
+//! -- kinds 0/1/3, ternary plane (flags bit 4 set, v4+) --
+//! bias      f32 × bias_len
+//! scales    f32 × cols    per-column magnitudes (mean |v| above the
+//!                         TWN threshold)
+//! values    u8  × ⌈nnz/4⌉ four 2-bit two's-complement codes per byte,
+//!                         low pair first; unused tail pairs are zero
 //! ```
 //!
 //! The PRS record carries **no positions at all** — the paper's claim made
@@ -79,9 +93,13 @@
 //! adds the conv layer plane: the conv-geometry flag + block
 //! ([`CONV_GEOM_BYTES`]), the max-pool record (kind 2,
 //! [`POOL_GEOM_BYTES`]), and the dense record (kind 3) — compiled VGG-16
-//! round-trips with its conv stack instead of FC-only.  The reader
-//! accepts [`MIN_VERSION`]..=[`VERSION`]; v1/v2 byte streams decode
-//! exactly as before, and a v1/v2 file carrying v3-only kinds or flags is
+//! round-trips with its conv stack instead of FC-only.  v4 (this build)
+//! adds the sub-8-bit value planes: [`FLAG_I4`] packs two 4-bit codes per
+//! byte (~8× values cut vs f32), [`FLAG_TERNARY`] packs four 2-bit
+//! {-1, 0, +1} codes per byte (~16×) — both keep the per-column scale
+//! vector and change nothing on the index side.  The reader accepts
+//! [`MIN_VERSION`]..=[`VERSION`]; v1/v2/v3 byte streams decode exactly as
+//! before, and an old-stamped file carrying newer-only kinds or flags is
 //! rejected as corrupt (naming both versions of the skew).
 
 use std::fmt;
@@ -89,9 +107,10 @@ use std::fmt;
 /// File magic.
 pub const MAGIC: [u8; 8] = *b"LFSRPACK";
 
-/// Newest format version this build writes (v3: conv geometry blocks,
-/// max-pool records, dense records).
-pub const VERSION: u32 = 3;
+/// Newest format version this build writes (v4: packed i4 and ternary
+/// value planes on top of v3's conv geometry blocks, max-pool records,
+/// and dense records).
+pub const VERSION: u32 = 4;
 
 /// Oldest format version this build still reads (v1: f32 value planes
 /// only; identical layout otherwise).
@@ -106,6 +125,15 @@ pub const FLAG_I8: u8 = 1 << 1;
 /// Layer flag (v3+): a conv-geometry block follows the fixed record part
 /// — the layer's matrix is the im2col lowering `[kernel²·in_c, out_c]`.
 pub const FLAG_CONV: u8 = 1 << 2;
+
+/// Layer flag (v4+): the value plane is packed i4 codes (two per byte,
+/// low nibble first) + per-column scales.
+pub const FLAG_I4: u8 = 1 << 3;
+
+/// Layer flag (v4+): the value plane is packed ternary {-1, 0, +1} codes
+/// (four 2-bit two's-complement codes per byte, low pair first) +
+/// per-column scales.
+pub const FLAG_TERNARY: u8 = 1 << 4;
 
 /// Bytes before the first layer record: magic, version, n_layers, file_len.
 pub const FILE_HEADER_BYTES: u64 = 8 + 4 + 4 + 8;
@@ -196,6 +224,61 @@ pub const fn pool_record_bytes() -> u64 {
     RECORD_FIXED_BYTES + POOL_GEOM_BYTES
 }
 
+/// On-disk bytes of a packed sub-8-bit code vector (v4): `codes_per_byte`
+/// is 2 for the i4 plane, 4 for ternary; partial tail bytes are charged
+/// in full (the packer zero-fills them).
+pub const fn packed_code_bytes(nnz: u64, codes_per_byte: u64) -> u64 {
+    (nnz + codes_per_byte - 1) / codes_per_byte
+}
+
+/// On-disk bytes of one packed-plane (v4: i4 or ternary) PRS layer
+/// record: `⌈nnz/codes_per_byte⌉ + 4·cols` value payload on the same
+/// constant [`PRS_EXTRA_BYTES`] index state — the ~8× (i4) / ~16×
+/// (ternary) cut the paper's value-side bill takes once indices are
+/// already free.
+pub const fn prs_record_bytes_packed(
+    nnz: u64,
+    cols: u64,
+    bias_len: u64,
+    codes_per_byte: u64,
+) -> u64 {
+    RECORD_FIXED_BYTES
+        + PRS_EXTRA_BYTES
+        + 4 * bias_len
+        + 4 * cols
+        + packed_code_bytes(nnz, codes_per_byte)
+}
+
+/// On-disk bytes of one packed-plane explicit-positions layer record.
+pub const fn explicit_record_bytes_packed(
+    cols: u64,
+    nnz: u64,
+    bias_len: u64,
+    codes_per_byte: u64,
+) -> u64 {
+    RECORD_FIXED_BYTES
+        + 4 * cols
+        + 4 * nnz
+        + 4 * bias_len
+        + 4 * cols
+        + packed_code_bytes(nnz, codes_per_byte)
+}
+
+/// On-disk bytes of one packed-plane dense layer record.
+pub const fn dense_record_bytes_packed(
+    cols: u64,
+    nnz: u64,
+    bias_len: u64,
+    conv: bool,
+    codes_per_byte: u64,
+) -> u64 {
+    RECORD_FIXED_BYTES
+        + 4 * bias_len
+        + 4 * cols
+        + packed_code_bytes(nnz, codes_per_byte)
+        + if conv { CONV_GEOM_BYTES } else { 0 }
+}
+
 /// Everything that can go wrong reading or writing an artifact.  The
 /// strict reader returns these — it never panics on corrupt, truncated,
 /// or adversarial input (random corruption is caught by the checksum
@@ -216,7 +299,7 @@ pub enum StoreError {
     /// A structurally invalid field (bad kind tag, dims out of range,
     /// keep budget inconsistent with sparsity, ...).
     Corrupt { detail: String },
-    /// An i8 layer's per-column dequantization scale is NaN, infinite,
+    /// A quantized layer's per-column dequantization scale is NaN, infinite,
     /// or negative — checksum-valid bytes from a broken quantizer (or
     /// deliberate tampering) that would poison every logit the column
     /// touches if loaded.
@@ -552,6 +635,26 @@ mod tests {
         assert_eq!(dense_record_bytes(100, 10, true), 22 + 15 + 40 + 400);
         assert_eq!(dense_record_bytes_i8(10, 100, 10, true), 22 + 15 + 40 + 40 + 100);
         assert_eq!(pool_record_bytes(), 22 + 14);
+        // v4 packed planes: ⌈nnz/2⌉ (i4) and ⌈nnz/4⌉ (ternary) code
+        // bytes, tails charged in full.
+        assert_eq!(packed_code_bytes(100, 2), 50);
+        assert_eq!(packed_code_bytes(101, 2), 51);
+        assert_eq!(packed_code_bytes(100, 4), 25);
+        assert_eq!(packed_code_bytes(101, 4), 26);
+        assert_eq!(prs_record_bytes_packed(100, 10, 10, 2), 22 + 34 + 40 + 40 + 50);
+        assert_eq!(prs_record_bytes_packed(100, 10, 10, 4), 22 + 34 + 40 + 40 + 25);
+        assert_eq!(
+            explicit_record_bytes_packed(10, 100, 10, 2),
+            22 + 40 + 400 + 40 + 40 + 50
+        );
+        assert_eq!(dense_record_bytes_packed(10, 100, 10, true, 4), 22 + 15 + 40 + 40 + 25);
+        // The tier ladder on one PRS layer: every halving of the code
+        // width shrinks the record, index state constant throughout.
+        let f = prs_record_bytes(1000, 10);
+        let q8 = prs_record_bytes_i8(1000, 10, 10);
+        let q4 = prs_record_bytes_packed(1000, 10, 10, 2);
+        let t = prs_record_bytes_packed(1000, 10, 10, 4);
+        assert!(f > q8 && q8 > q4 && q4 > t);
     }
 
     #[test]
@@ -569,8 +672,8 @@ mod tests {
         // The version-skew contract: the message names the found version
         // AND the full supported range, so operators can tell which side
         // of the skew to upgrade.
-        let msg = StoreError::UnsupportedVersion { found: 4 }.to_string();
-        assert!(msg.contains('4'), "{msg}");
-        assert!(msg.contains("v1") && msg.contains("v3"), "{msg}");
+        let msg = StoreError::UnsupportedVersion { found: 5 }.to_string();
+        assert!(msg.contains('5'), "{msg}");
+        assert!(msg.contains("v1") && msg.contains("v4"), "{msg}");
     }
 }

@@ -25,8 +25,14 @@
 //!   15 B geometry block, max-pools a geometry-only record, and dense
 //!   layers (the paper's unpruned convs) store values with *implicit*
 //!   positions — zero index bytes — so the whole modified VGG-16
-//!   round-trips with under 1 KiB of non-value overhead.  v1/v2
-//!   artifacts (FC-only) still load.
+//!   round-trips with under 1 KiB of non-value overhead.  Format v4
+//!   adds the **sub-8-bit planes**: an i4 layer packs two 4-bit codes
+//!   per byte (low nibble first, ~8× less value payload), a ternary
+//!   layer four 2-bit {-1, 0, +1} codes per byte (low pair first,
+//!   ~16×) — each still one f32 scale per column, and the packing
+//!   alignment restarts at every shard's first entry so the stored
+//!   plane remains the exact in-memory plane.  v1/v2/v3 artifacts
+//!   still load bitwise.
 //! * [`artifact`] — writer, strict reader (corrupt/truncated input →
 //!   typed [`StoreError`], never a panic — malformed scale vectors get
 //!   [`StoreError::BadScale`]), verify mode that replays the PRS walk
@@ -35,14 +41,14 @@
 //!   and confirms the stored packing bit-for-bit, a fast loader that
 //!   rebuilds [`PackedColumns`](crate::sparse::PackedColumns) from the
 //!   stored walk-order values without ever materializing a dense weight
-//!   matrix (`from_walk_values` / `from_walk_values_i8`), and per-tenant
+//!   matrix (`from_walk_values` / `from_walk_codes`), and per-tenant
 //!   precision selection at load time (`LoadOptions::precision`
 //!   quantizes or dequantizes after the structural decode).
 //! * [`registry`] — [`ModelRegistry`]: load/evict/list many artifacts
 //!   concurrently and route requests by model id through one shared
 //!   [`WorkerPool`](crate::serve::WorkerPool), with per-model
-//!   [`ServeStats`](crate::serve::ServeStats) — f32 and i8 tenants side
-//!   by side, and wrong-length requests rejected as typed
+//!   [`ServeStats`](crate::serve::ServeStats) — tenants of all four
+//!   precision tiers side by side, and wrong-length requests rejected as typed
 //!   [`RegistryError::BadInput`] instead of panicking the server.
 //!
 //! `repro export` / `repro serve-artifact` (cli), the multi-model mode of

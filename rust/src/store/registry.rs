@@ -22,9 +22,10 @@
 //!
 //! Tenants pick their own precision tier: `LoadOptions::precision`
 //! quantizes (or dequantizes) at load time, so one shared pool serves
-//! f32 and i8 models side by side — the value-plane dispatch lives
-//! inside the kernel, and [`ModelInfo::precision`] reports each tenant's
-//! tier (`None` for a mixed-tier model).  Tenants also mix *shapes*:
+//! all four tiers (f32, i8, packed i4, packed ternary) side by side —
+//! the value-plane dispatch lives inside the kernel's generic value
+//! reader, and [`ModelInfo::precision`] reports each tenant's tier
+//! (`None` for a mixed-tier model).  Tenants also mix *shapes*:
 //! conv-capable models (VGG-16's conv stack + PRS classifier) and MLPs
 //! ride the same shard fan-out, and [`ModelInfo::kinds`] reports each
 //! tenant's FC/conv/pool layer census.
@@ -474,17 +475,25 @@ mod tests {
 
     #[test]
     fn mixed_precision_tenants_share_one_pool() {
-        // An f32 tenant and its i8-quantized twin on the same pool:
-        // routing stays bitwise per tenant, the tiers really differ, and
-        // `list` reports each tenant's tier.
+        // An f32 tenant and its quantized twins — one per tier — on the
+        // same pool: routing stays bitwise per tenant, the tiers really
+        // differ, and `list` reports each tenant's tier.
         let reg = ModelRegistry::new(2);
         reg.insert("f32", toy_model(3), cfg_no_deadline(2)).unwrap();
         reg.insert("i8", toy_model(3).to_precision(Precision::I8), cfg_no_deadline(2)).unwrap();
+        reg.insert("i4", toy_model(3).to_precision(Precision::I4), cfg_no_deadline(2)).unwrap();
+        reg.insert(
+            "ternary",
+            toy_model(3).to_precision(Precision::Ternary),
+            cfg_no_deadline(2),
+        )
+        .unwrap();
+        let tenants = ["f32", "i8", "i4", "ternary"];
         let mut rng = Pcg32::new(7);
         let xs: Vec<Vec<f32>> =
             (0..4).map(|_| (0..12).map(|_| rng.next_normal()).collect()).collect();
         for (i, x) in xs.iter().enumerate() {
-            reg.push(if i % 2 == 0 { "f32" } else { "i8" }, i as u64, x.clone()).unwrap();
+            reg.push(tenants[i % tenants.len()], i as u64, x.clone()).unwrap();
         }
         let answers = reg.drain(true);
         assert_eq!(answers.len(), 4);
@@ -494,14 +503,22 @@ mod tests {
                 assert_eq!(u.to_bits(), v.to_bits(), "{}#{} logit {i}", ans.model, ans.request);
             }
         }
-        // Same weights, different value planes: at least one logit moves.
+        // Same weights, different value planes: every quantized tier
+        // moves at least one logit off the f32 tenant's bits.
         let a = reg.infer("f32", &xs[0], 1).unwrap();
-        let b = reg.infer("i8", &xs[0], 1).unwrap();
-        assert!(a.iter().zip(&b).any(|(&u, &v)| u.to_bits() != v.to_bits()));
+        for tenant in &tenants[1..] {
+            let b = reg.infer(tenant, &xs[0], 1).unwrap();
+            assert!(
+                a.iter().zip(&b).any(|(&u, &v)| u.to_bits() != v.to_bits()),
+                "{tenant} must be a real approximation"
+            );
+        }
         let tiers: std::collections::BTreeMap<String, Option<Precision>> =
             reg.list().into_iter().map(|m| (m.id, m.precision)).collect();
         assert_eq!(tiers["f32"], Some(Precision::F32));
         assert_eq!(tiers["i8"], Some(Precision::I8));
+        assert_eq!(tiers["i4"], Some(Precision::I4));
+        assert_eq!(tiers["ternary"], Some(Precision::Ternary));
     }
 
     #[test]

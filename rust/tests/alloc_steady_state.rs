@@ -70,30 +70,37 @@ fn steady_state_infer_allocates_nothing() {
     let n = allocs_after_warmup(&pooled, batch, 10);
     assert_eq!(n, 0, "pooled steady-state infer allocated {n} times");
 
-    // The i8 precision tier rides the same arena path: the value-plane
-    // dispatch happens outside the kernels' inner loops, so a quantized
-    // model's steady state is allocation-free too — inline and pooled.
-    let quantized = synthetic_lenet300(0.95, 4, 1).to_precision(Precision::I8);
-    let q_inline = InferenceSession::new(quantized.clone(), 1);
-    let n = allocs_after_warmup(&q_inline, batch, 10);
-    assert_eq!(n, 0, "inline i8 steady-state infer allocated {n} times");
-    let q_pooled = InferenceSession::new(quantized, 4);
-    let n = allocs_after_warmup(&q_pooled, batch, 10);
-    assert_eq!(n, 0, "pooled i8 steady-state infer allocated {n} times");
+    // The quantized precision tiers ride the same arena path: each
+    // kernel instantiates its value reader once per shard call (the
+    // reader is a stack struct borrowing the packed plane — no
+    // allocation), and the sub-8-bit tiers decode nibbles/2-bit pairs
+    // in place, so every quantized model's steady state is
+    // allocation-free too — inline and pooled.
+    for tier in [Precision::I8, Precision::I4, Precision::Ternary] {
+        let quantized = synthetic_lenet300(0.95, 4, 1).to_precision(tier);
+        let q_inline = InferenceSession::new(quantized.clone(), 1);
+        let n = allocs_after_warmup(&q_inline, batch, 10);
+        assert_eq!(n, 0, "inline {tier} steady-state infer allocated {n} times");
+        let q_pooled = InferenceSession::new(quantized, 4);
+        let n = allocs_after_warmup(&q_pooled, batch, 10);
+        assert_eq!(n, 0, "pooled {tier} steady-state infer allocated {n} times");
+    }
 
     // Conv models ride the same arena: the im2col panel gather reuses
     // the panel buffer, max-pool writes into the resized ping-pong
     // buffer, and the shard fan-out is unchanged — so the scaled VGG-16
     // topology (13 convs + 4 pools + 3 PRS FCs) is allocation-free at
-    // steady state too, inline and pooled, f32 and i8.  Batch 9 ensures
-    // padded tail panels on the conv virtual rows as well.
+    // steady state too, inline and pooled, at every tier.  Batch 9
+    // ensures padded tail panels on the conv virtual rows as well.
     let vgg = synthetic_vgg16_scaled(16, 16, 0.9, 4, 1);
     let conv_inline = InferenceSession::new(vgg.clone(), 1);
     let n = allocs_after_warmup(&conv_inline, 9, 5);
     assert_eq!(n, 0, "inline conv steady-state infer allocated {n} times");
-    let conv_pooled = InferenceSession::new(vgg.to_precision(Precision::I8), 4);
-    let n = allocs_after_warmup(&conv_pooled, 9, 5);
-    assert_eq!(n, 0, "pooled i8 conv steady-state infer allocated {n} times");
+    for tier in [Precision::I8, Precision::I4, Precision::Ternary] {
+        let conv_pooled = InferenceSession::new(vgg.to_precision(tier), 4);
+        let n = allocs_after_warmup(&conv_pooled, 9, 5);
+        assert_eq!(n, 0, "pooled {tier} conv steady-state infer allocated {n} times");
+    }
 
     // The classification path (infer + argmax into warm buffers) is
     // allocation-free too.

@@ -341,7 +341,8 @@ fn prop_panel_conv_bitwise_equals_scalar_conv_all_compositions() {
     // The conv acceptance matrix: the serving path (im2col panels + the
     // blocked kernel, any shard count, any worker count, any batch
     // composition) is bit-for-bit the scalar reference (im2col rows +
-    // gemm_into), in BOTH precision tiers.
+    // gemm_into), in EVERY precision tier — conv layers inherit the
+    // sub-8-bit planes through the same im2col lowering.
     let mut rng = Pcg32::new(0xC0F);
     for case in 0..5 {
         let g = gen_conv_geom(&mut rng);
@@ -373,7 +374,7 @@ fn prop_panel_conv_bitwise_equals_scalar_conv_all_compositions() {
                 )
             }
         };
-        for tier in [Precision::F32, Precision::I8] {
+        for tier in [Precision::F32, Precision::I8, Precision::I4, Precision::Ternary] {
             for n_shards in [1usize, 3, 7] {
                 let layer = build(n_shards).to_precision(tier);
                 // Scalar reference per batch: materialized im2col rows

@@ -1,12 +1,15 @@
 //! Artifact-store integration: round-trip bitwise parity across every
-//! mask kind and worker/shard count (f32 and i8 value planes), conv/pool
-//! layer records (v3) with geometry validation, corruption robustness
-//! (typed errors, never panics — malformed scale vectors and crafted
-//! conv geometry included), v1/v2 back-compat + version-skew behaviour,
-//! verify-mode walk replay, and the paper's artifact-size claim (packed
-//! values + O(1) seed/geometry overhead per layer — no index memory,
-//! now for the WHOLE VGG-16 including its dense conv stack; the i8 tier
-//! cuts the values ~4x on top).
+//! mask kind and worker/shard count (all four value planes: f32, i8,
+//! packed i4, packed ternary), conv/pool layer records (v3) with
+//! geometry validation, corruption robustness (typed errors, never
+//! panics — malformed scale vectors and crafted conv geometry
+//! included), v1/v2/v3 back-compat + version-skew behaviour in both
+//! directions (v4-only flags under old stamps are Corrupt naming both
+//! versions; re-stamped old fixtures still decode bitwise), verify-mode
+//! walk replay, and the paper's artifact-size claim (packed values +
+//! O(1) seed/geometry overhead per layer — no index memory, now for the
+//! WHOLE VGG-16 including its dense conv stack; the i8/i4/ternary tiers
+//! cut the values ~4x/~8x/~16x on top).
 
 use lfsr_prune::hw::layers::vgg16_modified;
 use lfsr_prune::mask::prs::PrsMaskConfig;
@@ -259,27 +262,31 @@ fn verify_catches_reseeded_artifact() {
 
 #[test]
 fn quantized_roundtrip_bitwise_all_mask_methods_any_workers_shards() {
-    // The v2 acceptance case: an i8-tier model encodes its raw codes +
-    // scales (no dequantization round trip), so a load must reproduce
-    // the exact logits of the in-memory quantized model — any shard or
-    // worker count, every mask family.
+    // The v2/v4 acceptance case: a quantized-tier model encodes its raw
+    // codes + scales (no dequantization round trip; sub-8-bit codes are
+    // repacked shard-locally on load), so a load must reproduce the
+    // exact logits of the in-memory quantized model — any shard or
+    // worker count, every mask family, every quantized tier.
     let batch = 5;
     let x = weights(batch * D0, 61);
-    for method in ["prs", "magnitude", "random"] {
-        let original = model_for(method, 3).to_precision(Precision::I8);
-        let reference = InferenceSession::new(original.clone(), 1).infer_batch(&x, batch);
-        let bytes = encode_model(&original, 2).expect("encode");
-        for n_shards in [1usize, 3, 7] {
-            for workers in [1usize, 4] {
-                let opts = LoadOptions { n_shards, lanes: 2, verify: true, precision: None };
-                let loaded = decode_model(&bytes, &opts).expect("decode");
-                assert_eq!(loaded.uniform_precision(), Some(Precision::I8));
-                let got = InferenceSession::new(loaded, workers).infer_batch(&x, batch);
-                assert_bitwise_eq(
-                    &got,
-                    &reference,
-                    &format!("i8 {method} shards={n_shards} workers={workers}"),
-                );
+    for tier in [Precision::I8, Precision::I4, Precision::Ternary] {
+        for method in ["prs", "magnitude", "random"] {
+            let original = model_for(method, 3).to_precision(tier);
+            let reference = InferenceSession::new(original.clone(), 1).infer_batch(&x, batch);
+            let bytes = encode_model(&original, 2).expect("encode");
+            for n_shards in [1usize, 3, 7] {
+                for workers in [1usize, 4] {
+                    let opts =
+                        LoadOptions { n_shards, lanes: 2, verify: true, precision: None };
+                    let loaded = decode_model(&bytes, &opts).expect("decode");
+                    assert_eq!(loaded.uniform_precision(), Some(tier));
+                    let got = InferenceSession::new(loaded, workers).infer_batch(&x, batch);
+                    assert_bitwise_eq(
+                        &got,
+                        &reference,
+                        &format!("{tier} {method} shards={n_shards} workers={workers}"),
+                    );
+                }
             }
         }
     }
@@ -322,7 +329,7 @@ fn v1_artifact_still_loads_as_f32() {
     for method in ["prs", "magnitude"] {
         let model = model_for(method, 2);
         let v2 = encode_model(&model, 1).expect("encode");
-        assert_eq!(u32::from_le_bytes(v2[8..12].try_into().unwrap()), 3, "writer is at v3");
+        assert_eq!(u32::from_le_bytes(v2[8..12].try_into().unwrap()), 4, "writer is at v4");
         let v1 = patch_and_restamp(&v2, 8, &1u32.to_le_bytes());
         let strict = LoadOptions { n_shards: 3, lanes: 1, verify: true, precision: None };
         let loaded = decode_model(&v1, &strict).expect("v1 decodes");
@@ -359,17 +366,73 @@ fn v1_artifact_with_i8_flag_is_corrupt_not_misread() {
 
 #[test]
 fn version_skew_error_names_the_supported_range() {
-    // A future v4 artifact must fail with a message an operator can act
-    // on: the found version AND the v1..=v3 range this build reads.
+    // A future v5 artifact must fail with a message an operator can act
+    // on: the found version AND the v1..=v4 range this build reads.
     let bytes = encode_model(&model_for("prs", 1), 1).expect("encode");
-    let v4 = patch_and_restamp(&bytes, 8, &4u32.to_le_bytes());
-    match decode_model(&v4, &opts()) {
-        Err(e @ StoreError::UnsupportedVersion { found: 4 }) => {
+    let v5 = patch_and_restamp(&bytes, 8, &5u32.to_le_bytes());
+    match decode_model(&v5, &opts()) {
+        Err(e @ StoreError::UnsupportedVersion { found: 5 }) => {
             let msg = e.to_string();
-            assert!(msg.contains('4'), "{msg}");
-            assert!(msg.contains("v1") && msg.contains("v3"), "{msg}");
+            assert!(msg.contains('5'), "{msg}");
+            assert!(msg.contains("v1") && msg.contains("v4"), "{msg}");
         }
         other => panic!("expected UnsupportedVersion, got {other:?}"),
+    }
+}
+
+#[test]
+fn v4_records_stamped_as_older_versions_are_corrupt_not_misread() {
+    // Version skew, new-format side: the i4/ternary precision flags did
+    // not exist before v4 — a v1/v2/v3 header claiming them must fail
+    // with BOTH versions named, never a silent misparse of the packed
+    // payload.
+    for tier in [Precision::I4, Precision::Ternary] {
+        let q = model_for("prs", 2).to_precision(tier);
+        let v4 = encode_model(&q, 1).expect("encode");
+        for old in [1u32, 2, 3] {
+            let stamped = patch_and_restamp(&v4, 8, &old.to_le_bytes());
+            match decode_model(&stamped, &opts()) {
+                Err(StoreError::Corrupt { detail }) => {
+                    assert!(
+                        detail.contains("v4") && detail.contains(&format!("v{old}")),
+                        "{tier}@v{old}: {detail}"
+                    );
+                }
+                other => panic!("{tier}@v{old}: expected Corrupt, got {other:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn v3_fixture_still_decodes_every_v3_record_kind() {
+    // Version skew, old-format side: v3 byte streams (conv geometry,
+    // pool, dense records, f32/i8 planes — everything except the v4
+    // packed planes) are laid out identically under the v4 reader, so a
+    // re-stamped v3 fixture must decode bitwise.
+    let batch = 4;
+    let in_dim = 6 * 6 * 2;
+    let x = weights(batch * in_dim, 77);
+    for tier in [Precision::F32, Precision::I8] {
+        let model = conv_model(2).to_precision(tier);
+        let v4 = encode_model(&model, 1).expect("encode");
+        let v3 = patch_and_restamp(&v4, 8, &3u32.to_le_bytes());
+        let strict = LoadOptions { n_shards: 3, lanes: 1, verify: true, precision: None };
+        let loaded = decode_model(&v3, &strict).expect("v3 decodes");
+        assert_eq!(loaded.uniform_precision(), Some(tier));
+        let got = InferenceSession::new(loaded, 2).infer_batch(&x, batch);
+        let reference = InferenceSession::new(model, 1).infer_batch(&x, batch);
+        assert_bitwise_eq(&got, &reference, &format!("v3 {tier}"));
+        // A v3 load can still opt into a v4 tier at load time — the skew
+        // lives only in the file, not in the serving stack.
+        let quantizing = LoadOptions {
+            n_shards: 3,
+            lanes: 1,
+            verify: false,
+            precision: Some(Precision::Ternary),
+        };
+        let t = decode_model(&v3, &quantizing).expect("v3 + load-time ternary");
+        assert_eq!(t.uniform_precision(), Some(Precision::Ternary));
     }
 }
 
@@ -400,14 +463,14 @@ fn conv_model(shards: usize) -> CompiledModel {
 }
 
 #[test]
-fn conv_model_roundtrip_bitwise_both_tiers_any_workers_shards() {
-    // The v3 acceptance case: a conv-capable model (dense conv, pool,
+fn conv_model_roundtrip_bitwise_every_tier_any_workers_shards() {
+    // The v3/v4 acceptance case: a conv-capable model (dense conv, pool,
     // PRS conv, PRS FC) round-trips to the exact same logits for any
-    // shard/worker composition, in both precision tiers.
+    // shard/worker composition, in all four precision tiers.
     let batch = 5;
     let in_dim = 6 * 6 * 2;
     let x = weights(batch * in_dim, 81);
-    for tier in [Precision::F32, Precision::I8] {
+    for tier in [Precision::F32, Precision::I8, Precision::I4, Precision::Ternary] {
         let original = conv_model(3).to_precision(tier);
         let reference = InferenceSession::new(original.clone(), 1).infer_batch(&x, batch);
         let bytes = encode_model(&original, 2).expect("encode");
@@ -457,6 +520,54 @@ fn scaled_vgg16_roundtrip_bitwise_and_size_model_exact() {
     let loaded = decode_model(&bytes, &opts).expect("decode");
     let got = InferenceSession::new(loaded, 2).infer_batch(&x, batch);
     assert_bitwise_eq(&got, &reference, "scaled vgg16");
+}
+
+#[test]
+fn scaled_vgg16_sub8_roundtrip_bitwise_per_tier() {
+    // One VGG-scaled parity row per new tier: the conv stack inherits
+    // the packed planes through im2col, and an exported-then-loaded
+    // quantized VGG serves the exact bits of the in-memory model.
+    let batch = 2;
+    for tier in [Precision::I4, Precision::Ternary] {
+        let model = synthetic_vgg16_scaled(16, 16, 0.9, 2, 1).to_precision(tier);
+        let x = weights(batch * model.in_dim(), 87);
+        let reference = InferenceSession::new(model.clone(), 1).infer_batch(&x, batch);
+        let bytes = encode_model(&model, 2).expect("encode");
+        let opts = LoadOptions { n_shards: 3, lanes: 2, verify: true, precision: None };
+        let loaded = decode_model(&bytes, &opts).expect("decode");
+        assert_eq!(loaded.uniform_precision(), Some(tier));
+        let got = InferenceSession::new(loaded, 2).infer_batch(&x, batch);
+        assert_bitwise_eq(&got, &reference, &format!("scaled vgg16 {tier}"));
+    }
+}
+
+#[test]
+fn sub8_artifact_value_bytes_cut_8x_and_16x() {
+    // The on-disk counterpart of the in-memory footprint pins: i4 halves
+    // the i8 code payload (two per byte), ternary halves it again (four
+    // per byte), the scale vectors and seed/index state are identical
+    // across all quantized tiers.
+    let f = synthetic_lenet300(0.9, 2, 1);
+    let (_, fr) = encode_with_report(&f, 1).expect("f32 encode");
+    let (_, r8) = encode_with_report(&f.to_precision(Precision::I8), 1).expect("i8");
+    let (_, r4) = encode_with_report(&f.to_precision(Precision::I4), 1).expect("i4");
+    let (_, rt) = encode_with_report(&f.to_precision(Precision::Ternary), 1).expect("ternary");
+    let nnz: u64 = f.nnz() as u64;
+    assert_eq!(fr.value_bytes, 4 * nnz);
+    assert_eq!(r8.value_bytes, nnz);
+    // Per layer the packed length rounds up; totals stay within a few
+    // tail bytes of the ideal 2x/4x code cuts.
+    let i4_ideal: u64 = f.layers.iter().map(|l| (l.nnz() as u64 + 1) / 2).sum();
+    let t_ideal: u64 = f.layers.iter().map(|l| (l.nnz() as u64 + 3) / 4).sum();
+    assert_eq!(r4.value_bytes, i4_ideal);
+    assert_eq!(rt.value_bytes, t_ideal);
+    assert_eq!(r8.scale_bytes, r4.scale_bytes);
+    assert_eq!(r8.scale_bytes, rt.scale_bytes);
+    assert_eq!(fr.seed_bytes, rt.seed_bytes);
+    let ratio4 = fr.value_bytes as f64 / r4.value_bytes as f64;
+    let ratio_t = fr.value_bytes as f64 / rt.value_bytes as f64;
+    assert!(ratio4 > 7.9 && ratio4 <= 8.0, "i4 values cut {ratio4}");
+    assert!(ratio_t > 15.8 && ratio_t <= 16.0, "ternary values cut {ratio_t}");
 }
 
 #[test]
