@@ -11,7 +11,8 @@
 //! derived purely from the two per-layer LFSR seeds — the paper's
 //! serving premise end to end.
 //!
-//! Run: `cargo run --release --example infer_server [n_requests] [workers] [models]`
+//! Run: `cargo run --release --example infer_server \
+//!           [n_requests] [workers] [models] [dump_every_s]`
 //!
 //! With `models > 1` the server switches to multi-tenant mode: `models`
 //! differently-seeded LFSR-pruned LeNets register in a
@@ -21,17 +22,38 @@
 //! tenant serves the i8 precision tier (per-column-quantized kept
 //! values, ~4x smaller value memory) to demonstrate mixed f32/i8
 //! tenants on the one shared pool.
+//!
+//! With `dump_every_s > 0` the server periodically dumps the full
+//! Prometheus-style metrics exposition between `=== metrics ===` /
+//! `=== end metrics ===` markers while serving, plus one final dump at
+//! the end — CI's metrics smoke step parses exactly this output.  The
+//! binary installs `obs::CountingAllocator`, so the dumped
+//! `alloc_allocations_total` gauge reports real allocation counts.
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use lfsr_prune::data::{synth, SynthSpec};
+use lfsr_prune::obs::MetricsRegistry;
 use lfsr_prune::serve::{synthetic_lenet300, Batcher, InferenceSession};
 use lfsr_prune::store::{ModelRegistry, TenantConfig};
 
 const IN_DIM: usize = 784;
 const SPARSITY: f64 = 0.9;
 const BATCH: usize = 64;
+/// Per-layer span sampling period (see `TenantConfig::span_sample_every`).
+const SAMPLE_EVERY: u64 = 16;
+
+#[global_allocator]
+static ALLOC: lfsr_prune::obs::CountingAllocator = lfsr_prune::obs::CountingAllocator;
+
+/// Prints the exposition between markers so a log consumer (or CI's
+/// smoke step) can slice metric blocks out of the serving output.
+fn dump_metrics(text: &str) {
+    println!("=== metrics ===");
+    print!("{text}");
+    println!("=== end metrics ===");
+}
 
 fn main() {
     let n_requests: usize = std::env::args()
@@ -46,8 +68,12 @@ fn main() {
         .nth(3)
         .and_then(|s| s.parse().ok())
         .unwrap_or(1);
+    let dump_every: f64 = std::env::args()
+        .nth(4)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.0);
     if models > 1 {
-        return serve_multi_model(n_requests, workers, models);
+        return serve_multi_model(n_requests, workers, models, dump_every);
     }
 
     // Compile: expand each layer's two LFSR seeds into the packed
@@ -61,8 +87,14 @@ fn main() {
         SPARSITY * 100.0
     );
     println!("{}", model.describe());
-    let session = InferenceSession::new(model, workers);
+    let mut session = InferenceSession::new(model, workers);
     println!("serving with {} worker thread(s), batch size {BATCH}", session.workers());
+
+    // Single-tenant mode has no ModelRegistry, so it assembles its own
+    // exposition registry from the session + batcher metric bundles.
+    let metrics = MetricsRegistry::new();
+    let alloc_gauge = metrics.gauge("alloc_allocations_total", lfsr_prune::obs::labels(&[]));
+    session.enable_metrics(SAMPLE_EVERY).register_into(&metrics, "lenet300");
 
     // Client thread: streams requests as fast as the server consumes.
     // Each request carries its send timestamp so channel wait counts
@@ -84,10 +116,17 @@ fn main() {
     // classify -> complete cycle is allocation-free (arena inference +
     // recycled batcher buffers).
     let mut batcher = Batcher::new(BATCH, IN_DIM);
+    batcher.metrics().register_into(&metrics, "lenet300");
     let (mut logits, mut classes) = (Vec::new(), Vec::new());
     let mut answered = 0usize;
     let mut disconnected = false;
+    let mut last_dump = Instant::now();
     while answered < n_requests {
+        if dump_every > 0.0 && last_dump.elapsed().as_secs_f64() >= dump_every {
+            alloc_gauge.set(lfsr_prune::obs::total_allocations() as i64);
+            dump_metrics(&metrics.render_text());
+            last_dump = Instant::now();
+        }
         while let Ok((id, x, sent_at)) = rx.try_recv() {
             batcher.push_at(id, x, sent_at);
         }
@@ -122,21 +161,30 @@ fn main() {
     );
     if let Some(lat) = s.latency {
         println!(
-            "latency (send -> answer): median {:.2} ms  mean {:.2} ms  p95 {:.2} ms",
+            "latency (send -> answer): median {:.2} ms  mean {:.2} ms  p95 {:.2} ms  p99 {:.2} ms",
             lat.median * 1e3,
             lat.mean * 1e3,
-            lat.p95 * 1e3
+            lat.p95 * 1e3,
+            lat.p99 * 1e3
         );
+    }
+    if dump_every > 0.0 {
+        alloc_gauge.set(lfsr_prune::obs::total_allocations() as i64);
+        dump_metrics(&metrics.render_text());
     }
 }
 
 /// Multi-tenant mode: N differently-seeded models — odd-indexed tenants
 /// quantized to the i8 tier — one shared pool, requests routed by model
 /// id through the registry.
-fn serve_multi_model(n_requests: usize, workers: usize, models: usize) {
+fn serve_multi_model(n_requests: usize, workers: usize, models: usize, dump_every: f64) {
     use lfsr_prune::sparse::Precision;
     let reg = ModelRegistry::new(workers);
-    let cfg = TenantConfig { batch: BATCH, max_wait: Some(Duration::from_millis(5)) };
+    let cfg = TenantConfig {
+        batch: BATCH,
+        max_wait: Some(Duration::from_millis(5)),
+        span_sample_every: SAMPLE_EVERY,
+    };
     let t0 = Instant::now();
     let ids: Vec<String> = (0..models)
         .map(|m| {
@@ -180,7 +228,12 @@ fn serve_multi_model(n_requests: usize, workers: usize, models: usize) {
     });
 
     let mut answered = 0usize;
+    let mut last_dump = Instant::now();
     while answered < n_requests {
+        if dump_every > 0.0 && last_dump.elapsed().as_secs_f64() >= dump_every {
+            dump_metrics(&reg.metrics_text());
+            last_dump = Instant::now();
+        }
         while let Ok((m, id, x)) = rx.try_recv() {
             reg.push(&ids[m], id, x).expect("routed push");
         }
@@ -196,19 +249,20 @@ fn serve_multi_model(n_requests: usize, workers: usize, models: usize) {
     println!("\nper-tenant stats ({} requests total):", n_requests);
     for info in reg.list() {
         let s = &info.stats;
-        let lat = s.latency.map_or(0.0, |l| l.p95 * 1e3);
         let tier = info.precision.map_or("mixed".to_string(), |p| p.to_string());
         println!(
-            "  {}: {} req / {} batches -> {:.0} req/s (p95 {:.2} ms, {} padded rows, nnz {}, \
-             {} values)",
+            "  {}: {} req / {} batches -> {:.0} req/s ({}, {} padded rows, nnz {}, {} values)",
             info.id,
             s.requests,
             s.batches,
             s.throughput_rps(),
-            lat,
+            s.latency_cell(),
             s.padded,
             info.nnz,
             tier
         );
+    }
+    if dump_every > 0.0 {
+        dump_metrics(&reg.metrics_text());
     }
 }

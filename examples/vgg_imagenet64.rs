@@ -119,7 +119,11 @@ fn serve_mode() -> anyhow::Result<()> {
     reg.insert(
         "vgg16",
         model,
-        TenantConfig { batch: 16, max_wait: Some(Duration::from_millis(10)) },
+        TenantConfig {
+            batch: 16,
+            max_wait: Some(Duration::from_millis(10)),
+            span_sample_every: 16,
+        },
     )
     .expect("fresh registry");
     let mut rng = Pcg32::new(64);
@@ -139,14 +143,13 @@ fn serve_mode() -> anyhow::Result<()> {
     for info in reg.list() {
         let s = &info.stats;
         println!(
-            "served {} requests in {:.2}s -> {:.1} req/s over {} batches ({} padded rows, p95 \
-             {:.1} ms)",
+            "served {} requests in {:.2}s -> {:.1} req/s over {} batches ({} padded rows, {})",
             s.requests,
             wall,
             requests as f64 / wall,
             s.batches,
             s.padded,
-            s.latency.map_or(0.0, |l| l.p95 * 1e3),
+            s.latency_cell(),
         );
     }
     Ok(())

@@ -1,0 +1,170 @@
+# Executable mirror of the obs histogram math (`rust/src/obs/metrics.rs`):
+# log2 bucketing (bucket b covers [2^b, 2^(b+1)) ns), the cumulative-walk
+# quantile with linear interpolation inside the target bucket, and the
+# [min, max] clamp.  Every operation is mirrored exactly — integer
+# bucket/rank arithmetic, then the same IEEE f64 expression
+# `lo * (1.0 + (target - cum) / c)` — so the pinned quantile constants
+# below are bit-identical between this file and
+# `rust/tests/obs_metrics.rs` (which pins the SAME numbers against the
+# rust `Histogram` on the SAME Pcg32 sample stream).
+#
+# Run as a script (`python3 test_obs_pins.py`) to re-derive the pins:
+# it prints the measured count/sum/min/max and p50/p95/p99 estimates.
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from tests.test_quant_pins import Pcg32  # noqa: E402
+
+HIST_BUCKETS = 64
+
+# The shared fixture: 100k samples `1 + (next_u32() % 50_000_000)` ns
+# (1 ns .. 50 ms — the serving stack's realistic span range) from the
+# rust-mirrored Pcg32 stream.
+SEED = 0xB5
+N_SAMPLES = 100_000
+MODULUS = 50_000_000
+
+# Pinned constants, derived by running this file.  The rust side asserts
+# the identical values (integer fields exactly, f64 quantiles to 1e-9
+# relative) — if either implementation drifts, one of the twins fails.
+PIN_COUNT = 100_000
+PIN_SUM_NS = 2_508_770_600_668
+PIN_MIN_NS = 14
+PIN_MAX_NS = 49_999_712
+PIN_P50_NS = 25139218.995870985
+# p95/p99 land in the top occupied bucket ([2^25, 2^26) ns) where the
+# interpolated estimate overshoots the observed ceiling, so the [min,
+# max] clamp snaps both to the exact max — still within the 2x bound.
+PIN_P95_NS = 49999712.0
+PIN_P99_NS = 49999712.0
+# Exact rank statistics of the same stream (sorted sample at rank
+# ceil(q*n)), pinned so the <=2x interpolation-error bound is checked
+# against ground truth, not just against itself.
+PIN_EXACT_P50_NS = 25_126_468
+PIN_EXACT_P95_NS = 47_505_180
+PIN_EXACT_P99_NS = 49_503_444
+
+
+def bucket_of(ns: int) -> int:
+    # Mirror: 63 - leading_zeros(max(ns, 1)) == floor(log2(ns)).
+    return max(ns, 1).bit_length() - 1
+
+
+class Hist:
+    """Python twin of obs::Histogram (recording + quantile only)."""
+
+    def __init__(self) -> None:
+        self.buckets = [0] * HIST_BUCKETS
+        self.count = 0
+        self.sum_ns = 0
+        self.min_ns = None
+        self.max_ns = None
+
+    def record_ns(self, ns: int) -> None:
+        ns = max(ns, 1)
+        self.buckets[bucket_of(ns)] += 1
+        self.count += 1
+        self.sum_ns += ns
+        self.min_ns = ns if self.min_ns is None else min(self.min_ns, ns)
+        self.max_ns = ns if self.max_ns is None else max(self.max_ns, ns)
+
+    def quantile_ns(self, q: float) -> float | None:
+        # Operation-for-operation mirror of Histogram::quantile_ns.
+        if self.count == 0:
+            return None
+        target = min(max(int(-(-(q * self.count) // 1)), 1), self.count)
+        cum = 0
+        for b in range(HIST_BUCKETS):
+            c = self.buckets[b]
+            if c > 0 and cum + c >= target:
+                lo = float(1 << b)
+                frac = float(target - cum) / float(c)
+                est = lo * (1.0 + frac)
+                return min(max(est, float(max(self.min_ns, 1))), float(self.max_ns))
+            cum += c
+        return None
+
+
+def sample_stream() -> list[int]:
+    rng = Pcg32(SEED)
+    return [1 + rng.next_u32() % MODULUS for _ in range(N_SAMPLES)]
+
+
+def exact_quantile(sorted_ns: list[int], q: float) -> int:
+    target = min(max(int(-(-(q * len(sorted_ns)) // 1)), 1), len(sorted_ns))
+    return sorted_ns[target - 1]
+
+
+def build() -> tuple[Hist, list[int]]:
+    ns = sample_stream()
+    h = Hist()
+    for v in ns:
+        h.record_ns(v)
+    return h, sorted(ns)
+
+
+def test_bucket_boundaries() -> None:
+    # Same boundary table rust pins in metrics.rs unit tests.
+    assert bucket_of(0) == 0
+    assert bucket_of(1) == 0
+    assert bucket_of(2) == 1
+    assert bucket_of(3) == 1
+    assert bucket_of(4) == 2
+    for k in range(63):
+        assert bucket_of(1 << k) == k
+        if k > 0:
+            assert bucket_of((1 << k) - 1) == k - 1
+            assert bucket_of((1 << k) + 1) == k
+    assert bucket_of((1 << 64) - 1) == HIST_BUCKETS - 1
+
+
+def test_pinned_exact_fields() -> None:
+    h, _ = build()
+    assert h.count == PIN_COUNT
+    assert h.sum_ns == PIN_SUM_NS
+    assert h.min_ns == PIN_MIN_NS
+    assert h.max_ns == PIN_MAX_NS
+
+
+def test_pinned_quantiles_match_rust() -> None:
+    h, _ = build()
+    assert h.quantile_ns(0.5) == PIN_P50_NS
+    assert h.quantile_ns(0.95) == PIN_P95_NS
+    assert h.quantile_ns(0.99) == PIN_P99_NS
+
+
+def test_estimates_within_2x_of_exact_rank_statistic() -> None:
+    h, sorted_ns = build()
+    for q, exact_pin in [
+        (0.5, PIN_EXACT_P50_NS),
+        (0.95, PIN_EXACT_P95_NS),
+        (0.99, PIN_EXACT_P99_NS),
+    ]:
+        exact = exact_quantile(sorted_ns, q)
+        assert exact == exact_pin
+        est = h.quantile_ns(q)
+        ratio = est / exact
+        assert 0.5 <= ratio <= 2.0, f"q={q}: est {est} vs exact {exact}"
+
+
+def test_degenerate_distribution_is_exact() -> None:
+    h = Hist()
+    for _ in range(7):
+        h.record_ns(12_345)
+    for q in (0.5, 0.95, 0.99):
+        assert h.quantile_ns(q) == 12_345.0
+
+
+if __name__ == "__main__":
+    h, sorted_ns = build()
+    print(f"count  {h.count}")
+    print(f"sum_ns {h.sum_ns}")
+    print(f"min_ns {h.min_ns}")
+    print(f"max_ns {h.max_ns}")
+    for q in (0.5, 0.95, 0.99):
+        est = h.quantile_ns(q)
+        exact = exact_quantile(sorted_ns, q)
+        print(f"p{int(q * 100):02d}: est {est!r}  exact {exact}  ratio {est / exact:.4f}")

@@ -13,6 +13,7 @@ use std::fmt::Write as _;
 
 use lfsr_prune::data::rng::Pcg32;
 use lfsr_prune::mask::prs::PrsMaskConfig;
+use lfsr_prune::obs::{Histogram, Stage};
 use lfsr_prune::serve::{
     parallel_keep_sequence, synthetic_lenet300, synthetic_vgg16_scaled, Batcher, InferenceSession,
 };
@@ -33,6 +34,19 @@ impl Row {
     fn throughput(&self) -> f64 {
         self.items as f64 / self.stats.median
     }
+}
+
+/// One stage histogram as a JSON object: exact count + interpolated
+/// quantiles in milliseconds (0.0 when the histogram is empty).
+fn hist_json(h: &Histogram) -> String {
+    let q = |p: f64| h.quantile(p).map_or(0.0, |s| s * 1e3);
+    format!(
+        "{{\"count\": {}, \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"p99_ms\": {:.4}}}",
+        h.count(),
+        q(0.5),
+        q(0.95),
+        q(0.99)
+    )
 }
 
 fn main() {
@@ -113,7 +127,10 @@ fn main() {
     }
 
     // --- end-to-end queue -> batch -> answer loop ------------------------
-    let session = InferenceSession::new(synthetic_lenet300(SPARSITY, 4 * multi, multi), multi);
+    // Span sampling at every=1 so the stage histograms in the JSON cover
+    // every request — the bench doubles as the observability fixture.
+    let mut session = InferenceSession::new(synthetic_lenet300(SPARSITY, 4 * multi, multi), multi);
+    let spans = session.enable_metrics(1);
     let n_requests = 2048usize;
     let batch = 64usize;
     let mut batcher = Batcher::new(batch, DIMS[0]);
@@ -129,11 +146,12 @@ fn main() {
     }
     let serve_stats = batcher.stats();
     println!(
-        "bench serve/e2e_queue_b{batch}_w{multi}: {} req in {:.3}s -> {:.0} req/s (p95 latency {:.2} ms, {} padded rows)",
+        "bench serve/e2e_queue_b{batch}_w{multi}: {} req in {:.3}s -> {:.0} req/s ({}, {} \
+         padded rows)",
         serve_stats.requests,
         serve_stats.wall_s,
         serve_stats.throughput_rps(),
-        serve_stats.latency.map_or(0.0, |l| l.p95 * 1e3),
+        serve_stats.latency_cell(),
         serve_stats.padded,
     );
 
@@ -169,13 +187,49 @@ fn main() {
     let _ = writeln!(json, "  ],");
     let _ = writeln!(
         json,
-        "  \"e2e\": {{\"requests\": {}, \"batch\": {batch}, \"workers\": {multi}, \"wall_s\": {:.6}, \"throughput_rps\": {:.1}, \"p95_latency_ms\": {:.3}, \"padded_rows\": {}}}",
+        "  \"e2e\": {{\"requests\": {}, \"batch\": {batch}, \"workers\": {multi}, \"wall_s\": \
+         {:.6}, \"throughput_rps\": {:.1}, \"p95_latency_ms\": {:.3}, \"p99_latency_ms\": {:.3}, \
+         \"padded_rows\": {}}},",
         serve_stats.requests,
         serve_stats.wall_s,
         serve_stats.throughput_rps(),
         serve_stats.latency.map_or(0.0, |l| l.p95 * 1e3),
+        serve_stats.latency.map_or(0.0, |l| l.p99 * 1e3),
         serve_stats.padded,
     );
+    // Staged latency breakdown (enqueue -> cut -> panel_pack ->
+    // shard_execute -> complete) from the span histograms, so the stage
+    // mix is diffable across PRs alongside the end-to-end row.
+    let bm = batcher.metrics();
+    let _ = writeln!(json, "  \"stages\": {{");
+    let _ = writeln!(json, "    \"sample_every\": 1,");
+    let _ = writeln!(json, "    \"enqueue\": {},", hist_json(&bm.enqueue));
+    let _ = writeln!(json, "    \"cut\": {},", hist_json(&bm.cut));
+    let _ = writeln!(
+        json,
+        "    \"panel_pack\": {},",
+        hist_json(&spans.merged_stage(Stage::PanelPack))
+    );
+    let _ = writeln!(
+        json,
+        "    \"shard_execute\": {},",
+        hist_json(&spans.merged_stage(Stage::ShardExecute))
+    );
+    let _ = writeln!(json, "    \"complete\": {},", hist_json(&bm.complete));
+    let _ = writeln!(json, "    \"per_layer\": [");
+    for (li, layer) in spans.layers.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "      {{\"layer\": {li}, \"kind\": \"{}\", \"panel_pack\": {}, \"shard_execute\": \
+             {}}}{}",
+            layer.kind,
+            hist_json(&layer.panel_pack),
+            hist_json(&layer.shard_execute),
+            if li + 1 == spans.layers.len() { "" } else { "," }
+        );
+    }
+    let _ = writeln!(json, "    ]");
+    let _ = writeln!(json, "  }}");
     json.push_str("}\n");
 
     let out = bench_out_path("BENCH_serve.json");
@@ -185,4 +239,5 @@ fn main() {
     // Sanity: the parsed file round-trips through the repo's own parser.
     let parsed = lfsr_prune::util::json::parse(&json).expect("valid json");
     assert!(parsed.get("results").is_some());
+    assert!(parsed.get("stages").is_some());
 }

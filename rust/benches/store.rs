@@ -69,6 +69,7 @@ fn main() {
         let cfg = TenantConfig {
             batch: 64,
             max_wait: Some(std::time::Duration::from_millis(5)),
+            span_sample_every: 16,
         };
         let ids: Vec<String> = (0..models)
             .map(|m| {

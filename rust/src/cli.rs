@@ -9,6 +9,8 @@
 //!   experiment <name|all>     — regenerate the paper's tables/figures
 //!   export                    — write a compiled model as an .lfsrpack artifact
 //!   serve-artifact <paths..>  — load artifacts into the registry and serve
+//!   stats [paths..]           — serve briefly, print per-tenant stats +
+//!                               the Prometheus-style metrics exposition
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -94,6 +96,10 @@ USAGE:
   repro serve-artifact PATH [PATH..] [--requests N] [--workers N]
                [--batch B] [--deadline-ms D] [--shards N] [--lanes N]
                [--precision keep|f32|i8|i4|ternary[,..]] [--verify]
+  repro stats [PATH..] [--requests N] [--workers N] [--batch B]
+               [--deadline-ms D] [--shards N] [--lanes N]
+               [--precision keep|f32|i8|i4|ternary[,..]]
+               [--sample-every N] [--prom]
 
 `export` writes a demo model as a `.lfsrpack` artifact: the LFSR-pruned
 LeNet-300-100 (default), or `--model vgg16` — the paper's modified
@@ -110,6 +116,14 @@ shared worker-pool registry and serves synthetic traffic across them;
 `--precision` picks each tenant's serving tier (`keep` = as stored;
 one value for all paths, or a comma list with one tier per path —
 mixed-tier tenants share the one pool).
+`stats` is the observability scrape: it serves a short burst of
+synthetic traffic (over the given artifacts, or built-in demo tenants
+when no path is given), prints the per-tenant table (p95/p99 say `n/a`
+for tenants with no completed requests), and dumps the full
+Prometheus-style metrics exposition — `--prom` prints the exposition
+alone (machine-readable, what CI's smoke step parses), and
+`--sample-every N` sets the per-layer span sampling knob (1 = time
+every call, 0 = per-layer spans off).
 
 Artifacts default to ./artifacts (or $LFSR_PRUNE_ARTIFACTS); build them
 with `make artifacts` first.";
@@ -133,6 +147,7 @@ pub fn main_with_args(argv: Vec<String>) -> Result<()> {
         "experiment" => cmd_experiment(&args),
         "export" => cmd_export(&args),
         "serve-artifact" => cmd_serve_artifact(&args),
+        "stats" => cmd_stats(&args),
         other => bail!("unknown command {other}\n{USAGE}"),
     }
 }
@@ -371,7 +386,11 @@ fn cmd_serve_artifact(args: &Args) -> Result<()> {
     let requests: usize = args.get("requests", 2048usize)?;
     let deadline_ms: u64 = args.get("deadline-ms", 5u64)?;
     let precisions = tenant_precisions(args, paths.len())?;
-    let cfg = TenantConfig { batch, max_wait: Some(Duration::from_millis(deadline_ms)) };
+    let cfg = TenantConfig {
+        batch,
+        max_wait: Some(Duration::from_millis(deadline_ms)),
+        span_sample_every: args.get("sample-every", 16u64)?,
+    };
     let reg = ModelRegistry::new(workers);
     let mut ids = Vec::new();
     for (path, precision) in paths.iter().zip(precisions) {
@@ -412,11 +431,18 @@ fn cmd_serve_artifact(args: &Args) -> Result<()> {
     while answered < requests {
         answered += reg.drain(true).len();
     }
+    print_tenant_table(&reg);
+    Ok(())
+}
+
+/// Per-tenant status table shared by `serve-artifact` and `stats`.
+/// Latency goes through [`ServeStats::latency_cell`], so a tenant with
+/// no completed requests prints `p95 n/a p99 n/a` instead of `0.0`.
+fn print_tenant_table(reg: &ModelRegistry) {
     for m in reg.list() {
-        let lat = m.stats.latency.map_or(0.0, |l| l.p95 * 1e3);
         println!(
-            "  {} ({}fc+{}conv+{}pool): {} req over {} batches -> {:.0} req/s (p95 {:.2} ms, \
-             {} padded rows)",
+            "  {} ({}fc+{}conv+{}pool): {} req over {} batches -> {:.0} req/s ({}, \
+             {} padded rows, {} pending)",
             m.id,
             m.kinds.fc,
             m.kinds.conv,
@@ -424,10 +450,82 @@ fn cmd_serve_artifact(args: &Args) -> Result<()> {
             m.stats.requests,
             m.stats.batches,
             m.stats.throughput_rps(),
-            lat,
-            m.stats.padded
+            m.stats.latency_cell(),
+            m.stats.padded,
+            m.pending,
         );
     }
+}
+
+/// `repro stats` — the observability scrape: serve a short synthetic
+/// burst (given artifacts, or built-in demo tenants), print the
+/// per-tenant table and the full metrics exposition.  `--prom` prints
+/// the exposition alone.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let paths: Vec<PathBuf> = args.positional[1..].iter().map(PathBuf::from).collect();
+    let workers: usize = args.get("workers", 2usize)?;
+    let batch: usize = args.get("batch", 16usize)?;
+    if batch == 0 {
+        bail!("--batch must be >= 1");
+    }
+    let requests: usize = args.get("requests", 256usize)?;
+    let deadline_ms: u64 = args.get("deadline-ms", 5u64)?;
+    let prom_only = args.bool_flag("prom");
+    let cfg = TenantConfig {
+        batch,
+        max_wait: Some(Duration::from_millis(deadline_ms)),
+        span_sample_every: args.get("sample-every", 1u64)?,
+    };
+    let reg = ModelRegistry::new(workers);
+    let mut ids = Vec::new();
+    if paths.is_empty() {
+        // Demo tenants: an f32 LeNet-300, its i8 twin taking traffic,
+        // and an idle tenant demonstrating the n/a latency row.
+        let model = synthetic_lenet300_seeded(0.9, 4, 2, 11);
+        reg.insert("lenet300-f32", model.clone(), cfg)?;
+        reg.insert("lenet300-i8", model.clone().to_precision(Precision::I8), cfg)?;
+        reg.insert("idle", model, cfg)?;
+        ids.push("lenet300-f32".to_string());
+        ids.push("lenet300-i8".to_string());
+    } else {
+        let precisions = tenant_precisions(args, paths.len())?;
+        for (path, precision) in paths.iter().zip(precisions) {
+            let opts = LoadOptions {
+                n_shards: args.get("shards", 4usize)?,
+                lanes: args.get("lanes", 2usize)?,
+                verify: false,
+                precision,
+            };
+            let id =
+                path.file_stem().and_then(|s| s.to_str()).unwrap_or("model").to_string();
+            reg.load(&id, path, &opts, cfg)?;
+            ids.push(id);
+        }
+    }
+    let in_dims: BTreeMap<String, usize> =
+        reg.list().into_iter().map(|m| (m.id, m.in_dim)).collect();
+    let mut rng = Pcg32::new(123);
+    for i in 0..requests {
+        let id = &ids[i % ids.len()];
+        let x: Vec<f32> = (0..in_dims[id]).map(|_| rng.next_f32()).collect();
+        reg.push(id, i as u64, x)?;
+    }
+    let mut answered = 0usize;
+    while answered < requests {
+        answered += reg.drain(true).len();
+    }
+    if prom_only {
+        print!("{}", reg.metrics_text());
+        return Ok(());
+    }
+    println!(
+        "served {requests} synthetic requests over {} tenant(s), {} shared worker thread(s):",
+        reg.len(),
+        reg.workers(),
+    );
+    print_tenant_table(&reg);
+    println!("\n# metrics exposition (serve via the /metrics endpoint, ROADMAP item 2):");
+    print!("{}", reg.metrics_text());
     Ok(())
 }
 

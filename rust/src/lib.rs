@@ -41,6 +41,7 @@ pub mod runtime;
 pub mod util;
 pub mod lfsr;
 pub mod mask;
+pub mod obs;
 pub mod pipeline;
 pub mod rank;
 pub mod serve;

@@ -1,0 +1,69 @@
+//! A counting global allocator, promoted from test-only scaffolding to a
+//! library type so binaries can install it and export the running
+//! allocation total as a gauge (`alloc_allocations_total`) — allocation
+//! regressions become observable in production, not just in
+//! `tests/alloc_steady_state.rs`.
+//!
+//! Install it per binary with the usual two lines:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: lfsr_prune::obs::CountingAllocator = lfsr_prune::obs::CountingAllocator;
+//! ```
+//!
+//! [`total_allocations`] then reports the number of allocation events
+//! (alloc + alloc_zeroed + realloc; frees are not counted) since process
+//! start.  In binaries that do *not* install it the counter simply stays
+//! 0 and the gauge reads 0 — the exposition side never needs to know.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Pass-through [`System`] allocator that counts allocation events.
+pub struct CountingAllocator;
+
+// SAFETY: defers every operation to `System`; the only addition is a
+// relaxed counter bump, which is allocation-free and thread-safe.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Allocation events since process start (0 if [`CountingAllocator`] is
+/// not installed as the `#[global_allocator]` of this binary).
+pub fn total_allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_is_monotone() {
+        // The unit-test binary does not install the allocator, so the
+        // counter is stable — but the API must still be callable and
+        // monotone.
+        let a = total_allocations();
+        let b = total_allocations();
+        assert!(b >= a);
+    }
+}

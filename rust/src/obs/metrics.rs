@@ -1,0 +1,413 @@
+//! Lock-free metric primitives: [`Counter`], [`Gauge`], a fixed-bucket
+//! log₂ [`Histogram`], and the [`Sampler`] gating expensive span timing.
+//!
+//! Every write is a handful of relaxed atomic operations into pre-sized
+//! storage — no locks, no heap allocation, safe to call from the serving
+//! hot path on every request.  Reads (snapshots, quantiles, exposition)
+//! are relaxed too: a scrape racing a record may see `count` and `sum`
+//! skewed by the in-flight sample, which is the standard metrics
+//! trade-off and irrelevant at scrape granularity.
+//!
+//! The histogram stores **nanosecond** values in 64 power-of-two buckets
+//! (bucket `b` covers `[2^b, 2^(b+1))` ns, values below 1 ns clamp to
+//! 1 ns), so its memory is a fixed ~600 B regardless of how many samples
+//! it absorbs — the replacement for the batcher's old unbounded
+//! `Vec<f64>` latency log.  Quantiles come from a cumulative walk with
+//! linear interpolation inside the target bucket, clamped to the
+//! observed `[min, max]`; the estimate is provably within a factor of 2
+//! of the exact rank statistic (both live in the same bucket), and
+//! degenerate distributions (all samples equal) are exact thanks to the
+//! clamp.  `python/tests/test_obs_pins.py` is the executable mirror of
+//! the bucketing + interpolation math; `rust/tests/obs_metrics.rs` pins
+//! the same constants.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::bench::Stats;
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (queue depth, allocation total).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicI64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of power-of-two buckets; bucket `b` covers `[2^b, 2^(b+1))` ns,
+/// which spans 1 ns .. ~584 years — every latency fits.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Fixed-memory log₂ latency histogram (nanosecond domain).
+///
+/// Mergeable ([`Histogram::merge_from`] is associative and commutative,
+/// so per-thread or per-layer histograms can be combined in any order),
+/// and summarizable as the repo's [`Stats`] shape via
+/// [`Histogram::to_stats`] — `min` and `mean` are exact, `median`/`p95`/
+/// `p99` are bucket-interpolated estimates within 2× of the true rank
+/// statistic.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    /// `u64::MAX` until the first record.
+    min_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index of a (clamped, non-zero) nanosecond value: floor log₂.
+    #[inline]
+    pub fn bucket_of(ns: u64) -> usize {
+        let ns = ns.max(1);
+        63 - ns.leading_zeros() as usize
+    }
+
+    /// Record one nanosecond sample.  Lock-free, allocation-free: five
+    /// relaxed atomic ops.  Values below 1 ns count as 1 ns.
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        let ns = ns.max(1);
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Record a wall-time span.
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    /// Exact smallest recorded value; `None` until the first record.
+    pub fn min_ns(&self) -> Option<u64> {
+        match self.min_ns.load(Ordering::Relaxed) {
+            u64::MAX => None,
+            v => Some(v),
+        }
+    }
+
+    /// Exact largest recorded value; `None` until the first record.
+    pub fn max_ns(&self) -> Option<u64> {
+        if self.count() == 0 {
+            None
+        } else {
+            Some(self.max_ns.load(Ordering::Relaxed))
+        }
+    }
+
+    /// Snapshot of the per-bucket counts.
+    pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|b| self.buckets[b].load(Ordering::Relaxed))
+    }
+
+    /// Fold another histogram into this one (bucket-wise adds; min/max
+    /// combine exactly).  Associative and commutative, so sharded
+    /// histograms reduce in any order.
+    pub fn merge_from(&self, other: &Histogram) {
+        for b in 0..HIST_BUCKETS {
+            let c = other.buckets[b].load(Ordering::Relaxed);
+            if c > 0 {
+                self.buckets[b].fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum_ns.fetch_add(other.sum_ns(), Ordering::Relaxed);
+        self.min_ns.fetch_min(other.min_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_ns.fetch_max(other.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Estimated `q`-quantile in nanoseconds (`None` while empty).
+    ///
+    /// Target rank `ceil(q·count)` (clamped to `[1, count]`), located by
+    /// a cumulative bucket walk; linear interpolation inside the bucket,
+    /// clamped to the exact observed `[min, max]`.  The exact rank
+    /// statistic lives in the same `[2^b, 2^(b+1))` bucket, so the
+    /// estimate is within a factor of 2 — `test_obs_pins.py` mirrors this
+    /// formula operation for operation.
+    pub fn quantile_ns(&self, q: f64) -> Option<f64> {
+        let count = self.count();
+        if count == 0 {
+            return None;
+        }
+        let target = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut cum = 0u64;
+        for b in 0..HIST_BUCKETS {
+            let c = self.buckets[b].load(Ordering::Relaxed);
+            if c > 0 && cum + c >= target {
+                let lo = (1u64 << b) as f64;
+                let frac = (target - cum) as f64 / c as f64;
+                let est = lo * (1.0 + frac);
+                let min = self.min_ns.load(Ordering::Relaxed).max(1) as f64;
+                let max = self.max_ns.load(Ordering::Relaxed) as f64;
+                return Some(est.clamp(min, max));
+            }
+            cum += c;
+        }
+        // Reachable only if a racing record skewed the snapshot.
+        None
+    }
+
+    /// Estimated `q`-quantile in seconds (`None` while empty).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        self.quantile_ns(q).map(|ns| ns * 1e-9)
+    }
+
+    /// Summarize as the repo's bench/serving [`Stats`] shape (seconds):
+    /// exact `samples`/`mean`/`min`, interpolated `median`/`p95`/`p99`.
+    /// `None` while empty — the serving layer maps that to "n/a".
+    pub fn to_stats(&self) -> Option<Stats> {
+        let count = self.count();
+        if count == 0 {
+            return None;
+        }
+        Some(Stats {
+            samples: count as usize,
+            mean: (self.sum_ns() as f64 / count as f64) * 1e-9,
+            median: self.quantile(0.5).unwrap_or(0.0),
+            p95: self.quantile(0.95).unwrap_or(0.0),
+            p99: self.quantile(0.99).unwrap_or(0.0),
+            min: self.min_ns().unwrap_or(0) as f64 * 1e-9,
+        })
+    }
+}
+
+/// Every-Nth gate for span timing that is too hot to measure on each
+/// call (per-layer kernel spans).  `every(1)` samples everything;
+/// `every(n)` passes one call in `n` (the first of each period, so a
+/// short-lived process still reports spans).
+#[derive(Debug)]
+pub struct Sampler {
+    every: u64,
+    ticks: AtomicU64,
+}
+
+impl Sampler {
+    /// `n` is clamped to ≥ 1 (a zero period means "sampling disabled",
+    /// which callers express by not constructing the metrics at all).
+    pub fn every(n: u64) -> Sampler {
+        Sampler { every: n.max(1), ticks: AtomicU64::new(0) }
+    }
+
+    /// The sampling period.
+    pub fn period(&self) -> u64 {
+        self.every
+    }
+
+    /// True for one call in `period()`.  Lock-free; concurrent callers
+    /// each draw their own tick.
+    #[inline]
+    pub fn tick(&self) -> bool {
+        self.every <= 1 || self.ticks.fetch_add(1, Ordering::Relaxed) % self.every == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(7);
+        g.add(-3);
+        assert_eq!(g.get(), 4);
+    }
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        // Bucket b covers [2^b, 2^(b+1)); 0 clamps into bucket 0.
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 1);
+        assert_eq!(Histogram::bucket_of(4), 2);
+        for k in 0..63 {
+            assert_eq!(Histogram::bucket_of(1u64 << k), k as usize, "2^{k}");
+            if k > 0 {
+                assert_eq!(Histogram::bucket_of((1u64 << k) - 1), k as usize - 1);
+                assert_eq!(Histogram::bucket_of((1u64 << k) + 1), k as usize, "2^{k}+1");
+            }
+        }
+        assert_eq!(Histogram::bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_is_fixed_size() {
+        // The whole point vs the old Vec<f64>: memory is constant no
+        // matter how many samples are recorded.
+        let h = Histogram::new();
+        for i in 0..100_000u64 {
+            h.record_ns(1 + i % 1_000_000);
+        }
+        assert_eq!(h.count(), 100_000);
+        assert!(std::mem::size_of::<Histogram>() <= (HIST_BUCKETS + 4) * 8 + 64);
+    }
+
+    #[test]
+    fn exact_fields_and_degenerate_quantiles() {
+        let h = Histogram::new();
+        for _ in 0..5 {
+            h.record_ns(1000);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum_ns(), 5000);
+        assert_eq!(h.min_ns(), Some(1000));
+        assert_eq!(h.max_ns(), Some(1000));
+        // All samples equal: the [min, max] clamp makes quantiles exact.
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(h.quantile_ns(q), Some(1000.0), "q={q}");
+        }
+        let s = h.to_stats().unwrap();
+        assert_eq!(s.samples, 5);
+        assert!((s.mean - 1e-6).abs() < 1e-15);
+        assert!((s.median - 1e-6).abs() < 1e-15);
+        assert!((s.min - 1e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn empty_histogram_reports_none() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min_ns(), None);
+        assert_eq!(h.max_ns(), None);
+        assert!(h.quantile(0.5).is_none());
+        assert!(h.to_stats().is_none());
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bounded_by_buckets() {
+        let h = Histogram::new();
+        // 90 fast samples at ~1 µs, 10 slow at ~1 ms.
+        for _ in 0..90 {
+            h.record_ns(1_000);
+        }
+        for _ in 0..10 {
+            h.record_ns(1_000_000);
+        }
+        let p50 = h.quantile_ns(0.5).unwrap();
+        let p95 = h.quantile_ns(0.95).unwrap();
+        let p99 = h.quantile_ns(0.99).unwrap();
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // p50 sits in the 1 µs bucket, p95/p99 in the 1 ms bucket; each
+        // within 2x of the exact rank statistic.
+        assert!(p50 >= 1_000.0 / 2.0 && p50 <= 2.0 * 1_000.0);
+        assert!(p95 >= 1_000_000.0 / 2.0 && p95 <= 2.0 * 1_000_000.0);
+        assert!(p99 >= 1_000_000.0 / 2.0 && p99 <= 2.0 * 1_000_000.0);
+    }
+
+    #[test]
+    fn merge_is_associative_and_exact_on_counts() {
+        let mk = |vals: &[u64]| {
+            let h = Histogram::new();
+            for &v in vals {
+                h.record_ns(v);
+            }
+            h
+        };
+        let (a, b, c) = (mk(&[3, 900, 70_000]), mk(&[1, 2, 5_000_000]), mk(&[40, 41, 42]));
+        // (a ⊕ b) ⊕ c
+        let left = Histogram::new();
+        left.merge_from(&a);
+        left.merge_from(&b);
+        left.merge_from(&c);
+        // a ⊕ (b ⊕ c)
+        let bc = Histogram::new();
+        bc.merge_from(&b);
+        bc.merge_from(&c);
+        let right = Histogram::new();
+        right.merge_from(&a);
+        right.merge_from(&bc);
+        assert_eq!(left.bucket_counts(), right.bucket_counts());
+        assert_eq!(left.count(), 9);
+        assert_eq!(left.count(), right.count());
+        assert_eq!(left.sum_ns(), right.sum_ns());
+        assert_eq!(left.min_ns(), Some(1));
+        assert_eq!(left.max_ns(), Some(5_000_000));
+        assert_eq!(right.min_ns(), Some(1));
+        assert_eq!(right.max_ns(), Some(5_000_000));
+    }
+
+    #[test]
+    fn sampler_passes_one_in_n() {
+        let s = Sampler::every(4);
+        assert_eq!(s.period(), 4);
+        let hits: usize = (0..16).filter(|_| s.tick()).count();
+        assert_eq!(hits, 4);
+        let always = Sampler::every(1);
+        assert!((0..8).all(|_| always.tick()));
+        // Zero clamps to 1 rather than dividing by zero.
+        assert_eq!(Sampler::every(0).period(), 1);
+    }
+}

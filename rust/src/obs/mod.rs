@@ -1,0 +1,32 @@
+//! Hand-rolled, dependency-free observability for the serving stack.
+//!
+//! Three pieces, all in the repo's offline idiom (no crates, no
+//! background threads):
+//!
+//! - [`metrics`]: lock-free [`Counter`]/[`Gauge`] and the fixed-bucket
+//!   log₂ [`Histogram`] (bounded memory, mergeable, p50/p95/p99 by
+//!   bucket interpolation) plus the [`Sampler`] gating per-layer span
+//!   timing.
+//! - [`registry`]: [`MetricsRegistry`] — named + labeled series with
+//!   Prometheus-style [`MetricsRegistry::render_text`] exposition.
+//! - [`span`]: the [`Stage`] vocabulary (`enqueue → cut → panel_pack →
+//!   shard_execute → complete`) that `serve/` and `store/` instrument.
+//! - [`alloc`]: the [`CountingAllocator`] and its
+//!   [`total_allocations`] total, exported as the
+//!   `alloc_allocations_total` gauge by
+//!   [`ModelRegistry::metrics_text`](crate::store::ModelRegistry::metrics_text).
+//!
+//! Hot-path guarantee: every record is a handful of relaxed atomics
+//! into pre-sized storage — `tests/alloc_steady_state.rs` asserts the
+//! serve path performs **exactly zero** allocations per call with
+//! metrics enabled.
+
+pub mod alloc;
+pub mod metrics;
+pub mod registry;
+pub mod span;
+
+pub use alloc::{total_allocations, CountingAllocator};
+pub use metrics::{Counter, Gauge, Histogram, Sampler, HIST_BUCKETS};
+pub use registry::{labels, Labels, MetricsRegistry};
+pub use span::Stage;

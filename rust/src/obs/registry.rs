@@ -1,0 +1,286 @@
+//! [`MetricsRegistry`]: named, labeled metric series with Prometheus-
+//! style text exposition.
+//!
+//! Registration is the *cold* path (model load/evict) and takes a lock;
+//! recording is the hot path and goes straight through the shared
+//! [`Counter`]/[`Gauge`]/[`Histogram`] handles — the registry is never
+//! touched per request.  `render_text()` emits the classic line-
+//! oriented format (`name{k="v"} value`), which is what ROADMAP item
+//! 2's `/metrics` endpoint will serve verbatim and what the CI smoke
+//! step parses.
+
+use std::sync::{Arc, Mutex};
+
+use super::metrics::{Counter, Gauge, Histogram};
+
+/// Label set: ordered `(key, value)` pairs.  Order is preserved in
+/// exposition; identity (for replace/unregister) is the exact pair list.
+pub type Labels = Vec<(String, String)>;
+
+#[derive(Clone)]
+enum MetricHandle {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+struct Entry {
+    name: String,
+    labels: Labels,
+    metric: MetricHandle,
+}
+
+/// Registry of metric series.  Cheap to clone handles out of; one lock,
+/// held only during registration and rendering.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+/// Build a `Labels` value from `&str` pairs.
+pub fn labels(pairs: &[(&str, &str)]) -> Labels {
+    pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Create and register a counter series.
+    pub fn counter(&self, name: &str, labels: Labels) -> Arc<Counter> {
+        let c = Arc::new(Counter::new());
+        self.register(name, labels, MetricHandle::Counter(c.clone()));
+        c
+    }
+
+    /// Create and register a gauge series.
+    pub fn gauge(&self, name: &str, labels: Labels) -> Arc<Gauge> {
+        let g = Arc::new(Gauge::new());
+        self.register(name, labels, MetricHandle::Gauge(g.clone()));
+        g
+    }
+
+    /// Create and register a histogram series.
+    pub fn histogram(&self, name: &str, labels: Labels) -> Arc<Histogram> {
+        let h = Arc::new(Histogram::new());
+        self.register(name, labels, MetricHandle::Histogram(h.clone()));
+        h
+    }
+
+    /// Register an already-built counter (e.g. one half of a shared
+    /// metric bundle) under a series name.
+    pub fn register_counter(&self, name: &str, labels: Labels, c: Arc<Counter>) {
+        self.register(name, labels, MetricHandle::Counter(c));
+    }
+
+    /// Register an already-built gauge under a series name.
+    pub fn register_gauge(&self, name: &str, labels: Labels, g: Arc<Gauge>) {
+        self.register(name, labels, MetricHandle::Gauge(g));
+    }
+
+    /// Register an already-built histogram (e.g. shared with a bench
+    /// summary) under a series name.
+    pub fn register_histogram(&self, name: &str, labels: Labels, h: Arc<Histogram>) {
+        self.register(name, labels, MetricHandle::Histogram(h));
+    }
+
+    fn register(&self, name: &str, labels: Labels, metric: MetricHandle) {
+        let mut entries = self.entries.lock().unwrap();
+        // Same (name, labels) replaces: re-inserting a tenant resets its
+        // series instead of duplicating exposition lines.
+        entries.retain(|e| !(e.name == name && e.labels == labels));
+        entries.push(Entry { name: name.to_string(), labels, metric });
+    }
+
+    /// Drop every series carrying `key="value"` (tenant eviction).
+    pub fn unregister_labeled(&self, key: &str, value: &str) {
+        let mut entries = self.entries.lock().unwrap();
+        entries.retain(|e| !e.labels.iter().any(|(k, v)| k == key && v == value));
+    }
+
+    /// Number of registered series.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Render every series in Prometheus text format.  Lines are sorted
+    /// by `(name, labels)` so output is deterministic; each histogram
+    /// expands to `_count`/`_sum`/`_min`/`_max`, interpolated
+    /// `{quantile=...}` gauges, and non-empty `_bucket{le=...}`
+    /// cumulative counts.
+    pub fn render_text(&self) -> String {
+        let entries = self.entries.lock().unwrap();
+        let mut order: Vec<usize> = (0..entries.len()).collect();
+        order.sort_by(|&a, &b| {
+            (entries[a].name.as_str(), &entries[a].labels)
+                .cmp(&(entries[b].name.as_str(), &entries[b].labels))
+        });
+        let mut out = String::new();
+        let mut last_name = "";
+        for &i in &order {
+            let e = &entries[i];
+            if e.name != last_name {
+                let ty = match e.metric {
+                    MetricHandle::Counter(_) => "counter",
+                    MetricHandle::Gauge(_) => "gauge",
+                    MetricHandle::Histogram(_) => "histogram",
+                };
+                out.push_str(&format!("# TYPE {} {}\n", e.name, ty));
+                last_name = &e.name;
+            }
+            match &e.metric {
+                MetricHandle::Counter(c) => {
+                    emit(&mut out, &e.name, &e.labels, &[], c.get() as f64);
+                }
+                MetricHandle::Gauge(g) => {
+                    emit(&mut out, &e.name, &e.labels, &[], g.get() as f64);
+                }
+                MetricHandle::Histogram(h) => render_histogram(&mut out, &e.name, &e.labels, h),
+            }
+        }
+        out
+    }
+}
+
+fn render_histogram(out: &mut String, name: &str, base: &Labels, h: &Histogram) {
+    let count = h.count();
+    emit(out, &format!("{name}_count"), base, &[], count as f64);
+    if count == 0 {
+        // No sum/min/max/quantiles for an empty series — the consumer
+        // side renders "n/a", and we never emit inf/nan.
+        return;
+    }
+    emit(out, &format!("{name}_sum"), base, &[], h.sum_ns() as f64 * 1e-9);
+    emit(out, &format!("{name}_min"), base, &[], h.min_ns().unwrap_or(0) as f64 * 1e-9);
+    emit(out, &format!("{name}_max"), base, &[], h.max_ns().unwrap_or(0) as f64 * 1e-9);
+    for q in ["0.5", "0.95", "0.99"] {
+        let qv: f64 = q.parse().unwrap();
+        if let Some(v) = h.quantile(qv) {
+            emit(out, name, base, &[("quantile", q)], v);
+        }
+    }
+    // Cumulative le-buckets, upper bound in seconds; skip empty buckets
+    // to keep exposition proportional to the spread actually observed.
+    let counts = h.bucket_counts();
+    let mut cum = 0u64;
+    for (b, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        cum += c;
+        let le = format!("{:e}", (1u64 << b) as f64 * 2.0 * 1e-9);
+        emit(out, &format!("{name}_bucket"), base, &[("le", &le)], cum as f64);
+    }
+    emit(out, &format!("{name}_bucket"), base, &[("le", "+Inf")], count as f64);
+}
+
+fn emit(out: &mut String, name: &str, base: &Labels, extra: &[(&str, &str)], value: f64) {
+    out.push_str(name);
+    if !base.is_empty() || !extra.is_empty() {
+        out.push('{');
+        let mut first = true;
+        let base_kv = base.iter().map(|(k, v)| (k.as_str(), v.as_str()));
+        for (k, v) in base_kv.chain(extra.iter().copied()) {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(k);
+            out.push_str("=\"");
+            for ch in v.chars() {
+                match ch {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&format!("{value}"));
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_lines() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("requests_total", labels(&[("model", "lenet")]));
+        let g = reg.gauge("queue_depth", labels(&[("model", "lenet")]));
+        c.add(3);
+        g.set(2);
+        let text = reg.render_text();
+        assert!(text.contains("# TYPE requests_total counter\n"), "{text}");
+        assert!(text.contains("requests_total{model=\"lenet\"} 3\n"), "{text}");
+        assert!(text.contains("# TYPE queue_depth gauge\n"), "{text}");
+        assert!(text.contains("queue_depth{model=\"lenet\"} 2\n"), "{text}");
+    }
+
+    #[test]
+    fn histogram_expands_and_empty_is_count_only() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("lat_seconds", labels(&[("model", "a")]));
+        let empty = reg.histogram("lat_seconds", labels(&[("model", "b")]));
+        assert_eq!(empty.count(), 0);
+        h.record_ns(1_000_000); // 1 ms
+        h.record_ns(1_000_000);
+        let text = reg.render_text();
+        assert!(text.contains("lat_seconds_count{model=\"a\"} 2\n"), "{text}");
+        assert!(text.contains("lat_seconds{model=\"a\",quantile=\"0.95\"} 0.001"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{model=\"a\",le=\"+Inf\"} 2\n"), "{text}");
+        // Empty series: exactly one line, the zero count.
+        assert!(text.contains("lat_seconds_count{model=\"b\"} 0\n"), "{text}");
+        assert!(!text.contains("lat_seconds_sum{model=\"b\"}"), "{text}");
+        assert!(!text.contains("lat_seconds{model=\"b\""), "{text}");
+    }
+
+    #[test]
+    fn reregister_replaces_and_unregister_drops() {
+        let reg = MetricsRegistry::new();
+        let c1 = reg.counter("x_total", labels(&[("model", "m")]));
+        c1.add(9);
+        // Re-inserting the same (name, labels) resets the series.
+        let c2 = reg.counter("x_total", labels(&[("model", "m")]));
+        assert_eq!(reg.len(), 1);
+        c2.inc();
+        let text = reg.render_text();
+        assert!(text.contains("x_total{model=\"m\"} 1\n"), "{text}");
+        assert_eq!(text.matches("x_total{").count(), 1, "{text}");
+        reg.unregister_labeled("model", "m");
+        assert!(reg.is_empty());
+        assert!(!reg.render_text().contains("x_total"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let reg = MetricsRegistry::new();
+        reg.counter("c_total", labels(&[("path", "a\"b\\c")]));
+        let text = reg.render_text();
+        assert!(text.contains("c_total{path=\"a\\\"b\\\\c\"} 0\n"), "{text}");
+    }
+
+    #[test]
+    fn output_is_sorted_and_type_emitted_once() {
+        let reg = MetricsRegistry::new();
+        reg.counter("z_total", labels(&[("m", "2")]));
+        reg.counter("a_total", labels(&[]));
+        reg.counter("z_total", labels(&[("m", "1")]));
+        let text = reg.render_text();
+        let a = text.find("a_total").unwrap();
+        let z1 = text.find("z_total{m=\"1\"}").unwrap();
+        let z2 = text.find("z_total{m=\"2\"}").unwrap();
+        assert!(a < z1 && z1 < z2, "{text}");
+        assert_eq!(text.matches("# TYPE z_total").count(), 1, "{text}");
+    }
+}

@@ -1,0 +1,68 @@
+//! The staged span vocabulary for the serving path.
+//!
+//! A request's life is attributed to five stages, each backed by its own
+//! [`Histogram`](crate::obs::Histogram) series
+//! (`serve_stage_seconds{stage=...}` / `serve_layer_seconds{stage=...}`):
+//!
+//! | stage           | measured where            | meaning                                  |
+//! |-----------------|---------------------------|------------------------------------------|
+//! | `enqueue`       | `serve/batcher.rs`        | queue wait: push → cut into a micro-batch |
+//! | `cut`           | `serve/batcher.rs`        | micro-batch assembly (copy + pad)        |
+//! | `panel_pack`    | `serve/session.rs`        | per-layer transpose / im2col into panels |
+//! | `shard_execute` | `serve/session.rs`        | per-layer sharded kernel execution       |
+//! | `complete`      | `serve/batcher.rs`        | end-to-end: push → completion            |
+//!
+//! `panel_pack`/`shard_execute` are per-layer and gated by the
+//! [`Sampler`](crate::obs::Sampler) knob; the batcher stages are always
+//! on (one clock read per request or per cut).
+
+/// One stage of the serve pipeline; the `stage=` label value in
+/// exposition is [`Stage::as_str`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Queue wait between `Batcher::push` and the cut that drains it.
+    Enqueue,
+    /// Micro-batch assembly (copy rows into the batch buffer, pad).
+    Cut,
+    /// Per-layer activation packing (FC transpose or conv im2col).
+    PanelPack,
+    /// Per-layer sharded kernel execution (inline or pooled).
+    ShardExecute,
+    /// End-to-end request latency, push → complete.
+    Complete,
+}
+
+impl Stage {
+    /// Label value used in metric exposition.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Enqueue => "enqueue",
+            Stage::Cut => "cut",
+            Stage::PanelPack => "panel_pack",
+            Stage::ShardExecute => "shard_execute",
+            Stage::Complete => "complete",
+        }
+    }
+
+    /// All stages, pipeline order.
+    pub const ALL: [Stage; 5] =
+        [Stage::Enqueue, Stage::Cut, Stage::PanelPack, Stage::ShardExecute, Stage::Complete];
+}
+
+impl std::fmt::Display for Stage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_labels_are_stable() {
+        let names: Vec<&str> = Stage::ALL.iter().map(|s| s.as_str()).collect();
+        assert_eq!(names, ["enqueue", "cut", "panel_pack", "shard_execute", "complete"]);
+        assert_eq!(Stage::PanelPack.to_string(), "panel_pack");
+    }
+}

@@ -6,9 +6,20 @@
 //! zeros; per-example independence of the GEMM means they cannot affect
 //! real rows).  A [`Batcher::with_deadline`] batcher additionally cuts an
 //! overdue partial batch, bounding queueing latency for low-QPS tenants
-//! in the multi-model registry.  Latency/throughput accounting reuses
-//! [`crate::util::bench::Stats`] so serving logs read like the repo's
-//! bench logs.
+//! in the multi-model registry.
+//!
+//! Accounting is a [`BatcherMetrics`] bundle of lock-free
+//! [`obs`](crate::obs) primitives: counters for pushes / completions /
+//! batches / padding / rejects, a queue-depth gauge, and one bounded
+//! log₂ [`Histogram`] per batcher-owned span stage
+//! ([`Stage::Enqueue`] queue wait, [`Stage::Cut`] assembly,
+//! [`Stage::Complete`] end-to-end latency — see
+//! [`obs::span`](crate::obs::span) for the full pipeline).  The old
+//! unbounded `latencies_s: Vec<f64>` is gone: memory no longer grows
+//! with traffic, and [`Batcher::stats`] derives a
+//! [`crate::util::bench::Stats`]-shaped summary from the histogram in
+//! O(buckets) instead of cloning and sorting every sample ever seen
+//! (`rust/tests/obs_bounded.rs` pins both properties under 1M pushes).
 //!
 //! The padded `[batch, example_len]` buffer (and the id/timestamp side
 //! vectors) of a [`MicroBatch`] is recycled: [`Batcher::complete`] takes
@@ -17,8 +28,10 @@
 //! cut → infer → complete loop reallocates nothing per flush.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::obs::{labels, Counter, Gauge, Histogram, MetricsRegistry, Stage};
 use crate::util::bench::Stats;
 
 /// One queued inference request.
@@ -41,7 +54,9 @@ pub struct MicroBatch {
     enqueued: Vec<Instant>,
 }
 
-/// Aggregate serving statistics.
+/// Aggregate serving statistics — a point-in-time *view* derived from
+/// the batcher's [`BatcherMetrics`], kept as a plain struct so CLI /
+/// example / bench call sites print one coherent snapshot.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeStats {
     pub requests: u64,
@@ -51,7 +66,9 @@ pub struct ServeStats {
     /// Wall seconds from first push to last completion.
     pub wall_s: f64,
     /// Per-request queue+execute latency summary (None until something
-    /// completed).
+    /// completed).  `samples`/`mean`/`min` are exact; `median`/`p95`/
+    /// `p99` are histogram-interpolated (within 2× — see
+    /// [`Histogram::quantile_ns`]).
     pub latency: Option<Stats>,
 }
 
@@ -63,9 +80,83 @@ impl ServeStats {
             0.0
         }
     }
+
+    /// `"p95 1.20 ms p99 3.40 ms"`, or `"p95 n/a p99 n/a"` for a tenant
+    /// with no completed requests — the CLI/status tables print this
+    /// instead of a misleading `0.0`.
+    pub fn latency_cell(&self) -> String {
+        match self.latency {
+            Some(l) => format!("p95 {:.2} ms p99 {:.2} ms", l.p95 * 1e3, l.p99 * 1e3),
+            None => "p95 n/a p99 n/a".to_string(),
+        }
+    }
 }
 
-/// Fixed-batch request batcher with latency accounting.
+/// The batcher's metric bundle: shared lock-free handles, cloneable so
+/// the multi-tenant registry can hold one end (reject counting, text
+/// exposition) while the batcher records into the other.
+///
+/// Exposition names (all labeled `model="..."` by
+/// [`BatcherMetrics::register_into`]):
+///
+/// - `serve_requests_total` — requests pushed (accepted into the queue)
+/// - `serve_completed_total` — real rows completed
+/// - `serve_rejected_total` — malformed pushes refused by the registry
+/// - `serve_batches_total` / `serve_padded_rows_total`
+/// - `serve_queue_depth` — gauge, current queue length
+/// - `serve_stage_seconds{stage="enqueue"|"cut"|"complete"}` — histograms
+#[derive(Debug, Clone, Default)]
+pub struct BatcherMetrics {
+    pub requests: Arc<Counter>,
+    pub completed: Arc<Counter>,
+    pub rejected: Arc<Counter>,
+    pub batches: Arc<Counter>,
+    pub padded: Arc<Counter>,
+    pub queue_depth: Arc<Gauge>,
+    /// Queue wait: push → cut ([`Stage::Enqueue`]).
+    pub enqueue: Arc<Histogram>,
+    /// Micro-batch assembly ([`Stage::Cut`]).
+    pub cut: Arc<Histogram>,
+    /// End-to-end request latency: push → completion ([`Stage::Complete`]).
+    pub complete: Arc<Histogram>,
+}
+
+impl BatcherMetrics {
+    pub fn new() -> BatcherMetrics {
+        BatcherMetrics::default()
+    }
+
+    /// Register every series into `reg` under the `model` label.  Called
+    /// once per tenant at insert; recording never touches the registry.
+    pub fn register_into(&self, reg: &MetricsRegistry, model: &str) {
+        let m = |extra: &[(&str, &str)]| {
+            let mut l = labels(&[("model", model)]);
+            l.extend(labels(extra));
+            l
+        };
+        reg.register_histogram("serve_stage_seconds", m(&[("stage", Stage::Enqueue.as_str())]), {
+            self.enqueue.clone()
+        });
+        reg.register_histogram("serve_stage_seconds", m(&[("stage", Stage::Cut.as_str())]), {
+            self.cut.clone()
+        });
+        reg.register_histogram("serve_stage_seconds", m(&[("stage", Stage::Complete.as_str())]), {
+            self.complete.clone()
+        });
+        for (name, c) in [
+            ("serve_requests_total", &self.requests),
+            ("serve_completed_total", &self.completed),
+            ("serve_rejected_total", &self.rejected),
+            ("serve_batches_total", &self.batches),
+            ("serve_padded_rows_total", &self.padded),
+        ] {
+            reg.register_counter(name, m(&[]), c.clone());
+        }
+        reg.register_gauge("serve_queue_depth", m(&[]), self.queue_depth.clone());
+    }
+}
+
+/// Fixed-batch request batcher with bounded-memory latency accounting.
 #[derive(Debug)]
 pub struct Batcher {
     batch: usize,
@@ -76,10 +167,7 @@ pub struct Batcher {
     queue: VecDeque<Request>,
     started: Option<Instant>,
     last_done: Option<Instant>,
-    latencies_s: Vec<f64>,
-    completed: u64,
-    padded: u64,
-    batches: u64,
+    metrics: BatcherMetrics,
     /// Buffers recycled from the last [`Batcher::complete`]d micro-batch
     /// so the next cut reuses their capacity instead of reallocating.
     spare_x: Vec<f32>,
@@ -97,10 +185,7 @@ impl Batcher {
             queue: VecDeque::new(),
             started: None,
             last_done: None,
-            latencies_s: Vec::new(),
-            completed: 0,
-            padded: 0,
-            batches: 0,
+            metrics: BatcherMetrics::new(),
             spare_x: Vec::new(),
             spare_ids: Vec::new(),
             spare_enqueued: Vec::new(),
@@ -126,6 +211,12 @@ impl Batcher {
         self.max_wait
     }
 
+    /// Shared handles to this batcher's metric bundle (clone is cheap —
+    /// all members are `Arc`s into the same atomics).
+    pub fn metrics(&self) -> &BatcherMetrics {
+        &self.metrics
+    }
+
     /// Enqueue one request (its latency clock starts now).
     pub fn push(&mut self, id: u64, x: Vec<f32>) {
         self.push_at(id, x, Instant::now());
@@ -145,6 +236,8 @@ impl Batcher {
         assert_eq!(x.len(), self.example_len, "request {id}: bad example length");
         self.started.get_or_insert(enqueued);
         self.queue.push_back(Request { id, x, enqueued });
+        self.metrics.requests.inc();
+        self.metrics.queue_depth.set(self.queue.len() as i64);
     }
 
     /// Requests waiting in the queue.
@@ -158,6 +251,9 @@ impl Batcher {
     /// padded partial batch from whatever is queued.  `None` if nothing
     /// can be cut.
     ///
+    /// Cutting records the [`Stage::Enqueue`] wait of every drained
+    /// request and the [`Stage::Cut`] assembly time.
+    ///
     /// [`with_deadline`]: Batcher::with_deadline
     pub fn next_batch(&mut self, flush: bool) -> Option<MicroBatch> {
         let due = match (self.max_wait, self.queue.front()) {
@@ -167,6 +263,7 @@ impl Batcher {
         if self.queue.is_empty() || (self.queue.len() < self.batch && !flush && !due) {
             return None;
         }
+        let t0 = Instant::now();
         let real = self.queue.len().min(self.batch);
         // Reuse the buffers recycled by `complete`.  Real rows are
         // overwritten below; only the padding rows need the zeros
@@ -183,9 +280,12 @@ impl Batcher {
         for i in 0..real {
             let r = self.queue.pop_front().unwrap();
             x[i * self.example_len..(i + 1) * self.example_len].copy_from_slice(&r.x);
+            self.metrics.enqueue.record_duration(t0.duration_since(r.enqueued));
             ids.push(r.id);
             enqueued.push(r.enqueued);
         }
+        self.metrics.queue_depth.set(self.queue.len() as i64);
+        self.metrics.cut.record_duration(t0.elapsed());
         Some(MicroBatch {
             x,
             ids,
@@ -195,39 +295,39 @@ impl Batcher {
         })
     }
 
-    /// Record a micro-batch as answered: latencies for its real rows
-    /// stop now, padding is charged to the waste counter.  Takes the
-    /// batch by value so its buffers can be recycled into the next
+    /// Record a micro-batch as answered: the [`Stage::Complete`]
+    /// histogram absorbs the end-to-end latency of its real rows,
+    /// padding is charged to the waste counter.  Takes the batch by
+    /// value so its buffers can be recycled into the next
     /// [`next_batch`](Batcher::next_batch) cut.
     pub fn complete(&mut self, mb: MicroBatch) {
         let now = Instant::now();
         for t in &mb.enqueued {
-            self.latencies_s.push(now.duration_since(*t).as_secs_f64());
+            self.metrics.complete.record_duration(now.duration_since(*t));
         }
-        self.completed += mb.real as u64;
-        self.padded += (mb.batch - mb.real) as u64;
-        self.batches += 1;
+        self.metrics.completed.add(mb.real as u64);
+        self.metrics.padded.add((mb.batch - mb.real) as u64);
+        self.metrics.batches.inc();
         self.last_done = Some(now);
         self.spare_x = mb.x;
         self.spare_ids = mb.ids;
         self.spare_enqueued = mb.enqueued;
     }
 
+    /// Point-in-time [`ServeStats`] view of the metric bundle.  O(1) in
+    /// traffic served: the latency summary comes from the bounded
+    /// histogram, not from replaying samples.
     pub fn stats(&self) -> ServeStats {
         let wall_s = match (self.started, self.last_done) {
             (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
             _ => 0.0,
         };
         ServeStats {
-            requests: self.completed,
-            batches: self.batches,
-            padded: self.padded,
+            requests: self.metrics.completed.get(),
+            batches: self.metrics.batches.get(),
+            padded: self.metrics.padded.get(),
             wall_s,
-            latency: if self.latencies_s.is_empty() {
-                None
-            } else {
-                Some(Stats::from_samples(self.latencies_s.clone()))
-            },
+            latency: self.metrics.complete.to_stats(),
         }
     }
 }
@@ -280,8 +380,43 @@ mod tests {
         assert_eq!(s.padded, 1);
         let lat = s.latency.expect("latencies recorded");
         assert_eq!(lat.samples, 5);
-        assert!(lat.min >= 0.0 && lat.p95 >= lat.median);
+        assert!(lat.min >= 0.0 && lat.p95 >= lat.median && lat.p99 >= lat.p95);
         assert!(s.wall_s >= 0.0);
+    }
+
+    #[test]
+    fn metric_bundle_tracks_queue_and_stages() {
+        let mut b = Batcher::new(2, 4);
+        for i in 0..5 {
+            b.push(i, req(i));
+        }
+        let m = b.metrics().clone();
+        assert_eq!(m.requests.get(), 5);
+        assert_eq!(m.queue_depth.get(), 5);
+        while let Some(mb) = b.next_batch(true) {
+            b.complete(mb);
+        }
+        assert_eq!(m.queue_depth.get(), 0);
+        assert_eq!(m.enqueue.count(), 5, "every drained request records its queue wait");
+        assert_eq!(m.cut.count(), 3, "one cut span per micro-batch");
+        assert_eq!(m.complete.count(), 5);
+        assert_eq!(m.completed.get(), 5);
+        assert_eq!(m.batches.get(), 3);
+        assert_eq!(m.padded.get(), 1);
+        assert_eq!(m.rejected.get(), 0);
+    }
+
+    #[test]
+    fn latency_cell_prints_na_until_completion() {
+        let mut b = Batcher::new(1, 4);
+        assert_eq!(b.stats().latency_cell(), "p95 n/a p99 n/a");
+        b.push(0, req(0));
+        assert_eq!(b.stats().latency_cell(), "p95 n/a p99 n/a", "queued-only is still n/a");
+        let mb = b.next_batch(true).unwrap();
+        b.complete(mb);
+        let cell = b.stats().latency_cell();
+        assert!(cell.starts_with("p95 ") && cell.contains(" ms p99 "), "{cell}");
+        assert!(!cell.contains("n/a"), "{cell}");
     }
 
     #[test]
@@ -292,6 +427,8 @@ mod tests {
         b.complete(mb);
         let lat = b.stats().latency.unwrap();
         assert!(lat.min >= 0.045, "backdated latency only {}", lat.min);
+        // The queue-wait span is backdated too.
+        assert!(b.metrics().enqueue.min_ns().unwrap() >= 45_000_000);
     }
 
     #[test]

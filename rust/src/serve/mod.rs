@@ -22,8 +22,22 @@
 //!    independent of worker/shard count and batch composition.
 //! 3. [`Batcher`] queues requests, cuts fixed-size micro-batches, pads
 //!    the final partial batch (reusing one recycled batch buffer across
-//!    cuts), and accounts latency/throughput with
-//!    [`util::bench::Stats`](crate::util::bench::Stats).
+//!    cuts), and accounts latency/throughput through the lock-free
+//!    [`crate::obs`] layer (bounded log₂ histograms; [`ServeStats`] is a
+//!    derived view in the [`util::bench::Stats`](crate::util::bench::Stats)
+//!    shape).
+//!
+//! Every request is attributed to the five span stages of
+//! [`obs::span::Stage`](crate::obs::Stage): `enqueue` and `cut` in
+//! [`Batcher`], per-layer `panel_pack` and `shard_execute` in
+//! [`InferenceSession`] (gated by a [`Sampler`](crate::obs::Sampler)
+//! knob), and `complete` (end-to-end) back in [`Batcher`] — all
+//! recorded as relaxed atomics into pre-sized histograms, so the
+//! zero-allocation steady state holds *with metrics enabled*
+//! (`rust/tests/alloc_steady_state.rs` counts).  The pool counts its
+//! scoped dispatches ([`pool::PoolMetrics`]); the multi-tenant text
+//! exposition lives in
+//! [`store::ModelRegistry::metrics_text`](crate::store::ModelRegistry::metrics_text).
 //!
 //! `examples/infer_server.rs` wires the three together into a runnable
 //! server; `benches/serve.rs` tracks single- vs multi-thread throughput
@@ -67,11 +81,11 @@ pub mod compiled;
 pub mod pool;
 pub mod session;
 
-pub use batcher::{Batcher, MicroBatch, Request, ServeStats};
+pub use batcher::{Batcher, BatcherMetrics, MicroBatch, Request, ServeStats};
 pub use compiled::{
     parallel_keep_sequence, shard_ranges, synthetic_lenet300, synthetic_lenet300_seeded,
     synthetic_vgg16, synthetic_vgg16_scaled, CompiledLayer, CompiledModel, LayerKindCounts,
     LayerShape, MaskKind, VGG16_CONV_PLAN,
 };
-pub use pool::WorkerPool;
-pub use session::{argmax_total, InferenceSession};
+pub use pool::{PoolMetrics, WorkerPool};
+pub use session::{argmax_total, InferenceSession, LayerSpans, SessionMetrics};

@@ -28,7 +28,38 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::obs::{labels, Counter, MetricsRegistry};
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// The pool's metric bundle: how many scoped fan-outs it dispatched and
+/// how many shard tasks they carried.  The ratio is the average shard
+/// fan-out width — on a shared multi-tenant pool this is the cheapest
+/// signal that one tenant's layer sharding dominates the queue.
+///
+/// Counting happens in [`WorkerPool::run_scoped`] before the dispatch
+/// (two relaxed `fetch_add`s — nothing on the worker side), so the
+/// steady-state path stays allocation- and lock-free.
+#[derive(Debug, Clone, Default)]
+pub struct PoolMetrics {
+    /// `pool_scoped_batches_total`: `run_scoped` calls dispatched.
+    pub scoped_batches: Arc<Counter>,
+    /// `pool_scoped_tasks_total`: shard tasks across all those calls.
+    pub scoped_tasks: Arc<Counter>,
+}
+
+impl PoolMetrics {
+    pub fn new() -> PoolMetrics {
+        PoolMetrics::default()
+    }
+
+    /// Register both series (unlabeled — the pool is shared, not
+    /// per-tenant) into `reg`.
+    pub fn register_into(&self, reg: &MetricsRegistry) {
+        reg.register_counter("pool_scoped_batches_total", labels(&[]), self.scoped_batches.clone());
+        reg.register_counter("pool_scoped_tasks_total", labels(&[]), self.scoped_tasks.clone());
+    }
+}
 
 /// Stack-allocated control block of one [`WorkerPool::run_scoped`] call.
 /// Lives on the caller's stack; workers reach it through the raw pointer
@@ -77,6 +108,7 @@ struct Queue {
 pub struct WorkerPool {
     queue: Arc<Queue>,
     handles: Vec<JoinHandle<()>>,
+    metrics: PoolMetrics,
 }
 
 impl WorkerPool {
@@ -96,12 +128,17 @@ impl WorkerPool {
                     .expect("spawning serve worker")
             })
             .collect();
-        WorkerPool { queue, handles }
+        WorkerPool { queue, handles, metrics: PoolMetrics::new() }
     }
 
     /// Number of worker threads.
     pub fn size(&self) -> usize {
         self.handles.len()
+    }
+
+    /// Shared handles to the pool's dispatch counters.
+    pub fn metrics(&self) -> &PoolMetrics {
+        &self.metrics
     }
 
     /// Enqueue one fire-and-forget job.
@@ -149,6 +186,8 @@ impl WorkerPool {
         if n == 0 {
             return;
         }
+        self.metrics.scoped_batches.inc();
+        self.metrics.scoped_tasks.add(n as u64);
         let batch = ScopedBatch {
             func: call_erased::<F>,
             ctx: f as *const F as *const (),
@@ -356,6 +395,18 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn metrics_count_scoped_dispatches() {
+        let pool = WorkerPool::new(2);
+        let m = pool.metrics().clone();
+        assert_eq!(m.scoped_batches.get(), 0);
+        pool.run_scoped(5, &|_| {});
+        pool.run_scoped(3, &|_| {});
+        pool.run_scoped(0, &|_| panic!("n == 0 dispatches nothing"));
+        assert_eq!(m.scoped_batches.get(), 2, "n == 0 is not a dispatch");
+        assert_eq!(m.scoped_tasks.get(), 8);
     }
 
     #[test]

@@ -43,11 +43,99 @@
 //! each layer's shards carry their own plane.
 
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use super::compiled::{CompiledLayer, CompiledModel, LayerShape};
 use super::pool::WorkerPool;
+use crate::obs::{labels, Histogram, MetricsRegistry, Sampler, Stage};
 use crate::sparse::im2col::{im2col_panels, maxpool_into};
 use crate::sparse::packed::{transpose_panels, BATCH_LANES};
+
+/// Per-layer span histograms: activation packing
+/// ([`Stage::PanelPack`] — FC transpose or conv im2col; absent for
+/// weightless pools) and kernel execution ([`Stage::ShardExecute`]).
+pub struct LayerSpans {
+    /// `"fc"`, `"conv"`, or `"pool"` — the `kind` exposition label.
+    pub kind: &'static str,
+    pub panel_pack: Arc<Histogram>,
+    pub shard_execute: Arc<Histogram>,
+}
+
+/// Per-layer span timing for one session, gated by a [`Sampler`]: a
+/// timed pass costs two `Instant::now()` reads per layer, so the knob
+/// (`span_sample_every` in the registry's
+/// [`TenantConfig`](crate::store::TenantConfig)) trades span resolution
+/// against hot-path cost.  All storage is pre-sized at
+/// [`SessionMetrics::for_model`] — recording allocates nothing.
+pub struct SessionMetrics {
+    pub sampler: Sampler,
+    /// One entry per model layer, in layer order.
+    pub layers: Vec<LayerSpans>,
+}
+
+impl SessionMetrics {
+    /// Build one span pair per layer of `model`; `sample_every` is the
+    /// [`Sampler`] period (1 = time every inference call).
+    pub fn for_model(model: &CompiledModel, sample_every: u64) -> SessionMetrics {
+        let layers = model
+            .layers
+            .iter()
+            .map(|l| LayerSpans {
+                kind: match l.shape {
+                    LayerShape::Fc => "fc",
+                    LayerShape::Conv(_) => "conv",
+                    LayerShape::MaxPool(_) => "pool",
+                },
+                panel_pack: Arc::new(Histogram::new()),
+                shard_execute: Arc::new(Histogram::new()),
+            })
+            .collect();
+        SessionMetrics { sampler: Sampler::every(sample_every), layers }
+    }
+
+    /// Register every layer's spans into `reg` as
+    /// `serve_layer_seconds{model,layer,kind,stage}` (weightless pool
+    /// layers skip the `panel_pack` stage — they have no packing step).
+    pub fn register_into(&self, reg: &MetricsRegistry, model: &str) {
+        for (li, l) in self.layers.iter().enumerate() {
+            let layer_id = li.to_string();
+            let m = |stage: Stage| {
+                labels(&[
+                    ("model", model),
+                    ("layer", &layer_id),
+                    ("kind", l.kind),
+                    ("stage", stage.as_str()),
+                ])
+            };
+            if l.kind != "pool" {
+                reg.register_histogram(
+                    "serve_layer_seconds",
+                    m(Stage::PanelPack),
+                    l.panel_pack.clone(),
+                );
+            }
+            reg.register_histogram(
+                "serve_layer_seconds",
+                m(Stage::ShardExecute),
+                l.shard_execute.clone(),
+            );
+        }
+    }
+
+    /// Merge one stage's histograms across all layers — the per-model
+    /// roll-up the bench `stages` block reports.
+    pub fn merged_stage(&self, stage: Stage) -> Histogram {
+        let h = Histogram::new();
+        for l in &self.layers {
+            match stage {
+                Stage::PanelPack => h.merge_from(&l.panel_pack),
+                Stage::ShardExecute => h.merge_from(&l.shard_execute),
+                _ => {}
+            }
+        }
+        h
+    }
+}
 
 /// Reusable per-call scratch: the transposed activation panels and the
 /// ping-pong buffers that carry activations between layers.  Checked out
@@ -88,6 +176,10 @@ pub struct InferenceSession {
     /// carry their own arenas, so shared-pool tenants stay zero-alloc
     /// too.)
     arenas: Mutex<Vec<ScratchArena>>,
+    /// Per-layer span timing; `None` until
+    /// [`InferenceSession::enable_metrics`] — an un-instrumented
+    /// session pays zero clock reads.
+    metrics: Option<Arc<SessionMetrics>>,
 }
 
 impl InferenceSession {
@@ -103,6 +195,7 @@ impl InferenceSession {
             model,
             pool: if workers > 1 { Some(Arc::new(WorkerPool::new(workers))) } else { None },
             arenas: Mutex::new(Vec::new()),
+            metrics: None,
         }
     }
 
@@ -110,7 +203,24 @@ impl InferenceSession {
     /// multi-tenant registry gives N models one shared set of worker
     /// threads.
     pub fn with_shared_pool(model: CompiledModel, pool: Arc<WorkerPool>) -> InferenceSession {
-        InferenceSession { model, pool: Some(pool), arenas: Mutex::new(Vec::new()) }
+        InferenceSession { model, pool: Some(pool), arenas: Mutex::new(Vec::new()), metrics: None }
+    }
+
+    /// Turn on per-layer span timing, sampled every `sample_every`-th
+    /// inference call (1 = every call).  Returns the shared
+    /// [`SessionMetrics`] handle so the caller can register it into a
+    /// [`MetricsRegistry`] and read the spans later.
+    pub fn enable_metrics(&mut self, sample_every: u64) -> Arc<SessionMetrics> {
+        let m = Arc::new(SessionMetrics::for_model(&self.model, sample_every));
+        self.metrics = Some(m.clone());
+        m
+    }
+
+    /// The session's span metrics, if [`enable_metrics`] was called.
+    ///
+    /// [`enable_metrics`]: InferenceSession::enable_metrics
+    pub fn metrics(&self) -> Option<&Arc<SessionMetrics>> {
+        self.metrics.as_ref()
     }
 
     /// Worker threads backing this session (1 = inline).
@@ -141,6 +251,11 @@ impl InferenceSession {
     /// directly.
     pub fn infer_batch_into(&self, x: &[f32], batch: usize, out: &mut Vec<f32>) {
         assert_eq!(x.len(), batch * self.model.in_dim(), "bad input length");
+        // Per-layer span timing, gated by the sampler: a non-sampled
+        // call (and any session without metrics) takes the `None` path
+        // and reads no clocks at all.  Recording is lock-free atomics
+        // into the pre-sized histograms — no allocation either way.
+        let spans = self.metrics.as_deref().filter(|m| m.sampler.tick());
         let mut arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
         let mut a = std::mem::take(&mut arena.ping);
         let mut b = std::mem::take(&mut arena.pong);
@@ -158,24 +273,45 @@ impl InferenceSession {
             let dst: &mut Vec<f32> = if li + 1 == n_layers { &mut *out } else { &mut b };
             match &layer.shape {
                 LayerShape::Fc => {
+                    let t0 = spans.map(|_| Instant::now());
                     transpose_panels(src, batch, layer.rows, &mut panels);
+                    if let (Some(m), Some(t0)) = (spans, t0) {
+                        m.layers[li].panel_pack.record_duration(t0.elapsed());
+                    }
                     dst.resize(batch * layer.cols, 0.0);
+                    let t1 = spans.map(|_| Instant::now());
                     self.run_layer(layer, &panels, batch, dst);
+                    if let (Some(m), Some(t1)) = (spans, t1) {
+                        m.layers[li].shard_execute.record_duration(t1.elapsed());
+                    }
                 }
                 LayerShape::Conv(g) => {
                     // im2col: each output pixel is a virtual batch row of
                     // the same panel GEMM; the kernel writes the NHWC
                     // [batch·oh·ow, out_c] conv output directly.
                     let vrows = batch * g.out_h() * g.out_w();
+                    let t0 = spans.map(|_| Instant::now());
                     im2col_panels(src, batch, g, &mut panels);
+                    if let (Some(m), Some(t0)) = (spans, t0) {
+                        m.layers[li].panel_pack.record_duration(t0.elapsed());
+                    }
                     dst.resize(vrows * layer.cols, 0.0);
+                    let t1 = spans.map(|_| Instant::now());
                     self.run_layer(layer, &panels, vrows, dst);
+                    if let (Some(m), Some(t1)) = (spans, t1) {
+                        m.layers[li].shard_execute.record_duration(t1.elapsed());
+                    }
                 }
                 LayerShape::MaxPool(g) => {
                     // Weightless and memory-bound: runs inline on the
-                    // caller thread, no panels, no shard fan-out.
+                    // caller thread, no panels, no shard fan-out — only
+                    // the execute span exists.
                     dst.resize(batch * g.out_len(), 0.0);
+                    let t1 = spans.map(|_| Instant::now());
                     maxpool_into(src, batch, g, dst);
+                    if let (Some(m), Some(t1)) = (spans, t1) {
+                        m.layers[li].shard_execute.record_duration(t1.elapsed());
+                    }
                 }
             }
             if li + 1 != n_layers {
@@ -526,6 +662,50 @@ mod tests {
         let ptr = out.as_ptr();
         session.infer_batch_into(&x, 3, &mut out);
         assert_eq!(out.as_ptr(), ptr, "warm out buffer must not reallocate");
+    }
+
+    #[test]
+    fn span_sampling_records_per_layer_and_respects_knob() {
+        let mut rng = Pcg32::new(51);
+        let batch = 3;
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.next_normal()).collect();
+        // sample_every = 2: 6 calls -> 3 timed passes, every layer.
+        let mut session = InferenceSession::new(toy_model(2), 1);
+        let m = session.enable_metrics(2);
+        assert!(session.metrics().is_some());
+        for _ in 0..6 {
+            session.infer_batch(&x, batch);
+        }
+        assert_eq!(m.layers.len(), 2);
+        for (li, l) in m.layers.iter().enumerate() {
+            assert_eq!(l.kind, "fc");
+            assert_eq!(l.panel_pack.count(), 3, "layer {li} pack spans");
+            assert_eq!(l.shard_execute.count(), 3, "layer {li} execute spans");
+        }
+        assert_eq!(m.merged_stage(Stage::ShardExecute).count(), 6);
+        assert_eq!(m.merged_stage(Stage::PanelPack).count(), 6);
+        // Timing must not perturb the numerics.
+        let plain = InferenceSession::new(toy_model(2), 1).infer_batch(&x, batch);
+        for (&u, &v) in session.infer_batch(&x, batch).iter().zip(&plain) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn conv_model_spans_know_layer_kinds() {
+        let mut rng = Pcg32::new(53);
+        let mut session = InferenceSession::new(toy_conv_model(2), 2);
+        let m = session.enable_metrics(1);
+        let d = session.model().in_dim();
+        let x: Vec<f32> = (0..d).map(|_| rng.next_normal()).collect();
+        session.infer_batch(&x, 1);
+        let kinds: Vec<&str> = m.layers.iter().map(|l| l.kind).collect();
+        assert_eq!(kinds, ["conv", "pool", "conv", "fc"]);
+        for l in &m.layers {
+            assert_eq!(l.shard_execute.count(), 1, "{} execute span", l.kind);
+            // Pool layers have no packing step; their span stays empty.
+            assert_eq!(l.panel_pack.count(), u64::from(l.kind != "pool"), "{} pack", l.kind);
+        }
     }
 
     #[test]

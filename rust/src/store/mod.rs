@@ -51,9 +51,22 @@
 //!   precision tiers side by side, and wrong-length requests rejected as typed
 //!   [`RegistryError::BadInput`] instead of panicking the server.
 //!
-//! `repro export` / `repro serve-artifact` (cli), the multi-model mode of
-//! `examples/infer_server.rs`, and `benches/store.rs` (cold-start +
-//! multi-model throughput → `BENCH_store.json`) drive this end to end.
+//! The registry is also the serving stack's **observability root**
+//! ([`obs`](crate::obs)): tenant insert registers the per-model series —
+//! the batcher-owned [`Stage`](crate::obs::Stage) spans
+//! (`enqueue`/`cut`/`complete` as `serve_stage_seconds`) and, when
+//! [`TenantConfig::span_sample_every`] is non-zero, the session's
+//! per-layer `panel_pack`/`shard_execute` spans
+//! (`serve_layer_seconds`) — evict unregisters them, rejected pushes
+//! bump `serve_rejected_total`, and
+//! [`ModelRegistry::metrics_text`] renders the whole exposition
+//! (plus the shared-pool dispatch counters and the
+//! `alloc_allocations_total` gauge) in Prometheus text format.
+//!
+//! `repro export` / `repro serve-artifact` / `repro stats` (cli), the
+//! multi-model mode of `examples/infer_server.rs`, and
+//! `benches/store.rs` (cold-start + multi-model throughput →
+//! `BENCH_store.json`) drive this end to end.
 
 pub mod artifact;
 pub mod format;

@@ -41,8 +41,10 @@ use std::path::Path;
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
+use crate::obs::{labels, total_allocations, Gauge, MetricsRegistry};
 use crate::serve::{
-    Batcher, CompiledModel, InferenceSession, LayerKindCounts, ServeStats, WorkerPool,
+    Batcher, BatcherMetrics, CompiledModel, InferenceSession, LayerKindCounts, ServeStats,
+    WorkerPool,
 };
 use crate::sparse::Precision;
 
@@ -92,7 +94,7 @@ impl From<StoreError> for RegistryError {
     }
 }
 
-/// Per-tenant batching policy.
+/// Per-tenant batching + observability policy.
 #[derive(Debug, Clone, Copy)]
 pub struct TenantConfig {
     /// Micro-batch size for this model.
@@ -100,17 +102,30 @@ pub struct TenantConfig {
     /// Cut a padded partial batch once the oldest queued request has
     /// waited this long (None = only cut full batches until flush).
     pub max_wait: Option<Duration>,
+    /// Per-layer span sampling period: time the `panel_pack` /
+    /// `shard_execute` stages of every `n`-th inference call (1 = every
+    /// call, 0 = per-layer spans off entirely).  Queue/stage/counter
+    /// metrics are always on — only the two extra clock reads per layer
+    /// are gated.
+    pub span_sample_every: u64,
 }
 
 impl Default for TenantConfig {
     fn default() -> Self {
-        TenantConfig { batch: 32, max_wait: Some(Duration::from_millis(5)) }
+        TenantConfig {
+            batch: 32,
+            max_wait: Some(Duration::from_millis(5)),
+            span_sample_every: 16,
+        }
     }
 }
 
 struct ModelEntry {
     session: InferenceSession,
     batcher: Mutex<Batcher>,
+    /// Clone of the batcher's metric bundle — lets `push` count a
+    /// rejected request without taking the batcher lock.
+    metrics: BatcherMetrics,
 }
 
 /// One answered request from [`ModelRegistry::drain`].
@@ -140,10 +155,15 @@ pub struct ModelInfo {
     pub stats: ServeStats,
 }
 
-/// Many models, one shared worker pool.
+/// Many models, one shared worker pool, one metrics registry.
 pub struct ModelRegistry {
     pool: Arc<WorkerPool>,
     models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+    metrics: MetricsRegistry,
+    /// `alloc_allocations_total`: the counting-allocator total, refreshed
+    /// at every [`ModelRegistry::metrics_text`] scrape (stays 0 in
+    /// binaries that don't install [`crate::obs::CountingAllocator`]).
+    alloc_gauge: Arc<Gauge>,
 }
 
 impl ModelRegistry {
@@ -154,15 +174,32 @@ impl ModelRegistry {
         } else {
             workers
         };
-        ModelRegistry {
-            pool: Arc::new(WorkerPool::new(workers)),
-            models: RwLock::new(BTreeMap::new()),
-        }
+        let pool = Arc::new(WorkerPool::new(workers));
+        let metrics = MetricsRegistry::new();
+        pool.metrics().register_into(&metrics);
+        let alloc_gauge = metrics.gauge("alloc_allocations_total", labels(&[]));
+        ModelRegistry { pool, models: RwLock::new(BTreeMap::new()), metrics, alloc_gauge }
     }
 
     /// Worker threads shared by every registered model.
     pub fn workers(&self) -> usize {
         self.pool.size()
+    }
+
+    /// The shared metrics registry (every tenant's series plus the pool
+    /// counters live here).
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    /// Prometheus-style text exposition of every metric the registry
+    /// owns — per-tenant counters/gauges/span histograms, the shared
+    /// pool counters, and the allocation total (refreshed here).
+    /// ROADMAP item 2's `/metrics` endpoint serves this string verbatim;
+    /// `repro stats --prom` prints it today.
+    pub fn metrics_text(&self) -> String {
+        self.alloc_gauge.set(total_allocations() as i64);
+        self.metrics.render_text()
     }
 
     /// Register an already-compiled model.
@@ -180,19 +217,28 @@ impl ModelRegistry {
                 detail: "tenant batch size must be >= 1".into(),
             });
         }
-        let in_dim = model.in_dim();
-        let entry = Arc::new(ModelEntry {
-            session: InferenceSession::with_shared_pool(model, Arc::clone(&self.pool)),
-            batcher: Mutex::new(match cfg.max_wait {
-                Some(w) => Batcher::with_deadline(cfg.batch, in_dim, w),
-                None => Batcher::new(cfg.batch, in_dim),
-            }),
-        });
+        // Write lock first: the duplicate check must precede metric
+        // registration, or a rejected insert would clobber the existing
+        // tenant's series.
         let mut map = self.models.write().unwrap();
         if map.contains_key(id) {
             return Err(RegistryError::DuplicateModel(id.to_string()));
         }
-        map.insert(id.to_string(), entry);
+        let in_dim = model.in_dim();
+        let mut session = InferenceSession::with_shared_pool(model, Arc::clone(&self.pool));
+        if cfg.span_sample_every > 0 {
+            session.enable_metrics(cfg.span_sample_every).register_into(&self.metrics, id);
+        }
+        let batcher = match cfg.max_wait {
+            Some(w) => Batcher::with_deadline(cfg.batch, in_dim, w),
+            None => Batcher::new(cfg.batch, in_dim),
+        };
+        let metrics = batcher.metrics().clone();
+        metrics.register_into(&self.metrics, id);
+        map.insert(
+            id.to_string(),
+            Arc::new(ModelEntry { session, batcher: Mutex::new(batcher), metrics }),
+        );
         Ok(())
     }
 
@@ -212,10 +258,15 @@ impl ModelRegistry {
         self.insert(id, model, cfg)
     }
 
-    /// Drop a model; its queued (unanswered) requests are dropped too.
-    /// Returns false if no such model.
+    /// Drop a model; its queued (unanswered) requests are dropped too,
+    /// and every metric series labeled with the model id leaves the
+    /// exposition.  Returns false if no such model.
     pub fn evict(&self, id: &str) -> bool {
-        self.models.write().unwrap().remove(id).is_some()
+        let evicted = self.models.write().unwrap().remove(id).is_some();
+        if evicted {
+            self.metrics.unregister_labeled("model", id);
+        }
+        evicted
     }
 
     pub fn contains(&self, id: &str) -> bool {
@@ -245,6 +296,9 @@ impl ModelRegistry {
         let e = self.entry(model)?;
         let expected = e.session.model().in_dim();
         if x.len() != expected {
+            // Lock-free reject accounting: `serve_rejected_total` bumps
+            // through the shared bundle, never the batcher lock.
+            e.metrics.rejected.inc();
             return Err(RegistryError::BadInput {
                 model: model.to_string(),
                 got: x.len(),
@@ -384,7 +438,7 @@ mod tests {
     }
 
     fn cfg_no_deadline(batch: usize) -> TenantConfig {
-        TenantConfig { batch, max_wait: None }
+        TenantConfig { batch, max_wait: None, span_sample_every: 1 }
     }
 
     #[test]
@@ -421,7 +475,7 @@ mod tests {
         reg.insert(
             "m",
             toy_model(5),
-            TenantConfig { batch: 8, max_wait: Some(Duration::ZERO) },
+            TenantConfig { batch: 8, max_wait: Some(Duration::ZERO), span_sample_every: 1 },
         )
         .unwrap();
         reg.push("m", 7, vec![0.5; 12]).unwrap();
@@ -453,7 +507,11 @@ mod tests {
             Err(RegistryError::DuplicateModel(_))
         ));
         assert!(matches!(
-            reg.insert("z", toy_model(7), TenantConfig { batch: 0, max_wait: None }),
+            reg.insert(
+                "z",
+                toy_model(7),
+                TenantConfig { batch: 0, max_wait: None, span_sample_every: 1 }
+            ),
             Err(RegistryError::BadConfig { .. })
         ));
         assert!(matches!(
@@ -573,6 +631,63 @@ mod tests {
             vec![0, 2],
             "good requests before and after the rejection are answered"
         );
+    }
+
+    #[test]
+    fn metrics_text_covers_tenants_pool_and_alloc() {
+        let reg = ModelRegistry::new(2);
+        reg.insert("m", toy_model(5), cfg_no_deadline(2)).unwrap();
+        reg.push("m", 0, vec![0.5; 12]).unwrap();
+        reg.push("m", 1, vec![0.25; 12]).unwrap();
+        assert!(matches!(
+            reg.push("m", 2, vec![0.5; 3]),
+            Err(RegistryError::BadInput { .. })
+        ));
+        reg.drain(true);
+        let text = reg.metrics_text();
+        assert!(text.contains("serve_requests_total{model=\"m\"} 2\n"), "{text}");
+        assert!(text.contains("serve_completed_total{model=\"m\"} 2\n"), "{text}");
+        assert!(text.contains("serve_rejected_total{model=\"m\"} 1\n"), "{text}");
+        assert!(text.contains("serve_batches_total{model=\"m\"} 1\n"), "{text}");
+        assert!(text.contains("serve_queue_depth{model=\"m\"} 0\n"), "{text}");
+        // Stage spans: batcher-owned always on, per-layer via the knob.
+        for stage in ["enqueue", "cut", "complete"] {
+            assert!(
+                text.contains(&format!(
+                    "serve_stage_seconds_count{{model=\"m\",stage=\"{stage}\"}}"
+                )),
+                "missing {stage} span: {text}"
+            );
+        }
+        assert!(
+            text.contains(
+                "serve_layer_seconds_count{model=\"m\",layer=\"0\",kind=\"fc\",stage=\"shard_execute\"} 1\n"
+            ),
+            "{text}"
+        );
+        // Shared pool counters (1 layer x 2 shards = 2 scoped tasks).
+        assert!(text.contains("pool_scoped_batches_total 1\n"), "{text}");
+        assert!(text.contains("pool_scoped_tasks_total 2\n"), "{text}");
+        // The allocation gauge is present (0 without the allocator).
+        assert!(text.contains("alloc_allocations_total"), "{text}");
+        // Eviction removes every tenant-labeled series but keeps the
+        // registry-level ones.
+        assert!(reg.evict("m"));
+        let text = reg.metrics_text();
+        assert!(!text.contains("model=\"m\""), "{text}");
+        assert!(text.contains("pool_scoped_tasks_total"), "{text}");
+        // span_sample_every == 0 disables per-layer spans only.
+        reg.insert(
+            "quiet",
+            toy_model(5),
+            TenantConfig { batch: 1, max_wait: None, span_sample_every: 0 },
+        )
+        .unwrap();
+        reg.push("quiet", 0, vec![0.5; 12]).unwrap();
+        reg.drain(true);
+        let text = reg.metrics_text();
+        assert!(!text.contains("serve_layer_seconds_count{model=\"quiet\""), "{text}");
+        assert!(text.contains("serve_completed_total{model=\"quiet\"} 1\n"), "{text}");
     }
 
     #[test]

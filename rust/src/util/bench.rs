@@ -22,13 +22,16 @@ pub struct Stats {
     pub mean: f64,
     pub median: f64,
     pub p95: f64,
+    pub p99: f64,
     pub min: f64,
 }
 
 impl Stats {
     /// Reduce raw samples (seconds) to summary statistics.  Shared by
     /// [`Bench::run`] and the serving front-end's latency accounting
-    /// (`serve::batcher`). Panics on an empty sample set.
+    /// (`serve::batcher`, where the same shape is derived from the
+    /// bounded `obs::Histogram` instead of raw samples).
+    /// Panics on an empty sample set.
     pub fn from_samples(mut samples: Vec<f64>) -> Stats {
         assert!(!samples.is_empty(), "no samples collected");
         samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -38,6 +41,7 @@ impl Stats {
             mean: samples.iter().sum::<f64>() / n as f64,
             median: samples[n / 2],
             p95: samples[((n as f64 * 0.95) as usize).min(n - 1)],
+            p99: samples[((n as f64 * 0.99) as usize).min(n - 1)],
             min: samples[0],
         }
     }
@@ -148,6 +152,7 @@ mod tests {
         assert_eq!(s.min, 0.1);
         assert_eq!(s.median, 0.3);
         assert_eq!(s.p95, 0.5);
+        assert_eq!(s.p99, 0.5);
         assert!((s.mean - 0.3).abs() < 1e-12);
     }
 

@@ -1,0 +1,79 @@
+//! The batcher's accounting is bounded and allocation-free under
+//! traffic: 1M+ pushes through the push → cut → complete loop allocate
+//! exactly one buffer per push (the caller's request vector) and
+//! nothing else — the metric bundle's histograms absorb every latency
+//! sample into fixed storage, and [`Batcher::stats`] derives its
+//! summary in O(buckets) without cloning samples.  The old
+//! `latencies_s: Vec<f64>` design fails this test twice over: its log
+//! grew by 8 bytes per request forever, and every `stats()` call
+//! cloned + sorted the whole log.
+//!
+//! This file deliberately holds ONE test: it installs
+//! [`CountingAllocator`] as the binary's global allocator and asserts
+//! an exact allocation count, so no sibling test may run (and allocate)
+//! concurrently in this process.
+
+use lfsr_prune::obs::CountingAllocator;
+use lfsr_prune::serve::Batcher;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+const EXAMPLE_LEN: usize = 8;
+const BATCH: usize = 64;
+const PUSHES_PER_ROUND: usize = 256;
+const ROUNDS: usize = 4096;
+const WARMUP_ROUNDS: usize = 2;
+
+fn run_round(b: &mut Batcher, round: usize) {
+    for i in 0..PUSHES_PER_ROUND {
+        // The one allocation this loop is allowed: the request payload,
+        // owned by the caller by contract.
+        let x = vec![0.25_f32; EXAMPLE_LEN];
+        b.push((round * PUSHES_PER_ROUND + i) as u64, x);
+    }
+    while let Some(mb) = b.next_batch(true) {
+        b.complete(mb);
+    }
+    // Snapshotting stats every round is part of the measured region: it
+    // must be O(buckets) reads, not a clone-and-sort of the sample log.
+    let s = b.stats();
+    assert_eq!(s.requests, ((round + 1) * PUSHES_PER_ROUND) as u64);
+}
+
+#[test]
+fn million_pushes_allocate_one_buffer_per_push_and_nothing_else() {
+    let mut b = Batcher::new(BATCH, EXAMPLE_LEN);
+    // Warmup: the queue, the recycled micro-batch buffers, and the
+    // histogram storage all reach steady-state capacity here.
+    for round in 0..WARMUP_ROUNDS {
+        run_round(&mut b, round);
+    }
+
+    let before = lfsr_prune::obs::total_allocations();
+    for round in WARMUP_ROUNDS..ROUNDS {
+        run_round(&mut b, round);
+    }
+    let allocs = lfsr_prune::obs::total_allocations() - before;
+
+    let measured_rounds = (ROUNDS - WARMUP_ROUNDS) as u64;
+    let expected = measured_rounds * PUSHES_PER_ROUND as u64;
+    assert_eq!(
+        allocs, expected,
+        "steady-state rounds must allocate exactly the request payloads \
+         ({expected}), measured {allocs}"
+    );
+
+    // And the accounting saw every one of the 1M+ requests — in fixed
+    // histogram storage, not an ever-growing log.
+    let total = (ROUNDS * PUSHES_PER_ROUND) as u64;
+    assert_eq!(total, 1_048_576);
+    let m = b.metrics();
+    assert_eq!(m.completed.get(), total);
+    assert_eq!(m.complete.count(), total);
+    assert_eq!(m.enqueue.count(), total);
+    assert_eq!(m.cut.count(), total / BATCH as u64);
+    let s = b.stats().latency.expect("latency summary");
+    assert_eq!(s.samples as u64, total);
+    assert!(s.p99 >= s.p95 && s.p95 >= s.median && s.median >= s.min);
+}

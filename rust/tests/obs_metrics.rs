@@ -1,0 +1,161 @@
+//! Integration pins for the obs metrics core: the histogram's quantile
+//! math against the python executable mirror
+//! (`python/tests/test_obs_pins.py` — same Pcg32 stream, same pinned
+//! constants, bit-identical f64 expression), exact accounting under
+//! thread contention, and the text-exposition line grammar CI's smoke
+//! step parses.
+
+use std::sync::Arc;
+
+use lfsr_prune::data::rng::Pcg32;
+use lfsr_prune::obs::{labels, Counter, Histogram, MetricsRegistry, HIST_BUCKETS};
+
+/// Shared fixture with the python mirror: 100k samples
+/// `1 + (next_u32() % 50_000_000)` ns from `Pcg32::new(0xB5)`.
+const SEED: u64 = 0xB5;
+const N_SAMPLES: usize = 100_000;
+const MODULUS: u32 = 50_000_000;
+
+/// Pins derived by `python3 python/tests/test_obs_pins.py`; the python
+/// suite asserts the identical values.
+const PIN_COUNT: u64 = 100_000;
+const PIN_SUM_NS: u64 = 2_508_770_600_668;
+const PIN_MIN_NS: u64 = 14;
+const PIN_MAX_NS: u64 = 49_999_712;
+const PIN_P50_NS: f64 = 25_139_218.995870985;
+// p95/p99 interpolate past the observed ceiling inside the top occupied
+// bucket, so the [min, max] clamp snaps both to the exact max.
+const PIN_P95_NS: f64 = 49_999_712.0;
+const PIN_P99_NS: f64 = 49_999_712.0;
+// Exact rank statistics (sorted sample at rank ceil(q*n)) of the same
+// stream, so the 2x error bound is checked against ground truth.
+const PIN_EXACT_P50_NS: u64 = 25_126_468;
+const PIN_EXACT_P95_NS: u64 = 47_505_180;
+const PIN_EXACT_P99_NS: u64 = 49_503_444;
+
+fn sample_stream() -> Vec<u64> {
+    let mut rng = Pcg32::new(SEED);
+    (0..N_SAMPLES).map(|_| 1 + (rng.next_u32() % MODULUS) as u64).collect()
+}
+
+fn exact_quantile(sorted_ns: &[u64], q: f64) -> u64 {
+    let n = sorted_ns.len() as u64;
+    let target = ((q * n as f64).ceil() as u64).clamp(1, n);
+    sorted_ns[target as usize - 1]
+}
+
+#[test]
+fn quantiles_match_python_mirror_pins() {
+    let h = Histogram::new();
+    let mut ns = sample_stream();
+    for &v in &ns {
+        h.record_ns(v);
+    }
+    assert_eq!(h.count(), PIN_COUNT);
+    assert_eq!(h.sum_ns(), PIN_SUM_NS);
+    assert_eq!(h.min_ns(), Some(PIN_MIN_NS));
+    assert_eq!(h.max_ns(), Some(PIN_MAX_NS));
+
+    // The estimate formula is the same IEEE f64 expression on both
+    // sides, so the pins match to well below 1e-9 relative.
+    for (q, pin) in [(0.5, PIN_P50_NS), (0.95, PIN_P95_NS), (0.99, PIN_P99_NS)] {
+        let est = h.quantile_ns(q).unwrap();
+        assert!((est - pin).abs() <= pin * 1e-9, "q={q}: est {est} vs pinned {pin}");
+    }
+
+    // Ground truth: estimates stay within the documented 2x bound of
+    // the exact rank statistic (and the exact ranks themselves are
+    // pinned, shared with the python suite).
+    ns.sort_unstable();
+    for (q, exact_pin) in [
+        (0.5, PIN_EXACT_P50_NS),
+        (0.95, PIN_EXACT_P95_NS),
+        (0.99, PIN_EXACT_P99_NS),
+    ] {
+        let exact = exact_quantile(&ns, q);
+        assert_eq!(exact, exact_pin, "q={q}");
+        let ratio = h.quantile_ns(q).unwrap() / exact as f64;
+        assert!((0.5..=2.0).contains(&ratio), "q={q}: ratio {ratio}");
+    }
+}
+
+#[test]
+fn concurrent_records_are_exact() {
+    // N threads x M records: counts and sums are exact (relaxed atomics
+    // lose ordering, never increments), min/max are exact extremes.
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 125_000;
+    let h = Arc::new(Histogram::new());
+    let c = Arc::new(Counter::new());
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let h = Arc::clone(&h);
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    h.record_ns(1 + t * PER_THREAD + i);
+                    c.inc();
+                }
+            })
+        })
+        .collect();
+    for handle in handles {
+        handle.join().unwrap();
+    }
+    let total = THREADS * PER_THREAD;
+    assert_eq!(h.count(), total);
+    assert_eq!(c.get(), total);
+    // Sum of 1 + k for k in 0..total.
+    assert_eq!(h.sum_ns(), total + total * (total - 1) / 2);
+    assert_eq!(h.min_ns(), Some(1));
+    assert_eq!(h.max_ns(), Some(total));
+    let buckets = h.bucket_counts();
+    assert_eq!(buckets.iter().sum::<u64>(), total);
+    assert_eq!(buckets.len(), HIST_BUCKETS);
+}
+
+#[test]
+fn render_text_lines_parse_as_exposition_grammar() {
+    // Same grammar the CI smoke step enforces: every non-comment line is
+    // `name value` or `name{k="v",...} value` with a finite f64 value.
+    let reg = MetricsRegistry::new();
+    reg.counter("serve_requests_total", labels(&[("model", "m0")])).add(7);
+    reg.gauge("serve_queue_depth", labels(&[("model", "m0")])).set(3);
+    let h = reg.histogram("serve_stage_seconds", labels(&[("model", "m0"), ("stage", "cut")]));
+    for v in [800u64, 1_500, 65_000, 2_000_000] {
+        h.record_ns(v);
+    }
+    let text = reg.render_text();
+    let mut parsed = 0usize;
+    for line in text.lines() {
+        if line.starts_with('#') {
+            assert!(
+                line.starts_with("# TYPE "),
+                "only TYPE comments are emitted: {line}"
+            );
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').expect("line has a value field");
+        let name = series.split('{').next().unwrap();
+        assert!(!name.is_empty(), "line has a metric name: {line}");
+        assert!(
+            name.chars().all(|ch| ch.is_ascii_alphanumeric() || ch == '_'),
+            "metric name is [a-zA-Z0-9_]: {name}"
+        );
+        let rest = &series[name.len()..];
+        if !rest.is_empty() {
+            assert!(rest.starts_with('{') && rest.ends_with('}'), "label block: {rest}");
+        }
+        let v: f64 = value.parse().expect("value parses as f64");
+        assert!(v.is_finite(), "finite value: {line}");
+        parsed += 1;
+    }
+    assert!(parsed >= 10, "counter + gauge + expanded histogram series: {text}");
+    for required in [
+        "serve_requests_total{model=\"m0\"} 7",
+        "serve_queue_depth{model=\"m0\"} 3",
+        "serve_stage_seconds_count{model=\"m0\",stage=\"cut\"} 4",
+    ] {
+        assert!(text.contains(required), "missing `{required}` in:\n{text}");
+    }
+}

@@ -48,7 +48,8 @@ fn mixed_fc_conv_tenants_bitwise_under_concurrent_churn() {
         .collect();
 
     let reg = Arc::new(ModelRegistry::new(2));
-    let cfg = TenantConfig { batch: 4, max_wait: Some(Duration::from_millis(1)) };
+    let cfg =
+        TenantConfig { batch: 4, max_wait: Some(Duration::from_millis(1)), span_sample_every: 1 };
     for (id, model) in &tenants {
         reg.insert(id, model.clone(), cfg).unwrap();
     }
