@@ -21,7 +21,12 @@
 //! flush deadline so low-QPS tenants are not starved.  Every other
 //! tenant serves the i8 precision tier (per-column-quantized kept
 //! values, ~4x smaller value memory) to demonstrate mixed f32/i8
-//! tenants on the one shared pool.
+//! tenants on the one shared pool.  Multi-tenant queues are *bounded*
+//! (`TenantConfig::max_queue`): a push against a full queue is a typed
+//! `RegistryError::Overloaded` rejection, counted and reported rather
+//! than retried — the offered load simply exceeds capacity and the
+//! server stays at bounded memory (README: "Robustness & overload
+//! behavior").
 //!
 //! With `dump_every_s > 0` the server periodically dumps the full
 //! Prometheus-style metrics exposition between `=== metrics ===` /
@@ -36,7 +41,7 @@ use std::time::{Duration, Instant};
 use lfsr_prune::data::{synth, SynthSpec};
 use lfsr_prune::obs::MetricsRegistry;
 use lfsr_prune::serve::{synthetic_lenet300, Batcher, InferenceSession};
-use lfsr_prune::store::{ModelRegistry, TenantConfig};
+use lfsr_prune::store::{ModelRegistry, RegistryError, TenantConfig};
 
 const IN_DIM: usize = 784;
 const SPARSITY: f64 = 0.9;
@@ -128,7 +133,10 @@ fn main() {
             last_dump = Instant::now();
         }
         while let Ok((id, x, sent_at)) = rx.try_recv() {
-            batcher.push_at(id, x, sent_at);
+            // Single-tenant mode leaves the queue unbounded (no
+            // `set_max_queue`), so the only possible refusal is a
+            // malformed request — which the producer never sends.
+            batcher.push_at(id, x, sent_at).expect("well-formed request");
         }
         disconnected = disconnected || producer.is_finished();
         // Cut full batches while the queue is deep; flush partials only
@@ -184,6 +192,10 @@ fn serve_multi_model(n_requests: usize, workers: usize, models: usize, dump_ever
         batch: BATCH,
         max_wait: Some(Duration::from_millis(5)),
         span_sample_every: SAMPLE_EVERY,
+        // Bounded admission: 4 micro-batches of headroom per tenant;
+        // past that, pushes are rejected (counted below), not queued.
+        max_queue: 4 * BATCH,
+        ..TenantConfig::default()
     };
     let t0 = Instant::now();
     let ids: Vec<String> = (0..models)
@@ -227,15 +239,23 @@ fn serve_multi_model(n_requests: usize, workers: usize, models: usize, dump_ever
         }
     });
 
+    // Every offered request is either answered or rejected at admission
+    // (typed backpressure on a full bounded queue) — nothing is lost
+    // silently, and the loop runs until the ledger balances.
     let mut answered = 0usize;
+    let mut rejected = 0usize;
     let mut last_dump = Instant::now();
-    while answered < n_requests {
+    while answered + rejected < n_requests {
         if dump_every > 0.0 && last_dump.elapsed().as_secs_f64() >= dump_every {
             dump_metrics(&reg.metrics_text());
             last_dump = Instant::now();
         }
         while let Ok((m, id, x)) = rx.try_recv() {
-            reg.push(&ids[m], id, x).expect("routed push");
+            match reg.push(&ids[m], id, x) {
+                Ok(()) => {}
+                Err(RegistryError::Overloaded { .. }) => rejected += 1,
+                Err(e) => panic!("routed push: {e}"),
+            }
         }
         let flush = producer.is_finished() && reg.pending() > 0;
         let batch = reg.drain(flush);
@@ -246,12 +266,16 @@ fn serve_multi_model(n_requests: usize, workers: usize, models: usize, dump_ever
     }
     producer.join().expect("producer thread");
 
-    println!("\nper-tenant stats ({} requests total):", n_requests);
+    println!(
+        "\nper-tenant stats ({answered} answered + {rejected} rejected at admission = \
+         {n_requests} offered):"
+    );
     for info in reg.list() {
         let s = &info.stats;
         let tier = info.precision.map_or("mixed".to_string(), |p| p.to_string());
         println!(
-            "  {}: {} req / {} batches -> {:.0} req/s ({}, {} padded rows, nnz {}, {} values)",
+            "  {}: {} req / {} batches -> {:.0} req/s ({}, {} padded rows, nnz {}, {} values) \
+             [over {} shed {} failed {} {}]",
             info.id,
             s.requests,
             s.batches,
@@ -259,7 +283,11 @@ fn serve_multi_model(n_requests: usize, workers: usize, models: usize, dump_ever
             s.latency_cell(),
             s.padded,
             info.nnz,
-            tier
+            tier,
+            s.overloaded,
+            s.shed,
+            s.failed,
+            if info.healthy { "healthy" } else { "quarantined" },
         );
     }
     if dump_every > 0.0 {

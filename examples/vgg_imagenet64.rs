@@ -123,6 +123,7 @@ fn serve_mode() -> anyhow::Result<()> {
             batch: 16,
             max_wait: Some(Duration::from_millis(10)),
             span_sample_every: 16,
+            ..TenantConfig::default()
         },
     )
     .expect("fresh registry");

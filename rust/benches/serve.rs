@@ -16,6 +16,7 @@ use lfsr_prune::mask::prs::PrsMaskConfig;
 use lfsr_prune::obs::{Histogram, Stage};
 use lfsr_prune::serve::{
     parallel_keep_sequence, synthetic_lenet300, synthetic_vgg16_scaled, Batcher, InferenceSession,
+    PushError,
 };
 use lfsr_prune::util::bench::{bench_out_path, black_box, Bench, Stats};
 
@@ -136,7 +137,9 @@ fn main() {
     let mut batcher = Batcher::new(batch, DIMS[0]);
     let feed: Vec<f32> = (0..n_requests * DIMS[0]).map(|_| rng.next_f32()).collect();
     for i in 0..n_requests {
-        batcher.push(i as u64, feed[i * DIMS[0]..(i + 1) * DIMS[0]].to_vec());
+        batcher
+            .push(i as u64, feed[i * DIMS[0]..(i + 1) * DIMS[0]].to_vec())
+            .expect("unbounded e2e queue admits every well-formed request");
     }
     let (mut logits, mut classes) = (Vec::new(), Vec::new());
     while let Some(mb) = batcher.next_batch(true) {
@@ -154,6 +157,59 @@ fn main() {
         serve_stats.latency_cell(),
         serve_stats.padded,
     );
+
+    // --- bounded admission under an offered-load sweep -------------------
+    // Offered load sweeps from half capacity to 4x capacity against a
+    // bounded queue with a flat per-request deadline: the accepted /
+    // rejected / shed split and the served p99 at each level land in the
+    // JSON so overload behavior is diffable across PRs like any other
+    // perf row.  A fresh session (no span metrics) keeps the e2e stage
+    // histograms above untouched by overload traffic.
+    let ov_session = InferenceSession::new(synthetic_lenet300(SPARSITY, 4 * multi, multi), multi);
+    let capacity = 256usize;
+    let deadline_ms = 100u64;
+    // (offered, accepted, rejected, shed, served, served_p99_ms, rps)
+    let mut ov_rows: Vec<(usize, u64, u64, u64, u64, f64, f64)> = Vec::new();
+    for &offered in &[capacity / 2, capacity, 2 * capacity, 4 * capacity] {
+        let mut b = Batcher::new(batch, DIMS[0]);
+        b.set_max_queue(Some(capacity));
+        let deadline =
+            std::time::Instant::now() + std::time::Duration::from_millis(deadline_ms);
+        let (mut accepted, mut rejected) = (0u64, 0u64);
+        for i in 0..offered {
+            let at = (i % n_requests) * DIMS[0];
+            match b.push_with_deadline(i as u64, feed[at..at + DIMS[0]].to_vec(), Some(deadline))
+            {
+                Ok(()) => accepted += 1,
+                Err(PushError::Overloaded { .. }) => rejected += 1,
+                Err(e) => panic!("unexpected push refusal: {e}"),
+            }
+        }
+        while let Some(mb) = b.next_batch(true) {
+            ov_session.classify_batch_into(&mb.x, mb.batch, &mut logits, &mut classes);
+            black_box(classes.last().copied());
+            b.complete(mb);
+        }
+        let s = b.stats();
+        assert_eq!(accepted + rejected, offered as u64, "admission ledger balances");
+        assert_eq!(s.requests + s.shed, accepted, "every accepted request served or shed");
+        println!(
+            "bench serve/overload_{offered}of{capacity}: {accepted} accepted, {rejected} \
+             rejected, {} shed, {} served ({})",
+            s.shed,
+            s.requests,
+            s.latency_cell(),
+        );
+        ov_rows.push((
+            offered,
+            accepted,
+            rejected,
+            s.shed,
+            s.requests,
+            s.latency.map_or(0.0, |l| l.p99 * 1e3),
+            s.throughput_rps(),
+        ));
+    }
 
     // --- BENCH_serve.json at the repo root ------------------------------
     let mut json = String::new();
@@ -197,6 +253,33 @@ fn main() {
         serve_stats.latency.map_or(0.0, |l| l.p99 * 1e3),
         serve_stats.padded,
     );
+    // Overload sweep: bounded admission + deadline shedding under
+    // offered loads past queue capacity (required key for CI's
+    // BENCH_serve.json shape check).
+    let _ = writeln!(json, "  \"overload\": {{");
+    let _ = writeln!(
+        json,
+        "    \"capacity\": {capacity}, \"batch\": {batch}, \"workers\": {multi}, \
+         \"deadline_ms\": {deadline_ms},"
+    );
+    let _ = writeln!(json, "    \"sweep\": [");
+    for (i, r) in ov_rows.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "      {{\"offered\": {}, \"accepted\": {}, \"rejected\": {}, \"shed\": {}, \
+             \"served\": {}, \"served_p99_ms\": {:.3}, \"throughput_rps\": {:.1}}}{}",
+            r.0,
+            r.1,
+            r.2,
+            r.3,
+            r.4,
+            r.5,
+            r.6,
+            if i + 1 == ov_rows.len() { "" } else { "," }
+        );
+    }
+    let _ = writeln!(json, "    ]");
+    let _ = writeln!(json, "  }},");
     // Staged latency breakdown (enqueue -> cut -> panel_pack ->
     // shard_execute -> complete) from the span histograms, so the stage
     // mix is diffable across PRs alongside the end-to-end row.
@@ -240,4 +323,5 @@ fn main() {
     let parsed = lfsr_prune::util::json::parse(&json).expect("valid json");
     assert!(parsed.get("results").is_some());
     assert!(parsed.get("stages").is_some());
+    assert!(parsed.get("overload").is_some());
 }

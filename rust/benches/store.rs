@@ -70,6 +70,11 @@ fn main() {
             batch: 64,
             max_wait: Some(std::time::Duration::from_millis(5)),
             span_sample_every: 16,
+            // The bench pushes the whole offered load before draining;
+            // capacity must cover it so admission never rejects here
+            // (overload behavior is benched in serve.rs's sweep).
+            max_queue: 2 * n_requests,
+            ..TenantConfig::default()
         };
         let ids: Vec<String> = (0..models)
             .map(|m| {

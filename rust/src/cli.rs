@@ -26,7 +26,7 @@ use crate::pipeline::{self, MaskMethod, RegType};
 use crate::runtime::Runtime;
 use crate::serve::synthetic_lenet300_seeded;
 use crate::sparse::Precision;
-use crate::store::{self, LoadOptions, ModelRegistry, TenantConfig};
+use crate::store::{self, LoadOptions, ModelRegistry, RegistryError, TenantConfig};
 
 /// Parsed `--flag value` / `--flag` arguments plus positionals.
 #[derive(Debug, Default)]
@@ -94,10 +94,11 @@ USAGE:
                [--input-hw H] [--ch-div D]
                [--precision f32|i8|i4|ternary] [--verify]
   repro serve-artifact PATH [PATH..] [--requests N] [--workers N]
-               [--batch B] [--deadline-ms D] [--shards N] [--lanes N]
+               [--batch B] [--deadline-ms D] [--max-queue Q]
+               [--shards N] [--lanes N]
                [--precision keep|f32|i8|i4|ternary[,..]] [--verify]
   repro stats [PATH..] [--requests N] [--workers N] [--batch B]
-               [--deadline-ms D] [--shards N] [--lanes N]
+               [--deadline-ms D] [--max-queue Q] [--shards N] [--lanes N]
                [--precision keep|f32|i8|i4|ternary[,..]]
                [--sample-every N] [--prom]
 
@@ -124,6 +125,16 @@ Prometheus-style metrics exposition — `--prom` prints the exposition
 alone (machine-readable, what CI's smoke step parses), and
 `--sample-every N` sets the per-layer span sampling knob (1 = time
 every call, 0 = per-layer spans off).
+Both serving commands bound every tenant's queue (`--max-queue`,
+default 1024): a full queue refuses the push with typed backpressure
+(the future HTTP 429) and the drive loop drains before retrying, so
+memory stays bounded at any offered load.  The `stats` table appends
+each tenant's robustness counters — `over` (admission rejections),
+`shed` (expired or evicted before compute), `failed` (micro-batches
+lost to a quarantined panic) — and the breaker state
+(healthy/quarantined); the exposition carries the same series as
+`serve_overload_total`, `serve_shed_total`, `serve_failed_total`, and
+the `serve_tenant_healthy` gauge.
 
 Artifacts default to ./artifacts (or $LFSR_PRUNE_ARTIFACTS); build them
 with `make artifacts` first.";
@@ -390,6 +401,8 @@ fn cmd_serve_artifact(args: &Args) -> Result<()> {
         batch,
         max_wait: Some(Duration::from_millis(deadline_ms)),
         span_sample_every: args.get("sample-every", 16u64)?,
+        max_queue: args.get("max-queue", 1024usize)?,
+        ..TenantConfig::default()
     };
     let reg = ModelRegistry::new(workers);
     let mut ids = Vec::new();
@@ -422,27 +435,58 @@ fn cmd_serve_artifact(args: &Args) -> Result<()> {
         reg.workers(),
     );
     let mut rng = Pcg32::new(123);
+    let mut answered = 0usize;
+    let mut backoffs = 0usize;
     for i in 0..requests {
         let id = &ids[i % ids.len()];
         let x: Vec<f32> = (0..in_dims[id]).map(|_| rng.next_f32()).collect();
-        reg.push(id, i as u64, x)?;
+        backoffs += push_with_backpressure(&reg, id, i as u64, x, &mut answered)?;
     }
-    let mut answered = 0usize;
     while answered < requests {
         answered += reg.drain(true).len();
+    }
+    if backoffs > 0 {
+        println!("  ({backoffs} push(es) backed off on a full queue before being accepted)");
     }
     print_tenant_table(&reg);
     Ok(())
 }
 
+/// Push with backpressure: a bounded tenant queue refuses at capacity
+/// ([`RegistryError::Overloaded`]), so the synthetic drive loop drains
+/// (flushing partial batches) and retries instead of failing the run.
+/// Returns how many times the push was refused before being accepted.
+fn push_with_backpressure(
+    reg: &ModelRegistry,
+    id: &str,
+    request: u64,
+    x: Vec<f32>,
+    answered: &mut usize,
+) -> Result<usize> {
+    let mut refused = 0usize;
+    loop {
+        match reg.push(id, request, x.clone()) {
+            Ok(()) => return Ok(refused),
+            Err(RegistryError::Overloaded { .. }) => {
+                refused += 1;
+                *answered += reg.drain(true).len();
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
 /// Per-tenant status table shared by `serve-artifact` and `stats`.
 /// Latency goes through [`ServeStats::latency_cell`], so a tenant with
 /// no completed requests prints `p95 n/a p99 n/a` instead of `0.0`.
+/// The bracketed tail is the robustness ledger: admission rejections
+/// (`over`), deadline/evict sheds (`shed`), panic-failed micro-batches
+/// (`failed`), and the tenant's breaker state.
 fn print_tenant_table(reg: &ModelRegistry) {
     for m in reg.list() {
         println!(
             "  {} ({}fc+{}conv+{}pool): {} req over {} batches -> {:.0} req/s ({}, \
-             {} padded rows, {} pending)",
+             {} padded rows, {} pending) [over {} shed {} failed {} {}]",
             m.id,
             m.kinds.fc,
             m.kinds.conv,
@@ -453,6 +497,10 @@ fn print_tenant_table(reg: &ModelRegistry) {
             m.stats.latency_cell(),
             m.stats.padded,
             m.pending,
+            m.stats.overloaded,
+            m.stats.shed,
+            m.stats.failed,
+            if m.healthy { "healthy" } else { "quarantined" },
         );
     }
 }
@@ -475,6 +523,8 @@ fn cmd_stats(args: &Args) -> Result<()> {
         batch,
         max_wait: Some(Duration::from_millis(deadline_ms)),
         span_sample_every: args.get("sample-every", 1u64)?,
+        max_queue: args.get("max-queue", 1024usize)?,
+        ..TenantConfig::default()
     };
     let reg = ModelRegistry::new(workers);
     let mut ids = Vec::new();
@@ -505,12 +555,12 @@ fn cmd_stats(args: &Args) -> Result<()> {
     let in_dims: BTreeMap<String, usize> =
         reg.list().into_iter().map(|m| (m.id, m.in_dim)).collect();
     let mut rng = Pcg32::new(123);
+    let mut answered = 0usize;
     for i in 0..requests {
         let id = &ids[i % ids.len()];
         let x: Vec<f32> = (0..in_dims[id]).map(|_| rng.next_f32()).collect();
-        reg.push(id, i as u64, x)?;
+        push_with_backpressure(&reg, id, i as u64, x, &mut answered)?;
     }
-    let mut answered = 0usize;
     while answered < requests {
         answered += reg.drain(true).len();
     }

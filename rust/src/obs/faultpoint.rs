@@ -1,0 +1,569 @@
+//! Deterministic fault injection: named failpoints, armed at runtime.
+//!
+//! The serving stack's robustness claims (bounded admission, deadline
+//! shedding, panic quarantine — see [`serve`](crate::serve) and
+//! [`store::registry`](crate::store::registry)) are only testable if a
+//! fault can be produced *on purpose*: this module plants named
+//! failpoints at the three places a real deployment breaks — pool task
+//! execution ([`points::POOL_TASK`]), per-shard session execution
+//! ([`points::SESSION_SHARD`], keyed by tenant id), and artifact decode
+//! ([`points::STORE_DECODE`]) — and lets a test or an operator arm a
+//! [`FaultPlan`] against them at runtime.
+//!
+//! Design constraints, in the repo's offline idiom (no `fail` crate):
+//!
+//! * **Disarmed is free.** [`fire`] is one relaxed atomic load and a
+//!   predictable branch when no plan is armed — zero allocations, no
+//!   lock — so the failpoints stay compiled into the steady-state serve
+//!   path without costing it anything
+//!   (`rust/tests/alloc_steady_state.rs` still counts exactly 0).
+//! * **Replayable.** Probabilistic specs draw from a per-spec
+//!   [`Pcg32`] seeded from `FaultPlan::seed` and the point name, so a
+//!   chaos run is a pure function of the plan — rerunning it injects
+//!   the same faults at the same hits.
+//! * **Armable from the environment.** `FAULT_PLAN="session.shard[a]=
+//!   panic@1..3;store.decode=fail@1"` drives the CI chaos smoke without
+//!   recompiling (see [`FaultPlan::parse`] for the grammar and
+//!   `rust/tests/chaos_serve.rs` for the consumer).
+//!
+//! Actions: `panic` (unwinds at the firing site — exercising the pool's
+//! panic capture and the registry's tenant quarantine), `delay:<ms>`
+//! (artificial latency), and `fail` ([`fire`] returns `true`; the store
+//! reader maps it to a typed
+//! [`StoreError`](crate::store::StoreError)).  Panics and sleeps happen
+//! strictly *after* the plan lock is released, so an injected panic can
+//! never poison the harness itself.
+//!
+//! Global state means concurrent tests that arm plans must serialize;
+//! [`arm`] returns a [`FaultGuard`] that disarms on drop to keep the
+//! window tight.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::data::rng::Pcg32;
+
+/// The environment variable [`FaultPlan::from_env`] reads.
+pub const ENV_VAR: &str = "FAULT_PLAN";
+
+/// The failpoint catalog: every name compiled into the library.
+pub mod points {
+    /// Fired inside every pool task execution (boxed and scoped), under
+    /// the worker's panic capture — an injected panic here surfaces
+    /// exactly like a real kernel bug.
+    pub const POOL_TASK: &str = "pool.task";
+    /// Fired at the top of each column-shard execution of a session
+    /// layer, keyed by the session's fault key (the registry sets it to
+    /// the tenant id) — the handle for faulting one tenant on a shared
+    /// pool.
+    pub const SESSION_SHARD: &str = "session.shard";
+    /// Fired at artifact decode entry; a `fail` action forces a typed
+    /// [`StoreError::Corrupt`](crate::store::StoreError) before any
+    /// bytes are parsed.
+    pub const STORE_DECODE: &str = "store.decode";
+}
+
+/// What a triggered spec does at the firing site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Unwind at the firing site (message names the point and hit).
+    Panic,
+    /// Sleep this many milliseconds, then continue normally.
+    DelayMs(u64),
+    /// Make [`fire`] return `true`: the caller maps it to its own typed
+    /// error (only the store reader honours it today).
+    Fail,
+}
+
+/// One armed rule: fire `action` at `point` (optionally only for one
+/// `key`) on 1-based hits `from..=to`, each with probability `prob`.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    pub point: String,
+    /// Only trigger when the firing site's key matches (`None` = any).
+    pub key: Option<String>,
+    pub action: FaultAction,
+    /// First triggering hit (1-based, inclusive).
+    pub from: u64,
+    /// Last triggering hit (inclusive; `u64::MAX` = open-ended).
+    pub to: u64,
+    /// Trigger probability per in-window hit (`None` = always); drawn
+    /// from a per-spec seeded [`Pcg32`] so runs replay bit-identically.
+    pub prob: Option<f32>,
+}
+
+/// A set of [`FaultSpec`]s plus the seed their probabilistic draws
+/// derive from.  Build with [`FaultPlan::with`] or parse one from text.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// A plan whose probabilistic specs draw from `seed`.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan { seed, specs: Vec::new() }
+    }
+
+    /// Add a spec triggering on every hit in `from..=to` (1-based).
+    pub fn with(
+        mut self,
+        point: &str,
+        key: Option<&str>,
+        action: FaultAction,
+        from: u64,
+        to: u64,
+    ) -> FaultPlan {
+        self.specs.push(FaultSpec {
+            point: point.to_string(),
+            key: key.map(str::to_string),
+            action,
+            from,
+            to,
+            prob: None,
+        });
+        self
+    }
+
+    /// Like [`FaultPlan::with`], triggering with probability `prob` per
+    /// in-window hit.
+    pub fn with_prob(
+        mut self,
+        point: &str,
+        key: Option<&str>,
+        action: FaultAction,
+        from: u64,
+        to: u64,
+        prob: f32,
+    ) -> FaultPlan {
+        self.specs.push(FaultSpec {
+            point: point.to_string(),
+            key: key.map(str::to_string),
+            action,
+            from,
+            to,
+            prob: Some(prob),
+        });
+        self
+    }
+
+    /// Parse the textual plan grammar (the `FAULT_PLAN` env format):
+    ///
+    /// ```text
+    /// plan  := entry (';' entry)*
+    /// entry := 'seed=' u64
+    ///        | point ('[' key ']')? '=' action ('?' prob)? ('@' range)?
+    /// action := 'panic' | 'fail' | 'delay:' ms
+    /// range  := N | N '..' | N '..' M        (1-based, inclusive)
+    /// ```
+    ///
+    /// Example: `seed=7;session.shard[a]=panic@1..3;store.decode=fail@1;
+    /// pool.task=delay:2?0.5`.
+    pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new();
+        for entry in text.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (lhs, rhs) = entry
+                .split_once('=')
+                .ok_or_else(|| format!("fault entry {entry:?} has no '='"))?;
+            if lhs == "seed" {
+                plan.seed = rhs
+                    .trim()
+                    .parse::<u64>()
+                    .map_err(|_| format!("bad seed {rhs:?}"))?;
+                continue;
+            }
+            let (point, key) = match lhs.split_once('[') {
+                Some((p, rest)) => {
+                    let key = rest
+                        .strip_suffix(']')
+                        .ok_or_else(|| format!("unclosed key in {lhs:?}"))?;
+                    (p.trim(), Some(key.trim().to_string()))
+                }
+                None => (lhs.trim(), None),
+            };
+            if point.is_empty() {
+                return Err(format!("empty point name in {entry:?}"));
+            }
+            let (action_txt, range_txt) = match rhs.split_once('@') {
+                Some((a, r)) => (a.trim(), Some(r.trim())),
+                None => (rhs.trim(), None),
+            };
+            let (action_txt, prob) = match action_txt.split_once('?') {
+                Some((a, p)) => {
+                    let p: f32 =
+                        p.trim().parse().map_err(|_| format!("bad probability {p:?}"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("probability {p} out of [0, 1]"));
+                    }
+                    (a.trim(), Some(p))
+                }
+                None => (action_txt, None),
+            };
+            let action = if action_txt == "panic" {
+                FaultAction::Panic
+            } else if action_txt == "fail" {
+                FaultAction::Fail
+            } else if let Some(ms) = action_txt.strip_prefix("delay:") {
+                let ms: u64 =
+                    ms.trim().parse().map_err(|_| format!("bad delay {ms:?}"))?;
+                FaultAction::DelayMs(ms)
+            } else {
+                return Err(format!("unknown action {action_txt:?}"));
+            };
+            let (from, to) = match range_txt {
+                None => (1, u64::MAX),
+                Some(r) => match r.split_once("..") {
+                    None => {
+                        let n: u64 =
+                            r.parse().map_err(|_| format!("bad hit {r:?}"))?;
+                        (n, n)
+                    }
+                    Some((a, b)) => {
+                        let from: u64 =
+                            a.parse().map_err(|_| format!("bad range start {a:?}"))?;
+                        let to = if b.is_empty() {
+                            u64::MAX
+                        } else {
+                            b.parse().map_err(|_| format!("bad range end {b:?}"))?
+                        };
+                        (from, to)
+                    }
+                },
+            };
+            if from == 0 || to < from {
+                return Err(format!("empty hit window {from}..{to} (hits are 1-based)"));
+            }
+            plan.specs.push(FaultSpec {
+                point: point.to_string(),
+                key,
+                action,
+                from,
+                to,
+                prob,
+            });
+        }
+        Ok(plan)
+    }
+
+    /// Read and parse [`ENV_VAR`]; `Ok(None)` when unset or empty.
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        match std::env::var(ENV_VAR) {
+            Ok(v) if !v.trim().is_empty() => FaultPlan::parse(&v).map(Some),
+            _ => Ok(None),
+        }
+    }
+}
+
+struct ArmedSpec {
+    spec: FaultSpec,
+    hits: u64,
+    rng: Pcg32,
+}
+
+/// Fast gate: number of armed specs.  Zero means every [`fire`] call is
+/// a single relaxed load and an untaken branch.
+static ARMED: AtomicUsize = AtomicUsize::new(0);
+static PLAN: Mutex<Option<Vec<ArmedSpec>>> = Mutex::new(None);
+
+fn plan_lock() -> MutexGuard<'static, Option<Vec<ArmedSpec>>> {
+    // An injected panic never happens under this lock (side effects run
+    // after release), but a *test* thread may die while other threads
+    // still fire — recover rather than cascade poisoning.
+    PLAN.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn spec_seed(plan_seed: u64, spec: &FaultSpec, index: usize) -> u64 {
+    // FNV-1a over the point name keeps distinct points on distinct
+    // streams even under the default seed.
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in spec.point.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    plan_seed ^ h ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Arm `plan` globally, replacing any armed plan; hit counters start at
+/// zero.  Returns a guard that disarms on drop.  Tests arming plans
+/// must serialize (the state is process-global).
+pub fn arm(plan: &FaultPlan) -> FaultGuard {
+    let armed: Vec<ArmedSpec> = plan
+        .specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| ArmedSpec {
+            spec: s.clone(),
+            hits: 0,
+            rng: Pcg32::new(spec_seed(plan.seed, s, i)),
+        })
+        .collect();
+    let n = armed.len();
+    let mut g = plan_lock();
+    *g = Some(armed);
+    ARMED.store(n, Ordering::Release);
+    drop(g);
+    FaultGuard { _not_send: std::marker::PhantomData }
+}
+
+/// Disarm everything (also done by [`FaultGuard`] on drop).
+pub fn disarm() {
+    let mut g = plan_lock();
+    ARMED.store(0, Ordering::Release);
+    *g = None;
+}
+
+/// RAII handle for an armed plan; dropping it disarms all failpoints.
+pub struct FaultGuard {
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        disarm();
+    }
+}
+
+/// True when any plan is armed (the cheap gate [`fire`] uses).
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Acquire) != 0
+}
+
+/// Fire an unkeyed failpoint.  Returns `true` when a `fail` action
+/// triggered (the caller converts it to its typed error); `panic`
+/// unwinds here and `delay` sleeps here.
+#[inline]
+pub fn fire(point: &str) -> bool {
+    if ARMED.load(Ordering::Acquire) == 0 {
+        return false;
+    }
+    fire_slow(point, "")
+}
+
+/// Fire a keyed failpoint (e.g. `session.shard` keyed by tenant id).
+/// Specs without a key match every key.
+#[inline]
+pub fn fire_keyed(point: &str, key: &str) -> bool {
+    if ARMED.load(Ordering::Acquire) == 0 {
+        return false;
+    }
+    fire_slow(point, key)
+}
+
+/// Total hits recorded at `point` across armed specs (test observability;
+/// 0 when disarmed).
+pub fn hits(point: &str) -> u64 {
+    let g = plan_lock();
+    g.as_ref().map_or(0, |specs| {
+        specs.iter().filter(|s| s.spec.point == point).map(|s| s.hits).sum()
+    })
+}
+
+#[cold]
+fn fire_slow(point: &str, key: &str) -> bool {
+    let mut delay_ms = 0u64;
+    let mut panic_hit = None;
+    let mut fail = false;
+    {
+        let mut g = plan_lock();
+        let Some(specs) = g.as_mut() else { return false };
+        for s in specs.iter_mut() {
+            if s.spec.point != point {
+                continue;
+            }
+            if let Some(k) = &s.spec.key {
+                if k != key {
+                    continue;
+                }
+            }
+            s.hits += 1;
+            let n = s.hits;
+            if n < s.spec.from || n > s.spec.to {
+                continue;
+            }
+            if let Some(p) = s.spec.prob {
+                if s.rng.next_f32() >= p {
+                    continue;
+                }
+            }
+            match s.spec.action {
+                FaultAction::Panic => panic_hit = Some(n),
+                FaultAction::DelayMs(ms) => delay_ms += ms,
+                FaultAction::Fail => fail = true,
+            }
+        }
+        // Lock released here: the panic/sleep below must never poison
+        // the plan state other threads are firing against.
+    }
+    if delay_ms > 0 {
+        std::thread::sleep(Duration::from_millis(delay_ms));
+    }
+    if let Some(n) = panic_hit {
+        panic!("faultpoint {point}[{key}] injected panic (hit {n})");
+    }
+    fail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Mutex as StdMutex;
+
+    /// Unit tests share the process-global plan state with each other
+    /// (and with any integration test in the same binary): serialize.
+    static SERIAL: StdMutex<()> = StdMutex::new(());
+
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disarmed_fire_is_a_noop() {
+        let _s = serial();
+        disarm();
+        assert!(!armed());
+        assert!(!fire("anything"));
+        assert!(!fire_keyed(points::SESSION_SHARD, "tenant"));
+        assert_eq!(hits("anything"), 0);
+    }
+
+    #[test]
+    fn fail_triggers_only_inside_hit_window() {
+        let _s = serial();
+        let plan = FaultPlan::new().with(points::STORE_DECODE, None, FaultAction::Fail, 2, 3);
+        let _g = arm(&plan);
+        assert!(!fire(points::STORE_DECODE), "hit 1 outside window");
+        assert!(fire(points::STORE_DECODE), "hit 2");
+        assert!(fire(points::STORE_DECODE), "hit 3");
+        assert!(!fire(points::STORE_DECODE), "hit 4 past window");
+        assert_eq!(hits(points::STORE_DECODE), 4, "every call counts a hit");
+    }
+
+    #[test]
+    fn keyed_specs_only_match_their_key_and_count_separately() {
+        let _s = serial();
+        let plan =
+            FaultPlan::new().with(points::SESSION_SHARD, Some("bad"), FaultAction::Fail, 1, 1);
+        let _g = arm(&plan);
+        assert!(!fire_keyed(points::SESSION_SHARD, "good"), "other key never matches");
+        assert!(!fire_keyed(points::SESSION_SHARD, "good"));
+        assert!(fire_keyed(points::SESSION_SHARD, "bad"), "matching key is still on hit 1");
+        assert!(!fire_keyed(points::SESSION_SHARD, "bad"), "window consumed");
+    }
+
+    #[test]
+    fn panic_action_unwinds_with_point_name_and_leaves_state_usable() {
+        let _s = serial();
+        let plan = FaultPlan::new().with("x.y", None, FaultAction::Panic, 1, 1);
+        let _g = arm(&plan);
+        let err = catch_unwind(AssertUnwindSafe(|| fire("x.y"))).expect_err("must panic");
+        let msg = err.downcast_ref::<String>().expect("formatted message");
+        assert!(msg.contains("x.y") && msg.contains("hit 1"), "{msg}");
+        // The plan lock was not poisoned by the injected panic.
+        assert!(!fire("x.y"), "hit 2 outside window");
+        assert_eq!(hits("x.y"), 2);
+    }
+
+    #[test]
+    fn guard_drop_disarms() {
+        let _s = serial();
+        {
+            let plan = FaultPlan::new().with("p", None, FaultAction::Fail, 1, u64::MAX);
+            let _g = arm(&plan);
+            assert!(armed());
+            assert!(fire("p"));
+        }
+        assert!(!armed());
+        assert!(!fire("p"));
+    }
+
+    #[test]
+    fn probabilistic_specs_replay_bitwise_with_the_same_seed() {
+        let _s = serial();
+        let run = |seed: u64| -> Vec<bool> {
+            let plan = FaultPlan {
+                seed,
+                specs: vec![FaultSpec {
+                    point: "p".into(),
+                    key: None,
+                    action: FaultAction::Fail,
+                    from: 1,
+                    to: u64::MAX,
+                    prob: Some(0.5),
+                }],
+            };
+            let _g = arm(&plan);
+            (0..64).map(|_| fire("p")).collect()
+        };
+        let a = run(7);
+        let b = run(7);
+        let c = run(8);
+        assert_eq!(a, b, "same seed must replay the identical fault pattern");
+        assert_ne!(a, c, "different seed must differ somewhere in 64 draws");
+        assert!(a.iter().any(|&v| v) && a.iter().any(|&v| !v), "p=0.5 mixes outcomes");
+    }
+
+    #[test]
+    fn delay_action_sleeps_then_continues() {
+        let _s = serial();
+        let plan = FaultPlan::new().with("d", None, FaultAction::DelayMs(15), 1, 1);
+        let _g = arm(&plan);
+        let t0 = std::time::Instant::now();
+        assert!(!fire("d"), "delay is not a failure");
+        assert!(t0.elapsed() >= Duration::from_millis(10), "injected latency");
+        let t1 = std::time::Instant::now();
+        assert!(!fire("d"));
+        assert!(t1.elapsed() < Duration::from_millis(10), "hit 2 outside window");
+    }
+
+    #[test]
+    fn parse_round_trips_the_env_grammar() {
+        let _s = serial();
+        let plan = FaultPlan::parse(
+            "seed=7; session.shard[chaos-a]=panic@1..3; store.decode=fail@2; \
+             pool.task=delay:2?0.25@4..; session.shard=fail",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.specs.len(), 4);
+        let s0 = &plan.specs[0];
+        assert_eq!(s0.point, "session.shard");
+        assert_eq!(s0.key.as_deref(), Some("chaos-a"));
+        assert_eq!(s0.action, FaultAction::Panic);
+        assert_eq!((s0.from, s0.to), (1, 3));
+        let s1 = &plan.specs[1];
+        assert_eq!((s1.point.as_str(), s1.action), ("store.decode", FaultAction::Fail));
+        assert_eq!((s1.from, s1.to), (2, 2));
+        let s2 = &plan.specs[2];
+        assert_eq!(s2.action, FaultAction::DelayMs(2));
+        assert_eq!(s2.prob, Some(0.25));
+        assert_eq!((s2.from, s2.to), (4, u64::MAX));
+        let s3 = &plan.specs[3];
+        assert_eq!(s3.key, None);
+        assert_eq!((s3.from, s3.to), (1, u64::MAX), "no range = every hit");
+
+        for bad in [
+            "nonsense",
+            "p=explode",
+            "p=panic@0",
+            "p=panic@3..2",
+            "p=fail?1.5",
+            "p[open=fail",
+            "seed=notanumber",
+            "=panic",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+}

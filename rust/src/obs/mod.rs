@@ -15,18 +15,26 @@
 //!   [`total_allocations`] total, exported as the
 //!   `alloc_allocations_total` gauge by
 //!   [`ModelRegistry::metrics_text`](crate::store::ModelRegistry::metrics_text).
+//! - [`faultpoint`]: deterministic fault injection — named failpoints
+//!   in the pool / session / store reader, armed at runtime by a
+//!   [`FaultPlan`] (panic-on-Nth-hit, delay, forced store error), a
+//!   single relaxed-load no-op when disarmed.  The chaos suite
+//!   (`rust/tests/chaos_serve.rs`) drives the registry's quarantine and
+//!   overload behavior through it.
 //!
 //! Hot-path guarantee: every record is a handful of relaxed atomics
 //! into pre-sized storage — `tests/alloc_steady_state.rs` asserts the
 //! serve path performs **exactly zero** allocations per call with
-//! metrics enabled.
+//! metrics enabled (and with every failpoint compiled in, disarmed).
 
 pub mod alloc;
+pub mod faultpoint;
 pub mod metrics;
 pub mod registry;
 pub mod span;
 
 pub use alloc::{total_allocations, CountingAllocator};
+pub use faultpoint::{FaultAction, FaultGuard, FaultPlan, FaultSpec};
 pub use metrics::{Counter, Gauge, Histogram, Sampler, HIST_BUCKETS};
 pub use registry::{labels, Labels, MetricsRegistry};
 pub use span::Stage;

@@ -26,8 +26,25 @@
 //! the batch by value and stashes its buffers for the next
 //! [`Batcher::next_batch`] cut, so a steady-state
 //! cut → infer → complete loop reallocates nothing per flush.
+//!
+//! Overload never grows memory: a batcher with a capacity
+//! ([`Batcher::set_max_queue`]; every registry tenant gets one via
+//! [`TenantConfig::max_queue`](crate::store::TenantConfig)) refuses
+//! pushes past it with a typed [`PushError::Overloaded`] — counted as
+//! `serve_overload_total` — instead of queueing without bound, and a
+//! wrong-length row is a typed [`PushError::BadLength`] rather than an
+//! assert even on this direct API.  Requests may also carry an
+//! **absolute deadline** ([`Batcher::push_with_deadline`]): a request
+//! still queued past its deadline is *shed at cut time, before any
+//! compute* (`serve_shed_total`, [`ServeStats::shed`]) — a late answer
+//! is wasted work, so it is never produced.  Both admission checks are
+//! comparisons on existing state: the zero-allocation steady state
+//! holds with them active (`rust/tests/alloc_steady_state.rs`).  See
+//! the README's "Robustness & overload behavior" for the full rejection
+//! semantics table.
 
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -40,7 +57,37 @@ pub struct Request {
     pub id: u64,
     pub x: Vec<f32>,
     pub enqueued: Instant,
+    /// Absolute deadline: still queued past this instant ⇒ shed at cut
+    /// time instead of served late (`None` = wait forever).
+    pub deadline: Option<Instant>,
 }
+
+/// Typed push rejection — the direct [`Batcher`] API's contract (the
+/// registry maps these onto
+/// [`RegistryError`](crate::store::RegistryError) variants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// The queue is at capacity: backpressure, not growth.  `depth` is
+    /// the queue length the request saw (== `capacity`).
+    Overloaded { depth: usize, capacity: usize },
+    /// The request's row length does not match the model input length.
+    BadLength { id: u64, got: usize, expected: usize },
+}
+
+impl fmt::Display for PushError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PushError::Overloaded { depth, capacity } => {
+                write!(f, "queue full ({depth}/{capacity}): retry later")
+            }
+            PushError::BadLength { id, got, expected } => {
+                write!(f, "request {id}: row length {got}, expected {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PushError {}
 
 /// A cut micro-batch: `real` requests padded up to `batch` rows.
 #[derive(Debug, Clone)]
@@ -63,6 +110,14 @@ pub struct ServeStats {
     pub batches: u64,
     /// Padding rows executed (wasted compute rows).
     pub padded: u64,
+    /// Requests refused at admission because the queue was at capacity.
+    pub overloaded: u64,
+    /// Requests dropped past their deadline (or at eviction) before any
+    /// compute was spent on them.
+    pub shed: u64,
+    /// Requests whose micro-batch died to a worker panic (the registry's
+    /// quarantine path fails the batch instead of crashing the server).
+    pub failed: u64,
     /// Wall seconds from first push to last completion.
     pub wall_s: f64,
     /// Per-request queue+execute latency summary (None until something
@@ -101,7 +156,13 @@ impl ServeStats {
 ///
 /// - `serve_requests_total` — requests pushed (accepted into the queue)
 /// - `serve_completed_total` — real rows completed
-/// - `serve_rejected_total` — malformed pushes refused by the registry
+/// - `serve_rejected_total` — malformed pushes refused (wrong length)
+/// - `serve_overload_total` — pushes refused at a full queue (the
+///   future HTTP 429)
+/// - `serve_shed_total` — expired requests dropped before compute, plus
+///   queued requests shed by eviction
+/// - `serve_failed_total` — requests whose micro-batch died to a
+///   quarantined worker panic
 /// - `serve_batches_total` / `serve_padded_rows_total`
 /// - `serve_queue_depth` — gauge, current queue length
 /// - `serve_stage_seconds{stage="enqueue"|"cut"|"complete"}` — histograms
@@ -110,6 +171,9 @@ pub struct BatcherMetrics {
     pub requests: Arc<Counter>,
     pub completed: Arc<Counter>,
     pub rejected: Arc<Counter>,
+    pub overloaded: Arc<Counter>,
+    pub shed: Arc<Counter>,
+    pub failed: Arc<Counter>,
     pub batches: Arc<Counter>,
     pub padded: Arc<Counter>,
     pub queue_depth: Arc<Gauge>,
@@ -147,6 +211,9 @@ impl BatcherMetrics {
             ("serve_requests_total", &self.requests),
             ("serve_completed_total", &self.completed),
             ("serve_rejected_total", &self.rejected),
+            ("serve_overload_total", &self.overloaded),
+            ("serve_shed_total", &self.shed),
+            ("serve_failed_total", &self.failed),
             ("serve_batches_total", &self.batches),
             ("serve_padded_rows_total", &self.padded),
         ] {
@@ -164,6 +231,10 @@ pub struct Batcher {
     /// Flush deadline: cut a padded partial batch once the oldest queued
     /// request has waited this long (None = partials wait for `flush`).
     max_wait: Option<Duration>,
+    /// Admission bound: pushes beyond this queue depth return
+    /// [`PushError::Overloaded`] (None = unbounded, the historical
+    /// direct-API behavior).
+    max_queue: Option<usize>,
     queue: VecDeque<Request>,
     started: Option<Instant>,
     last_done: Option<Instant>,
@@ -182,6 +253,7 @@ impl Batcher {
             batch,
             example_len,
             max_wait: None,
+            max_queue: None,
             queue: VecDeque::new(),
             started: None,
             last_done: None,
@@ -211,6 +283,18 @@ impl Batcher {
         self.max_wait
     }
 
+    /// Bound (or unbound, with `None`) the queue: pushes at a full
+    /// queue return [`PushError::Overloaded`] instead of growing it.
+    pub fn set_max_queue(&mut self, max_queue: Option<usize>) {
+        assert!(max_queue != Some(0), "a zero-capacity queue can accept nothing");
+        self.max_queue = max_queue;
+    }
+
+    /// The admission bound, if any.
+    pub fn max_queue(&self) -> Option<usize> {
+        self.max_queue
+    }
+
     /// Shared handles to this batcher's metric bundle (clone is cheap —
     /// all members are `Arc`s into the same atomics).
     pub fn metrics(&self) -> &BatcherMetrics {
@@ -218,26 +302,61 @@ impl Batcher {
     }
 
     /// Enqueue one request (its latency clock starts now).
-    pub fn push(&mut self, id: u64, x: Vec<f32>) {
-        self.push_at(id, x, Instant::now());
+    pub fn push(&mut self, id: u64, x: Vec<f32>) -> Result<(), PushError> {
+        self.push_request(id, x, Instant::now(), None)
     }
 
     /// Enqueue with an explicit arrival timestamp — pass the instant the
     /// client *sent* the request so transport/channel wait counts toward
     /// latency; `push` alone would hide queueing upstream of the batcher.
+    pub fn push_at(&mut self, id: u64, x: Vec<f32>, enqueued: Instant) -> Result<(), PushError> {
+        self.push_request(id, x, enqueued, None)
+    }
+
+    /// Enqueue with an absolute deadline: if the request is still queued
+    /// past `deadline`, the next cut sheds it *before* compute (counted
+    /// in `serve_shed_total`) instead of serving it late.
+    pub fn push_with_deadline(
+        &mut self,
+        id: u64,
+        x: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<(), PushError> {
+        self.push_request(id, x, Instant::now(), deadline)
+    }
+
+    /// The full push: explicit arrival timestamp and optional deadline.
     ///
-    /// The length assert is the *direct* (single-tenant) API's contract:
-    /// callers own their inputs.  Multi-tenant ingress goes through
+    /// Both rejection arms are typed — even on this direct
+    /// (single-tenant) API a wrong-length row or a full queue is a
+    /// recoverable [`PushError`], never a panic.  Multi-tenant ingress
+    /// goes through
     /// [`ModelRegistry::push`](crate::store::ModelRegistry::push), which
-    /// validates first and returns a typed
-    /// [`RegistryError::BadInput`](crate::store::RegistryError) so one
-    /// malformed request cannot take the shared server down.
-    pub fn push_at(&mut self, id: u64, x: Vec<f32>, enqueued: Instant) {
-        assert_eq!(x.len(), self.example_len, "request {id}: bad example length");
+    /// pre-validates the length lock-free and maps
+    /// [`PushError::Overloaded`] to
+    /// [`RegistryError::Overloaded`](crate::store::RegistryError).
+    pub fn push_request(
+        &mut self,
+        id: u64,
+        x: Vec<f32>,
+        enqueued: Instant,
+        deadline: Option<Instant>,
+    ) -> Result<(), PushError> {
+        if x.len() != self.example_len {
+            self.metrics.rejected.inc();
+            return Err(PushError::BadLength { id, got: x.len(), expected: self.example_len });
+        }
+        if let Some(cap) = self.max_queue {
+            if self.queue.len() >= cap {
+                self.metrics.overloaded.inc();
+                return Err(PushError::Overloaded { depth: self.queue.len(), capacity: cap });
+            }
+        }
         self.started.get_or_insert(enqueued);
-        self.queue.push_back(Request { id, x, enqueued });
+        self.queue.push_back(Request { id, x, enqueued, deadline });
         self.metrics.requests.inc();
         self.metrics.queue_depth.set(self.queue.len() as i64);
+        Ok(())
     }
 
     /// Requests waiting in the queue.
@@ -251,40 +370,86 @@ impl Batcher {
     /// padded partial batch from whatever is queued.  `None` if nothing
     /// can be cut.
     ///
+    /// Requests already past their absolute deadline
+    /// ([`push_with_deadline`](Batcher::push_with_deadline)) are **shed
+    /// here, before any compute**: dropped from the queue, counted in
+    /// `serve_shed_total`, and never placed in a batch — a late answer
+    /// is wasted kernel time.  Shedding deeper-queued expired requests
+    /// can make a "full" cut come out partial; padding restores the
+    /// fixed batch shape as usual.
+    ///
     /// Cutting records the [`Stage::Enqueue`] wait of every drained
     /// request and the [`Stage::Cut`] assembly time.
     ///
     /// [`with_deadline`]: Batcher::with_deadline
     pub fn next_batch(&mut self, flush: bool) -> Option<MicroBatch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let now = Instant::now();
+        // Shed expired head requests first so the due/full checks below
+        // see only live work (an expired head must not trigger an
+        // "overdue" cut of fresh requests behind it).
+        let mut shed_any = false;
+        while let Some(r) = self.queue.front() {
+            match r.deadline {
+                Some(d) if d <= now => {
+                    self.queue.pop_front();
+                    self.metrics.shed.inc();
+                    shed_any = true;
+                }
+                _ => break,
+            }
+        }
         let due = match (self.max_wait, self.queue.front()) {
-            (Some(w), Some(r)) => r.enqueued.elapsed() >= w,
+            (Some(w), Some(r)) => now.duration_since(r.enqueued) >= w,
             _ => false,
         };
         if self.queue.is_empty() || (self.queue.len() < self.batch && !flush && !due) {
+            if shed_any {
+                self.metrics.queue_depth.set(self.queue.len() as i64);
+            }
             return None;
         }
         let t0 = Instant::now();
-        let real = self.queue.len().min(self.batch);
-        // Reuse the buffers recycled by `complete`.  Real rows are
-        // overwritten below; only the padding rows need the zeros
-        // contract re-established on a recycled buffer.
+        // Reuse the buffers recycled by `complete`/`fail`.  Live rows
+        // are written contiguously below; padding rows get the zeros
+        // contract re-established afterwards.
         let mut x = std::mem::take(&mut self.spare_x);
         x.resize(self.batch * self.example_len, 0.0);
-        for v in &mut x[real * self.example_len..] {
-            *v = 0.0;
-        }
         let mut ids = std::mem::take(&mut self.spare_ids);
         ids.clear();
         let mut enqueued = std::mem::take(&mut self.spare_enqueued);
         enqueued.clear();
-        for i in 0..real {
-            let r = self.queue.pop_front().unwrap();
+        while ids.len() < self.batch {
+            let Some(r) = self.queue.pop_front() else { break };
+            // Expired requests deeper in the queue are shed as they
+            // surface — checked per pop, pre-compute.
+            if let Some(d) = r.deadline {
+                if d <= t0 {
+                    self.metrics.shed.inc();
+                    continue;
+                }
+            }
+            let i = ids.len();
             x[i * self.example_len..(i + 1) * self.example_len].copy_from_slice(&r.x);
             self.metrics.enqueue.record_duration(t0.duration_since(r.enqueued));
             ids.push(r.id);
             enqueued.push(r.enqueued);
         }
+        let real = ids.len();
         self.metrics.queue_depth.set(self.queue.len() as i64);
+        if real == 0 {
+            // Everything cut-eligible had expired: recycle the buffers,
+            // nothing to serve.
+            self.spare_x = x;
+            self.spare_ids = ids;
+            self.spare_enqueued = enqueued;
+            return None;
+        }
+        for v in &mut x[real * self.example_len..] {
+            *v = 0.0;
+        }
         self.metrics.cut.record_duration(t0.elapsed());
         Some(MicroBatch {
             x,
@@ -314,6 +479,29 @@ impl Batcher {
         self.spare_enqueued = mb.enqueued;
     }
 
+    /// Record a micro-batch as *failed* (its execution panicked and was
+    /// quarantined by the registry): its real rows count into
+    /// `serve_failed_total`, no latency is recorded, and the buffers are
+    /// recycled exactly like [`complete`](Batcher::complete) so the
+    /// fault path stays allocation-free too.
+    pub fn fail(&mut self, mb: MicroBatch) {
+        self.metrics.failed.add(mb.real as u64);
+        self.spare_x = mb.x;
+        self.spare_ids = mb.ids;
+        self.spare_enqueued = mb.enqueued;
+    }
+
+    /// Shed every queued request (tenant eviction): counted in
+    /// `serve_shed_total`, never silently dropped.  Returns how many
+    /// were shed.
+    pub fn shed_all(&mut self) -> usize {
+        let n = self.queue.len();
+        self.queue.clear();
+        self.metrics.shed.add(n as u64);
+        self.metrics.queue_depth.set(0);
+        n
+    }
+
     /// Point-in-time [`ServeStats`] view of the metric bundle.  O(1) in
     /// traffic served: the latency summary comes from the bounded
     /// histogram, not from replaying samples.
@@ -326,6 +514,9 @@ impl Batcher {
             requests: self.metrics.completed.get(),
             batches: self.metrics.batches.get(),
             padded: self.metrics.padded.get(),
+            overloaded: self.metrics.overloaded.get(),
+            shed: self.metrics.shed.get(),
+            failed: self.metrics.failed.get(),
             wall_s,
             latency: self.metrics.complete.to_stats(),
         }
@@ -343,10 +534,10 @@ mod tests {
     #[test]
     fn cuts_full_batches_only_until_flush() {
         let mut b = Batcher::new(3, 4);
-        b.push(0, req(0));
-        b.push(1, req(1));
+        b.push(0, req(0)).unwrap();
+        b.push(1, req(1)).unwrap();
         assert!(b.next_batch(false).is_none(), "partial cut without flush");
-        b.push(2, req(2));
+        b.push(2, req(2)).unwrap();
         let full = b.next_batch(false).expect("full batch");
         assert_eq!(full.real, 3);
         assert_eq!(full.ids, vec![0, 1, 2]);
@@ -357,7 +548,7 @@ mod tests {
     #[test]
     fn flush_pads_with_zeros() {
         let mut b = Batcher::new(4, 4);
-        b.push(7, req(7));
+        b.push(7, req(7)).unwrap();
         let mb = b.next_batch(true).expect("flush cut");
         assert_eq!(mb.real, 1);
         assert_eq!(mb.batch, 4);
@@ -369,7 +560,7 @@ mod tests {
     fn accounting_counts_requests_batches_padding() {
         let mut b = Batcher::new(2, 4);
         for i in 0..5 {
-            b.push(i, req(i));
+            b.push(i, req(i)).unwrap();
         }
         while let Some(mb) = b.next_batch(true) {
             b.complete(mb);
@@ -388,7 +579,7 @@ mod tests {
     fn metric_bundle_tracks_queue_and_stages() {
         let mut b = Batcher::new(2, 4);
         for i in 0..5 {
-            b.push(i, req(i));
+            b.push(i, req(i)).unwrap();
         }
         let m = b.metrics().clone();
         assert_eq!(m.requests.get(), 5);
@@ -410,7 +601,7 @@ mod tests {
     fn latency_cell_prints_na_until_completion() {
         let mut b = Batcher::new(1, 4);
         assert_eq!(b.stats().latency_cell(), "p95 n/a p99 n/a");
-        b.push(0, req(0));
+        b.push(0, req(0)).unwrap();
         assert_eq!(b.stats().latency_cell(), "p95 n/a p99 n/a", "queued-only is still n/a");
         let mb = b.next_batch(true).unwrap();
         b.complete(mb);
@@ -422,7 +613,7 @@ mod tests {
     #[test]
     fn push_at_backdates_latency_to_send_time() {
         let mut b = Batcher::new(1, 4);
-        b.push_at(0, req(0), Instant::now() - std::time::Duration::from_millis(50));
+        b.push_at(0, req(0), Instant::now() - std::time::Duration::from_millis(50)).unwrap();
         let mb = b.next_batch(true).unwrap();
         b.complete(mb);
         let lat = b.stats().latency.unwrap();
@@ -436,13 +627,13 @@ mod tests {
         // Fresh request: not due, not full, no flush -> wait.
         let mut fresh = Batcher::with_deadline(4, 4, std::time::Duration::from_millis(20));
         assert_eq!(fresh.max_wait(), Some(std::time::Duration::from_millis(20)));
-        fresh.push(0, req(0));
+        fresh.push(0, req(0)).unwrap();
         assert!(fresh.next_batch(false).is_none(), "fresh partial must wait");
         // Oldest (front) request past the deadline: due even without
         // flush, and the cut takes everything queued behind it too.
         let mut b = Batcher::with_deadline(4, 4, std::time::Duration::from_millis(20));
-        b.push_at(0, req(0), Instant::now() - std::time::Duration::from_millis(50));
-        b.push(1, req(1));
+        b.push_at(0, req(0), Instant::now() - std::time::Duration::from_millis(50)).unwrap();
+        b.push(1, req(1)).unwrap();
         let mb = b.next_batch(false).expect("overdue partial cut");
         assert_eq!(mb.real, 2);
         assert_eq!(mb.batch, 4);
@@ -453,7 +644,7 @@ mod tests {
     fn no_deadline_keeps_partial_semantics() {
         let mut b = Batcher::new(4, 4);
         assert_eq!(b.max_wait(), None);
-        b.push_at(0, req(0), Instant::now() - std::time::Duration::from_secs(5));
+        b.push_at(0, req(0), Instant::now() - std::time::Duration::from_secs(5)).unwrap();
         assert!(b.next_batch(false).is_none(), "no deadline -> partial waits for flush");
         assert!(b.next_batch(true).is_some());
     }
@@ -462,14 +653,14 @@ mod tests {
     fn completed_batch_buffers_are_recycled() {
         let mut b = Batcher::new(3, 4);
         for i in 0..3 {
-            b.push(i, req(i));
+            b.push(i, req(i)).unwrap();
         }
         let mb = b.next_batch(false).expect("full batch");
         let (x_ptr, ids_ptr) = (mb.x.as_ptr(), mb.ids.as_ptr());
         b.complete(mb);
         // The next cut must reuse the recycled allocations verbatim...
         for i in 3..6 {
-            b.push(i, req(i));
+            b.push(i, req(i)).unwrap();
         }
         let mb = b.next_batch(false).expect("second full batch");
         assert_eq!(mb.x.as_ptr(), x_ptr, "padded buffer reallocated");
@@ -478,7 +669,7 @@ mod tests {
         assert_eq!(&mb.x[..4], &[3.0; 4]);
         b.complete(mb);
         // ...and a padded cut after a full one still zero-fills padding.
-        b.push(6, req(6));
+        b.push(6, req(6)).unwrap();
         let mb = b.next_batch(true).expect("padded cut");
         assert_eq!(mb.x.as_ptr(), x_ptr);
         assert_eq!(mb.real, 1);
@@ -489,12 +680,133 @@ mod tests {
     fn preserves_fifo_order_across_batches() {
         let mut b = Batcher::new(2, 4);
         for i in 0..6 {
-            b.push(i, req(i));
+            b.push(i, req(i)).unwrap();
         }
         let mut seen = Vec::new();
         while let Some(mb) = b.next_batch(false) {
             seen.extend(mb.ids.clone());
         }
         assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn bad_length_is_typed_not_a_panic() {
+        let mut b = Batcher::new(2, 4);
+        let err = b.push(9, vec![1.0; 3]).unwrap_err();
+        assert_eq!(err, PushError::BadLength { id: 9, got: 3, expected: 4 });
+        assert!(err.to_string().contains("row length 3"), "{err}");
+        assert_eq!(b.metrics().rejected.get(), 1);
+        assert_eq!(b.pending(), 0, "rejected request must not enqueue");
+        // The Ok arm of the same contract.
+        b.push(9, req(9)).unwrap();
+        assert_eq!(b.pending(), 1);
+        assert_eq!(b.metrics().requests.get(), 1);
+    }
+
+    #[test]
+    fn overloaded_at_capacity_is_typed_and_counted() {
+        let mut b = Batcher::new(2, 4);
+        assert_eq!(b.max_queue(), None);
+        b.set_max_queue(Some(2));
+        assert_eq!(b.max_queue(), Some(2));
+        b.push(0, req(0)).unwrap();
+        b.push(1, req(1)).unwrap();
+        let err = b.push(2, req(2)).unwrap_err();
+        assert_eq!(err, PushError::Overloaded { depth: 2, capacity: 2 });
+        assert!(err.to_string().contains("queue full (2/2)"), "{err}");
+        assert_eq!(b.metrics().overloaded.get(), 1);
+        assert_eq!(b.pending(), 2, "queue never exceeds capacity");
+        // A wrong-length row at a full queue reports BadLength, not
+        // Overloaded: the request could never be served regardless.
+        assert!(matches!(
+            b.push(3, vec![0.0; 7]).unwrap_err(),
+            PushError::BadLength { got: 7, .. }
+        ));
+        // Draining frees capacity again.
+        let mb = b.next_batch(false).unwrap();
+        b.complete(mb);
+        b.push(2, req(2)).unwrap();
+        assert_eq!(b.metrics().overloaded.get(), 1);
+    }
+
+    #[test]
+    fn expired_head_is_shed_without_cutting_fresh_work() {
+        let past = Instant::now() - Duration::from_millis(5);
+        let mut b = Batcher::with_deadline(4, 4, Duration::from_secs(60));
+        b.push_with_deadline(0, req(0), Some(past)).unwrap();
+        b.push(1, req(1)).unwrap();
+        // The expired head must not make the fresh request behind it
+        // look "overdue": it is shed and the partial keeps waiting.
+        assert!(b.next_batch(false).is_none());
+        assert_eq!(b.metrics().shed.get(), 1);
+        assert_eq!(b.pending(), 1);
+        assert_eq!(b.metrics().queue_depth.get(), 1);
+        let mb = b.next_batch(true).expect("live request still served");
+        assert_eq!(mb.ids, vec![1]);
+    }
+
+    #[test]
+    fn expired_requests_deeper_in_queue_are_shed_mid_cut() {
+        let past = Instant::now() - Duration::from_millis(5);
+        let future = Instant::now() + Duration::from_secs(60);
+        let mut b = Batcher::new(3, 4);
+        b.push(0, req(0)).unwrap();
+        b.push_with_deadline(1, req(1), Some(past)).unwrap();
+        b.push_with_deadline(2, req(2), Some(future)).unwrap();
+        b.push(3, req(3)).unwrap();
+        let mb = b.next_batch(false).expect("full-depth queue cuts");
+        assert_eq!(mb.ids, vec![0, 2, 3], "expired row skipped, order kept");
+        assert_eq!(mb.real, 3);
+        assert_eq!(b.metrics().shed.get(), 1);
+        assert_eq!(&mb.x[..4], &[0.0; 4]);
+        assert_eq!(&mb.x[4..8], &[2.0; 4], "live rows stay contiguous");
+    }
+
+    #[test]
+    fn all_expired_sheds_everything_and_serves_nothing() {
+        let past = Instant::now() - Duration::from_millis(5);
+        let mut b = Batcher::new(2, 4);
+        for i in 0..3 {
+            b.push_with_deadline(i, req(i), Some(past)).unwrap();
+        }
+        assert!(b.next_batch(true).is_none(), "nothing live to serve");
+        assert_eq!(b.metrics().shed.get(), 3);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.metrics().queue_depth.get(), 0);
+        assert_eq!(b.stats().shed, 3);
+        assert_eq!(b.metrics().batches.get(), 0, "no compute was spent");
+    }
+
+    #[test]
+    fn shed_all_counts_evicted_queue() {
+        let mut b = Batcher::new(4, 4);
+        for i in 0..3 {
+            b.push(i, req(i)).unwrap();
+        }
+        assert_eq!(b.shed_all(), 3);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.metrics().shed.get(), 3);
+        assert_eq!(b.metrics().queue_depth.get(), 0);
+        assert_eq!(b.shed_all(), 0, "idempotent on an empty queue");
+    }
+
+    #[test]
+    fn failed_batch_counts_and_recycles_buffers() {
+        let mut b = Batcher::new(2, 4);
+        for i in 0..2 {
+            b.push(i, req(i)).unwrap();
+        }
+        let mb = b.next_batch(false).unwrap();
+        let x_ptr = mb.x.as_ptr();
+        b.fail(mb);
+        assert_eq!(b.metrics().failed.get(), 2);
+        assert_eq!(b.metrics().completed.get(), 0, "failed rows never complete");
+        assert!(b.stats().latency.is_none(), "no latency recorded for failures");
+        for i in 2..4 {
+            b.push(i, req(i)).unwrap();
+        }
+        let mb = b.next_batch(false).unwrap();
+        assert_eq!(mb.x.as_ptr(), x_ptr, "fail path must recycle like complete");
+        assert_eq!(mb.ids, vec![2, 3]);
     }
 }

@@ -67,6 +67,21 @@
 //! `rust/tests/quant_parity.rs` pins every quantized tier against the
 //! same matrix `kernel_parity.rs` pins for f32).
 //!
+//! The serve path is **overload-safe and fault-hardened** (see the
+//! README's "Robustness & overload behavior" for the rejection table):
+//! [`Batcher`] queues are bounded ([`Batcher::set_max_queue`]) and a
+//! push at capacity — or with a wrong-length row — is a typed
+//! [`PushError`], never unbounded growth or an assert; requests may
+//! carry an absolute deadline ([`Batcher::push_with_deadline`]) and are
+//! shed *before* compute once expired; a shard panic is quarantined
+//! per tenant by
+//! [`store::ModelRegistry::drain`](crate::store::ModelRegistry::drain)
+//! behind a half-open breaker while other tenants keep serving
+//! bitwise-identically.  The
+//! [`obs::faultpoint`](crate::obs::faultpoint) harness injects panics /
+//! delays / store errors deterministically into the pool, the session's
+//! shard execution, and the store reader (`rust/tests/chaos_serve.rs`).
+//!
 //! Compiled models need not be rebuilt from seeds on every cold start:
 //! [`crate::store`] persists them as `.lfsrpack` artifacts whose on-disk
 //! index state per PRS layer is just the two LFSR seeds (the paper's
@@ -81,7 +96,7 @@ pub mod compiled;
 pub mod pool;
 pub mod session;
 
-pub use batcher::{Batcher, BatcherMetrics, MicroBatch, Request, ServeStats};
+pub use batcher::{Batcher, BatcherMetrics, MicroBatch, PushError, Request, ServeStats};
 pub use compiled::{
     parallel_keep_sequence, shard_ranges, synthetic_lenet300, synthetic_lenet300_seeded,
     synthetic_vgg16, synthetic_vgg16_scaled, CompiledLayer, CompiledModel, LayerKindCounts,

@@ -241,14 +241,23 @@ fn worker_loop(q: Arc<Queue>) {
                 // are popped by nobody and their callers hang forever.
                 // (run_all's receiver sees the dropped sender and
                 // reports the failure on the caller side.)
-                let _ = catch_unwind(AssertUnwindSafe(job));
+                let _ = catch_unwind(AssertUnwindSafe(|| {
+                    crate::obs::faultpoint::fire(crate::obs::faultpoint::points::POOL_TASK);
+                    job()
+                }));
             }
             Task::Scoped { batch, index } => {
                 // SAFETY: the originating `run_scoped` call blocks until
                 // `remaining` reaches zero, so `batch` (on its stack) is
                 // alive for the whole execution below.
                 let b = unsafe { &*batch };
-                let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (b.func)(b.ctx, index) }));
+                let ok = catch_unwind(AssertUnwindSafe(|| {
+                    // `pool.task` fires inside the catch: an armed panic
+                    // action exercises the worker-survives path, a delay
+                    // simulates a straggler shard.
+                    crate::obs::faultpoint::fire(crate::obs::faultpoint::points::POOL_TASK);
+                    unsafe { (b.func)(b.ctx, index) }
+                }));
                 if let Err(payload) = ok {
                     // Keep the first payload; later ones are dropped.
                     let mut slot = b.panic_payload.lock().unwrap();

@@ -47,6 +47,7 @@ use std::time::Instant;
 
 use super::compiled::{CompiledLayer, CompiledModel, LayerShape};
 use super::pool::WorkerPool;
+use crate::obs::faultpoint::{self, points};
 use crate::obs::{labels, Histogram, MetricsRegistry, Sampler, Stage};
 use crate::sparse::im2col::{im2col_panels, maxpool_into};
 use crate::sparse::packed::{transpose_panels, BATCH_LANES};
@@ -180,6 +181,11 @@ pub struct InferenceSession {
     /// [`InferenceSession::enable_metrics`] — an un-instrumented
     /// session pays zero clock reads.
     metrics: Option<Arc<SessionMetrics>>,
+    /// Key this session answers the `session.shard` failpoint under
+    /// ([`faultpoint::points::SESSION_SHARD`]) — the registry sets it to
+    /// the tenant id so chaos plans can target one tenant.  `None`
+    /// matches only key-less fault specs.
+    fault_key: Option<String>,
 }
 
 impl InferenceSession {
@@ -196,6 +202,7 @@ impl InferenceSession {
             pool: if workers > 1 { Some(Arc::new(WorkerPool::new(workers))) } else { None },
             arenas: Mutex::new(Vec::new()),
             metrics: None,
+            fault_key: None,
         }
     }
 
@@ -203,7 +210,22 @@ impl InferenceSession {
     /// multi-tenant registry gives N models one shared set of worker
     /// threads.
     pub fn with_shared_pool(model: CompiledModel, pool: Arc<WorkerPool>) -> InferenceSession {
-        InferenceSession { model, pool: Some(pool), arenas: Mutex::new(Vec::new()), metrics: None }
+        InferenceSession {
+            model,
+            pool: Some(pool),
+            arenas: Mutex::new(Vec::new()),
+            metrics: None,
+            fault_key: None,
+        }
+    }
+
+    /// Scope this session's `session.shard` failpoint hits to `key`
+    /// (the registry passes the tenant id), so a keyed [`FaultPlan`]
+    /// spec hits exactly one tenant on a shared pool.
+    ///
+    /// [`FaultPlan`]: crate::obs::FaultPlan
+    pub fn set_fault_key(&mut self, key: &str) {
+        self.fault_key = Some(key.to_string());
     }
 
     /// Turn on per-layer span timing, sampled every `sample_every`-th
@@ -333,9 +355,15 @@ impl InferenceSession {
         debug_assert_eq!(out.len(), batch * layer.cols);
         let slab = layer.rows * BATCH_LANES;
         let n_panels = (batch + BATCH_LANES - 1) / BATCH_LANES;
+        // `session.shard` fires once per shard execution, keyed by
+        // tenant; disarmed it is one relaxed load (the zero-allocation
+        // steady state includes it).  A `fail` action has no typed
+        // channel here — arm `panic` to test the quarantine path.
+        let fkey: &str = self.fault_key.as_deref().unwrap_or("");
         match &self.pool {
             None => {
                 for shard in &layer.shards {
+                    faultpoint::fire_keyed(points::SESSION_SHARD, fkey);
                     for p in 0..n_panels {
                         let lanes = (batch - p * BATCH_LANES).min(BATCH_LANES);
                         let panel = &panels[p * slab..][..slab];
@@ -355,6 +383,10 @@ impl InferenceSession {
                 let shared = SharedOut(out.as_mut_ptr());
                 let shards = &layer.shards;
                 pool.run_scoped(shards.len(), &|si: usize| {
+                    // Fires on the worker thread: a panic action rides
+                    // the pool's real catch → re-raise path, exactly
+                    // like a genuine shard panic would.
+                    faultpoint::fire_keyed(points::SESSION_SHARD, fkey);
                     let shard = &shards[si];
                     for p in 0..n_panels {
                         let lanes = (batch - p * BATCH_LANES).min(BATCH_LANES);

@@ -563,6 +563,14 @@ pub fn load_model(path: &Path, opts: &LoadOptions) -> Result<CompiledModel, Stor
 
 /// Decode `.lfsrpack` bytes into a served-ready model.
 pub fn decode_model(bytes: &[u8], opts: &LoadOptions) -> Result<CompiledModel, StoreError> {
+    // `store.decode` failpoint: a `fail` action forces the typed corrupt
+    // path without crafting corrupt bytes — chaos tests assert a bad
+    // load is an error, never a crash, and leaves serving untouched.
+    if crate::obs::faultpoint::fire(crate::obs::faultpoint::points::STORE_DECODE) {
+        return Err(StoreError::Corrupt {
+            detail: "faultpoint store.decode forced failure".into(),
+        });
+    }
     let min = FILE_HEADER_BYTES + FILE_CHECKSUM_BYTES;
     if (bytes.len() as u64) < min {
         return Err(StoreError::Truncated { expected: min, got: bytes.len() as u64 });

@@ -48,8 +48,15 @@
 //!   concurrently and route requests by model id through one shared
 //!   [`WorkerPool`](crate::serve::WorkerPool), with per-model
 //!   [`ServeStats`](crate::serve::ServeStats) — tenants of all four
-//!   precision tiers side by side, and wrong-length requests rejected as typed
-//!   [`RegistryError::BadInput`] instead of panicking the server.
+//!   precision tiers side by side.  The registry is the **robustness
+//!   boundary** (README: "Robustness & overload behavior"): wrong-length
+//!   requests are typed [`RegistryError::BadInput`], a full tenant queue
+//!   ([`TenantConfig::max_queue`]) is [`RegistryError::Overloaded`]
+//!   backpressure (the future 429), expired-deadline requests are shed
+//!   before compute, eviction sheds (and counts) queued requests, and a
+//!   shard panic quarantines only its tenant behind a half-open breaker
+//!   ([`TenantConfig::breaker_backoff`], `serve_tenant_healthy`) while
+//!   the other tenants keep serving bitwise-identically.
 //!
 //! The registry is also the serving stack's **observability root**
 //! ([`obs`](crate::obs)): tenant insert registers the per-model series —

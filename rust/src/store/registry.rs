@@ -30,21 +30,40 @@
 //! ride the same shard fan-out, and [`ModelInfo::kinds`] reports each
 //! tenant's FC/conv/pool layer census.
 //!
-//! A malformed request cannot take the server down: [`ModelRegistry::push`]
-//! checks the input length against the model's input dim and returns
-//! [`RegistryError::BadInput`] instead of reaching the `Batcher`'s
-//! assert (which remains the contract of the direct single-tenant API).
+//! Nothing a tenant does can take the server down (see the README's
+//! "Robustness & overload behavior" for the full rejection table):
+//!
+//! - **Bad input** — [`ModelRegistry::push`] checks the input length
+//!   against the model's input dim and returns
+//!   [`RegistryError::BadInput`] before touching the queue.
+//! - **Overload** — every tenant's queue is bounded
+//!   ([`TenantConfig::max_queue`]); a push at capacity returns
+//!   [`RegistryError::Overloaded`] (the future HTTP 429, counted in
+//!   `serve_overload_total`) instead of growing memory.
+//! - **Deadlines** — requests pushed via
+//!   [`ModelRegistry::push_with_deadline`] that expire while queued are
+//!   shed at cut time, before compute (`serve_shed_total`); eviction
+//!   sheds (and counts) a tenant's queued requests the same way.
+//! - **Worker panics** — a shard panic during a tenant's batch is
+//!   caught by [`ModelRegistry::drain`]: the micro-batch is failed
+//!   (`serve_failed_total`) and the tenant is quarantined behind a
+//!   half-open breaker (`serve_tenant_healthy` gauge,
+//!   [`TenantConfig::breaker_backoff`]) while every other tenant keeps
+//!   serving bitwise-identically on the shared pool
+//!   (`rust/tests/chaos_serve.rs` drives all of this through the
+//!   [`faultpoint`](crate::obs::faultpoint) harness).
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::obs::{labels, total_allocations, Gauge, MetricsRegistry};
 use crate::serve::{
-    Batcher, BatcherMetrics, CompiledModel, InferenceSession, LayerKindCounts, ServeStats,
-    WorkerPool,
+    Batcher, BatcherMetrics, CompiledModel, InferenceSession, LayerKindCounts, PushError,
+    ServeStats, WorkerPool,
 };
 use crate::sparse::Precision;
 
@@ -58,6 +77,10 @@ pub enum RegistryError {
     NoSuchModel(String),
     /// Request input length does not match the model's input dim.
     BadInput { model: String, got: usize, expected: usize },
+    /// The tenant's queue is at capacity ([`TenantConfig::max_queue`]):
+    /// backpressure, not growth — the HTTP front door will map this to
+    /// a 429.  `depth` is the queue length the request saw.
+    Overloaded { model: String, depth: usize, capacity: usize },
     /// Rejected [`TenantConfig`] (e.g. batch size 0).
     BadConfig { model: String, detail: String },
     Store(StoreError),
@@ -70,6 +93,9 @@ impl fmt::Display for RegistryError {
             RegistryError::NoSuchModel(id) => write!(f, "no model {id:?} in the registry"),
             RegistryError::BadInput { model, got, expected } => {
                 write!(f, "model {model:?}: request length {got}, expected {expected}")
+            }
+            RegistryError::Overloaded { model, depth, capacity } => {
+                write!(f, "model {model:?}: queue full ({depth}/{capacity}), retry later")
             }
             RegistryError::BadConfig { model, detail } => {
                 write!(f, "model {model:?}: {detail}")
@@ -108,6 +134,14 @@ pub struct TenantConfig {
     /// metrics are always on — only the two extra clock reads per layer
     /// are gated.
     pub span_sample_every: u64,
+    /// Admission bound: a push while this many requests are already
+    /// queued returns [`RegistryError::Overloaded`] (the future HTTP
+    /// 429) instead of growing the queue — backpressure, never OOM.
+    pub max_queue: usize,
+    /// How long a panic-quarantined tenant stays refused before its
+    /// breaker admits one half-open probe batch (a probe success
+    /// restores `Healthy`; a probe panic re-arms the backoff).
+    pub breaker_backoff: Duration,
 }
 
 impl Default for TenantConfig {
@@ -116,7 +150,81 @@ impl Default for TenantConfig {
             batch: 32,
             max_wait: Some(Duration::from_millis(5)),
             span_sample_every: 16,
+            max_queue: 1024,
+            breaker_backoff: Duration::from_millis(100),
         }
+    }
+}
+
+/// Tenant health, as seen by the quarantine breaker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BreakerState {
+    /// Serving normally.
+    Healthy,
+    /// Quarantined after a panic: no batches cut until `until`.
+    Open { until: Instant },
+    /// Backoff elapsed: exactly one probe batch is in flight.
+    HalfOpen,
+}
+
+/// Half-open circuit breaker guarding one tenant's batch execution.
+///
+/// The healthy fast path is a single relaxed load of the
+/// `serve_tenant_healthy` gauge (1 = healthy, 0 = quarantined) — the
+/// state mutex is only touched while the tenant is unhealthy, so the
+/// steady serve path stays lock- and allocation-free.
+struct Breaker {
+    state: Mutex<BreakerState>,
+    backoff: Duration,
+    /// Doubles as the exposition gauge and the lock-free health bit.
+    healthy: Arc<Gauge>,
+}
+
+impl Breaker {
+    fn new(backoff: Duration, healthy: Arc<Gauge>) -> Breaker {
+        healthy.set(1);
+        Breaker { state: Mutex::new(BreakerState::Healthy), backoff, healthy }
+    }
+
+    /// May this tenant cut + execute a batch right now?  Quarantined
+    /// tenants stay refused until the backoff elapses, then admit one
+    /// half-open probe.
+    fn admit(&self) -> bool {
+        if self.healthy.get() == 1 {
+            return true;
+        }
+        let mut s = self.state.lock().unwrap();
+        match *s {
+            BreakerState::Healthy | BreakerState::HalfOpen => true,
+            BreakerState::Open { until } => {
+                if Instant::now() >= until {
+                    *s = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// A batch completed: a half-open probe success restores `Healthy`.
+    fn on_success(&self) {
+        if self.healthy.get() == 1 {
+            return;
+        }
+        *self.state.lock().unwrap() = BreakerState::Healthy;
+        self.healthy.set(1);
+    }
+
+    /// A batch panicked: quarantine until the backoff elapses (a
+    /// half-open probe failure lands here too, re-arming the backoff).
+    fn on_panic(&self) {
+        *self.state.lock().unwrap() = BreakerState::Open { until: Instant::now() + self.backoff };
+        self.healthy.set(0);
+    }
+
+    fn is_healthy(&self) -> bool {
+        self.healthy.get() == 1
     }
 }
 
@@ -126,6 +234,8 @@ struct ModelEntry {
     /// Clone of the batcher's metric bundle — lets `push` count a
     /// rejected request without taking the batcher lock.
     metrics: BatcherMetrics,
+    /// Panic quarantine: gates this tenant's drain on the shared pool.
+    breaker: Breaker,
 }
 
 /// One answered request from [`ModelRegistry::drain`].
@@ -152,6 +262,9 @@ pub struct ModelInfo {
     pub kinds: LayerKindCounts,
     /// Requests currently queued.
     pub pending: usize,
+    /// False while the tenant is panic-quarantined behind its breaker
+    /// (mirrors the `serve_tenant_healthy` gauge).
+    pub healthy: bool,
     pub stats: ServeStats,
 }
 
@@ -217,6 +330,13 @@ impl ModelRegistry {
                 detail: "tenant batch size must be >= 1".into(),
             });
         }
+        if cfg.max_queue == 0 {
+            return Err(RegistryError::BadConfig {
+                model: id.to_string(),
+                detail: "tenant max_queue must be >= 1 (a zero-capacity queue admits nothing)"
+                    .into(),
+            });
+        }
         // Write lock first: the duplicate check must precede metric
         // registration, or a rejected insert would clobber the existing
         // tenant's series.
@@ -226,18 +346,24 @@ impl ModelRegistry {
         }
         let in_dim = model.in_dim();
         let mut session = InferenceSession::with_shared_pool(model, Arc::clone(&self.pool));
+        // Scope the `session.shard` failpoint to this tenant so chaos
+        // plans can target one model without touching its neighbors.
+        session.set_fault_key(id);
         if cfg.span_sample_every > 0 {
             session.enable_metrics(cfg.span_sample_every).register_into(&self.metrics, id);
         }
-        let batcher = match cfg.max_wait {
+        let mut batcher = match cfg.max_wait {
             Some(w) => Batcher::with_deadline(cfg.batch, in_dim, w),
             None => Batcher::new(cfg.batch, in_dim),
         };
+        batcher.set_max_queue(Some(cfg.max_queue));
         let metrics = batcher.metrics().clone();
         metrics.register_into(&self.metrics, id);
+        let healthy = self.metrics.gauge("serve_tenant_healthy", labels(&[("model", id)]));
+        let breaker = Breaker::new(cfg.breaker_backoff, healthy);
         map.insert(
             id.to_string(),
-            Arc::new(ModelEntry { session, batcher: Mutex::new(batcher), metrics }),
+            Arc::new(ModelEntry { session, batcher: Mutex::new(batcher), metrics, breaker }),
         );
         Ok(())
     }
@@ -258,15 +384,16 @@ impl ModelRegistry {
         self.insert(id, model, cfg)
     }
 
-    /// Drop a model; its queued (unanswered) requests are dropped too,
-    /// and every metric series labeled with the model id leaves the
-    /// exposition.  Returns false if no such model.
-    pub fn evict(&self, id: &str) -> bool {
-        let evicted = self.models.write().unwrap().remove(id).is_some();
-        if evicted {
-            self.metrics.unregister_labeled("model", id);
-        }
-        evicted
+    /// Drop a model.  Its queued (unanswered) requests are *shed* —
+    /// counted into its `serve_shed_total` before the series leaves the
+    /// exposition, never silently dropped — and every metric series
+    /// labeled with the model id is unregistered.  Returns the number
+    /// of shed requests, or `None` if no such model.
+    pub fn evict(&self, id: &str) -> Option<usize> {
+        let e = self.models.write().unwrap().remove(id)?;
+        let shed = e.batcher.lock().unwrap().shed_all();
+        self.metrics.unregister_labeled("model", id);
+        Some(shed)
     }
 
     pub fn contains(&self, id: &str) -> bool {
@@ -291,8 +418,23 @@ impl ModelRegistry {
     }
 
     /// Route one request to `model`'s queue (its latency clock starts
-    /// now).
+    /// now).  A full queue is [`RegistryError::Overloaded`] — the
+    /// caller's signal to back off, never a growing queue.
     pub fn push(&self, model: &str, request: u64, x: Vec<f32>) -> Result<(), RegistryError> {
+        self.push_with_deadline(model, request, x, None)
+    }
+
+    /// [`push`](ModelRegistry::push) with an absolute deadline: if the
+    /// request is still queued past `deadline`, the next drain sheds it
+    /// before compute (counted in `serve_shed_total`) instead of
+    /// serving it late.
+    pub fn push_with_deadline(
+        &self,
+        model: &str,
+        request: u64,
+        x: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<(), RegistryError> {
         let e = self.entry(model)?;
         let expected = e.session.model().in_dim();
         if x.len() != expected {
@@ -305,8 +447,19 @@ impl ModelRegistry {
                 expected,
             });
         }
-        e.batcher.lock().unwrap().push(request, x);
-        Ok(())
+        let pushed =
+            e.batcher.lock().unwrap().push_request(request, x, Instant::now(), deadline);
+        match pushed {
+            Ok(()) => Ok(()),
+            Err(PushError::Overloaded { depth, capacity }) => {
+                Err(RegistryError::Overloaded { model: model.to_string(), depth, capacity })
+            }
+            // Unreachable (length pre-validated above) but kept total so
+            // the mapping can never silently drop a new PushError arm.
+            Err(PushError::BadLength { got, expected, .. }) => {
+                Err(RegistryError::BadInput { model: model.to_string(), got, expected })
+            }
+        }
     }
 
     /// Requests queued across all models.
@@ -320,6 +473,16 @@ impl ModelRegistry {
     /// shared pool.  A batch is due when full, when its tenant's flush
     /// deadline expired, or — with `flush` — whenever anything is queued.
     /// Returns the answers in (model, cut) order.
+    ///
+    /// A panic during one tenant's batch (a poisoned model, an injected
+    /// fault) is **quarantined here**: the micro-batch is failed
+    /// (`serve_failed_total`, no answers for its requests), the tenant's
+    /// breaker opens (`serve_tenant_healthy` drops to 0, no more batches
+    /// cut until [`TenantConfig::breaker_backoff`] elapses and a
+    /// half-open probe succeeds), and the drain moves on — every other
+    /// tenant keeps serving bitwise-identically on the shared pool.
+    /// Only [`ModelRegistry::infer`] keeps the raw re-raise semantics of
+    /// the direct API.
     pub fn drain(&self, flush: bool) -> Vec<Answer> {
         let entries: Vec<(String, Arc<ModelEntry>)> = self
             .models
@@ -334,12 +497,29 @@ impl ModelRegistry {
         // itself allocates nothing once warm.
         let mut logits = Vec::new();
         for (id, e) in entries {
+            if !e.breaker.admit() {
+                // Quarantined: requests stay queued (their deadlines
+                // shed them at the next admitted cut if they expire).
+                continue;
+            }
             loop {
                 // Batcher lock is held only to cut/account, never while
                 // inferring — pushes for this model proceed concurrently.
                 let mb = e.batcher.lock().unwrap().next_batch(flush);
                 let Some(mb) = mb else { break };
-                e.session.infer_batch_into(&mb.x, mb.batch, &mut logits);
+                let ran = catch_unwind(AssertUnwindSafe(|| {
+                    e.session.infer_batch_into(&mb.x, mb.batch, &mut logits)
+                }));
+                if ran.is_err() {
+                    // The worker pool already survived the panic (each
+                    // task is caught in the worker loop and re-raised on
+                    // this thread); fail the batch and quarantine the
+                    // tenant instead of crashing the drain.
+                    e.batcher.lock().unwrap().fail(mb);
+                    e.breaker.on_panic();
+                    break;
+                }
+                e.breaker.on_success();
                 let k = e.session.model().out_dim();
                 for (row, &rid) in mb.ids.iter().enumerate() {
                     out.push(Answer {
@@ -404,6 +584,7 @@ impl ModelRegistry {
                     precision: m.uniform_precision(),
                     kinds: m.layer_kind_counts(),
                     pending,
+                    healthy: e.breaker.is_healthy(),
                     stats,
                 }
             })
@@ -438,7 +619,7 @@ mod tests {
     }
 
     fn cfg_no_deadline(batch: usize) -> TenantConfig {
-        TenantConfig { batch, max_wait: None, span_sample_every: 1 }
+        TenantConfig { batch, max_wait: None, span_sample_every: 1, ..TenantConfig::default() }
     }
 
     #[test]
@@ -475,7 +656,12 @@ mod tests {
         reg.insert(
             "m",
             toy_model(5),
-            TenantConfig { batch: 8, max_wait: Some(Duration::ZERO), span_sample_every: 1 },
+            TenantConfig {
+                batch: 8,
+                max_wait: Some(Duration::ZERO),
+                span_sample_every: 1,
+                ..TenantConfig::default()
+            },
         )
         .unwrap();
         reg.push("m", 7, vec![0.5; 12]).unwrap();
@@ -510,8 +696,12 @@ mod tests {
             reg.insert(
                 "z",
                 toy_model(7),
-                TenantConfig { batch: 0, max_wait: None, span_sample_every: 1 }
+                TenantConfig { batch: 0, max_wait: None, ..TenantConfig::default() }
             ),
+            Err(RegistryError::BadConfig { .. })
+        ));
+        assert!(matches!(
+            reg.insert("z", toy_model(7), TenantConfig { max_queue: 0, ..TenantConfig::default() }),
             Err(RegistryError::BadConfig { .. })
         ));
         assert!(matches!(
@@ -526,9 +716,63 @@ mod tests {
         assert_eq!(info.len(), 1);
         assert_eq!(info[0].in_dim, 12);
         assert_eq!(info[0].out_dim, 5);
-        assert!(reg.evict("a"));
-        assert!(!reg.evict("a"));
+        assert!(info[0].healthy, "a fresh tenant starts healthy");
+        assert_eq!(reg.evict("a"), Some(0), "nothing queued, nothing shed");
+        assert!(reg.evict("a").is_none());
         assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn overload_is_typed_and_bounded() {
+        let reg = ModelRegistry::new(1);
+        reg.insert(
+            "m",
+            toy_model(5),
+            TenantConfig { max_queue: 2, ..cfg_no_deadline(8) },
+        )
+        .unwrap();
+        reg.push("m", 0, vec![0.5; 12]).unwrap();
+        reg.push("m", 1, vec![0.5; 12]).unwrap();
+        // The third push sees a full queue: typed backpressure, and the
+        // queue never grows past its capacity.
+        assert!(matches!(
+            reg.push("m", 2, vec![0.5; 12]),
+            Err(RegistryError::Overloaded { depth: 2, capacity: 2, .. })
+        ));
+        assert_eq!(reg.pending(), 2);
+        let text = reg.metrics_text();
+        assert!(text.contains("serve_overload_total{model=\"m\"} 1\n"), "{text}");
+        assert!(text.contains("serve_tenant_healthy{model=\"m\"} 1\n"), "{text}");
+        // Draining frees capacity; the queued requests were not lost.
+        assert_eq!(reg.drain(true).len(), 2);
+        reg.push("m", 2, vec![0.5; 12]).unwrap();
+        assert_eq!(reg.stats("m").unwrap().overloaded, 1);
+    }
+
+    #[test]
+    fn evict_sheds_queued_requests_and_counts_them() {
+        let reg = ModelRegistry::new(1);
+        reg.insert("m", toy_model(5), cfg_no_deadline(8)).unwrap();
+        for i in 0..3 {
+            reg.push("m", i, vec![0.5; 12]).unwrap();
+        }
+        assert_eq!(reg.evict("m"), Some(3), "queued requests shed, not silently dropped");
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn expired_deadline_sheds_before_compute() {
+        let reg = ModelRegistry::new(1);
+        reg.insert("m", toy_model(5), cfg_no_deadline(2)).unwrap();
+        let past = Instant::now() - Duration::from_millis(5);
+        reg.push_with_deadline("m", 0, vec![0.5; 12], Some(past)).unwrap();
+        reg.push("m", 1, vec![0.5; 12]).unwrap();
+        let answers = reg.drain(true);
+        assert_eq!(answers.len(), 1, "expired request never reaches the pool");
+        assert_eq!(answers[0].request, 1);
+        let s = reg.stats("m").unwrap();
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.requests, 1, "only the live request completed");
     }
 
     #[test]
@@ -672,7 +916,7 @@ mod tests {
         assert!(text.contains("alloc_allocations_total"), "{text}");
         // Eviction removes every tenant-labeled series but keeps the
         // registry-level ones.
-        assert!(reg.evict("m"));
+        assert!(reg.evict("m").is_some());
         let text = reg.metrics_text();
         assert!(!text.contains("model=\"m\""), "{text}");
         assert!(text.contains("pool_scoped_tasks_total"), "{text}");
@@ -680,7 +924,7 @@ mod tests {
         reg.insert(
             "quiet",
             toy_model(5),
-            TenantConfig { batch: 1, max_wait: None, span_sample_every: 0 },
+            TenantConfig { batch: 1, max_wait: None, span_sample_every: 0, ..TenantConfig::default() },
         )
         .unwrap();
         reg.push("quiet", 0, vec![0.5; 12]).unwrap();

@@ -115,10 +115,17 @@ fn steady_state_infer_allocates_nothing() {
     // metric write (stage histograms, counters, queue gauge) lands in
     // fixed storage.  Payload allocation belongs to the pushing caller
     // (pinned exactly in `obs_bounded.rs`), so pushes happen before the
-    // measurement window here.
+    // measurement window here.  The batcher is *bounded* and every
+    // request carries a *deadline*: the admission check and the
+    // per-request expiry checks at cut time are comparisons on existing
+    // state, so the robustness layer rides the zero-allocation path too
+    // — and so do the compiled-in (disarmed) failpoints the sessions
+    // above fired on every shard.
     let mut batcher = Batcher::new(4, 8);
+    batcher.set_max_queue(Some(64));
+    let far = std::time::Instant::now() + std::time::Duration::from_secs(3600);
     for i in 0..16u64 {
-        batcher.push(i, vec![0.5; 8]);
+        batcher.push_with_deadline(i, vec![0.5; 8], Some(far)).unwrap();
     }
     let mb = batcher.next_batch(false).expect("warm cut");
     batcher.complete(mb);
@@ -129,5 +136,6 @@ fn steady_state_infer_allocates_nothing() {
     let s = batcher.stats();
     let n = total_allocations() - before;
     assert_eq!(s.requests, 16);
+    assert_eq!(s.shed, 0, "far-future deadlines must not shed");
     assert_eq!(n, 0, "steady-state cut/complete/stats allocated {n} times");
 }

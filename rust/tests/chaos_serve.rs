@@ -1,0 +1,452 @@
+//! Chaos suite: overload, deadline shedding, injected panics, and
+//! forced decode failures driven against the multi-tenant registry
+//! through the deterministic `obs::faultpoint` harness.
+//!
+//! The contract under fault is the same as the contract under load:
+//! the process never aborts, queues never exceed their capacity, every
+//! accepted request is accounted for (completed, failed, or shed —
+//! never silently dropped), and tenants that a fault does *not* target
+//! keep serving **bitwise identically** to solo serving on the shared
+//! pool.
+//!
+//! Faultpoint state is process-global, so every test here serializes on
+//! one mutex (the same discipline the unit tests in
+//! `src/obs/faultpoint.rs` use).
+//!
+//! CI's chaos smoke step re-runs this binary with a non-trivial
+//! `FAULT_PLAN` armed from the environment (see
+//! `env_fault_plan_holds_generic_invariants`).
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use lfsr_prune::data::rng::Pcg32;
+use lfsr_prune::obs::faultpoint::{self, points};
+use lfsr_prune::obs::{FaultAction, FaultPlan};
+use lfsr_prune::serve::{synthetic_lenet300_seeded, CompiledModel, InferenceSession};
+use lfsr_prune::store::{
+    export_model, LoadOptions, ModelRegistry, RegistryError, StoreError, TenantConfig,
+};
+
+/// One mutex for the whole binary: plans are global.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A 1-shard-per-layer model: exactly one `session.shard` hit per layer
+/// per inference attempt, so hit-window scripts are deterministic even
+/// on a threaded pool.
+fn chaos_model(seed: u32) -> CompiledModel {
+    synthetic_lenet300_seeded(0.9, 1, 1, seed)
+}
+
+/// Deterministic per-request input, independent of push order.
+fn request_input(dim: usize, id: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(0xC4A05 ^ id);
+    (0..dim).map(|_| rng.next_normal()).collect()
+}
+
+fn cfg(batch: usize, max_queue: usize) -> TenantConfig {
+    TenantConfig {
+        batch,
+        max_wait: None,
+        span_sample_every: 1,
+        max_queue,
+        // Chaos tests probe the breaker immediately; production keeps a
+        // real backoff.
+        breaker_backoff: Duration::ZERO,
+    }
+}
+
+/// Answers for `model` drained to completion, with a stall guard.
+fn drain_all(reg: &ModelRegistry, expect: usize) -> Vec<lfsr_prune::store::Answer> {
+    let mut answers = Vec::new();
+    let t0 = Instant::now();
+    while answers.len() < expect {
+        assert!(t0.elapsed() < Duration::from_secs(30), "drain stalled");
+        answers.extend(reg.drain(true));
+    }
+    answers
+}
+
+#[test]
+fn overload_past_capacity_is_bounded_typed_and_exactly_counted() {
+    let _s = serial();
+    faultpoint::disarm();
+    let reg = ModelRegistry::new(2);
+    let model = chaos_model(11);
+    let dim = model.in_dim();
+    reg.insert("m", model, cfg(2, 4)).unwrap();
+
+    let offered = 16u64;
+    let mut accepted = 0u64;
+    let mut rejected = 0u64;
+    for id in 0..offered {
+        match reg.push("m", id, request_input(dim, id)) {
+            Ok(()) => accepted += 1,
+            Err(RegistryError::Overloaded { depth, capacity, .. }) => {
+                assert_eq!((depth, capacity), (4, 4), "refused exactly at the bound");
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+        assert!(reg.pending() <= 4, "queue must never exceed max_queue");
+    }
+    assert_eq!(accepted, 4, "capacity admits exactly max_queue requests");
+    assert_eq!(accepted + rejected, offered, "no request unaccounted");
+
+    let answers = drain_all(&reg, accepted as usize);
+    assert_eq!(answers.len(), accepted as usize);
+    let s = reg.stats("m").unwrap();
+    assert_eq!(s.overloaded, rejected);
+    assert_eq!(s.requests, accepted);
+    let text = reg.metrics_text();
+    assert!(text.contains("serve_overload_total{model=\"m\"} 12\n"), "{text}");
+}
+
+#[test]
+fn expired_deadlines_shed_before_compute_not_served_late() {
+    let _s = serial();
+    faultpoint::disarm();
+    let reg = ModelRegistry::new(2);
+    let model = chaos_model(13);
+    let dim = model.in_dim();
+    reg.insert("m", model, cfg(4, 64)).unwrap();
+
+    let past = Instant::now() - Duration::from_millis(1);
+    let future = Instant::now() + Duration::from_secs(120);
+    reg.push_with_deadline("m", 0, request_input(dim, 0), Some(past)).unwrap();
+    reg.push("m", 1, request_input(dim, 1)).unwrap();
+    reg.push_with_deadline("m", 2, request_input(dim, 2), Some(past)).unwrap();
+    reg.push_with_deadline("m", 3, request_input(dim, 3), Some(future)).unwrap();
+
+    let answers = reg.drain(true);
+    let mut ids: Vec<u64> = answers.iter().map(|a| a.request).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![1, 3], "expired requests never reach the pool");
+    let s = reg.stats("m").unwrap();
+    assert_eq!(s.shed, 2);
+    assert_eq!(s.requests, 2, "only live requests completed");
+    assert_eq!(s.batches, 1, "no compute was spent on the shed rows");
+    let text = reg.metrics_text();
+    assert!(text.contains("serve_shed_total{model=\"m\"} 2\n"), "{text}");
+}
+
+#[test]
+fn injected_panic_quarantines_one_tenant_and_neighbors_stay_bitwise() {
+    let _s = serial();
+    let chaos = chaos_model(17);
+    let quiet = chaos_model(23);
+    let dim = chaos.in_dim();
+    let n_each = 4usize;
+
+    // Ground truth for the quiet tenant, computed alone.
+    let solo = InferenceSession::new(quiet.clone(), 1);
+    let expected: Vec<Vec<f32>> =
+        (0..n_each).map(|id| solo.infer_one(&request_input(dim, id as u64))).collect();
+
+    let reg = ModelRegistry::new(2);
+    reg.insert("chaos-a", chaos, cfg(n_each, 64)).unwrap();
+    reg.insert("quiet-b", quiet, cfg(n_each, 64)).unwrap();
+
+    // Panic on the very first chaos-a shard execution, then relent.
+    let plan = FaultPlan::seeded(7).with(
+        points::SESSION_SHARD,
+        Some("chaos-a"),
+        FaultAction::Panic,
+        1,
+        1,
+    );
+    let _g = faultpoint::arm(&plan);
+
+    for id in 0..n_each as u64 {
+        reg.push("chaos-a", id, request_input(dim, id)).unwrap();
+        reg.push("quiet-b", 100 + id, request_input(dim, id)).unwrap();
+    }
+
+    // First drain: chaos-a's batch dies to the injected panic (the
+    // process does not), quiet-b's batch completes bitwise.
+    let answers = reg.drain(true);
+    assert!(
+        answers.iter().all(|a| a.model == "quiet-b"),
+        "the faulted tenant must produce no answers"
+    );
+    assert_eq!(answers.len(), n_each);
+    for ans in &answers {
+        let reference = &expected[(ans.request - 100) as usize];
+        for (i, (&u, &v)) in ans.logits.iter().zip(reference).enumerate() {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "quiet-b#{} logit {i} differs from solo serving under fault",
+                ans.request
+            );
+        }
+    }
+    let health: std::collections::BTreeMap<String, bool> =
+        reg.list().into_iter().map(|m| (m.id, m.healthy)).collect();
+    assert!(!health["chaos-a"], "panicking tenant is quarantined");
+    assert!(health["quiet-b"], "neighbor stays healthy");
+    let s = reg.stats("chaos-a").unwrap();
+    assert_eq!(s.failed, n_each as u64, "the whole micro-batch failed");
+    let text = reg.metrics_text();
+    assert!(text.contains("serve_tenant_healthy{model=\"chaos-a\"} 0\n"), "{text}");
+    assert!(text.contains("serve_tenant_healthy{model=\"quiet-b\"} 1\n"), "{text}");
+    assert!(text.contains("serve_failed_total{model=\"chaos-a\"} 4\n"), "{text}");
+
+    // Recovery: zero backoff means the next drain admits a half-open
+    // probe; the fault window is spent, so the probe succeeds and the
+    // tenant is healthy again — bitwise, like nothing happened.
+    let solo_chaos = InferenceSession::new(chaos_model(17), 1);
+    for id in 0..n_each as u64 {
+        reg.push("chaos-a", 200 + id, request_input(dim, id)).unwrap();
+    }
+    let recovered = drain_all(&reg, n_each);
+    assert!(recovered.iter().all(|a| a.model == "chaos-a"));
+    for ans in &recovered {
+        let reference = solo_chaos.infer_one(&request_input(dim, ans.request - 200));
+        for (i, (&u, &v)) in ans.logits.iter().zip(&reference).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "recovered logit {i} must be bitwise");
+        }
+    }
+    assert!(reg.list().iter().all(|m| m.healthy), "probe success restores Healthy");
+    let text = reg.metrics_text();
+    assert!(text.contains("serve_tenant_healthy{model=\"chaos-a\"} 1\n"), "{text}");
+}
+
+#[test]
+fn breaker_walks_healthy_unhealthy_halfopen_restored_on_script() {
+    let _s = serial();
+    // The ISSUE-scripted plan: panic on hits 1..=3, succeed on 4.  The
+    // 1-shard 3-layer model fires once per layer, and a panic aborts the
+    // attempt at the layer that fired it, so attempts 1-3 consume
+    // exactly hits 1-3 and attempt 4 runs hits 4-6 clean.
+    let plan =
+        FaultPlan::seeded(7).with(points::SESSION_SHARD, Some("m"), FaultAction::Panic, 1, 3);
+    let _g = faultpoint::arm(&plan);
+
+    let reg = ModelRegistry::new(2);
+    let model = chaos_model(29);
+    let dim = model.in_dim();
+    reg.insert("m", model, cfg(1, 64)).unwrap();
+
+    let healthy = |reg: &ModelRegistry| reg.list().pop().unwrap().healthy;
+    assert!(healthy(&reg), "starts Healthy");
+
+    for attempt in 1..=3u64 {
+        reg.push("m", attempt, request_input(dim, attempt)).unwrap();
+        let answers = reg.drain(true);
+        assert!(answers.is_empty(), "attempt {attempt} must die to the injected panic");
+        assert!(!healthy(&reg), "attempt {attempt} leaves the tenant quarantined");
+        assert_eq!(reg.stats("m").unwrap().failed, attempt, "one failed request per probe");
+    }
+    assert_eq!(faultpoint::hits(points::SESSION_SHARD), 3);
+
+    // Fourth probe: the plan relents, the half-open probe succeeds.
+    reg.push("m", 4, request_input(dim, 4)).unwrap();
+    let answers = drain_all(&reg, 1);
+    assert_eq!(answers[0].request, 4);
+    assert!(healthy(&reg), "probe success restores Healthy");
+    let s = reg.stats("m").unwrap();
+    assert_eq!((s.failed, s.requests), (3, 1));
+}
+
+#[test]
+fn quarantined_tenant_refuses_batches_until_backoff_elapses() {
+    let _s = serial();
+    let plan =
+        FaultPlan::seeded(7).with(points::SESSION_SHARD, Some("m"), FaultAction::Panic, 1, 1);
+    let _g = faultpoint::arm(&plan);
+
+    let reg = ModelRegistry::new(2);
+    let model = chaos_model(31);
+    let dim = model.in_dim();
+    // A real (but short) backoff this time: drains inside the window
+    // must not even cut a batch.
+    reg.insert(
+        "m",
+        model,
+        TenantConfig { breaker_backoff: Duration::from_millis(150), ..cfg(1, 64) },
+    )
+    .unwrap();
+
+    reg.push("m", 1, request_input(dim, 1)).unwrap();
+    assert!(reg.drain(true).is_empty(), "first batch dies to the panic");
+    reg.push("m", 2, request_input(dim, 2)).unwrap();
+
+    // Inside the backoff window: the breaker refuses to cut, the queued
+    // request neither completes nor fails.
+    let t0 = Instant::now();
+    let mut refused_at_least_once = false;
+    while t0.elapsed() < Duration::from_millis(60) {
+        assert!(reg.drain(true).is_empty());
+        refused_at_least_once = true;
+    }
+    assert!(refused_at_least_once);
+    assert_eq!(reg.pending(), 1, "request 2 stays queued while quarantined");
+    assert_eq!(reg.stats("m").unwrap().failed, 1, "request 2 was not failed");
+
+    // Past the backoff: the half-open probe runs (fault window is
+    // spent) and request 2 is finally answered.
+    std::thread::sleep(Duration::from_millis(150));
+    let answers = drain_all(&reg, 1);
+    assert_eq!(answers[0].request, 2);
+    assert!(reg.list().pop().unwrap().healthy);
+}
+
+#[test]
+fn forced_decode_failure_is_typed_and_the_next_load_succeeds() {
+    let _s = serial();
+    let path = std::env::temp_dir()
+        .join(format!("lfsrpack_chaos_{}.lfsrpack", std::process::id()));
+    export_model(&chaos_model(37), &path, 1).expect("export");
+
+    let plan = FaultPlan::seeded(7).with(points::STORE_DECODE, None, FaultAction::Fail, 1, 1);
+    let _g = faultpoint::arm(&plan);
+
+    let reg = ModelRegistry::new(2);
+    let opts = LoadOptions { n_shards: 1, lanes: 1, verify: false, precision: None };
+    let err = reg.load("m", &path, &opts, cfg(2, 64)).unwrap_err();
+    assert!(
+        matches!(&err, RegistryError::Store(StoreError::Corrupt { detail })
+            if detail.contains("faultpoint")),
+        "forced decode failure must surface as the typed corrupt error, got {err}"
+    );
+    assert!(reg.is_empty(), "a failed load registers nothing");
+
+    // Hit 2 is outside the window: the identical load now succeeds and
+    // the tenant serves.
+    reg.load("m", &path, &opts, cfg(2, 64)).unwrap();
+    let dim = 784;
+    reg.push("m", 0, request_input(dim, 0)).unwrap();
+    reg.push("m", 1, request_input(dim, 1)).unwrap();
+    assert_eq!(drain_all(&reg, 2).len(), 2);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn admission_accounting_is_exact_under_8_thread_contention() {
+    let _s = serial();
+    faultpoint::disarm();
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 2_000;
+    const CAPACITY: usize = 64;
+
+    let reg = Arc::new(ModelRegistry::new(2));
+    let model = chaos_model(41);
+    let dim = model.in_dim();
+    reg.insert("m", model, cfg(32, CAPACITY)).unwrap();
+
+    // No drain while pushing: every accepted request stays queued, so
+    // accepted == pending at the end and the books must balance exactly
+    // (the same exactness bar obs_metrics.rs sets for raw counters).
+    let x = request_input(dim, 0);
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let reg = Arc::clone(&reg);
+            let x = x.clone();
+            std::thread::spawn(move || {
+                let mut accepted = 0u64;
+                for k in 0..PER_THREAD {
+                    match reg.push("m", t * PER_THREAD + k, x.clone()) {
+                        Ok(()) => accepted += 1,
+                        Err(RegistryError::Overloaded { depth, capacity, .. }) => {
+                            assert_eq!(capacity, CAPACITY);
+                            assert!(depth >= CAPACITY, "refused only at (or past) the bound");
+                        }
+                        Err(e) => panic!("unexpected error: {e}"),
+                    }
+                }
+                accepted
+            })
+        })
+        .collect();
+    let accepted: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+
+    assert!(reg.pending() <= CAPACITY, "queue never exceeds capacity");
+    assert_eq!(reg.pending() as u64, accepted, "every accepted request is queued");
+    let s = reg.stats("m").unwrap();
+    let m_requests = {
+        // `requests` in ServeStats counts completions; read the raw
+        // accepted counter from the exposition instead.
+        let text = reg.metrics_text();
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("serve_requests_total{model=\"m\"}"))
+            .expect("requests series");
+        line.rsplit(' ').next().unwrap().parse::<u64>().unwrap()
+    };
+    assert_eq!(m_requests, accepted);
+    assert_eq!(
+        m_requests + s.overloaded,
+        THREADS * PER_THREAD,
+        "accepted + refused must account for every offered request"
+    );
+}
+
+#[test]
+fn env_fault_plan_holds_generic_invariants() {
+    let _s = serial();
+    // CI arms a real plan via FAULT_PLAN; locally this falls back to a
+    // representative one.  Whatever the (bounded) plan, the invariants
+    // below must hold: the process survives, queues stay bounded, and
+    // accepted requests are all accounted for.
+    let plan = match FaultPlan::from_env().expect("FAULT_PLAN must parse") {
+        Some(p) => p,
+        None => FaultPlan::parse(
+            "seed=7;session.shard[chaos-a]=panic@1..2;store.decode=fail@1;pool.task=delay:1@1..4",
+        )
+        .unwrap(),
+    };
+    let _g = faultpoint::arm(&plan);
+
+    let reg = ModelRegistry::new(2);
+    let chaos = chaos_model(43);
+    let dim = chaos.in_dim();
+    const CAP: usize = 8;
+    reg.insert("chaos-a", chaos, cfg(2, CAP)).unwrap();
+    reg.insert("quiet-b", chaos_model(47), cfg(2, CAP)).unwrap();
+
+    let mut accepted = [0u64; 2];
+    let mut refused = [0u64; 2];
+    let t0 = Instant::now();
+    for round in 0..12u64 {
+        for (ti, id) in ["chaos-a", "quiet-b"].into_iter().enumerate() {
+            for k in 0..4u64 {
+                match reg.push(id, round * 100 + k, request_input(dim, k)) {
+                    Ok(()) => accepted[ti] += 1,
+                    Err(RegistryError::Overloaded { .. }) => refused[ti] += 1,
+                    Err(e) => panic!("unexpected error: {e}"),
+                }
+            }
+            assert!(
+                reg.list().iter().all(|m| m.pending <= CAP),
+                "queues must stay bounded under chaos"
+            );
+        }
+        reg.drain(true);
+        assert!(t0.elapsed() < Duration::from_secs(30), "chaos drain stalled");
+    }
+    // Let quarantined tenants recover (bounded plans relent; zero
+    // backoff makes every drain a probe) and flush the queues.
+    let t1 = Instant::now();
+    while reg.pending() > 0 {
+        assert!(t1.elapsed() < Duration::from_secs(30), "recovery stalled");
+        reg.drain(true);
+    }
+    for (ti, id) in ["chaos-a", "quiet-b"].into_iter().enumerate() {
+        let s = reg.stats(id).unwrap();
+        assert_eq!(
+            s.requests + s.failed + s.shed,
+            accepted[ti],
+            "{id}: every accepted request completed, failed, or shed — none lost"
+        );
+        assert_eq!(s.overloaded, refused[ti], "{id}: refusals counted exactly");
+    }
+    assert!(
+        reg.list().iter().all(|m| m.healthy),
+        "all tenants recovered once the plan relented"
+    );
+}

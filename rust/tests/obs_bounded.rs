@@ -30,7 +30,7 @@ fn run_round(b: &mut Batcher, round: usize) {
         // The one allocation this loop is allowed: the request payload,
         // owned by the caller by contract.
         let x = vec![0.25_f32; EXAMPLE_LEN];
-        b.push((round * PUSHES_PER_ROUND + i) as u64, x);
+        b.push((round * PUSHES_PER_ROUND + i) as u64, x).unwrap();
     }
     while let Some(mb) = b.next_batch(true) {
         b.complete(mb);

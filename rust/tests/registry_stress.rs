@@ -5,7 +5,7 @@
 //! multi-tenancy is not "approximately right under load": tenant mix,
 //! drain interleaving, and registry churn must not move a single bit.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use lfsr_prune::data::rng::Pcg32;
@@ -21,8 +21,14 @@ fn request_input(dim: usize, id: u64) -> Vec<f32> {
     (0..dim).map(|_| rng.next_normal()).collect()
 }
 
+/// `load_while_serving_keeps_established_tenant_bitwise` arms the
+/// process-global faultpoint plan against `store.decode`; every test in
+/// this binary that loads artifacts must serialize against it.
+static DECODERS: Mutex<()> = Mutex::new(());
+
 #[test]
 fn mixed_fc_conv_tenants_bitwise_under_concurrent_churn() {
+    let _serial = DECODERS.lock().unwrap_or_else(|e| e.into_inner());
     let n_each = 16usize;
     let fc = synthetic_lenet300_seeded(0.9, 3, 1, 11);
     let vgg = synthetic_vgg16_scaled(16, 16, 0.9, 3, 1);
@@ -48,8 +54,12 @@ fn mixed_fc_conv_tenants_bitwise_under_concurrent_churn() {
         .collect();
 
     let reg = Arc::new(ModelRegistry::new(2));
-    let cfg =
-        TenantConfig { batch: 4, max_wait: Some(Duration::from_millis(1)), span_sample_every: 1 };
+    let cfg = TenantConfig {
+        batch: 4,
+        max_wait: Some(Duration::from_millis(1)),
+        span_sample_every: 1,
+        ..TenantConfig::default()
+    };
     for (id, model) in &tenants {
         reg.insert(id, model.clone(), cfg).unwrap();
     }
@@ -90,7 +100,7 @@ fn mixed_fc_conv_tenants_bitwise_under_concurrent_churn() {
                 reg.push("churn", 9000 + round, vec![0.25; 784]).unwrap();
                 assert!(reg.contains("churn"));
                 let _ = reg.list(); // list() races with load/evict by design
-                assert!(reg.evict("churn"));
+                assert!(reg.evict("churn").is_some());
             }
         })
     };
@@ -135,4 +145,172 @@ fn mixed_fc_conv_tenants_bitwise_under_concurrent_churn() {
         }
     }
     assert!(seen.iter().all(|&s| s), "every request answered exactly once");
+}
+
+/// Evict-while-inflight: a tenant evicted while a drain thread is
+/// serving concurrently must account for every accepted request —
+/// answered before the evict, or shed (and counted) by it — never
+/// silently dropped.  The surviving tenant's answers stay bitwise
+/// through the churn.
+#[test]
+fn evict_while_inflight_sheds_and_counts_queued_requests() {
+    let n_rounds = 8usize;
+    let keeper = synthetic_lenet300_seeded(0.9, 2, 1, 51);
+    let victim = synthetic_lenet300_seeded(0.9, 2, 1, 53);
+    let dim = keeper.in_dim();
+    let solo = InferenceSession::new(keeper.clone(), 1);
+
+    let reg = Arc::new(ModelRegistry::new(2));
+    let cfg = TenantConfig {
+        batch: 4,
+        max_wait: None,
+        span_sample_every: 1,
+        ..TenantConfig::default()
+    };
+    reg.insert("keeper", keeper, cfg).unwrap();
+
+    for round in 0..n_rounds {
+        let id = format!("victim{round}");
+        reg.insert(&id, victim.clone(), cfg).unwrap();
+        // Drain concurrently with the pushes and the evict below.
+        let drainer = {
+            let reg = Arc::clone(&reg);
+            std::thread::spawn(move || {
+                let mut answers = Vec::new();
+                for _ in 0..64 {
+                    answers.extend(reg.drain(true));
+                }
+                answers
+            })
+        };
+        let mut victim_accepted = 0u64;
+        for k in 0..16u64 {
+            reg.push("keeper", round as u64 * 100 + k, request_input(dim, k)).unwrap();
+            reg.push(&id, 1000 + k, request_input(dim, k)).unwrap();
+            victim_accepted += 1;
+        }
+        let shed = reg.evict(&id).expect("victim registered") as u64;
+        assert!(reg.evict(&id).is_none(), "double evict reports missing");
+        assert!(
+            reg.push(&id, 9999, request_input(dim, 0)).is_err(),
+            "pushes after the evict are NoSuchModel"
+        );
+        let mut answers = drainer.join().unwrap();
+        // Finish the keeper's queue (the victim's is gone).
+        while reg.pending() > 0 {
+            answers.extend(reg.drain(true));
+        }
+        // A micro-batch already in flight at evict time still completes
+        // (the drain holds the entry alive); everything still queued was
+        // shed and counted.  Nothing vanishes.
+        let victim_answered = answers.iter().filter(|a| a.model == id).count() as u64;
+        assert_eq!(
+            victim_answered + shed,
+            victim_accepted,
+            "round {round}: every accepted victim request is answered or shed"
+        );
+        for ans in answers.iter().filter(|a| a.model == "keeper") {
+            let reference = solo.infer_one(&request_input(dim, ans.request % 100));
+            for (i, (&u, &v)) in ans.logits.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    u.to_bits(),
+                    v.to_bits(),
+                    "keeper#{} logit {i} differs from solo serving during evict churn",
+                    ans.request
+                );
+            }
+        }
+    }
+}
+
+/// Load-while-serving: artifact loads (including one the faultpoint
+/// harness forces to fail) land new tenants while an existing tenant
+/// is mid-traffic; the established tenant's answers stay bitwise and
+/// the failed load leaves no trace.
+#[test]
+fn load_while_serving_keeps_established_tenant_bitwise() {
+    use lfsr_prune::obs::faultpoint::{self, points};
+    use lfsr_prune::obs::{FaultAction, FaultPlan};
+
+    let _serial = DECODERS.lock().unwrap_or_else(|e| e.into_inner());
+
+    let keeper = synthetic_lenet300_seeded(0.9, 2, 1, 61);
+    let dim = keeper.in_dim();
+    let solo = InferenceSession::new(keeper.clone(), 1);
+    let reg = Arc::new(ModelRegistry::new(2));
+    let cfg = TenantConfig {
+        batch: 4,
+        max_wait: None,
+        span_sample_every: 1,
+        ..TenantConfig::default()
+    };
+    reg.insert("keeper", keeper, cfg).unwrap();
+
+    let path = std::env::temp_dir()
+        .join(format!("lfsrpack_loadserve_{}.lfsrpack", std::process::id()));
+    export_model(&synthetic_lenet300_seeded(0.95, 2, 1, 67), &path, 1).expect("export");
+
+    // Every 3rd decode is forced to fail: load-while-serving must
+    // tolerate bad artifacts mid-churn.  (Faultpoint state is global;
+    // this test owns it for its duration.)
+    let plan = FaultPlan::seeded(5).with_prob(
+        points::STORE_DECODE,
+        None,
+        FaultAction::Fail,
+        1,
+        u64::MAX,
+        0.33,
+    );
+    let _g = faultpoint::arm(&plan);
+
+    let loader = {
+        let reg = Arc::clone(&reg);
+        let path = path.clone();
+        std::thread::spawn(move || {
+            let opts = LoadOptions { n_shards: 2, lanes: 1, verify: false, precision: None };
+            let mut loaded = 0u32;
+            for round in 0..12 {
+                let id = format!("side{round}");
+                match reg.load(&id, &path, &opts, TenantConfig::default()) {
+                    Ok(()) => {
+                        loaded += 1;
+                        assert!(reg.contains(&id));
+                        reg.evict(&id).unwrap();
+                    }
+                    Err(e) => {
+                        // The forced decode failure is typed and leaves
+                        // nothing registered.
+                        assert!(e.to_string().contains("faultpoint"), "{e}");
+                        assert!(!reg.contains(&id));
+                    }
+                }
+            }
+            loaded
+        })
+    };
+
+    let n = 32usize;
+    for k in 0..n as u64 {
+        reg.push("keeper", k, request_input(dim, k)).unwrap();
+    }
+    let mut answers = Vec::new();
+    let t0 = Instant::now();
+    while answers.len() < n {
+        assert!(t0.elapsed() < Duration::from_secs(60), "drain stalled");
+        answers.extend(reg.drain(true).into_iter().filter(|a| a.model == "keeper"));
+    }
+    loader.join().unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    for ans in &answers {
+        let reference = solo.infer_one(&request_input(dim, ans.request));
+        for (i, (&u, &v)) in ans.logits.iter().zip(&reference).enumerate() {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "keeper#{} logit {i} differs from solo serving during load churn",
+                ans.request
+            );
+        }
+    }
 }
