@@ -1,16 +1,27 @@
-//! Scalar vs batch-major register-blocked sparse kernel.
+//! Scalar vs batch-major register-blocked sparse kernel — now with the
+//! kernel-path axis (scalar oracle vs runtime-detected SIMD) and the
+//! precision-tier axis.
 //!
-//! Two levels, both on the demo LeNet-300-100 @ 90% PRS sparsity:
+//! Three levels, all on the demo LeNet-300-100 @ 90% PRS sparsity:
 //!
-//! * **kernel** — one 784×300 layer, single thread: the scalar
-//!   batch-outer `gemm_into` against the blocked
-//!   `transpose_panels` + `gemm_panel_into` path, across batch sizes
-//!   {1, 8, 32, 128}.
+//! * **kernel** — one 784×300 layer, single thread, per precision tier
+//!   (f32 / i8 / i4 / ternary): the scalar batch-outer `gemm_into`
+//!   against the blocked `transpose_panels` + `gemm_panel_into_path`
+//!   path pinned to `Scalar`, and the same blocked kernel pinned to the
+//!   detected SIMD path (`ForceSimd` resolution — AVX2+FMA or NEON;
+//!   falls back to scalar when neither exists, recorded in the row's
+//!   `path` field), across batch sizes {1, 8, 32, 128}.
 //! * **model** — full 3-layer forward: the pre-blocked serving path
 //!   (per-shard `[batch, width]` buffers + scatter, boxed pool jobs —
 //!   reconstructed here from public API) against
-//!   `InferenceSession::infer_batch_into` (blocked kernel, scratch
-//!   arena, scoped jobs), at worker counts {1, multi}.
+//!   `InferenceSession::infer_batch_into` on the process-default kernel
+//!   path, at worker counts {1, multi}.
+//! * **gate** — the committed perf trajectory: the JSON carries a
+//!   `floors` block (minimum acceptable speedups) and a `gate` block
+//!   (the best measured ratio in the amortized regime, batch >= 32);
+//!   CI asserts `gate >= floors` so a kernel regression fails the
+//!   build.  `gate.simd_vs_scalar` is `null` on hosts with no SIMD
+//!   path, and CI skips that floor there.
 //!
 //! Results land in `BENCH_kernel.json` (repo root or `$BENCH_OUT_DIR`) —
 //! the measurable record of this kernel's speedup; CI uploads it with
@@ -25,16 +36,28 @@ use lfsr_prune::mask::prs::PrsMaskConfig;
 use lfsr_prune::serve::{
     synthetic_lenet300, CompiledLayer, CompiledModel, InferenceSession, WorkerPool,
 };
-use lfsr_prune::sparse::{transpose_panels, BATCH_LANES};
+use lfsr_prune::sparse::{
+    detected_simd, n_panels, resolve_kernel_path, transpose_panels, ActiveKernelPath, KernelPath,
+    PackedColumns, Precision, BATCH_LANES,
+};
 use lfsr_prune::util::bench::{bench_out_path, black_box, Bench, Stats};
 
 const DIMS: [usize; 4] = [784, 300, 100, 10];
 const SPARSITY: f64 = 0.9;
 const BATCHES: [usize; 4] = [1, 8, 32, 128];
+const TIERS: [Precision; 4] = [Precision::F32, Precision::I8, Precision::I4, Precision::Ternary];
+
+/// Minimum acceptable speedups in the amortized regime (batch >= 32,
+/// single thread) — the committed perf trajectory CI gates on.
+const FLOOR_BLOCKED_VS_SCALAR: f64 = 1.5;
+const FLOOR_SIMD_VS_SCALAR: f64 = 1.05;
+const FLOOR_I8_VS_F32: f64 = 0.85;
 
 struct Row {
     name: String,
     kernel: &'static str,
+    tier: &'static str,
+    path: &'static str,
     batch: usize,
     workers: usize,
     stats: Stats,
@@ -43,6 +66,15 @@ struct Row {
 impl Row {
     fn throughput(&self) -> f64 {
         self.batch as f64 / self.stats.median
+    }
+}
+
+fn tier_name(tier: Precision) -> &'static str {
+    match tier {
+        Precision::F32 => "f32",
+        Precision::I8 => "i8",
+        Precision::I4 => "i4",
+        Precision::Ternary => "ternary",
     }
 }
 
@@ -58,6 +90,30 @@ fn bench(name: String) -> Bench {
         b.max_samples = 5;
     }
     b
+}
+
+/// One blocked-kernel forward on an explicit path: transpose into
+/// panels, then `gemm_panel_into_path` per panel.
+#[allow(clippy::too_many_arguments)]
+fn blocked_forward(
+    shard: &PackedColumns,
+    bias: &[f32],
+    relu: bool,
+    path: ActiveKernelPath,
+    x: &[f32],
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    panels: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    transpose_panels(x, batch, rows, panels);
+    for p in 0..n_panels(batch) {
+        let lanes = (batch - p * BATCH_LANES).min(BATCH_LANES);
+        let panel = &panels[p * rows * BATCH_LANES..][..rows * BATCH_LANES];
+        let dst = &mut out[p * BATCH_LANES * cols..];
+        shard.gemm_panel_into_path(path, panel, lanes, bias, relu, dst, cols);
+    }
 }
 
 /// The pre-blocked serving path, reconstructed from public API: per
@@ -119,52 +175,92 @@ fn scalar_forward(
 fn main() {
     let hw_threads = std::thread::available_parallelism().map_or(4, |n| n.get());
     let multi = hw_threads.clamp(2, 8);
+    let simd_path = resolve_kernel_path(KernelPath::ForceSimd);
+    let simd_name = simd_path.as_str();
     let mut rows: Vec<Row> = Vec::new();
     let mut rng = Pcg32::new(42);
 
-    // --- kernel level: one 784x300 layer, single thread ------------------
+    // --- kernel level: one 784x300 layer, single thread, per tier --------
     let (r0, c0) = (DIMS[0], DIMS[1]);
     let cfg0 = PrsMaskConfig::auto(r0, c0, 11, 29);
     let w0: Vec<f32> = (0..r0 * c0).map(|_| rng.next_normal() * 0.05).collect();
     let b0: Vec<f32> = (0..c0).map(|_| rng.next_normal() * 0.01).collect();
     let layer0 = CompiledLayer::compile_prs(&w0, b0, true, r0, c0, SPARSITY, cfg0, 1, 2);
-    let shard0 = &layer0.shards[0];
-    for &batch in &BATCHES {
-        let x: Vec<f32> = (0..batch * r0).map(|_| rng.next_f32()).collect();
-        let mut out = vec![0.0f32; batch * c0];
-        let stats = bench(format!("kernel/scalar_784x300@90%_b{batch} (examples)"))
-            .run(batch as u64, || {
-                shard0.gemm_into(&x, batch, &layer0.bias, true, &mut out);
-                black_box(out[0])
+    for tier in TIERS {
+        let t = tier_name(tier);
+        let layer = layer0.to_precision(tier);
+        let shard = &layer.shards[0];
+        for &batch in &BATCHES {
+            let x: Vec<f32> = (0..batch * r0).map(|_| rng.next_f32()).collect();
+            let mut out = vec![0.0f32; batch * c0];
+            let stats = bench(format!("kernel/{t}/scalar_784x300@90%_b{batch} (examples)"))
+                .run(batch as u64, || {
+                    shard.gemm_into(&x, batch, &layer.bias, true, &mut out);
+                    black_box(out[0])
+                });
+            rows.push(Row {
+                name: format!("kernel_{t}_scalar_b{batch}"),
+                kernel: "scalar",
+                tier: t,
+                path: "scalar",
+                batch,
+                workers: 1,
+                stats,
             });
-        rows.push(Row {
-            name: format!("kernel_scalar_b{batch}"),
-            kernel: "scalar",
-            batch,
-            workers: 1,
-            stats,
-        });
 
-        let mut panels = Vec::new();
-        let n_panels = (batch + BATCH_LANES - 1) / BATCH_LANES;
-        let stats = bench(format!("kernel/blocked_784x300@90%_b{batch} (examples)"))
-            .run(batch as u64, || {
-                transpose_panels(&x, batch, r0, &mut panels);
-                for p in 0..n_panels {
-                    let lanes = (batch - p * BATCH_LANES).min(BATCH_LANES);
-                    let panel = &panels[p * r0 * BATCH_LANES..][..r0 * BATCH_LANES];
-                    let dst = &mut out[p * BATCH_LANES * c0..];
-                    shard0.gemm_panel_into(panel, lanes, &layer0.bias, true, dst, c0);
-                }
-                black_box(out[0])
+            let mut panels = Vec::new();
+            let stats = bench(format!("kernel/{t}/blocked_784x300@90%_b{batch} (examples)"))
+                .run(batch as u64, || {
+                    blocked_forward(
+                        shard,
+                        &layer.bias,
+                        true,
+                        ActiveKernelPath::Scalar,
+                        &x,
+                        batch,
+                        r0,
+                        c0,
+                        &mut panels,
+                        &mut out,
+                    );
+                    black_box(out[0])
+                });
+            rows.push(Row {
+                name: format!("kernel_{t}_blocked_b{batch}"),
+                kernel: "blocked",
+                tier: t,
+                path: "scalar",
+                batch,
+                workers: 1,
+                stats,
             });
-        rows.push(Row {
-            name: format!("kernel_blocked_b{batch}"),
-            kernel: "blocked",
-            batch,
-            workers: 1,
-            stats,
-        });
+
+            let stats = bench(format!("kernel/{t}/simd_784x300@90%_b{batch} (examples)"))
+                .run(batch as u64, || {
+                    blocked_forward(
+                        shard,
+                        &layer.bias,
+                        true,
+                        simd_path,
+                        &x,
+                        batch,
+                        r0,
+                        c0,
+                        &mut panels,
+                        &mut out,
+                    );
+                    black_box(out[0])
+                });
+            rows.push(Row {
+                name: format!("kernel_{t}_simd_b{batch}"),
+                kernel: "blocked",
+                tier: t,
+                path: simd_name,
+                batch,
+                workers: 1,
+                stats,
+            });
+        }
     }
 
     // --- model level: full forward, scalar-legacy vs blocked session -----
@@ -174,6 +270,7 @@ fn main() {
         let pool = (workers > 1).then(|| WorkerPool::new(workers));
         let session =
             InferenceSession::new(synthetic_lenet300(SPARSITY, shards, workers.max(2)), workers);
+        let session_path = session.kernel_path().as_str();
         for &batch in &BATCHES {
             let x: Vec<f32> = (0..batch * DIMS[0]).map(|_| rng.next_f32()).collect();
             let stats = bench(format!("model/scalar_lenet300@90%_b{batch}_w{workers} (examples)"))
@@ -183,6 +280,8 @@ fn main() {
             rows.push(Row {
                 name: format!("model_scalar_b{batch}_w{workers}"),
                 kernel: "scalar",
+                tier: "f32",
+                path: "scalar",
                 batch,
                 workers,
                 stats,
@@ -197,6 +296,8 @@ fn main() {
             rows.push(Row {
                 name: format!("model_blocked_b{batch}_w{workers}"),
                 kernel: "blocked",
+                tier: "f32",
+                path: session_path,
                 batch,
                 workers,
                 stats,
@@ -204,18 +305,84 @@ fn main() {
         }
     }
 
-    // Blocked-vs-scalar speedup per (level, batch, workers) pairing —
-    // rows push scalar immediately before blocked, so pair them up.
-    let mut speedups = Vec::new();
-    for pair in rows.chunks(2) {
-        if let [s, b] = pair {
-            assert_eq!((s.kernel, b.kernel), ("scalar", "blocked"));
-            let ratio = b.throughput() / s.throughput();
-            println!(
-                "bench speedup {:<32} blocked/scalar = {ratio:.2}x",
-                b.name.replace("_blocked", "")
-            );
-            speedups.push((b.name.replace("_blocked", ""), b.batch, b.workers, ratio));
+    // --- speedups ---------------------------------------------------------
+    let tp = |name: String| -> f64 {
+        rows.iter()
+            .find(|r| r.name == name)
+            .unwrap_or_else(|| panic!("missing bench row {name}"))
+            .throughput()
+    };
+
+    // Blocked (scalar path) vs the pre-blocked scalar reference, per
+    // tier/batch at the kernel level and per batch/workers at the model
+    // level.
+    let mut blocked_vs_scalar: Vec<(String, usize, usize, f64)> = Vec::new();
+    for tier in TIERS {
+        let t = tier_name(tier);
+        for &batch in &BATCHES {
+            let ratio = tp(format!("kernel_{t}_blocked_b{batch}"))
+                / tp(format!("kernel_{t}_scalar_b{batch}"));
+            blocked_vs_scalar.push((format!("kernel_{t}_b{batch}"), batch, 1, ratio));
+        }
+    }
+    for &workers in &[1usize, multi] {
+        for &batch in &BATCHES {
+            let ratio = tp(format!("model_blocked_b{batch}_w{workers}"))
+                / tp(format!("model_scalar_b{batch}_w{workers}"));
+            blocked_vs_scalar.push((format!("model_b{batch}_w{workers}"), batch, workers, ratio));
+        }
+    }
+
+    // SIMD path vs scalar path of the *same* blocked kernel, per
+    // tier/batch; and i8 vs f32 on the SIMD path, per batch.
+    let mut simd_vs_scalar: Vec<(String, usize, f64)> = Vec::new();
+    for tier in TIERS {
+        let t = tier_name(tier);
+        for &batch in &BATCHES {
+            let simd = tp(format!("kernel_{t}_simd_b{batch}"));
+            let scalar = tp(format!("kernel_{t}_blocked_b{batch}"));
+            simd_vs_scalar.push((format!("kernel_{t}_b{batch}"), batch, simd / scalar));
+        }
+    }
+    let mut i8_vs_f32: Vec<(usize, f64)> = Vec::new();
+    for &batch in &BATCHES {
+        let quant = tp(format!("kernel_i8_simd_b{batch}"));
+        let full = tp(format!("kernel_f32_simd_b{batch}"));
+        i8_vs_f32.push((batch, quant / full));
+    }
+
+    for (name, _, workers, ratio) in &blocked_vs_scalar {
+        println!("bench speedup {name:<28} w{workers} blocked/scalar = {ratio:.2}x");
+    }
+    for (name, _, ratio) in &simd_vs_scalar {
+        println!("bench speedup {name:<28} {simd_name}/scalar = {ratio:.2}x");
+    }
+    for (batch, ratio) in &i8_vs_f32 {
+        println!("bench speedup kernel_b{batch:<21} i8/f32 ({simd_name}) = {ratio:.2}x");
+    }
+
+    // --- gate: best measured ratio in the amortized regime ----------------
+    // Best (not worst) across batch >= 32, so the gate tracks the
+    // kernel's achievable speedup rather than smoke-preset noise at a
+    // single operating point; the floors are far below real measurements.
+    let mut gate_blocked = f64::MIN;
+    for (name, batch, workers, ratio) in &blocked_vs_scalar {
+        if name.starts_with("kernel_f32") && *workers == 1 && *batch >= 32 {
+            gate_blocked = gate_blocked.max(*ratio);
+        }
+    }
+    let simd_available = detected_simd().is_some();
+    let mut best_simd = f64::MIN;
+    for (name, batch, ratio) in &simd_vs_scalar {
+        if name.starts_with("kernel_f32") && *batch >= 32 {
+            best_simd = best_simd.max(*ratio);
+        }
+    }
+    let gate_simd = simd_available.then_some(best_simd);
+    let mut gate_i8 = f64::MIN;
+    for (batch, ratio) in &i8_vs_f32 {
+        if *batch >= 32 {
+            gate_i8 = gate_i8.max(*ratio);
         }
     }
 
@@ -229,13 +396,17 @@ fn main() {
     );
     let _ = writeln!(json, "  \"hw_threads\": {hw_threads},");
     let _ = writeln!(json, "  \"smoke\": {},", smoke());
+    let _ = writeln!(json, "  \"kernel_path\": \"{simd_name}\",");
+    let _ = writeln!(json, "  \"simd_available\": {simd_available},");
     let _ = writeln!(json, "  \"results\": [");
     for (i, r) in rows.iter().enumerate() {
         let _ = writeln!(
             json,
-            "    {{\"name\": \"{}\", \"kernel\": \"{}\", \"batch\": {}, \"workers\": {}, \"median_s\": {:.9}, \"mean_s\": {:.9}, \"p95_s\": {:.9}, \"throughput_per_s\": {:.1}}}{}",
+            "    {{\"name\": \"{}\", \"kernel\": \"{}\", \"tier\": \"{}\", \"path\": \"{}\", \"batch\": {}, \"workers\": {}, \"median_s\": {:.9}, \"mean_s\": {:.9}, \"p95_s\": {:.9}, \"throughput_per_s\": {:.1}}}{}",
             r.name,
             r.kernel,
+            r.tier,
+            r.path,
             r.batch,
             r.workers,
             r.stats.median,
@@ -247,20 +418,65 @@ fn main() {
     }
     let _ = writeln!(json, "  ],");
     let _ = writeln!(json, "  \"speedup_blocked_vs_scalar\": [");
-    for (i, (name, batch, workers, ratio)) in speedups.iter().enumerate() {
+    for (i, (name, batch, workers, ratio)) in blocked_vs_scalar.iter().enumerate() {
         let _ = writeln!(
             json,
             "    {{\"name\": \"{name}\", \"batch\": {batch}, \"workers\": {workers}, \"speedup\": {ratio:.3}}}{}",
-            if i + 1 == speedups.len() { "" } else { "," }
+            if i + 1 == blocked_vs_scalar.len() { "" } else { "," }
         );
     }
-    json.push_str("  ]\n}\n");
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(json, "  \"speedup_simd_vs_scalar\": [");
+    for (i, (name, batch, ratio)) in simd_vs_scalar.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"name\": \"{name}\", \"batch\": {batch}, \"path\": \"{simd_name}\", \"speedup\": {ratio:.3}}}{}",
+            if i + 1 == simd_vs_scalar.len() { "" } else { "," }
+        );
+    }
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(json, "  \"speedup_i8_vs_f32\": [");
+    for (i, (batch, ratio)) in i8_vs_f32.iter().enumerate() {
+        let _ = writeln!(
+            json,
+            "    {{\"batch\": {batch}, \"path\": \"{simd_name}\", \"speedup\": {ratio:.3}}}{}",
+            if i + 1 == i8_vs_f32.len() { "" } else { "," }
+        );
+    }
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(
+        json,
+        "  \"floors\": {{\"blocked_vs_scalar\": {FLOOR_BLOCKED_VS_SCALAR}, \"simd_vs_scalar\": {FLOOR_SIMD_VS_SCALAR}, \"i8_vs_f32\": {FLOOR_I8_VS_F32}}},"
+    );
+    let gate_simd_json = gate_simd.map_or("null".to_string(), |g| format!("{g:.3}"));
+    let _ = writeln!(
+        json,
+        "  \"gate\": {{\"blocked_vs_scalar\": {gate_blocked:.3}, \"simd_vs_scalar\": {gate_simd_json}, \"i8_vs_f32\": {gate_i8:.3}}}"
+    );
+    json.push_str("}\n");
 
     let out = bench_out_path("BENCH_kernel.json");
     std::fs::write(&out, &json).expect("writing BENCH_kernel.json");
     println!("wrote {}", out.display());
 
-    // Sanity: the file round-trips through the repo's own parser.
+    // Sanity: the file round-trips through the repo's own parser, and the
+    // measured gate holds its own floors (the same check CI re-runs on
+    // the artifact).
     let parsed = lfsr_prune::util::json::parse(&json).expect("valid json");
     assert!(parsed.get("results").is_some());
+    assert!(parsed.get("floors").is_some() && parsed.get("gate").is_some());
+    assert!(
+        gate_blocked >= FLOOR_BLOCKED_VS_SCALAR,
+        "blocked_vs_scalar gate {gate_blocked:.3} under floor {FLOOR_BLOCKED_VS_SCALAR}"
+    );
+    if let Some(g) = gate_simd {
+        assert!(
+            g >= FLOOR_SIMD_VS_SCALAR,
+            "simd_vs_scalar gate {g:.3} under floor {FLOOR_SIMD_VS_SCALAR}"
+        );
+    }
+    assert!(
+        gate_i8 >= FLOOR_I8_VS_F32,
+        "i8_vs_f32 gate {gate_i8:.3} under floor {FLOOR_I8_VS_F32}"
+    );
 }

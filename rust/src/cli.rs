@@ -25,7 +25,7 @@ use crate::lfsr::{stats, GaloisLfsr, MsbMap};
 use crate::pipeline::{self, MaskMethod, RegType};
 use crate::runtime::Runtime;
 use crate::serve::synthetic_lenet300_seeded;
-use crate::sparse::Precision;
+use crate::sparse::{default_kernel_path, Precision};
 use crate::store::{self, LoadOptions, ModelRegistry, RegistryError, TenantConfig};
 
 /// Parsed `--flag value` / `--flag` arguments plus positionals.
@@ -569,9 +569,11 @@ fn cmd_stats(args: &Args) -> Result<()> {
         return Ok(());
     }
     println!(
-        "served {requests} synthetic requests over {} tenant(s), {} shared worker thread(s):",
+        "served {requests} synthetic requests over {} tenant(s), {} shared worker thread(s), \
+         {} kernel path:",
         reg.len(),
         reg.workers(),
+        default_kernel_path().as_str(),
     );
     print_tenant_table(&reg);
     println!("\n# metrics exposition (serve via the /metrics endpoint, ROADMAP item 2):");

@@ -616,9 +616,12 @@ impl CompiledModel {
 
     /// One line per layer: shape, dims, nnz, and how the keep-set is
     /// derived (for PRS layers the printed seeds/widths are the server's
-    /// entire index state).
+    /// entire index state), plus a trailing line naming the
+    /// process-default kernel path new sessions will execute this model
+    /// on (runtime-detected; `LFSR_KERNEL` overrides).
     pub fn describe(&self) -> String {
-        self.layers
+        let mut lines = self
+            .layers
             .iter()
             .enumerate()
             .map(|(i, l)| {
@@ -661,8 +664,12 @@ impl CompiledModel {
                     l.precision
                 )
             })
-            .collect::<Vec<_>>()
-            .join("\n")
+            .collect::<Vec<_>>();
+        lines.push(format!(
+            "kernel path: {} (runtime-detected; LFSR_KERNEL overrides)",
+            crate::sparse::default_kernel_path().as_str()
+        ));
+        lines.join("\n")
     }
 }
 
@@ -767,9 +774,18 @@ mod tests {
     fn describe_reports_mask_provenance() {
         let model = synthetic_lenet300(0.9, 2, 1);
         let d = model.describe();
-        assert_eq!(d.lines().count(), 3);
+        // 3 layer lines + the trailing kernel-path line.
+        assert_eq!(d.lines().count(), 4);
         assert!(d.contains("PRS seeds"), "{d}");
         assert!(d.contains("784x300"), "{d}");
+        let last = d.lines().last().unwrap();
+        assert!(
+            last.starts_with("kernel path: ")
+                && ["scalar", "avx2", "neon"]
+                    .iter()
+                    .any(|p| last.contains(p)),
+            "{d}"
+        );
         let w = vec![0.0f32; 6 * 2];
         let explicit = CompiledModel::new(vec![CompiledLayer::from_mask(
             &w,

@@ -50,7 +50,10 @@ use super::pool::WorkerPool;
 use crate::obs::faultpoint::{self, points};
 use crate::obs::{labels, Histogram, MetricsRegistry, Sampler, Stage};
 use crate::sparse::im2col::{im2col_panels, maxpool_into};
-use crate::sparse::packed::{transpose_panels, BATCH_LANES};
+use crate::sparse::packed::{
+    default_kernel_path, n_panels, resolve_kernel_path, transpose_panels, ActiveKernelPath,
+    KernelPath, BATCH_LANES,
+};
 
 /// Per-layer span histograms: activation packing
 /// ([`Stage::PanelPack`] — FC transpose or conv im2col; absent for
@@ -186,6 +189,14 @@ pub struct InferenceSession {
     /// the tenant id so chaos plans can target one tenant.  `None`
     /// matches only key-less fault specs.
     fault_key: Option<String>,
+    /// Resolved kernel path every shard call of this session runs on.
+    /// Initialized to the process default
+    /// ([`default_kernel_path`]: runtime detection, `LFSR_KERNEL`
+    /// override); pinned per session via
+    /// [`InferenceSession::set_kernel_path`] so one process can serve
+    /// scalar and SIMD side by side (that is how the parity tests and
+    /// the scalar-vs-SIMD bench rows run in one binary).
+    path: ActiveKernelPath,
 }
 
 impl InferenceSession {
@@ -203,6 +214,7 @@ impl InferenceSession {
             arenas: Mutex::new(Vec::new()),
             metrics: None,
             fault_key: None,
+            path: default_kernel_path(),
         }
     }
 
@@ -216,7 +228,23 @@ impl InferenceSession {
             arenas: Mutex::new(Vec::new()),
             metrics: None,
             fault_key: None,
+            path: default_kernel_path(),
         }
+    }
+
+    /// Pin this session's kernel path: resolve `req` against runtime
+    /// detection and run every subsequent shard call on the result.
+    /// `KernelPath::Scalar` pins the bitwise oracle;
+    /// `KernelPath::ForceSimd` pins the CPU's SIMD path (scalar when
+    /// the CPU has none).  Overrides the process default for this
+    /// session only.
+    pub fn set_kernel_path(&mut self, req: KernelPath) {
+        self.path = resolve_kernel_path(req);
+    }
+
+    /// The resolved kernel path this session executes on.
+    pub fn kernel_path(&self) -> ActiveKernelPath {
+        self.path
     }
 
     /// Scope this session's `session.shard` failpoint hits to `key`
@@ -354,7 +382,7 @@ impl InferenceSession {
     fn run_layer(&self, layer: &CompiledLayer, panels: &[f32], batch: usize, out: &mut [f32]) {
         debug_assert_eq!(out.len(), batch * layer.cols);
         let slab = layer.rows * BATCH_LANES;
-        let n_panels = (batch + BATCH_LANES - 1) / BATCH_LANES;
+        let n_panels = n_panels(batch);
         // `session.shard` fires once per shard execution, keyed by
         // tenant; disarmed it is one relaxed load (the zero-allocation
         // steady state includes it).  A `fail` action has no typed
@@ -368,7 +396,8 @@ impl InferenceSession {
                         let lanes = (batch - p * BATCH_LANES).min(BATCH_LANES);
                         let panel = &panels[p * slab..][..slab];
                         let dst = &mut out[p * BATCH_LANES * layer.cols..];
-                        shard.gemm_panel_into(
+                        shard.gemm_panel_into_path(
+                            self.path,
                             panel,
                             lanes,
                             &layer.bias,
@@ -397,7 +426,8 @@ impl InferenceSession {
                         // `lanes`, all inside `out`, which outlives the
                         // blocking run_scoped call.
                         unsafe {
-                            shard.gemm_panel_raw(
+                            shard.gemm_panel_raw_path(
+                                self.path,
                                 panel,
                                 lanes,
                                 &layer.bias,

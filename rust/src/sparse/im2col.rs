@@ -176,7 +176,7 @@ pub fn im2col_panels(x: &[f32], batch: usize, g: &ConvGeom, panels: &mut Vec<f32
     let (oh, ow, k, s) = (g.out_h(), g.out_w(), g.kernel, g.stride);
     let vrows = batch * oh * ow;
     let patch = g.patch_len();
-    let n_panels = (vrows + BATCH_LANES - 1) / BATCH_LANES;
+    let n_panels = super::n_panels(vrows);
     // resize (not a full zero-fill): every slab element is overwritten
     // below — real tap, padding zero, or tail-lane zero.
     panels.resize(n_panels * patch * BATCH_LANES, 0.0);
@@ -373,7 +373,7 @@ mod tests {
             im2col_panels(&x, batch, &g, &mut panels);
             let vrows = batch * g.out_h() * g.out_w();
             let patch = g.patch_len();
-            let n_panels = (vrows + BATCH_LANES - 1) / BATCH_LANES;
+            let n_panels = crate::sparse::n_panels(vrows);
             assert_eq!(panels.len(), n_panels * patch * BATCH_LANES);
             for vrow in 0..vrows {
                 let (p, l) = (vrow / BATCH_LANES, vrow % BATCH_LANES);

@@ -7,7 +7,10 @@
 //! in-memory planes byte for byte) — the [`im2col`] lowering that turns
 //! NHWC convolutions into that same packed GEMM (so conv layers inherit
 //! both kernels, all four value planes, and the bitwise-determinism
-//! contract with zero new kernel code), and the memory-footprint models
+//! contract with zero new kernel code — and whose blocked kernel runs
+//! scalar or explicit SIMD (AVX2+FMA / NEON) behind runtime feature
+//! detection, see [`KernelPath`] / [`ActiveKernelPath`]), and the
+//! memory-footprint models
 //! for both methods (paper Figure 5), including the quantized-values
 //! artifact accounting ([`memory::artifact_value_bytes`]).
 
@@ -24,6 +27,7 @@ pub use memory::{
     BaselineFootprint, ProposedFootprint,
 };
 pub use packed::{
-    i4_code, i4_packed_len, pack_i4, pack_ternary, ternary_code, ternary_packed_len,
-    transpose_panels, PackedColumns, Precision, ValuePlane, BATCH_LANES,
+    default_kernel_path, detected_simd, i4_code, i4_packed_len, n_panels, pack_i4, pack_ternary,
+    resolve_kernel_path, ternary_code, ternary_packed_len, transpose_panels, ActiveKernelPath,
+    KernelPath, PackedColumns, Precision, ValuePlane, BATCH_LANES,
 };

@@ -109,12 +109,80 @@
 //! (`out_stride` = layer cols), which removes the per-shard `[batch,
 //! width]` intermediate and the scatter copy the serving engine used to
 //! pay per layer.
+//!
+//! # Kernel paths: explicit SIMD behind runtime detection
+//!
+//! The blocked kernel runs one of three bodies, selected **once per
+//! shard call** (see the `simd` submodule for detection and the
+//! drivers): the scalar oracle above, an AVX2+FMA body whose
+//! `[f32; 8]` accumulator is exactly one `__m256`, or a NEON body on
+//! two `float32x4_t`.  Runtime detection
+//! (`is_x86_feature_detected!("avx2")` + `"fma"`, cached in a
+//! `OnceLock`) picks the default; `LFSR_KERNEL=scalar|simd|auto` moves
+//! the process default, and the `_path` entry points
+//! ([`PackedColumns::gemm_panel_into_path`] /
+//! [`PackedColumns::gemm_panel_raw_path`]) pin a path per call —
+//! that is how one process can run both paths side by side in tests
+//! and benches.  The scalar kernel (`gemm_into` and the blocked
+//! scalar body) is untouched and remains the oracle.
+//!
+//! The determinism contract is **explicit per path**:
+//!
+//! * **scalar** — bitwise-pinned as before: blocked ≡ `gemm_into` ≡
+//!   the cycle engine / python mirrors, for every tier.
+//! * **avx2 / neon** — bitwise deterministic *within the path*: for a
+//!   fixed model + inputs the result is identical across worker count,
+//!   shard count, and batch composition, because per (lane, column)
+//!   the op order is still exactly the stored entry order (SIMD runs
+//!   8 lanes of the same sequence, never a different reduction tree).
+//!   Versus scalar, bits differ only by rounding: the multiplier tiers
+//!   use fused multiply-adds (one rounding where scalar takes two) and
+//!   the quantized tiers factor the column scale out of the
+//!   accumulation, applying it once at `finish` — with f32
+//!   activations a true integer (`maddubs`-style) inner loop is not
+//!   expressible, so the deviation from the scalar op order is the
+//!   factored scale plus FMA.  `python/tests/test_simd_pins.py`
+//!   mirrors the reassociated op order and derives the per-tier
+//!   SIMD-vs-scalar budgets (normalized `|Δ| / max(1, |y|)`): `2e-5`
+//!   for f32/i8/i4.  **Ternary is the exception: its SIMD body is
+//!   add/sub + one factored multiply — the identical op order — so
+//!   ternary SIMD is bitwise equal to scalar.**
+//!
+//! ReLU on the SIMD paths uses `max_ps` / `vmaxnmq_f32`, both of which
+//! return `0.0` for a NaN accumulator exactly like `f32::max(NaN,
+//! 0.0)`; bias is skipped (not added as `0.0`) when absent, same as
+//! scalar.
 
 use crate::mask::Mask;
+
+#[cfg(target_arch = "aarch64")]
+use core::arch::aarch64::{
+    float32x4_t, vaddq_f32, vfmaq_n_f32, vld1q_f32, vmulq_n_f32, vsubq_f32,
+};
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64::{
+    __m256, _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps,
+    _mm256_sub_ps,
+};
+
+mod simd;
+
+pub use simd::{
+    default_kernel_path, detected_simd, resolve_kernel_path, ActiveKernelPath, KernelPath,
+};
 
 /// Batch lanes per activation panel of the blocked kernel (one
 /// register-resident `[f32; BATCH_LANES]` accumulator row).
 pub const BATCH_LANES: usize = 8;
+
+/// Number of [`BATCH_LANES`]-lane activation panels covering `batch`
+/// rows.  The last panel may be partial: its tail lanes are zero-filled
+/// by [`transpose_panels`] and never written back out.  This is *the*
+/// panel-count expression — `transpose_panels`, both blocked kernels'
+/// callers, and im2col all size against it.
+pub const fn n_panels(batch: usize) -> usize {
+    (batch + BATCH_LANES - 1) / BATCH_LANES
+}
 
 /// Levels on each side of zero in the symmetric i8 quantizer (code -128
 /// is unused so `+v` and `-v` always round-trip to codes of equal
@@ -309,7 +377,7 @@ fn ternary_column(vals: &[f32]) -> (f32, f32) {
 /// (they are never written back out, so padding cannot leak).
 pub fn transpose_panels(x: &[f32], batch: usize, rows: usize, panels: &mut Vec<f32>) {
     assert_eq!(x.len(), batch * rows);
-    let n_panels = (batch + BATCH_LANES - 1) / BATCH_LANES;
+    let n_panels = n_panels(batch);
     // No full-buffer zero-fill on the warm path: resize only zeroes newly
     // grown capacity; every retained element is either a real lane
     // (overwritten below) or a tail-panel padding lane (zeroed
@@ -407,6 +475,59 @@ trait ValueRead {
 
     /// Map a finished accumulation to the column's pre-bias output.
     fn finish(&self, col: Self::Col, acc: f32) -> f32;
+
+    /// AVX2 twin of [`accum_lanes`](ValueRead::accum_lanes): fold entry
+    /// `e` (8 activation lanes at `slab`) into one `__m256`
+    /// accumulator.  The multiplier tiers use a fused multiply-add and
+    /// the quantized tiers feed the **raw code** (the column scale is
+    /// factored out to [`finish_avx2`](ValueRead::finish_avx2)), which
+    /// is where the SIMD path's rounding diverges from scalar — within
+    /// the budgets `python/tests/test_simd_pins.py` pins.
+    ///
+    /// # Safety
+    ///
+    /// `slab` must be valid for an 8-lane read, and the caller must be
+    /// compiled/dispatched with AVX2+FMA enabled (these bodies are
+    /// `#[inline(always)]` into the `#[target_feature]` driver).
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn accum_avx2(&self, col: Self::Col, acc: __m256, slab: *const f32, e: usize)
+        -> __m256;
+
+    /// AVX2 twin of [`finish`](ValueRead::finish): map 8 finished
+    /// accumulator lanes to the column's pre-bias outputs (identity for
+    /// f32, the single factored `acc * scale` for i8/i4/ternary).
+    ///
+    /// # Safety
+    ///
+    /// Same dispatch precondition as [`accum_avx2`](ValueRead::accum_avx2).
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn finish_avx2(&self, col: Self::Col, acc: __m256) -> __m256;
+
+    /// NEON twin of [`accum_lanes`](ValueRead::accum_lanes) over two
+    /// `float32x4_t` halves; same factored-scale contract as
+    /// [`accum_avx2`](ValueRead::accum_avx2).
+    ///
+    /// # Safety
+    ///
+    /// `slab` must be valid for an 8-lane read (NEON is aarch64
+    /// baseline, so there is no feature precondition).
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn accum_neon(
+        &self,
+        col: Self::Col,
+        acc: [float32x4_t; 2],
+        slab: *const f32,
+        e: usize,
+    ) -> [float32x4_t; 2];
+
+    /// NEON twin of [`finish`](ValueRead::finish).
+    ///
+    /// # Safety
+    ///
+    /// No preconditions beyond NEON baseline; marked unsafe to mirror
+    /// [`finish_avx2`](ValueRead::finish_avx2).
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn finish_neon(&self, col: Self::Col, acc: [float32x4_t; 2]) -> [float32x4_t; 2];
 }
 
 struct F32Read<'a>(&'a [f32]);
@@ -432,6 +553,40 @@ impl ValueRead for F32Read<'_> {
 
     #[inline(always)]
     fn finish(&self, _col: (), acc: f32) -> f32 {
+        acc
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[inline(always)]
+    unsafe fn accum_avx2(&self, _col: (), acc: __m256, slab: *const f32, e: usize) -> __m256 {
+        _mm256_fmadd_ps(_mm256_loadu_ps(slab), _mm256_set1_ps(self.0[e]), acc)
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[inline(always)]
+    unsafe fn finish_avx2(&self, _col: (), acc: __m256) -> __m256 {
+        acc
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[inline(always)]
+    unsafe fn accum_neon(
+        &self,
+        _col: (),
+        acc: [float32x4_t; 2],
+        slab: *const f32,
+        e: usize,
+    ) -> [float32x4_t; 2] {
+        let v = self.0[e];
+        [
+            vfmaq_n_f32(acc[0], vld1q_f32(slab), v),
+            vfmaq_n_f32(acc[1], vld1q_f32(slab.add(4)), v),
+        ]
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[inline(always)]
+    unsafe fn finish_neon(&self, _col: (), acc: [float32x4_t; 2]) -> [float32x4_t; 2] {
         acc
     }
 }
@@ -466,6 +621,44 @@ impl ValueRead for I8Read<'_> {
     fn finish(&self, _scale: f32, acc: f32) -> f32 {
         acc
     }
+
+    // SIMD accumulates the *raw* i8 code and applies the column scale
+    // once at finish (scalar dequantizes per entry) — f32 activations
+    // make a maddubs-style integer accumulation impossible, so the
+    // "dequantize once per column" half of that idea is what survives.
+    #[cfg(target_arch = "x86_64")]
+    #[inline(always)]
+    unsafe fn accum_avx2(&self, _scale: f32, acc: __m256, slab: *const f32, e: usize) -> __m256 {
+        _mm256_fmadd_ps(_mm256_loadu_ps(slab), _mm256_set1_ps(self.q[e] as f32), acc)
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[inline(always)]
+    unsafe fn finish_avx2(&self, scale: f32, acc: __m256) -> __m256 {
+        _mm256_mul_ps(acc, _mm256_set1_ps(scale))
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[inline(always)]
+    unsafe fn accum_neon(
+        &self,
+        _scale: f32,
+        acc: [float32x4_t; 2],
+        slab: *const f32,
+        e: usize,
+    ) -> [float32x4_t; 2] {
+        let v = self.q[e] as f32;
+        [
+            vfmaq_n_f32(acc[0], vld1q_f32(slab), v),
+            vfmaq_n_f32(acc[1], vld1q_f32(slab.add(4)), v),
+        ]
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[inline(always)]
+    unsafe fn finish_neon(&self, scale: f32, acc: [float32x4_t; 2]) -> [float32x4_t; 2] {
+        [vmulq_n_f32(acc[0], scale), vmulq_n_f32(acc[1], scale)]
+    }
 }
 
 struct I4Read<'a> {
@@ -497,6 +690,44 @@ impl ValueRead for I4Read<'_> {
     #[inline(always)]
     fn finish(&self, _scale: f32, acc: f32) -> f32 {
         acc
+    }
+
+    // Same factored-scale contract as I8Read: the 4-bit code is
+    // sign-extended to i8 by `i4_code`, widened to f32, and the column
+    // scale lands once at finish.
+    #[cfg(target_arch = "x86_64")]
+    #[inline(always)]
+    unsafe fn accum_avx2(&self, _scale: f32, acc: __m256, slab: *const f32, e: usize) -> __m256 {
+        let q = i4_code(self.packed, e) as f32;
+        _mm256_fmadd_ps(_mm256_loadu_ps(slab), _mm256_set1_ps(q), acc)
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[inline(always)]
+    unsafe fn finish_avx2(&self, scale: f32, acc: __m256) -> __m256 {
+        _mm256_mul_ps(acc, _mm256_set1_ps(scale))
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[inline(always)]
+    unsafe fn accum_neon(
+        &self,
+        _scale: f32,
+        acc: [float32x4_t; 2],
+        slab: *const f32,
+        e: usize,
+    ) -> [float32x4_t; 2] {
+        let v = i4_code(self.packed, e) as f32;
+        [
+            vfmaq_n_f32(acc[0], vld1q_f32(slab), v),
+            vfmaq_n_f32(acc[1], vld1q_f32(slab.add(4)), v),
+        ]
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[inline(always)]
+    unsafe fn finish_neon(&self, scale: f32, acc: [float32x4_t; 2]) -> [float32x4_t; 2] {
+        [vmulq_n_f32(acc[0], scale), vmulq_n_f32(acc[1], scale)]
     }
 }
 
@@ -546,6 +777,55 @@ impl ValueRead for TernaryRead<'_> {
     #[inline(always)]
     fn finish(&self, scale: f32, acc: f32) -> f32 {
         acc * scale
+    }
+
+    // The SIMD ternary body performs the *identical* per-lane op order
+    // as the scalar loop — add/sub per nonzero code (zero codes
+    // skipped, no FMA anywhere), one `acc * scale` at finish — so the
+    // ternary SIMD path is BITWISE equal to scalar, not
+    // tolerance-bounded.  `tests` pins that.
+    #[cfg(target_arch = "x86_64")]
+    #[inline(always)]
+    unsafe fn accum_avx2(&self, _scale: f32, acc: __m256, slab: *const f32, e: usize) -> __m256 {
+        match ternary_code(self.packed, e) {
+            1 => _mm256_add_ps(acc, _mm256_loadu_ps(slab)),
+            -1 => _mm256_sub_ps(acc, _mm256_loadu_ps(slab)),
+            _ => acc,
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[inline(always)]
+    unsafe fn finish_avx2(&self, scale: f32, acc: __m256) -> __m256 {
+        _mm256_mul_ps(acc, _mm256_set1_ps(scale))
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[inline(always)]
+    unsafe fn accum_neon(
+        &self,
+        _scale: f32,
+        acc: [float32x4_t; 2],
+        slab: *const f32,
+        e: usize,
+    ) -> [float32x4_t; 2] {
+        match ternary_code(self.packed, e) {
+            1 => [
+                vaddq_f32(acc[0], vld1q_f32(slab)),
+                vaddq_f32(acc[1], vld1q_f32(slab.add(4))),
+            ],
+            -1 => [
+                vsubq_f32(acc[0], vld1q_f32(slab)),
+                vsubq_f32(acc[1], vld1q_f32(slab.add(4))),
+            ],
+            _ => acc,
+        }
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[inline(always)]
+    unsafe fn finish_neon(&self, scale: f32, acc: [float32x4_t; 2]) -> [float32x4_t; 2] {
+        [vmulq_n_f32(acc[0], scale), vmulq_n_f32(acc[1], scale)]
     }
 }
 
@@ -1020,13 +1300,35 @@ impl PackedColumns {
     /// column `c` lands at `out[l * out_stride + col_start + c]`, so no
     /// `[batch, width]` intermediate or scatter copy exists.
     ///
-    /// Bit-for-bit equal to [`gemm_into`](PackedColumns::gemm_into) in
-    /// both precision tiers: per (lane, column) the per-entry value read
-    /// (including the i8 dequantization), the accumulation order over
-    /// stored entries, the bias add, and the ReLU are the same f32
-    /// operation sequence.
+    /// On the scalar path, bit-for-bit equal to
+    /// [`gemm_into`](PackedColumns::gemm_into) in every precision tier:
+    /// per (lane, column) the per-entry value read (including the i8
+    /// dequantization), the accumulation order over stored entries, the
+    /// bias add, and the ReLU are the same f32 operation sequence.
+    /// Runs on the process-default kernel path
+    /// ([`default_kernel_path`]); use
+    /// [`gemm_panel_into_path`](PackedColumns::gemm_panel_into_path) to
+    /// pin a path explicitly.
     pub fn gemm_panel_into(
         &self,
+        panel: &[f32],
+        lanes: usize,
+        bias: &[f32],
+        relu: bool,
+        out: &mut [f32],
+        out_stride: usize,
+    ) {
+        self.gemm_panel_into_path(default_kernel_path(), panel, lanes, bias, relu, out, out_stride)
+    }
+
+    /// [`gemm_panel_into`](PackedColumns::gemm_panel_into) on an
+    /// explicit resolved kernel path.  An unsupported SIMD request
+    /// (e.g. `Avx2` on a CPU without AVX2+FMA) degrades to scalar via
+    /// [`ActiveKernelPath::supported_or_scalar`] — never UB.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_panel_into_path(
+        &self,
+        path: ActiveKernelPath,
         panel: &[f32],
         lanes: usize,
         bias: &[f32],
@@ -1041,7 +1343,9 @@ impl PackedColumns {
         assert!(bias.is_empty() || bias.len() >= self.col_end);
         // SAFETY: the asserts above bound every write offset
         // `l * out_stride + col` (l < lanes, col < col_end) inside `out`.
-        unsafe { self.gemm_panel_raw(panel, lanes, bias, relu, out.as_mut_ptr(), out_stride) }
+        unsafe {
+            self.gemm_panel_raw_path(path, panel, lanes, bias, relu, out.as_mut_ptr(), out_stride)
+        }
     }
 
     /// Raw-pointer variant of [`gemm_panel_into`] for concurrent shard
@@ -1069,8 +1373,63 @@ impl PackedColumns {
         out: *mut f32,
         out_stride: usize,
     ) {
+        self.gemm_panel_raw_path(default_kernel_path(), panel, lanes, bias, relu, out, out_stride)
+    }
+
+    /// [`gemm_panel_raw`](PackedColumns::gemm_panel_raw) on an explicit
+    /// resolved kernel path.  The path is sanitized through
+    /// [`ActiveKernelPath::supported_or_scalar`] before dispatch, so a
+    /// SIMD variant the running CPU lacks degrades to scalar instead of
+    /// executing illegal instructions.
+    ///
+    /// # Safety
+    ///
+    /// Same output-pointer contract as
+    /// [`gemm_panel_raw`](PackedColumns::gemm_panel_raw).
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn gemm_panel_raw_path(
+        &self,
+        path: ActiveKernelPath,
+        panel: &[f32],
+        lanes: usize,
+        bias: &[f32],
+        relu: bool,
+        out: *mut f32,
+        out_stride: usize,
+    ) {
         debug_assert!((1..=BATCH_LANES).contains(&lanes));
         debug_assert_eq!(panel.len(), self.rows * BATCH_LANES);
+        match path.supported_or_scalar() {
+            ActiveKernelPath::Scalar => {
+                self.panel_raw_scalar(panel, lanes, bias, relu, out, out_stride)
+            }
+            #[cfg(target_arch = "x86_64")]
+            ActiveKernelPath::Avx2 => {
+                // SAFETY: supported_or_scalar() only returns Avx2 when
+                // runtime detection confirmed AVX2+FMA.
+                self.panel_raw_avx2(panel, lanes, bias, relu, out, out_stride)
+            }
+            #[cfg(target_arch = "aarch64")]
+            ActiveKernelPath::Neon => {
+                self.panel_raw_neon(panel, lanes, bias, relu, out, out_stride)
+            }
+            // The foreign-arch variant on each target (supported_or_scalar
+            // never returns it, but the match must stay exhaustive).
+            _ => self.panel_raw_scalar(panel, lanes, bias, relu, out, out_stride),
+        }
+    }
+
+    /// Scalar plane dispatch: instantiate the tier's reader once and
+    /// run the oracle loop.
+    unsafe fn panel_raw_scalar(
+        &self,
+        panel: &[f32],
+        lanes: usize,
+        bias: &[f32],
+        relu: bool,
+        out: *mut f32,
+        out_stride: usize,
+    ) {
         match &self.plane {
             ValuePlane::F32(values) => {
                 self.panel_raw_with(panel, lanes, bias, relu, out, out_stride, F32Read(values))
@@ -1094,6 +1453,113 @@ impl PackedColumns {
                 I4Read { packed, scales },
             ),
             ValuePlane::Ternary { packed, scales } => self.panel_raw_with(
+                panel,
+                lanes,
+                bias,
+                relu,
+                out,
+                out_stride,
+                TernaryRead { packed, scales },
+            ),
+        }
+    }
+
+    /// AVX2 plane dispatch.
+    ///
+    /// # Safety
+    ///
+    /// AVX2+FMA must be present (guaranteed by the
+    /// `supported_or_scalar` sanitization in the dispatcher) plus the
+    /// `gemm_panel_raw` output-pointer contract.
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn panel_raw_avx2(
+        &self,
+        panel: &[f32],
+        lanes: usize,
+        bias: &[f32],
+        relu: bool,
+        out: *mut f32,
+        out_stride: usize,
+    ) {
+        match &self.plane {
+            ValuePlane::F32(values) => {
+                simd::panel_avx2(self, panel, lanes, bias, relu, out, out_stride, F32Read(values))
+            }
+            ValuePlane::I8 { q, scales } => simd::panel_avx2(
+                self,
+                panel,
+                lanes,
+                bias,
+                relu,
+                out,
+                out_stride,
+                I8Read { q, scales },
+            ),
+            ValuePlane::I4 { packed, scales } => simd::panel_avx2(
+                self,
+                panel,
+                lanes,
+                bias,
+                relu,
+                out,
+                out_stride,
+                I4Read { packed, scales },
+            ),
+            ValuePlane::Ternary { packed, scales } => simd::panel_avx2(
+                self,
+                panel,
+                lanes,
+                bias,
+                relu,
+                out,
+                out_stride,
+                TernaryRead { packed, scales },
+            ),
+        }
+    }
+
+    /// NEON plane dispatch.
+    ///
+    /// # Safety
+    ///
+    /// The `gemm_panel_raw` output-pointer contract (NEON is aarch64
+    /// baseline).
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn panel_raw_neon(
+        &self,
+        panel: &[f32],
+        lanes: usize,
+        bias: &[f32],
+        relu: bool,
+        out: *mut f32,
+        out_stride: usize,
+    ) {
+        match &self.plane {
+            ValuePlane::F32(values) => {
+                simd::panel_neon(self, panel, lanes, bias, relu, out, out_stride, F32Read(values))
+            }
+            ValuePlane::I8 { q, scales } => simd::panel_neon(
+                self,
+                panel,
+                lanes,
+                bias,
+                relu,
+                out,
+                out_stride,
+                I8Read { q, scales },
+            ),
+            ValuePlane::I4 { packed, scales } => simd::panel_neon(
+                self,
+                panel,
+                lanes,
+                bias,
+                relu,
+                out,
+                out_stride,
+                I4Read { packed, scales },
+            ),
+            ValuePlane::Ternary { packed, scales } => simd::panel_neon(
+                self,
                 panel,
                 lanes,
                 bias,
@@ -1336,8 +1802,12 @@ mod tests {
 
     /// Run the blocked kernel over a full `[batch, cols]` output the way
     /// the serving engine does: transpose once, then every shard writes
-    /// its columns of every panel in place.
+    /// its columns of every panel in place — on an explicitly pinned
+    /// kernel path (the bitwise-oracle tests pin `Scalar`; the SIMD
+    /// parity tests pin `Avx2`/`Neon` via `ForceSimd` resolution).
+    #[allow(clippy::too_many_arguments)]
     fn blocked_forward(
+        path: ActiveKernelPath,
         shards: &[PackedColumns],
         x: &[f32],
         batch: usize,
@@ -1349,13 +1819,12 @@ mod tests {
         let mut panels = Vec::new();
         transpose_panels(x, batch, rows, &mut panels);
         let mut out = vec![0.0f32; batch * cols];
-        let n_panels = (batch + BATCH_LANES - 1) / BATCH_LANES;
         for shard in shards {
-            for p in 0..n_panels {
+            for p in 0..n_panels(batch) {
                 let lanes = (batch - p * BATCH_LANES).min(BATCH_LANES);
                 let panel = &panels[p * rows * BATCH_LANES..][..rows * BATCH_LANES];
                 let dst = &mut out[p * BATCH_LANES * cols..];
-                shard.gemm_panel_into(panel, lanes, bias, relu, dst, cols);
+                shard.gemm_panel_into_path(path, panel, lanes, bias, relu, dst, cols);
             }
         }
         out
@@ -1389,7 +1858,16 @@ mod tests {
                                 .copy_from_slice(&buf[b * shard.width()..(b + 1) * shard.width()]);
                         }
                     }
-                    let got = blocked_forward(&shards, &x, batch, rows, cols, bias, relu);
+                    let got = blocked_forward(
+                        ActiveKernelPath::Scalar,
+                        &shards,
+                        &x,
+                        batch,
+                        rows,
+                        cols,
+                        bias,
+                        relu,
+                    );
                     for (i, (&u, &v)) in got.iter().zip(&expect).enumerate() {
                         assert_eq!(
                             u.to_bits(),
@@ -1421,7 +1899,16 @@ mod tests {
                     .copy_from_slice(&buf[b * shard.width()..(b + 1) * shard.width()]);
             }
         }
-        let got = blocked_forward(&shards, &x, batch, rows, cols, &[], false);
+        let got = blocked_forward(
+            ActiveKernelPath::Scalar,
+            &shards,
+            &x,
+            batch,
+            rows,
+            cols,
+            &[],
+            false,
+        );
         for (&u, &v) in got.iter().zip(&expect) {
             assert_eq!(u.to_bits(), v.to_bits());
         }
@@ -1517,7 +2004,16 @@ mod tests {
                             .copy_from_slice(&buf[b * shard.width()..(b + 1) * shard.width()]);
                     }
                 }
-                let got = blocked_forward(&shards, &x, batch, rows, cols, &bias, true);
+                let got = blocked_forward(
+                    ActiveKernelPath::Scalar,
+                    &shards,
+                    &x,
+                    batch,
+                    rows,
+                    cols,
+                    &bias,
+                    true,
+                );
                 for (i, (&u, &v)) in got.iter().zip(&expect).enumerate() {
                     assert_eq!(u.to_bits(), v.to_bits(), "batch {batch} shards {n_shards} out {i}");
                 }
@@ -1721,7 +2217,16 @@ mod tests {
                                 );
                         }
                     }
-                    let got = blocked_forward(&shards, &x, batch, rows, cols, &bias, true);
+                    let got = blocked_forward(
+                        ActiveKernelPath::Scalar,
+                        &shards,
+                        &x,
+                        batch,
+                        rows,
+                        cols,
+                        &bias,
+                        true,
+                    );
                     for (i, (&u, &v)) in got.iter().zip(&expect).enumerate() {
                         assert_eq!(
                             u.to_bits(),
@@ -1837,6 +2342,255 @@ mod tests {
                 let direct = PackedColumns::from_mask(&Mask::dense(rows, cols), lo, hi, &w)
                     .to_precision(tier);
                 assert_eq!(rebuilt, direct, "{tier} shard [{lo},{hi})");
+            }
+        }
+    }
+
+    // -- kernel path (SIMD) tests -----------------------------------------
+
+    /// Per-tier SIMD-vs-scalar tolerance budget, normalized as
+    /// `|Δ| / max(1, |y_scalar|)` — derived (with >= 6x headroom) by
+    /// `python/tests/test_simd_pins.py`, which mirrors the SIMD path's
+    /// reassociated op order (FMA + factored column scale) in f64-
+    /// emulated f32 FMA.  Ternary's budget is exactly 0: its SIMD body
+    /// performs the identical op order and must be bitwise.
+    fn simd_budget(tier: Precision) -> f32 {
+        match tier {
+            Precision::F32 | Precision::I8 | Precision::I4 => 2e-5,
+            Precision::Ternary => 0.0,
+        }
+    }
+
+    /// The path the SIMD tests exercise.  On hardware with no vector
+    /// extension `ForceSimd` resolves to scalar and these tests
+    /// degenerate to scalar-vs-scalar (trivially green) — the real
+    /// coverage runs on the AVX2/NEON CI runners.
+    fn simd_path() -> ActiveKernelPath {
+        resolve_kernel_path(KernelPath::ForceSimd)
+    }
+
+    fn tier_shards(
+        rows: usize,
+        cols: usize,
+        n_shards: usize,
+        seq: &[(usize, usize)],
+        w: &[f32],
+        tier: Precision,
+    ) -> Vec<PackedColumns> {
+        (0..n_shards)
+            .map(|i| {
+                let s = PackedColumns::from_sequence(
+                    rows,
+                    cols,
+                    cols * i / n_shards,
+                    cols * (i + 1) / n_shards,
+                    seq,
+                    w,
+                );
+                if tier == Precision::F32 {
+                    s
+                } else {
+                    s.to_precision(tier)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn simd_path_within_pinned_tolerance_of_scalar_per_tier() {
+        let (rows, cols) = (40, 30);
+        let cfg = PrsMaskConfig::auto(rows, cols, 5, 9);
+        let seq = prs_keep_sequence(rows, cols, 0.7, cfg);
+        let w = weights(rows * cols, 71);
+        let bias = weights(cols, 72);
+        let path = simd_path();
+        for tier in [
+            Precision::F32,
+            Precision::I8,
+            Precision::I4,
+            Precision::Ternary,
+        ] {
+            let budget = simd_budget(tier);
+            for batch in [1usize, 3, 8, 33] {
+                let x = weights(batch * rows, 73 + batch as u64);
+                for n_shards in [1usize, 3, 7] {
+                    let shards = tier_shards(rows, cols, n_shards, &seq, &w, tier);
+                    let scalar = blocked_forward(
+                        ActiveKernelPath::Scalar,
+                        &shards,
+                        &x,
+                        batch,
+                        rows,
+                        cols,
+                        &bias,
+                        true,
+                    );
+                    let simd =
+                        blocked_forward(path, &shards, &x, batch, rows, cols, &bias, true);
+                    for (i, (&u, &v)) in simd.iter().zip(&scalar).enumerate() {
+                        assert!(
+                            (u - v).abs() <= budget * v.abs().max(1.0),
+                            "{tier} {path:?} batch {batch} shards {n_shards} out {i}: \
+                             {u} vs scalar {v}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ternary_simd_is_bitwise_equal_to_scalar() {
+        // Ternary's SIMD body is add/sub + one factored multiply — the
+        // exact scalar op order — so unlike the FMA tiers it gets a
+        // to_bits pin, not a tolerance.
+        let (rows, cols) = (40, 30);
+        let cfg = PrsMaskConfig::auto(rows, cols, 5, 9);
+        let seq = prs_keep_sequence(rows, cols, 0.7, cfg);
+        let w = weights(rows * cols, 75);
+        let bias = weights(cols, 76);
+        let path = simd_path();
+        for batch in [1usize, 3, 8, 33] {
+            let x = weights(batch * rows, 77 + batch as u64);
+            let shards = tier_shards(rows, cols, 3, &seq, &w, Precision::Ternary);
+            for (bias, relu) in [(&bias[..], true), (&[][..], false)] {
+                let scalar = blocked_forward(
+                    ActiveKernelPath::Scalar,
+                    &shards,
+                    &x,
+                    batch,
+                    rows,
+                    cols,
+                    bias,
+                    relu,
+                );
+                let simd = blocked_forward(path, &shards, &x, batch, rows, cols, bias, relu);
+                for (i, (&u, &v)) in simd.iter().zip(&scalar).enumerate() {
+                    assert_eq!(
+                        u.to_bits(),
+                        v.to_bits(),
+                        "ternary {path:?} batch {batch} relu {relu} out {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_is_bitwise_deterministic_across_shard_and_batch_composition() {
+        // The SIMD path's own determinism contract: for a fixed model +
+        // input, bits do not depend on shard count or on which panel/
+        // lane an example lands in (per-lane op order is composition-
+        // independent by construction, same as scalar).
+        let (rows, cols) = (40, 30);
+        let cfg = PrsMaskConfig::auto(rows, cols, 5, 9);
+        let seq = prs_keep_sequence(rows, cols, 0.7, cfg);
+        let w = weights(rows * cols, 78);
+        let bias = weights(cols, 79);
+        let path = simd_path();
+        for tier in [
+            Precision::F32,
+            Precision::I8,
+            Precision::I4,
+            Precision::Ternary,
+        ] {
+            let batch = 33usize; // panels of 8,8,8,8 + a 1-lane tail
+            let x = weights(batch * rows, 80);
+            let reference = {
+                let shards = tier_shards(rows, cols, 1, &seq, &w, tier);
+                blocked_forward(path, &shards, &x, batch, rows, cols, &bias, true)
+            };
+            for n_shards in [3usize, 7] {
+                let shards = tier_shards(rows, cols, n_shards, &seq, &w, tier);
+                let got = blocked_forward(path, &shards, &x, batch, rows, cols, &bias, true);
+                for (i, (&u, &v)) in got.iter().zip(&reference).enumerate() {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{tier} shards {n_shards} out {i}");
+                }
+            }
+            // Batch composition: each example served alone (batch 1 =
+            // one partial panel) reproduces its row of the batch-33 run.
+            let shards = tier_shards(rows, cols, 3, &seq, &w, tier);
+            for b in 0..batch {
+                let row = &x[b * rows..(b + 1) * rows];
+                let alone = blocked_forward(path, &shards, row, 1, rows, cols, &bias, true);
+                for (i, (&u, &v)) in
+                    alone.iter().zip(&reference[b * cols..(b + 1) * cols]).enumerate()
+                {
+                    assert_eq!(u.to_bits(), v.to_bits(), "{tier} row {b} out {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_handles_tail_lanes_and_odd_nnz_packed_tiers() {
+        // lanes < 8 with odd per-column entry counts: a dense 13-row
+        // mask gives every column 13 entries — an odd i4 nibble count
+        // (tail nibble in the last byte) and a partial ternary 2-bit
+        // field — and batches 1/3/5 keep every panel partial.
+        let (rows, cols) = (13, 11);
+        let w = weights(rows * cols, 83);
+        let bias = weights(cols, 84);
+        let path = simd_path();
+        for tier in [Precision::I4, Precision::Ternary] {
+            let shards: Vec<PackedColumns> = vec![
+                PackedColumns::from_mask(&Mask::dense(rows, cols), 0, 5, &w).to_precision(tier),
+                PackedColumns::from_mask(&Mask::dense(rows, cols), 5, cols, &w)
+                    .to_precision(tier),
+            ];
+            let budget = simd_budget(tier);
+            for batch in [1usize, 3, 5] {
+                let x = weights(batch * rows, 85 + batch as u64);
+                let scalar = blocked_forward(
+                    ActiveKernelPath::Scalar,
+                    &shards,
+                    &x,
+                    batch,
+                    rows,
+                    cols,
+                    &bias,
+                    true,
+                );
+                let simd = blocked_forward(path, &shards, &x, batch, rows, cols, &bias, true);
+                for (i, (&u, &v)) in simd.iter().zip(&scalar).enumerate() {
+                    assert!(
+                        (u - v).abs() <= budget * v.abs().max(1.0),
+                        "{tier} batch {batch} out {i}: {u} vs {v}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn n_panels_and_tail_panel_zero_fill_property() {
+        // The dedup'd panel-count helper and the zero-fill contract it
+        // documents, as a property over batch sizes — including buffer
+        // reuse (shrinking from a larger batch must not leak stale
+        // lanes into the new tail panel).
+        let rows = 7usize;
+        let mut panels = Vec::new();
+        // Poison the buffer via a large batch of nonzero activations.
+        let big: Vec<f32> = (0..40 * rows).map(|i| 1.0 + i as f32).collect();
+        transpose_panels(&big, 40, rows, &mut panels);
+        for batch in 1..=35usize {
+            assert_eq!(n_panels(batch), batch.div_ceil(BATCH_LANES), "batch {batch}");
+            let x: Vec<f32> = (0..batch * rows).map(|i| 1.0 + i as f32).collect();
+            transpose_panels(&x, batch, rows, &mut panels);
+            assert_eq!(panels.len(), n_panels(batch) * rows * BATCH_LANES);
+            for p in 0..n_panels(batch) {
+                let lanes = (batch - p * BATCH_LANES).min(BATCH_LANES);
+                let slab = &panels[p * rows * BATCH_LANES..(p + 1) * rows * BATCH_LANES];
+                for r in 0..rows {
+                    for l in 0..BATCH_LANES {
+                        let got = slab[r * BATCH_LANES + l];
+                        if l < lanes {
+                            assert_eq!(got, x[(p * BATCH_LANES + l) * rows + r]);
+                        } else {
+                            assert_eq!(got, 0.0, "batch {batch} panel {p} lane {l} row {r}");
+                        }
+                    }
+                }
             }
         }
     }

@@ -1,0 +1,316 @@
+//! Kernel-path selection + the explicit-SIMD blocked-kernel drivers.
+//!
+//! The blocked kernel's `[f32; BATCH_LANES]` accumulator is exactly one
+//! AVX2 `__m256` (or two NEON `float32x4_t`), so the SIMD drivers here
+//! are the scalar panel loop with the lane array lifted onto
+//! `std::arch` registers.  Which body runs is decided **once per shard
+//! call** (never inside a loop):
+//!
+//! * [`detected_simd`] probes the CPU once per process
+//!   (`is_x86_feature_detected!("avx2")` + `"fma"` on x86_64; NEON is
+//!   baseline on aarch64) and caches the answer in a `OnceLock`.
+//! * `LFSR_KERNEL=scalar|simd|auto` overrides the *process default*
+//!   ([`default_kernel_path`]) — the knob CI uses to force the scalar
+//!   oracle on SIMD runners.  Unknown values fall back to `auto`.
+//! * [`KernelPath`] is the request (`Auto`/`Scalar`/`ForceSimd`);
+//!   [`ActiveKernelPath`] is the resolved answer (`Scalar`/`Avx2`/
+//!   `Neon`) that sessions pin per instance and observability reports.
+//!
+//! Determinism per path (see the parent mod docs for the full
+//! contract): scalar stays the bitwise oracle; a resolved SIMD path is
+//! itself bitwise deterministic across worker/shard/batch composition
+//! (same per-lane op order by construction) but differs from scalar by
+//! FMA/factored-scale rounding within the per-tier budgets pinned by
+//! `python/tests/test_simd_pins.py`, except ternary, whose SIMD body
+//! performs the identical add/sub sequence and is bitwise equal.
+
+use std::sync::OnceLock;
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use super::{PackedColumns, ValueRead, BATCH_LANES};
+
+/// A *requested* kernel path: what a caller (or the `LFSR_KERNEL` env
+/// knob) asks for, before runtime feature detection has its say.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Use SIMD when the CPU supports it, scalar otherwise (the
+    /// default).  Today this resolves exactly like [`ForceSimd`]
+    /// because SIMD is preferred whenever present; the variants stay
+    /// distinct so intent is explicit and a future size-based
+    /// heuristic can diverge.
+    ///
+    /// [`ForceSimd`]: KernelPath::ForceSimd
+    Auto,
+    /// Always run the scalar oracle loop, even when SIMD is available.
+    Scalar,
+    /// Run the SIMD path if the CPU has one; falls back to scalar on
+    /// hardware with no supported vector extension (so forcing SIMD is
+    /// always safe, never UB).
+    ForceSimd,
+}
+
+impl KernelPath {
+    /// Parse an `LFSR_KERNEL` value.  `scalar` forces the oracle,
+    /// `simd`/`force`/`force-simd` force the vector path, `auto`/empty
+    /// is the default; anything else is `None` (treated as `Auto`).
+    pub fn parse(s: &str) -> Option<KernelPath> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelPath::Scalar),
+            "simd" | "force" | "force-simd" | "force_simd" => Some(KernelPath::ForceSimd),
+            "auto" | "" => Some(KernelPath::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// A *resolved* kernel path: which loop body actually runs.  This is
+/// what `InferenceSession` pins per instance, what the `kernel_path`
+/// gauge/`ModelInfo` report, and what the `_path` kernel entry points
+/// take.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActiveKernelPath {
+    /// The bitwise-pinned scalar oracle (`panel_raw_with`).
+    Scalar,
+    /// AVX2 + FMA, one `__m256` accumulator (x86_64 only).
+    Avx2,
+    /// NEON, two `float32x4_t` accumulators (aarch64 only).
+    Neon,
+}
+
+impl ActiveKernelPath {
+    /// Stable lowercase name used by metrics labels, `repro stats`, and
+    /// `ModelInfo`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ActiveKernelPath::Scalar => "scalar",
+            ActiveKernelPath::Avx2 => "avx2",
+            ActiveKernelPath::Neon => "neon",
+        }
+    }
+
+    /// Downgrade to scalar unless this exact path is what the running
+    /// CPU supports.  The kernels sanitize through this, so handing a
+    /// deserialized/hardcoded `Avx2` to a non-AVX2 machine degrades
+    /// safely instead of hitting an illegal instruction.
+    pub fn supported_or_scalar(self) -> ActiveKernelPath {
+        match self {
+            ActiveKernelPath::Scalar => ActiveKernelPath::Scalar,
+            p if detected_simd() == Some(p) => p,
+            _ => ActiveKernelPath::Scalar,
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> Option<ActiveKernelPath> {
+    // FMA is required, not just AVX2: the f32/i8/i4 inner loops lean on
+    // `_mm256_fmadd_ps`, and the parity budgets were derived for fused
+    // rounding.  (Every AVX2 CPU to date also has FMA, but the contract
+    // should not depend on that trivia.)
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        Some(ActiveKernelPath::Avx2)
+    } else {
+        None
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect() -> Option<ActiveKernelPath> {
+    // NEON is part of the aarch64 baseline; no runtime probe needed.
+    Some(ActiveKernelPath::Neon)
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> Option<ActiveKernelPath> {
+    None
+}
+
+/// The SIMD path this CPU supports, if any — probed once per process
+/// and cached.
+pub fn detected_simd() -> Option<ActiveKernelPath> {
+    static DETECTED: OnceLock<Option<ActiveKernelPath>> = OnceLock::new();
+    *DETECTED.get_or_init(detect)
+}
+
+fn env_kernel_path() -> KernelPath {
+    static ENV: OnceLock<KernelPath> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("LFSR_KERNEL") {
+        Ok(s) => KernelPath::parse(&s).unwrap_or(KernelPath::Auto),
+        Err(_) => KernelPath::Auto,
+    })
+}
+
+/// Resolve a request against what the CPU actually supports.  Explicit
+/// requests win over the `LFSR_KERNEL` env knob (which only moves the
+/// process default, [`default_kernel_path`]).
+pub fn resolve_kernel_path(req: KernelPath) -> ActiveKernelPath {
+    match req {
+        KernelPath::Scalar => ActiveKernelPath::Scalar,
+        KernelPath::Auto | KernelPath::ForceSimd => {
+            detected_simd().unwrap_or(ActiveKernelPath::Scalar)
+        }
+    }
+}
+
+/// The process-default resolved path: `LFSR_KERNEL` if set (read once),
+/// else auto-detection.  New sessions start here; the legacy
+/// (path-less) kernel entry points run here.
+pub fn default_kernel_path() -> ActiveKernelPath {
+    static DEFAULT: OnceLock<ActiveKernelPath> = OnceLock::new();
+    *DEFAULT.get_or_init(|| resolve_kernel_path(env_kernel_path()))
+}
+
+/// AVX2+FMA panel driver: the scalar `panel_raw_with` loop with the
+/// `[f32; 8]` accumulator lifted onto one `__m256`.  Per (lane, column)
+/// the op order is: fused multiply-add per stored entry (`fmadd` — one
+/// rounding where scalar takes two), the tier's `finish_avx2` (the
+/// factored column scale for i8/i4/ternary), one bias add (skipped, not
+/// added as 0.0, when absent), then ReLU as `max_ps(acc, 0)` — which
+/// matches `f32::max(NaN, 0.0) == 0.0` because `maxps` returns the
+/// second operand on NaN.  Tail lanes (`lanes < 8`) are computed (their
+/// panel lanes are zero) but never stored.
+///
+/// # Safety
+///
+/// Caller must guarantee AVX2+FMA are available (dispatch goes through
+/// [`ActiveKernelPath::supported_or_scalar`]) plus the
+/// `gemm_panel_raw` output-pointer contract.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn panel_avx2<R: ValueRead>(
+    shard: &PackedColumns,
+    panel: &[f32],
+    lanes: usize,
+    bias: &[f32],
+    relu: bool,
+    out: *mut f32,
+    out_stride: usize,
+    reader: R,
+) {
+    use core::arch::x86_64::*;
+    let width = shard.width();
+    for local in 0..width {
+        let col = reader.col(local);
+        let (lo, hi) = (
+            shard.col_ptr[local] as usize,
+            shard.col_ptr[local + 1] as usize,
+        );
+        let mut acc = _mm256_setzero_ps();
+        for e in lo..hi {
+            let slab = panel.as_ptr().add(shard.row_idx[e] as usize * BATCH_LANES);
+            acc = reader.accum_avx2(col, acc, slab, e);
+        }
+        let colid = shard.col_start + local;
+        let mut y = reader.finish_avx2(col, acc);
+        if !bias.is_empty() {
+            y = _mm256_add_ps(y, _mm256_set1_ps(bias[colid]));
+        }
+        if relu {
+            y = _mm256_max_ps(y, _mm256_setzero_ps());
+        }
+        let mut tmp = [0.0f32; BATCH_LANES];
+        _mm256_storeu_ps(tmp.as_mut_ptr(), y);
+        for (l, &v) in tmp.iter().take(lanes).enumerate() {
+            out.add(l * out_stride + colid).write(v);
+        }
+    }
+}
+
+/// NEON panel driver: two `float32x4_t` accumulators covering the 8
+/// batch lanes.  Same per-path op-order contract as [`panel_avx2`]
+/// (`vfmaq` fused accumulate, factored finish, bias skipped when
+/// absent); ReLU uses `vmaxnmq_f32` — the *maxNum* form — because plain
+/// `vmaxq_f32` propagates NaN where `f32::max(NaN, 0.0)` returns 0.0.
+///
+/// # Safety
+///
+/// Same output-pointer contract as `gemm_panel_raw` (NEON itself is
+/// aarch64 baseline, so no feature precondition).
+#[cfg(target_arch = "aarch64")]
+pub(super) unsafe fn panel_neon<R: ValueRead>(
+    shard: &PackedColumns,
+    panel: &[f32],
+    lanes: usize,
+    bias: &[f32],
+    relu: bool,
+    out: *mut f32,
+    out_stride: usize,
+    reader: R,
+) {
+    use core::arch::aarch64::*;
+    let width = shard.width();
+    for local in 0..width {
+        let col = reader.col(local);
+        let (lo, hi) = (
+            shard.col_ptr[local] as usize,
+            shard.col_ptr[local + 1] as usize,
+        );
+        let mut acc = [vdupq_n_f32(0.0); 2];
+        for e in lo..hi {
+            let slab = panel.as_ptr().add(shard.row_idx[e] as usize * BATCH_LANES);
+            acc = reader.accum_neon(col, acc, slab, e);
+        }
+        let colid = shard.col_start + local;
+        let mut y = reader.finish_neon(col, acc);
+        if !bias.is_empty() {
+            let b = vdupq_n_f32(bias[colid]);
+            y = [vaddq_f32(y[0], b), vaddq_f32(y[1], b)];
+        }
+        if relu {
+            let z = vdupq_n_f32(0.0);
+            y = [vmaxnmq_f32(y[0], z), vmaxnmq_f32(y[1], z)];
+        }
+        let mut tmp = [0.0f32; BATCH_LANES];
+        vst1q_f32(tmp.as_mut_ptr(), y[0]);
+        vst1q_f32(tmp.as_mut_ptr().add(4), y[1]);
+        for (l, &v) in tmp.iter().take(lanes).enumerate() {
+            out.add(l * out_stride + colid).write(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_path_parse_covers_knob_spellings() {
+        assert_eq!(KernelPath::parse("scalar"), Some(KernelPath::Scalar));
+        assert_eq!(KernelPath::parse(" SCALAR "), Some(KernelPath::Scalar));
+        assert_eq!(KernelPath::parse("simd"), Some(KernelPath::ForceSimd));
+        assert_eq!(KernelPath::parse("force"), Some(KernelPath::ForceSimd));
+        assert_eq!(KernelPath::parse("force-simd"), Some(KernelPath::ForceSimd));
+        assert_eq!(KernelPath::parse("auto"), Some(KernelPath::Auto));
+        assert_eq!(KernelPath::parse(""), Some(KernelPath::Auto));
+        assert_eq!(KernelPath::parse("avx512"), None);
+    }
+
+    #[test]
+    fn resolution_is_consistent_with_detection() {
+        // Scalar always resolves to scalar; Auto/ForceSimd resolve to
+        // the detected path (or scalar when the CPU has none).
+        assert_eq!(
+            resolve_kernel_path(KernelPath::Scalar),
+            ActiveKernelPath::Scalar
+        );
+        let simd = detected_simd();
+        let expect = simd.unwrap_or(ActiveKernelPath::Scalar);
+        assert_eq!(resolve_kernel_path(KernelPath::Auto), expect);
+        assert_eq!(resolve_kernel_path(KernelPath::ForceSimd), expect);
+        // The detected path reports itself supported; the other SIMD
+        // flavour (or any SIMD at all on plain hardware) downgrades.
+        assert_eq!(expect.supported_or_scalar(), expect);
+        for p in [ActiveKernelPath::Avx2, ActiveKernelPath::Neon] {
+            if Some(p) != simd {
+                assert_eq!(p.supported_or_scalar(), ActiveKernelPath::Scalar);
+            }
+        }
+    }
+
+    #[test]
+    fn path_names_are_stable() {
+        assert_eq!(ActiveKernelPath::Scalar.as_str(), "scalar");
+        assert_eq!(ActiveKernelPath::Avx2.as_str(), "avx2");
+        assert_eq!(ActiveKernelPath::Neon.as_str(), "neon");
+    }
+}

@@ -65,7 +65,7 @@ use crate::serve::{
     Batcher, BatcherMetrics, CompiledModel, InferenceSession, LayerKindCounts, PushError,
     ServeStats, WorkerPool,
 };
-use crate::sparse::Precision;
+use crate::sparse::{default_kernel_path, ActiveKernelPath, Precision};
 
 use super::artifact::{load_model, LoadOptions};
 use super::format::StoreError;
@@ -265,6 +265,9 @@ pub struct ModelInfo {
     /// False while the tenant is panic-quarantined behind its breaker
     /// (mirrors the `serve_tenant_healthy` gauge).
     pub healthy: bool,
+    /// Resolved kernel path this tenant's session executes on
+    /// (scalar / avx2 / neon) — mirrors the `kernel_path` gauge.
+    pub kernel_path: ActiveKernelPath,
     pub stats: ServeStats,
 }
 
@@ -291,6 +294,12 @@ impl ModelRegistry {
         let metrics = MetricsRegistry::new();
         pool.metrics().register_into(&metrics);
         let alloc_gauge = metrics.gauge("alloc_allocations_total", labels(&[]));
+        // One process-wide info gauge (no model label — sessions inherit
+        // the process default, so it survives tenant churn): which loop
+        // body this fleet member executes, as a `path` label.
+        metrics
+            .gauge("kernel_path", labels(&[("path", default_kernel_path().as_str())]))
+            .set(1);
         ModelRegistry { pool, models: RwLock::new(BTreeMap::new()), metrics, alloc_gauge }
     }
 
@@ -585,6 +594,7 @@ impl ModelRegistry {
                     kinds: m.layer_kind_counts(),
                     pending,
                     healthy: e.breaker.is_healthy(),
+                    kernel_path: e.session.kernel_path(),
                     stats,
                 }
             })

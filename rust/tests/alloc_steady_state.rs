@@ -18,7 +18,7 @@
 
 use lfsr_prune::obs::{total_allocations, CountingAllocator};
 use lfsr_prune::serve::{synthetic_lenet300, synthetic_vgg16_scaled, Batcher, InferenceSession};
-use lfsr_prune::sparse::Precision;
+use lfsr_prune::sparse::{KernelPath, Precision};
 
 #[global_allocator]
 static COUNTER: CountingAllocator = CountingAllocator;
@@ -94,6 +94,22 @@ fn steady_state_infer_allocates_nothing() {
         let n = allocs_after_warmup(&conv_pooled, 9, 5);
         assert_eq!(n, 0, "pooled {tier} conv steady-state infer allocated {n} times");
     }
+
+    // The SIMD kernel path shares the arena and the stack-only readers —
+    // nothing about vector registers touches the heap — so a session
+    // forced onto SIMD must pin *exactly* 0 steady-state allocations
+    // too, inline and pooled, f32 and a packed sub-byte tier.  (On a
+    // host with no SIMD path ForceSimd resolves to scalar and this
+    // re-checks the scalar pin — never skips.)
+    let mut simd_inline = instrumented(synthetic_lenet300(0.95, 4, 1), 1);
+    simd_inline.set_kernel_path(KernelPath::ForceSimd);
+    let n = allocs_after_warmup(&simd_inline, batch, 10);
+    assert_eq!(n, 0, "inline SIMD steady-state infer allocated {n} times");
+    let mut simd_pooled =
+        instrumented(synthetic_lenet300(0.95, 8, 2).to_precision(Precision::I4), 4);
+    simd_pooled.set_kernel_path(KernelPath::ForceSimd);
+    let n = allocs_after_warmup(&simd_pooled, batch, 10);
+    assert_eq!(n, 0, "pooled i4 SIMD steady-state infer allocated {n} times");
 
     // The classification path (infer + argmax into warm buffers) is
     // allocation-free too.

@@ -4,11 +4,18 @@
 //! path before this kernel landed) across batch sizes, shard counts,
 //! worker counts, and every mask family — plus arena-reuse and NaN
 //! argmax behaviour.
+//!
+//! Kernel paths: the scalar-oracle pins run on a session pinned to
+//! `KernelPath::Scalar`; the SIMD path gets its own parity matrix
+//! (SIMD ≡ SIMD bitwise across worker × shard × batch × tier
+//! composition, SIMD vs scalar within the per-tier budgets
+//! `python/tests/test_simd_pins.py` derives, ternary bitwise).
 
 use lfsr_prune::data::rng::Pcg32;
 use lfsr_prune::mask::prs::PrsMaskConfig;
 use lfsr_prune::mask::{magnitude_mask, random_mask};
 use lfsr_prune::serve::{argmax_total, CompiledLayer, CompiledModel, InferenceSession};
+use lfsr_prune::sparse::{KernelPath, Precision};
 
 const D0: usize = 37;
 const D1: usize = 29;
@@ -75,7 +82,10 @@ fn blocked_session_bitwise_equals_scalar_reference() {
         for shards in [1usize, 4, 7] {
             let model = model_for(method, shards);
             for workers in [1usize, 4] {
-                let session = InferenceSession::new(model_for(method, shards), workers);
+                let mut session = InferenceSession::new(model_for(method, shards), workers);
+                // The scalar reference is the scalar op order — pin the
+                // session so the bitwise compare survives a SIMD default.
+                session.set_kernel_path(KernelPath::Scalar);
                 for batch in [1usize, 3, 8, 33] {
                     let x = weights(batch * D0, 200 + batch as u64);
                     let expect = scalar_forward(&model, &x, batch);
@@ -87,6 +97,81 @@ fn blocked_session_bitwise_equals_scalar_reference() {
                             v.to_bits(),
                             "{method} shards={shards} workers={workers} batch={batch} out {i}"
                         );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-tier SIMD↔scalar budget, matching `python/tests/test_simd_pins.py`:
+/// measured worst-case drift is ~3e-6 (f32 ~7.5e-7); 2e-5 gives >= 6x
+/// headroom. Ternary SIMD shares the scalar op order exactly, so its
+/// budget is zero (bitwise).
+fn simd_budget(tier: Precision) -> f32 {
+    match tier {
+        Precision::Ternary => 0.0,
+        _ => 2e-5,
+    }
+}
+
+#[test]
+fn simd_session_parity_matrix_across_worker_shard_batch_tier() {
+    // If the host has no SIMD path, ForceSimd resolves to scalar and this
+    // degenerates into a second scalar-vs-scalar bitwise run — still a
+    // valid (if redundant) check, so no skip logic is needed.
+    for tier in [
+        Precision::F32,
+        Precision::I8,
+        Precision::I4,
+        Precision::Ternary,
+    ] {
+        let budget = simd_budget(tier);
+        for shards in [1usize, 3, 7] {
+            let model = model_for("prs", shards).to_precision(tier);
+            let mut scalar_session = InferenceSession::new(model.clone(), 1);
+            scalar_session.set_kernel_path(KernelPath::Scalar);
+            // batch=1 single-worker SIMD run is the within-path oracle:
+            // every other composition must reproduce it bit-for-bit.
+            let mut oracle = InferenceSession::new(model.clone(), 1);
+            oracle.set_kernel_path(KernelPath::ForceSimd);
+            for workers in [1usize, 4] {
+                let mut session = InferenceSession::new(model.clone(), workers);
+                session.set_kernel_path(KernelPath::ForceSimd);
+                for batch in [1usize, 3, 8, 33] {
+                    let x = weights(batch * D0, 400 + batch as u64);
+                    let simd = session.infer_batch(&x, batch);
+                    let scalar = scalar_session.infer_batch(&x, batch);
+                    let ctx = format!("tier={tier:?} shards={shards} workers={workers} batch={batch}");
+                    // (1) SIMD ≡ SIMD bitwise across worker/batch composition:
+                    // each row must equal the same row inferred alone on the
+                    // single-worker oracle session.
+                    for b in 0..batch {
+                        let row = &x[b * D0..(b + 1) * D0];
+                        let alone = oracle.infer_batch(row, 1);
+                        for (i, (&u, &v)) in
+                            simd[b * D2..(b + 1) * D2].iter().zip(&alone).enumerate()
+                        {
+                            assert_eq!(
+                                u.to_bits(),
+                                v.to_bits(),
+                                "{ctx}: SIMD row {b} out {i} diverged from batch-1 oracle"
+                            );
+                        }
+                    }
+                    // (2) SIMD vs scalar within the pinned per-tier budget
+                    // (bitwise for ternary, where budget == 0).
+                    for (i, (&u, &v)) in simd.iter().zip(&scalar).enumerate() {
+                        if budget == 0.0 {
+                            assert_eq!(u.to_bits(), v.to_bits(), "{ctx}: out {i} (ternary)");
+                        } else {
+                            let err = (u - v).abs();
+                            let tol = budget * v.abs().max(1.0);
+                            assert!(
+                                err <= tol,
+                                "{ctx}: out {i} |{u} - {v}| = {err} > {tol}"
+                            );
+                        }
                     }
                 }
             }

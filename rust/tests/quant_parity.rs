@@ -29,7 +29,7 @@ use lfsr_prune::mask::{magnitude_mask, random_mask};
 use lfsr_prune::serve::{
     argmax_total, synthetic_lenet300, CompiledLayer, CompiledModel, InferenceSession,
 };
-use lfsr_prune::sparse::Precision;
+use lfsr_prune::sparse::{KernelPath, Precision};
 
 const D0: usize = 37;
 const D1: usize = 29;
@@ -103,8 +103,12 @@ fn quantized_session_bitwise_equals_scalar_reference_any_composition() {
             for shards in [1usize, 3, 7] {
                 let model = quantized_model_for(method, shards, tier);
                 for workers in [1usize, 4] {
-                    let session =
+                    let mut session =
                         InferenceSession::new(quantized_model_for(method, shards, tier), workers);
+                    // `gemm_into` is the scalar op order — pin the session
+                    // so the bitwise compare survives a SIMD default
+                    // (SIMD-vs-scalar parity lives in kernel_parity.rs).
+                    session.set_kernel_path(KernelPath::Scalar);
                     for batch in [1usize, 3, 8, 33] {
                         let x = weights(batch * D0, 200 + batch as u64);
                         let expect = scalar_forward(&model, &x, batch);
@@ -226,9 +230,17 @@ fn quantization_is_idempotent_and_dequantization_is_faithful() {
         let qq = q.to_precision(tier);
         let back = q.to_precision(Precision::F32);
         assert_eq!(back.uniform_precision(), Some(Precision::F32));
-        let a = InferenceSession::new(q, 1).infer_batch(&x, batch);
-        let b = InferenceSession::new(qq, 4).infer_batch(&x, batch);
-        let c = InferenceSession::new(back, 2).infer_batch(&x, batch);
+        // Pinned scalar: the i8/i4-vs-twin bitwise claim depends on the
+        // scalar op order (SIMD factors the scale out of the inner loop,
+        // the f32 twin multiplies it in — same math, different bits).
+        let scalar_infer = |model: CompiledModel, workers: usize| {
+            let mut s = InferenceSession::new(model, workers);
+            s.set_kernel_path(KernelPath::Scalar);
+            s.infer_batch(&x, batch)
+        };
+        let a = scalar_infer(q, 1);
+        let b = scalar_infer(qq, 4);
+        let c = scalar_infer(back, 2);
         for (i, ((&u, &v), &w)) in a.iter().zip(&b).zip(&c).enumerate() {
             assert_eq!(u.to_bits(), v.to_bits(), "{tier} idempotence, out {i}");
             if tier == Precision::Ternary {

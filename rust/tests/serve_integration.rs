@@ -18,7 +18,7 @@ use lfsr_prune::serve::{
     parallel_keep_sequence, synthetic_lenet300, Batcher, CompiledLayer, CompiledModel,
     InferenceSession,
 };
-use lfsr_prune::sparse::{transpose_panels, ConvGeom, PoolGeom, BATCH_LANES};
+use lfsr_prune::sparse::{transpose_panels, ConvGeom, KernelPath, PoolGeom, BATCH_LANES};
 use lfsr_prune::store::format::hash_keep_sequence;
 
 const D0: usize = 48;
@@ -139,7 +139,10 @@ fn serve_matvec_bitwise_matches_cycle_engine() {
     )
     .output;
     let layer = CompiledLayer::compile_prs(&w, Vec::new(), false, rows, cols, sp, cfg, 5, 3);
-    let session = InferenceSession::new(CompiledModel::new(vec![layer]), 2);
+    let mut session = InferenceSession::new(CompiledModel::new(vec![layer]), 2);
+    // The cycle engine is the scalar op order — pin the session to the
+    // scalar oracle so this stays bitwise under a SIMD process default.
+    session.set_kernel_path(KernelPath::Scalar);
     let serve_out = session.infer_one(&x);
     assert_eq!(serve_out.len(), engine_out.len());
     for c in 0..cols {
