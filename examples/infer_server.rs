@@ -160,7 +160,9 @@ fn main() {
 
     let s = batcher.stats();
     println!(
-        "\nserved {} requests in {:.2}s -> {:.0} req/s over {} batches ({} padded rows)",
+        "\nserved {} of {} pushed requests in {:.2}s -> {:.0} req/s over {} batches \
+         ({} padded rows)",
+        s.completed,
         s.requests,
         s.wall_s,
         s.throughput_rps(),
@@ -274,9 +276,10 @@ fn serve_multi_model(n_requests: usize, workers: usize, models: usize, dump_ever
         let s = &info.stats;
         let tier = info.precision.map_or("mixed".to_string(), |p| p.to_string());
         println!(
-            "  {}: {} req / {} batches -> {:.0} req/s ({}, {} padded rows, nnz {}, {} values) \
-             [over {} shed {} failed {} {}]",
+            "  {}: {} done of {} pushed / {} batches -> {:.0} req/s ({}, {} padded rows, \
+             nnz {}, {} values) [over {} shed {} failed {} {}]",
             info.id,
+            s.completed,
             s.requests,
             s.batches,
             s.throughput_rps(),

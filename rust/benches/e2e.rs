@@ -1,0 +1,479 @@
+//! End-to-end serving latency through the HTTP front door: an open-loop
+//! Poisson load generator drives real `POST /v1/models/{id}:predict`
+//! requests over loopback TCP into an in-process [`HttpServer`], mixing
+//! a small FC tenant (`mlp`, LeNet-300) with a heavy conv tenant
+//! (`vgg`, the scaled VGG-16) so batch cuts interleave unevenly.
+//!
+//! Protocol per run:
+//!
+//! 1. **Calibrate**: a short closed-loop burst measures the sustainable
+//!    completion rate R under this machine + tenant mix.
+//! 2. **Sweep**: offered load at 0.5×, 1×, 2×, and 4× R, each with
+//!    pre-computed exponential inter-arrival times (seeded [`Pcg32`], so
+//!    the schedule is reproducible) fired by a fixed worker pool over
+//!    keep-alive connections.  Latency is measured from the *scheduled*
+//!    arrival, not the send, so a lagging client cannot hide server
+//!    queueing (no coordinated omission).
+//! 3. **Burst probe**: a synchronized stampede of simultaneous posts at
+//!    several times the bounded queue capacity, guaranteeing the 429
+//!    path is exercised deterministically regardless of machine speed.
+//!
+//! Every scheduled request yields exactly one recorded outcome, so per
+//! level `sum(status counts) == offered` — the admission ledger from
+//! `benches/serve.rs`, now measured through sockets.  Results land in
+//! `BENCH_e2e.json` at the repo root; `BENCH_SMOKE=1` (CI) shrinks the
+//! windows and caps so the smoke run stays quick.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lfsr_prune::data::rng::Pcg32;
+use lfsr_prune::serve::{
+    synthetic_lenet300_seeded, synthetic_vgg16_scaled, HttpServer, ServerConfig,
+};
+use lfsr_prune::store::{ModelRegistry, TenantConfig};
+use lfsr_prune::util::bench::{bench_out_path, Stats};
+
+const SPARSITY: f64 = 0.9;
+const DEADLINE_MS: u64 = 100;
+const MAX_QUEUE: usize = 48;
+
+/// One request's outcome: HTTP status (0 = client-side I/O failure) and
+/// schedule-to-response latency in seconds.
+type Outcome = (u16, f64);
+
+/// A pre-rendered request for one tenant: target path + JSON body.
+struct Target {
+    path: String,
+    body: String,
+}
+
+impl Target {
+    fn new(model: &str, in_dim: usize, rng: &mut Pcg32) -> Target {
+        let mut body = String::with_capacity(12 * in_dim + 16);
+        body.push_str("{\"input\": [");
+        for i in 0..in_dim {
+            if i > 0 {
+                body.push_str(", ");
+            }
+            body.push_str(&format!("{:.4}", rng.next_f32()));
+        }
+        body.push_str("]}");
+        Target { path: format!("/v1/models/{model}:predict"), body }
+    }
+}
+
+/// A keep-alive client connection that re-dials on failure.
+struct Client {
+    addr: std::net::SocketAddr,
+    stream: Option<TcpStream>,
+}
+
+impl Client {
+    fn new(addr: std::net::SocketAddr) -> Client {
+        Client { addr, stream: None }
+    }
+
+    fn connect(&mut self) -> std::io::Result<&mut TcpStream> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect_timeout(&self.addr, Duration::from_secs(2))?;
+            s.set_nodelay(true)?;
+            // Comfortably past the server's 5 s request timeout, so the
+            // server (never this reader) decides slow-request outcomes.
+            s.set_read_timeout(Some(Duration::from_secs(8)))?;
+            s.set_write_timeout(Some(Duration::from_secs(2)))?;
+            self.stream = Some(s);
+        }
+        Ok(self.stream.as_mut().unwrap())
+    }
+
+    /// POST once and read the full response; returns the status code.
+    /// One transparent re-dial covers a keep-alive connection the server
+    /// closed between requests; a failure after that is the caller's.
+    fn post(&mut self, t: &Target, deadline_ms: Option<u64>) -> std::io::Result<u16> {
+        for attempt in 0..2 {
+            let r = self.try_post(t, deadline_ms);
+            match r {
+                Ok(code) => return Ok(code),
+                Err(e) => {
+                    self.stream = None;
+                    if attempt == 1 {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        unreachable!("post loop returns within two attempts")
+    }
+
+    fn try_post(&mut self, t: &Target, deadline_ms: Option<u64>) -> std::io::Result<u16> {
+        let mut req = format!(
+            "POST {} HTTP/1.1\r\nhost: bench\r\ncontent-type: application/json\r\n\
+             content-length: {}\r\n",
+            t.path,
+            t.body.len()
+        );
+        if let Some(ms) = deadline_ms {
+            req.push_str(&format!("x-deadline-ms: {ms}\r\n"));
+        }
+        req.push_str("\r\n");
+        let s = self.connect()?;
+        s.write_all(req.as_bytes())?;
+        s.write_all(t.body.as_bytes())?;
+        let (code, close) = read_reply(s)?;
+        if close {
+            self.stream = None;
+        }
+        Ok(code)
+    }
+}
+
+/// Minimal response reader: status line, headers (for `content-length`
+/// and `connection: close`), then exactly the declared body.
+fn read_reply(s: &mut TcpStream) -> std::io::Result<(u16, bool)> {
+    let mut buf = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p + 4;
+        }
+        let n = s.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-response",
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "non-utf8 head"))?;
+    let mut lines = head.split("\r\n");
+    let status = lines
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|c| c.parse::<u16>().ok())
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad status line"))?;
+    let mut len = 0usize;
+    let mut close = false;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        match name.trim().to_ascii_lowercase().as_str() {
+            "content-length" => {
+                len = value.trim().parse().map_err(|_| {
+                    std::io::Error::new(std::io::ErrorKind::InvalidData, "bad content-length")
+                })?;
+            }
+            "connection" => close = value.trim().eq_ignore_ascii_case("close"),
+            _ => {}
+        }
+    }
+    let mut body_have = buf.len() - head_end;
+    while body_have < len {
+        let n = s.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-body",
+            ));
+        }
+        body_have += n;
+    }
+    Ok((status, close))
+}
+
+/// Closed-loop calibration: `threads` clients hammer the tenant mix for
+/// `window`; returns completed-200s per second.
+fn calibrate(addr: std::net::SocketAddr, targets: &[Target], threads: usize, window: Duration) -> f64 {
+    let done = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for tid in 0..threads {
+            let done = &done;
+            scope.spawn(move || {
+                let mut client = Client::new(addr);
+                let mut i = tid;
+                while t0.elapsed() < window {
+                    let t = &targets[i % targets.len()];
+                    i += 1;
+                    if let Ok(200) = client.post(t, Some(DEADLINE_MS)) {
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    done.load(Ordering::Relaxed) as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// One open-loop level: fire `schedule` (absolute offsets from the level
+/// start) across `threads` keep-alive clients, one recorded outcome per
+/// scheduled request.
+fn run_level(
+    addr: std::net::SocketAddr,
+    targets: &[Target],
+    schedule: &[f64],
+    threads: usize,
+) -> Vec<Outcome> {
+    let next = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    let mut all: Vec<Outcome> = Vec::with_capacity(schedule.len());
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let next = &next;
+            handles.push(scope.spawn(move || {
+                let mut client = Client::new(addr);
+                let mut out: Vec<Outcome> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= schedule.len() {
+                        return out;
+                    }
+                    let at = Duration::from_secs_f64(schedule[i]);
+                    let elapsed = t0.elapsed();
+                    if elapsed < at {
+                        std::thread::sleep(at - elapsed);
+                    }
+                    let code = client
+                        .post(&targets[i % targets.len()], Some(DEADLINE_MS))
+                        .unwrap_or(0);
+                    // From the scheduled arrival, not the send: client
+                    // lag counts against the measurement, not for it.
+                    out.push((code, (t0.elapsed() - at).as_secs_f64()));
+                }
+            }));
+        }
+        for h in handles {
+            all.extend(h.join().expect("load worker panicked"));
+        }
+    });
+    all
+}
+
+fn quantiles_ms(outcomes: &[Outcome]) -> (f64, f64, f64) {
+    let ok: Vec<f64> = outcomes.iter().filter(|(c, _)| *c == 200).map(|(_, l)| *l).collect();
+    if ok.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let s = Stats::from_samples(ok);
+    (s.median * 1e3, s.p95 * 1e3, s.p99 * 1e3)
+}
+
+fn main() {
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
+    let hw_threads = std::thread::available_parallelism().map_or(4, |n| n.get());
+    let workers = hw_threads.clamp(2, 8);
+    let (cal_window, level_window, client_threads, offered_cap) = if smoke {
+        (Duration::from_millis(300), Duration::from_millis(750), 32usize, 4_000usize)
+    } else {
+        (Duration::from_millis(500), Duration::from_secs(2), 64usize, 20_000usize)
+    };
+
+    // --- tenants: small FC + heavy conv behind one registry -------------
+    let cfg = TenantConfig {
+        batch: 16,
+        max_wait: Some(Duration::from_millis(2)),
+        max_queue: MAX_QUEUE,
+        ..TenantConfig::default()
+    };
+    let reg = Arc::new(ModelRegistry::new(workers));
+    let mlp = synthetic_lenet300_seeded(SPARSITY, 4, 2, 11);
+    let mlp_dim = mlp.in_dim();
+    reg.insert("mlp", mlp, cfg).expect("insert mlp");
+    let t0 = Instant::now();
+    let vgg = synthetic_vgg16_scaled(32, 4, SPARSITY, 4, 2);
+    let vgg_dim = vgg.in_dim();
+    println!("bench e2e/compile_vgg16_32div4: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    reg.insert("vgg", vgg, cfg).expect("insert vgg");
+
+    let server = HttpServer::start(
+        Arc::clone(&reg),
+        "127.0.0.1:0",
+        ServerConfig { max_connections: 1024, ..ServerConfig::default() },
+    )
+    .expect("bind loopback");
+    let addr = server.addr();
+
+    let mut rng = Pcg32::new(4242);
+    let targets =
+        vec![Target::new("mlp", mlp_dim, &mut rng), Target::new("vgg", vgg_dim, &mut rng)];
+
+    // --- calibrate the sustainable rate ---------------------------------
+    let rate = calibrate(addr, &targets, client_threads, cal_window).max(8.0);
+    println!("bench e2e/calibrate: {rate:.0} req/s sustained (closed loop, {client_threads} clients)");
+
+    // --- open-loop sweep: 0.5x .. 4x the calibrated rate -----------------
+    // (level multiplier, offered, capped?, counts, p50/p95/p99 ms, wall s)
+    struct LevelRow {
+        level: f64,
+        offered: usize,
+        capped: bool,
+        counts: BTreeMap<u16, usize>,
+        p50_ms: f64,
+        p95_ms: f64,
+        p99_ms: f64,
+        wall_s: f64,
+    }
+    let mut rows: Vec<LevelRow> = Vec::new();
+    for &level in &[0.5f64, 1.0, 2.0, 4.0] {
+        let offered_rate = rate * level;
+        let want = (offered_rate * level_window.as_secs_f64()).ceil() as usize;
+        let offered = want.clamp(16, offered_cap);
+        if offered < want {
+            println!("bench e2e/level{level}: capping offered {want} -> {offered}");
+        }
+        // Reproducible Poisson arrivals: exponential gaps at offered_rate.
+        let mut at = 0.0f64;
+        let schedule: Vec<f64> = (0..offered)
+            .map(|_| {
+                let u = f64::from(rng.next_f32()).clamp(1e-9, 1.0 - 1e-9);
+                at += -(1.0 - u).ln() / offered_rate;
+                at
+            })
+            .collect();
+        let t0 = Instant::now();
+        let outcomes = run_level(addr, &targets, &schedule, client_threads);
+        let wall_s = t0.elapsed().as_secs_f64();
+        assert_eq!(outcomes.len(), offered, "one outcome per scheduled request");
+        let mut counts: BTreeMap<u16, usize> = BTreeMap::new();
+        for (code, _) in &outcomes {
+            *counts.entry(*code).or_insert(0) += 1;
+        }
+        assert_eq!(
+            counts.values().sum::<usize>(),
+            offered,
+            "admission ledger balances at level {level}"
+        );
+        let (p50_ms, p95_ms, p99_ms) = quantiles_ms(&outcomes);
+        println!(
+            "bench e2e/level{level}x: offered {offered} -> {:?}, p50 {p50_ms:.2} ms p95 \
+             {p95_ms:.2} ms p99 {p99_ms:.2} ms over {wall_s:.2} s",
+            counts,
+        );
+        rows.push(LevelRow {
+            level,
+            offered,
+            capped: offered < want,
+            counts,
+            p50_ms,
+            p95_ms,
+            p99_ms,
+            wall_s,
+        });
+    }
+
+    // --- deterministic 429 probe: a stampede past queue capacity ---------
+    // Open-loop levels overload on average; this phase overloads by
+    // construction (simultaneous arrivals >> MAX_QUEUE against the slow
+    // tenant), so the smoke assert below cannot flake on a fast machine.
+    let burst_n = 4 * MAX_QUEUE;
+    let burst_counts: BTreeMap<u16, usize> = {
+        let hits = AtomicUsize::new(0);
+        let mut merged: BTreeMap<u16, usize> = BTreeMap::new();
+        let codes: Vec<u16> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..burst_n)
+                .map(|_| {
+                    let hits = &hits;
+                    let vgg = &targets[1];
+                    scope.spawn(move || {
+                        // Rough start barrier: everyone spins until the
+                        // spawn loop has finished creating all threads.
+                        hits.fetch_add(1, Ordering::AcqRel);
+                        while hits.load(Ordering::Acquire) < burst_n {
+                            std::thread::sleep(Duration::from_micros(50));
+                        }
+                        let mut c = Client::new(addr);
+                        c.post(vgg, Some(DEADLINE_MS)).unwrap_or(0)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("burst thread")).collect()
+        });
+        for code in codes {
+            *merged.entry(code).or_insert(0) += 1;
+        }
+        merged
+    };
+    println!("bench e2e/burst: {burst_n} simultaneous -> {burst_counts:?}");
+    assert_eq!(burst_counts.values().sum::<usize>(), burst_n, "burst ledger balances");
+    assert!(
+        burst_counts.get(&429).copied().unwrap_or(0) >= 1,
+        "a {burst_n}-wide stampede against max_queue {MAX_QUEUE} must refuse at least once"
+    );
+
+    // --- /metrics still parses after the pounding ------------------------
+    let mut metrics_client = Client::new(addr);
+    let code = metrics_client
+        .try_post(&Target { path: "/metrics".into(), body: String::new() }, None)
+        .unwrap_or(0);
+    // POST /metrics is a 405 — the route exists and still answers.
+    assert_eq!(code, 405, "metrics route answers after the sweep");
+
+    server.shutdown();
+
+    // --- BENCH_e2e.json at the repo root ---------------------------------
+    use std::fmt::Write as _;
+    let mut json = String::new();
+    json.push_str("{\n");
+    let _ = writeln!(json, "  \"bench\": \"e2e\",");
+    let _ = writeln!(json, "  \"smoke\": {smoke},");
+    let _ = writeln!(json, "  \"hw_threads\": {hw_threads},");
+    let _ = writeln!(
+        json,
+        "  \"tenants\": [{{\"id\": \"mlp\", \"in_dim\": {mlp_dim}}}, {{\"id\": \"vgg\", \
+         \"in_dim\": {vgg_dim}}}],"
+    );
+    let _ = writeln!(
+        json,
+        "  \"policy\": {{\"batch\": 16, \"max_queue\": {MAX_QUEUE}, \"deadline_ms\": \
+         {DEADLINE_MS}, \"client_threads\": {client_threads}}},"
+    );
+    let _ = writeln!(json, "  \"calibration_rps\": {rate:.1},");
+    let _ = writeln!(json, "  \"results\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let counts: Vec<String> =
+            r.counts.iter().map(|(c, n)| format!("\"{c}\": {n}")).collect();
+        let _ = writeln!(
+            json,
+            "    {{\"level\": {}, \"offered\": {}, \"capped\": {}, \"status_counts\": {{{}}}, \
+             \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"p99_ms\": {:.3}, \"wall_s\": {:.3}}}{}",
+            r.level,
+            r.offered,
+            r.capped,
+            counts.join(", "),
+            r.p50_ms,
+            r.p95_ms,
+            r.p99_ms,
+            r.wall_s,
+            if i + 1 == rows.len() { "" } else { "," }
+        );
+    }
+    let _ = writeln!(json, "  ],");
+    let burst: Vec<String> =
+        burst_counts.iter().map(|(c, n)| format!("\"{c}\": {n}")).collect();
+    let _ = writeln!(
+        json,
+        "  \"burst\": {{\"offered\": {burst_n}, \"status_counts\": {{{}}}}}",
+        burst.join(", ")
+    );
+    json.push_str("}\n");
+
+    let out = bench_out_path("BENCH_e2e.json");
+    std::fs::write(&out, &json).expect("writing BENCH_e2e.json");
+    println!("wrote {}", out.display());
+
+    let parsed = lfsr_prune::util::json::parse(&json).expect("valid json");
+    for key in ["bench", "calibration_rps", "results", "burst"] {
+        assert!(parsed.get(key).is_some(), "BENCH_e2e.json carries {key:?}");
+    }
+    assert_eq!(
+        parsed.get("results").and_then(|r| r.as_arr()).map(|a| a.len()),
+        Some(4),
+        "one row per offered-load level"
+    );
+}

@@ -151,7 +151,7 @@ fn main() {
     println!(
         "bench serve/e2e_queue_b{batch}_w{multi}: {} req in {:.3}s -> {:.0} req/s ({}, {} \
          padded rows)",
-        serve_stats.requests,
+        serve_stats.completed,
         serve_stats.wall_s,
         serve_stats.throughput_rps(),
         serve_stats.latency_cell(),
@@ -192,12 +192,13 @@ fn main() {
         }
         let s = b.stats();
         assert_eq!(accepted + rejected, offered as u64, "admission ledger balances");
-        assert_eq!(s.requests + s.shed, accepted, "every accepted request served or shed");
+        assert_eq!(s.requests, accepted, "stats.requests mirrors the accepted count");
+        assert_eq!(s.completed + s.shed, accepted, "every accepted request served or shed");
         println!(
             "bench serve/overload_{offered}of{capacity}: {accepted} accepted, {rejected} \
              rejected, {} shed, {} served ({})",
             s.shed,
-            s.requests,
+            s.completed,
             s.latency_cell(),
         );
         ov_rows.push((
@@ -205,7 +206,7 @@ fn main() {
             accepted,
             rejected,
             s.shed,
-            s.requests,
+            s.completed,
             s.latency.map_or(0.0, |l| l.p99 * 1e3),
             s.throughput_rps(),
         ));
@@ -243,10 +244,11 @@ fn main() {
     let _ = writeln!(json, "  ],");
     let _ = writeln!(
         json,
-        "  \"e2e\": {{\"requests\": {}, \"batch\": {batch}, \"workers\": {multi}, \"wall_s\": \
-         {:.6}, \"throughput_rps\": {:.1}, \"p95_latency_ms\": {:.3}, \"p99_latency_ms\": {:.3}, \
-         \"padded_rows\": {}}},",
+        "  \"e2e\": {{\"requests\": {}, \"completed\": {}, \"batch\": {batch}, \"workers\": \
+         {multi}, \"wall_s\": {:.6}, \"throughput_rps\": {:.1}, \"p95_latency_ms\": {:.3}, \
+         \"p99_latency_ms\": {:.3}, \"padded_rows\": {}}},",
         serve_stats.requests,
+        serve_stats.completed,
         serve_stats.wall_s,
         serve_stats.throughput_rps(),
         serve_stats.latency.map_or(0.0, |l| l.p95 * 1e3),

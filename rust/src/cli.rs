@@ -9,11 +9,13 @@
 //!   experiment <name|all>     — regenerate the paper's tables/figures
 //!   export                    — write a compiled model as an .lfsrpack artifact
 //!   serve-artifact <paths..>  — load artifacts into the registry and serve
+//!   serve [paths..]           — HTTP/1.1 front door over std::net
 //!   stats [paths..]           — serve briefly, print per-tenant stats +
 //!                               the Prometheus-style metrics exposition
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
@@ -24,7 +26,7 @@ use crate::hw::{self, Mode};
 use crate::lfsr::{stats, GaloisLfsr, MsbMap};
 use crate::pipeline::{self, MaskMethod, RegType};
 use crate::runtime::Runtime;
-use crate::serve::synthetic_lenet300_seeded;
+use crate::serve::{synthetic_lenet300_seeded, HttpServer, ServerConfig};
 use crate::sparse::{default_kernel_path, Precision};
 use crate::store::{self, LoadOptions, ModelRegistry, RegistryError, TenantConfig};
 
@@ -97,6 +99,12 @@ USAGE:
                [--batch B] [--deadline-ms D] [--max-queue Q]
                [--shards N] [--lanes N]
                [--precision keep|f32|i8|i4|ternary[,..]] [--verify]
+  repro serve [PATH..] [--addr HOST:PORT] [--workers N] [--batch B]
+               [--deadline-ms D] [--max-queue Q] [--sample-every N]
+               [--shards N] [--lanes N]
+               [--precision keep|f32|i8|i4|ternary[,..]] [--verify]
+               [--duration-s S] [--accept-threads N]
+               [--max-connections N] [--request-timeout-ms T]
   repro stats [PATH..] [--requests N] [--workers N] [--batch B]
                [--deadline-ms D] [--max-queue Q] [--shards N] [--lanes N]
                [--precision keep|f32|i8|i4|ternary[,..]]
@@ -117,6 +125,18 @@ shared worker-pool registry and serves synthetic traffic across them;
 `--precision` picks each tenant's serving tier (`keep` = as stored;
 one value for all paths, or a comma list with one tier per path —
 mixed-tier tenants share the one pool).
+`serve` is the network front door — a hand-rolled HTTP/1.1 server on
+std::net (no tokio in the offline vendor set).  It loads the given
+artifacts (or registers the built-in demo tenants when no path is
+given) and answers `POST /v1/models/{id}:predict` with a JSON body
+`{\"input\": [numbers]}` (optional `X-Deadline-Ms` request deadline
+header), `GET /metrics` with the full Prometheus-style exposition, and
+`GET /healthz`.  The registry's typed rejections become status codes:
+429 full queue, 400 bad input, 404 unknown model, 503 quarantined
+tenant (or connection limit), 504 expired deadline — the README's
+rejection table on the wire.  `--duration-s S` serves a fixed window
+then drains and prints the tenant table (what CI's e2e smoke runs);
+without it the server runs until stdin closes (Ctrl-D).
 `stats` is the observability scrape: it serves a short burst of
 synthetic traffic (over the given artifacts, or built-in demo tenants
 when no path is given), prints the per-tenant table (p95/p99 say `n/a`
@@ -125,10 +145,10 @@ Prometheus-style metrics exposition — `--prom` prints the exposition
 alone (machine-readable, what CI's smoke step parses), and
 `--sample-every N` sets the per-layer span sampling knob (1 = time
 every call, 0 = per-layer spans off).
-Both serving commands bound every tenant's queue (`--max-queue`,
+All serving commands bound every tenant's queue (`--max-queue`,
 default 1024): a full queue refuses the push with typed backpressure
-(the future HTTP 429) and the drive loop drains before retrying, so
-memory stays bounded at any offered load.  The `stats` table appends
+(HTTP 429 on `repro serve`) and the drive loops drain before retrying,
+so memory stays bounded at any offered load.  The `stats` table appends
 each tenant's robustness counters — `over` (admission rejections),
 `shed` (expired or evicted before compute), `failed` (micro-batches
 lost to a quarantined panic) — and the breaker state
@@ -158,6 +178,7 @@ pub fn main_with_args(argv: Vec<String>) -> Result<()> {
         "experiment" => cmd_experiment(&args),
         "export" => cmd_export(&args),
         "serve-artifact" => cmd_serve_artifact(&args),
+        "serve" => cmd_serve(&args),
         "stats" => cmd_stats(&args),
         other => bail!("unknown command {other}\n{USAGE}"),
     }
@@ -485,12 +506,13 @@ fn push_with_backpressure(
 fn print_tenant_table(reg: &ModelRegistry) {
     for m in reg.list() {
         println!(
-            "  {} ({}fc+{}conv+{}pool): {} req over {} batches -> {:.0} req/s ({}, \
-             {} padded rows, {} pending) [over {} shed {} failed {} {}]",
+            "  {} ({}fc+{}conv+{}pool): {} done of {} pushed over {} batches -> {:.0} req/s \
+             ({}, {} padded rows, {} pending) [over {} shed {} failed {} {}]",
             m.id,
             m.kinds.fc,
             m.kinds.conv,
             m.kinds.pool,
+            m.stats.completed,
             m.stats.requests,
             m.stats.batches,
             m.stats.throughput_rps(),
@@ -503,6 +525,90 @@ fn print_tenant_table(reg: &ModelRegistry) {
             if m.healthy { "healthy" } else { "quarantined" },
         );
     }
+}
+
+/// Built-in demo tenants for path-less serving commands: an f32
+/// LeNet-300, its i8 twin, and an idle tenant (whose latency table row
+/// renders `n/a`).  Returns the ids that should take synthetic traffic.
+fn register_demo_tenants(reg: &ModelRegistry, cfg: TenantConfig) -> Result<Vec<String>> {
+    let model = synthetic_lenet300_seeded(0.9, 4, 2, 11);
+    reg.insert("lenet300-f32", model.clone(), cfg)?;
+    reg.insert("lenet300-i8", model.clone().to_precision(Precision::I8), cfg)?;
+    reg.insert("idle", model, cfg)?;
+    Ok(vec!["lenet300-f32".to_string(), "lenet300-i8".to_string()])
+}
+
+/// `repro serve` — the HTTP/1.1 front door: load artifacts (or the
+/// demo tenants), bind `--addr`, and serve predictions over real
+/// sockets until `--duration-s` elapses or stdin closes.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let paths: Vec<PathBuf> = args.positional[1..].iter().map(PathBuf::from).collect();
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:8080");
+    let workers: usize = args.get("workers", 0usize)?;
+    let batch: usize = args.get("batch", 32usize)?;
+    if batch == 0 {
+        bail!("--batch must be >= 1");
+    }
+    let duration_s: f64 = args.get("duration-s", 0.0f64)?;
+    let cfg = TenantConfig {
+        batch,
+        max_wait: Some(Duration::from_millis(args.get("deadline-ms", 5u64)?)),
+        span_sample_every: args.get("sample-every", 16u64)?,
+        max_queue: args.get("max-queue", 1024usize)?,
+        ..TenantConfig::default()
+    };
+    let reg = Arc::new(ModelRegistry::new(workers));
+    if paths.is_empty() {
+        register_demo_tenants(&reg, cfg)?;
+    } else {
+        let precisions = tenant_precisions(args, paths.len())?;
+        for (path, precision) in paths.iter().zip(precisions) {
+            let opts = LoadOptions {
+                n_shards: args.get("shards", 4usize)?,
+                lanes: args.get("lanes", 2usize)?,
+                verify: args.bool_flag("verify"),
+                precision,
+            };
+            let id =
+                path.file_stem().and_then(|s| s.to_str()).unwrap_or("model").to_string();
+            reg.load(&id, path, &opts, cfg)?;
+        }
+    }
+    let http_cfg = ServerConfig {
+        accept_threads: args.get("accept-threads", 0usize)?,
+        max_connections: args.get("max-connections", 256usize)?,
+        request_timeout: Duration::from_millis(args.get("request-timeout-ms", 5_000u64)?),
+        ..ServerConfig::default()
+    };
+    let server = HttpServer::start(Arc::clone(&reg), addr, http_cfg)
+        .map_err(|e| anyhow!("cannot bind {addr}: {e}"))?;
+    println!(
+        "serving {} tenant(s) on http://{} with {} shared worker thread(s):",
+        reg.len(),
+        server.addr(),
+        reg.workers(),
+    );
+    for m in reg.list() {
+        println!("  POST /v1/models/{}:predict  (input length {})", m.id, m.in_dim);
+    }
+    println!("  GET  /metrics | GET /healthz");
+    if duration_s > 0.0 {
+        println!("serving for {duration_s} s, then draining");
+        std::thread::sleep(Duration::from_secs_f64(duration_s));
+    } else {
+        println!("close stdin (Ctrl-D) to stop");
+        let mut sink = String::new();
+        loop {
+            sink.clear();
+            match std::io::stdin().read_line(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+    }
+    server.shutdown();
+    print_tenant_table(&reg);
+    Ok(())
 }
 
 /// `repro stats` — the observability scrape: serve a short synthetic
@@ -529,14 +635,7 @@ fn cmd_stats(args: &Args) -> Result<()> {
     let reg = ModelRegistry::new(workers);
     let mut ids = Vec::new();
     if paths.is_empty() {
-        // Demo tenants: an f32 LeNet-300, its i8 twin taking traffic,
-        // and an idle tenant demonstrating the n/a latency row.
-        let model = synthetic_lenet300_seeded(0.9, 4, 2, 11);
-        reg.insert("lenet300-f32", model.clone(), cfg)?;
-        reg.insert("lenet300-i8", model.clone().to_precision(Precision::I8), cfg)?;
-        reg.insert("idle", model, cfg)?;
-        ids.push("lenet300-f32".to_string());
-        ids.push("lenet300-i8".to_string());
+        ids = register_demo_tenants(&reg, cfg)?;
     } else {
         let precisions = tenant_precisions(args, paths.len())?;
         for (path, precision) in paths.iter().zip(precisions) {
@@ -576,7 +675,7 @@ fn cmd_stats(args: &Args) -> Result<()> {
         default_kernel_path().as_str(),
     );
     print_tenant_table(&reg);
-    println!("\n# metrics exposition (serve via the /metrics endpoint, ROADMAP item 2):");
+    println!("\n# metrics exposition (`repro serve` serves this at GET /metrics):");
     print!("{}", reg.metrics_text());
     Ok(())
 }

@@ -4,10 +4,11 @@
 //! shedding, panic quarantine — see [`serve`](crate::serve) and
 //! [`store::registry`](crate::store::registry)) are only testable if a
 //! fault can be produced *on purpose*: this module plants named
-//! failpoints at the three places a real deployment breaks — pool task
+//! failpoints at the four places a real deployment breaks — pool task
 //! execution ([`points::POOL_TASK`]), per-shard session execution
-//! ([`points::SESSION_SHARD`], keyed by tenant id), and artifact decode
-//! ([`points::STORE_DECODE`]) — and lets a test or an operator arm a
+//! ([`points::SESSION_SHARD`], keyed by tenant id), artifact decode
+//! ([`points::STORE_DECODE`]), and the HTTP front door's socket reads
+//! ([`points::HTTP_READ`]) — and lets a test or an operator arm a
 //! [`FaultPlan`] against them at runtime.
 //!
 //! Design constraints, in the repo's offline idiom (no `fail` crate):
@@ -62,6 +63,12 @@ pub mod points {
     /// [`StoreError::Corrupt`](crate::store::StoreError) before any
     /// bytes are parsed.
     pub const STORE_DECODE: &str = "store.decode";
+    /// Fired before each socket read of the HTTP front door
+    /// ([`serve::http`](crate::serve::http)); a `fail` action forces a
+    /// typed I/O error (the connection aborts like a peer reset), a
+    /// `delay` simulates a slow client.  The parse table tests drive
+    /// truncation through it.
+    pub const HTTP_READ: &str = "http.read";
 }
 
 /// What a triggered spec does at the firing site.
@@ -369,6 +376,17 @@ pub fn hits(point: &str) -> u64 {
     })
 }
 
+/// Serialize unit tests that arm plans: the armed state is
+/// process-global, so concurrent arming tests corrupt each other's hit
+/// windows.  Lives outside the test module so other in-crate test
+/// modules (e.g. the HTTP parser's `http.read` tests) share the same
+/// lock.
+#[cfg(test)]
+pub(crate) fn test_serial() -> MutexGuard<'static, ()> {
+    static SERIAL: Mutex<()> = Mutex::new(());
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 #[cold]
 fn fire_slow(point: &str, key: &str) -> bool {
     let mut delay_ms = 0u64;
@@ -418,14 +436,12 @@ fn fire_slow(point: &str, key: &str) -> bool {
 mod tests {
     use super::*;
     use std::panic::{catch_unwind, AssertUnwindSafe};
-    use std::sync::Mutex as StdMutex;
 
     /// Unit tests share the process-global plan state with each other
-    /// (and with any integration test in the same binary): serialize.
-    static SERIAL: StdMutex<()> = StdMutex::new(());
-
-    fn serial() -> std::sync::MutexGuard<'static, ()> {
-        SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+    /// (and with any other in-crate test module arming plans): serialize
+    /// on the crate-wide lock.
+    fn serial() -> MutexGuard<'static, ()> {
+        test_serial()
     }
 
     #[test]

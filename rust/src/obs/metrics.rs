@@ -242,7 +242,10 @@ impl Histogram {
 /// Every-Nth gate for span timing that is too hot to measure on each
 /// call (per-layer kernel spans).  `every(1)` samples everything;
 /// `every(n)` passes one call in `n` (the first of each period, so a
-/// short-lived process still reports spans).
+/// short-lived process still reports spans); `every(0)` samples
+/// **nothing** — the same "off" that
+/// [`TenantConfig::span_sample_every`](crate::store::TenantConfig)
+/// documents, so the direct and registry APIs agree.
 #[derive(Debug)]
 pub struct Sampler {
     every: u64,
@@ -250,22 +253,25 @@ pub struct Sampler {
 }
 
 impl Sampler {
-    /// `n` is clamped to ≥ 1 (a zero period means "sampling disabled",
-    /// which callers express by not constructing the metrics at all).
+    /// Period `n`; `0` means disabled ([`Sampler::tick`] never fires).
     pub fn every(n: u64) -> Sampler {
-        Sampler { every: n.max(1), ticks: AtomicU64::new(0) }
+        Sampler { every: n, ticks: AtomicU64::new(0) }
     }
 
-    /// The sampling period.
+    /// The sampling period (`0` = disabled).
     pub fn period(&self) -> u64 {
         self.every
     }
 
-    /// True for one call in `period()`.  Lock-free; concurrent callers
-    /// each draw their own tick.
+    /// True for one call in `period()`; always false at period 0.
+    /// Lock-free; concurrent callers each draw their own tick.
     #[inline]
     pub fn tick(&self) -> bool {
-        self.every <= 1 || self.ticks.fetch_add(1, Ordering::Relaxed) % self.every == 0
+        match self.every {
+            0 => false,
+            1 => true,
+            n => self.ticks.fetch_add(1, Ordering::Relaxed) % n == 0,
+        }
     }
 }
 
@@ -407,7 +413,15 @@ mod tests {
         assert_eq!(hits, 4);
         let always = Sampler::every(1);
         assert!((0..8).all(|_| always.tick()));
-        // Zero clamps to 1 rather than dividing by zero.
-        assert_eq!(Sampler::every(0).period(), 1);
+    }
+
+    #[test]
+    fn sampler_period_zero_means_off() {
+        // 0 = disabled, matching the `span_sample_every = 0` contract of
+        // the registry's TenantConfig — NOT "sample everything" (the old
+        // clamp-to-1 behavior silently inverted the knob's meaning).
+        let off = Sampler::every(0);
+        assert_eq!(off.period(), 0);
+        assert!((0..64).all(|_| !off.tick()), "a disabled sampler never fires");
     }
 }

@@ -106,7 +106,13 @@ pub struct MicroBatch {
 /// example / bench call sites print one coherent snapshot.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeStats {
+    /// Requests accepted into the queue (pushed).  Offered traffic that
+    /// passed admission — NOT completions: a mid-flight snapshot has
+    /// `requests >= completed`, the gap being queued + in-flight work.
     pub requests: u64,
+    /// Real rows answered.  `throughput_rps` is derived from this, so
+    /// it honestly means *completed* rps.
+    pub completed: u64,
     pub batches: u64,
     /// Padding rows executed (wasted compute rows).
     pub padded: u64,
@@ -128,9 +134,13 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
+    /// Completed requests per wall second (the serving window runs from
+    /// the first push to the last completion or failure).  Built on
+    /// [`ServeStats::completed`], not `requests`: queued-but-unanswered
+    /// traffic must not inflate throughput.
     pub fn throughput_rps(&self) -> f64 {
         if self.wall_s > 0.0 {
-            self.requests as f64 / self.wall_s
+            self.completed as f64 / self.wall_s
         } else {
             0.0
         }
@@ -383,10 +393,20 @@ impl Batcher {
     ///
     /// [`with_deadline`]: Batcher::with_deadline
     pub fn next_batch(&mut self, flush: bool) -> Option<MicroBatch> {
+        self.next_batch_at(Instant::now(), flush)
+    }
+
+    /// [`next_batch`](Batcher::next_batch) against an explicit clock.
+    /// **One timestamp per cut**: the head-shed, the overdue check, the
+    /// mid-cut shed, and the span timestamps all compare against the
+    /// same `now` — a request with a live deadline at cut start can
+    /// never pass the head check and still be shed mid-cut within one
+    /// call (the two-clock straddle bug, pinned by
+    /// `one_clock_per_cut_never_straddles_a_deadline`).
+    fn next_batch_at(&mut self, now: Instant, flush: bool) -> Option<MicroBatch> {
         if self.queue.is_empty() {
             return None;
         }
-        let now = Instant::now();
         // Shed expired head requests first so the due/full checks below
         // see only live work (an expired head must not trigger an
         // "overdue" cut of fresh requests behind it).
@@ -411,7 +431,11 @@ impl Batcher {
             }
             return None;
         }
-        let t0 = Instant::now();
+        // One clock per cut: the head-shed above, the mid-cut shed below,
+        // and the span timestamps all compare against the same `now`.  A
+        // second reading here would let a request pass the head check yet
+        // be shed mid-cut within one call (the two-clock straddle bug).
+        //
         // Reuse the buffers recycled by `complete`/`fail`.  Live rows
         // are written contiguously below; padding rows get the zeros
         // contract re-established afterwards.
@@ -426,14 +450,14 @@ impl Batcher {
             // Expired requests deeper in the queue are shed as they
             // surface — checked per pop, pre-compute.
             if let Some(d) = r.deadline {
-                if d <= t0 {
+                if d <= now {
                     self.metrics.shed.inc();
                     continue;
                 }
             }
             let i = ids.len();
             x[i * self.example_len..(i + 1) * self.example_len].copy_from_slice(&r.x);
-            self.metrics.enqueue.record_duration(t0.duration_since(r.enqueued));
+            self.metrics.enqueue.record_duration(now.duration_since(r.enqueued));
             ids.push(r.id);
             enqueued.push(r.enqueued);
         }
@@ -450,7 +474,7 @@ impl Batcher {
         for v in &mut x[real * self.example_len..] {
             *v = 0.0;
         }
-        self.metrics.cut.record_duration(t0.elapsed());
+        self.metrics.cut.record_duration(now.elapsed());
         Some(MicroBatch {
             x,
             ids,
@@ -483,9 +507,13 @@ impl Batcher {
     /// quarantined by the registry): its real rows count into
     /// `serve_failed_total`, no latency is recorded, and the buffers are
     /// recycled exactly like [`complete`](Batcher::complete) so the
-    /// fault path stays allocation-free too.
+    /// fault path stays allocation-free too.  The failed batch still
+    /// closes the serving window (`last_done`) — a window that ends in a
+    /// quarantined batch must not report a `wall_s` that excludes the
+    /// failed traffic.
     pub fn fail(&mut self, mb: MicroBatch) {
         self.metrics.failed.add(mb.real as u64);
+        self.last_done = Some(Instant::now());
         self.spare_x = mb.x;
         self.spare_ids = mb.ids;
         self.spare_enqueued = mb.enqueued;
@@ -511,7 +539,8 @@ impl Batcher {
             _ => 0.0,
         };
         ServeStats {
-            requests: self.metrics.completed.get(),
+            requests: self.metrics.requests.get(),
+            completed: self.metrics.completed.get(),
             batches: self.metrics.batches.get(),
             padded: self.metrics.padded.get(),
             overloaded: self.metrics.overloaded.get(),
@@ -562,11 +591,17 @@ mod tests {
         for i in 0..5 {
             b.push(i, req(i)).unwrap();
         }
+        // Mid-flight snapshot: all 5 are *pushed*, none answered yet —
+        // `requests` reports offered traffic, not completions.
+        let s = b.stats();
+        assert_eq!(s.requests, 5);
+        assert_eq!(s.completed, 0, "nothing completed before the first drain");
         while let Some(mb) = b.next_batch(true) {
             b.complete(mb);
         }
         let s = b.stats();
         assert_eq!(s.requests, 5);
+        assert_eq!(s.completed, 5);
         assert_eq!(s.batches, 3);
         assert_eq!(s.padded, 1);
         let lat = s.latency.expect("latencies recorded");
@@ -802,11 +837,54 @@ mod tests {
         assert_eq!(b.metrics().failed.get(), 2);
         assert_eq!(b.metrics().completed.get(), 0, "failed rows never complete");
         assert!(b.stats().latency.is_none(), "no latency recorded for failures");
+        let s = b.stats();
+        assert_eq!(s.requests, 2, "failed rows were still offered");
+        assert_eq!(s.completed, 0);
+        // The failed batch closes the serving window: `last_done` is set
+        // exactly like `complete`, so `wall_s` spans first push -> the
+        // failure (a window ending in a quarantined batch must not
+        // report an empty window and skew `throughput_rps`).
+        assert!(b.last_done.is_some(), "fail must close the serving window");
+        assert!(s.wall_s >= 0.0);
         for i in 2..4 {
             b.push(i, req(i)).unwrap();
         }
         let mb = b.next_batch(false).unwrap();
         assert_eq!(mb.x.as_ptr(), x_ptr, "fail path must recycle like complete");
         assert_eq!(mb.ids, vec![2, 3]);
+    }
+
+    #[test]
+    fn one_clock_per_cut_never_straddles_a_deadline() {
+        // A deadline that is live at the instant a cut starts must be
+        // served, one expired by that instant must be shed — the same
+        // decision whether the request sits at the head or deeper in the
+        // queue, because the whole cut reads ONE clock.  The old code
+        // read a second, later clock for the mid-cut check, so a request
+        // could pass the head check yet be shed mid-cut within one call.
+        let live = Instant::now() + Duration::from_secs(3600);
+        let after_expiry = Instant::now() + Duration::from_secs(7200);
+
+        // The straddler sits BEHIND a no-deadline head, so the head-shed
+        // loop never reaches it — only the mid-cut check can shed it.
+        // Against the injected cut clock its deadline has expired; the
+        // two-clock bug would compare a fresh (earlier) `Instant::now()`
+        // instead and serve it inconsistently with the head pass.
+        let mut b = Batcher::new(2, 4);
+        b.push(0, req(0)).unwrap();
+        b.push_with_deadline(1, req(1), Some(live)).unwrap();
+        let mb = b.next_batch_at(after_expiry, true).expect("live head still cuts");
+        assert_eq!(mb.ids, vec![0], "expired-at-cut-start request sheds mid-cut");
+        assert_eq!(b.metrics().shed.get(), 1);
+        b.complete(mb);
+
+        // The same queue shape against a cut clock BEFORE expiry: both
+        // requests are live under the one cut-wide clock and both serve.
+        let mut b = Batcher::new(2, 4);
+        b.push(0, req(0)).unwrap();
+        b.push_with_deadline(1, req(1), Some(live)).unwrap();
+        let mb = b.next_batch_at(Instant::now(), true).expect("live cut");
+        assert_eq!(mb.ids, vec![0, 1], "live deadline never sheds within one cut");
+        assert_eq!(b.metrics().shed.get(), 0);
     }
 }

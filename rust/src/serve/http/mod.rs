@@ -1,0 +1,29 @@
+//! `repro serve`'s HTTP/1.1 front door, entirely on `std::net`.
+//!
+//! Two layers:
+//!
+//! - [`parser`] — bounded request parsing with a typed error per way a
+//!   peer can be wrong (400 / 413 / 431, never a panic), and the
+//!   [`points::HTTP_READ`](crate::obs::faultpoint::points::HTTP_READ)
+//!   failpoint on every socket read.
+//! - [`server`] — [`HttpServer`]: per-core accept loops, per-connection
+//!   handler threads, and one drain thread that executes
+//!   [`ModelRegistry::drain`](crate::store::ModelRegistry::drain) and
+//!   wakes the handler parked on each answered request id.
+//!
+//! Endpoints: `POST /v1/models/{id}:predict` (JSON `{"input": [...]}`,
+//! optional `X-Deadline-Ms` header), `GET /metrics` (the registry's
+//! Prometheus-style exposition, now including
+//! `http_requests_total{code=...}` and `http_connections_active`), and
+//! `GET /healthz`.  The registry's typed rejections become status
+//! codes: 429 overload, 400 bad input, 404 unknown model, 503
+//! quarantined, 504 deadline-shed — the README's rejection table on the
+//! wire.  `rust/tests/http_serve.rs` pins the mapping end to end over
+//! real sockets; `benches/e2e.rs` drives it with open-loop Poisson load
+//! into `BENCH_e2e.json`.
+
+pub mod parser;
+pub mod server;
+
+pub use parser::{HttpRequest, Limits, ParseError};
+pub use server::{HttpServer, ServerConfig};

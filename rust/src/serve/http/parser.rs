@@ -1,0 +1,352 @@
+//! Bounded HTTP/1.1 request parsing over any [`Read`] stream.
+//!
+//! Hand-rolled in the repo's offline idiom (no hyper/tokio in the vendor
+//! set): one buffer per connection, byte caps on both the head and the
+//! declared body, and a typed [`ParseError`] for every way a peer can be
+//! wrong — the server maps each variant to a status code (400 / 413 /
+//! 431) and *never* panics on hostile input
+//! (`rust/tests/http_serve.rs` drives the table).
+//!
+//! The subset is exactly what the front door needs: request line +
+//! headers + `Content-Length` body.  Chunked transfer encoding is
+//! rejected as [`ParseError::Bad`] rather than half-supported, and
+//! HTTP/2 preludes fail the version check the same way.
+//!
+//! Every socket read first fires the [`points::HTTP_READ`] failpoint,
+//! so chaos plans can abort a connection mid-request (`fail` surfaces as
+//! a typed `ConnectionReset`) or simulate a slow client (`delay`)
+//! without a real broken peer.
+
+use std::fmt;
+use std::io::Read;
+
+use crate::obs::faultpoint::{self, points};
+
+/// Hard caps a connection may not exceed; both map to a rejection
+/// status, never to unbounded buffering.
+#[derive(Debug, Clone, Copy)]
+pub struct Limits {
+    /// Max bytes of request line + headers (431 past this).
+    pub max_head_bytes: usize,
+    /// Max declared `Content-Length` (413 past this, checked *before*
+    /// the body is read).
+    pub max_body_bytes: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits { max_head_bytes: 8 * 1024, max_body_bytes: 1 << 20 }
+    }
+}
+
+/// Everything that can go wrong reading one request.
+#[derive(Debug)]
+pub enum ParseError {
+    /// Peer closed the connection mid-request (nothing to respond to).
+    Truncated,
+    /// Malformed request line, header, or length — the 400 bucket.
+    Bad(String),
+    /// Head grew past [`Limits::max_head_bytes`] — 431.
+    HeadTooLarge { limit: usize },
+    /// Declared body exceeds [`Limits::max_body_bytes`] — 413.
+    BodyTooLarge { got: usize, limit: usize },
+    /// Socket error (including an injected `http.read` fault).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParseError::Truncated => write!(f, "connection closed mid-request"),
+            ParseError::Bad(m) => write!(f, "bad request: {m}"),
+            ParseError::HeadTooLarge { limit } => {
+                write!(f, "request head exceeds {limit} bytes")
+            }
+            ParseError::BodyTooLarge { got, limit } => {
+                write!(f, "declared body of {got} bytes exceeds {limit}")
+            }
+            ParseError::Io(e) => write!(f, "socket error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// One parsed request.  Header names are lower-cased at parse time so
+/// lookups are case-insensitive per RFC 9110.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Raw request-target, e.g. `/v1/models/m:predict`.
+    pub target: String,
+    pub version: String,
+    headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (first occurrence).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == want).map(|(_, v)| v.as_str())
+    }
+
+    /// Should the connection close after this exchange?  HTTP/1.1
+    /// defaults to keep-alive, HTTP/1.0 to close.
+    pub fn wants_close(&self) -> bool {
+        match self.header("connection") {
+            Some(v) => v.eq_ignore_ascii_case("close"),
+            None => self.version == "HTTP/1.0",
+        }
+    }
+}
+
+/// Read into `buf`, firing the `http.read` failpoint first; a triggered
+/// `fail` surfaces as the same typed error a peer reset would.
+fn read_more<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<usize, ParseError> {
+    if faultpoint::fire(points::HTTP_READ) {
+        return Err(ParseError::Io(std::io::Error::new(
+            std::io::ErrorKind::ConnectionReset,
+            "injected http.read fault",
+        )));
+    }
+    let mut chunk = [0u8; 4096];
+    let n = r.read(&mut chunk).map_err(ParseError::Io)?;
+    buf.extend_from_slice(&chunk[..n]);
+    Ok(n)
+}
+
+/// Byte offset of the `\r\n\r\n` head terminator, if complete.
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Read one complete request from `r`.
+///
+/// `buf` is the connection's carry-over buffer: bytes of a pipelined
+/// next request stay in it between calls, so pass the same `Vec` for
+/// the lifetime of the connection.  Returns `Ok(None)` on a clean close
+/// at a request boundary (the keep-alive end-of-session), and
+/// [`ParseError::Truncated`] on a close with a request half-read.
+pub fn read_request<R: Read>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    limits: &Limits,
+) -> Result<Option<HttpRequest>, ParseError> {
+    let head_len = loop {
+        if let Some(p) = head_end(buf) {
+            break p;
+        }
+        if buf.len() > limits.max_head_bytes {
+            return Err(ParseError::HeadTooLarge { limit: limits.max_head_bytes });
+        }
+        if read_more(r, buf)? == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            return Err(ParseError::Truncated);
+        }
+    };
+
+    let head = std::str::from_utf8(&buf[..head_len])
+        .map_err(|_| ParseError::Bad("request head is not utf-8".into()))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => {
+            (m.to_string(), t.to_string(), v.to_string())
+        }
+        _ => return Err(ParseError::Bad(format!("malformed request line {request_line:?}"))),
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(ParseError::Bad(format!("unsupported version {version:?}")));
+    }
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(ParseError::Bad(format!("header line without ':': {line:?}")));
+        };
+        if name.is_empty() || name.contains(' ') || name.contains('\t') {
+            return Err(ParseError::Bad(format!("malformed header name {name:?}")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+    if headers.iter().any(|(k, _)| k == "transfer-encoding") {
+        return Err(ParseError::Bad("transfer-encoding is not supported".into()));
+    }
+
+    let content_len = {
+        let mut lens = headers.iter().filter(|(k, _)| k == "content-length").map(|(_, v)| v);
+        match lens.next() {
+            None => 0usize,
+            Some(v) => {
+                if lens.any(|other| other != v) {
+                    return Err(ParseError::Bad("conflicting content-length headers".into()));
+                }
+                if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+                    return Err(ParseError::Bad(format!("bad content-length {v:?}")));
+                }
+                v.parse::<usize>()
+                    .map_err(|_| ParseError::Bad(format!("content-length {v:?} overflows")))?
+            }
+        }
+    };
+    // The 413 fires off the *declared* length — the oversized body is
+    // never buffered.
+    if content_len > limits.max_body_bytes {
+        return Err(ParseError::BodyTooLarge { got: content_len, limit: limits.max_body_bytes });
+    }
+
+    let total = head_len + 4 + content_len;
+    while buf.len() < total {
+        if read_more(r, buf)? == 0 {
+            return Err(ParseError::Truncated);
+        }
+    }
+    let body = buf[head_len + 4..total].to_vec();
+    buf.drain(..total);
+    Ok(Some(HttpRequest { method, target, version, headers, body }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse_bytes(bytes: &[u8]) -> Result<Option<HttpRequest>, ParseError> {
+        let mut buf = Vec::new();
+        read_request(&mut Cursor::new(bytes), &mut buf, &Limits::default())
+    }
+
+    #[test]
+    fn parses_post_with_body_and_case_insensitive_headers() {
+        let req = parse_bytes(
+            b"POST /v1/models/m:predict HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\
+              X-Deadline-Ms: 40\r\n\r\nhello",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/v1/models/m:predict");
+        assert_eq!(req.body, b"hello");
+        assert_eq!(req.header("x-deadline-ms"), Some("40"));
+        assert_eq!(req.header("X-DEADLINE-MS"), Some("40"));
+        assert!(!req.wants_close(), "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_pipelined_requests_stay_buffered() {
+        assert!(parse_bytes(b"").unwrap().is_none(), "clean close at the boundary");
+        // Two pipelined GETs in one stream: the carry-over buffer holds
+        // the second across calls.
+        let two = b"GET /metrics HTTP/1.1\r\n\r\nGET /healthz HTTP/1.1\r\n\r\n";
+        let mut buf = Vec::new();
+        let mut c = Cursor::new(&two[..]);
+        let a = read_request(&mut c, &mut buf, &Limits::default()).unwrap().unwrap();
+        let b = read_request(&mut c, &mut buf, &Limits::default()).unwrap().unwrap();
+        assert_eq!((a.target.as_str(), b.target.as_str()), ("/metrics", "/healthz"));
+        assert!(read_request(&mut c, &mut buf, &Limits::default()).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncation_table_never_panics() {
+        // Cut a valid request at every byte boundary: each prefix must
+        // come back Truncated (or parse, for the full message) — never
+        // panic, never hang.
+        let full = b"POST /v1/models/m:predict HTTP/1.1\r\nContent-Length: 4\r\n\r\nbody";
+        for cut in 0..full.len() {
+            match parse_bytes(&full[..cut]) {
+                Err(ParseError::Truncated) => {}
+                Ok(None) if cut == 0 => {}
+                other => panic!("prefix of {cut} bytes: unexpected {other:?}"),
+            }
+        }
+        assert_eq!(parse_bytes(full).unwrap().unwrap().body, b"body");
+    }
+
+    #[test]
+    fn malformed_heads_are_typed_400s() {
+        for bad in [
+            &b"NOT_A_REQUEST\r\n\r\n"[..],
+            b"GET /x HTTP/2.0\r\n\r\n",
+            b"GET /x HTTP/1.1 extra\r\n\r\n",
+            b"GET  HTTP/1.1\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nbad name: v\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nContent-Length: -5\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nContent-Length: 4x\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 4\r\n\r\nabcd",
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nH: \xff\xfe\r\n\r\n",
+        ] {
+            assert!(
+                matches!(parse_bytes(bad), Err(ParseError::Bad(_))),
+                "{:?} must be a 400-class parse error",
+                String::from_utf8_lossy(bad)
+            );
+        }
+        // Duplicate but *agreeing* content-lengths are tolerated.
+        let ok = parse_bytes(b"POST /x HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nok");
+        assert_eq!(ok.unwrap().unwrap().body, b"ok");
+    }
+
+    #[test]
+    fn head_and_body_limits_are_enforced() {
+        let limits = Limits { max_head_bytes: 128, max_body_bytes: 16 };
+        let mut buf = Vec::new();
+        let huge_head = format!("GET /x HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(4096));
+        assert!(matches!(
+            read_request(&mut Cursor::new(huge_head.as_bytes()), &mut buf, &limits),
+            Err(ParseError::HeadTooLarge { limit: 128 })
+        ));
+        // Declared oversize body rejects off the header alone — note the
+        // body bytes are not even present in the stream.
+        let mut buf = Vec::new();
+        let big = b"POST /x HTTP/1.1\r\nContent-Length: 17\r\n\r\n";
+        assert!(matches!(
+            read_request(&mut Cursor::new(&big[..]), &mut buf, &limits),
+            Err(ParseError::BodyTooLarge { got: 17, limit: 16 })
+        ));
+    }
+
+    #[test]
+    fn http10_and_connection_close_want_close() {
+        let req = parse_bytes(b"GET /x HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(req.wants_close());
+        let req = parse_bytes(b"GET /x HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(req.wants_close());
+        let req = parse_bytes(b"GET /x HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!req.wants_close(), "explicit keep-alive overrides the 1.0 default");
+    }
+
+    #[test]
+    fn injected_read_fault_aborts_like_a_peer_reset() {
+        let _s = crate::obs::faultpoint::test_serial();
+        let plan = crate::obs::FaultPlan::new().with(
+            points::HTTP_READ,
+            None,
+            crate::obs::FaultAction::Fail,
+            1,
+            1,
+        );
+        let _g = faultpoint::arm(&plan);
+        let mut buf = Vec::new();
+        let err = read_request(
+            &mut Cursor::new(&b"GET /x HTTP/1.1\r\n\r\n"[..]),
+            &mut buf,
+            &Limits::default(),
+        )
+        .expect_err("armed http.read fault must abort the read");
+        match err {
+            ParseError::Io(e) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::ConnectionReset)
+            }
+            other => panic!("expected Io, got {other:?}"),
+        }
+    }
+}

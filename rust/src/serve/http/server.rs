@@ -1,0 +1,638 @@
+//! The HTTP/1.1 front door: `std::net` accept loops over a shared
+//! [`ModelRegistry`] — no tokio, no hyper, in the repo's hand-rolled
+//! offline idiom.
+//!
+//! Threads:
+//!
+//! - **Accept loops** (one per core by default, each on a
+//!   `try_clone`d listener) admit connections under a hard
+//!   [`ServerConfig::max_connections`] bound — past it a connection gets
+//!   an immediate 503 and closes, the socket-layer twin of the
+//!   batcher's bounded admission.
+//! - **Connection handlers** (one thread per admitted connection) run
+//!   the keep-alive read → route → respond loop over the bounded parser
+//!   ([`super::parser`]).
+//! - **One drain thread** owns [`ModelRegistry::drain`]: it cuts due
+//!   micro-batches across every tenant and delivers each [`Answer`] to
+//!   the handler thread parked on that request id (condvar wake).  The
+//!   serving hot path stays exactly the registry's — the front door
+//!   adds routing and waiting, never a second batching layer.
+//!
+//! Status mapping is the README's rejection table made wire-visible:
+//! [`RegistryError::Overloaded`] → 429, [`RegistryError::BadInput`] /
+//! unparseable JSON → 400, unknown model → 404, quarantined tenant →
+//! 503 at admission (`Retry-After` set), expired per-request deadline
+//! (`X-Deadline-Ms`) → 504 after the registry sheds it, oversized body
+//! → 413 off the declared length, oversized head → 431.  Every
+//! response is counted in `http_requests_total{code=...}` inside the
+//! registry's own exposition, which `GET /metrics` serves.
+//!
+//! Shutdown is graceful: [`HttpServer::shutdown`] stops admitting,
+//! wakes the accept loops with self-connects, lets in-flight exchanges
+//! finish (handlers close their connection after the current response),
+//! then flush-drains the registry until no batch can make progress.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::obs::{labels, Counter, Gauge};
+use crate::store::{Answer, ModelRegistry, RegistryError};
+use crate::util::json::{self, Json};
+
+use super::parser::{read_request, HttpRequest, Limits, ParseError};
+
+/// Front-door policy knobs (the per-tenant serving policy stays in
+/// [`TenantConfig`](crate::store::TenantConfig)).
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Accept threads; 0 = one per available core.
+    pub accept_threads: usize,
+    /// Hard cap on concurrently open connections; a connection past it
+    /// is answered 503 and closed at accept time.
+    pub max_connections: usize,
+    /// Parser byte caps (head → 431, declared body → 413).
+    pub limits: Limits,
+    /// How long a handler waits for an answer when the request carries
+    /// no deadline header; expiry is a 503 (the tenant is quarantined,
+    /// stalled, or the batch was lost).
+    pub request_timeout: Duration,
+    /// Extra wait past an explicit `X-Deadline-Ms` before answering
+    /// 504 — covers a batch cut just before the deadline that is still
+    /// in compute.
+    pub shed_grace: Duration,
+    /// Drain-thread sleep when no batch was due (bounds idle spin while
+    /// staying well under the default 5 ms tenant flush deadline).
+    pub drain_idle: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            accept_threads: 0,
+            max_connections: 256,
+            limits: Limits::default(),
+            request_timeout: Duration::from_secs(5),
+            shed_grace: Duration::from_millis(100),
+            drain_idle: Duration::from_micros(500),
+        }
+    }
+}
+
+/// Status codes this server can emit — each is pre-registered as an
+/// `http_requests_total{code=...}` counter so the hot path never takes
+/// the registration lock.
+const STATUS_CODES: [u16; 10] = [200, 400, 404, 405, 408, 413, 429, 431, 503, 504];
+
+fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Content Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// One response, ready to serialize.
+struct Reply {
+    status: u16,
+    content_type: &'static str,
+    body: String,
+}
+
+impl Reply {
+    fn json(status: u16, body: String) -> Reply {
+        Reply { status, content_type: "application/json", body }
+    }
+
+    fn text(status: u16, body: String) -> Reply {
+        Reply { status, content_type: "text/plain; charset=utf-8", body }
+    }
+
+    fn error(status: u16, msg: &str) -> Reply {
+        Reply::json(status, format!("{{\"error\": \"{}\"}}\n", json_escape(msg)))
+    }
+}
+
+/// Escape a string for embedding in a JSON document.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn render_answer(model: &str, request: u64, logits: &[f32]) -> String {
+    let mut s = String::with_capacity(64 + 16 * logits.len());
+    s.push_str("{\"model\": \"");
+    s.push_str(&json_escape(model));
+    s.push_str("\", \"request\": ");
+    s.push_str(&request.to_string());
+    s.push_str(", \"logits\": [");
+    for (i, v) in logits.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        s.push_str(&format!("{v}"));
+    }
+    s.push_str("]}\n");
+    s
+}
+
+fn write_response<W: Write>(w: &mut W, reply: &Reply, close: bool) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
+        reply.status,
+        status_reason(reply.status),
+        reply.content_type,
+        reply.body.len()
+    );
+    if matches!(reply.status, 429 | 503) {
+        head.push_str("retry-after: 1\r\n");
+    }
+    if close {
+        head.push_str("connection: close\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(reply.body.as_bytes())?;
+    w.flush()
+}
+
+/// Handler threads parked on their request id; the drain thread fills
+/// slots and wakes everyone.  A slot of `None` is still waiting; a
+/// removed slot means the waiter gave up (its late answer is dropped).
+#[derive(Default)]
+struct Waiters {
+    slots: Mutex<HashMap<u64, Option<Vec<f32>>>>,
+    ready: Condvar,
+}
+
+impl Waiters {
+    /// Must be called *before* the push so the drain thread can never
+    /// answer an unregistered id.
+    fn register(&self, id: u64) {
+        self.slots.lock().unwrap().insert(id, None);
+    }
+
+    /// Roll back a registration whose push was refused.
+    fn forget(&self, id: u64) {
+        self.slots.lock().unwrap().remove(&id);
+    }
+
+    fn deliver(&self, answers: Vec<Answer>) {
+        if answers.is_empty() {
+            return;
+        }
+        let mut g = self.slots.lock().unwrap();
+        let mut delivered = false;
+        for a in answers {
+            if let Some(slot) = g.get_mut(&a.request) {
+                *slot = Some(a.logits);
+                delivered = true;
+            }
+        }
+        drop(g);
+        if delivered {
+            self.ready.notify_all();
+        }
+    }
+
+    /// Park until the slot fills or `until` passes; either way the slot
+    /// is gone afterwards.
+    fn wait(&self, id: u64, until: Instant) -> Option<Vec<f32>> {
+        let mut g = self.slots.lock().unwrap();
+        loop {
+            // `Some(None)` is "still waiting"; anything else (filled, or
+            // somehow gone) ends the wait.
+            if !matches!(g.get(&id), Some(None)) {
+                return g.remove(&id).flatten();
+            }
+            let now = Instant::now();
+            if now >= until {
+                g.remove(&id);
+                return None;
+            }
+            g = self.ready.wait_timeout(g, until - now).unwrap().0;
+        }
+    }
+}
+
+struct Shared {
+    reg: Arc<ModelRegistry>,
+    cfg: ServerConfig,
+    /// Stop admitting + close connections after their current exchange.
+    stop: AtomicBool,
+    /// Second phase: the drain thread may exit once it cannot progress.
+    drain_exit: AtomicBool,
+    active: AtomicUsize,
+    next_req: AtomicU64,
+    waiters: Waiters,
+    codes: Vec<(u16, Arc<Counter>)>,
+    conn_gauge: Arc<Gauge>,
+}
+
+impl Shared {
+    fn count_code(&self, status: u16) {
+        if let Some((_, c)) = self.codes.iter().find(|(s, _)| *s == status) {
+            c.inc();
+        }
+    }
+}
+
+/// A running front door.  Dropping it shuts down gracefully (idempotent
+/// with an explicit [`HttpServer::shutdown`]).
+pub struct HttpServer {
+    addr: SocketAddr,
+    inner: Arc<Shared>,
+    accepters: Vec<JoinHandle<()>>,
+    drainer: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `reg`'s tenants.
+    pub fn start(
+        reg: Arc<ModelRegistry>,
+        addr: &str,
+        cfg: ServerConfig,
+    ) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let n_accept = if cfg.accept_threads == 0 {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        } else {
+            cfg.accept_threads
+        };
+        // Clone listeners up front so a failure leaves nothing spawned.
+        let listeners = (0..n_accept)
+            .map(|_| listener.try_clone())
+            .collect::<std::io::Result<Vec<_>>>()?;
+        let codes = STATUS_CODES
+            .iter()
+            .map(|&c| {
+                let code = c.to_string();
+                (c, reg.metrics().counter("http_requests_total", labels(&[("code", &code)])))
+            })
+            .collect();
+        let conn_gauge = reg.metrics().gauge("http_connections_active", labels(&[]));
+        let shared = Arc::new(Shared {
+            reg,
+            cfg,
+            stop: AtomicBool::new(false),
+            drain_exit: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            next_req: AtomicU64::new(0),
+            waiters: Waiters::default(),
+            codes,
+            conn_gauge,
+        });
+        let drainer = {
+            let sh = Arc::clone(&shared);
+            std::thread::spawn(move || drain_loop(&sh))
+        };
+        let accepters = listeners
+            .into_iter()
+            .map(|l| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || accept_loop(&sh, l))
+            })
+            .collect();
+        Ok(HttpServer { addr: local, inner: shared, accepters, drainer: Some(drainer) })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful shutdown: stop admitting, finish in-flight exchanges,
+    /// flush-drain queued batches, join every thread.
+    pub fn shutdown(mut self) {
+        self.stop_impl();
+    }
+
+    fn stop_impl(&mut self) {
+        self.inner.stop.store(true, Ordering::Release);
+        // Self-connect once per accept loop: each blocked accept() wakes,
+        // sees the stop flag, and returns.
+        for _ in 0..self.accepters.len() {
+            let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(250));
+        }
+        for h in self.accepters.drain(..) {
+            let _ = h.join();
+        }
+        // Handlers close after their current exchange (idle keep-alive
+        // connections notice within their read timeout); bound the wait
+        // so a wedged peer cannot hold shutdown hostage.
+        let deadline = Instant::now() + self.inner.cfg.request_timeout + Duration::from_secs(2);
+        while self.inner.active.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        self.inner.drain_exit.store(true, Ordering::Release);
+        if let Some(h) = self.drainer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        if self.drainer.is_some() || !self.accepters.is_empty() {
+            self.stop_impl();
+        }
+    }
+}
+
+fn drain_loop(shared: &Shared) {
+    loop {
+        // Normal mode cuts only due batches; once stopping, flush
+        // partials so in-flight waiters drain at shutdown speed.
+        let flush = shared.stop.load(Ordering::Acquire);
+        let answers = shared.reg.drain(flush);
+        let drained = !answers.is_empty();
+        shared.waiters.deliver(answers);
+        if !drained {
+            // Exit only when flush-draining makes no progress: queued
+            // requests of a quarantined tenant can never complete, so
+            // "pending == 0" would hang here.
+            if shared.drain_exit.load(Ordering::Acquire) {
+                return;
+            }
+            std::thread::sleep(shared.cfg.drain_idle);
+        }
+    }
+}
+
+fn accept_loop(shared: &Arc<Shared>, listener: TcpListener) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _peer)) => s,
+            Err(_) => {
+                if shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::Acquire) {
+            // The shutdown self-connect (or a straggler): stop admitting.
+            return;
+        }
+        if shared.active.load(Ordering::Acquire) >= shared.cfg.max_connections {
+            // Socket-layer admission control, same shape as the
+            // batcher's bounded queue: typed refusal, never growth.
+            shared.count_code(503);
+            let mut s = stream;
+            let _ = write_response(&mut s, &Reply::error(503, "connection limit reached"), true);
+            continue;
+        }
+        shared.active.fetch_add(1, Ordering::AcqRel);
+        shared.conn_gauge.set(shared.active.load(Ordering::Acquire) as i64);
+        let sh = Arc::clone(shared);
+        std::thread::spawn(move || {
+            handle_conn(&sh, stream);
+            sh.active.fetch_sub(1, Ordering::AcqRel);
+            sh.conn_gauge.set(sh.active.load(Ordering::Acquire) as i64);
+        });
+    }
+}
+
+fn handle_conn(shared: &Shared, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    // Short read timeout so idle keep-alive connections re-check the
+    // stop flag; request reads spanning several timeouts are budgeted
+    // below.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    let mut stream = stream;
+    let mut buf = Vec::new();
+    let mut stalled_since: Option<Instant> = None;
+    loop {
+        match read_request(&mut stream, &mut buf, &shared.cfg.limits) {
+            Ok(None) => return,
+            Ok(Some(req)) => {
+                stalled_since = None;
+                let close = req.wants_close() || shared.stop.load(Ordering::Acquire);
+                let reply = route(shared, &req);
+                shared.count_code(reply.status);
+                if write_response(&mut stream, &reply, close).is_err() || close {
+                    return;
+                }
+            }
+            Err(ParseError::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if shared.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                if buf.is_empty() {
+                    continue; // idle keep-alive between requests
+                }
+                // Mid-request stall: give the client one request_timeout
+                // of wall clock to finish writing, then refuse.
+                let t0 = *stalled_since.get_or_insert_with(Instant::now);
+                if t0.elapsed() >= shared.cfg.request_timeout {
+                    let reply = Reply::error(408, "timed out mid-request");
+                    shared.count_code(reply.status);
+                    let _ = write_response(&mut stream, &reply, true);
+                    return;
+                }
+            }
+            // Peer gone (or an injected http.read reset): nothing to
+            // answer.
+            Err(ParseError::Truncated) | Err(ParseError::Io(_)) => return,
+            Err(e) => {
+                let reply = match &e {
+                    ParseError::HeadTooLarge { .. } => Reply::error(431, &e.to_string()),
+                    ParseError::BodyTooLarge { .. } => Reply::error(413, &e.to_string()),
+                    _ => Reply::error(400, &e.to_string()),
+                };
+                shared.count_code(reply.status);
+                let _ = write_response(&mut stream, &reply, true);
+                return;
+            }
+        }
+    }
+}
+
+/// `/v1/models/{id}:predict` → the model id, if the target matches.
+fn predict_target(target: &str) -> Option<&str> {
+    let model = target.strip_prefix("/v1/models/")?.strip_suffix(":predict")?;
+    if model.is_empty() {
+        None
+    } else {
+        Some(model)
+    }
+}
+
+fn route(shared: &Shared, req: &HttpRequest) -> Reply {
+    if let Some(model) = predict_target(&req.target) {
+        if req.method != "POST" {
+            return Reply::error(405, "predict requires POST");
+        }
+        return predict(shared, model, req);
+    }
+    match (req.method.as_str(), req.target.as_str()) {
+        ("GET", "/metrics") => Reply::text(200, shared.reg.metrics_text()),
+        ("GET", "/healthz") => Reply::text(200, "ok\n".to_string()),
+        (_, "/metrics" | "/healthz") => Reply::error(405, "use GET"),
+        _ => Reply::error(404, &format!("no route for {} {}", req.method, req.target)),
+    }
+}
+
+fn predict(shared: &Shared, model: &str, req: &HttpRequest) -> Reply {
+    let Ok(text) = std::str::from_utf8(&req.body) else {
+        return Reply::error(400, "request body is not utf-8");
+    };
+    let doc = match json::parse(text) {
+        Ok(d) => d,
+        Err(e) => return Reply::error(400, &format!("request body is not json: {e}")),
+    };
+    let Some(arr) = doc.get("input").and_then(Json::as_arr) else {
+        return Reply::error(400, "request body must be {\"input\": [numbers]}");
+    };
+    let mut x = Vec::with_capacity(arr.len());
+    for v in arr {
+        match v.as_f64() {
+            Some(n) => x.push(n as f32),
+            None => return Reply::error(400, "\"input\" must contain numbers only"),
+        }
+    }
+    let deadline = match req.header("x-deadline-ms") {
+        None => None,
+        Some(v) => match v.parse::<u64>() {
+            Ok(ms) => Some(Instant::now() + Duration::from_millis(ms)),
+            Err(_) => return Reply::error(400, &format!("bad X-Deadline-Ms value {v:?}")),
+        },
+    };
+    // Quarantined tenants are refused at admission — queueing into a
+    // breaker-open tenant would only time the request out later.
+    match shared.reg.healthy(model) {
+        Ok(true) => {}
+        Ok(false) => {
+            return Reply::error(503, &format!("model {model:?} is quarantined, retry later"))
+        }
+        Err(e @ RegistryError::NoSuchModel(_)) => return Reply::error(404, &e.to_string()),
+        Err(e) => return Reply::error(400, &e.to_string()),
+    }
+
+    let rid = shared.next_req.fetch_add(1, Ordering::Relaxed);
+    // Register before pushing: the drain thread may answer immediately.
+    shared.waiters.register(rid);
+    if let Err(e) = shared.reg.push_with_deadline(model, rid, x, deadline) {
+        shared.waiters.forget(rid);
+        return match e {
+            RegistryError::Overloaded { .. } => Reply::error(429, &e.to_string()),
+            RegistryError::BadInput { .. } => Reply::error(400, &e.to_string()),
+            RegistryError::NoSuchModel(_) => Reply::error(404, &e.to_string()),
+            other => Reply::error(400, &other.to_string()),
+        };
+    }
+    let wait_until = match deadline {
+        Some(d) => d + shared.cfg.shed_grace,
+        None => Instant::now() + shared.cfg.request_timeout,
+    };
+    match shared.waiters.wait(rid, wait_until) {
+        Some(logits) => Reply::json(200, render_answer(model, rid, &logits)),
+        None => {
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                Reply::error(504, "deadline exceeded: the request was shed before compute")
+            } else {
+                Reply::error(
+                    503,
+                    "no answer within the request timeout (tenant quarantined or stalled)",
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_target_routes_exactly() {
+        assert_eq!(predict_target("/v1/models/lenet:predict"), Some("lenet"));
+        assert_eq!(predict_target("/v1/models/a-b.c_d:predict"), Some("a-b.c_d"));
+        assert_eq!(predict_target("/v1/models/:predict"), None);
+        assert_eq!(predict_target("/v1/models/lenet"), None);
+        assert_eq!(predict_target("/v2/models/lenet:predict"), None);
+        assert_eq!(predict_target("/metrics"), None);
+    }
+
+    #[test]
+    fn answers_render_as_parseable_json() {
+        let body = render_answer("le\"net", 42, &[1.0, -0.5, 3.25]);
+        let doc = json::parse(&body).expect("answer must round-trip through our own parser");
+        assert_eq!(doc.get("model").unwrap().as_str(), Some("le\"net"));
+        assert_eq!(doc.get("request").unwrap().as_usize(), Some(42));
+        let logits: Vec<f64> =
+            doc.get("logits").unwrap().as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(logits, vec![1.0, -0.5, 3.25]);
+    }
+
+    #[test]
+    fn error_bodies_escape_quotes() {
+        let r = Reply::error(404, "no model \"ghost\" in the registry");
+        let doc = json::parse(&r.body).unwrap();
+        assert_eq!(doc.get("error").unwrap().as_str(), Some("no model \"ghost\" in the registry"));
+    }
+
+    #[test]
+    fn responses_carry_length_and_close_headers() {
+        let mut out = Vec::new();
+        write_response(&mut out, &Reply::text(200, "hello".into()), false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("content-length: 5\r\n"), "{text}");
+        assert!(!text.contains("connection: close"), "{text}");
+        assert!(text.ends_with("\r\n\r\nhello"), "{text}");
+
+        let mut out = Vec::new();
+        write_response(&mut out, &Reply::error(429, "queue full"), true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("retry-after: 1\r\n"), "{text}");
+        assert!(text.contains("connection: close\r\n"), "{text}");
+    }
+
+    #[test]
+    fn waiters_deliver_and_timeout() {
+        let w = Waiters::default();
+        w.register(7);
+        w.deliver(vec![Answer { model: "m".into(), request: 7, logits: vec![1.0, 2.0] }]);
+        assert_eq!(w.wait(7, Instant::now()), Some(vec![1.0, 2.0]));
+        // Unregistered / late answers are dropped, not leaked.
+        w.deliver(vec![Answer { model: "m".into(), request: 9, logits: vec![3.0] }]);
+        assert!(w.slots.lock().unwrap().is_empty());
+        // A waiter whose answer never comes times out and cleans up.
+        w.register(8);
+        assert_eq!(w.wait(8, Instant::now() + Duration::from_millis(10)), None);
+        assert!(w.slots.lock().unwrap().is_empty());
+    }
+}

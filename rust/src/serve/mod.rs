@@ -80,7 +80,14 @@
 //! bitwise-identically.  The
 //! [`obs::faultpoint`](crate::obs::faultpoint) harness injects panics /
 //! delays / store errors deterministically into the pool, the session's
-//! shard execution, and the store reader (`rust/tests/chaos_serve.rs`).
+//! shard execution, the store reader, and the HTTP front door's socket
+//! reads (`rust/tests/chaos_serve.rs`, `rust/tests/http_serve.rs`).
+//!
+//! The network surface is [`http`]: `repro serve` binds an
+//! [`HttpServer`] over a [`store::ModelRegistry`](crate::store::ModelRegistry)
+//! and maps every typed rejection above to a status code
+//! (429 / 400 / 404 / 503 / 504) — see the module doc for the endpoint
+//! table.
 //!
 //! Compiled models need not be rebuilt from seeds on every cold start:
 //! [`crate::store`] persists them as `.lfsrpack` artifacts whose on-disk
@@ -93,10 +100,12 @@
 
 pub mod batcher;
 pub mod compiled;
+pub mod http;
 pub mod pool;
 pub mod session;
 
 pub use batcher::{Batcher, BatcherMetrics, MicroBatch, PushError, Request, ServeStats};
+pub use http::{HttpServer, ServerConfig};
 pub use compiled::{
     parallel_keep_sequence, shard_ranges, synthetic_lenet300, synthetic_lenet300_seeded,
     synthetic_vgg16, synthetic_vgg16_scaled, CompiledLayer, CompiledModel, LayerKindCounts,

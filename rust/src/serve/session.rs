@@ -79,7 +79,7 @@ pub struct SessionMetrics {
 
 impl SessionMetrics {
     /// Build one span pair per layer of `model`; `sample_every` is the
-    /// [`Sampler`] period (1 = time every inference call).
+    /// [`Sampler`] period (1 = time every inference call, 0 = never).
     pub fn for_model(model: &CompiledModel, sample_every: u64) -> SessionMetrics {
         let layers = model
             .layers
@@ -257,7 +257,10 @@ impl InferenceSession {
     }
 
     /// Turn on per-layer span timing, sampled every `sample_every`-th
-    /// inference call (1 = every call).  Returns the shared
+    /// inference call (1 = every call, **0 = spans off** — the series
+    /// exist but never record, matching the
+    /// [`TenantConfig::span_sample_every`](crate::store::TenantConfig)
+    /// contract on this direct API too).  Returns the shared
     /// [`SessionMetrics`] handle so the caller can register it into a
     /// [`MetricsRegistry`] and read the spans later.
     pub fn enable_metrics(&mut self, sample_every: u64) -> Arc<SessionMetrics> {
@@ -747,6 +750,31 @@ mod tests {
         assert_eq!(m.merged_stage(Stage::ShardExecute).count(), 6);
         assert_eq!(m.merged_stage(Stage::PanelPack).count(), 6);
         // Timing must not perturb the numerics.
+        let plain = InferenceSession::new(toy_model(2), 1).infer_batch(&x, batch);
+        for (&u, &v) in session.infer_batch(&x, batch).iter().zip(&plain) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn enable_metrics_zero_means_spans_off() {
+        // The direct API honors the same contract the registry documents
+        // for `span_sample_every`: 0 = per-layer spans off.  (It used to
+        // clamp to 1 — sample *everything* — silently inverting the
+        // knob.)  Numerics are untouched either way.
+        let mut rng = Pcg32::new(59);
+        let batch = 2;
+        let x: Vec<f32> = (0..batch * 12).map(|_| rng.next_normal()).collect();
+        let mut session = InferenceSession::new(toy_model(2), 1);
+        let m = session.enable_metrics(0);
+        assert_eq!(m.sampler.period(), 0, "0 must not clamp to 1");
+        for _ in 0..4 {
+            session.infer_batch(&x, batch);
+        }
+        for l in &m.layers {
+            assert_eq!(l.panel_pack.count(), 0, "disabled sampler recorded a pack span");
+            assert_eq!(l.shard_execute.count(), 0, "disabled sampler recorded an execute span");
+        }
         let plain = InferenceSession::new(toy_model(2), 1).infer_batch(&x, batch);
         for (&u, &v) in session.infer_batch(&x, batch).iter().zip(&plain) {
             assert_eq!(u.to_bits(), v.to_bits());

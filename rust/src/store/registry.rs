@@ -317,8 +317,9 @@ impl ModelRegistry {
     /// Prometheus-style text exposition of every metric the registry
     /// owns — per-tenant counters/gauges/span histograms, the shared
     /// pool counters, and the allocation total (refreshed here).
-    /// ROADMAP item 2's `/metrics` endpoint serves this string verbatim;
-    /// `repro stats --prom` prints it today.
+    /// `GET /metrics` on the HTTP front door
+    /// ([`serve::http`](crate::serve::http)) serves this string
+    /// verbatim; `repro stats --prom` prints it without a socket.
     pub fn metrics_text(&self) -> String {
         self.alloc_gauge.set(total_allocations() as i64);
         self.metrics.render_text()
@@ -560,6 +561,14 @@ impl ModelRegistry {
         Ok(e.session.infer_batch(x, batch))
     }
 
+    /// Lock-free tenant health probe: `false` while `model` is panic-
+    /// quarantined behind its breaker (one relaxed gauge load — cheap
+    /// enough for the HTTP front door to answer 503 at admission
+    /// instead of queueing into a tenant that cannot cut batches).
+    pub fn healthy(&self, model: &str) -> Result<bool, RegistryError> {
+        Ok(self.entry(model)?.breaker.is_healthy())
+    }
+
     /// Serving stats for one model.
     pub fn stats(&self, model: &str) -> Result<ServeStats, RegistryError> {
         let e = self.entry(model)?;
@@ -681,6 +690,7 @@ mod tests {
         assert_eq!(answers[0].request, 7);
         let s = reg.stats("m").unwrap();
         assert_eq!(s.requests, 1);
+        assert_eq!(s.completed, 1);
         assert_eq!(s.padded, 7);
     }
 
@@ -727,6 +737,8 @@ mod tests {
         assert_eq!(info[0].in_dim, 12);
         assert_eq!(info[0].out_dim, 5);
         assert!(info[0].healthy, "a fresh tenant starts healthy");
+        assert!(reg.healthy("a").unwrap(), "direct probe agrees with list()");
+        assert!(matches!(reg.healthy("ghost"), Err(RegistryError::NoSuchModel(_))));
         assert_eq!(reg.evict("a"), Some(0), "nothing queued, nothing shed");
         assert!(reg.evict("a").is_none());
         assert!(reg.is_empty());
@@ -782,7 +794,8 @@ mod tests {
         assert_eq!(answers[0].request, 1);
         let s = reg.stats("m").unwrap();
         assert_eq!(s.shed, 1);
-        assert_eq!(s.requests, 1, "only the live request completed");
+        assert_eq!(s.requests, 2, "both requests were offered and accepted");
+        assert_eq!(s.completed, 1, "only the live request completed");
     }
 
     #[test]

@@ -101,7 +101,8 @@ fn overload_past_capacity_is_bounded_typed_and_exactly_counted() {
     assert_eq!(answers.len(), accepted as usize);
     let s = reg.stats("m").unwrap();
     assert_eq!(s.overloaded, rejected);
-    assert_eq!(s.requests, accepted);
+    assert_eq!(s.requests, accepted, "every accepted push is counted as offered");
+    assert_eq!(s.completed, accepted, "and every accepted push was answered");
     let text = reg.metrics_text();
     assert!(text.contains("serve_overload_total{model=\"m\"} 12\n"), "{text}");
 }
@@ -128,7 +129,8 @@ fn expired_deadlines_shed_before_compute_not_served_late() {
     assert_eq!(ids, vec![1, 3], "expired requests never reach the pool");
     let s = reg.stats("m").unwrap();
     assert_eq!(s.shed, 2);
-    assert_eq!(s.requests, 2, "only live requests completed");
+    assert_eq!(s.requests, 4, "all four pushes were accepted");
+    assert_eq!(s.completed, 2, "only live requests completed");
     assert_eq!(s.batches, 1, "no compute was spent on the shed rows");
     let text = reg.metrics_text();
     assert!(text.contains("serve_shed_total{model=\"m\"} 2\n"), "{text}");
@@ -250,7 +252,8 @@ fn breaker_walks_healthy_unhealthy_halfopen_restored_on_script() {
     assert_eq!(answers[0].request, 4);
     assert!(healthy(&reg), "probe success restores Healthy");
     let s = reg.stats("m").unwrap();
-    assert_eq!((s.failed, s.requests), (3, 1));
+    assert_eq!((s.failed, s.completed), (3, 1));
+    assert_eq!(s.requests, 4, "all four probes were offered and accepted");
 }
 
 #[test]
@@ -368,19 +371,12 @@ fn admission_accounting_is_exact_under_8_thread_contention() {
     assert!(reg.pending() <= CAPACITY, "queue never exceeds capacity");
     assert_eq!(reg.pending() as u64, accepted, "every accepted request is queued");
     let s = reg.stats("m").unwrap();
-    let m_requests = {
-        // `requests` in ServeStats counts completions; read the raw
-        // accepted counter from the exposition instead.
-        let text = reg.metrics_text();
-        let line = text
-            .lines()
-            .find(|l| l.starts_with("serve_requests_total{model=\"m\"}"))
-            .expect("requests series");
-        line.rsplit(' ').next().unwrap().parse::<u64>().unwrap()
-    };
-    assert_eq!(m_requests, accepted);
+    // `requests` now reports pushes directly (it used to alias the
+    // completion counter, forcing this test to scrape the exposition).
+    assert_eq!(s.requests, accepted);
+    assert_eq!(s.completed, 0, "nothing drained, nothing completed");
     assert_eq!(
-        m_requests + s.overloaded,
+        s.requests + s.overloaded,
         THREADS * PER_THREAD,
         "accepted + refused must account for every offered request"
     );
@@ -438,8 +434,9 @@ fn env_fault_plan_holds_generic_invariants() {
     }
     for (ti, id) in ["chaos-a", "quiet-b"].into_iter().enumerate() {
         let s = reg.stats(id).unwrap();
+        assert_eq!(s.requests, accepted[ti], "{id}: offered == accepted pushes");
         assert_eq!(
-            s.requests + s.failed + s.shed,
+            s.completed + s.failed + s.shed,
             accepted[ti],
             "{id}: every accepted request completed, failed, or shed — none lost"
         );

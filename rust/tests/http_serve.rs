@@ -1,0 +1,420 @@
+//! The HTTP front door over real loopback sockets: routing, the status
+//! mapping of every typed rejection, hostile-peer parse behavior, and
+//! chaos (injected socket resets, shard panics) — the README's
+//! rejection table verified on the wire.
+//!
+//! Faultpoint state is process-global, so every test here serializes on
+//! one mutex (the discipline `tests/chaos_serve.rs` set); the non-fault
+//! tests take it too because an armed plan from a neighbor would fire
+//! in *their* server's socket reads.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use lfsr_prune::data::rng::Pcg32;
+use lfsr_prune::obs::faultpoint::{self, points};
+use lfsr_prune::obs::{FaultAction, FaultPlan};
+use lfsr_prune::serve::http::Limits;
+use lfsr_prune::serve::{synthetic_lenet300_seeded, HttpServer, InferenceSession, ServerConfig};
+use lfsr_prune::store::{ModelRegistry, TenantConfig};
+use lfsr_prune::util::json::{self, Json};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// 1 shard, 1 lane: deterministic faultpoint hit windows.
+fn model(seed: u32) -> lfsr_prune::serve::CompiledModel {
+    synthetic_lenet300_seeded(0.9, 1, 1, seed)
+}
+
+/// Fast-cutting tenant: batch 1, so the drain thread answers a lone
+/// request on its next pass.
+fn quick_cfg() -> TenantConfig {
+    TenantConfig {
+        batch: 1,
+        max_wait: Some(Duration::from_millis(1)),
+        span_sample_every: 16,
+        max_queue: 64,
+        breaker_backoff: Duration::from_secs(120),
+    }
+}
+
+/// Parked tenant: batch 8 with no flush deadline, so pushed requests
+/// sit in the queue forever — the fixture for 429 and 504 paths.
+fn parked_cfg() -> TenantConfig {
+    TenantConfig { batch: 8, max_wait: None, max_queue: 2, ..quick_cfg() }
+}
+
+fn test_server_cfg() -> ServerConfig {
+    ServerConfig {
+        accept_threads: 1,
+        request_timeout: Duration::from_millis(700),
+        shed_grace: Duration::from_millis(50),
+        ..ServerConfig::default()
+    }
+}
+
+fn connect(addr: std::net::SocketAddr) -> TcpStream {
+    let s = TcpStream::connect_timeout(&addr, Duration::from_secs(2)).expect("connect");
+    s.set_nodelay(true).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    s.set_write_timeout(Some(Duration::from_secs(2))).unwrap();
+    s
+}
+
+fn render_body(x: &[f32]) -> String {
+    let vals: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    format!("{{\"input\": [{}]}}", vals.join(", "))
+}
+
+fn post_raw(model: &str, body: &str, extra_headers: &str) -> String {
+    format!(
+        "POST /v1/models/{model}:predict HTTP/1.1\r\nhost: t\r\n\
+         content-type: application/json\r\ncontent-length: {}\r\n{extra_headers}\r\n{body}",
+        body.len()
+    )
+}
+
+/// Read one full response off the wire: status, body, close flag.
+fn read_reply(s: &mut TcpStream) -> std::io::Result<(u16, String, bool)> {
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p + 4;
+        }
+        let n = s.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "closed mid-response",
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8(buf[..head_end].to_vec()).expect("utf-8 head");
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line in {head:?}"));
+    let mut len = 0usize;
+    let mut close = false;
+    for line in head.split("\r\n").skip(1) {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        match name.trim().to_ascii_lowercase().as_str() {
+            "content-length" => len = value.trim().parse().expect("content-length"),
+            "connection" => close = value.trim().eq_ignore_ascii_case("close"),
+            _ => {}
+        }
+    }
+    let mut body = buf[head_end..].to_vec();
+    while body.len() < len {
+        let n = s.read(&mut chunk)?;
+        assert!(n > 0, "closed mid-body");
+        body.extend_from_slice(&chunk[..n]);
+    }
+    Ok((status, String::from_utf8(body).expect("utf-8 body"), close))
+}
+
+/// One request/response exchange on a fresh connection.  A failed write
+/// is tolerated: a server rejecting early (413/431) may close before the
+/// whole request lands, and the response is still readable.
+fn exchange(addr: std::net::SocketAddr, raw: &str) -> (u16, String, bool) {
+    let mut s = connect(addr);
+    let _ = s.write_all(raw.as_bytes());
+    read_reply(&mut s).expect("reply")
+}
+
+fn input(dim: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(0x177E ^ seed);
+    (0..dim).map(|_| rng.next_normal()).collect()
+}
+
+#[test]
+fn predict_answers_bitwise_and_keep_alive_carries_a_second_request() {
+    let _s = serial();
+    faultpoint::disarm();
+    let m = model(11);
+    let dim = m.in_dim();
+    let solo = InferenceSession::new(m.clone(), 1);
+    let reg = Arc::new(ModelRegistry::new(2));
+    reg.insert("lenet", m, quick_cfg()).unwrap();
+    let server = HttpServer::start(Arc::clone(&reg), "127.0.0.1:0", test_server_cfg()).unwrap();
+    let addr = server.addr();
+
+    let mut conn = connect(addr);
+    for req_i in 0..2u64 {
+        let x = input(dim, req_i);
+        let expected = solo.infer_one(&x);
+        conn.write_all(post_raw("lenet", &render_body(&x), "").as_bytes()).unwrap();
+        let (status, body, close) = read_reply(&mut conn).expect("reply");
+        assert_eq!(status, 200, "{body}");
+        assert!(!close, "keep-alive holds between requests");
+        let doc = json::parse(&body).expect("answer is json");
+        assert_eq!(doc.get("model").and_then(Json::as_str), Some("lenet"));
+        let logits: Vec<f32> = doc
+            .get("logits")
+            .and_then(Json::as_arr)
+            .expect("logits array")
+            .iter()
+            .map(|v| v.as_f64().expect("number") as f32)
+            .collect();
+        assert_eq!(logits.len(), expected.len());
+        for (i, (&got, &want)) in logits.iter().zip(&expected).enumerate() {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "logit {i} of request {req_i} must round-trip the wire bitwise"
+            );
+        }
+    }
+    drop(conn);
+    server.shutdown();
+    let s = reg.stats("lenet").unwrap();
+    assert_eq!((s.requests, s.completed), (2, 2), "both wire requests served");
+}
+
+#[test]
+fn typed_statuses_cover_the_rejection_table_and_service_survives_each() {
+    let _s = serial();
+    faultpoint::disarm();
+    let m = model(13);
+    let dim = m.in_dim();
+    let reg = Arc::new(ModelRegistry::new(2));
+    reg.insert("lenet", m, quick_cfg()).unwrap();
+    let server = HttpServer::start(
+        Arc::clone(&reg),
+        "127.0.0.1:0",
+        ServerConfig {
+            limits: Limits { max_head_bytes: 1024, max_body_bytes: 32 * 1024 },
+            ..test_server_cfg()
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+
+    // Each row: (raw request, expected status).
+    let good = post_raw("lenet", &render_body(&input(dim, 0)), "");
+    let cases: Vec<(String, u16)> = vec![
+        // Bad JSON body.
+        (post_raw("lenet", "not json at all", ""), 400),
+        // JSON but no "input".
+        (post_raw("lenet", "{\"x\": 1}", ""), 400),
+        // Non-numeric input element.
+        (post_raw("lenet", "{\"input\": [1, \"two\"]}", ""), 400),
+        // Wrong input length: the registry's typed BadInput.
+        (post_raw("lenet", "{\"input\": [1, 2, 3]}", ""), 400),
+        // Bad deadline header.
+        (post_raw("lenet", "{\"input\": []}", "x-deadline-ms: soon\r\n"), 400),
+        // Unknown model.
+        (post_raw("ghost", "{\"input\": [1]}", ""), 404),
+        // Wrong method on predict / metrics, unknown route.
+        ("GET /v1/models/lenet:predict HTTP/1.1\r\n\r\n".into(), 405),
+        ("POST /metrics HTTP/1.1\r\ncontent-length: 0\r\n\r\n".into(), 405),
+        ("GET /nope HTTP/1.1\r\n\r\n".into(), 404),
+        // Unparseable content-length.
+        ("POST /x HTTP/1.1\r\ncontent-length: abc\r\n\r\n".into(), 400),
+        // Declared body past the limit — rejected before it is sent.
+        ("POST /x HTTP/1.1\r\ncontent-length: 50000\r\n\r\n".into(), 413),
+        // Head past the limit (padded past the parser's 4096-byte read
+        // chunk so the over-limit check fires before the head completes).
+        (format!("GET /x HTTP/1.1\r\nx-pad: {}\r\n\r\n", "a".repeat(8192)), 431),
+    ];
+    for (raw, want) in &cases {
+        let (status, body, _) = exchange(addr, raw);
+        assert_eq!(status, *want, "request {raw:?} -> {body}");
+        // The error body is json with an "error" key.
+        let doc = json::parse(&body).expect("error body is json");
+        assert!(doc.get("error").is_some(), "{body}");
+        // The server survives hostile input: a good request still lands.
+        let (status, body, _) = exchange(addr, &good);
+        assert_eq!(status, 200, "service must survive {raw:?}: {body}");
+    }
+
+    // A peer that writes half a request and vanishes gets no response
+    // and costs nothing.
+    let mut s = connect(addr);
+    s.write_all(b"POST /v1/models/lenet:predict HTTP/1.1\r\ncontent-le").unwrap();
+    drop(s);
+    let (status, _, _) = exchange(addr, &good);
+    assert_eq!(status, 200, "truncated peer must not wedge the server");
+    server.shutdown();
+}
+
+#[test]
+fn full_queue_returns_429_and_expired_deadline_returns_504() {
+    let _s = serial();
+    faultpoint::disarm();
+    let dim = model(17).in_dim();
+    let reg = Arc::new(ModelRegistry::new(2));
+    // batch 8 / max_wait None / max_queue 2: nothing is ever cut, so the
+    // queue state is fully under the test's control.  Two parked tenants
+    // because a parked request never leaves its queue: the 504 fixture
+    // would otherwise still hold a slot during the 429 phase.
+    reg.insert("parked-a", model(17), parked_cfg()).unwrap();
+    reg.insert("parked-b", model(19), parked_cfg()).unwrap();
+    let server = HttpServer::start(Arc::clone(&reg), "127.0.0.1:0", test_server_cfg()).unwrap();
+    let addr = server.addr();
+
+    // A lone request with a deadline parks in the queue until the
+    // deadline passes: 504, attributed to the deadline (not a 503).
+    let t0 = Instant::now();
+    let (status, body, _) = exchange(
+        addr,
+        &post_raw("parked-a", &render_body(&input(dim, 0)), "x-deadline-ms: 150\r\n"),
+    );
+    assert_eq!(status, 504, "{body}");
+    assert!(
+        t0.elapsed() >= Duration::from_millis(150),
+        "the 504 must not fire before the deadline"
+    );
+
+    // Fill parked-b's 2-slot queue, then the third concurrent request
+    // is refused at admission: 429 with retry-after.
+    let fill: Vec<_> = (0..2)
+        .map(|i| {
+            let raw = post_raw("parked-b", &render_body(&input(dim, i)), "x-deadline-ms: 400\r\n");
+            std::thread::spawn(move || exchange(addr, &raw))
+        })
+        .collect();
+    // Let both fillers enqueue (they park server-side for 400 ms); the
+    // 504 fixture above still holds its parked-a slot.
+    std::thread::sleep(Duration::from_millis(150));
+    assert_eq!(reg.pending(), 3, "both fillers (and the 504 fixture) must be queued");
+    let (status, body, _) =
+        exchange(addr, &post_raw("parked-b", &render_body(&input(dim, 9)), ""));
+    assert_eq!(status, 429, "{body}");
+    assert!(body.contains("overloaded"), "{body}");
+    for h in fill {
+        let (status, _, _) = h.join().unwrap();
+        assert_eq!(status, 504, "fillers time out on their own deadlines");
+    }
+    let s = reg.stats("parked-b").unwrap();
+    assert_eq!(s.overloaded, 1, "exactly one admission refusal");
+    server.shutdown();
+}
+
+#[test]
+fn injected_socket_reset_drops_one_connection_not_the_server() {
+    let _s = serial();
+    let m = model(19);
+    let dim = m.in_dim();
+    let reg = Arc::new(ModelRegistry::new(2));
+    reg.insert("lenet", m, quick_cfg()).unwrap();
+    let server = HttpServer::start(Arc::clone(&reg), "127.0.0.1:0", test_server_cfg()).unwrap();
+    let addr = server.addr();
+
+    let good = post_raw("lenet", &render_body(&input(dim, 0)), "");
+    {
+        // Window 1..1: exactly the first socket read after arming fails,
+        // which is the read serving this doomed connection.
+        let plan = FaultPlan::seeded(7).with(points::HTTP_READ, None, FaultAction::Fail, 1, 1);
+        let _g = faultpoint::arm(&plan);
+        let mut s = connect(addr);
+        s.write_all(good.as_bytes()).unwrap();
+        let err = read_reply(&mut s).expect_err("injected reset must kill this connection");
+        // A close with our request bytes unread surfaces as EOF or RST
+        // depending on kernel timing; either way there is no reply.
+        assert!(
+            matches!(
+                err.kind(),
+                std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::BrokenPipe
+            ),
+            "silent close, no reply: {err}"
+        );
+        assert_eq!(faultpoint::hits(points::HTTP_READ), 1, "the failpoint fired once");
+    }
+    // Plan disarmed: the very next connection serves normally.
+    let (status, body, _) = exchange(addr, &good);
+    assert_eq!(status, 200, "{body}");
+    server.shutdown();
+}
+
+#[test]
+fn shard_panic_maps_to_503_for_one_tenant_while_neighbors_serve_200() {
+    let _s = serial();
+    let dim = model(23).in_dim();
+    let reg = Arc::new(ModelRegistry::new(2));
+    reg.insert("chaos-a", model(23), quick_cfg()).unwrap();
+    reg.insert("quiet-b", model(29), quick_cfg()).unwrap();
+    let server = HttpServer::start(Arc::clone(&reg), "127.0.0.1:0", test_server_cfg()).unwrap();
+    let addr = server.addr();
+
+    // Panic on the first chaos-a shard execution; the 120 s breaker
+    // backoff keeps the tenant quarantined for the rest of the test.
+    let plan =
+        FaultPlan::seeded(7).with(points::SESSION_SHARD, Some("chaos-a"), FaultAction::Panic, 1, 1);
+    let _g = faultpoint::arm(&plan);
+
+    // The sacrificial request rides the panicking batch: its answer
+    // never arrives, and with a deadline set the handler reports 504.
+    let (status, body, _) =
+        exchange(addr, &post_raw("chaos-a", &render_body(&input(dim, 0)), "x-deadline-ms: 200\r\n"));
+    assert_eq!(status, 504, "{body}");
+
+    // Quarantine is now wire-visible at admission: 503 + retry-after
+    // for the faulted tenant, while the neighbor still answers 200.
+    let mut s = connect(addr);
+    s.write_all(post_raw("chaos-a", &render_body(&input(dim, 1)), "").as_bytes()).unwrap();
+    let (status, body, _) = read_reply(&mut s).expect("reply");
+    assert_eq!(status, 503, "{body}");
+    assert!(body.contains("quarantined"), "{body}");
+    let (status, body, _) = exchange(addr, &post_raw("quiet-b", &render_body(&input(dim, 2)), ""));
+    assert_eq!(status, 200, "neighbor must keep serving: {body}");
+
+    let text = reg.metrics_text();
+    assert!(text.contains("serve_tenant_healthy{model=\"chaos-a\"} 0\n"), "{text}");
+    assert!(text.contains("serve_tenant_healthy{model=\"quiet-b\"} 1\n"), "{text}");
+    // Shutdown must complete even though chaos-a still holds an
+    // uncompletable queued request behind its breaker.
+    server.shutdown();
+}
+
+#[test]
+fn metrics_exposition_over_http_parses_and_counts_requests() {
+    let _s = serial();
+    faultpoint::disarm();
+    let m = model(31);
+    let dim = m.in_dim();
+    let reg = Arc::new(ModelRegistry::new(2));
+    reg.insert("lenet", m, quick_cfg()).unwrap();
+    let server = HttpServer::start(Arc::clone(&reg), "127.0.0.1:0", test_server_cfg()).unwrap();
+    let addr = server.addr();
+
+    for i in 0..3 {
+        let (status, _, _) =
+            exchange(addr, &post_raw("lenet", &render_body(&input(dim, i)), ""));
+        assert_eq!(status, 200);
+    }
+    let (_, _, _) = exchange(addr, &post_raw("ghost", "{\"input\": [1]}", ""));
+
+    let (status, body, _) = exchange(addr, "GET /metrics HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 200);
+    // Every non-comment line is `name{labels} value` with a numeric
+    // value — the exposition stays machine-readable under live traffic.
+    let mut lines = 0;
+    for line in body.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (_, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line {line:?}"));
+        value.parse::<f64>().unwrap_or_else(|_| panic!("non-numeric value in {line:?}"));
+        lines += 1;
+    }
+    assert!(lines > 10, "exposition should carry real content:\n{body}");
+    assert!(body.contains("http_requests_total{code=\"200\"} 3\n"), "{body}");
+    assert!(body.contains("http_requests_total{code=\"404\"} 1\n"), "{body}");
+    assert!(body.contains("serve_queue_depth{model=\"lenet\"}"), "{body}");
+    assert!(body.contains("alloc_allocations_total"), "{body}");
+    assert!(body.contains("http_connections_active"), "{body}");
+
+    let (status, body, _) = exchange(addr, "GET /healthz HTTP/1.1\r\n\r\n");
+    assert_eq!(status, 200);
+    assert_eq!(body, "ok\n");
+    server.shutdown();
+}
